@@ -1,0 +1,96 @@
+//! Calibrate any family/solver/steps configuration, print the error
+//! curves and an alpha sweep, and save the curves + schedules as JSON
+//! (consumable by the server's `--curves-dir`).
+//!
+//!     cargo run --release --example calibrate_and_sweep -- \
+//!         --family audio --solver dpmpp3m-sde --steps 100 --samples 10
+
+use smoothcache::cache::{calibrate, CalibrationConfig};
+use smoothcache::model::Engine;
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::bench::{ascii_plot, Table};
+use smoothcache::util::cli::CliSpec;
+
+fn main() -> anyhow::Result<()> {
+    let spec = CliSpec::new("calibrate_and_sweep", "calibration + alpha sweep")
+        .flag("family", "image", "model family (image|audio|video)")
+        .flag("solver", "ddim", "solver (ddim|ddpm|dpmpp2m|dpmpp3m|dpmpp3m-sde|rf)")
+        .flag("steps", "50", "sampling steps")
+        .flag("samples", "10", "calibration samples")
+        .flag("k-max", "3", "maximum reuse gap")
+        .flag("cfg", "1.0", "CFG scale during calibration")
+        .flag("alphas", "0.05,0.1,0.2,0.35,0.5,0.8", "alpha sweep")
+        .flag("out", "bench_out/calibration", "output directory");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match spec.parse(&argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return Ok(());
+        }
+    };
+
+    let family = args.string("family");
+    let solver = SolverKind::parse(args.str("solver"))
+        .ok_or_else(|| anyhow::anyhow!("bad solver"))?;
+    let steps = args.usize("steps").map_err(anyhow::Error::msg)?;
+
+    let mut engine = Engine::open(smoothcache::artifacts_dir())?;
+    engine.load_family(&family)?;
+    let fm = engine.family_manifest(&family)?.clone();
+
+    let cc = CalibrationConfig {
+        solver,
+        steps,
+        k_max: args.usize("k-max").map_err(anyhow::Error::msg)?,
+        num_samples: args.usize("samples").map_err(anyhow::Error::msg)?,
+        cfg_scale: args.f64("cfg").map_err(anyhow::Error::msg)? as f32,
+        seed: 7,
+    };
+    println!(
+        "calibrating {family} / {} / {steps} steps / {} samples ...",
+        solver.name(),
+        cc.num_samples
+    );
+    let t0 = std::time::Instant::now();
+    let curves = calibrate(&engine, &family, &cc)?;
+    println!("calibration took {:.1}s (one-time cost)\n", t0.elapsed().as_secs_f64());
+
+    // error-curve plot (k=1)
+    let series: Vec<(String, Vec<f64>)> = curves
+        .branch_types()
+        .into_iter()
+        .map(|bt| {
+            let ys = (1..steps).map(|s| curves.mean(&bt, s, 1).unwrap_or(0.0)).collect();
+            (bt, ys)
+        })
+        .collect();
+    println!("{}", ascii_plot("L1 relative error (k=1) across steps", &series, 12));
+
+    // alpha sweep
+    let mut table = Table::new(&["alpha", "skip%", "max gap", "schedule"]);
+    for alpha in args.f64_list("alphas").map_err(anyhow::Error::msg)? {
+        let s = curves.smoothcache_schedule(alpha, &fm.branch_types);
+        let compact: String = s
+            .ascii()
+            .lines()
+            .map(|l| l.chars().skip(11).collect::<String>())
+            .collect::<Vec<_>>()
+            .join(" | ");
+        table.row(&[
+            format!("{alpha}"),
+            format!("{:.0}%", s.skip_fraction() * 100.0),
+            s.max_gap().to_string(),
+            compact.chars().take(70).collect(),
+        ]);
+    }
+    table.print();
+
+    // persist
+    let out = args.string("out");
+    std::fs::create_dir_all(&out)?;
+    let path = format!("{out}/{family}_{}_{steps}.json", solver.name());
+    std::fs::write(&path, curves.to_json().to_string())?;
+    println!("\ncurves saved to {path} (usable via server --curves-dir)");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: calibrate SmoothCache on the bundled image DiT, generate
+//! with and without caching, and compare speed + output drift.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use smoothcache::cache::{calibrate, CalibrationConfig};
+use smoothcache::model::{Cond, Engine};
+use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::quality::psnr;
+use smoothcache::solvers::SolverKind;
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    println!("artifacts: {dir:?}");
+    let mut engine = Engine::open(dir)?;
+    engine.load_family("image")?;
+    println!(
+        "loaded image family ({} parameters) on {}",
+        engine.total_params("image").unwrap(),
+        engine.rt.platform()
+    );
+
+    // 1. One calibration pass (the paper's single hyperparameter setup).
+    let steps = 30;
+    let cc = CalibrationConfig {
+        num_samples: 4,
+        ..CalibrationConfig::new(SolverKind::Ddim, steps)
+    };
+    println!("calibrating DDIM-{steps} with {} samples ...", cc.num_samples);
+    let curves = calibrate(&engine, "image", &cc)?;
+
+    // 2. Threshold the error curves at alpha to get a static schedule.
+    let alpha = 0.35;
+    let bts = engine.family_manifest("image")?.branch_types.clone();
+    let schedule = curves.smoothcache_schedule(alpha, &bts);
+    println!("\nSmoothCache schedule at alpha={alpha} (#=compute, .=reuse):");
+    print!("{}", schedule.ascii());
+    println!("skip fraction: {:.0}%\n", schedule.skip_fraction() * 100.0);
+
+    // 3. Generate the same sample with and without the cache.
+    let cond = Cond::Label(vec![7]);
+    let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(42);
+    let base = generate(&engine, &cfg, &cond, &CacheMode::None, None)?;
+    let cached = generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None)?;
+
+    println!(
+        "no-cache : {:.3}s ({} branch executions)",
+        base.stats.wall_seconds, base.stats.branch_computes
+    );
+    println!(
+        "cached   : {:.3}s ({} executed, {} reused)",
+        cached.stats.wall_seconds, cached.stats.branch_computes, cached.stats.branch_reuses
+    );
+    println!(
+        "speedup  : {:.2}x    output PSNR vs no-cache: {:.1} dB",
+        base.stats.wall_seconds / cached.stats.wall_seconds,
+        psnr(&base.latent, &cached.latent)
+    );
+    Ok(())
+}

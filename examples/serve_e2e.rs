@@ -1,0 +1,128 @@
+//! End-to-end serving driver (the repo's headline validation run):
+//! starts the full coordinator + TCP server on the trained image DiT,
+//! replays an open-loop Poisson trace through a real socket client, and
+//! reports throughput / latency percentiles / batch occupancy with
+//! SmoothCache on vs off. Results are recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example serve_e2e -- --requests 32 --rate 4
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig};
+use smoothcache::server::{Client, Server};
+use smoothcache::util::bench::Table;
+use smoothcache::util::cli::CliSpec;
+use smoothcache::util::json::Json;
+use smoothcache::workload::PoissonTrace;
+
+fn main() -> anyhow::Result<()> {
+    let spec = CliSpec::new("serve_e2e", "end-to-end serving driver")
+        .flag("requests", "32", "requests per policy")
+        .flag("rate", "4.0", "Poisson arrival rate (req/s)")
+        .flag("steps", "50", "DDIM steps")
+        .flag("policies", "no-cache,fora:2,smooth:0.35", "policies to compare")
+        .flag("calib-samples", "6", "calibration samples for smooth policies");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match spec.parse(&argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return Ok(());
+        }
+    };
+    let n_requests = args.usize("requests").map_err(anyhow::Error::msg)?;
+    let rate = args.f64("rate").map_err(anyhow::Error::msg)?;
+    let steps = args.usize("steps").map_err(anyhow::Error::msg)?;
+    let policies = args.list("policies");
+
+    let mut table = Table::new(&[
+        "policy", "throughput (req/s)", "p50 (s)", "p95 (s)", "occupancy", "skip%",
+    ]);
+
+    for policy in &policies {
+        let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+        cfg.preload = vec!["image".into()];
+        cfg.max_wait = Duration::from_millis(25);
+        cfg.calib_samples = args.usize("calib-samples").map_err(anyhow::Error::msg)?;
+        let coord = Arc::new(Coordinator::start(cfg)?);
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), 4)?;
+        println!("serving on {} — policy {policy}", server.addr);
+        let mut client = Client::connect(&server.addr)?;
+
+        let mk_req = |label: i32, seed: u64| {
+            Json::obj()
+                .set("family", "image")
+                .set("label", label as f64)
+                .set("steps", steps)
+                .set("solver", "ddim")
+                .set("policy", policy.as_str())
+                .set("seed", seed)
+        };
+        // warmup: compile + calibrate outside the measured window
+        for b in 0..3 {
+            let r = client.call(&mk_req(b, 50 + b as u64))?;
+            anyhow::ensure!(
+                r.get("ok").and_then(|v| v.as_bool()) == Some(true),
+                "warmup failed: {r:?}"
+            );
+        }
+
+        let trace = PoissonTrace::generate(rate, n_requests, 10, 0, 0, 0xE2E);
+        // open-loop over the socket: issue at trace times from worker
+        // threads (each with its own connection), gather latencies.
+        let t0 = Instant::now();
+        let pool = smoothcache::util::threadpool::ThreadPool::new(8);
+        let addr = server.addr;
+        let results: Vec<(f64, f64)> = pool.parallel_map(
+            trace.items.iter().enumerate().map(|(i, it)| {
+                let label = match &it.cond {
+                    smoothcache::model::Cond::Label(l) => l[0],
+                    _ => 0,
+                };
+                (i, it.arrival_s, label, it.seed, policy.clone())
+            }).collect::<Vec<_>>(),
+            move |(i, arrival, label, seed, policy)| {
+                let target = t0 + Duration::from_secs_f64(arrival);
+                if let Some(d) = target.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(d);
+                }
+                let mut c = Client::connect(&addr).expect("connect");
+                let req = Json::obj()
+                    .set("family", "image")
+                    .set("label", label as f64)
+                    .set("steps", steps)
+                    .set("solver", "ddim")
+                    .set("policy", policy.as_str())
+                    .set("seed", seed ^ i as u64);
+                let sent = Instant::now();
+                let r = c.call(&req).expect("call");
+                assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(true), "{r:?}");
+                (
+                    sent.elapsed().as_secs_f64(),
+                    r.get("skip_fraction").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                )
+            },
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        let mut lats: Vec<f64> = results.iter().map(|r| r.0).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct =
+            |q: f64| lats[((q * (lats.len() - 1) as f64) as usize).min(lats.len() - 1)];
+        let skip = results.last().map(|r| r.1).unwrap_or(0.0);
+        println!("coordinator metrics: {}", coord.metrics().summary());
+        table.row(&[
+            policy.clone(),
+            format!("{:.2}", n_requests as f64 / wall),
+            format!("{:.3}", pct(0.5)),
+            format!("{:.3}", pct(0.95)),
+            format!("{:.2}", coord.metrics().occupancy()),
+            format!("{:.0}%", skip * 100.0),
+        ]);
+        server.stop();
+    }
+
+    println!("\nserve_e2e — image DDIM-{steps}, {n_requests} requests @ {rate} req/s");
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,265 @@
+"""AOT exporter: lower every (family, entry, batch) to HLO text.
+
+This is the single compile-path entrypoint (``make artifacts``). Python
+never runs on the request path: everything the Rust binary needs lands
+in ``artifacts/``:
+
+    {family}_{entry}_b{B}.hlo.txt   one XLA program per entry per batch
+    weights_{family}.bin            flat f32 tensors (weights_io format)
+    manifest.json                   geometry + per-entry arg contracts
+    goldens/{family}.json           golden vectors pinning the Rust engine
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import families as fam
+from . import model
+from .families import SUPPORTED_BATCH_SIZES, FamilyConfig
+from .weights_io import write_weights
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _wspecs(weights, names, prefix=""):
+    return [_spec(weights[prefix + n].shape) for n in names]
+
+
+# ---------------------------------------------------------------------------
+# Entry definitions: (runtime inputs, weight names, callable)
+# ---------------------------------------------------------------------------
+
+def entries_for(cfg: FamilyConfig, weights, impl: str):
+    """Yield (entry_name, fn, input_specs_fn, input_names, weight_names)."""
+    op = model.ops(impl)
+    d, s = cfg.hidden, cfg.seq_len
+
+    # --- embed ---
+    ew_names = fam.embed_weight_names(cfg)
+
+    if cfg.name == "image":
+        def embed_fn(x, t, label, *w):
+            tokens, c, _ = model.embed(cfg, x, t, label, None, *w)
+            return tokens, c
+        embed_inputs = ["x", "t", "label"]
+
+        def embed_specs(b):
+            return [_spec((b,) + cfg.latent_shape), _spec((b,)),
+                    _spec((b,), jnp.int32)]
+    else:
+        def embed_fn(x, t, prompt_ids, *w):
+            tokens, c, cond = model.embed(cfg, x, t, None, prompt_ids, *w)
+            return tokens, c, cond
+        embed_inputs = ["x", "t", "prompt_ids"]
+
+        def embed_specs(b):
+            return [_spec((b,) + cfg.latent_shape), _spec((b,)),
+                    _spec((b, cfg.cond_len), jnp.int32)]
+
+    yield ("embed", embed_fn, embed_specs, embed_inputs,
+           ["embed." + n for n in ew_names])
+
+    # --- branches ---
+    for br in cfg.branch_types:
+        wn = fam.branch_weight_names(cfg, br)
+        needs_cond = br.endswith("xattn")
+
+        def mk(br=br, needs_cond=needs_cond):
+            if needs_cond:
+                def branch(x, cond, c, *w):
+                    return (model.branch_fn(op, cfg, br, x, cond, c, *w),)
+                inputs = ["x", "cond", "c"]
+
+                def specs(b):
+                    return [_spec((b, s, d)), _spec((b, cfg.cond_len, d)),
+                            _spec((b, d))]
+            else:
+                def branch(x, c, *w):
+                    return (model.branch_fn(op, cfg, br, x, None, c, *w),)
+                inputs = ["x", "c"]
+
+                def specs(b):
+                    return [_spec((b, s, d)), _spec((b, d))]
+            return branch, specs, inputs
+
+        branch, specs, inputs = mk()
+        # weight names are templates: Rust substitutes the block index.
+        yield (f"branch.{br}", branch, specs, inputs,
+               ["blocks.{i}." + br + "." + n for n in wn])
+
+    # --- final ---
+    fw_names = fam.final_weight_names(cfg)
+
+    def final_fn(x, c, *w):
+        return (model.final(cfg, x, c, *w),)
+
+    def final_specs(b):
+        return [_spec((b, s, d)), _spec((b, d))]
+
+    yield ("final", final_fn, final_specs, ["x", "c"],
+           ["final." + n for n in fw_names])
+
+
+def lower_entry(cfg, weights, entry_name, fn, specs_fn, weight_names, batch):
+    in_specs = specs_fn(batch)
+    w_keys = [n.format(i=0) for n in weight_names]
+    w_specs = [_spec(weights[k].shape) for k in w_keys]
+    lowered = jax.jit(fn).lower(*(in_specs + w_specs))
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# Goldens
+# ---------------------------------------------------------------------------
+
+def make_goldens(cfg: FamilyConfig, weights, seed: int = 123):
+    """Golden vectors for the Rust engine (jnp reference path, batch 1)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1,) + cfg.latent_shape).astype(np.float32)
+    t = np.array([0.5], np.float32)
+    label = np.array([3], np.int32) if cfg.num_classes else None
+    pids = (rng.integers(1, cfg.vocab, size=(1, cfg.cond_len))
+            .astype(np.int32) if cfg.vocab else None)
+    params = {n: jnp.asarray(w) for n, w in weights.items()}
+    eps, deltas = model.forward(cfg, params, jnp.asarray(x), jnp.asarray(t),
+                                label if label is None else jnp.asarray(label),
+                                pids if pids is None else jnp.asarray(pids),
+                                impl="jnp", collect_deltas=True)
+    ew = [params["embed." + n] for n in fam.embed_weight_names(cfg)]
+    tokens, c, cond = model.embed(cfg, jnp.asarray(x), jnp.asarray(t),
+                                  None if label is None else jnp.asarray(label),
+                                  None if pids is None else jnp.asarray(pids),
+                                  *ew)
+    g = {
+        "family": cfg.name,
+        "seed": seed,
+        "x": np.asarray(x).ravel().tolist(),
+        "t": t.tolist(),
+        "label": None if label is None else label.tolist(),
+        "prompt_ids": None if pids is None else pids.ravel().tolist(),
+        "tokens_l1": float(jnp.sum(jnp.abs(tokens))),
+        "c_l1": float(jnp.sum(jnp.abs(c))),
+        "cond_l1": None if cond is None else float(jnp.sum(jnp.abs(cond))),
+        "branch_delta_l1": {name: float(jnp.sum(jnp.abs(dd)))
+                            for name, dd in deltas},
+        "eps": np.asarray(eps).ravel().tolist(),
+    }
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def family_manifest(cfg: FamilyConfig, entries, impl):
+    return {
+        "hidden": cfg.hidden, "heads": cfg.heads, "depth": cfg.depth,
+        "mlp_ratio": cfg.mlp_ratio, "seq_len": cfg.seq_len,
+        "latent_shape": list(cfg.latent_shape),
+        "branch_types": list(cfg.branch_types),
+        "cond_len": cfg.cond_len, "num_classes": cfg.num_classes,
+        "vocab": cfg.vocab, "frames": cfg.frames,
+        "spatial_tokens": cfg.spatial_tokens, "patch": fam.PATCH,
+        "t_freq_dim": cfg.t_freq_dim,
+        "weights_file": f"weights_{cfg.name}.bin",
+        "impl": impl,
+        "entries": entries,
+    }
+
+
+def load_or_make_weights(cfg: FamilyConfig, train_steps: int, log):
+    if train_steps > 0:
+        from .train import train_family_weights
+        # the video family's factorised blocks make fwd+bwd ~2x the image
+        # cost; trim its batch to keep `make artifacts` bounded
+        batch = 16 if cfg.name == "video" else 32
+        log(f"[aot] training {cfg.name} family for {train_steps} steps ...")
+        weights, _losses = train_family_weights(
+            cfg.name, steps=train_steps, batch=batch, log=log)
+        return weights
+    return model.init_weights(cfg, seed=hash(cfg.name) % (2 ** 31))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--impl", default=os.environ.get(
+        "SMOOTHCACHE_IMPL", "pallas"), choices=["pallas", "jnp"])
+    ap.add_argument("--families", default="image,audio,video")
+    ap.add_argument("--batches", default=",".join(
+        str(b) for b in SUPPORTED_BATCH_SIZES))
+    ap.add_argument("--train-steps", type=int, default=int(os.environ.get(
+        "SMOOTHCACHE_TRAIN_STEPS", "300")))
+    args = ap.parse_args(argv)
+
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "goldens"), exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",")]
+    log = lambda *a: print(*a, file=sys.stderr, flush=True)
+
+    manifest = {"version": 1, "impl": args.impl, "batch_sizes": batches,
+                "families": {}}
+    t_start = time.time()
+    for name in args.families.split(","):
+        cfg = fam.family(name)
+        weights = load_or_make_weights(cfg, args.train_steps, log)
+        write_weights(os.path.join(out, f"weights_{name}.bin"), weights)
+
+        entry_manifest = {}
+        for (entry, fn, specs_fn, inputs, wnames) in entries_for(
+                cfg, weights, args.impl):
+            artifacts = {}
+            for b in batches:
+                text = lower_entry(cfg, weights, entry, fn, specs_fn,
+                                   wnames, b)
+                fname = f"{name}_{entry.replace('.', '_')}_b{b}.hlo.txt"
+                with open(os.path.join(out, fname), "w") as f:
+                    f.write(text)
+                artifacts[str(b)] = fname
+                log(f"[aot] {fname}: {len(text)//1024} KiB "
+                    f"({time.time()-t_start:.0f}s)")
+            entry_manifest[entry] = {
+                "inputs": inputs,
+                "weights": wnames,
+                "artifacts": artifacts,
+            }
+        manifest["families"][name] = family_manifest(
+            cfg, entry_manifest, args.impl)
+
+        g = make_goldens(cfg, weights)
+        with open(os.path.join(out, "goldens", f"{name}.json"), "w") as f:
+            json.dump(g, f)
+        log(f"[aot] goldens/{name}.json written")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"[aot] manifest.json written ({time.time()-t_start:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Model-family geometry shared between the JAX build path and Rust.
+
+Three DiT families stand in for the paper's three candidate models
+(DESIGN.md section 3 explains each substitution):
+
+* ``image``  — DiT-XL/2 256x256 proxy: adaLN-zero DiT, class-conditional.
+* ``audio``  — Stable Audio Open proxy: 1-D latent DiT with
+               self-attention, cross-attention and feed-forward branches.
+* ``video``  — OpenSora v1.2 STDiT proxy: factorised spatial/temporal
+               blocks with 6 cacheable branch types.
+
+Everything Rust needs (dims, branch types, arg orders) is emitted into
+``artifacts/manifest.json`` by aot.py; this module is the single source
+of truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+# Batch sizes we AOT-compile executables for. The Rust dynamic batcher
+# pads every batch up to the nearest supported size (vLLM-style bucketing).
+SUPPORTED_BATCH_SIZES = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyConfig:
+    name: str
+    hidden: int                 # token width D
+    heads: int
+    mlp_ratio: int
+    depth: int                  # number of DiT blocks (block *pairs* for video)
+    latent_shape: Tuple[int, ...]   # per-sample latent tensor shape
+    seq_len: int                # flattened token count S
+    branch_types: Tuple[str, ...]   # cacheable branch types, in block order
+    cond_len: int               # cross-attention conditioning tokens (0 = none)
+    num_classes: int            # label classes (image family; 0 = none)
+    vocab: int                  # prompt-token vocabulary (0 = none)
+    t_freq_dim: int = 64        # sinusoidal timestep embedding width
+    # video-only factorisation
+    frames: int = 0
+    spatial_tokens: int = 0
+
+    @property
+    def d_ff(self) -> int:
+        return self.hidden * self.mlp_ratio
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def latent_size(self) -> int:
+        n = 1
+        for d in self.latent_shape:
+            n *= d
+        return n
+
+
+IMAGE = FamilyConfig(
+    name="image",
+    hidden=128, heads=4, mlp_ratio=4, depth=6,
+    latent_shape=(16, 16, 4),      # H, W, C — patch size 2 -> 8*8 = 64 tokens
+    seq_len=64,
+    branch_types=("attn", "ffn"),
+    cond_len=0, num_classes=10, vocab=0,
+)
+
+AUDIO = FamilyConfig(
+    name="audio",
+    hidden=128, heads=4, mlp_ratio=4, depth=6,
+    latent_shape=(64, 8),          # T latent frames x C channels
+    seq_len=64,
+    branch_types=("attn", "xattn", "ffn"),
+    cond_len=8, num_classes=0, vocab=256,
+)
+
+VIDEO = FamilyConfig(
+    name="video",
+    hidden=128, heads=4, mlp_ratio=4, depth=4,
+    latent_shape=(4, 8, 8, 4),     # F, H, W, C — patch 2 -> 16 tokens/frame
+    seq_len=64,                    # 4 frames * 16 spatial tokens
+    branch_types=("s_attn", "s_xattn", "s_ffn",
+                  "t_attn", "t_xattn", "t_ffn"),
+    cond_len=8, num_classes=0, vocab=256,
+    frames=4, spatial_tokens=16,
+)
+
+FAMILIES = {f.name: f for f in (IMAGE, AUDIO, VIDEO)}
+
+PATCH = 2  # patchify stride for image / video spatial dims
+
+
+def family(name: str) -> FamilyConfig:
+    return FAMILIES[name]
+
+
+def branch_weight_names(cfg: FamilyConfig, branch: str) -> List[str]:
+    """Per-block weight parameter names for a branch type, in arg order."""
+    if branch.endswith("xattn"):
+        return ["mod_w", "mod_b", "q_w", "q_b", "kv_w", "kv_b", "o_w", "o_b"]
+    if branch.endswith("attn"):
+        return ["mod_w", "mod_b", "qkv_w", "qkv_b", "o_w", "o_b"]
+    if branch.endswith("ffn"):
+        return ["mod_w", "mod_b", "w1", "b1", "w2", "b2"]
+    raise ValueError(f"unknown branch type {branch!r}")
+
+
+def embed_weight_names(cfg: FamilyConfig) -> List[str]:
+    names = ["patch_w", "patch_b", "pos",
+             "temb_w1", "temb_b1", "temb_w2", "temb_b2"]
+    if cfg.num_classes:
+        names.append("label_emb")
+    if cfg.vocab:
+        names.append("prompt_emb")
+    return names
+
+
+def final_weight_names(cfg: FamilyConfig) -> List[str]:
+    return ["mod_w", "mod_b", "lin_w", "lin_b"]

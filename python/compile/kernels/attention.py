@@ -1,0 +1,151 @@
+"""Pallas fused scaled-dot-product attention (self- and cross-).
+
+Hardware adaptation (paper GPU -> TPU-shaped Pallas, DESIGN.md section 4):
+the CUDA flash-attention threadblock decomposition becomes a Pallas grid
+over fused (batch * heads) with the per-head Q/K/V tiles staged HBM->VMEM
+through ``BlockSpec``. At the sequence lengths this repo serves
+(S <= 256, dh <= 64) one (S, dh) tile per head fits comfortably inside
+the ~16 MiB VMEM budget, so each grid cell computes a full softmax row
+block in VMEM with f32 accumulation targeted at the MXU
+(``preferred_element_type=jnp.float32``). For longer sequences the
+``kv_block`` parameter tiles the K/V axis (online-softmax rescaling),
+which is the direct analogue of flash-attention's KV loop.
+
+Kernels MUST be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+VMEM footprint / MXU utilisation estimates for real TPU are recorded in
+DESIGN.md section 8 and EXPERIMENTS.md section Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls.
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_block: int):
+    """One grid cell = one (batch*head): full Sq rows against tiled Sk."""
+    q = q_ref[0].astype(jnp.float32)            # [Sq, dh]
+    sq, dh = q.shape
+    sk = k_ref.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    nblk = pl.cdiv(sk, kv_block)
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        start = i * kv_block
+        # dynamic_slice clamps the start so the slice stays in bounds; on
+        # the (possibly short) final block the real start is sk - kv_block.
+        # Mask rows already covered by earlier blocks so nothing is
+        # counted twice.
+        real_start = jnp.minimum(start, sk - kv_block)
+        k = jax.lax.dynamic_slice_in_dim(
+            k_ref[0], real_start, kv_block, axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(
+            v_ref[0], real_start, kv_block, axis=0).astype(jnp.float32)
+        idx = real_start + jax.lax.iota(jnp.int32, kv_block)
+        valid = (idx >= start)[None, :]                  # [1, kv_block]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, -jnp.inf)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)       # [Sq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # [Sq, kv_block]
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((sq, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((sq, 1), jnp.float32)
+    a0 = jnp.zeros((sq, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nblk, body, (m0, l0, a0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              kv_block: int | None = None) -> jnp.ndarray:
+    """Fused attention over per-head tensors (one grid cell per head).
+
+    q: [BH, Sq, dh]; k, v: [BH, Sk, dh] -> [BH, Sq, dh].
+    Matches ``ref.attention`` bit-for-bit up to f32 accumulation order.
+    """
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    if kv_block is None:
+        kv_block = 128
+    kv_block = min(kv_block, sk)
+    kernel = functools.partial(_attn_kernel, kv_block=kv_block)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, sq, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, sk, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, sk, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+def _attn_kernel_batched(q_ref, k_ref, v_ref, o_ref):
+    """One grid cell = one *batch element*, all heads computed together.
+
+    §Perf optimization (EXPERIMENTS.md §Perf L1 iteration 1): the
+    per-head grid pays one interpret-mode grid-cell dispatch per
+    (batch·head); batching the head axis into the cell cuts dispatches
+    by `heads`× while the per-head tiles still map onto MXU-friendly
+    batched contractions on real TPU. VMEM per cell grows to
+    H·(Sq+2·Sk)·dh floats — still well under the 16 MiB budget at this
+    repo's scales (DESIGN.md §8).
+    """
+    q = q_ref[0].astype(jnp.float32)                 # [H, Sq, dh]
+    k = k_ref[0].astype(jnp.float32)                 # [H, Sk, dh]
+    v = v_ref[0].astype(jnp.float32)
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    s = jax.lax.dot_general(
+        q, k,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ) * scale                                        # [H, Sq, Sk]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jax.lax.dot_general(
+        p, v,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                # [H, Sq, dh]
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def attention_batched(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Fused attention with the head axis batched inside the grid cell.
+
+    q: [B, H, Sq, dh]; k, v: [B, H, Sk, dh] -> [B, H, Sq, dh].
+    Full-softmax variant (K/V resident in VMEM): correct for the
+    sequence lengths this repo serves; fall back to [`attention`]'s
+    kv_block loop for longer sequences.
+    """
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    return pl.pallas_call(
+        _attn_kernel_batched,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, sq, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, sk, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, sk, dh), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, sq, dh), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""Pallas fused GELU MLP: gelu(x @ w1 + b1) @ w2 + b2.
+
+Hardware adaptation: the CUDA "two GEMMs + fused epilogue" becomes a
+Pallas grid over (batch, seq-tiles); each grid cell streams an
+(seq_block, D) activation tile through VMEM, runs both MXU contractions
+back-to-back and keeps the (seq_block, F) hidden slab entirely in VMEM —
+no HBM round-trip for the hidden activations. Weights use constant
+index maps (one HBM->VMEM stage, reused across the whole grid row).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls.
+
+
+def _gelu_f32(x):
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, jnp.float32))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[0]                                     # [sb, D]
+    h32 = jnp.dot(x, w1_ref[...],
+                  preferred_element_type=jnp.float32)
+    h = _gelu_f32(h32.astype(x.dtype).astype(jnp.float32) + b1_ref[...])
+    h = h.astype(x.dtype)
+    o32 = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[0] = (o32.astype(x.dtype) + b2_ref[...]).astype(o_ref.dtype)
+
+
+def mlp(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+        w2: jnp.ndarray, b2: jnp.ndarray,
+        seq_block: int | None = None) -> jnp.ndarray:
+    """Fused GELU MLP. x: [B, S, D]; w1: [D, F]; w2: [F, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    f = w1.shape[1]
+    if seq_block is None:
+        seq_block = min(s, 128)
+    assert s % seq_block == 0, "seq must divide seq_block"
+    kernel = functools.partial(_mlp_kernel)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, s // seq_block),
+        in_specs=[
+            pl.BlockSpec((1, seq_block, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((d, f), lambda i, j: (0, 0)),
+            pl.BlockSpec((f,), lambda i, j: (0,)),
+            pl.BlockSpec((f, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, seq_block, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, w1, b1, w2, b2)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: every kernel in attention.py /
+mlp.py / modulation.py must match its oracle here to tight tolerances
+(pytest + hypothesis sweeps in python/tests/test_kernels.py).
+
+The oracles are also the implementation used when AOT-exporting with
+SMOOTHCACHE_IMPL=jnp (see aot.py) which gives the kernel-impl ablation
+bench a reference artifact set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def layernorm(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """LayerNorm over the trailing axis, no learned affine (adaLN style)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def ln_modulate(x: jnp.ndarray, shift: jnp.ndarray, scale: jnp.ndarray,
+                eps: float = 1e-6) -> jnp.ndarray:
+    """adaLN modulation: (1 + scale) * LN(x) + shift.
+
+    x: [B, S, D]; shift/scale: [B, D] broadcast over the sequence axis.
+    """
+    return layernorm(x, eps) * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def gate(y: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """adaLN-zero gating: y * g, g broadcast over the sequence axis.
+
+    y: [B, S, D]; g: [B, D].
+    """
+    return y * g[:, None, :]
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Scaled dot-product attention over per-head tensors.
+
+    q: [BH, Sq, dh]; k, v: [BH, Sk, dh] -> [BH, Sq, dh].
+    Softmax is computed in f32 regardless of the input dtype (this is the
+    numerically-stable contract the Pallas kernel also honours).
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum(
+        "bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32
+    ) * (1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32)))
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (the variant the Pallas kernel fuses)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, jnp.float32)).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def mlp(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+        w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Fused GELU MLP: gelu(x @ w1 + b1) @ w2 + b2.
+
+    x: [B, S, D]; w1: [D, F]; w2: [F, D].
+    """
+    h = gelu(jnp.einsum("bsd,df->bsf", x, w1,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+             + b1)
+    return (jnp.einsum("bsf,fd->bsd", h, w2,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+            + b2)

@@ -1,0 +1,418 @@
+"""Layer-2: the three DiT families as branch-decomposed JAX functions.
+
+The decomposition mirrors SmoothCache's caching granularity: every
+cacheable *branch* (self-attention / cross-attention / feed-forward,
+each preceding a residual connection) is an independent function over an
+explicit weight list. aot.py lowers each branch once per
+(family, branch-type, batch-size); the Rust engine composes the full
+forward pass ``x <- x + branch(x, c, W_block)`` and can substitute any
+branch execution with a cached output — exactly the paper's mechanism
+(Fig. 3: the cached output re-enters through the residual connection).
+
+Implementation selection: ``ops("pallas")`` routes the hot-spots through
+the Pallas kernels (the production artifact set), ``ops("jnp")`` through
+the pure-jnp oracles (used for goldens, training, and the kernel-impl
+ablation). Both paths produce identical numerics (pytest enforces this).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import families as fam
+from .families import PATCH, FamilyConfig
+from .kernels import attention as k_attn
+from .kernels import mlp as k_mlp
+from .kernels import modulation as k_mod
+from .kernels import ref as k_ref
+
+
+def _attn_variant() -> str:
+    """Pallas attention variant: 'batched' (default; heads batched per
+    grid cell — §Perf L1 iteration 1) or 'percell' (one head per cell)."""
+    import os
+    return os.environ.get("SMOOTHCACHE_ATTN", "batched")
+
+
+def _pallas_attention_4d(q, k, v):
+    """Attention over [B, H, S, dh] tensors via the selected kernel."""
+    b, h, sq, dh = q.shape
+    if _attn_variant() == "batched":
+        return k_attn.attention_batched(q, k, v)
+    sk = k.shape[2]
+    o = k_attn.attention(q.reshape(b * h, sq, dh),
+                         k.reshape(b * h, sk, dh),
+                         v.reshape(b * h, sk, dh))
+    return o.reshape(b, h, sq, dh)
+
+
+def _ref_attention_4d(q, k, v):
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    o = k_ref.attention(q.reshape(b * h, sq, dh),
+                        k.reshape(b * h, sk, dh),
+                        v.reshape(b * h, sk, dh))
+    return o.reshape(b, h, sq, dh)
+
+
+class _PallasOps:
+    ln_modulate = staticmethod(k_mod.ln_modulate)
+    gate = staticmethod(k_mod.gate)
+    attention = staticmethod(_pallas_attention_4d)
+    mlp = staticmethod(k_mlp.mlp)
+
+
+class _JnpOps:
+    ln_modulate = staticmethod(k_ref.ln_modulate)
+    gate = staticmethod(k_ref.gate)
+    attention = staticmethod(_ref_attention_4d)
+    mlp = staticmethod(k_ref.mlp)
+
+
+def ops(impl: str):
+    if impl == "pallas":
+        return _PallasOps
+    if impl == "jnp":
+        return _JnpOps
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def timestep_embedding(t: jnp.ndarray, freq_dim: int) -> jnp.ndarray:
+    """Sinusoidal embedding of continuous t (scaled to [0, 1000])."""
+    half = freq_dim // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    args = (t * 1000.0)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def mod_params(c: jnp.ndarray, mod_w: jnp.ndarray, mod_b: jnp.ndarray,
+               n: int):
+    """adaLN parameters: silu(c) @ mod_w + mod_b, split into n chunks."""
+    p = silu(c) @ mod_w + mod_b
+    return jnp.split(p, n, axis=-1)
+
+
+def _split_heads(x: jnp.ndarray, heads: int) -> jnp.ndarray:
+    """[B, S, D] -> [B, H, S, dh]."""
+    b, s, d = x.shape
+    dh = d // heads
+    return x.reshape(b, s, heads, dh).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """[B, H, S, dh] -> [B, S, D]."""
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# Branch bodies (pre-residual, gated): the cacheable units
+# ---------------------------------------------------------------------------
+
+def branch_attn(op, cfg: FamilyConfig, x, c,
+                mod_w, mod_b, qkv_w, qkv_b, o_w, o_b):
+    """Self-attention branch delta: gate * Attn(modulate(LN(x)))."""
+    shift, scale, g = mod_params(c, mod_w, mod_b, 3)
+    h = op.ln_modulate(x, shift, scale)
+    qkv = h @ qkv_w + qkv_b                      # [B, S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    o = op.attention(_split_heads(q, cfg.heads),
+                     _split_heads(k, cfg.heads),
+                     _split_heads(v, cfg.heads))
+    y = _merge_heads(o) @ o_w + o_b
+    return op.gate(y, g)
+
+
+def branch_xattn(op, cfg: FamilyConfig, x, cond, c,
+                 mod_w, mod_b, q_w, q_b, kv_w, kv_b, o_w, o_b):
+    """Cross-attention branch delta over conditioning tokens."""
+    shift, scale, g = mod_params(c, mod_w, mod_b, 3)
+    h = op.ln_modulate(x, shift, scale)
+    q = h @ q_w + q_b                            # [B, S, D]
+    kv = cond @ kv_w + kv_b                      # [B, Sc, 2D]
+    k, v = jnp.split(kv, 2, axis=-1)
+    o = op.attention(_split_heads(q, cfg.heads),
+                     _split_heads(k, cfg.heads),
+                     _split_heads(v, cfg.heads))
+    y = _merge_heads(o) @ o_w + o_b
+    return op.gate(y, g)
+
+
+def branch_ffn(op, cfg: FamilyConfig, x, c,
+               mod_w, mod_b, w1, b1, w2, b2):
+    """Feed-forward branch delta: gate * MLP(modulate(LN(x)))."""
+    shift, scale, g = mod_params(c, mod_w, mod_b, 3)
+    h = op.ln_modulate(x, shift, scale)
+    y = op.mlp(h, w1, b1, w2, b2)
+    return op.gate(y, g)
+
+
+# --- video factorisation wrappers ------------------------------------------
+# tokens are stored flat [B, F*Ssp, D]; spatial branches attend within a
+# frame, temporal branches attend across frames at a fixed spatial site.
+
+def _to_spatial(cfg, x):
+    b = x.shape[0]
+    return x.reshape(b * cfg.frames, cfg.spatial_tokens, cfg.hidden)
+
+
+def _from_spatial(cfg, x, b):
+    return x.reshape(b, cfg.frames * cfg.spatial_tokens, cfg.hidden)
+
+
+def _to_temporal(cfg, x):
+    b = x.shape[0]
+    x = x.reshape(b, cfg.frames, cfg.spatial_tokens, cfg.hidden)
+    x = x.transpose(0, 2, 1, 3)                  # [B, Ssp, F, D]
+    return x.reshape(b * cfg.spatial_tokens, cfg.frames, cfg.hidden)
+
+
+def _from_temporal(cfg, x, b):
+    x = x.reshape(b, cfg.spatial_tokens, cfg.frames, cfg.hidden)
+    return x.transpose(0, 2, 1, 3).reshape(
+        b, cfg.frames * cfg.spatial_tokens, cfg.hidden)
+
+
+def _rep(v, times):
+    """Repeat conditioning rows for the factorised sub-batch."""
+    return jnp.repeat(v, times, axis=0)
+
+
+def video_branch(op, cfg: FamilyConfig, kind: str, x, cond, c, *w):
+    b = x.shape[0]
+    if kind.startswith("s_"):
+        xs = _to_spatial(cfg, x)
+        cs = _rep(c, cfg.frames)
+        conds = _rep(cond, cfg.frames) if cond is not None else None
+        back = functools.partial(_from_spatial, cfg, b=b)
+    else:
+        xs = _to_temporal(cfg, x)
+        cs = _rep(c, cfg.spatial_tokens)
+        conds = _rep(cond, cfg.spatial_tokens) if cond is not None else None
+        back = functools.partial(_from_temporal, cfg, b=b)
+    base = kind[2:]
+    if base == "attn":
+        d = branch_attn(op, cfg, xs, cs, *w)
+    elif base == "xattn":
+        d = branch_xattn(op, cfg, xs, conds, cs, *w)
+    else:
+        d = branch_ffn(op, cfg, xs, cs, *w)
+    return back(d)
+
+
+def branch_fn(op, cfg: FamilyConfig, branch: str, x, cond, c, *w):
+    """Uniform dispatch used by both aot.py and the reference forward."""
+    if cfg.name == "video":
+        return video_branch(op, cfg, branch, x, cond, c, *w)
+    if branch == "attn":
+        return branch_attn(op, cfg, x, c, *w)
+    if branch == "xattn":
+        return branch_xattn(op, cfg, x, cond, c, *w)
+    if branch == "ffn":
+        return branch_ffn(op, cfg, x, c, *w)
+    raise ValueError(f"unknown branch {branch!r} for family {cfg.name}")
+
+
+# ---------------------------------------------------------------------------
+# Embed / final
+# ---------------------------------------------------------------------------
+
+def embed(cfg: FamilyConfig, x, t, label, prompt_ids, *w):
+    """Patchify + positional + conditioning embeddings.
+
+    Returns (tokens [B,S,D], c [B,D], cond [B,Sc,D] or None).
+    label: int32 [B] (image) — num_classes is the learned null row (CFG).
+    prompt_ids: int32 [B, Sc] (audio/video) — id 0 is the null token.
+    """
+    names = fam.embed_weight_names(cfg)
+    p = dict(zip(names, w))
+    b = x.shape[0]
+
+    if cfg.name == "image":
+        h_, w_, ch = cfg.latent_shape
+        gh, gw = h_ // PATCH, w_ // PATCH
+        xp = x.reshape(b, gh, PATCH, gw, PATCH, ch)
+        xp = xp.transpose(0, 1, 3, 2, 4, 5).reshape(
+            b, gh * gw, PATCH * PATCH * ch)
+    elif cfg.name == "audio":
+        xp = x                                    # [B, T, C] already tokens
+    else:  # video
+        f, h_, w_, ch = cfg.latent_shape
+        gh, gw = h_ // PATCH, w_ // PATCH
+        xp = x.reshape(b, f, gh, PATCH, gw, PATCH, ch)
+        xp = xp.transpose(0, 1, 2, 4, 3, 5, 6).reshape(
+            b, f * gh * gw, PATCH * PATCH * ch)
+
+    tokens = xp @ p["patch_w"] + p["patch_b"] + p["pos"][None]
+
+    temb = timestep_embedding(t, cfg.t_freq_dim)
+    c = silu(temb @ p["temb_w1"] + p["temb_b1"]) @ p["temb_w2"] + p["temb_b2"]
+
+    cond = None
+    if cfg.vocab:
+        cond = p["prompt_emb"][prompt_ids]        # [B, Sc, D]
+        c = c + jnp.mean(cond, axis=1)
+    if cfg.num_classes:
+        c = c + p["label_emb"][label]
+    return tokens, c, cond
+
+
+def final(cfg: FamilyConfig, x, c, mod_w, mod_b, lin_w, lin_b):
+    """Final adaLN + linear head back to latent shape (epsilon prediction)."""
+    shift, scale = mod_params(c, mod_w, mod_b, 2)
+    h = k_ref.ln_modulate(x, shift, scale)
+    y = h @ lin_w + lin_b                         # [B, S, patch_dim]
+    b = x.shape[0]
+    if cfg.name == "image":
+        h_, w_, ch = cfg.latent_shape
+        gh, gw = h_ // PATCH, w_ // PATCH
+        y = y.reshape(b, gh, gw, PATCH, PATCH, ch)
+        y = y.transpose(0, 1, 3, 2, 4, 5).reshape(b, h_, w_, ch)
+    elif cfg.name == "audio":
+        pass                                      # [B, T, C] already latent
+    else:
+        f, h_, w_, ch = cfg.latent_shape
+        gh, gw = h_ // PATCH, w_ // PATCH
+        y = y.reshape(b, f, gh, gw, PATCH, PATCH, ch)
+        y = y.transpose(0, 1, 2, 4, 3, 5, 6).reshape(b, f, h_, w_, ch)
+    return y
+
+
+def patch_dim(cfg: FamilyConfig) -> int:
+    if cfg.name == "image":
+        return PATCH * PATCH * cfg.latent_shape[2]
+    if cfg.name == "audio":
+        return cfg.latent_shape[1]
+    return PATCH * PATCH * cfg.latent_shape[3]
+
+
+# ---------------------------------------------------------------------------
+# Weight init + full reference forward (training / goldens)
+# ---------------------------------------------------------------------------
+
+def init_weights(cfg: FamilyConfig, seed: int,
+                 adaln_zero: bool = False) -> Dict[str, np.ndarray]:
+    """Deterministic weights, flat dict keyed the way weights_io stores them.
+
+    adaln_zero=True zero-inits the modulation/final linears (DiT's
+    adaLN-zero recipe — used for the trained image family); False uses a
+    small random init so untrained families still produce non-degenerate
+    branch outputs for calibration (DESIGN.md section 3).
+    """
+    rng = np.random.default_rng(seed)
+    d, dff = cfg.hidden, cfg.d_ff
+
+    def lin(shape, std=0.02):
+        return rng.standard_normal(shape).astype(np.float32) * std
+
+    def zeros(shape):
+        return np.zeros(shape, np.float32)
+
+    w: Dict[str, np.ndarray] = {}
+    pd = patch_dim(cfg)
+    w["embed.patch_w"] = lin((pd, d))
+    w["embed.patch_b"] = zeros((d,))
+    w["embed.pos"] = _sincos_pos(cfg).astype(np.float32)
+    w["embed.temb_w1"] = lin((cfg.t_freq_dim, d))
+    w["embed.temb_b1"] = zeros((d,))
+    w["embed.temb_w2"] = lin((d, d))
+    w["embed.temb_b2"] = zeros((d,))
+    if cfg.num_classes:
+        w["embed.label_emb"] = lin((cfg.num_classes + 1, d), std=0.5)
+    if cfg.vocab:
+        w["embed.prompt_emb"] = lin((cfg.vocab, d), std=0.5)
+
+    mod_std = 0.0 if adaln_zero else 0.02
+    for i in range(cfg.depth):
+        for br in cfg.branch_types:
+            pre = f"blocks.{i}.{br}."
+            w[pre + "mod_w"] = (zeros((d, 3 * d)) if adaln_zero
+                                else lin((d, 3 * d), mod_std))
+            mod_b = zeros((3 * d,))
+            if not adaln_zero:
+                # unit gate bias: untrained families behave like standard
+                # pre-LN transformers (O(1) branch contributions), so
+                # caching perturbations are material — trained models have
+                # O(1) learned gates too (DESIGN.md §3)
+                mod_b[2 * d:] = 1.0
+            w[pre + "mod_b"] = mod_b
+            if br.endswith("xattn"):
+                w[pre + "q_w"] = lin((d, d))
+                w[pre + "q_b"] = zeros((d,))
+                w[pre + "kv_w"] = lin((d, 2 * d))
+                w[pre + "kv_b"] = zeros((2 * d,))
+                w[pre + "o_w"] = lin((d, d))
+                w[pre + "o_b"] = zeros((d,))
+            elif br.endswith("attn"):
+                w[pre + "qkv_w"] = lin((d, 3 * d))
+                w[pre + "qkv_b"] = zeros((3 * d,))
+                w[pre + "o_w"] = lin((d, d))
+                w[pre + "o_b"] = zeros((d,))
+            else:
+                w[pre + "w1"] = lin((d, dff))
+                w[pre + "b1"] = zeros((dff,))
+                w[pre + "w2"] = lin((dff, d))
+                w[pre + "b2"] = zeros((d,))
+    w["final.mod_w"] = (zeros((d, 2 * d)) if adaln_zero
+                        else lin((d, 2 * d), mod_std))
+    w["final.mod_b"] = zeros((2 * d,))
+    w["final.lin_w"] = zeros((d, pd)) if adaln_zero else lin((d, pd))
+    w["final.lin_b"] = zeros((pd,))
+    return w
+
+
+def _sincos_pos(cfg: FamilyConfig) -> np.ndarray:
+    """Fixed sin-cos positional embedding over the flat token axis."""
+    s, d = cfg.seq_len, cfg.hidden
+    pos = np.arange(s, dtype=np.float32)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(d // 2, dtype=np.float32)
+                 / (d // 2))
+    ang = pos * div[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+
+
+def branch_weights(weights: Dict[str, np.ndarray], cfg: FamilyConfig,
+                   block: int, branch: str) -> List[np.ndarray]:
+    pre = f"blocks.{block}.{branch}."
+    return [weights[pre + n] for n in fam.branch_weight_names(cfg, branch)]
+
+
+def forward(cfg: FamilyConfig, weights: Dict[str, np.ndarray], x, t,
+            label=None, prompt_ids=None, impl: str = "jnp",
+            collect_deltas: bool = False):
+    """Full reference forward pass: embed -> blocks -> final.
+
+    This is the composition the Rust engine must reproduce on golden
+    vectors (to <= 1e-4 rel Linf). Returns eps prediction, optionally the
+    per-(block, branch) delta list in execution order.
+    """
+    op = ops(impl)
+    ew = [weights["embed." + n] for n in fam.embed_weight_names(cfg)]
+    tokens, c, cond = embed(cfg, x, t, label, prompt_ids, *ew)
+    deltas = []
+    for i in range(cfg.depth):
+        for br in cfg.branch_types:
+            bw = branch_weights(weights, cfg, i, br)
+            d = branch_fn(op, cfg, br, tokens, cond, c, *bw)
+            if collect_deltas:
+                deltas.append((f"blocks.{i}.{br}", d))
+            tokens = tokens + d
+    fw = [weights["final." + n] for n in fam.final_weight_names(cfg)]
+    eps = final(cfg, tokens, c, *fw)
+    if collect_deltas:
+        return eps, deltas
+    return eps

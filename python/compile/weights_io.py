@@ -1,0 +1,56 @@
+"""weights.bin writer — the Python half of the Rust weight-loading contract.
+
+Format (little-endian):
+    8 bytes   magic  b"SMCWGT01"
+    4 bytes   u32    header length H
+    H bytes   JSON   {"tensors": [{"name", "shape", "offset", "count"}]}
+    ...       raw    f32 data; ``offset``/``count`` are in f32 elements
+              relative to the start of the data section.
+
+The Rust parser lives in rust/src/model/weights.rs and must round-trip
+this exactly (tested on real artifacts in rust/tests/).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"SMCWGT01"
+
+
+def write_weights(path: str, weights: Dict[str, np.ndarray]) -> None:
+    names = sorted(weights)
+    tensors = []
+    offset = 0
+    for n in names:
+        a = np.ascontiguousarray(weights[n], dtype=np.float32)
+        tensors.append({"name": n, "shape": list(a.shape),
+                        "offset": offset, "count": int(a.size)})
+        offset += int(a.size)
+    header = json.dumps({"tensors": tensors}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for n in names:
+            f.write(np.ascontiguousarray(
+                weights[n], dtype=np.float32).tobytes())
+
+
+def read_weights(path: str) -> Dict[str, np.ndarray]:
+    """Reader (used by tests to verify the round-trip)."""
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == MAGIC, f"bad magic {magic!r}"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        data = np.frombuffer(f.read(), dtype="<f4")
+    out = {}
+    for t in header["tensors"]:
+        a = data[t["offset"]:t["offset"] + t["count"]]
+        out[t["name"]] = a.reshape(t["shape"]).copy()
+    return out

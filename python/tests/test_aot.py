@@ -1,0 +1,95 @@
+"""AOT pipeline tests: weights round-trip, manifest integrity, HLO export."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, families as fam, model
+from compile.weights_io import read_weights, write_weights
+
+
+def test_weights_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    w = {"a.b": rng.standard_normal((3, 4)).astype(np.float32),
+         "scalarish": rng.standard_normal((1,)).astype(np.float32),
+         "deep.nested.name": rng.standard_normal((2, 3, 5)).astype(
+             np.float32)}
+    p = str(tmp_path / "w.bin")
+    write_weights(p, w)
+    got = read_weights(p)
+    assert set(got) == set(w)
+    for k in w:
+        np.testing.assert_array_equal(got[k], w[k])
+
+
+def test_weights_file_magic(tmp_path):
+    p = str(tmp_path / "w.bin")
+    write_weights(p, {"x": np.zeros((2,), np.float32)})
+    with open(p, "rb") as f:
+        assert f.read(8) == b"SMCWGT01"
+
+
+@pytest.mark.parametrize("name", ["image", "audio", "video"])
+def test_entries_cover_all_branches(name):
+    cfg = fam.family(name)
+    w = model.init_weights(cfg, seed=0)
+    entries = list(aot.entries_for(cfg, w, "jnp"))
+    names = [e[0] for e in entries]
+    assert names[0] == "embed" and names[-1] == "final"
+    assert set(names[1:-1]) == {f"branch.{b}" for b in cfg.branch_types}
+
+
+@pytest.mark.parametrize("name", ["image", "audio"])
+def test_lower_entry_produces_hlo_text(name):
+    cfg = fam.family(name)
+    w = model.init_weights(cfg, seed=0)
+    entries = list(aot.entries_for(cfg, w, "jnp"))
+    entry, fn, specs_fn, inputs, wnames = entries[1]  # first branch
+    text = aot.lower_entry(cfg, w, entry, fn, specs_fn, wnames, batch=1)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+def test_branch_weight_templates_resolve():
+    cfg = fam.family("video")
+    w = model.init_weights(cfg, seed=0)
+    entries = list(aot.entries_for(cfg, w, "jnp"))
+    for entry, _, _, _, wnames in entries:
+        if not entry.startswith("branch."):
+            continue
+        for i in range(cfg.depth):
+            for tpl in wnames:
+                assert tpl.format(i=i) in w, (entry, tpl, i)
+
+
+def test_goldens_structure():
+    cfg = fam.family("audio")
+    w = model.init_weights(cfg, seed=0)
+    g = aot.make_goldens(cfg, w)
+    assert len(g["x"]) == cfg.latent_size
+    assert len(g["eps"]) == cfg.latent_size
+    assert len(g["branch_delta_l1"]) == cfg.depth * len(cfg.branch_types)
+    assert all(v > 0 for v in g["branch_delta_l1"].values())
+
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_built_manifest_is_complete():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    for name, famm in m["families"].items():
+        cfg = fam.family(name)
+        assert set(famm["entries"]) == (
+            {"embed", "final"} | {f"branch.{b}" for b in cfg.branch_types})
+        for entry in famm["entries"].values():
+            for b, fname in entry["artifacts"].items():
+                path = os.path.join(ART, fname)
+                assert os.path.exists(path), fname
+                with open(path) as f:
+                    assert f.read(9) == "HloModule"
+        assert os.path.exists(os.path.join(ART, famm["weights_file"]))

@@ -1,0 +1,190 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes for every Pallas kernel and asserts
+allclose against the pure-jnp oracles in kernels/ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as k_attn
+from compile.kernels import mlp as k_mlp
+from compile.kernels import modulation as k_mod
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, shape, dtype, scale=1.0):
+    a = rng.standard_normal(shape).astype(np.float32) * scale
+    return jnp.asarray(a, dtype=dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+def _close(a, b, dtype):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **_tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(bh=st.sampled_from([1, 2, 8]),
+       sq=st.sampled_from([1, 16, 64]),
+       sk=st.sampled_from([8, 48, 64, 100]),
+       dh=st.sampled_from([8, 32, 64]),
+       kv_block=st.sampled_from([8, 16, 128]),
+       seed=st.integers(0, 2 ** 16))
+def test_attention_matches_ref(bh, sq, sk, dh, kv_block, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (bh, sq, dh), jnp.float32)
+    k = _rand(rng, (bh, sk, dh), jnp.float32)
+    v = _rand(rng, (bh, sk, dh), jnp.float32)
+    got = k_attn.attention(q, k, v, kv_block=kv_block)
+    want = ref.attention(q, k, v)
+    _close(got, want, jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       seed=st.integers(0, 2 ** 16))
+def test_attention_dtypes(dtype, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (4, 32, 16), dtype)
+    k = _rand(rng, (4, 32, 16), dtype)
+    v = _rand(rng, (4, 32, 16), dtype)
+    got = k_attn.attention(q, k, v)
+    assert got.dtype == dtype
+    _close(got, ref.attention(q, k, v), dtype)
+
+
+def test_attention_large_magnitude_stable():
+    """Online-softmax rescaling must survive large score magnitudes."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (2, 16, 8), jnp.float32, scale=30.0)
+    k = _rand(rng, (2, 16, 8), jnp.float32, scale=30.0)
+    v = _rand(rng, (2, 16, 8), jnp.float32)
+    got = k_attn.attention(q, k, v, kv_block=4)
+    assert np.isfinite(np.asarray(got)).all()
+    _close(got, ref.attention(q, k, v), jnp.float32)
+
+
+def test_attention_softmax_rows_are_convex_combos():
+    """Output rows lie inside the convex hull of V rows (softmax weights)."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (1, 8, 4), jnp.float32)
+    k = _rand(rng, (1, 8, 4), jnp.float32)
+    v = _rand(rng, (1, 8, 4), jnp.float32)
+    out = np.asarray(k_attn.attention(q, k, v))
+    vmin = np.asarray(v).min(axis=1, keepdims=True)
+    vmax = np.asarray(v).max(axis=1, keepdims=True)
+    assert (out >= vmin - 1e-5).all() and (out <= vmax + 1e-5).all()
+
+
+@settings(**SETTINGS)
+@given(b=st.sampled_from([1, 2, 4]),
+       s=st.sampled_from([32, 64, 128]),
+       d=st.sampled_from([32, 128]),
+       f=st.sampled_from([64, 256]),
+       seq_block=st.sampled_from([16, 32]),
+       seed=st.integers(0, 2 ** 16))
+def test_mlp_matches_ref(b, s, d, f, seq_block, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, s, d), jnp.float32)
+    w1 = _rand(rng, (d, f), jnp.float32, 0.05)
+    b1 = _rand(rng, (f,), jnp.float32, 0.05)
+    w2 = _rand(rng, (f, d), jnp.float32, 0.05)
+    b2 = _rand(rng, (d,), jnp.float32, 0.05)
+    got = k_mlp.mlp(x, w1, b1, w2, b2, seq_block=seq_block)
+    _close(got, ref.mlp(x, w1, b1, w2, b2), jnp.float32)
+
+
+def test_mlp_rejects_indivisible_seq_block():
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (1, 60, 16), jnp.float32)
+    w1 = _rand(rng, (16, 32), jnp.float32)
+    b1 = _rand(rng, (32,), jnp.float32)
+    w2 = _rand(rng, (32, 16), jnp.float32)
+    b2 = _rand(rng, (16,), jnp.float32)
+    with pytest.raises(AssertionError):
+        k_mlp.mlp(x, w1, b1, w2, b2, seq_block=32)
+
+
+@settings(**SETTINGS)
+@given(b=st.sampled_from([1, 3, 8]),
+       s=st.sampled_from([16, 64]),
+       d=st.sampled_from([32, 128, 256]),
+       seed=st.integers(0, 2 ** 16))
+def test_ln_modulate_matches_ref(b, s, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, s, d), jnp.float32, 3.0)
+    shift = _rand(rng, (b, d), jnp.float32)
+    scale = _rand(rng, (b, d), jnp.float32)
+    got = k_mod.ln_modulate(x, shift, scale)
+    _close(got, ref.ln_modulate(x, shift, scale), jnp.float32)
+
+
+def test_ln_modulate_zero_params_is_plain_layernorm():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (2, 16, 64), jnp.float32)
+    z = jnp.zeros((2, 64), jnp.float32)
+    got = k_mod.ln_modulate(x, z, z)
+    _close(got, ref.layernorm(x), jnp.float32)
+    # normalized rows: mean 0, var 1
+    m = np.asarray(got).mean(-1)
+    np.testing.assert_allclose(m, np.zeros_like(m), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(b=st.sampled_from([1, 2, 8]),
+       s=st.sampled_from([8, 64]),
+       d=st.sampled_from([16, 128]),
+       seed=st.integers(0, 2 ** 16))
+def test_gate_matches_ref(b, s, d, seed):
+    rng = np.random.default_rng(seed)
+    y = _rand(rng, (b, s, d), jnp.float32)
+    g = _rand(rng, (b, d), jnp.float32)
+    _close(k_mod.gate(y, g), ref.gate(y, g), jnp.float32)
+
+
+def test_gate_zero_gate_zeroes_branch():
+    """adaLN-zero at init: zero gate must kill the branch delta exactly."""
+    rng = np.random.default_rng(3)
+    y = _rand(rng, (2, 16, 32), jnp.float32)
+    g = jnp.zeros((2, 32), jnp.float32)
+    assert np.abs(np.asarray(k_mod.gate(y, g))).max() == 0.0
+
+
+@settings(**SETTINGS)
+@given(b=st.sampled_from([1, 2, 4]),
+       h=st.sampled_from([1, 4]),
+       sq=st.sampled_from([1, 16, 64]),
+       sk=st.sampled_from([8, 64]),
+       dh=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2 ** 16))
+def test_attention_batched_matches_ref(b, h, sq, sk, dh, seed):
+    """The §Perf 'heads batched per grid cell' kernel variant."""
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, sq, dh), jnp.float32)
+    k = _rand(rng, (b, h, sk, dh), jnp.float32)
+    v = _rand(rng, (b, h, sk, dh), jnp.float32)
+    got = k_attn.attention_batched(q, k, v)
+    want = ref.attention(q.reshape(b * h, sq, dh),
+                         k.reshape(b * h, sk, dh),
+                         v.reshape(b * h, sk, dh)).reshape(b, h, sq, dh)
+    _close(got, want, jnp.float32)
+
+
+def test_attention_variants_agree():
+    rng = np.random.default_rng(9)
+    q = _rand(rng, (2, 4, 16, 8), jnp.float32)
+    k = _rand(rng, (2, 4, 16, 8), jnp.float32)
+    v = _rand(rng, (2, 4, 16, 8), jnp.float32)
+    a = k_attn.attention_batched(q, k, v)
+    b = k_attn.attention(q.reshape(8, 16, 8), k.reshape(8, 16, 8),
+                         v.reshape(8, 16, 8)).reshape(2, 4, 16, 8)
+    _close(a, b, jnp.float32)

@@ -1,0 +1,145 @@
+"""Model-level tests: shapes, impl equivalence, conditioning behaviour."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import families as fam
+from compile import model
+
+ALL = ["image", "audio", "video"]
+
+
+def _inputs(cfg, b, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b,) + cfg.latent_shape).astype(np.float32)
+    t = rng.random(b).astype(np.float32)
+    label = (rng.integers(0, cfg.num_classes, b).astype(np.int32)
+             if cfg.num_classes else None)
+    pids = (rng.integers(1, cfg.vocab, (b, cfg.cond_len)).astype(np.int32)
+            if cfg.vocab else None)
+    return (jnp.asarray(x), jnp.asarray(t),
+            None if label is None else jnp.asarray(label),
+            None if pids is None else jnp.asarray(pids))
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return {n: {k: jnp.asarray(v) for k, v in
+                model.init_weights(fam.family(n), seed=7).items()}
+            for n in ALL}
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("batch", [1, 2, 4])
+def test_forward_shape(name, batch, weights):
+    cfg = fam.family(name)
+    x, t, label, pids = _inputs(cfg, batch)
+    eps = model.forward(cfg, weights[name], x, t, label, pids, impl="jnp")
+    assert eps.shape == (batch,) + cfg.latent_shape
+    assert np.isfinite(np.asarray(eps)).all()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_pallas_equals_jnp(name, weights):
+    cfg = fam.family(name)
+    x, t, label, pids = _inputs(cfg, 2, seed=1)
+    e1 = model.forward(cfg, weights[name], x, t, label, pids, impl="jnp")
+    e2 = model.forward(cfg, weights[name], x, t, label, pids, impl="pallas")
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_branch_deltas_order_and_count(name, weights):
+    cfg = fam.family(name)
+    x, t, label, pids = _inputs(cfg, 1)
+    _, deltas = model.forward(cfg, weights[name], x, t, label, pids,
+                              impl="jnp", collect_deltas=True)
+    assert len(deltas) == cfg.depth * len(cfg.branch_types)
+    want = [f"blocks.{i}.{br}" for i in range(cfg.depth)
+            for br in cfg.branch_types]
+    assert [n for n, _ in deltas] == want
+    for _, d in deltas:
+        assert d.shape == (1, cfg.seq_len, cfg.hidden)
+
+
+def test_timestep_embedding_distinguishes_t():
+    e1 = model.timestep_embedding(jnp.asarray([0.1]), 64)
+    e2 = model.timestep_embedding(jnp.asarray([0.9]), 64)
+    assert np.abs(np.asarray(e1) - np.asarray(e2)).max() > 0.1
+
+
+def test_label_conditioning_changes_output(weights):
+    cfg = fam.family("image")
+    x, t, _, _ = _inputs(cfg, 1)
+    e0 = model.forward(cfg, weights["image"], x, t,
+                       jnp.asarray([0], jnp.int32), None)
+    e1 = model.forward(cfg, weights["image"], x, t,
+                       jnp.asarray([5], jnp.int32), None)
+    assert np.abs(np.asarray(e0) - np.asarray(e1)).max() > 1e-5
+
+
+def test_prompt_conditioning_changes_output(weights):
+    cfg = fam.family("audio")
+    x, t, _, pids = _inputs(cfg, 1)
+    e0 = model.forward(cfg, weights["audio"], x, t, None, pids)
+    e1 = model.forward(cfg, weights["audio"], x, t, None,
+                       jnp.zeros_like(pids))
+    assert np.abs(np.asarray(e0) - np.asarray(e1)).max() > 1e-5
+
+
+def test_adaln_zero_init_gives_input_independent_eps():
+    """With adaLN-zero init every branch delta is zero -> eps is the
+    (zero-init) final head output: exactly zero."""
+    cfg = fam.family("image")
+    w = {k: jnp.asarray(v) for k, v in
+         model.init_weights(cfg, seed=0, adaln_zero=True).items()}
+    x, t, label, _ = _inputs(cfg, 1)
+    eps, deltas = model.forward(cfg, w, x, t, label, None,
+                                collect_deltas=True)
+    for _, d in deltas:
+        assert np.abs(np.asarray(d)).max() == 0.0
+    assert np.abs(np.asarray(eps)).max() == 0.0
+
+
+def test_video_spatial_temporal_round_trip():
+    cfg = fam.family("video")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(
+        (2, cfg.seq_len, cfg.hidden)).astype(np.float32))
+    from compile.model import (_from_spatial, _from_temporal, _to_spatial,
+                               _to_temporal)
+    np.testing.assert_array_equal(
+        np.asarray(_from_spatial(cfg, _to_spatial(cfg, x), 2)),
+        np.asarray(x))
+    np.testing.assert_array_equal(
+        np.asarray(_from_temporal(cfg, _to_temporal(cfg, x), 2)),
+        np.asarray(x))
+
+
+def test_cross_timestep_similarity_exists():
+    """The paper's core observation (section 2.1): branch outputs at nearby
+    t are similar. Verify the relative L1 error between adjacent-t branch
+    outputs on the SAME x_t is small vs distant-t."""
+    cfg = fam.family("image")
+    w = {k: jnp.asarray(v) for k, v in
+         model.init_weights(cfg, seed=7).items()}
+    x, _, label, _ = _inputs(cfg, 1)
+
+    def deltas_at(tv):
+        _, ds = model.forward(cfg, w, x, jnp.asarray([tv], jnp.float32),
+                              label, None, collect_deltas=True)
+        return ds
+
+    d0 = deltas_at(0.50)
+    d_near = deltas_at(0.52)
+    d_far = deltas_at(0.95)
+
+    def rel(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        return np.abs(a - b).sum() / (np.abs(a).sum() + 1e-12)
+
+    near = np.mean([rel(a[1], b[1]) for a, b in zip(d0, d_near)])
+    far = np.mean([rel(a[1], b[1]) for a, b in zip(d0, d_far)])
+    assert near < far

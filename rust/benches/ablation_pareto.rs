@@ -1,0 +1,106 @@
+//! §3.3 ablation: the caching/sample-step Pareto front. Sweeps FORA n
+//! and SmoothCache alpha across DDIM step counts on the image family and
+//! prints the (GMACs, FFD) frontier — the paper's claim is that
+//! SmoothCache's front dominates static caching's.
+
+use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
+use smoothcache::experiments::{eval_conds, generate_set, image_corpus, EvalConfig};
+use smoothcache::macs::{as_gmacs, generation_macs};
+use smoothcache::model::Engine;
+use smoothcache::pipeline::CacheMode;
+use smoothcache::quality::{ffd, FeatureExtractor};
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::bench::{ascii_plot, fast_mode, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    std::fs::create_dir_all("bench_out")?;
+    let mut engine = Engine::open(dir)?;
+    engine.load_family("image")?;
+    let fm = engine.family_manifest("image")?.clone();
+    let bts = fm.branch_types.clone();
+
+    let (steps_list, n_samples, calib_samples) =
+        if fast_mode() { (vec![10], 12, 2) } else { (vec![50], 24, 10) };
+    let fx = FeatureExtractor::new(0xF1D, 12);
+    let (corpus, _) = image_corpus(128, 0xC0FFEE);
+
+    let mut table = Table::new(&["steps", "method", "param", "skip%", "GMACs", "FFD", "lat(s)"]);
+    let mut fora_pts: Vec<(f64, f64)> = Vec::new();
+    let mut ours_pts: Vec<(f64, f64)> = Vec::new();
+
+    for &steps in &steps_list {
+        let cc = CalibrationConfig {
+            num_samples: calib_samples,
+            ..CalibrationConfig::new(SolverKind::Ddim, steps)
+        };
+        let curves = calibrate(&engine, "image", &cc)?;
+        eprintln!("[pareto] calibrated ddim-{steps}");
+
+        let mut roster: Vec<(String, String, Schedule)> = Vec::new();
+        for n in [2usize, 3, 4] {
+            roster.push(("FORA".into(), format!("n={n}"), Schedule::fora(steps, &bts, n)));
+        }
+        for target in [0.2, 0.35, 0.5, 0.6, 2.0 / 3.0, 0.72] {
+            let (alpha, s) = curves.alpha_for_skip_fraction(target, &bts);
+            roster.push(("Ours".into(), format!("a={alpha:.3}"), s));
+        }
+
+        // warmup
+        {
+            let mut ec = EvalConfig::new("image", SolverKind::Ddim, 2);
+            ec.n_samples = 4;
+            ec.cfg_scale = 1.5;
+            let conds = eval_conds(&fm, 4, 1);
+            let _ = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+        }
+
+        for (method, param, schedule) in &roster {
+            let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps);
+            ec.n_samples = n_samples;
+            ec.cfg_scale = 1.5; // paper protocol
+            let conds = eval_conds(&fm, n_samples, 777);
+            let (set, stats) =
+                generate_set(&engine, &ec, &conds, &CacheMode::Grouped(schedule))?;
+            let f = ffd(&fx, &corpus, &set);
+            let g = as_gmacs(generation_macs(&fm, schedule, true));
+            table.row(&[
+                steps.to_string(),
+                method.clone(),
+                param.clone(),
+                format!("{:.0}%", schedule.skip_fraction() * 100.0),
+                format!("{g:.2}"),
+                format!("{f:.3}"),
+                format!("{:.3}", stats.per_sample_seconds),
+            ]);
+            if method == "FORA" {
+                fora_pts.push((g, f));
+            } else {
+                ours_pts.push((g, f));
+            }
+            eprintln!("[pareto] ddim-{steps} {method} {param}: done");
+        }
+    }
+
+    println!("\n§3.3 ablation — caching/sample-step Pareto front (image, DDIM)");
+    table.print();
+    std::fs::write("bench_out/ablation_pareto.csv", table.to_csv())?;
+
+    // crude frontier visual: FFD (y) over GMACs-sorted points (x)
+    fora_pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    ours_pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let plot = ascii_plot(
+        "Pareto: FFD (lower better) across increasing GMACs",
+        &[
+            ("FORA".into(), fora_pts.iter().map(|p| p.1).collect()),
+            ("Ours".into(), ours_pts.iter().map(|p| p.1).collect()),
+        ],
+        10,
+    );
+    println!("{plot}");
+    Ok(())
+}

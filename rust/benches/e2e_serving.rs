@@ -1,0 +1,124 @@
+//! End-to-end serving bench: the full coordinator stack (router →
+//! dynamic batcher → executor) under open-loop Poisson traffic, per
+//! caching policy. Reports throughput, latency percentiles, batch
+//! occupancy and skip fraction — the serving-system view of the paper's
+//! acceleration claim.
+
+use std::time::{Duration, Instant};
+
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::bench::{fast_mode, Table};
+use smoothcache::workload::PoissonTrace;
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    std::fs::create_dir_all("bench_out")?;
+
+    let (steps, n_requests, rate_rps) = if fast_mode() { (8, 16, 8.0) } else { (50, 48, 4.0) };
+
+    let mut table = Table::new(&[
+        "policy", "served", "throughput (req/s)", "p50 (s)", "p95 (s)", "mean exec (s)",
+        "occupancy", "skip%",
+    ]);
+
+    for policy in [
+        Policy::NoCache,
+        Policy::Fora(2),
+        Policy::Fora(3),
+        Policy::Smooth(0.25),
+        Policy::Smooth(0.5),
+    ] {
+        let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+        cfg.preload = vec!["image".into()];
+        cfg.max_wait = Duration::from_millis(25);
+        cfg.calib_samples = if fast_mode() { 2 } else { 6 };
+        let coord = Coordinator::start(cfg)?;
+
+        // warmup: force calibration + executable compiles out of the
+        // measured window
+        let warm = Request {
+            id: 0,
+            family: "image".into(),
+            cond: smoothcache::model::Cond::Label(vec![0]),
+            solver: SolverKind::Ddim,
+            steps,
+            cfg_scale: 1.0,
+            seed: 1,
+            policy: policy.clone(),
+        };
+        coord.generate_blocking(warm.clone())?;
+        for b in [2usize, 4] {
+            // also compile the larger batch variants
+            let rxs: Vec<_> = (0..b)
+                .map(|i| {
+                    let mut r = warm.clone();
+                    r.id = 0;
+                    r.seed = 100 + i as u64;
+                    coord.submit(r)
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap()?;
+            }
+        }
+
+        // measured open-loop run
+        let trace = PoissonTrace::generate(rate_rps, n_requests, 10, 0, 0, 0xE2E);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        for (i, item) in trace.items.iter().enumerate() {
+            let target = t0 + Duration::from_secs_f64(item.arrival_s);
+            if let Some(sleep) = target.checked_duration_since(Instant::now()) {
+                std::thread::sleep(sleep);
+            }
+            let req = Request {
+                id: 0,
+                family: "image".into(),
+                cond: item.cond.clone(),
+                solver: SolverKind::Ddim,
+                steps,
+                cfg_scale: 1.0,
+                seed: item.seed ^ i as u64,
+                policy: policy.clone(),
+            };
+            pending.push(coord.submit(req));
+        }
+        let mut latencies = Vec::new();
+        let mut skip = 0.0;
+        for rx in pending {
+            let resp = rx.recv().unwrap()?;
+            latencies.push(resp.total_seconds);
+            skip = resp.gen_stats.skip_fraction();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| latencies[((q * (latencies.len() - 1) as f64) as usize).min(latencies.len() - 1)];
+        let m = coord.metrics();
+        table.row(&[
+            policy.wire(),
+            n_requests.to_string(),
+            format!("{:.2}", n_requests as f64 / wall),
+            format!("{:.3}", pct(0.5)),
+            format!("{:.3}", pct(0.95)),
+            format!("{:.3}", m.exec_latency.mean()),
+            format!("{:.2}", m.occupancy()),
+            format!("{:.0}%", skip * 100.0),
+        ]);
+        eprintln!(
+            "[e2e] {}: wall={wall:.1}s metrics: {}",
+            policy.wire(),
+            m.summary()
+        );
+        coord.shutdown();
+    }
+
+    println!("\nE2E serving — image family, DDIM-{steps}, Poisson {rate_rps} req/s");
+    table.print();
+    std::fs::write("bench_out/e2e_serving.csv", table.to_csv())?;
+    Ok(())
+}

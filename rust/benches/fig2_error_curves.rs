@@ -1,0 +1,105 @@
+//! Fig. 2 reproduction: L1 relative-error curves of every architecture
+//! component across timesteps, with 95% CIs from the calibration
+//! samples, for all three model families under their paper solvers
+//! (DDIM-50 / DPM++(3M)-SDE-100 / RF-30).
+//!
+//! Output: ASCII plots + `bench_out/fig2_<family>.csv` with columns
+//! step, branch_type, k, mean, ci95.
+//!
+//! SMOOTHCACHE_BENCH_FAST=1 trims steps and samples.
+
+use smoothcache::cache::{calibrate, paper_protocol};
+use smoothcache::model::Engine;
+use smoothcache::util::bench::{ascii_plot, fast_mode, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    std::fs::create_dir_all("bench_out")?;
+    let mut engine = Engine::open(dir)?;
+
+    let mut ci_table = Table::new(&["family", "solver", "steps", "samples", "mean CI width (k=1)"]);
+
+    for family in ["image", "audio", "video"] {
+        engine.load_family(family)?;
+        let mut cc = paper_protocol(family);
+        if fast_mode() {
+            cc.steps = cc.steps.min(12);
+            cc.num_samples = 3;
+        } else {
+            cc.num_samples = 10; // the paper's calibration-set size
+        }
+        let t0 = std::time::Instant::now();
+        let curves = calibrate(&engine, family, &cc)?;
+        eprintln!(
+            "[fig2] calibrated {family} ({} steps x {} samples) in {:.1}s",
+            cc.steps,
+            cc.num_samples,
+            t0.elapsed().as_secs_f64()
+        );
+
+        // CSV
+        let mut csv = String::from("step,branch_type,k,mean,ci95\n");
+        for bt in curves.branch_types() {
+            for s in 0..cc.steps {
+                for k in 1..=cc.k_max {
+                    if let Some(m) = curves.mean(&bt, s, k) {
+                        let acc = &curves.grouped[&bt][s][k - 1];
+                        csv.push_str(&format!("{s},{bt},{k},{m},{}\n", acc.ci95()));
+                    }
+                }
+            }
+        }
+        std::fs::write(format!("bench_out/fig2_{family}.csv"), &csv)?;
+
+        // ASCII plot of k=1 curves per branch type
+        let series: Vec<(String, Vec<f64>)> = curves
+            .branch_types()
+            .into_iter()
+            .map(|bt| {
+                let ys: Vec<f64> = (1..cc.steps)
+                    .map(|s| curves.mean(&bt, s, 1).unwrap_or(0.0))
+                    .collect();
+                (bt, ys)
+            })
+            .collect();
+        println!(
+            "{}",
+            ascii_plot(
+                &format!(
+                    "Fig.2 [{family}] L1 relative error (k=1) across {} {} steps",
+                    cc.steps,
+                    cc.solver.name()
+                ),
+                &series,
+                12
+            )
+        );
+
+        // the §3.3 observation: CI width predicts the pareto-front width
+        for bt in curves.branch_types() {
+            ci_table.row(&[
+                family.into(),
+                cc.solver.name().into(),
+                cc.steps.to_string(),
+                cc.num_samples.to_string(),
+                format!("{:.5} ({bt})", curves.mean_ci_width(&bt)),
+            ]);
+        }
+
+        // persist curves for reuse by other benches / the server
+        std::fs::create_dir_all("bench_out/calibration")?;
+        std::fs::write(
+            format!("bench_out/calibration/{family}_{}_{}.json", cc.solver.name(), cc.steps),
+            curves.to_json().to_string(),
+        )?;
+    }
+
+    println!("Across-sample variability (paper §3.3: wider CI → narrower pareto front)");
+    ci_table.print();
+    std::fs::write("bench_out/fig2_ci_widths.csv", ci_table.to_csv())?;
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Fig. 5 reproduction: layer compute composition (MAC shares) of each
+//! candidate model, and the ">90% of compute is cacheable" observation.
+
+use smoothcache::macs::{as_gmacs, cacheable_fraction, composition, forward_macs};
+use smoothcache::model::Manifest;
+use smoothcache::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    std::fs::create_dir_all("bench_out")?;
+    let manifest = Manifest::load(&dir)?;
+
+    let mut table = Table::new(&["family", "component", "MAC share", "bar"]);
+    let mut frac_table =
+        Table::new(&["family", "forward GMACs", "cacheable fraction", "paper claim"]);
+
+    for (name, fm) in &manifest.families {
+        for (component, share) in composition(fm) {
+            let bar = "#".repeat((share * 50.0).round() as usize);
+            table.row(&[
+                name.clone(),
+                component,
+                format!("{:.1}%", share * 100.0),
+                bar,
+            ]);
+        }
+        let frac = cacheable_fraction(fm);
+        frac_table.row(&[
+            name.clone(),
+            format!("{:.4}", as_gmacs(forward_macs(fm))),
+            format!("{:.1}%", frac * 100.0),
+            if frac > 0.9 { ">=90% ok".into() } else { "BELOW 90%".to_string() },
+        ]);
+    }
+
+    println!("\nFig. 5 — layer compute composition (MACs of one forward pass)");
+    table.print();
+    println!("\nCacheable-compute fraction (paper: 'at least 90% in all candidate models')");
+    frac_table.print();
+    std::fs::write("bench_out/fig5_composition.csv", table.to_csv())?;
+    std::fs::write("bench_out/fig5_cacheable_fraction.csv", frac_table.to_csv())?;
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Figs. 1/6/7/8 reproduction: qualitative outputs per schedule.
+//!
+//! * image — PGM renders of channel-0 latents per (schedule, class)
+//!   (Fig. 6: No-Cache vs Static vs SmoothCache at two thresholds)
+//! * audio — spectrogram-style CSV of |latent| per (schedule, prompt)
+//!   (Fig. 7)
+//! * video — first/middle/last frame PGMs per schedule (Fig. 8)
+//!
+//! Everything lands under bench_out/qualitative/.
+
+use smoothcache::cache::{calibrate, paper_protocol, Schedule};
+use smoothcache::model::{Cond, Engine};
+use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::tensor::Tensor;
+use smoothcache::util::bench::fast_mode;
+
+/// 8-bit PGM render of a [H, W] slice, normalized to the slice range.
+fn write_pgm(path: &str, data: &[f32], h: usize, w: usize) -> std::io::Result<()> {
+    let lo = data.iter().cloned().fold(f32::MAX, f32::min);
+    let hi = data.iter().cloned().fold(f32::MIN, f32::max);
+    let span = (hi - lo).max(1e-9);
+    let mut out = format!("P2\n{w} {h}\n255\n");
+    for y in 0..h {
+        for x in 0..w {
+            let v = ((data[y * w + x] - lo) / span * 255.0) as u32;
+            out.push_str(&format!("{v} "));
+        }
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+fn channel0(latent: &Tensor, h: usize, w: usize, c: usize) -> Vec<f32> {
+    // latent [1, H, W, C] → channel 0 plane
+    (0..h * w).map(|i| latent.data[i * c]).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let out_dir = "bench_out/qualitative";
+    std::fs::create_dir_all(out_dir)?;
+    let mut engine = Engine::open(dir)?;
+
+    // ---------- image (Fig. 6) ----------
+    engine.load_family("image")?;
+    let fm = engine.family_manifest("image")?.clone();
+    let mut cc = paper_protocol("image");
+    if fast_mode() {
+        cc.steps = 10;
+        cc.num_samples = 2;
+    }
+    let curves = calibrate(&engine, "image", &cc)?;
+    let bts = fm.branch_types.clone();
+    let (a_lo, s_lo) = curves.alpha_for_skip_fraction(0.25, &bts);
+    let (a_hi, s_hi) = curves.alpha_for_skip_fraction(0.55, &bts);
+    let schedules: Vec<(String, Schedule)> = vec![
+        ("no-cache".into(), Schedule::no_cache(cc.steps, &bts)),
+        ("static-n2".into(), Schedule::fora(cc.steps, &bts, 2)),
+        (format!("smooth-lo-a{a_lo:.2}"), s_lo),
+        (format!("smooth-hi-a{a_hi:.2}"), s_hi),
+    ];
+    for (name, schedule) in &schedules {
+        for class in [0i32, 3, 7] {
+            let cfg = GenConfig::new("image", cc.solver, cc.steps).with_seed(42 + class as u64);
+            let out = generate(
+                &engine,
+                &cfg,
+                &Cond::Label(vec![class]),
+                &CacheMode::Grouped(schedule),
+                None,
+            )?;
+            let plane = channel0(&out.latent, 16, 16, 4);
+            write_pgm(&format!("{out_dir}/image_{name}_class{class}.pgm"), &plane, 16, 16)?;
+        }
+        eprintln!("[qualitative] image {name}: done");
+    }
+
+    // ---------- audio (Fig. 7) ----------
+    engine.load_family("audio")?;
+    let fma = engine.family_manifest("audio")?.clone();
+    let mut cca = paper_protocol("audio");
+    if fast_mode() {
+        cca.steps = 10;
+        cca.num_samples = 2;
+    }
+    let curves_a = calibrate(&engine, "audio", &cca)?;
+    let bts_a = fma.branch_types.clone();
+    let (aa1, sa1) = curves_a.alpha_for_skip_fraction(0.2, &bts_a);
+    let (aa2, sa2) = curves_a.alpha_for_skip_fraction(0.37, &bts_a);
+    let schedules_a: Vec<(String, Schedule)> = vec![
+        ("no-cache".into(), Schedule::no_cache(cca.steps, &bts_a)),
+        (format!("smooth-a{aa1:.2}"), sa1),
+        (format!("smooth-a{aa2:.2}"), sa2),
+    ];
+    let prompt = Cond::Prompt((10..10 + fma.cond_len as i32).collect());
+    for (name, schedule) in &schedules_a {
+        let cfg = GenConfig::new("audio", cca.solver, cca.steps).with_cfg(7.0).with_seed(7);
+        let out =
+            generate(&engine, &cfg, &prompt, &CacheMode::Grouped(schedule), None)?;
+        // "spectrogram": |latent| [T, C] as CSV (T rows)
+        let mut csv = String::new();
+        for t in 0..64 {
+            let row: Vec<String> =
+                (0..8).map(|c| format!("{:.4}", out.latent.data[t * 8 + c].abs())).collect();
+            csv.push_str(&row.join(","));
+            csv.push('\n');
+        }
+        std::fs::write(format!("{out_dir}/audio_{name}_spectrogram.csv"), csv)?;
+        eprintln!("[qualitative] audio {name}: done");
+    }
+
+    // ---------- video (Fig. 8) ----------
+    engine.load_family("video")?;
+    let fmv = engine.family_manifest("video")?.clone();
+    let mut ccv = paper_protocol("video");
+    if fast_mode() {
+        ccv.steps = 8;
+        ccv.num_samples = 2;
+    }
+    let curves_v = calibrate(&engine, "video", &ccv)?;
+    let bts_v = fmv.branch_types.clone();
+    let (av, sv) = curves_v.alpha_for_skip_fraction(0.2, &bts_v);
+    let schedules_v: Vec<(String, Schedule)> = vec![
+        ("no-cache".into(), Schedule::no_cache(ccv.steps, &bts_v)),
+        (format!("smooth-a{av:.2}"), sv),
+    ];
+    let vprompt = Cond::Prompt((20..20 + fmv.cond_len as i32).collect());
+    for (name, schedule) in &schedules_v {
+        let cfg = GenConfig::new("video", ccv.solver, ccv.steps).with_cfg(7.0).with_seed(21);
+        let out = generate(&engine, &cfg, &vprompt, &CacheMode::Grouped(schedule), None)?;
+        // first / middle / last frame, channel 0
+        for (tag, f) in [("first", 0usize), ("middle", 2), ("last", 3)] {
+            let frame_len = 8 * 8 * 4;
+            let start = f * frame_len;
+            let plane: Vec<f32> =
+                (0..64).map(|i| out.latent.data[start + i * 4]).collect();
+            write_pgm(&format!("{out_dir}/video_{name}_{tag}.pgm"), &plane, 8, 8)?;
+        }
+        eprintln!("[qualitative] video {name}: done");
+    }
+
+    println!("qualitative outputs written to {out_dir}/");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! §Perf microbench: engine hot-path decomposition. Measures per-entry
+//! PJRT execution latency, host-upload overhead, and the full-step /
+//! full-generation path at each batch size — the profile that drives
+//! the L3 optimization loop in EXPERIMENTS.md §Perf.
+
+use smoothcache::model::{Cond, Engine};
+use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::runtime::HostValue;
+use smoothcache::solvers::SolverKind;
+use smoothcache::tensor::Tensor;
+use smoothcache::util::bench::{bench, fast_mode, Table};
+use smoothcache::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    std::fs::create_dir_all("bench_out")?;
+    let mut engine = Engine::open(dir)?;
+    engine.load_family("image")?;
+    let fm = engine.family_manifest("image")?.clone();
+    let iters = if fast_mode() { 5 } else { 50 };
+
+    let mut table = Table::new(&["operation", "batch", "mean (us)", "p95 (us)"]);
+    let mut rng = Rng::new(1);
+
+    for &batch in &[1usize, 4, 8] {
+        engine.warmup("image", batch)?;
+        let x = Tensor::randn(vec![batch, 16, 16, 4], &mut rng);
+        let t = vec![0.5f32; batch];
+        let cond = Cond::Label(vec![1; batch]);
+        let emb = engine.embed("image", &x, &t, &cond)?;
+        let ctx = engine.make_step_ctx(&emb)?;
+        let tokens = emb.tokens.clone();
+
+        // upload overhead alone
+        let up = bench(3, iters, || {
+            let _ = engine.rt.upload(&HostValue::F32(tokens.clone())).unwrap();
+        });
+        table.row(&[
+            "host→device upload (tokens)".into(),
+            batch.to_string(),
+            format!("{:.0}", up.mean_s * 1e6),
+            format!("{:.0}", up.p95_s * 1e6),
+        ]);
+
+        // per-entry executions
+        let e = bench(3, iters, || {
+            let _ = engine.embed("image", &x, &t, &cond).unwrap();
+        });
+        table.row(&[
+            "embed".into(),
+            batch.to_string(),
+            format!("{:.0}", e.mean_s * 1e6),
+            format!("{:.0}", e.p95_s * 1e6),
+        ]);
+        for br in &fm.branch_types {
+            let s = bench(3, iters, || {
+                let _ = engine.branch("image", 0, br, &tokens, &ctx).unwrap();
+            });
+            table.row(&[
+                format!("branch.{br}"),
+                batch.to_string(),
+                format!("{:.0}", s.mean_s * 1e6),
+                format!("{:.0}", s.p95_s * 1e6),
+            ]);
+        }
+        let f = bench(3, iters, || {
+            let _ = engine.final_head("image", &tokens, &ctx).unwrap();
+        });
+        table.row(&[
+            "final".into(),
+            batch.to_string(),
+            format!("{:.0}", f.mean_s * 1e6),
+            format!("{:.0}", f.p95_s * 1e6),
+        ]);
+
+        // whole forward (one diffusion step equivalent)
+        let fw = bench(1, iters / 2 + 1, || {
+            let _ = engine.forward("image", &x, &t, &cond, None).unwrap();
+        });
+        table.row(&[
+            "full forward (1 step)".into(),
+            batch.to_string(),
+            format!("{:.0}", fw.mean_s * 1e6),
+            format!("{:.0}", fw.p95_s * 1e6),
+        ]);
+    }
+
+    // end-to-end generation micro
+    for &(steps, skip) in &[(10usize, false), (10, true)] {
+        let cond = Cond::Label(vec![1, 2, 3, 4]);
+        let bts = fm.branch_types.clone();
+        let schedule = smoothcache::cache::Schedule::fora(steps, &bts, 2);
+        let mode = if skip { CacheMode::Grouped(&schedule) } else { CacheMode::None };
+        let g = bench(1, (iters / 10).max(2), || {
+            let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(3);
+            let _ = generate(&engine, &cfg, &cond, &mode, None).unwrap();
+        });
+        table.row(&[
+            format!("generate {steps}-step b4 {}", if skip { "fora:2" } else { "no-cache" }),
+            "4".into(),
+            format!("{:.0}", g.mean_s * 1e6),
+            format!("{:.0}", g.p95_s * 1e6),
+        ]);
+    }
+
+    let stats = engine.rt.stats();
+    println!("\n§Perf — engine hot-path decomposition (image family)");
+    table.print();
+    println!(
+        "\ncumulative runtime stats: {} executions ({:.3}s exec, {:.3}s upload over {} uploads, {} compiles {:.2}s)",
+        stats.executions, stats.exec_seconds, stats.upload_seconds, stats.uploads,
+        stats.compiles, stats.compile_seconds
+    );
+    std::fs::write("bench_out/perf_engine.csv", table.to_csv())?;
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! Table 1 reproduction: DiT image family under DDIM at 30/50/70 steps.
+//! Rows: No-Cache, FORA(n=2,3), L2C-proxy (alternate), SmoothCache at
+//! alphas matched to FORA's compute (plus a low-alpha point), sorted by
+//! GMACs like the paper (which reports TMACs at DiT-XL scale).
+//!
+//! Quality: FFD (FID substitute), sFFD (second feature seed, sFID
+//! substitute), IS-proxy — all against the blob-corpus reference set
+//! (DESIGN.md section 3). Mean ± std over trials.
+//!
+//! SMOOTHCACHE_BENCH_FAST=1 trims steps/samples/trials.
+
+use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
+use smoothcache::experiments::{eval_conds, fmt_pm, generate_set, image_corpus, mean_std, EvalConfig};
+use smoothcache::macs::{as_gmacs, generation_macs};
+use smoothcache::model::Engine;
+use smoothcache::pipeline::CacheMode;
+use smoothcache::quality::{ffd, is_proxy, lpips_proxy, psnr, FeatureExtractor};
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::bench::{fast_mode, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    std::fs::create_dir_all("bench_out")?;
+    let mut engine = Engine::open(dir)?;
+    engine.load_family("image")?;
+    let fm = engine.family_manifest("image")?.clone();
+    let bts = fm.branch_types.clone();
+
+    let (steps_list, n_samples, trials, calib_samples) = if fast_mode() {
+        (vec![10], 16, 1, 2)
+    } else {
+        (vec![50, 30], 24, 2, 10)
+    };
+
+    let fx = FeatureExtractor::new(0xF1D, 12);
+    let fx_s = FeatureExtractor::new(0x5F1D, 12); // sFID-analog seed
+    let (corpus, _labels) = image_corpus(128, 0xC0FFEE);
+
+    let mut table = Table::new(&[
+        "Schedule", "Steps", "FFD (dn)", "sFFD (dn)", "IS-proxy (up)", "LPIPS-drift (dn)",
+        "PSNR-drift (up)", "GMACs", "Latency (s)", "skip%",
+    ]);
+
+    for &steps in &steps_list {
+        eprintln!("[table1] calibrating ddim-{steps} ...");
+        let cc = CalibrationConfig {
+            num_samples: calib_samples,
+            ..CalibrationConfig::new(SolverKind::Ddim, steps)
+        };
+        let curves = calibrate(&engine, "image", &cc)?;
+
+        // warm up batch-4 executables so the first roster row's latency
+        // column is not polluted by one-time PJRT compiles
+        {
+            let mut ec = EvalConfig::new("image", SolverKind::Ddim, 2);
+            ec.n_samples = 4;
+            ec.cfg_scale = 1.5;
+            let conds = eval_conds(&fm, 4, 1);
+            let _ = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+        }
+
+        // schedule roster for this step count
+        let mut roster: Vec<(String, Schedule)> = vec![
+            ("No Cache".into(), Schedule::no_cache(steps, &bts)),
+            ("FORA (n=2)".into(), Schedule::fora(steps, &bts, 2)),
+            ("FORA (n=3)".into(), Schedule::fora(steps, &bts, 3)),
+            ("L2C-proxy".into(), Schedule::alternate(steps, &bts)),
+        ];
+        // Ours at compute matched to FORA n=2 / n=3, plus a conservative point
+        for target in [0.5, 2.0 / 3.0] {
+            let (alpha, s) = curves.alpha_for_skip_fraction(target, &bts);
+            roster.push((format!("Ours (a={alpha:.3})"), s));
+        }
+        {
+            let (alpha, s) = curves.alpha_for_skip_fraction(0.2, &bts);
+            roster.push((format!("Ours (a={alpha:.3})"), s));
+        }
+
+        // per-trial paired no-cache reference sets (for the drift columns:
+        // LPIPS/PSNR vs the non-cached generations, the paper's Table-2
+        // protocol applied to Table 1 as the discriminating signal)
+        let mut refs: Vec<(EvalConfig, Vec<smoothcache::model::Cond>, smoothcache::tensor::Tensor, smoothcache::experiments::EvalStats)> = Vec::new();
+        for trial in 0..trials {
+            let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps);
+            ec.n_samples = n_samples;
+            ec.cfg_scale = 1.5;
+            ec.base_seed = 9000 + trial as u64 * 1000;
+            let conds = eval_conds(&fm, ec.n_samples, 777 + trial as u64);
+            let (set, stats) = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+            refs.push((ec, conds, set, stats));
+        }
+
+        let mut rows: Vec<(f64, Vec<String>)> = Vec::new();
+        for (name, schedule) in &roster {
+            schedule.validate().unwrap();
+            let gmacs = as_gmacs(generation_macs(&fm, schedule, true)); // CFG doubles
+            let mut ffds = Vec::new();
+            let mut sffds = Vec::new();
+            let mut iss = Vec::new();
+            let mut lats = Vec::new();
+            let mut drifts = Vec::new();
+            let mut psnrs = Vec::new();
+            for (ec, conds, ref_set, ref_stats) in &refs {
+                let (set, stats) = if schedule.skip_fraction() == 0.0 {
+                    (ref_set.clone(), ref_stats.clone())
+                } else {
+                    generate_set(&engine, ec, conds, &CacheMode::Grouped(schedule))?
+                };
+                ffds.push(ffd(&fx, &corpus, &set));
+                sffds.push(ffd(&fx_s, &corpus, &set));
+                iss.push(is_proxy(&fx, &set, 10));
+                lats.push(stats.per_sample_seconds);
+                if schedule.skip_fraction() > 0.0 {
+                    drifts.push(lpips_proxy(&fx, ref_set, &set));
+                    psnrs.push(psnr(ref_set, &set));
+                }
+            }
+            let (fm_, fs_) = mean_std(&ffds);
+            let (sm, ss) = mean_std(&sffds);
+            let (im, is_) = mean_std(&iss);
+            let (lm, _) = mean_std(&lats);
+            let drift_cell = if drifts.is_empty() {
+                "-".to_string()
+            } else {
+                let (m, s) = mean_std(&drifts);
+                fmt_pm(m, s, 4)
+            };
+            let psnr_cell = if psnrs.is_empty() {
+                "-".to_string()
+            } else {
+                let (m, s) = mean_std(&psnrs);
+                fmt_pm(m, s, 1)
+            };
+            rows.push((
+                gmacs,
+                vec![
+                    name.clone(),
+                    steps.to_string(),
+                    fmt_pm(fm_, fs_, 3),
+                    fmt_pm(sm, ss, 3),
+                    fmt_pm(im, is_, 2),
+                    drift_cell,
+                    psnr_cell,
+                    format!("{gmacs:.2}"),
+                    format!("{lm:.3}"),
+                    format!("{:.0}%", schedule.skip_fraction() * 100.0),
+                ],
+            ));
+            eprintln!("[table1] ddim-{steps} {name}: done");
+        }
+        // paper sorts by TMACs descending within a step group
+        rows.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for (_, row) in rows {
+            table.row(&row);
+        }
+    }
+
+    println!("\nTable 1 — DiT image family, DDIM (paper: DiT-XL-256x256; ours: blob-DiT proxy)");
+    table.print();
+    std::fs::write("bench_out/table1_image.csv", table.to_csv())?;
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Table 2 reproduction: video family (OpenSora STDiT proxy) under
+//! Rectified Flow at 30 steps with CFG 7.0. Rows: No-Cache plus two
+//! SmoothCache points matching the paper's MAC reductions (~14% and
+//! ~18%). LPIPS / PSNR / SSIM are computed against the no-cache
+//! generations (the paper's protocol); VBench is the composite proxy
+//! from DESIGN.md section 3.
+
+use smoothcache::cache::{calibrate, CalibrationConfig};
+use smoothcache::experiments::{
+    eval_conds, fmt_pm, generate_set, mean_std, vbench_proxy, EvalConfig,
+};
+use smoothcache::macs::{as_gmacs, generation_macs};
+use smoothcache::model::Engine;
+use smoothcache::pipeline::CacheMode;
+use smoothcache::quality::{lpips_proxy, psnr, ssim, FeatureExtractor};
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::bench::{fast_mode, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    std::fs::create_dir_all("bench_out")?;
+    let mut engine = Engine::open(dir)?;
+    engine.load_family("video")?;
+    let fm = engine.family_manifest("video")?.clone();
+    let bts = fm.branch_types.clone();
+
+    let (steps, n_samples, trials, calib_samples) =
+        if fast_mode() { (8, 8, 1, 2) } else { (30, 16, 1, 10) };
+    let solver = SolverKind::RectifiedFlow;
+    let cfg_scale = 7.0f32;
+
+    eprintln!("[table2] calibrating rf-{steps} (conditional, cfg=7) ...");
+    let cc = CalibrationConfig {
+        k_max: 5,
+        cfg_scale,
+        num_samples: calib_samples,
+        ..CalibrationConfig::new(solver, steps)
+    };
+    let curves = calibrate(&engine, "video", &cc)?;
+
+    // two alpha points matched to the paper's MAC reductions (Table 2:
+    // 1612→1388 ≈ 14% and 1612→1321 ≈ 18%)
+    let (a1, s1) = curves.alpha_for_skip_fraction(0.15, &bts);
+    let (a2, s2) = curves.alpha_for_skip_fraction(0.22, &bts);
+
+    let fx = FeatureExtractor::new(0x71D0, 12);
+    let mut table = Table::new(&[
+        "Schedule", "VBench-proxy (up)", "LPIPS (dn)", "PSNR (up)", "SSIM (up)", "GMACs",
+        "Latency (s)", "skip%",
+    ]);
+
+    // reference (no-cache) sets per trial
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let roster = [
+        ("No Cache".to_string(), None),
+        (format!("Ours (a={a1:.3})"), Some(&s1)),
+        (format!("Ours (a={a2:.3})"), Some(&s2)),
+    ];
+
+    // warmup compile (batch 4 + cfg doubling → batch 8 executables)
+    {
+        let mut ec = EvalConfig::new("video", solver, 2);
+        ec.n_samples = 4;
+        ec.cfg_scale = cfg_scale;
+        let conds = eval_conds(&fm, 4, 1);
+        let _ = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+    }
+
+    // per-trial reference sets (paired with identical seeds/conds)
+    let mut refs = Vec::new();
+    for trial in 0..trials {
+        let mut ec = EvalConfig::new("video", solver, steps);
+        ec.n_samples = n_samples;
+        ec.cfg_scale = cfg_scale;
+        ec.base_seed = 4000 + trial as u64 * 500;
+        let conds = eval_conds(&fm, n_samples, 555 + trial as u64);
+        let (set, stats) = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+        refs.push((ec, conds, set, stats));
+    }
+
+    for (name, sched) in &roster {
+        if let Some(s) = sched {
+            s.validate().unwrap();
+        }
+        let schedule_or_nocache = match sched {
+            Some(s) => (*s).clone(),
+            None => smoothcache::cache::Schedule::no_cache(steps, &bts),
+        };
+        let gmacs = as_gmacs(generation_macs(&fm, &schedule_or_nocache, true));
+        let (mut vb, mut lp, mut ps, mut ss_, mut lat) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for (ec, conds, ref_set, ref_stats) in &refs {
+            let (set, stats) = match sched {
+                None => (ref_set.clone(), ref_stats.clone()),
+                Some(s) => generate_set(&engine, ec, conds, &CacheMode::Grouped(s))?,
+            };
+            vb.push(vbench_proxy(&fx, ref_set, &set));
+            if sched.is_some() {
+                lp.push(lpips_proxy(&fx, ref_set, &set));
+                ps.push(psnr(ref_set, &set));
+                ss_.push(ssim(ref_set, &set));
+            }
+            lat.push(stats.per_sample_seconds);
+        }
+        let (vm, vs) = mean_std(&vb);
+        let (lm, _) = mean_std(&lat);
+        let lpips_cell = if lp.is_empty() {
+            "-".to_string()
+        } else {
+            let (m, s) = mean_std(&lp);
+            fmt_pm(m, s, 4)
+        };
+        let psnr_cell = if ps.is_empty() {
+            "-".to_string()
+        } else {
+            let (m, s) = mean_std(&ps);
+            fmt_pm(m, s, 2)
+        };
+        let ssim_cell = if ss_.is_empty() {
+            "-".to_string()
+        } else {
+            let (m, s) = mean_std(&ss_);
+            fmt_pm(m, s, 4)
+        };
+        rows.push(vec![
+            name.clone(),
+            fmt_pm(vm, vs, 2),
+            lpips_cell,
+            psnr_cell,
+            ssim_cell,
+            format!("{gmacs:.2}"),
+            format!("{lm:.3}"),
+            format!("{:.0}%", schedule_or_nocache.skip_fraction() * 100.0),
+        ]);
+        eprintln!("[table2] {name}: done");
+    }
+
+    for r in rows {
+        table.row(&r);
+    }
+    println!("\nTable 2 — video family, Rectified Flow {steps} steps, CFG 7.0 (paper: OpenSora v1.2)");
+    table.print();
+    std::fs::write("bench_out/table2_video.csv", table.to_csv())?;
+    Ok(())
+}

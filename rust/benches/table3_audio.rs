@@ -1,0 +1,126 @@
+//! Table 3 reproduction: audio family (Stable Audio Open proxy) under
+//! DPM-Solver++(3M) SDE at 100 steps, CFG 7.0, across three prompt
+//! suites standing in for AudioCaps / MusicCaps / Song Describer.
+//! Metrics per suite: FD-proxy (vs the harmonic reference corpus),
+//! KL-proxy and CLAP-proxy (vs paired no-cache generations) — DESIGN.md
+//! section 3 documents each substitution.
+
+use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
+use smoothcache::experiments::{
+    audio_corpus, eval_conds, fmt_pm, generate_set, mean_std, EvalConfig,
+};
+use smoothcache::macs::{as_gmacs, generation_macs};
+use smoothcache::model::Engine;
+use smoothcache::pipeline::CacheMode;
+use smoothcache::quality::{clap_proxy, ffd, kl_proxy, FeatureExtractor};
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::bench::{fast_mode, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    std::fs::create_dir_all("bench_out")?;
+    let mut engine = Engine::open(dir)?;
+    engine.load_family("audio")?;
+    let fm = engine.family_manifest("audio")?.clone();
+    let bts = fm.branch_types.clone();
+
+    let (steps, n_samples, calib_samples) = if fast_mode() { (10, 8, 2) } else { (100, 12, 10) };
+    let solver = SolverKind::DpmPP3M { sde: true };
+    let cfg_scale = 7.0f32;
+
+    eprintln!("[table3] calibrating dpmpp3m-sde-{steps} ...");
+    let cc = CalibrationConfig {
+        cfg_scale,
+        num_samples: calib_samples,
+        ..CalibrationConfig::new(solver, steps)
+    };
+    let curves = calibrate(&engine, "audio", &cc)?;
+
+    // paper Table 3 MAC reductions: 209.8→170.8 ≈ 19%, 209.8→136.2 ≈ 35%
+    let (a1, s1) = curves.alpha_for_skip_fraction(0.20, &bts);
+    let (a2, s2) = curves.alpha_for_skip_fraction(0.37, &bts);
+
+    let fx = FeatureExtractor::new(0xA0D10, 12);
+    let corpus = audio_corpus(128, 0xFEED);
+    let suites: [(&str, u64); 3] =
+        [("AudioCaps-proxy", 101), ("MusicCaps-proxy", 202), ("SongDescriber-proxy", 303)];
+
+    // warmup (batch 4 × CFG → batch 8 executables)
+    {
+        let mut ec = EvalConfig::new("audio", solver, 2);
+        ec.n_samples = 4;
+        ec.cfg_scale = cfg_scale;
+        let conds = eval_conds(&fm, 4, 1);
+        let _ = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+    }
+
+    let mut header = vec!["Schedule".to_string()];
+    for (suite, _) in &suites {
+        header.push(format!("{suite} FD (dn)"));
+        header.push(format!("{suite} KL (dn)"));
+        header.push(format!("{suite} CLAP (up)"));
+    }
+    header.push("GMACs".into());
+    header.push("Latency (s)".into());
+    header.push("skip%".into());
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+
+    let roster: Vec<(String, Schedule)> = vec![
+        ("No Cache".into(), Schedule::no_cache(steps, &bts)),
+        (format!("Ours (a={a1:.3})"), s1),
+        (format!("Ours (a={a2:.3})"), s2),
+    ];
+
+    // reference (no-cache) sets per suite, paired seeds
+    let mut refs = Vec::new();
+    for (suite, seed) in &suites {
+        let mut ec = EvalConfig::new("audio", solver, steps);
+        ec.n_samples = n_samples;
+        ec.cfg_scale = cfg_scale;
+        ec.base_seed = 7000 + seed;
+        let conds = eval_conds(&fm, n_samples, *seed);
+        let (set, stats) = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+        eprintln!("[table3] reference set {suite}: done");
+        refs.push((ec, conds, set, stats));
+    }
+
+    for (name, schedule) in &roster {
+        schedule.validate().unwrap();
+        let gmacs = as_gmacs(generation_macs(&fm, schedule, true));
+        let mut row = vec![name.clone()];
+        let mut lats = Vec::new();
+        for (ec, conds, ref_set, ref_stats) in &refs {
+            let (set, stats) = if schedule.skip_fraction() == 0.0 {
+                (ref_set.clone(), ref_stats.clone())
+            } else {
+                generate_set(&engine, ec, conds, &CacheMode::Grouped(schedule))?
+            };
+            let fd = ffd(&fx, &corpus, &set);
+            let kl = kl_proxy(&fx, ref_set, &set, 10);
+            let clap = clap_proxy(&fx, ref_set, &set);
+            row.push(fmt_pm(fd, 0.0, 3));
+            row.push(fmt_pm(kl, 0.0, 6));
+            row.push(fmt_pm(clap, 0.0, 6));
+            lats.push(stats.per_sample_seconds);
+        }
+        let (lm, _) = mean_std(&lats);
+        row.push(format!("{gmacs:.2}"));
+        row.push(format!("{lm:.3}"));
+        row.push(format!("{:.0}%", schedule.skip_fraction() * 100.0));
+        table.row(&row);
+        eprintln!("[table3] {name}: done");
+    }
+
+    println!(
+        "\nTable 3 — audio family, DPM-Solver++(3M) SDE {steps} steps, CFG 7.0 \
+         (paper: Stable Audio Open)"
+    );
+    table.print();
+    std::fs::write("bench_out/table3_audio.csv", table.to_csv())?;
+    Ok(())
+}

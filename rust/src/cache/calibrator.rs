@@ -1,0 +1,128 @@
+//! The calibration pass (paper §2.2): run a handful of no-cache
+//! trajectories, record every branch output, and accumulate the
+//! cross-timestep L1 relative error curves the schedule generator
+//! consumes. One pass per (family, solver, steps) configuration — the
+//! paper's "single calibration inference pass".
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::curves::ErrorCurves;
+use crate::model::{Cond, Engine};
+use crate::pipeline::{generate, CacheMode, GenConfig};
+use crate::solvers::SolverKind;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CalibrationConfig {
+    pub solver: SolverKind,
+    pub steps: usize,
+    /// maximum reuse gap considered (paper: 3 for DiT/StableAudio, 5 for
+    /// OpenSora).
+    pub k_max: usize,
+    /// number of calibration samples (paper: 10 for all models).
+    pub num_samples: usize,
+    /// CFG scale during calibration (1.0 = unconditional, the DiT
+    /// protocol; >1 = conditional, the OpenSora/StableAudio protocol).
+    pub cfg_scale: f32,
+    pub seed: u64,
+}
+
+impl CalibrationConfig {
+    pub fn new(solver: SolverKind, steps: usize) -> CalibrationConfig {
+        CalibrationConfig { solver, steps, k_max: 3, num_samples: 10, cfg_scale: 1.0, seed: 7 }
+    }
+}
+
+/// Default per-family calibration protocols, mirroring the paper's
+/// experiment setup (§3.1): DiT-XL → DDIM-50 uncond k≤3; Stable Audio →
+/// DPM++(3M)-SDE-100 cond k≤3; OpenSora → RF-30 cond k≤5.
+pub fn paper_protocol(family: &str) -> CalibrationConfig {
+    match family {
+        "image" => CalibrationConfig::new(SolverKind::Ddim, 50),
+        "audio" => CalibrationConfig {
+            cfg_scale: 7.0,
+            ..CalibrationConfig::new(SolverKind::DpmPP3M { sde: true }, 100)
+        },
+        "video" => CalibrationConfig {
+            k_max: 5,
+            cfg_scale: 7.0,
+            ..CalibrationConfig::new(SolverKind::RectifiedFlow, 30)
+        },
+        other => panic!("unknown family {other}"),
+    }
+}
+
+/// Sample a random conditioning input for calibration (labels for the
+/// image family, prompt token ids otherwise). batch = 1.
+pub fn sample_cond(
+    rng: &mut Rng,
+    num_classes: usize,
+    vocab: usize,
+    cond_len: usize,
+    unconditional: bool,
+) -> Cond {
+    if num_classes > 0 {
+        if unconditional {
+            Cond::Label(vec![num_classes as i32])
+        } else {
+            Cond::Label(vec![rng.below(num_classes) as i32])
+        }
+    } else if unconditional {
+        Cond::Prompt(vec![0; cond_len])
+    } else {
+        Cond::Prompt((0..cond_len).map(|_| rng.range(1, vocab) as i32).collect())
+    }
+}
+
+/// Run the calibration pass and return the accumulated error curves.
+pub fn calibrate(
+    engine: &Engine,
+    family: &str,
+    cc: &CalibrationConfig,
+) -> Result<ErrorCurves> {
+    let fm = engine.family_manifest(family)?.clone();
+    let mut curves = ErrorCurves::new(
+        family,
+        cc.solver.name(),
+        cc.steps,
+        cc.k_max,
+        &fm.branch_types,
+        fm.depth,
+    );
+    let mut rng = Rng::new(cc.seed);
+
+    for sample in 0..cc.num_samples {
+        // DiT protocol: calibrate unconditionally (null label) when CFG is
+        // off; otherwise condition on random prompts/labels (OpenSora /
+        // Stable Audio protocol).
+        let uncond = cc.cfg_scale <= 1.0;
+        let cond = sample_cond(&mut rng, fm.num_classes, fm.vocab, fm.cond_len, uncond);
+        let gen_cfg = GenConfig::new(family, cc.solver, cc.steps)
+            .with_cfg(cc.cfg_scale)
+            .with_seed(cc.seed ^ (sample as u64).wrapping_mul(0x9E3779B97F4A7C15));
+
+        // Rolling per-site window of the last k_max deltas.
+        let mut window: HashMap<(usize, String), Vec<(usize, Tensor)>> = HashMap::new();
+        {
+            let mut observer = |step: usize, block: usize, br: &str, delta: &Tensor| {
+                let key = (block, br.to_string());
+                let entry = window.entry(key).or_default();
+                for (past_step, past) in entry.iter() {
+                    let k = step - past_step;
+                    if k >= 1 && k <= cc.k_max {
+                        curves.record(br, block, step, k, delta.rel_l1_error(past));
+                    }
+                }
+                entry.push((step, delta.clone()));
+                let keep_from = step.saturating_sub(cc.k_max);
+                entry.retain(|(s, _)| *s >= keep_from);
+            };
+            generate(engine, &gen_cfg, &cond, &CacheMode::None, Some(&mut observer))?;
+        }
+        curves.num_samples += 1;
+    }
+    Ok(curves)
+}

@@ -1,0 +1,445 @@
+//! Layer-representation error curves (paper Fig. 2) and the SmoothCache
+//! schedule generator (paper Eq. 4).
+//!
+//! For layer type `i` at solver step index `s` (steps run in execution
+//! order; larger index = later = smaller diffusion t) and gap `k`, the
+//! curve stores the L1 relative error between the branch outputs at step
+//! `s` and step `s−k`:
+//!
+//!   E_i(s, k) = mean_{j, samples} ‖L_{i_j,s} − L_{i_j,s−k}‖₁ / ‖L_{i_j,s}‖₁
+//!
+//! averaged over block depth `j` (the paper's grouping) with the
+//! across-sample spread kept for the 95% CI of Fig. 2. Per-site curves
+//! (no depth averaging) are kept too for the grouping ablation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::schedule::{Decision, Schedule};
+use crate::util::json::{parse, Json};
+
+/// Streaming mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Acc {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+}
+
+impl Acc {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Half-width of the 95% CI of the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            1.96 * self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Error curves for one (family, solver, steps) calibration run.
+#[derive(Clone, Debug)]
+pub struct ErrorCurves {
+    pub family: String,
+    pub solver: String,
+    pub steps: usize,
+    pub k_max: usize,
+    pub num_samples: usize,
+    /// grouped over depth: branch type → `[steps][k_max]` accumulators;
+    /// entry `[s][k-1]` is E(s, k), defined for s ≥ k (else n == 0).
+    pub grouped: BTreeMap<String, Vec<Vec<Acc>>>,
+    /// per-site: "block.branch" → same layout (grouping ablation).
+    pub per_site: BTreeMap<String, Vec<Vec<Acc>>>,
+}
+
+impl ErrorCurves {
+    pub fn new(
+        family: &str,
+        solver: &str,
+        steps: usize,
+        k_max: usize,
+        branch_types: &[String],
+        depth: usize,
+    ) -> ErrorCurves {
+        let blank = vec![vec![Acc::default(); k_max]; steps];
+        let mut grouped = BTreeMap::new();
+        let mut per_site = BTreeMap::new();
+        for bt in branch_types {
+            grouped.insert(bt.clone(), blank.clone());
+            for b in 0..depth {
+                per_site.insert(format!("{b}.{bt}"), blank.clone());
+            }
+        }
+        ErrorCurves {
+            family: family.into(),
+            solver: solver.into(),
+            steps,
+            k_max,
+            num_samples: 0,
+            grouped,
+            per_site,
+        }
+    }
+
+    /// Record one observed pairwise error for (branch type, block, step, gap).
+    pub fn record(&mut self, branch_type: &str, block: usize, step: usize, k: usize, err: f64) {
+        debug_assert!(k >= 1 && k <= self.k_max && step >= k);
+        self.grouped.get_mut(branch_type).expect("branch type")[step][k - 1].push(err);
+        self.per_site.get_mut(&format!("{block}.{branch_type}")).expect("site")[step][k - 1]
+            .push(err);
+    }
+
+    /// Mean error for (branch type, step, gap k).
+    pub fn mean(&self, branch_type: &str, step: usize, k: usize) -> Option<f64> {
+        let acc = &self.grouped.get(branch_type)?[step][k - 1];
+        if acc.n == 0 {
+            None
+        } else {
+            Some(acc.mean)
+        }
+    }
+
+    pub fn site_mean(&self, site: &str, step: usize, k: usize) -> Option<f64> {
+        let acc = &self.per_site.get(site)?[step][k - 1];
+        if acc.n == 0 {
+            None
+        } else {
+            Some(acc.mean)
+        }
+    }
+
+    pub fn branch_types(&self) -> Vec<String> {
+        self.grouped.keys().cloned().collect()
+    }
+
+    /// Mean across-sample CI width for a branch type at k=1 (the paper's
+    /// observed predictor of the pareto-front width, §3.3 / §4).
+    pub fn mean_ci_width(&self, branch_type: &str) -> f64 {
+        let rows = &self.grouped[branch_type];
+        let mut tot = 0.0;
+        let mut n = 0;
+        for (s, row) in rows.iter().enumerate() {
+            if s >= 1 && row[0].n > 0 {
+                tot += row[0].ci95();
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            tot / n as f64
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // SmoothCache schedule generation (paper Eq. 4)
+    // -----------------------------------------------------------------------
+
+    /// Greedy thresholding: at step s, branch type i is reused from the
+    /// last computed step f iff the calibrated error E_i(s, s−f) < alpha
+    /// and the gap stays ≤ k_max. Decisions are grouped across depth.
+    pub fn smoothcache_schedule(&self, alpha: f64, branch_types_order: &[String]) -> Schedule {
+        let mut decisions = vec![vec![Decision::Compute; branch_types_order.len()]; self.steps];
+        for (bt_idx, bt) in branch_types_order.iter().enumerate() {
+            let mut last_fill = 0usize;
+            for s in 1..self.steps {
+                let gap = s - last_fill;
+                let reuse = gap <= self.k_max
+                    && self
+                        .mean(bt, s, gap)
+                        .map(|e| e < alpha)
+                        .unwrap_or(false);
+                if reuse {
+                    decisions[s][bt_idx] = Decision::Reuse { filled_at: last_fill };
+                } else {
+                    decisions[s][bt_idx] = Decision::Compute;
+                    last_fill = s;
+                }
+            }
+        }
+        let s = Schedule {
+            name: format!("smoothcache-a{alpha}"),
+            steps: self.steps,
+            branch_types: branch_types_order.to_vec(),
+            decisions,
+        };
+        debug_assert!(s.validate().is_ok());
+        s
+    }
+
+    /// Grouping ablation: independent per-(block, branch) decisions from
+    /// the per-site curves. Returns per-site decision map keyed
+    /// "block.branch" (the pipeline's per-site mode consumes this).
+    pub fn per_site_schedule(&self, alpha: f64) -> BTreeMap<String, Vec<Decision>> {
+        let mut out = BTreeMap::new();
+        for (site, rows) in &self.per_site {
+            let mut ds = vec![Decision::Compute; self.steps];
+            let mut last_fill = 0usize;
+            for s in 1..self.steps {
+                let gap = s - last_fill;
+                let reuse = gap <= self.k_max
+                    && rows[s][gap - 1].n > 0
+                    && rows[s][gap - 1].mean < alpha;
+                if reuse {
+                    ds[s] = Decision::Reuse { filled_at: last_fill };
+                } else {
+                    last_fill = s;
+                }
+            }
+            out.insert(site.clone(), ds);
+        }
+        out
+    }
+
+    /// Find the alpha whose schedule skip-fraction is closest to the
+    /// target (the paper's "matched TMACs" comparison rows).
+    pub fn alpha_for_skip_fraction(
+        &self,
+        target: f64,
+        branch_types_order: &[String],
+    ) -> (f64, Schedule) {
+        let mut lo = 0.0f64;
+        let mut hi = 4.0f64;
+        // skip fraction is monotone non-decreasing in alpha → bisection
+        for _ in 0..48 {
+            let mid = 0.5 * (lo + hi);
+            let s = self.smoothcache_schedule(mid, branch_types_order);
+            if s.skip_fraction() < target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let s = self.smoothcache_schedule(hi, branch_types_order);
+        (hi, s)
+    }
+
+    // ---- JSON persistence ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let ser_curves = |m: &BTreeMap<String, Vec<Vec<Acc>>>| {
+            Json::Obj(
+                m.iter()
+                    .map(|(k, rows)| {
+                        let rj: Vec<Json> = rows
+                            .iter()
+                            .map(|row| {
+                                Json::Arr(
+                                    row.iter()
+                                        .map(|a| {
+                                            Json::Arr(vec![
+                                                Json::Num(a.n as f64),
+                                                Json::Num(a.mean),
+                                                Json::Num(a.std()),
+                                            ])
+                                        })
+                                        .collect(),
+                                )
+                            })
+                            .collect();
+                        (k.clone(), Json::Arr(rj))
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj()
+            .set("family", self.family.as_str())
+            .set("solver", self.solver.as_str())
+            .set("steps", self.steps)
+            .set("k_max", self.k_max)
+            .set("num_samples", self.num_samples)
+            .set("grouped", ser_curves(&self.grouped))
+            .set("per_site", ser_curves(&self.per_site))
+    }
+
+    pub fn parse_str(text: &str) -> Result<ErrorCurves> {
+        let j = parse(text).map_err(|e| anyhow!("curves json: {e}"))?;
+        let de_curves = |v: &Json| -> Result<BTreeMap<String, Vec<Vec<Acc>>>> {
+            let mut m = BTreeMap::new();
+            for (k, rows) in v.as_obj().ok_or_else(|| anyhow!("curves obj"))? {
+                let mut out_rows = Vec::new();
+                for row in rows.as_arr().ok_or_else(|| anyhow!("rows"))? {
+                    let mut accs = Vec::new();
+                    for a in row.as_arr().ok_or_else(|| anyhow!("row"))? {
+                        let triple = a.as_f64_vec().ok_or_else(|| anyhow!("acc"))?;
+                        let n = triple[0] as u64;
+                        let mean = triple[1];
+                        let std = triple[2];
+                        // reconstruct m2 from std (lossy but sufficient)
+                        let m2 = if n >= 2 { std * std * (n - 1) as f64 } else { 0.0 };
+                        accs.push(Acc { n, mean, m2 });
+                    }
+                    out_rows.push(accs);
+                }
+                m.insert(k.clone(), out_rows);
+            }
+            Ok(m)
+        };
+        Ok(ErrorCurves {
+            family: j.req("family")?.as_str().unwrap_or("").into(),
+            solver: j.req("solver")?.as_str().unwrap_or("").into(),
+            steps: j.req("steps")?.as_usize().ok_or_else(|| anyhow!("steps"))?,
+            k_max: j.req("k_max")?.as_usize().ok_or_else(|| anyhow!("k_max"))?,
+            num_samples: j.req("num_samples")?.as_usize().unwrap_or(0),
+            grouped: de_curves(j.req("grouped")?)?,
+            per_site: de_curves(j.req("per_site")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bts() -> Vec<String> {
+        vec!["attn".into(), "ffn".into()]
+    }
+
+    /// Synthetic curves: attn error grows with step, ffn error constant.
+    fn synthetic() -> ErrorCurves {
+        let mut c = ErrorCurves::new("test", "ddim", 10, 3, &bts(), 2);
+        for s in 1..10 {
+            for k in 1..=3.min(s) {
+                for b in 0..2 {
+                    c.record("attn", b, s, k, 0.02 * s as f64 * k as f64);
+                    c.record("ffn", b, s, k, 0.05 * k as f64);
+                }
+            }
+        }
+        c.num_samples = 1;
+        c
+    }
+
+    #[test]
+    fn welford_acc_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut a = Acc::default();
+        for &x in &xs {
+            a.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 4.0;
+        assert!((a.mean - mean).abs() < 1e-12);
+        assert!((a.var() - var).abs() < 1e-12);
+        assert!(a.ci95() > 0.0);
+    }
+
+    #[test]
+    fn record_and_query() {
+        let c = synthetic();
+        assert!((c.mean("attn", 5, 1).unwrap() - 0.1).abs() < 1e-12);
+        assert!((c.mean("ffn", 5, 2).unwrap() - 0.1).abs() < 1e-12);
+        assert!(c.mean("attn", 0, 1).is_none()); // step 0 has no past
+        assert!((c.site_mean("0.attn", 5, 1).unwrap() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_threshold_behaviour() {
+        let c = synthetic();
+        // alpha below all errors → everything computes
+        let s0 = c.smoothcache_schedule(0.0, &bts());
+        assert_eq!(s0.skip_fraction(), 0.0);
+        // huge alpha → max skipping bounded by k_max
+        let s1 = c.smoothcache_schedule(100.0, &bts());
+        s1.validate().unwrap();
+        assert!(s1.max_gap() <= 3);
+        assert!(s1.skip_fraction() > 0.5);
+    }
+
+    #[test]
+    fn schedule_adapts_to_curve_shape() {
+        let c = synthetic();
+        // alpha = 0.07: ffn k=1 error (0.05) passes; attn passes only
+        // early steps (0.02·s < 0.07 → s ≤ 3)
+        let s = c.smoothcache_schedule(0.07, &bts());
+        s.validate().unwrap();
+        // attn: step 1 (err 0.02) reuses; step 2 from fill 0 (gap-2 err
+        // 0.08) must compute; step 3 (gap-1 err 0.06) reuses again
+        assert_eq!(s.decision(1, "attn"), Decision::Reuse { filled_at: 0 });
+        assert!(s.decision(2, "attn").is_compute());
+        assert_eq!(s.decision(3, "attn"), Decision::Reuse { filled_at: 2 });
+        // late attn steps exceed alpha even at gap 1 (err 0.02·s ≥ 0.07)
+        assert!(s.decision(8, "attn").is_compute());
+        // ffn alternates forever: gap-1 err 0.05 < 0.07 but gap-2 err
+        // 0.10 > 0.07 (step-size-independent curve)
+        assert_eq!(s.decision(7, "ffn"), Decision::Reuse { filled_at: 6 });
+        assert!(s.decision(8, "ffn").is_compute());
+    }
+
+    #[test]
+    fn skip_fraction_monotone_in_alpha() {
+        let c = synthetic();
+        let mut prev = -1.0;
+        for alpha in [0.0, 0.03, 0.06, 0.1, 0.2, 0.5] {
+            let f = c.smoothcache_schedule(alpha, &bts()).skip_fraction();
+            assert!(f >= prev, "alpha={alpha}: {f} < {prev}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn alpha_for_skip_fraction_hits_target() {
+        let c = synthetic();
+        let (alpha, s) = c.alpha_for_skip_fraction(0.4, &bts());
+        assert!(alpha > 0.0);
+        // monotone bisection: hit or slightly exceed the target
+        assert!(s.skip_fraction() >= 0.4 - 1e-9);
+        assert!(s.skip_fraction() <= 0.75);
+    }
+
+    #[test]
+    fn per_site_schedules_valid_gaps() {
+        let c = synthetic();
+        let m = c.per_site_schedule(0.07);
+        assert_eq!(m.len(), 4); // 2 blocks × 2 types
+        for ds in m.values() {
+            assert!(ds[0].is_compute());
+            for (s, d) in ds.iter().enumerate() {
+                if let Decision::Reuse { filled_at } = d {
+                    assert!(s - filled_at <= 3);
+                    assert!(ds[*filled_at].is_compute());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_means() {
+        let c = synthetic();
+        let back = ErrorCurves::parse_str(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.steps, c.steps);
+        assert_eq!(back.k_max, c.k_max);
+        for bt in ["attn", "ffn"] {
+            for s in 1..10 {
+                assert!(
+                    (back.mean(bt, s, 1).unwrap() - c.mean(bt, s, 1).unwrap()).abs() < 1e-9
+                );
+            }
+        }
+        // schedules generated from the round-tripped curves are identical
+        assert_eq!(
+            back.smoothcache_schedule(0.07, &bts()),
+            c.smoothcache_schedule(0.07, &bts())
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! SmoothCache core: error curves, calibration, and schedule generation.
+//!
+//! The paper's contribution, end to end:
+//! 1. [`calibrator::calibrate`] — one no-cache calibration pass over a
+//!    few samples, accumulating cross-timestep L1 relative error curves
+//!    per branch type (paper Fig. 2, Eq. 4 LHS).
+//! 2. [`curves::ErrorCurves::smoothcache_schedule`] — greedy α-threshold
+//!    schedule generation (paper Eq. 4).
+//! 3. [`schedule::Schedule`] — the static artifact the serving pipeline
+//!    executes; baselines (FORA, alternate/L2C-proxy, no-cache) are
+//!    constructors on the same type so every bench compares like with
+//!    like.
+
+pub mod calibrator;
+pub mod curves;
+pub mod policies;
+pub mod schedule;
+
+pub use calibrator::{calibrate, paper_protocol, sample_cond, CalibrationConfig};
+pub use curves::{Acc, ErrorCurves};
+pub use policies::delta_dit;
+pub use schedule::{Decision, Schedule};
+
+#[cfg(test)]
+mod prop_tests {
+    //! Property-based invariants over the schedule machinery (the mini
+    //! propcheck framework stands in for proptest offline).
+
+    use super::*;
+    use crate::util::propcheck::{forall, gen};
+    use crate::util::rng::Rng;
+
+    fn random_curves(r: &mut Rng) -> (ErrorCurves, Vec<String>) {
+        let steps = gen::usize_in(r, 2, 40);
+        let k_max = gen::usize_in(r, 1, 6);
+        let n_types = gen::usize_in(r, 1, 4);
+        let bts: Vec<String> = (0..n_types).map(|i| format!("bt{i}")).collect();
+        let depth = gen::usize_in(r, 1, 4);
+        let mut c = ErrorCurves::new("t", "ddim", steps, k_max, &bts, depth);
+        for bt in &bts {
+            for s in 1..steps {
+                for k in 1..=k_max.min(s) {
+                    for b in 0..depth {
+                        c.record(bt, b, s, k, gen::f64_in(r, 0.0, 1.0));
+                    }
+                }
+            }
+        }
+        c.num_samples = 1;
+        (c, bts)
+    }
+
+    /// Any (curves, alpha) yields a structurally valid schedule whose
+    /// reuse gaps never exceed k_max.
+    #[test]
+    fn prop_smoothcache_schedules_always_valid() {
+        let mut rng = Rng::new(0xC0DE);
+        for _ in 0..120 {
+            let (c, bts) = random_curves(&mut rng);
+            for alpha in [0.0, 0.1, 0.5, 1.0, 2.0] {
+                let s = c.smoothcache_schedule(alpha, &bts);
+                s.validate().expect("valid schedule");
+                assert!(s.max_gap() <= c.k_max);
+            }
+        }
+    }
+
+    /// skip_fraction is monotone non-decreasing in alpha for any curves.
+    #[test]
+    fn prop_skip_fraction_monotone_in_alpha() {
+        let mut rng = Rng::new(0xA1FA);
+        for _ in 0..60 {
+            let (c, bts) = random_curves(&mut rng);
+            let mut prev = -1.0;
+            for i in 0..=10 {
+                let alpha = i as f64 * 0.2;
+                let f = c.smoothcache_schedule(alpha, &bts).skip_fraction();
+                assert!(f + 1e-12 >= prev, "alpha={alpha} f={f} prev={prev}");
+                prev = f;
+            }
+        }
+    }
+
+    /// FORA schedules validate for any (steps, n) and skip exactly
+    /// floor-fraction of steps.
+    #[test]
+    fn prop_fora_always_valid() {
+        forall(
+            0xF0AA,
+            200,
+            |r| (gen::usize_in(r, 1, 200), gen::usize_in(r, 1, 10)),
+            |&(steps, n): &(usize, usize)| {
+                let bts = vec!["a".to_string(), "b".to_string()];
+                let s = Schedule::fora(steps, &bts, n);
+                s.validate().map_err(|e| e.to_string())?;
+                let computes = (0..steps).filter(|i| i % n == 0).count();
+                if s.computes_per_type() != vec![computes; 2] {
+                    return Err("compute count mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// JSON round-trip preserves any valid schedule exactly.
+    #[test]
+    fn prop_schedule_json_roundtrip() {
+        let mut rng = Rng::new(0x10AD);
+        for _ in 0..60 {
+            let (c, bts) = random_curves(&mut rng);
+            let alpha = rng.range_f64(0.0, 1.2);
+            let s = c.smoothcache_schedule(alpha, &bts);
+            let back = Schedule::parse_str(&s.to_json().to_string()).unwrap();
+            assert_eq!(s, back);
+        }
+    }
+
+    /// Per-site schedules respect gap bounds and step-0 rule for any curves.
+    #[test]
+    fn prop_per_site_valid() {
+        let mut rng = Rng::new(0x517E);
+        for _ in 0..60 {
+            let (c, _bts) = random_curves(&mut rng);
+            let m = c.per_site_schedule(rng.range_f64(0.0, 1.2));
+            for ds in m.values() {
+                assert!(ds[0].is_compute());
+                for (s, d) in ds.iter().enumerate() {
+                    if let Decision::Reuse { filled_at } = d {
+                        assert!(*filled_at < s);
+                        assert!(s - filled_at <= c.k_max);
+                        assert!(ds[*filled_at].is_compute());
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Additional caching baselines beyond FORA / alternate.
+//!
+//! * [`delta_dit`] — a δ-DiT-style depth-aware baseline (related-work
+//!   [4]): in the early, structure-forming phase of sampling the *back*
+//!   half of the block stack is cached; in the late, detail-forming
+//!   phase the *front* half is — while the other half recomputes every
+//!   n-th step like FORA. It exercises the per-site decision machinery
+//!   the grouping ablation also uses.
+
+use std::collections::BTreeMap;
+
+use super::schedule::Decision;
+
+/// Build a per-site δ-DiT-like decision map.
+///
+/// `boundary` ∈ (0, 1): fraction of steps considered the "early" phase.
+/// Within the cached half, outputs refresh every `n` steps.
+pub fn delta_dit(
+    steps: usize,
+    depth: usize,
+    branch_types: &[String],
+    n: usize,
+    boundary: f64,
+) -> BTreeMap<String, Vec<Decision>> {
+    assert!(n >= 1 && steps >= 1 && depth >= 1);
+    let split = depth / 2;
+    let boundary_step = ((steps as f64) * boundary).round() as usize;
+    let mut out = BTreeMap::new();
+    for block in 0..depth {
+        for bt in branch_types {
+            let mut ds = vec![Decision::Compute; steps];
+            let mut last_fill = 0usize;
+            for s in 1..steps {
+                let early = s < boundary_step;
+                let in_cached_half = if early { block >= split } else { block < split };
+                if in_cached_half && (s - last_fill) < n {
+                    ds[s] = Decision::Reuse { filled_at: last_fill };
+                } else {
+                    ds[s] = Decision::Compute;
+                    last_fill = s;
+                }
+            }
+            out.insert(format!("{block}.{bt}"), ds);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bts() -> Vec<String> {
+        vec!["attn".into(), "ffn".into()]
+    }
+
+    #[test]
+    fn structure_respects_phase_split() {
+        let m = delta_dit(10, 4, &bts(), 2, 0.5);
+        assert_eq!(m.len(), 8);
+        // early phase (s=1): back half (blocks 2,3) reuses, front computes
+        assert!(!m["3.attn"][1].is_compute());
+        assert!(m["0.attn"][1].is_compute());
+        // late phase (s=6): front half reuses, back computes
+        assert!(!m["0.attn"][7].is_compute());
+        assert!(m["3.attn"][7].is_compute());
+    }
+
+    #[test]
+    fn refresh_interval_bounds_gap() {
+        let m = delta_dit(20, 4, &bts(), 3, 0.5);
+        for ds in m.values() {
+            assert!(ds[0].is_compute());
+            for (s, d) in ds.iter().enumerate() {
+                if let Decision::Reuse { filled_at } = d {
+                    assert!(s - filled_at < 3);
+                    assert!(ds[*filled_at].is_compute());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn n1_means_no_caching() {
+        let m = delta_dit(10, 2, &bts(), 1, 0.5);
+        for ds in m.values() {
+            assert!(ds.iter().all(|d| d.is_compute()));
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! Static caching schedules: the object SmoothCache produces offline and
+//! the pipeline consumes at inference time.
+//!
+//! A schedule assigns, for every solver step and branch type, either
+//! `Compute` (run the branch executables and refill the cache) or
+//! `Reuse { filled_at }` (skip the PJRT executions; re-inject the cached
+//! deltas through the residual connection — paper Fig. 3). Decisions are
+//! grouped by *branch type* across block depth, exactly as §2.2
+//! motivates (mitigating cascaded approximation error); the grouping
+//! ablation relaxes this to per-site decisions.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Compute,
+    Reuse { filled_at: usize },
+}
+
+impl Decision {
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Decision::Compute)
+    }
+}
+
+/// Schedule over (step, branch-type). `decisions[step][bt]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    pub name: String,
+    pub steps: usize,
+    pub branch_types: Vec<String>,
+    pub decisions: Vec<Vec<Decision>>,
+}
+
+impl Schedule {
+    /// All-compute (the "No Cache" row of every paper table).
+    pub fn no_cache(steps: usize, branch_types: &[String]) -> Schedule {
+        Schedule {
+            name: "no-cache".into(),
+            steps,
+            branch_types: branch_types.to_vec(),
+            decisions: vec![vec![Decision::Compute; branch_types.len()]; steps],
+        }
+    }
+
+    /// FORA-style uniform static caching: compute on every n-th step,
+    /// reuse otherwise (paper baseline; n=2,3 in Table 1).
+    pub fn fora(steps: usize, branch_types: &[String], n: usize) -> Schedule {
+        assert!(n >= 1);
+        let mut s = Schedule::no_cache(steps, branch_types);
+        s.name = format!("fora-n{n}");
+        for step in 0..steps {
+            if step % n != 0 {
+                let filled = step - step % n;
+                for d in &mut s.decisions[step] {
+                    *d = Decision::Reuse { filled_at: filled };
+                }
+            }
+        }
+        s
+    }
+
+    /// L2C-proxy: cache every other step (the "learned alternate-step
+    /// policy" shape; its 2× ceiling is inherent — see DESIGN.md §3).
+    pub fn alternate(steps: usize, branch_types: &[String]) -> Schedule {
+        let mut s = Schedule::fora(steps, branch_types, 2);
+        s.name = "alternate".into();
+        s
+    }
+
+    pub fn n_branch_types(&self) -> usize {
+        self.branch_types.len()
+    }
+
+    pub fn decision(&self, step: usize, branch_type: &str) -> Decision {
+        let bt = self
+            .branch_types
+            .iter()
+            .position(|b| b == branch_type)
+            .unwrap_or_else(|| panic!("unknown branch type {branch_type}"));
+        self.decisions[step][bt]
+    }
+
+    /// Fraction of branch evaluations skipped (the paper's headline
+    /// compute-saving knob).
+    pub fn skip_fraction(&self) -> f64 {
+        let total = self.steps * self.branch_types.len();
+        if total == 0 {
+            return 0.0;
+        }
+        let skipped = self
+            .decisions
+            .iter()
+            .flatten()
+            .filter(|d| !d.is_compute())
+            .count();
+        skipped as f64 / total as f64
+    }
+
+    /// Compute-count per branch type (for MAC accounting).
+    pub fn computes_per_type(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.branch_types.len()];
+        for row in &self.decisions {
+            for (i, d) in row.iter().enumerate() {
+                if d.is_compute() {
+                    counts[i] += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Structural invariants every valid schedule satisfies. Property
+    /// tests drive random generators through this.
+    pub fn validate(&self) -> Result<()> {
+        if self.decisions.len() != self.steps {
+            return Err(anyhow!("decision rows {} != steps {}", self.decisions.len(), self.steps));
+        }
+        for (step, row) in self.decisions.iter().enumerate() {
+            if row.len() != self.branch_types.len() {
+                return Err(anyhow!("step {step}: row width mismatch"));
+            }
+            for (bt, d) in row.iter().enumerate() {
+                if let Decision::Reuse { filled_at } = d {
+                    if step == 0 {
+                        return Err(anyhow!("step 0 must compute (cache empty)"));
+                    }
+                    if *filled_at >= step {
+                        return Err(anyhow!(
+                            "step {step}/{}: filled_at {filled_at} not in the past",
+                            self.branch_types[bt]
+                        ));
+                    }
+                    if !self.decisions[*filled_at][bt].is_compute() {
+                        return Err(anyhow!(
+                            "step {step}/{}: filled_at {filled_at} was not computed",
+                            self.branch_types[bt]
+                        ));
+                    }
+                    // the fill must be the *latest* compute before `step`
+                    for mid in (*filled_at + 1)..step {
+                        if self.decisions[mid][bt].is_compute() {
+                            return Err(anyhow!(
+                                "step {step}/{}: stale reuse (computed at {mid} after fill {filled_at})",
+                                self.branch_types[bt]
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Largest reuse gap in the schedule.
+    pub fn max_gap(&self) -> usize {
+        let mut g = 0;
+        for (step, row) in self.decisions.iter().enumerate() {
+            for d in row {
+                if let Decision::Reuse { filled_at } = d {
+                    g = g.max(step - filled_at);
+                }
+            }
+        }
+        g
+    }
+
+    // ---- JSON round-trip ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .decisions
+            .iter()
+            .map(|row| {
+                Json::Arr(
+                    row.iter()
+                        .map(|d| match d {
+                            Decision::Compute => Json::Num(-1.0),
+                            Decision::Reuse { filled_at } => Json::Num(*filled_at as f64),
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("steps", self.steps)
+            .set("branch_types", self.branch_types.iter().map(|s| Json::Str(s.clone())).collect::<Vec<_>>())
+            .set("decisions", Json::Arr(rows))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Schedule> {
+        let name = j.req("name")?.as_str().unwrap_or("schedule").to_string();
+        let steps = j.req("steps")?.as_usize().ok_or_else(|| anyhow!("steps"))?;
+        let branch_types: Vec<String> = j
+            .req("branch_types")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("branch_types"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        let mut decisions = Vec::with_capacity(steps);
+        for row in j.req("decisions")?.as_arr().ok_or_else(|| anyhow!("decisions"))? {
+            decisions.push(
+                row.as_arr()
+                    .ok_or_else(|| anyhow!("decision row"))?
+                    .iter()
+                    .map(|v| {
+                        let n = v.as_f64().unwrap_or(-1.0);
+                        if n < 0.0 {
+                            Decision::Compute
+                        } else {
+                            Decision::Reuse { filled_at: n as usize }
+                        }
+                    })
+                    .collect(),
+            );
+        }
+        let s = Schedule { name, steps, branch_types, decisions };
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Schedule> {
+        Schedule::from_json(&parse(text).map_err(|e| anyhow!("schedule json: {e}"))?)
+    }
+
+    /// Compact visual: one line per branch type, `#` compute / `.` reuse.
+    pub fn ascii(&self) -> String {
+        let mut out = String::new();
+        for (bt, name) in self.branch_types.iter().enumerate() {
+            out.push_str(&format!("{name:>10} "));
+            for row in &self.decisions {
+                out.push(if row[bt].is_compute() { '#' } else { '.' });
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bts() -> Vec<String> {
+        vec!["attn".into(), "ffn".into()]
+    }
+
+    #[test]
+    fn no_cache_all_compute() {
+        let s = Schedule::no_cache(10, &bts());
+        assert_eq!(s.skip_fraction(), 0.0);
+        s.validate().unwrap();
+        assert_eq!(s.computes_per_type(), vec![10, 10]);
+    }
+
+    #[test]
+    fn fora_n2_skips_half() {
+        let s = Schedule::fora(10, &bts(), 2);
+        s.validate().unwrap();
+        assert!((s.skip_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(s.decision(0, "attn"), Decision::Compute);
+        assert_eq!(s.decision(1, "attn"), Decision::Reuse { filled_at: 0 });
+        assert_eq!(s.decision(2, "attn"), Decision::Compute);
+        assert_eq!(s.max_gap(), 1);
+    }
+
+    #[test]
+    fn fora_n3_structure() {
+        let s = Schedule::fora(9, &bts(), 3);
+        s.validate().unwrap();
+        assert_eq!(s.decision(4, "ffn"), Decision::Reuse { filled_at: 3 });
+        assert_eq!(s.decision(5, "ffn"), Decision::Reuse { filled_at: 3 });
+        assert!((s.skip_fraction() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.max_gap(), 2);
+    }
+
+    #[test]
+    fn fora_n1_equals_no_cache() {
+        let s = Schedule::fora(7, &bts(), 1);
+        assert_eq!(s.skip_fraction(), 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_step0_reuse() {
+        let mut s = Schedule::no_cache(3, &bts());
+        s.decisions[0][0] = Decision::Reuse { filled_at: 0 };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_future_fill() {
+        let mut s = Schedule::no_cache(3, &bts());
+        s.decisions[1][0] = Decision::Reuse { filled_at: 2 };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_stale_reuse() {
+        let mut s = Schedule::no_cache(4, &bts());
+        // compute at 0, 1, 2; reuse at 3 pointing past a newer compute
+        s.decisions[3][0] = Decision::Reuse { filled_at: 1 };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_reuse_of_noncomputed() {
+        let mut s = Schedule::no_cache(4, &bts());
+        s.decisions[1][0] = Decision::Reuse { filled_at: 0 };
+        s.decisions[2][0] = Decision::Reuse { filled_at: 1 }; // 1 was a reuse
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Schedule::fora(20, &bts(), 3);
+        let back = Schedule::parse_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn ascii_render() {
+        let s = Schedule::fora(4, &bts(), 2);
+        let a = s.ascii();
+        assert!(a.contains("#.#."));
+    }
+}

@@ -1,0 +1,292 @@
+//! Dynamic batching core (vLLM-style): group compatible requests, flush
+//! on size or deadline, pad to the nearest AOT-compiled batch size.
+//!
+//! Pure data structure — the coordinator thread drives it with wall
+//! clock instants, so every policy decision is unit- and property-
+//! testable without threads.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::request::{BatchKey, InFlight};
+
+pub struct BatcherConfig {
+    /// AOT-compiled batch sizes (ascending), from the manifest.
+    pub supported_batches: Vec<usize>,
+    /// max time the oldest request in a group may wait before flush.
+    pub max_wait: Duration,
+}
+
+impl BatcherConfig {
+    /// Largest batch eligible for a request group, accounting for CFG
+    /// doubling (a CFG batch of b runs as an effective 2b batch).
+    pub fn max_group(&self, cfg_enabled: bool) -> usize {
+        let max = *self.supported_batches.last().unwrap_or(&1);
+        if cfg_enabled {
+            (max / 2).max(1)
+        } else {
+            max
+        }
+    }
+
+    /// Smallest supported batch ≥ n (the padding target). `None` if n
+    /// exceeds every compiled size.
+    pub fn pad_target(&self, n: usize, cfg_enabled: bool) -> Option<usize> {
+        let fits = |b: usize| {
+            let eff = if cfg_enabled { 2 * b } else { b };
+            self.supported_batches.contains(&eff)
+        };
+        (n..=self.max_group(cfg_enabled)).find(|&b| fits(b))
+    }
+}
+
+struct Group {
+    items: Vec<InFlight>,
+    oldest: Instant,
+}
+
+/// Accumulates requests per compatibility key; yields flushable batches.
+pub struct Batcher {
+    pub config: BatcherConfig,
+    groups: HashMap<BatchKey, Group>,
+}
+
+impl Batcher {
+    pub fn new(config: BatcherConfig) -> Batcher {
+        Batcher { config, groups: HashMap::new() }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.groups.values().map(|g| g.items.len()).sum()
+    }
+
+    /// Enqueue; returns a full batch if the group reached max size.
+    pub fn push(&mut self, item: InFlight, now: Instant) -> Option<Vec<InFlight>> {
+        let key = item.request.batch_key();
+        let cfg = item.request.cfg_scale != 1.0;
+        let max = self.config.max_group(cfg);
+        let group = self.groups.entry(key.clone()).or_insert_with(|| Group {
+            items: Vec::new(),
+            oldest: now,
+        });
+        if group.items.is_empty() {
+            group.oldest = now;
+        }
+        group.items.push(item);
+        if group.items.len() >= max {
+            let g = self.groups.remove(&key).unwrap();
+            return Some(g.items);
+        }
+        None
+    }
+
+    /// Flush every group whose oldest request exceeded max_wait.
+    pub fn poll(&mut self, now: Instant) -> Vec<Vec<InFlight>> {
+        let expired: Vec<BatchKey> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| now.duration_since(g.oldest) >= self.config.max_wait)
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|k| self.groups.remove(&k).map(|g| g.items))
+            .collect()
+    }
+
+    /// Flush everything (shutdown / drain).
+    pub fn drain(&mut self) -> Vec<Vec<InFlight>> {
+        self.groups.drain().map(|(_, g)| g.items).collect()
+    }
+
+    /// Time until the next deadline-based flush, if any.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.groups
+            .values()
+            .map(|g| {
+                self.config
+                    .max_wait
+                    .checked_sub(now.duration_since(g.oldest))
+                    .unwrap_or(Duration::ZERO)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Policy, Request};
+    use crate::model::Cond;
+    use crate::solvers::SolverKind;
+    use crate::util::propcheck::{forall, gen};
+    use crate::util::rng::Rng;
+    use std::sync::mpsc::channel;
+
+    fn mk_inflight(family: &str, steps: usize, cfg: f32, id: u64) -> InFlight {
+        let (tx, _rx) = channel();
+        // keep the receiver alive long enough for tests that don't reply
+        std::mem::forget(_rx);
+        InFlight {
+            request: Request {
+                id,
+                family: family.into(),
+                cond: Cond::Label(vec![1]),
+                solver: SolverKind::Ddim,
+                steps,
+                cfg_scale: cfg,
+                seed: id,
+                policy: Policy::NoCache,
+            },
+            submitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig { supported_batches: vec![1, 2, 4, 8], max_wait: Duration::from_millis(50) }
+    }
+
+    #[test]
+    fn pad_target_rounding() {
+        let c = cfg();
+        assert_eq!(c.pad_target(1, false), Some(1));
+        assert_eq!(c.pad_target(3, false), Some(4));
+        assert_eq!(c.pad_target(5, false), Some(8));
+        assert_eq!(c.pad_target(9, false), None);
+        // CFG halves the usable size
+        assert_eq!(c.pad_target(3, true), Some(4));
+        assert_eq!(c.pad_target(4, true), Some(4));
+        assert_eq!(c.pad_target(5, true), None);
+    }
+
+    #[test]
+    fn flush_on_full() {
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        for i in 0..7 {
+            assert!(b.push(mk_inflight("image", 10, 1.0, i), now).is_none());
+        }
+        let full = b.push(mk_inflight("image", 10, 1.0, 7), now);
+        assert_eq!(full.unwrap().len(), 8);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn cfg_groups_flush_at_half() {
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        for i in 0..3 {
+            assert!(b.push(mk_inflight("image", 10, 1.5, i), now).is_none());
+        }
+        let full = b.push(mk_inflight("image", 10, 1.5, 3), now);
+        assert_eq!(full.unwrap().len(), 4);
+    }
+
+    #[test]
+    fn incompatible_requests_do_not_mix() {
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        b.push(mk_inflight("image", 10, 1.0, 0), now);
+        b.push(mk_inflight("image", 20, 1.0, 1), now);
+        b.push(mk_inflight("audio", 10, 1.0, 2), now);
+        assert_eq!(b.pending(), 3);
+        assert_eq!(b.groups.len(), 3);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        b.push(mk_inflight("image", 10, 1.0, 0), t0);
+        assert!(b.poll(t0).is_empty());
+        let later = t0 + Duration::from_millis(60);
+        let flushed = b.poll(later);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = Batcher::new(cfg());
+        let t0 = Instant::now();
+        assert!(b.next_deadline(t0).is_none());
+        b.push(mk_inflight("image", 10, 1.0, 0), t0);
+        let d = b.next_deadline(t0 + Duration::from_millis(20)).unwrap();
+        assert!(d <= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn drain_returns_everything() {
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push(mk_inflight("image", 10 + (i as usize % 2), 1.0, i), now);
+        }
+        let drained = b.drain();
+        assert_eq!(drained.iter().map(|g| g.len()).sum::<usize>(), 5);
+        assert_eq!(b.pending(), 0);
+    }
+
+    /// Property: under any request sequence, (a) every flushed batch is
+    /// homogeneous in batch key, (b) no batch exceeds the effective max,
+    /// (c) nothing is lost or duplicated.
+    #[test]
+    fn prop_batcher_invariants() {
+        forall(
+            0xBA7C4,
+            60,
+            |r: &mut Rng| {
+                gen::vec_of(r, 1, 40, |r| {
+                    (
+                        r.below(3),          // family selector
+                        10 + r.below(2),     // steps
+                        r.below(2),          // cfg on/off
+                    )
+                })
+            },
+            |seq: &Vec<(usize, usize, usize)>| {
+                let mut b = Batcher::new(cfg());
+                let now = Instant::now();
+                let mut seen_out = 0usize;
+                let families = ["image", "audio", "video"];
+                for (i, &(f, steps, use_cfg)) in seq.iter().enumerate() {
+                    let item = mk_inflight(
+                        families[f],
+                        steps,
+                        if use_cfg == 1 { 1.5 } else { 1.0 },
+                        i as u64,
+                    );
+                    if let Some(batch) = b.push(item, now) {
+                        let key = batch[0].request.batch_key();
+                        let cfg_on = batch[0].request.cfg_scale != 1.0;
+                        let max = b.config.max_group(cfg_on);
+                        if batch.len() > max {
+                            return Err(format!("batch of {} > max {max}", batch.len()));
+                        }
+                        for it in &batch {
+                            if it.request.batch_key() != key {
+                                return Err("heterogeneous batch".into());
+                            }
+                        }
+                        seen_out += batch.len();
+                    }
+                }
+                for batch in b.drain() {
+                    let key = batch[0].request.batch_key();
+                    for it in &batch {
+                        if it.request.batch_key() != key {
+                            return Err("heterogeneous drained batch".into());
+                        }
+                    }
+                    seen_out += batch.len();
+                }
+                if seen_out != seq.len() {
+                    return Err(format!("lost requests: {seen_out} != {}", seq.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,319 @@
+//! The executor: the single thread that owns the PJRT engine, resolves
+//! caching policies to concrete schedules (calibrating on demand), and
+//! runs batched generations.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use super::request::{InFlight, Policy, Request, Response};
+use crate::cache::{calibrate, CalibrationConfig, Decision, ErrorCurves, Schedule};
+use crate::model::Engine;
+use crate::pipeline::{generate_from, CacheMode, GenConfig};
+use crate::solvers::SolverRun;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct ExecutorConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// families to preload at startup (lazy for the rest).
+    pub preload: Vec<String>,
+    /// calibration samples for on-demand SmoothCache calibration
+    /// (paper: 10; servers may trade a few for startup time).
+    pub calib_samples: usize,
+    pub calib_seed: u64,
+    /// optional directory with pre-computed calibration curves
+    /// (artifacts/calibration/{family}_{solver}_{steps}.json).
+    pub curves_dir: Option<std::path::PathBuf>,
+}
+
+/// Caches calibration curves and resolved schedules across requests.
+pub struct ScheduleStore {
+    pub calib_samples: usize,
+    pub calib_seed: u64,
+    pub curves_dir: Option<std::path::PathBuf>,
+    curves: HashMap<(String, String, usize), ErrorCurves>,
+    schedules: HashMap<(String, String, usize, String), Schedule>,
+    per_site: HashMap<(String, String, usize, String), BTreeMap<String, Vec<Decision>>>,
+}
+
+impl ScheduleStore {
+    pub fn new(
+        calib_samples: usize,
+        calib_seed: u64,
+        curves_dir: Option<std::path::PathBuf>,
+    ) -> ScheduleStore {
+        ScheduleStore {
+            calib_samples,
+            calib_seed,
+            curves_dir,
+            curves: HashMap::new(),
+            schedules: HashMap::new(),
+            per_site: HashMap::new(),
+        }
+    }
+
+    fn default_k_max(family: &str) -> usize {
+        // paper §3.1: k ≤ 3 for DiT-XL / Stable Audio, k ≤ 5 for OpenSora
+        if family == "video" {
+            5
+        } else {
+            3
+        }
+    }
+
+    fn default_calib_cfg(family: &str) -> f32 {
+        // DiT calibrates unconditionally; OpenSora / Stable Audio
+        // calibrate conditionally (paper §3.1)
+        if family == "image" {
+            1.0
+        } else {
+            7.0
+        }
+    }
+
+    /// Get (calibrating if needed) the error curves for a configuration.
+    pub fn curves(
+        &mut self,
+        engine: &Engine,
+        metrics: Option<&Metrics>,
+        family: &str,
+        solver: crate::solvers::SolverKind,
+        steps: usize,
+    ) -> Result<&ErrorCurves> {
+        let key = (family.to_string(), solver.name().to_string(), steps);
+        if !self.curves.contains_key(&key) {
+            // try the on-disk cache first
+            let mut loaded = None;
+            if let Some(dir) = &self.curves_dir {
+                let p = dir.join(format!("{family}_{}_{steps}.json", solver.name()));
+                if let Ok(text) = std::fs::read_to_string(&p) {
+                    loaded = ErrorCurves::parse_str(&text).ok();
+                }
+            }
+            let curves = match loaded {
+                Some(c) => c,
+                None => {
+                    let cc = CalibrationConfig {
+                        solver,
+                        steps,
+                        k_max: Self::default_k_max(family),
+                        num_samples: self.calib_samples,
+                        cfg_scale: Self::default_calib_cfg(family),
+                        seed: self.calib_seed,
+                    };
+                    if let Some(m) = metrics {
+                        Metrics::inc(&m.calibrations);
+                    }
+                    calibrate(engine, family, &cc)?
+                }
+            };
+            self.curves.insert(key.clone(), curves);
+        }
+        Ok(self.curves.get(&key).unwrap())
+    }
+
+    /// Resolve a policy to a grouped schedule (or a per-site map).
+    pub fn resolve(
+        &mut self,
+        engine: &Engine,
+        metrics: Option<&Metrics>,
+        family: &str,
+        solver: crate::solvers::SolverKind,
+        steps: usize,
+        policy: &Policy,
+    ) -> Result<ResolvedPolicy> {
+        let fm = engine.family_manifest(family)?;
+        let bts = fm.branch_types.clone();
+        let skey = (family.to_string(), solver.name().to_string(), steps, policy.wire());
+        match policy {
+            Policy::NoCache => Ok(ResolvedPolicy::None),
+            Policy::Fora(n) => {
+                if !self.schedules.contains_key(&skey) {
+                    self.schedules.insert(skey.clone(), Schedule::fora(steps, &bts, *n));
+                }
+                Ok(ResolvedPolicy::Grouped(self.schedules[&skey].clone()))
+            }
+            Policy::Alternate => {
+                if !self.schedules.contains_key(&skey) {
+                    self.schedules.insert(skey.clone(), Schedule::alternate(steps, &bts));
+                }
+                Ok(ResolvedPolicy::Grouped(self.schedules[&skey].clone()))
+            }
+            Policy::Smooth(alpha) => {
+                if !self.schedules.contains_key(&skey) {
+                    let curves = self.curves(engine, metrics, family, solver, steps)?;
+                    let s = curves.smoothcache_schedule(*alpha, &bts);
+                    self.schedules.insert(skey.clone(), s);
+                }
+                Ok(ResolvedPolicy::Grouped(self.schedules[&skey].clone()))
+            }
+            Policy::DeltaDit(n) => {
+                if !self.per_site.contains_key(&skey) {
+                    let m = crate::cache::delta_dit(steps, fm.depth, &bts, *n, 0.5);
+                    self.per_site.insert(skey.clone(), m);
+                }
+                Ok(ResolvedPolicy::PerSite(self.per_site[&skey].clone()))
+            }
+            Policy::SmoothPerSite(alpha) => {
+                if !self.per_site.contains_key(&skey) {
+                    let curves = self.curves(engine, metrics, family, solver, steps)?;
+                    let m = curves.per_site_schedule(*alpha);
+                    self.per_site.insert(skey.clone(), m);
+                }
+                Ok(ResolvedPolicy::PerSite(self.per_site[&skey].clone()))
+            }
+        }
+    }
+}
+
+pub enum ResolvedPolicy {
+    None,
+    Grouped(Schedule),
+    PerSite(BTreeMap<String, Vec<Decision>>),
+}
+
+impl ResolvedPolicy {
+    pub fn as_mode(&self) -> CacheMode<'_> {
+        match self {
+            ResolvedPolicy::None => CacheMode::None,
+            ResolvedPolicy::Grouped(s) => CacheMode::Grouped(s),
+            ResolvedPolicy::PerSite(m) => CacheMode::PerSite(m),
+        }
+    }
+}
+
+/// Execute one homogeneous batch of requests on the engine.
+pub fn execute_batch(
+    engine: &mut Engine,
+    store: &mut ScheduleStore,
+    metrics: &Metrics,
+    batch: Vec<InFlight>,
+    supported_batches: &[usize],
+) -> Result<()> {
+    debug_assert!(!batch.is_empty());
+    let exec_start = Instant::now();
+    let req0: &Request = &batch[0].request;
+    let family = req0.family.clone();
+    engine.load_family(&family)?;
+    let fm = engine.family_manifest(&family)?.clone();
+    let cfg_on = req0.cfg_scale != 1.0;
+
+    // pad to the nearest AOT-compiled batch size
+    let n = batch.len();
+    let target = (n..)
+        .find(|&b| {
+            let eff = if cfg_on { 2 * b } else { b };
+            supported_batches.contains(&eff)
+        })
+        .ok_or_else(|| anyhow!("no supported batch ≥ {n}"))?;
+    Metrics::add(&metrics.padded_slots, (target - n) as u64);
+
+    // conditioning: concat + pad
+    let mut cond = batch[0].request.cond.clone();
+    for it in &batch[1..] {
+        cond = cond.cat(&it.request.cond);
+    }
+    let cond = cond.pad_to(target, fm.cond_len);
+
+    // per-request init latents from their own seeds
+    let mut lat_shape = vec![1usize];
+    lat_shape.extend(&fm.latent_shape);
+    let latents: Vec<Tensor> = batch
+        .iter()
+        .map(|it| SolverRun::init_latent(lat_shape.clone(), &mut Rng::new(it.request.seed)))
+        .collect();
+    let mut refs: Vec<&Tensor> = latents.iter().collect();
+    let pad_extra = target - n;
+    for _ in 0..pad_extra {
+        refs.push(latents.last().unwrap());
+    }
+    let x_init = Tensor::cat0(&refs);
+
+    let resolved = store.resolve(
+        engine,
+        Some(metrics),
+        &family,
+        req0.solver,
+        req0.steps,
+        &req0.policy,
+    )?;
+    let gen_cfg = GenConfig::new(&family, req0.solver, req0.steps)
+        .with_cfg(req0.cfg_scale)
+        .with_seed(req0.seed);
+
+    let queue_at = exec_start;
+    let out = generate_from(engine, &gen_cfg, &cond, x_init, &resolved.as_mode(), None)?;
+    let exec_seconds = exec_start.elapsed().as_secs_f64();
+
+    Metrics::inc(&metrics.batches_executed);
+    Metrics::add(&metrics.branch_computes, out.stats.branch_computes as u64);
+    Metrics::add(&metrics.branch_reuses, out.stats.branch_reuses as u64);
+    metrics.exec_latency.observe(exec_seconds);
+
+    for (i, it) in batch.into_iter().enumerate() {
+        let queue_seconds = queue_at.duration_since(it.submitted).as_secs_f64();
+        let total = it.submitted.elapsed().as_secs_f64();
+        metrics.queue_latency.observe(queue_seconds);
+        metrics.e2e_latency.observe(total);
+        Metrics::inc(&metrics.requests_completed);
+        let resp = Response {
+            id: it.request.id,
+            latent: out.latent.sample(i),
+            batch_size: target,
+            queue_seconds,
+            exec_seconds,
+            total_seconds: total,
+            gen_stats: out.stats.clone(),
+        };
+        let _ = it.reply.send(Ok(resp));
+    }
+    Ok(())
+}
+
+/// The executor loop: drains the batch channel until it closes.
+pub fn run_executor(
+    config: ExecutorConfig,
+    supported_batches: Vec<usize>,
+    rx: Receiver<Vec<InFlight>>,
+    metrics: Arc<Metrics>,
+) {
+    let mut engine = match Engine::open(config.artifacts_dir.clone()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("executor: failed to open engine: {e:#}");
+            // fail every incoming request
+            for batch in rx {
+                for it in batch {
+                    let _ = it.reply.send(Err(anyhow!("engine unavailable")));
+                }
+            }
+            return;
+        }
+    };
+    for fam in &config.preload {
+        if let Err(e) = engine.load_family(fam) {
+            eprintln!("executor: preload {fam}: {e:#}");
+        }
+    }
+    let mut store =
+        ScheduleStore::new(config.calib_samples, config.calib_seed, config.curves_dir.clone());
+
+    for batch in rx {
+        // keep reply handles in case of failure
+        let ids: Vec<u64> = batch.iter().map(|b| b.request.id).collect();
+        let replies: Vec<_> = batch.iter().map(|b| b.reply.clone()).collect();
+        if let Err(e) = execute_batch(&mut engine, &mut store, &metrics, batch, &supported_batches)
+        {
+            eprintln!("executor: batch {ids:?} failed: {e:#}");
+            for r in replies {
+                Metrics::inc(&metrics.requests_failed);
+                let _ = r.send(Err(anyhow!("batch execution failed: {e}")));
+            }
+        }
+    }
+}

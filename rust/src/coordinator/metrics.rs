@@ -1,0 +1,172 @@
+//! Serving metrics: lock-free counters + log-bucketed latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-scale latency histogram, 1 ms … ~2000 s. Thread-safe, lock-free.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    /// sum of observations in microseconds.
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        // 1ms · 2^i buckets
+        let bounds: Vec<f64> = (0..22).map(|i| 0.001 * 2f64.powi(i)).collect();
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, buckets, sum_us: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+
+    pub fn observe(&self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Coordinator-wide counters.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub batches_executed: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub branch_computes: AtomicU64,
+    pub branch_reuses: AtomicU64,
+    pub calibrations: AtomicU64,
+    /// end-to-end (submit → response) latency.
+    pub e2e_latency: Histogram,
+    /// queueing delay (submit → batch execution start).
+    pub queue_latency: Histogram,
+    /// model execution time per batch.
+    pub exec_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// Mean request batch occupancy (real requests / executed slots).
+    pub fn occupancy(&self) -> f64 {
+        let done = Self::get(&self.requests_completed);
+        let padded = Self::get(&self.padded_slots);
+        if done + padded == 0 {
+            1.0
+        } else {
+            done as f64 / (done + padded) as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} failed={} batches={} occupancy={:.2} \
+             e2e_mean={:.3}s e2e_p95={:.3}s queue_mean={:.3}s skips={}/{}",
+            Self::get(&self.requests_submitted),
+            Self::get(&self.requests_completed),
+            Self::get(&self.requests_failed),
+            Self::get(&self.batches_executed),
+            self.occupancy(),
+            self.e2e_latency.mean(),
+            self.e2e_latency.quantile(0.95),
+            self.queue_latency.mean(),
+            Self::get(&self.branch_reuses),
+            Self::get(&self.branch_computes) + Self::get(&self.branch_reuses),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.observe(0.010);
+        }
+        for _ in 0..10 {
+            h.observe(1.0);
+        }
+        assert_eq!(h.count(), 110);
+        let mean = h.mean();
+        assert!((mean - (100.0 * 0.01 + 10.0) / 110.0).abs() < 1e-3, "{mean}");
+        assert!(h.quantile(0.5) <= 0.016);
+        assert!(h.quantile(0.99) >= 0.5);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn occupancy_counts_padding() {
+        let m = Metrics::default();
+        Metrics::add(&m.requests_completed, 6);
+        Metrics::add(&m.padded_slots, 2);
+        assert!((m.occupancy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_submitted);
+        assert!(m.summary().contains("requests=1"));
+    }
+}

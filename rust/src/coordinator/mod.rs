@@ -1,0 +1,191 @@
+//! L3 serving coordinator: router → dynamic batcher → executor.
+//!
+//! Thread topology (no tokio offline; DESIGN.md §3):
+//!
+//! ```text
+//!  clients ──submit()──► [batcher thread] ──batches──► [executor thread]
+//!                         groups by key,                owns the PJRT
+//!                         flushes on size                engine + the
+//!                         or deadline                    schedule store
+//! ```
+//!
+//! The executor is intentionally single-threaded: PJRT handles are not
+//! `Send`, and a single CPU device gains nothing from concurrent
+//! executions — batching is the concurrency mechanism, exactly as in
+//! the paper's serving setting.
+
+pub mod batcher;
+pub mod executor;
+pub mod metrics;
+pub mod request;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use executor::{ExecutorConfig, ScheduleStore};
+pub use metrics::{Histogram, Metrics};
+pub use request::{BatchKey, InFlight, Policy, Request, Response};
+
+pub struct CoordinatorConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub preload: Vec<String>,
+    pub supported_batches: Vec<usize>,
+    pub max_wait: Duration,
+    pub calib_samples: usize,
+    pub calib_seed: u64,
+    pub curves_dir: Option<std::path::PathBuf>,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifacts_dir: std::path::PathBuf) -> CoordinatorConfig {
+        CoordinatorConfig {
+            artifacts_dir,
+            preload: vec![],
+            supported_batches: vec![1, 2, 4, 8],
+            max_wait: Duration::from_millis(20),
+            calib_samples: 4,
+            calib_seed: 0xCA11B,
+            curves_dir: None,
+        }
+    }
+}
+
+/// Handle to a running coordinator. Dropping it shuts the pipeline down
+/// (in-flight requests drain first).
+pub struct Coordinator {
+    tx: Option<Sender<InFlight>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    batcher_handle: Option<std::thread::JoinHandle<()>>,
+    executor_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+        let metrics = Arc::new(Metrics::default());
+        let (req_tx, req_rx) = channel::<InFlight>();
+        let (batch_tx, batch_rx) = channel::<Vec<InFlight>>();
+
+        let bcfg = BatcherConfig {
+            supported_batches: config.supported_batches.clone(),
+            max_wait: config.max_wait,
+        };
+        let batcher_handle = std::thread::Builder::new()
+            .name("smoothcache-batcher".into())
+            .spawn(move || run_batcher(bcfg, req_rx, batch_tx))
+            .map_err(|e| anyhow!("spawn batcher: {e}"))?;
+
+        let ecfg = ExecutorConfig {
+            artifacts_dir: config.artifacts_dir,
+            preload: config.preload,
+            calib_samples: config.calib_samples,
+            calib_seed: config.calib_seed,
+            curves_dir: config.curves_dir,
+        };
+        let supported = config.supported_batches;
+        let m2 = Arc::clone(&metrics);
+        let executor_handle = std::thread::Builder::new()
+            .name("smoothcache-executor".into())
+            .spawn(move || executor::run_executor(ecfg, supported, batch_rx, m2))
+            .map_err(|e| anyhow!("spawn executor: {e}"))?;
+
+        Ok(Coordinator {
+            tx: Some(req_tx),
+            metrics,
+            next_id: AtomicU64::new(1),
+            batcher_handle: Some(batcher_handle),
+            executor_handle: Some(executor_handle),
+        })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Submit a request; returns the reply channel immediately.
+    pub fn submit(&self, mut request: Request) -> Receiver<Result<Response>> {
+        if request.id == 0 {
+            request.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        Metrics::inc(&self.metrics.requests_submitted);
+        let (tx, rx) = channel();
+        let item = InFlight { request, submitted: Instant::now(), reply: tx };
+        if let Some(q) = &self.tx {
+            // a send error means shutdown; the caller sees a disconnect
+            let _ = q.send(item);
+        }
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn generate_blocking(&self, request: Request) -> Result<Response> {
+        let rx = self.submit(request);
+        rx.recv().map_err(|_| anyhow!("coordinator shut down"))?
+    }
+
+    /// Drain and stop both threads.
+    pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.executor_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.do_shutdown();
+    }
+}
+
+/// Batcher thread: pull requests, group, flush on size or deadline.
+fn run_batcher(config: BatcherConfig, rx: Receiver<InFlight>, tx: Sender<Vec<InFlight>>) {
+    let mut batcher = Batcher::new(config);
+    loop {
+        let now = Instant::now();
+        let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(100));
+        match rx.recv_timeout(timeout) {
+            Ok(item) => {
+                let now = Instant::now();
+                if let Some(batch) = batcher.push(item, now) {
+                    if tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+                for batch in batcher.poll(now) {
+                    if tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                for batch in batcher.poll(Instant::now()) {
+                    if tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // drain remaining groups, then stop
+                for batch in batcher.drain() {
+                    if tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+                return;
+            }
+        }
+    }
+}

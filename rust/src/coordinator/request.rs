@@ -1,0 +1,162 @@
+//! Request/response types and the caching-policy vocabulary.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::Cond;
+use crate::pipeline::GenStats;
+use crate::solvers::SolverKind;
+use crate::tensor::Tensor;
+
+/// Caching policy a request selects (resolved to a concrete
+/// [`crate::cache::Schedule`] by the executor; SmoothCache policies
+/// trigger a one-time calibration per (family, solver, steps)).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    NoCache,
+    Fora(usize),
+    Alternate,
+    /// the paper's method, α threshold (grouped decisions).
+    Smooth(f64),
+    /// grouping ablation: per-site decisions at α.
+    SmoothPerSite(f64),
+    /// δ-DiT-style depth-aware baseline (refresh interval n).
+    DeltaDit(usize),
+}
+
+impl Policy {
+    /// Parse the wire format: `no-cache`, `fora:2`, `alternate`,
+    /// `smooth:0.18`, `smooth-persite:0.18`.
+    pub fn parse(s: &str) -> Result<Policy> {
+        if s == "no-cache" {
+            return Ok(Policy::NoCache);
+        }
+        if s == "alternate" {
+            return Ok(Policy::Alternate);
+        }
+        if let Some(n) = s.strip_prefix("fora:") {
+            return Ok(Policy::Fora(n.parse().map_err(|_| anyhow!("bad fora n: {n}"))?));
+        }
+        if let Some(a) = s.strip_prefix("smooth-persite:") {
+            return Ok(Policy::SmoothPerSite(
+                a.parse().map_err(|_| anyhow!("bad alpha: {a}"))?,
+            ));
+        }
+        if let Some(a) = s.strip_prefix("smooth:") {
+            return Ok(Policy::Smooth(a.parse().map_err(|_| anyhow!("bad alpha: {a}"))?));
+        }
+        if let Some(n) = s.strip_prefix("delta-dit:") {
+            return Ok(Policy::DeltaDit(n.parse().map_err(|_| anyhow!("bad delta-dit n: {n}"))?));
+        }
+        Err(anyhow!("unknown policy {s:?}"))
+    }
+
+    pub fn wire(&self) -> String {
+        match self {
+            Policy::NoCache => "no-cache".into(),
+            Policy::Fora(n) => format!("fora:{n}"),
+            Policy::Alternate => "alternate".into(),
+            Policy::Smooth(a) => format!("smooth:{a}"),
+            Policy::SmoothPerSite(a) => format!("smooth-persite:{a}"),
+            Policy::DeltaDit(n) => format!("delta-dit:{n}"),
+        }
+    }
+}
+
+/// One generation request (single sample; the batcher groups them).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub family: String,
+    pub cond: Cond,
+    pub solver: SolverKind,
+    pub steps: usize,
+    pub cfg_scale: f32,
+    pub seed: u64,
+    pub policy: Policy,
+}
+
+impl Request {
+    /// Compatibility key: requests sharing a key can run in one batch.
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey {
+            family: self.family.clone(),
+            solver: self.solver,
+            steps: self.steps,
+            cfg_milli: (self.cfg_scale * 1000.0).round() as u32,
+            policy: self.policy.wire(),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub family: String,
+    pub solver: SolverKind,
+    pub steps: usize,
+    pub cfg_milli: u32,
+    pub policy: String,
+}
+
+/// Completed generation for one request.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    /// `[1, …latent]`
+    pub latent: Tensor,
+    pub batch_size: usize,
+    pub queue_seconds: f64,
+    pub exec_seconds: f64,
+    pub total_seconds: f64,
+    pub gen_stats: GenStats,
+}
+
+/// A request travelling through the coordinator with its reply channel.
+pub struct InFlight {
+    pub request: Request,
+    pub submitted: Instant,
+    pub reply: std::sync::mpsc::Sender<Result<Response>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_wire_roundtrip() {
+        for p in [
+            Policy::NoCache,
+            Policy::Fora(3),
+            Policy::Alternate,
+            Policy::Smooth(0.18),
+            Policy::SmoothPerSite(0.05),
+            Policy::DeltaDit(3),
+        ] {
+            assert_eq!(Policy::parse(&p.wire()).unwrap(), p);
+        }
+        assert!(Policy::parse("bogus").is_err());
+        assert!(Policy::parse("fora:x").is_err());
+    }
+
+    #[test]
+    fn batch_key_groups_compatible_requests() {
+        let mk = |seed: u64, label: i32| Request {
+            id: seed,
+            family: "image".into(),
+            cond: Cond::Label(vec![label]),
+            solver: SolverKind::Ddim,
+            steps: 50,
+            cfg_scale: 1.5,
+            seed,
+            policy: Policy::Smooth(0.18),
+        };
+        assert_eq!(mk(1, 3).batch_key(), mk(2, 7).batch_key());
+        let mut other = mk(3, 1);
+        other.steps = 30;
+        assert_ne!(mk(1, 3).batch_key(), other.batch_key());
+        let mut pol = mk(4, 1);
+        pol.policy = Policy::NoCache;
+        assert_ne!(mk(1, 3).batch_key(), pol.batch_key());
+    }
+}

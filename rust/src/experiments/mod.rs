@@ -1,0 +1,308 @@
+//! Shared experiment drivers for the benches and examples: synthetic
+//! reference corpora (the FID-reference "datasets"), conditioning
+//! samplers, batched evaluation-set generation, and table-row metric
+//! bundles. Every table/figure bench builds on this module so all rows
+//! are computed identically.
+
+use anyhow::Result;
+
+use crate::cache::sample_cond;
+use crate::model::{Cond, Engine, FamilyManifest};
+use crate::pipeline::{generate, CacheMode, GenConfig, GenStats};
+use crate::solvers::SolverKind;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Reference corpora (DESIGN.md §3 dataset substitutions)
+// ---------------------------------------------------------------------------
+
+/// The image family's training corpus (port of python/compile/data.py):
+/// 10-class Gaussian-blob latents. Used as the FID-reference set.
+pub fn image_corpus(n: usize, seed: u64) -> (Tensor, Vec<i32>) {
+    let (h, w) = (16usize, 16usize);
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * h * w * 4);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = rng.below(10) as i32;
+        labels.push(k);
+        let ang = 2.0 * std::f64::consts::PI * k as f64 / 10.0;
+        let cx = w as f64 / 2.0 + 5.0 * ang.cos() + rng.normal() * 0.4;
+        let cy = h as f64 / 2.0 + 5.0 * ang.sin() + rng.normal() * 0.4;
+        let amp = rng.range_f64(0.8, 1.2);
+        let ring_r = 2.0 + 0.4 * k as f64;
+        for yy in 0..h {
+            for xx in 0..w {
+                let r2 = (xx as f64 - cx).powi(2) + (yy as f64 - cy).powi(2);
+                let blob = amp * (-r2 / (2.0 * 1.5 * 1.5)).exp();
+                let ring = amp * (-((r2.sqrt() - ring_r).powi(2)) / (2.0 * 0.8 * 0.8)).exp();
+                data.push((2.0 * blob - 1.0) as f32);
+                data.push(((xx as f64 - cx) / w as f64 * blob * 4.0) as f32);
+                data.push(((yy as f64 - cy) / h as f64 * blob * 4.0) as f32);
+                data.push((2.0 * ring - 1.0) as f32);
+            }
+        }
+    }
+    (Tensor::new(vec![n, h, w, 4], data), labels)
+}
+
+/// Synthetic audio-latent corpus: harmonic envelopes over 64 frames × 8
+/// channels (stands in for the AudioCaps/MusicCaps evaluation sets).
+pub fn audio_corpus(n: usize, seed: u64) -> Tensor {
+    let (t, c) = (64usize, 8usize);
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * t * c);
+    for _ in 0..n {
+        let f0 = rng.range_f64(0.05, 0.4);
+        let decay = rng.range_f64(0.01, 0.05);
+        let phase = rng.range_f64(0.0, std::f64::consts::TAU);
+        for ti in 0..t {
+            let env = (-(ti as f64) * decay).exp();
+            for ci in 0..c {
+                let harm = (ci + 1) as f64;
+                let v = env * (f0 * harm * ti as f64 * std::f64::consts::TAU + phase).sin()
+                    / harm.sqrt();
+                data.push(v as f32);
+            }
+        }
+    }
+    Tensor::new(vec![n, t, c], data)
+}
+
+/// Synthetic video-latent corpus: a blob translating across frames
+/// (stands in for the VBench reference distribution).
+pub fn video_corpus(n: usize, seed: u64) -> Tensor {
+    let (f, h, w, c) = (4usize, 8usize, 8usize, 4usize);
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * f * h * w * c);
+    for _ in 0..n {
+        let x0 = rng.range_f64(1.0, 6.0);
+        let y0 = rng.range_f64(1.0, 6.0);
+        let vx = rng.range_f64(-1.0, 1.0);
+        let vy = rng.range_f64(-1.0, 1.0);
+        for fi in 0..f {
+            let cx = x0 + vx * fi as f64;
+            let cy = y0 + vy * fi as f64;
+            for yy in 0..h {
+                for xx in 0..w {
+                    let r2 = (xx as f64 - cx).powi(2) + (yy as f64 - cy).powi(2);
+                    let blob = (-r2 / 3.0).exp();
+                    for ci in 0..c {
+                        data.push((blob * (1.0 + ci as f64 * 0.2) - 0.5) as f32);
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, f, h, w, c], data)
+}
+
+pub fn corpus_for(family: &str, n: usize, seed: u64) -> Tensor {
+    match family {
+        "image" => image_corpus(n, seed).0,
+        "audio" => audio_corpus(n, seed),
+        "video" => video_corpus(n, seed),
+        other => panic!("unknown family {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation-set generation
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub family: String,
+    pub solver: SolverKind,
+    pub steps: usize,
+    pub cfg_scale: f32,
+    pub n_samples: usize,
+    pub batch: usize,
+    pub base_seed: u64,
+}
+
+impl EvalConfig {
+    pub fn new(family: &str, solver: SolverKind, steps: usize) -> EvalConfig {
+        EvalConfig {
+            family: family.into(),
+            solver,
+            steps,
+            cfg_scale: 1.0,
+            n_samples: 32,
+            batch: 4,
+            base_seed: 1234,
+        }
+    }
+}
+
+/// Fixed per-index conditionings so every schedule sees identical
+/// trajectories (paired comparisons, as the paper's LPIPS/PSNR need).
+pub fn eval_conds(fm: &FamilyManifest, n: usize, seed: u64) -> Vec<Cond> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| sample_cond(&mut rng, fm.num_classes, fm.vocab, fm.cond_len, false))
+        .collect()
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalStats {
+    pub wall_seconds: f64,
+    pub per_sample_seconds: f64,
+    pub gen: GenStats,
+}
+
+/// Generate `cfg.n_samples` samples under one caching mode, batching at
+/// `cfg.batch`. Returns the stacked sample set and aggregate stats.
+pub fn generate_set(
+    engine: &Engine,
+    cfg: &EvalConfig,
+    conds: &[Cond],
+    mode: &CacheMode,
+) -> Result<(Tensor, EvalStats)> {
+    assert_eq!(conds.len(), cfg.n_samples);
+    let fm = engine.family_manifest(&cfg.family)?.clone();
+    let mut outputs: Vec<Tensor> = Vec::with_capacity(cfg.n_samples);
+    let mut stats = EvalStats::default();
+    let t0 = std::time::Instant::now();
+    let mut i = 0;
+    while i < cfg.n_samples {
+        let b = cfg.batch.min(cfg.n_samples - i);
+        let mut cond = conds[i].clone();
+        for c in &conds[i + 1..i + b] {
+            cond = cond.cat(c);
+        }
+        // pad the tail batch up to cfg.batch so one executable serves all
+        let cond = cond.pad_to(cfg.batch, fm.cond_len);
+        let gen_cfg = GenConfig::new(&cfg.family, cfg.solver, cfg.steps)
+            .with_cfg(cfg.cfg_scale)
+            .with_seed(cfg.base_seed.wrapping_add(i as u64));
+        let out = generate(engine, &gen_cfg, &cond, mode, None)?;
+        for j in 0..b {
+            outputs.push(out.latent.sample(j));
+        }
+        stats.gen.branch_computes += out.stats.branch_computes;
+        stats.gen.branch_reuses += out.stats.branch_reuses;
+        stats.gen.steps = out.stats.steps;
+        i += b;
+    }
+    stats.wall_seconds = t0.elapsed().as_secs_f64();
+    stats.per_sample_seconds = stats.wall_seconds / cfg.n_samples as f64;
+    let refs: Vec<&Tensor> = outputs.iter().collect();
+    Ok((Tensor::cat0(&refs), stats))
+}
+
+/// Mean ± std formatting used in every table (the paper reports 5-trial
+/// mean ± std; we run fewer trials but keep the format).
+pub fn fmt_pm(mean: f64, std: f64, prec: usize) -> String {
+    format!("{mean:.prec$} ±{std:.prec$}")
+}
+
+/// Mean/std over a set of trial values.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let m = xs.iter().sum::<f64>() / n;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+    (m, v.sqrt())
+}
+
+/// Video helpers for the VBench-proxy: mean SSIM between consecutive
+/// frames (temporal consistency component).
+pub fn temporal_consistency(video_set: &Tensor) -> f64 {
+    // [n, F, H, W, C]
+    let n = video_set.dim0();
+    let f = video_set.shape[1];
+    let frame_len: usize = video_set.shape[2..].iter().product();
+    let mut total = 0.0;
+    let mut count = 0;
+    for i in 0..n {
+        let s = video_set.sample(i);
+        for fi in 0..f - 1 {
+            let a = Tensor::new(
+                vec![frame_len],
+                s.data[fi * frame_len..(fi + 1) * frame_len].to_vec(),
+            );
+            let b = Tensor::new(
+                vec![frame_len],
+                s.data[(fi + 1) * frame_len..(fi + 2) * frame_len].to_vec(),
+            );
+            total += crate::quality::ssim(&a, &b);
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+/// VBench-proxy (DESIGN.md §3): 100 · (0.5·temporal-consistency(normalised)
+/// + 0.5·prompt-adherence) where adherence is the CLAP-proxy against the
+/// no-cache generations.
+pub fn vbench_proxy(
+    fx: &crate::quality::FeatureExtractor,
+    reference_set: &Tensor,
+    test_set: &Tensor,
+) -> f64 {
+    let tc = 0.5 * (temporal_consistency(test_set) + 1.0); // [-1,1] → [0,1]
+    let adherence = 0.5 * (crate::quality::clap_proxy(fx, reference_set, test_set) + 1.0);
+    100.0 * (0.5 * tc + 0.5 * adherence)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpora_shapes_and_determinism() {
+        let (im, labels) = image_corpus(4, 1);
+        assert_eq!(im.shape, vec![4, 16, 16, 4]);
+        assert_eq!(labels.len(), 4);
+        assert_eq!(image_corpus(4, 1).0.data, im.data);
+        assert_eq!(audio_corpus(3, 2).shape, vec![3, 64, 8]);
+        assert_eq!(video_corpus(2, 3).shape, vec![2, 4, 8, 8, 4]);
+    }
+
+    #[test]
+    fn image_corpus_is_class_structured() {
+        // two samples of the same class are closer than different classes
+        let (set, labels) = image_corpus(64, 7);
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..16 {
+            for j in (i + 1)..16 {
+                let d = set.sample(i).sub(&set.sample(j)).l2();
+                if labels[i] == labels[j] {
+                    same.push(d);
+                } else {
+                    diff.push(d);
+                }
+            }
+        }
+        if !same.is_empty() && !diff.is_empty() {
+            let ms = same.iter().sum::<f64>() / same.len() as f64;
+            let md = diff.iter().sum::<f64>() / diff.len() as f64;
+            assert!(ms < md, "same-class {ms} vs diff-class {md}");
+        }
+    }
+
+    #[test]
+    fn temporal_consistency_of_static_video_is_high() {
+        // constant-across-frames video → consecutive-frame SSIM ≈ 1
+        let mut rng = Rng::new(5);
+        let frame = Tensor::randn(vec![1, 1, 8, 8, 4], &mut rng);
+        let mut data = Vec::new();
+        for _ in 0..4 {
+            data.extend_from_slice(&frame.data);
+        }
+        let vid = Tensor::new(vec![1, 4, 8, 8, 4], data);
+        assert!(temporal_consistency(&vid) > 0.99);
+        // random-per-frame video → much lower
+        let noise = Tensor::randn(vec![1, 4, 8, 8, 4], &mut rng);
+        assert!(temporal_consistency(&noise) < 0.5);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,40 @@
+//! SmoothCache — a Rust + JAX + Pallas reproduction of
+//! *SmoothCache: A Universal Inference Acceleration Technique for
+//! Diffusion Transformers* (2024).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`).
+//! * **L2** — JAX DiT model families, AOT-lowered to HLO text per
+//!   (family, branch, batch) — `python/compile/model.py` + `aot.py`.
+//! * **L3** — this crate: the serving coordinator. It loads the AOT
+//!   artifacts through PJRT ([`runtime`]), composes forward passes at the
+//!   caching granularity ([`model`]), runs the diffusion solvers
+//!   ([`solvers`]), and implements the paper's contribution — the
+//!   calibration-driven caching schedule ([`cache`]) — under a dynamic
+//!   batching serving loop ([`coordinator`], [`server`]).
+//!
+//! Python never runs on the request path.
+
+pub mod cache;
+pub mod coordinator;
+pub mod experiments;
+pub mod linalg;
+pub mod macs;
+pub mod model;
+pub mod pipeline;
+pub mod quality;
+pub mod runtime;
+pub mod server;
+pub mod solvers;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+/// Locate the artifacts directory: `$SMOOTHCACHE_ARTIFACTS` or
+/// `<repo>/artifacts` (relative to the crate root at build time).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SMOOTHCACHE_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,328 @@
+//! Dense symmetric linear algebra (substrate).
+//!
+//! Implements exactly what the Fréchet Feature Distance needs (DESIGN.md
+//! section 3: the FID substitution): covariance estimation, a cyclic
+//! Jacobi eigensolver for symmetric matrices, and the PSD matrix square
+//! root built on it. Row-major `d x d` matrices as `Vec<f64>`.
+
+/// Row-major square matrix helper.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub d: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(d: usize) -> Mat {
+        Mat { d, a: vec![0.0; d * d] }
+    }
+
+    pub fn eye(d: usize) -> Mat {
+        let mut m = Mat::zeros(d);
+        for i in 0..d {
+            m.a[i * d + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.d + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.d + j] = v;
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.d, other.d);
+        let d = self.d;
+        let mut out = Mat::zeros(d);
+        for i in 0..d {
+            for k in 0..d {
+                let aik = self.a[i * d + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..d {
+                    out.a[i * d + j] += aik * other.a[k * d + j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let d = self.d;
+        let mut out = Mat::zeros(d);
+        for i in 0..d {
+            for j in 0..d {
+                out.a[j * d + i] = self.a[i * d + j];
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.d).map(|i| self.a[i * self.d + i]).sum()
+    }
+
+    pub fn symmetrize(&mut self) {
+        let d = self.d;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                let v = 0.5 * (self.a[i * d + j] + self.a[j * d + i]);
+                self.a[i * d + j] = v;
+                self.a[j * d + i] = v;
+            }
+        }
+    }
+
+    pub fn max_offdiag_abs(&self) -> f64 {
+        let d = self.d;
+        let mut m = 0.0f64;
+        for i in 0..d {
+            for j in 0..d {
+                if i != j {
+                    m = m.max(self.a[i * d + j].abs());
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Sample mean of rows. `xs` is n rows of dimension d, row-major.
+pub fn mean_rows(xs: &[f64], n: usize, d: usize) -> Vec<f64> {
+    assert_eq!(xs.len(), n * d);
+    let mut mu = vec![0.0; d];
+    for r in 0..n {
+        for j in 0..d {
+            mu[j] += xs[r * d + j];
+        }
+    }
+    for v in &mut mu {
+        *v /= n as f64;
+    }
+    mu
+}
+
+/// Unbiased sample covariance of rows.
+pub fn covariance(xs: &[f64], n: usize, d: usize) -> Mat {
+    assert!(n >= 2, "covariance needs >= 2 samples");
+    let mu = mean_rows(xs, n, d);
+    let mut c = Mat::zeros(d);
+    for r in 0..n {
+        for i in 0..d {
+            let xi = xs[r * d + i] - mu[i];
+            for j in i..d {
+                c.a[i * d + j] += xi * (xs[r * d + j] - mu[j]);
+            }
+        }
+    }
+    let norm = 1.0 / (n - 1) as f64;
+    for i in 0..d {
+        for j in i..d {
+            let v = c.a[i * d + j] * norm;
+            c.a[i * d + j] = v;
+            c.a[j * d + i] = v;
+        }
+    }
+    c
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors as columns of V): A = V diag(w) V^T.
+pub fn jacobi_eigh(m: &Mat, max_sweeps: usize, tol: f64) -> (Vec<f64>, Mat) {
+    let d = m.d;
+    let mut a = m.clone();
+    a.symmetrize();
+    let mut v = Mat::eye(d);
+    for _sweep in 0..max_sweeps {
+        if a.max_offdiag_abs() < tol {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = a.get(p, q);
+                if apq.abs() < tol * 1e-3 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let aqq = a.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of a
+                for k in 0..d {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..d {
+                    let apk = a.get(p, k);
+                    let aqk = a.get(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+                // accumulate eigenvectors
+                for k in 0..d {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let w = (0..d).map(|i| a.get(i, i)).collect();
+    (w, v)
+}
+
+/// PSD matrix square root via eigendecomposition (negative eigenvalues,
+/// which arise from numerical noise, are clamped to zero).
+pub fn sqrtm_psd(m: &Mat) -> Mat {
+    let d = m.d;
+    let (w, v) = jacobi_eigh(m, 64, 1e-12);
+    let mut out = Mat::zeros(d);
+    // out = V diag(sqrt(max(w,0))) V^T
+    for k in 0..d {
+        let s = w[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..d {
+            let vik = v.get(i, k) * s;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                out.a[i * d + j] += vik * v.get(j, k);
+            }
+        }
+    }
+    out
+}
+
+/// Fréchet distance squared between Gaussians (mu1, C1), (mu2, C2):
+///   |mu1-mu2|^2 + tr(C1 + C2 - 2 (C1^{1/2} C2 C1^{1/2})^{1/2})
+pub fn frechet_distance_sq(mu1: &[f64], c1: &Mat, mu2: &[f64], c2: &Mat) -> f64 {
+    assert_eq!(mu1.len(), mu2.len());
+    let dmu: f64 = mu1.iter().zip(mu2).map(|(a, b)| (a - b) * (a - b)).sum();
+    let s1 = sqrtm_psd(c1);
+    let mut inner = s1.matmul(c2).matmul(&s1);
+    inner.symmetrize();
+    let covmean = sqrtm_psd(&inner);
+    let d2 = dmu + c1.trace() + c2.trace() - 2.0 * covmean.trace();
+    d2.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eigh_diagonal_matrix() {
+        let mut m = Mat::zeros(3);
+        m.set(0, 0, 3.0);
+        m.set(1, 1, 1.0);
+        m.set(2, 2, 2.0);
+        let (mut w, _) = jacobi_eigh(&m, 32, 1e-14);
+        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 2.0).abs() < 1e-12);
+        assert!((w[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let mut rng = Rng::new(1);
+        let d = 8;
+        // random symmetric matrix
+        let mut m = Mat::zeros(d);
+        for i in 0..d {
+            for j in i..d {
+                let v = rng.normal();
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let (w, v) = jacobi_eigh(&m, 64, 1e-14);
+        // rebuild V diag(w) V^T
+        let mut rec = Mat::zeros(d);
+        for k in 0..d {
+            for i in 0..d {
+                for j in 0..d {
+                    rec.a[i * d + j] += v.get(i, k) * w[k] * v.get(j, k);
+                }
+            }
+        }
+        for i in 0..d * d {
+            assert!((rec.a[i] - m.a[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let mut rng = Rng::new(2);
+        let d = 6;
+        // PSD: A^T A
+        let mut b = Mat::zeros(d);
+        for i in 0..d * d {
+            b.a[i] = rng.normal();
+        }
+        let psd = b.transpose().matmul(&b);
+        let s = sqrtm_psd(&psd);
+        let s2 = s.matmul(&s);
+        for i in 0..d * d {
+            assert!((s2.a[i] - psd.a[i]).abs() < 1e-8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn covariance_of_known_data() {
+        // two dims, perfectly correlated
+        let xs = vec![1.0, 2.0, 2.0, 4.0, 3.0, 6.0];
+        let c = covariance(&xs, 3, 2);
+        assert!((c.get(0, 0) - 1.0).abs() < 1e-12);
+        assert!((c.get(1, 1) - 4.0).abs() < 1e-12);
+        assert!((c.get(0, 1) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frechet_identical_is_zero() {
+        let mut rng = Rng::new(3);
+        let d = 4;
+        let n = 50;
+        let xs: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let mu = mean_rows(&xs, n, d);
+        let c = covariance(&xs, n, d);
+        let f = frechet_distance_sq(&mu, &c, &mu, &c);
+        assert!(f.abs() < 1e-6, "f={f}");
+    }
+
+    #[test]
+    fn frechet_increases_with_mean_shift() {
+        let d = 3;
+        let c = Mat::eye(d);
+        let mu0 = vec![0.0; d];
+        let f1 = frechet_distance_sq(&mu0, &c, &vec![1.0; d], &c);
+        let f2 = frechet_distance_sq(&mu0, &c, &vec![2.0; d], &c);
+        assert!((f1 - 3.0).abs() < 1e-9);
+        assert!(f2 > f1);
+    }
+
+    #[test]
+    fn frechet_detects_cov_difference() {
+        let d = 2;
+        let c1 = Mat::eye(d);
+        let mut c2 = Mat::eye(d);
+        c2.set(0, 0, 4.0);
+        let mu = vec![0.0; d];
+        // tr(1+4+... ) analytic: (2-2*... ) for diag: sum (1+4) - 2*sqrt(4)=5-4=1 plus dim2: 1+1-2=0
+        let f = frechet_distance_sq(&mu, &c1, &mu, &c2);
+        assert!((f - 1.0).abs() < 1e-9, "f={f}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Analytic MAC accounting (paper's TMACs columns + Fig. 5).
+//!
+//! Counts multiply-accumulates of every matmul in the exported HLO
+//! programs from the family geometry, so the TMACs columns of Tables
+//! 1–3 and the compute-composition pie of Fig. 5 are reproduced without
+//! instrumentation. A caching schedule scales each branch type's count
+//! by its compute fraction.
+
+use crate::cache::Schedule;
+use crate::model::FamilyManifest;
+
+/// MACs of one branch evaluation for a single sample (batch 1).
+pub fn branch_macs(fm: &FamilyManifest, branch: &str) -> u64 {
+    let d = fm.hidden as u64;
+    let s = fm.seq_len as u64;
+    let sc = fm.cond_len as u64;
+    let f = (fm.hidden * fm.mlp_ratio) as u64;
+    let modulation = d * 3 * d; // silu(c) @ mod_w
+    if branch.ends_with("xattn") {
+        // q proj + kv proj + scores + attn·V + out proj
+        modulation + s * d * d + sc * d * 2 * d + 2 * s * sc * d + s * d * d
+    } else if branch.ends_with("attn") {
+        // attention span: full sequence for plain attn; within-frame for
+        // spatial (s_*), across-frame for temporal (t_*)
+        let span = if branch.starts_with("s_") {
+            fm.spatial_tokens as u64
+        } else if branch.starts_with("t_") {
+            fm.frames as u64
+        } else {
+            s
+        };
+        modulation + s * d * 3 * d + 2 * s * span * d + s * d * d
+    } else {
+        // ffn: two GEMMs through the hidden width
+        modulation + 2 * s * d * f
+    }
+}
+
+/// MACs of the embed entry (patchify + timestep MLP), batch 1.
+pub fn embed_macs(fm: &FamilyManifest) -> u64 {
+    let d = fm.hidden as u64;
+    let s = fm.seq_len as u64;
+    let pd: u64 = (fm.latent_size() / fm.seq_len) as u64; // patch dim
+    s * pd * d + (fm.t_freq_dim as u64) * d + d * d
+}
+
+/// MACs of the final head, batch 1.
+pub fn final_macs(fm: &FamilyManifest) -> u64 {
+    let d = fm.hidden as u64;
+    let s = fm.seq_len as u64;
+    let pd: u64 = (fm.latent_size() / fm.seq_len) as u64;
+    d * 2 * d + s * d * pd
+}
+
+/// MACs of one full forward pass (all branches computed), batch 1.
+pub fn forward_macs(fm: &FamilyManifest) -> u64 {
+    let branches: u64 = fm
+        .branch_types
+        .iter()
+        .map(|b| branch_macs(fm, b) * fm.depth as u64)
+        .sum();
+    embed_macs(fm) + branches + final_macs(fm)
+}
+
+/// Fraction of forward MACs that live in cacheable branches (Fig. 5's
+/// ">90% of compute" observation).
+pub fn cacheable_fraction(fm: &FamilyManifest) -> f64 {
+    let total = forward_macs(fm) as f64;
+    let cacheable =
+        total - embed_macs(fm) as f64 - final_macs(fm) as f64;
+    cacheable / total
+}
+
+/// Per-branch-type share of one forward pass (Fig. 5 composition).
+pub fn composition(fm: &FamilyManifest) -> Vec<(String, f64)> {
+    let total = forward_macs(fm) as f64;
+    let mut out: Vec<(String, f64)> = fm
+        .branch_types
+        .iter()
+        .map(|b| {
+            (b.clone(), (branch_macs(fm, b) * fm.depth as u64) as f64 / total)
+        })
+        .collect();
+    out.push(("embed+final".into(), (embed_macs(fm) + final_macs(fm)) as f64 / total));
+    out
+}
+
+/// Total MACs for a full generation under a schedule, per sample.
+/// `cfg` doubles every model evaluation (conditional + null batch).
+pub fn generation_macs(fm: &FamilyManifest, schedule: &Schedule, cfg: bool) -> u64 {
+    let per_step_fixed = embed_macs(fm) + final_macs(fm);
+    let mut total = per_step_fixed * schedule.steps as u64;
+    for (bt, computes) in schedule.branch_types.iter().zip(schedule.computes_per_type()) {
+        total += branch_macs(fm, bt) * fm.depth as u64 * computes as u64;
+    }
+    if cfg {
+        total *= 2;
+    }
+    total
+}
+
+/// Human-scale units used in the paper's tables.
+pub fn as_gmacs(macs: u64) -> f64 {
+    macs as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn image_fm() -> FamilyManifest {
+        // minimal manifest mirroring the image family geometry
+        let text = r#"{
+          "version": 1, "impl": "pallas", "batch_sizes": [1],
+          "families": {"image": {
+            "hidden": 128, "heads": 4, "depth": 6, "mlp_ratio": 4,
+            "seq_len": 64, "latent_shape": [16, 16, 4],
+            "branch_types": ["attn", "ffn"],
+            "cond_len": 0, "num_classes": 10, "vocab": 0,
+            "frames": 0, "spatial_tokens": 0, "patch": 2, "t_freq_dim": 64,
+            "weights_file": "w.bin", "impl": "pallas", "entries": {}
+          }}}"#;
+        Manifest::parse_str(text).unwrap().family("image").unwrap().clone()
+    }
+
+    fn video_fm() -> FamilyManifest {
+        let text = r#"{
+          "version": 1, "impl": "pallas", "batch_sizes": [1],
+          "families": {"video": {
+            "hidden": 128, "heads": 4, "depth": 4, "mlp_ratio": 4,
+            "seq_len": 64, "latent_shape": [4, 8, 8, 4],
+            "branch_types": ["s_attn", "s_xattn", "s_ffn", "t_attn", "t_xattn", "t_ffn"],
+            "cond_len": 8, "num_classes": 0, "vocab": 256,
+            "frames": 4, "spatial_tokens": 16, "patch": 2, "t_freq_dim": 64,
+            "weights_file": "w.bin", "impl": "pallas", "entries": {}
+          }}}"#;
+        Manifest::parse_str(text).unwrap().family("video").unwrap().clone()
+    }
+
+    #[test]
+    fn attn_macs_formula() {
+        let fm = image_fm();
+        let d = 128u64;
+        let s = 64u64;
+        let want = d * 3 * d + s * d * 3 * d + 2 * s * s * d + s * d * d;
+        assert_eq!(branch_macs(&fm, "attn"), want);
+    }
+
+    #[test]
+    fn ffn_macs_formula() {
+        let fm = image_fm();
+        let want = 128 * 3 * 128 + 2 * 64 * 128 * 512;
+        assert_eq!(branch_macs(&fm, "ffn"), want);
+    }
+
+    #[test]
+    fn spatial_attention_cheaper_than_full() {
+        let fm = video_fm();
+        assert!(branch_macs(&fm, "s_attn") < {
+            // full-span attention at the same geometry
+            let d = 128u64;
+            let s = 64u64;
+            d * 3 * d + s * d * 3 * d + 2 * s * s * d + s * d * d
+        });
+        assert!(branch_macs(&fm, "t_attn") < branch_macs(&fm, "s_attn"));
+    }
+
+    #[test]
+    fn cacheable_fraction_dominates() {
+        // paper Fig. 5: cacheable layers are ≥ 90% of compute
+        assert!(cacheable_fraction(&image_fm()) > 0.9);
+        assert!(cacheable_fraction(&video_fm()) > 0.9);
+    }
+
+    #[test]
+    fn composition_sums_to_one() {
+        for fm in [image_fm(), video_fm()] {
+            let total: f64 = composition(&fm).iter().map(|(_, f)| f).sum();
+            assert!((total - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn schedule_scales_generation_macs() {
+        let fm = image_fm();
+        let bts = fm.branch_types.clone();
+        let full = generation_macs(&fm, &Schedule::no_cache(50, &bts), false);
+        let half = generation_macs(&fm, &Schedule::fora(50, &bts, 2), false);
+        assert!(half < full);
+        // fora n=2 halves branch MACs but not embed/final
+        let branch_full = full - 50 * (embed_macs(&fm) + final_macs(&fm));
+        let branch_half = half - 50 * (embed_macs(&fm) + final_macs(&fm));
+        assert_eq!(branch_half, branch_full / 2);
+    }
+
+    #[test]
+    fn cfg_doubles() {
+        let fm = image_fm();
+        let bts = fm.branch_types.clone();
+        let s = Schedule::no_cache(10, &bts);
+        assert_eq!(generation_macs(&fm, &s, true), 2 * generation_macs(&fm, &s, false));
+    }
+}

@@ -1,0 +1,262 @@
+//! `smoothcache` — the serving launcher.
+//!
+//! Subcommands:
+//!   serve      start the TCP serving stack (coordinator + server)
+//!   generate   one-off generation from the CLI
+//!   calibrate  run a calibration pass, save curves JSON
+//!   schedule   print the schedule a policy resolves to
+//!   info       artifact/manifest inventory
+//!
+//! Run `smoothcache <subcommand> --help` for flags.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use smoothcache::cache::{calibrate, CalibrationConfig};
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
+use smoothcache::model::{Cond, Engine, Manifest};
+use smoothcache::server::Server;
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::cli::CliSpec;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("");
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    let result = match cmd {
+        "serve" => cmd_serve(&rest),
+        "generate" => cmd_generate(&rest),
+        "calibrate" => cmd_calibrate(&rest),
+        "schedule" => cmd_schedule(&rest),
+        "info" => cmd_info(&rest),
+        _ => {
+            eprintln!(
+                "smoothcache — SmoothCache serving stack\n\n\
+                 usage: smoothcache <serve|generate|calibrate|schedule|info> [flags]\n\
+                 examples:\n  \
+                 smoothcache serve --addr 127.0.0.1:7878 --preload image\n  \
+                 smoothcache generate --family image --label 3 --policy smooth:0.35\n  \
+                 smoothcache calibrate --family audio --solver dpmpp3m-sde --steps 100\n  \
+                 smoothcache schedule --family image --steps 50 --policy fora:2\n  \
+                 smoothcache info"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_or_usage(spec: CliSpec, argv: &[String]) -> Result<Option<smoothcache::util::cli::ParsedArgs>> {
+    match spec.parse(argv) {
+        Ok(a) => Ok(Some(a)),
+        Err(usage) => {
+            eprintln!("{usage}");
+            Ok(None)
+        }
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let spec = CliSpec::new("smoothcache serve", "start the serving stack")
+        .flag("addr", "127.0.0.1:7878", "listen address")
+        .flag("preload", "image", "families to preload (comma list)")
+        .flag("max-wait-ms", "20", "batcher flush deadline")
+        .flag("calib-samples", "6", "calibration samples for smooth policies")
+        .flag("curves-dir", "", "directory of pre-computed calibration curves")
+        .flag("workers", "4", "connection handler threads");
+    let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
+
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = args.list("preload");
+    cfg.max_wait = Duration::from_millis(args.u64("max-wait-ms").map_err(anyhow::Error::msg)?);
+    cfg.calib_samples = args.usize("calib-samples").map_err(anyhow::Error::msg)?;
+    if !args.str("curves-dir").is_empty() {
+        cfg.curves_dir = Some(args.string("curves-dir").into());
+    }
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    let server = Server::start(
+        args.str("addr"),
+        Arc::clone(&coord),
+        args.usize("workers").map_err(anyhow::Error::msg)?,
+    )?;
+    println!("smoothcache serving on {}", server.addr);
+    println!("protocol: one JSON object per line; try {{\"cmd\": \"ping\"}}");
+    // serve until killed
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let spec = CliSpec::new("smoothcache generate", "one-off generation")
+        .flag("family", "image", "model family")
+        .flag("label", "0", "class label (image family)")
+        .flag("prompt-ids", "", "comma-separated prompt token ids (audio/video)")
+        .flag("solver", "ddim", "solver")
+        .flag("steps", "50", "sampling steps")
+        .flag("cfg", "1.0", "CFG scale")
+        .flag("seed", "0", "random seed")
+        .flag("policy", "no-cache", "caching policy (no-cache|fora:N|alternate|smooth:A)")
+        .flag("calib-samples", "6", "calibration samples for smooth policies")
+        .flag("out", "", "write latent to this path (JSON)");
+    let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
+
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = vec![args.string("family")];
+    cfg.calib_samples = args.usize("calib-samples").map_err(anyhow::Error::msg)?;
+    let coord = Coordinator::start(cfg)?;
+
+    let cond = if args.str("prompt-ids").is_empty() {
+        Cond::Label(vec![args.usize("label").map_err(anyhow::Error::msg)? as i32])
+    } else {
+        Cond::Prompt(
+            args.usize_list("prompt-ids")
+                .map_err(anyhow::Error::msg)?
+                .into_iter()
+                .map(|v| v as i32)
+                .collect(),
+        )
+    };
+    let request = Request {
+        id: 0,
+        family: args.string("family"),
+        cond,
+        solver: SolverKind::parse(args.str("solver")).ok_or_else(|| anyhow!("bad solver"))?,
+        steps: args.usize("steps").map_err(anyhow::Error::msg)?,
+        cfg_scale: args.f64("cfg").map_err(anyhow::Error::msg)? as f32,
+        seed: args.u64("seed").map_err(anyhow::Error::msg)?,
+        policy: Policy::parse(args.str("policy"))?,
+    };
+    let resp = coord.generate_blocking(request)?;
+    println!(
+        "generated {:?} in {:.3}s (exec {:.3}s, batch {}, skips {:.0}%)",
+        resp.latent.shape,
+        resp.total_seconds,
+        resp.exec_seconds,
+        resp.batch_size,
+        resp.gen_stats.skip_fraction() * 100.0
+    );
+    if !args.str("out").is_empty() {
+        let j = smoothcache::util::json::Json::obj()
+            .set(
+                "shape",
+                resp.latent.shape.iter().map(|&d| d as f64).collect::<Vec<_>>(),
+            )
+            .set(
+                "data",
+                resp.latent.data.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            );
+        std::fs::write(args.str("out"), j.to_string())?;
+        println!("latent written to {}", args.str("out"));
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_calibrate(argv: &[String]) -> Result<()> {
+    let spec = CliSpec::new("smoothcache calibrate", "run a calibration pass")
+        .flag("family", "image", "model family")
+        .flag("solver", "ddim", "solver")
+        .flag("steps", "50", "sampling steps")
+        .flag("samples", "10", "calibration samples")
+        .flag("k-max", "3", "maximum reuse gap")
+        .flag("cfg", "1.0", "CFG scale during calibration")
+        .flag("out", "artifacts/calibration", "output directory");
+    let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
+
+    let family = args.string("family");
+    let mut engine = Engine::open(smoothcache::artifacts_dir())?;
+    engine.load_family(&family)?;
+    let solver = SolverKind::parse(args.str("solver")).ok_or_else(|| anyhow!("bad solver"))?;
+    let cc = CalibrationConfig {
+        solver,
+        steps: args.usize("steps").map_err(anyhow::Error::msg)?,
+        k_max: args.usize("k-max").map_err(anyhow::Error::msg)?,
+        num_samples: args.usize("samples").map_err(anyhow::Error::msg)?,
+        cfg_scale: args.f64("cfg").map_err(anyhow::Error::msg)? as f32,
+        seed: 7,
+    };
+    let t0 = std::time::Instant::now();
+    let curves = calibrate(&engine, &family, &cc)?;
+    let out = args.string("out");
+    std::fs::create_dir_all(&out)?;
+    let path = format!("{out}/{family}_{}_{}.json", solver.name(), cc.steps);
+    std::fs::write(&path, curves.to_json().to_string())?;
+    println!(
+        "calibrated {} samples in {:.1}s → {path}",
+        cc.num_samples,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_schedule(argv: &[String]) -> Result<()> {
+    let spec = CliSpec::new("smoothcache schedule", "print a resolved schedule")
+        .flag("family", "image", "model family")
+        .flag("solver", "ddim", "solver")
+        .flag("steps", "50", "sampling steps")
+        .flag("policy", "smooth:0.35", "caching policy")
+        .flag("calib-samples", "6", "calibration samples if needed");
+    let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
+
+    let family = args.string("family");
+    let mut engine = Engine::open(smoothcache::artifacts_dir())?;
+    engine.load_family(&family)?;
+    let solver = SolverKind::parse(args.str("solver")).ok_or_else(|| anyhow!("bad solver"))?;
+    let steps = args.usize("steps").map_err(anyhow::Error::msg)?;
+    let policy = Policy::parse(args.str("policy"))?;
+    let mut store = smoothcache::coordinator::ScheduleStore::new(
+        args.usize("calib-samples").map_err(anyhow::Error::msg)?,
+        7,
+        None,
+    );
+    match store.resolve(&engine, None, &family, solver, steps, &policy)? {
+        smoothcache::coordinator::executor::ResolvedPolicy::None => {
+            println!("no-cache: every branch computes at every step");
+        }
+        smoothcache::coordinator::executor::ResolvedPolicy::Grouped(s) => {
+            println!(
+                "{} — skip {:.0}%, max gap {}",
+                s.name,
+                s.skip_fraction() * 100.0,
+                s.max_gap()
+            );
+            print!("{}", s.ascii());
+        }
+        smoothcache::coordinator::executor::ResolvedPolicy::PerSite(m) => {
+            println!("per-site schedule over {} sites:", m.len());
+            for (site, ds) in m {
+                let line: String =
+                    ds.iter().map(|d| if d.is_compute() { '#' } else { '.' }).collect();
+                println!("{site:>12} {line}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(_argv: &[String]) -> Result<()> {
+    let dir = smoothcache::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts dir : {dir:?}");
+    println!("kernel impl   : {}", manifest.impl_name);
+    println!("batch sizes   : {:?}", manifest.batch_sizes);
+    for (name, fm) in &manifest.families {
+        println!(
+            "\nfamily {name}: hidden={} heads={} depth={} seq={} latent={:?}",
+            fm.hidden, fm.heads, fm.depth, fm.seq_len, fm.latent_shape
+        );
+        println!("  branch types: {:?}", fm.branch_types);
+        println!("  entries: {}", fm.entries.len());
+        println!(
+            "  forward GMACs: {:.4} (cacheable {:.1}%)",
+            smoothcache::macs::as_gmacs(smoothcache::macs::forward_macs(fm)),
+            smoothcache::macs::cacheable_fraction(fm) * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,288 @@
+//! Forward composition engine: executes a DiT forward pass from
+//! per-branch AOT executables, with residual adds on the host.
+//!
+//! This is the piece that makes SmoothCache *real* in this stack: the
+//! denoising pipeline asks for one branch delta at a time
+//! (`x <- x + delta`), so replacing a branch execution with a cached
+//! tensor skips an actual PJRT execution (paper Fig. 3).
+//!
+//! The engine owns the PJRT runtime (not `Send`); the coordinator talks
+//! to it from a single executor thread.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::{FamilyManifest, Manifest};
+use super::weights::WeightStore;
+use super::Cond;
+use crate::runtime::{HostValue, Registry, Runtime};
+use crate::tensor::Tensor;
+
+/// Output of the embed entry for one (batch, t) invocation.
+pub struct EmbedOut {
+    pub tokens: Tensor,
+    pub c: Tensor,
+    pub cond: Option<Tensor>,
+}
+
+/// Device-resident per-step conditioning (c uploaded once per step, not
+/// once per branch — the branch hot path uploads only the tokens).
+pub struct StepCtx {
+    pub batch: usize,
+    c_buf: xla::PjRtBuffer,
+    cond_buf: Option<xla::PjRtBuffer>,
+}
+
+struct LoadedFamily {
+    manifest: FamilyManifest,
+    #[allow(dead_code)]
+    weights: WeightStore,
+    /// resolved tensor name → device buffer (uploaded once at load).
+    device_weights: HashMap<String, xla::PjRtBuffer>,
+    total_params: usize,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub registry: Registry,
+    pub manifest: Manifest,
+    families: HashMap<String, LoadedFamily>,
+}
+
+impl Engine {
+    /// Open the artifacts directory and parse the manifest. Families are
+    /// loaded on demand (`load_family`) or lazily on first use.
+    pub fn open(dir: std::path::PathBuf) -> Result<Engine> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(&dir)?;
+        Ok(Engine {
+            rt,
+            registry: Registry::new(dir),
+            manifest,
+            families: HashMap::new(),
+        })
+    }
+
+    pub fn family_manifest(&self, family: &str) -> Result<&FamilyManifest> {
+        self.manifest.family(family)
+    }
+
+    pub fn is_loaded(&self, family: &str) -> bool {
+        self.families.contains_key(family)
+    }
+
+    pub fn total_params(&self, family: &str) -> Option<usize> {
+        self.families.get(family).map(|f| f.total_params)
+    }
+
+    /// Load a family: read weights.bin and upload every tensor to the
+    /// device once. Executables compile lazily per (entry, batch).
+    pub fn load_family(&mut self, family: &str) -> Result<()> {
+        if self.families.contains_key(family) {
+            return Ok(());
+        }
+        let fm = self.manifest.family(family)?.clone();
+        let weights = WeightStore::load(&self.registry.dir.join(&fm.weights_file))?;
+        let mut device_weights = HashMap::new();
+        for name in weights.names() {
+            let t = weights.get(name)?;
+            device_weights.insert(name.clone(), self.rt.upload(&HostValue::F32(t.clone()))?);
+        }
+        let total_params = weights.total_params();
+        self.families.insert(
+            family.to_string(),
+            LoadedFamily { manifest: fm, weights, device_weights, total_params },
+        );
+        Ok(())
+    }
+
+    /// Pre-compile every executable for the given batch size (avoids
+    /// first-request compile latency; used by the server warmup).
+    pub fn warmup(&mut self, family: &str, batch: usize) -> Result<()> {
+        self.load_family(family)?;
+        let fm = self.families[family].manifest.clone();
+        for (ename, entry) in &fm.entries {
+            let file = entry
+                .artifacts
+                .get(&batch)
+                .ok_or_else(|| anyhow!("{family}/{ename}: no batch-{batch} artifact"))?;
+            self.registry.get(&self.rt, file, outputs_of(&fm, ename))?;
+        }
+        Ok(())
+    }
+
+    fn loaded(&self, family: &str) -> Result<&LoadedFamily> {
+        self.families
+            .get(family)
+            .ok_or_else(|| anyhow!("family {family:?} not loaded — call load_family"))
+    }
+
+    fn weight_buffers<'a>(
+        &'a self,
+        lf: &'a LoadedFamily,
+        templates: &[String],
+        block: usize,
+    ) -> Result<Vec<&'a xla::PjRtBuffer>> {
+        templates
+            .iter()
+            .map(|tpl| {
+                let name = tpl.replace("{i}", &block.to_string());
+                lf.device_weights
+                    .get(&name)
+                    .ok_or_else(|| anyhow!("device weight {name:?} missing"))
+            })
+            .collect()
+    }
+
+    fn exec_entry(
+        &self,
+        family: &str,
+        entry_name: &str,
+        batch: usize,
+        host_args: &[HostValue],
+        extra_device: &[&xla::PjRtBuffer],
+        block: usize,
+    ) -> Result<Vec<Tensor>> {
+        let lf = self.loaded(family)?;
+        let entry = lf.manifest.entry(entry_name)?;
+        let file = entry.artifacts.get(&batch).ok_or_else(|| {
+            anyhow!(
+                "{family}/{entry_name}: unsupported batch {batch} (have {:?})",
+                entry.artifacts.keys().collect::<Vec<_>>()
+            )
+        })?;
+        let exe = self
+            .registry
+            .get(&self.rt, file, outputs_of(&lf.manifest, entry_name))?;
+        let wbufs = self.weight_buffers(lf, &entry.weights, block)?;
+        let uploaded: Vec<xla::PjRtBuffer> =
+            host_args.iter().map(|v| self.rt.upload(v)).collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> = uploaded.iter().collect();
+        args.extend_from_slice(extra_device);
+        args.extend(wbufs);
+        self.rt.execute(&exe, &args)
+    }
+
+    /// Run the embed entry: latent + t + conditioning → (tokens, c, cond).
+    pub fn embed(&self, family: &str, x: &Tensor, t: &[f32], cond: &Cond) -> Result<EmbedOut> {
+        let lf = self.loaded(family)?;
+        let fm = &lf.manifest;
+        let batch = x.dim0();
+        assert_eq!(t.len(), batch, "t batch mismatch");
+        let cond_val = match cond {
+            Cond::Label(l) => {
+                assert_eq!(l.len(), batch);
+                HostValue::i32(vec![batch], l.clone())
+            }
+            Cond::Prompt(p) => {
+                assert_eq!(p.len(), batch * fm.cond_len);
+                HostValue::i32(vec![batch, fm.cond_len], p.clone())
+            }
+        };
+        let host_args = vec![
+            HostValue::F32(x.clone()),
+            HostValue::F32(Tensor::new(vec![batch], t.to_vec())),
+            cond_val,
+        ];
+        let mut out = self.exec_entry(family, "embed", batch, &host_args, &[], 0)?;
+        let cond_t = if out.len() == 3 { Some(out.pop().unwrap()) } else { None };
+        let c = out.pop().unwrap();
+        let tokens = out.pop().unwrap();
+        Ok(EmbedOut { tokens, c, cond: cond_t })
+    }
+
+    /// Upload the per-step conditioning once (reused across all branches
+    /// of the step).
+    pub fn make_step_ctx(&self, embed: &EmbedOut) -> Result<StepCtx> {
+        Ok(StepCtx {
+            batch: embed.tokens.dim0(),
+            c_buf: self.rt.upload(&HostValue::F32(embed.c.clone()))?,
+            cond_buf: match &embed.cond {
+                Some(c) => Some(self.rt.upload(&HostValue::F32(c.clone()))?),
+                None => None,
+            },
+        })
+    }
+
+    /// Execute one branch: returns the gated pre-residual delta.
+    pub fn branch(
+        &self,
+        family: &str,
+        block: usize,
+        branch: &str,
+        tokens: &Tensor,
+        ctx: &StepCtx,
+    ) -> Result<Tensor> {
+        let lf = self.loaded(family)?;
+        let entry_name = format!("branch.{branch}");
+        let entry = lf.manifest.entry(&entry_name)?;
+        let needs_cond = entry.inputs.iter().any(|i| i == "cond");
+        let host_args = vec![HostValue::F32(tokens.clone())];
+        let mut extra: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2);
+        if needs_cond {
+            extra.push(
+                ctx.cond_buf
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("{entry_name} needs cond tokens"))?,
+            );
+        }
+        extra.push(&ctx.c_buf);
+        let mut out =
+            self.exec_entry(family, &entry_name, ctx.batch, &host_args, &extra, block)?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// Execute the final head: tokens → epsilon prediction.
+    pub fn final_head(&self, family: &str, tokens: &Tensor, ctx: &StepCtx) -> Result<Tensor> {
+        let host_args = vec![HostValue::F32(tokens.clone())];
+        let mut out = self.exec_entry(
+            family,
+            "final",
+            ctx.batch,
+            &host_args,
+            &[&ctx.c_buf],
+            0,
+        )?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// Full no-cache forward pass (calibration / golden tests). Returns
+    /// the eps prediction and optionally records every branch delta via
+    /// `on_delta(block, branch, &delta)`.
+    pub fn forward(
+        &self,
+        family: &str,
+        x: &Tensor,
+        t: &[f32],
+        cond: &Cond,
+        mut on_delta: Option<&mut dyn FnMut(usize, &str, &Tensor)>,
+    ) -> Result<Tensor> {
+        let fm = self.loaded(family)?.manifest.clone();
+        let emb = self.embed(family, x, t, cond)?;
+        let ctx = self.make_step_ctx(&emb)?;
+        let mut tokens = emb.tokens;
+        for (block, br) in fm.branch_sites() {
+            let delta = self.branch(family, block, &br, &tokens, &ctx)?;
+            if let Some(cb) = on_delta.as_deref_mut() {
+                cb(block, &br, &delta);
+            }
+            tokens.add_inplace(&delta);
+        }
+        self.final_head(family, &tokens, &ctx)
+    }
+}
+
+/// Tuple arity of each entry's output.
+fn outputs_of(fm: &FamilyManifest, entry: &str) -> usize {
+    match entry {
+        "embed" => {
+            if fm.cond_len > 0 {
+                3
+            } else {
+                2
+            }
+        }
+        _ => 1,
+    }
+}

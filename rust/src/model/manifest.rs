@@ -1,0 +1,244 @@
+//! manifest.json parsing — the contract written by python/compile/aot.py.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Debug)]
+pub struct EntryManifest {
+    /// Runtime input names, in argument order (before weights).
+    pub inputs: Vec<String>,
+    /// Weight tensor name templates (`blocks.{i}.attn.qkv_w` …), in order.
+    pub weights: Vec<String>,
+    /// batch size → artifact file name.
+    pub artifacts: BTreeMap<usize, String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct FamilyManifest {
+    pub name: String,
+    pub hidden: usize,
+    pub heads: usize,
+    pub depth: usize,
+    pub mlp_ratio: usize,
+    pub seq_len: usize,
+    pub latent_shape: Vec<usize>,
+    pub branch_types: Vec<String>,
+    pub cond_len: usize,
+    pub num_classes: usize,
+    pub vocab: usize,
+    pub frames: usize,
+    pub spatial_tokens: usize,
+    pub patch: usize,
+    pub t_freq_dim: usize,
+    pub weights_file: String,
+    pub impl_name: String,
+    pub entries: BTreeMap<String, EntryManifest>,
+}
+
+impl FamilyManifest {
+    pub fn latent_size(&self) -> usize {
+        self.latent_shape.iter().product()
+    }
+
+    /// All (block, branch) pairs in execution order.
+    pub fn branch_sites(&self) -> Vec<(usize, String)> {
+        let mut out = Vec::with_capacity(self.depth * self.branch_types.len());
+        for i in 0..self.depth {
+            for b in &self.branch_types {
+                out.push((i, b.clone()));
+            }
+        }
+        out
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryManifest> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("family {}: no entry {name:?}", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub impl_name: String,
+    pub batch_sizes: Vec<usize>,
+    pub families: BTreeMap<String, FamilyManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let impl_name = j.req("impl")?.as_str().unwrap_or("pallas").to_string();
+        let batch_sizes = j
+            .req("batch_sizes")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad batch_sizes"))?;
+        let mut families = BTreeMap::new();
+        for (name, fj) in j
+            .req("families")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("families not an object"))?
+        {
+            families.insert(name.clone(), parse_family(name, fj)?);
+        }
+        Ok(Manifest { impl_name, batch_sizes, families })
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilyManifest> {
+        self.families
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown family {name:?} (have: {:?})",
+                self.families.keys().collect::<Vec<_>>()))
+    }
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{key}: not a number"))
+}
+
+fn parse_family(name: &str, j: &Json) -> Result<FamilyManifest> {
+    let mut entries = BTreeMap::new();
+    for (ename, ej) in j
+        .req("entries")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("entries not an object"))?
+    {
+        let inputs = ej
+            .req("inputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("inputs"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        let weights = ej
+            .req("weights")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("weights"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        let mut artifacts = BTreeMap::new();
+        for (b, f) in ej
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts"))?
+        {
+            artifacts.insert(
+                b.parse::<usize>().map_err(|_| anyhow!("bad batch key {b}"))?,
+                f.as_str().ok_or_else(|| anyhow!("artifact name"))?.to_string(),
+            );
+        }
+        entries.insert(ename.clone(), EntryManifest { inputs, weights, artifacts });
+    }
+    Ok(FamilyManifest {
+        name: name.to_string(),
+        hidden: get_usize(j, "hidden")?,
+        heads: get_usize(j, "heads")?,
+        depth: get_usize(j, "depth")?,
+        mlp_ratio: get_usize(j, "mlp_ratio")?,
+        seq_len: get_usize(j, "seq_len")?,
+        latent_shape: j
+            .req("latent_shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("latent_shape"))?,
+        branch_types: j
+            .req("branch_types")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("branch_types"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect(),
+        cond_len: get_usize(j, "cond_len")?,
+        num_classes: get_usize(j, "num_classes")?,
+        vocab: get_usize(j, "vocab")?,
+        frames: get_usize(j, "frames")?,
+        spatial_tokens: get_usize(j, "spatial_tokens")?,
+        patch: get_usize(j, "patch")?,
+        t_freq_dim: get_usize(j, "t_freq_dim")?,
+        weights_file: j
+            .req("weights_file")?
+            .as_str()
+            .ok_or_else(|| anyhow!("weights_file"))?
+            .to_string(),
+        impl_name: j
+            .req("impl")?
+            .as_str()
+            .ok_or_else(|| anyhow!("impl"))?
+            .to_string(),
+        entries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "impl": "pallas", "batch_sizes": [1, 2],
+      "families": {
+        "image": {
+          "hidden": 128, "heads": 4, "depth": 6, "mlp_ratio": 4,
+          "seq_len": 64, "latent_shape": [16, 16, 4],
+          "branch_types": ["attn", "ffn"],
+          "cond_len": 0, "num_classes": 10, "vocab": 0,
+          "frames": 0, "spatial_tokens": 0, "patch": 2, "t_freq_dim": 64,
+          "weights_file": "weights_image.bin", "impl": "pallas",
+          "entries": {
+            "embed": {"inputs": ["x", "t", "label"],
+                      "weights": ["embed.patch_w"],
+                      "artifacts": {"1": "image_embed_b1.hlo.txt"}},
+            "branch.attn": {"inputs": ["x", "c"],
+                      "weights": ["blocks.{i}.attn.qkv_w"],
+                      "artifacts": {"1": "image_branch_attn_b1.hlo.txt"}},
+            "final": {"inputs": ["x", "c"], "weights": ["final.lin_w"],
+                      "artifacts": {"1": "image_final_b1.hlo.txt"}}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.batch_sizes, vec![1, 2]);
+        let f = m.family("image").unwrap();
+        assert_eq!(f.hidden, 128);
+        assert_eq!(f.branch_types, vec!["attn", "ffn"]);
+        assert_eq!(f.latent_size(), 16 * 16 * 4);
+        assert_eq!(f.branch_sites().len(), 12);
+        assert_eq!(
+            f.entry("branch.attn").unwrap().artifacts.get(&1).unwrap(),
+            "image_branch_attn_b1.hlo.txt"
+        );
+    }
+
+    #[test]
+    fn unknown_family_errors() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert!(m.family("nope").is_err());
+    }
+
+    #[test]
+    fn branch_sites_order_matches_execution() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        let f = m.family("image").unwrap();
+        let sites = f.branch_sites();
+        assert_eq!(sites[0], (0, "attn".to_string()));
+        assert_eq!(sites[1], (0, "ffn".to_string()));
+        assert_eq!(sites[2], (1, "attn".to_string()));
+    }
+}

@@ -1,0 +1,103 @@
+//! Model layer: manifests, weights, and the forward composition engine.
+
+pub mod engine;
+pub mod manifest;
+pub mod weights;
+
+pub use engine::{EmbedOut, Engine, StepCtx};
+pub use manifest::{EntryManifest, FamilyManifest, Manifest};
+pub use weights::WeightStore;
+
+/// Per-request conditioning input.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Cond {
+    /// Class label per sample (image family). The null class id
+    /// (`num_classes`) is the CFG unconditional row.
+    Label(Vec<i32>),
+    /// Prompt token ids, `batch * cond_len` row-major (audio/video).
+    /// Token id 0 is the CFG null token.
+    Prompt(Vec<i32>),
+}
+
+impl Cond {
+    pub fn batch(&self, cond_len: usize) -> usize {
+        match self {
+            Cond::Label(l) => l.len(),
+            Cond::Prompt(p) => {
+                assert!(cond_len > 0, "prompt cond on a family without cond tokens");
+                p.len() / cond_len
+            }
+        }
+    }
+
+    /// The unconditional (null) counterpart with the same batch size.
+    pub fn null_like(&self, num_classes: usize, cond_len: usize) -> Cond {
+        match self {
+            Cond::Label(l) => Cond::Label(vec![num_classes as i32; l.len()]),
+            Cond::Prompt(p) => Cond::Prompt(vec![0; (p.len() / cond_len) * cond_len]),
+        }
+    }
+
+    /// Concatenate along batch (CFG doubling).
+    pub fn cat(&self, other: &Cond) -> Cond {
+        match (self, other) {
+            (Cond::Label(a), Cond::Label(b)) => {
+                let mut v = a.clone();
+                v.extend_from_slice(b);
+                Cond::Label(v)
+            }
+            (Cond::Prompt(a), Cond::Prompt(b)) => {
+                let mut v = a.clone();
+                v.extend_from_slice(b);
+                Cond::Prompt(v)
+            }
+            _ => panic!("mixing label and prompt conditioning"),
+        }
+    }
+
+    /// Pad to batch `n` by repeating the last sample (batcher padding).
+    pub fn pad_to(&self, n: usize, cond_len: usize) -> Cond {
+        match self {
+            Cond::Label(l) => {
+                let mut v = l.clone();
+                let last = *l.last().expect("non-empty");
+                v.resize(n, last);
+                Cond::Label(v)
+            }
+            Cond::Prompt(p) => {
+                let b = p.len() / cond_len;
+                let mut v = p.clone();
+                let last = p[(b - 1) * cond_len..].to_vec();
+                for _ in b..n {
+                    v.extend_from_slice(&last);
+                }
+                Cond::Prompt(v)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_null_and_cat() {
+        let c = Cond::Label(vec![1, 2]);
+        assert_eq!(c.batch(0), 2);
+        assert_eq!(c.null_like(10, 0), Cond::Label(vec![10, 10]));
+        assert_eq!(
+            c.cat(&c.null_like(10, 0)),
+            Cond::Label(vec![1, 2, 10, 10])
+        );
+    }
+
+    #[test]
+    fn prompt_batch_and_pad() {
+        let c = Cond::Prompt(vec![5, 6, 7, 8]); // batch 2, cond_len 2
+        assert_eq!(c.batch(2), 2);
+        let p = c.pad_to(4, 2);
+        assert_eq!(p, Cond::Prompt(vec![5, 6, 7, 8, 7, 8, 7, 8]));
+        assert_eq!(c.null_like(0, 2), Cond::Prompt(vec![0, 0, 0, 0]));
+    }
+}

@@ -1,0 +1,162 @@
+//! weights.bin reader — the Rust half of the python weights_io contract.
+//!
+//! Format: `b"SMCWGT01"` magic, u32 LE header length, JSON header
+//! `{"tensors": [{"name","shape","offset","count"}]}`, raw LE f32 data.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::parse;
+
+const MAGIC: &[u8; 8] = b"SMCWGT01";
+
+#[derive(Debug, Default)]
+pub struct WeightStore {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse_bytes(&bytes)
+    }
+
+    pub fn parse_bytes(bytes: &[u8]) -> Result<WeightStore> {
+        if bytes.len() < 12 || &bytes[..8] != MAGIC {
+            return Err(anyhow!("bad weights magic"));
+        }
+        let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let header_end = 12 + hlen;
+        if bytes.len() < header_end {
+            return Err(anyhow!("truncated weights header"));
+        }
+        let header = std::str::from_utf8(&bytes[12..header_end])
+            .map_err(|_| anyhow!("header not utf8"))?;
+        let j = parse(header).map_err(|e| anyhow!("weights header: {e}"))?;
+        let data = &bytes[header_end..];
+        if data.len() % 4 != 0 {
+            return Err(anyhow!("data section not f32-aligned"));
+        }
+        let floats: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let mut tensors = BTreeMap::new();
+        for t in j
+            .req("tensors")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensors not an array"))?
+        {
+            let name = t
+                .req("name")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor name"))?
+                .to_string();
+            let shape = t
+                .req("shape")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("tensor shape"))?;
+            let offset = t
+                .req("offset")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("tensor offset"))?;
+            let count = t
+                .req("count")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("tensor count"))?;
+            if offset + count > floats.len() {
+                return Err(anyhow!("tensor {name}: out of bounds"));
+            }
+            if shape.iter().product::<usize>() != count {
+                return Err(anyhow!("tensor {name}: shape/count mismatch"));
+            }
+            tensors.insert(name, Tensor::new(shape, floats[offset..offset + count].to_vec()));
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("weight tensor {name:?} not found"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        let header = br#"{"tensors": [
+            {"name": "a", "shape": [2, 2], "offset": 0, "count": 4},
+            {"name": "b", "shape": [3], "offset": 4, "count": 3}
+        ]}"#;
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header);
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parses_sample() {
+        let w = WeightStore::parse_bytes(&sample_bytes()).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.get("a").unwrap().shape, vec![2, 2]);
+        assert_eq!(w.get("a").unwrap().data, vec![1., 2., 3., 4.]);
+        assert_eq!(w.get("b").unwrap().data, vec![5., 6., 7.]);
+        assert_eq!(w.total_params(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample_bytes();
+        b[0] = b'X';
+        assert!(WeightStore::parse_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let header = br#"{"tensors": [{"name": "a", "shape": [10], "offset": 0, "count": 10}]}"#;
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header);
+        out.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(WeightStore::parse_bytes(&out).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let w = WeightStore::parse_bytes(&sample_bytes()).unwrap();
+        assert!(w.get("nope").is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! The denoising pipeline: solver loop × forward engine × SmoothCache.
+//!
+//! This is where the paper's mechanism executes: at every solver step
+//! the pipeline walks the (block, branch) sites in order; a `Compute`
+//! decision runs the branch's AOT executable and refills the layer
+//! cache, a `Reuse` decision re-injects the cached delta through the
+//! residual connection without touching PJRT (paper Fig. 3). Decisions
+//! come from a static [`Schedule`] (grouped by branch type, the paper's
+//! default) or a per-site decision map (grouping ablation).
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::schedule::{Decision, Schedule};
+use crate::model::{Cond, Engine};
+use crate::solvers::{cfg_merge, SolverKind, SolverRun};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One generation request's sampling configuration.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    pub family: String,
+    pub solver: SolverKind,
+    pub steps: usize,
+    /// classifier-free guidance scale; 1.0 disables CFG (single forward).
+    pub cfg_scale: f32,
+    pub seed: u64,
+}
+
+impl GenConfig {
+    pub fn new(family: &str, solver: SolverKind, steps: usize) -> GenConfig {
+        GenConfig { family: family.into(), solver, steps, cfg_scale: 1.0, seed: 0 }
+    }
+
+    pub fn with_cfg(mut self, scale: f32) -> GenConfig {
+        self.cfg_scale = scale;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> GenConfig {
+        self.seed = seed;
+        self
+    }
+
+    pub fn uses_cfg(&self) -> bool {
+        (self.cfg_scale - 1.0).abs() > 1e-6
+    }
+}
+
+/// Caching policy for one generation.
+pub enum CacheMode<'a> {
+    /// compute everything (No-Cache rows; calibration).
+    None,
+    /// the paper's grouped-by-type static schedule.
+    Grouped(&'a Schedule),
+    /// per-(block, branch) decisions — grouping ablation.
+    PerSite(&'a BTreeMap<String, Vec<Decision>>),
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct GenStats {
+    pub branch_computes: usize,
+    pub branch_reuses: usize,
+    pub steps: usize,
+    pub wall_seconds: f64,
+}
+
+impl GenStats {
+    pub fn skip_fraction(&self) -> f64 {
+        let total = self.branch_computes + self.branch_reuses;
+        if total == 0 {
+            0.0
+        } else {
+            self.branch_reuses as f64 / total as f64
+        }
+    }
+}
+
+pub struct GenOutput {
+    /// `[batch, …latent_shape]` generated latents at t = 0.
+    pub latent: Tensor,
+    pub stats: GenStats,
+}
+
+/// Observer over *computed* branch deltas: (step, block, branch, delta).
+pub type DeltaObserver<'a> = &'a mut dyn FnMut(usize, usize, &str, &Tensor);
+
+/// Run one full denoising trajectory; the initial latent is drawn from
+/// `cfg.seed`.
+pub fn generate(
+    engine: &Engine,
+    cfg: &GenConfig,
+    cond: &Cond,
+    mode: &CacheMode,
+    observer: Option<DeltaObserver>,
+) -> Result<GenOutput> {
+    let fm = engine.family_manifest(&cfg.family)?.clone();
+    let batch = cond.batch(fm.cond_len);
+    if batch == 0 {
+        return Err(anyhow!("empty batch"));
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut latent_shape = vec![batch];
+    latent_shape.extend(&fm.latent_shape);
+    let x0 = SolverRun::init_latent(latent_shape, &mut rng);
+    generate_from(engine, cfg, cond, x0, mode, observer)
+}
+
+/// Like [`generate`] but with a caller-provided initial latent — the
+/// dynamic batcher uses this so each request's trajectory is seeded from
+/// its own seed regardless of batch composition.
+pub fn generate_from(
+    engine: &Engine,
+    cfg: &GenConfig,
+    cond: &Cond,
+    x_init: Tensor,
+    mode: &CacheMode,
+    mut observer: Option<DeltaObserver>,
+) -> Result<GenOutput> {
+    let t_start = Instant::now();
+    let fm = engine.family_manifest(&cfg.family)?.clone();
+    let batch = cond.batch(fm.cond_len);
+    if batch == 0 {
+        return Err(anyhow!("empty batch"));
+    }
+    if x_init.dim0() != batch {
+        return Err(anyhow!("x_init batch {} != cond batch {batch}", x_init.dim0()));
+    }
+    if let CacheMode::Grouped(s) = mode {
+        if s.steps != cfg.steps {
+            return Err(anyhow!("schedule has {} steps, request has {}", s.steps, cfg.steps));
+        }
+        if s.branch_types != fm.branch_types {
+            return Err(anyhow!("schedule branch types do not match family"));
+        }
+    }
+
+    let mut rng = Rng::new(cfg.seed ^ 0x50D4_11CE);
+    let mut run = SolverRun::new(cfg.solver, cfg.steps);
+    let mut x = x_init;
+
+    // CFG: the conditional and null batches run concatenated.
+    let cond_eff = if cfg.uses_cfg() {
+        cond.cat(&cond.null_like(fm.num_classes, fm.cond_len))
+    } else {
+        cond.clone()
+    };
+    let batch_eff = if cfg.uses_cfg() { 2 * batch } else { batch };
+
+    let sites = fm.branch_sites();
+    let mut cache: HashMap<(usize, String), Tensor> = HashMap::new();
+    let mut stats = GenStats { steps: cfg.steps, ..Default::default() };
+
+    for i in 0..cfg.steps {
+        let t = run.model_t(i) as f32;
+        let x_in = if cfg.uses_cfg() { Tensor::cat0(&[&x, &x]) } else { x.clone() };
+        let t_vec = vec![t; batch_eff];
+        let emb = engine.embed(&cfg.family, &x_in, &t_vec, &cond_eff)?;
+        let ctx = engine.make_step_ctx(&emb)?;
+        let mut tokens = emb.tokens;
+
+        for (block, br) in &sites {
+            let decision = match mode {
+                CacheMode::None => Decision::Compute,
+                CacheMode::Grouped(s) => s.decision(i, br),
+                CacheMode::PerSite(m) => m
+                    .get(&format!("{block}.{br}"))
+                    .map(|ds| ds[i])
+                    .unwrap_or(Decision::Compute),
+            };
+            let key = (*block, br.clone());
+            let delta = match decision {
+                Decision::Compute => {
+                    let d = engine.branch(&cfg.family, *block, br, &tokens, &ctx)?;
+                    if let Some(obs) = observer.as_deref_mut() {
+                        obs(i, *block, br, &d);
+                    }
+                    stats.branch_computes += 1;
+                    cache.insert(key, d.clone());
+                    d
+                }
+                Decision::Reuse { .. } => {
+                    stats.branch_reuses += 1;
+                    cache
+                        .get(&key)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("cache miss at step {i} {block}.{br}"))?
+                }
+            };
+            tokens.add_inplace(&delta);
+        }
+
+        let out = engine.final_head(&cfg.family, &tokens, &ctx)?;
+        let model_out = if cfg.uses_cfg() {
+            let c = out.batch_slice(0, batch);
+            let u = out.batch_slice(batch, 2 * batch);
+            cfg_merge(&c, &u, cfg.cfg_scale)
+        } else {
+            out
+        };
+        x = run.step(i, &x, &model_out, &mut rng);
+    }
+
+    stats.wall_seconds = t_start.elapsed().as_secs_f64();
+    Ok(GenOutput { latent: x, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_config_cfg_detection() {
+        let c = GenConfig::new("image", SolverKind::Ddim, 10);
+        assert!(!c.uses_cfg());
+        assert!(c.with_cfg(1.5).uses_cfg());
+    }
+
+    #[test]
+    fn stats_skip_fraction() {
+        let s = GenStats { branch_computes: 30, branch_reuses: 10, ..Default::default() };
+        assert!((s.skip_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(GenStats::default().skip_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Audio-domain quality metrics over log-spectrogram features.
+//!
+//! FD_OpenL3 and KL_PaSST in the paper run learned audio networks over
+//! time-frequency input. These proxies keep the "metric sees spectra"
+//! structure: each audio latent channel is treated as a waveform, STFT'd
+//! (util::fft), and summarised into a fixed-length spectral feature
+//! vector; Fréchet / KL machinery is then identical to the paper's.
+
+use crate::linalg::{covariance, frechet_distance_sq, mean_rows};
+use crate::tensor::Tensor;
+use crate::util::fft::log_spectrogram;
+
+/// Spectral feature vector of one audio latent sample `[T, C]`:
+/// per-channel mean + std of each spectrogram frequency band.
+pub fn spectral_features(sample: &Tensor, n_fft: usize) -> Vec<f64> {
+    assert_eq!(sample.rank(), 3, "expected [1, T, C]");
+    let t = sample.shape[1];
+    let c = sample.shape[2];
+    let mut feats = Vec::new();
+    for ch in 0..c {
+        let wave: Vec<f64> = (0..t).map(|i| sample.data[i * c + ch] as f64).collect();
+        let spec = log_spectrogram(&wave, n_fft, n_fft / 2);
+        let bins = spec[0].len();
+        for b in 0..bins {
+            let vals: Vec<f64> = spec.iter().map(|f| f[b]).collect();
+            let m = vals.iter().sum::<f64>() / vals.len() as f64;
+            let v = vals.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / vals.len() as f64;
+            feats.push(m);
+            feats.push(v.sqrt());
+        }
+    }
+    feats
+}
+
+/// Spectral feature matrix over a batch `[N, T, C]` (rows × dim).
+pub fn spectral_features_batch(set: &Tensor, n_fft: usize) -> (Vec<f64>, usize) {
+    let n = set.dim0();
+    let mut rows = Vec::new();
+    let mut dim = 0;
+    for i in 0..n {
+        let f = spectral_features(&set.sample(i), n_fft);
+        dim = f.len();
+        rows.extend(f);
+    }
+    (rows, dim)
+}
+
+/// Spectral Fréchet distance (FD_OpenL3 proxy) between two audio sets.
+pub fn spectral_fd(set_a: &Tensor, set_b: &Tensor, n_fft: usize) -> f64 {
+    let (fa, dim) = spectral_features_batch(set_a, n_fft);
+    let (fb, _) = spectral_features_batch(set_b, n_fft);
+    let (na, nb) = (set_a.dim0(), set_b.dim0());
+    assert!(na >= 4 && nb >= 4, "spectral_fd needs >= 4 samples per set");
+    // subsample the feature axis so the covariance stays well-conditioned
+    // at bench sample counts (target dim << min(n_a, n_b))
+    let target_d = (na.min(nb) / 2).clamp(4, 16);
+    let stride = dim.div_ceil(target_d);
+    let keep: Vec<usize> = (0..dim).step_by(stride).collect();
+    let reduce = |rows: &[f64], n: usize| -> Vec<f64> {
+        let mut out = Vec::with_capacity(n * keep.len());
+        for r in 0..n {
+            for &k in &keep {
+                out.push(rows[r * dim + k]);
+            }
+        }
+        out
+    };
+    let ra = reduce(&fa, na);
+    let rb = reduce(&fb, nb);
+    let d = keep.len();
+    let mu_a = mean_rows(&ra, na, d);
+    let mu_b = mean_rows(&rb, nb, d);
+    let ca = covariance(&ra, na, d);
+    let cb = covariance(&rb, nb, d);
+    frechet_distance_sq(&mu_a, &ca, &mu_b, &cb).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn audio_set(n: usize, seed: u64, freq: f64) -> Tensor {
+        let (t, c) = (64usize, 8usize);
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        for _ in 0..n {
+            let phase = rng.range_f64(0.0, 6.28);
+            for ti in 0..t {
+                for ci in 0..c {
+                    data.push(
+                        ((freq * (ci + 1) as f64 * ti as f64 + phase).sin()
+                            + 0.1 * rng.normal()) as f32,
+                    );
+                }
+            }
+        }
+        Tensor::new(vec![n, t, c], data)
+    }
+
+    #[test]
+    fn features_deterministic_and_sized() {
+        let set = audio_set(2, 1, 0.3);
+        let f1 = spectral_features(&set.sample(0), 32);
+        let f2 = spectral_features(&set.sample(0), 32);
+        assert_eq!(f1, f2);
+        assert_eq!(f1.len(), 8 * 17 * 2); // C × bins × (mean, std)
+    }
+
+    #[test]
+    fn fd_separates_frequencies() {
+        let a1 = audio_set(24, 1, 0.3);
+        let a2 = audio_set(24, 2, 0.3);
+        let b = audio_set(24, 3, 0.9);
+        let same = spectral_fd(&a1, &a2, 32);
+        let diff = spectral_fd(&a1, &b, 32);
+        assert!(same < diff, "same-freq {same} vs diff-freq {diff}");
+    }
+
+    #[test]
+    fn fd_zero_for_identical() {
+        let a = audio_set(24, 5, 0.5);
+        assert!(spectral_fd(&a, &a, 32) < 1e-6);
+    }
+}

@@ -1,0 +1,361 @@
+//! Generation-quality metrics.
+//!
+//! PSNR and SSIM are the literal metrics from the paper's Table 2
+//! (SSIM in its global form — the universal quality index of Wang &
+//! Bovik 2002, the paper's own citation [37]). The learned-network
+//! metrics (FID/sFID/IS, LPIPS, CLAP, KL_PaSST, FD_OpenL3) are
+//! unavailable offline; DESIGN.md §3 defines the proxies implemented
+//! here — all built on a fixed, seeded random-projection feature space
+//! so they are deterministic, model-free, and respond monotonically to
+//! generation corruption:
+//!
+//! * **FFD** (Fréchet Feature Distance) ↔ FID / FD_OpenL3
+//! * **LPIPS-proxy**: normalized feature-space distance ↔ LPIPS
+//! * **IS-proxy**: inception-score formula over a random classifier head
+//! * **KL-proxy** ↔ KL_PaSST
+//! * **CLAP-proxy**: cosine similarity to the reference (no-cache)
+//!   generation for the same prompt/seed ↔ prompt-adherence preservation
+
+pub mod audio;
+pub mod ssim2d;
+
+pub use audio::{spectral_fd, spectral_features};
+pub use ssim2d::ssim2d;
+
+use crate::linalg::{covariance, frechet_distance_sq, mean_rows};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Pixel metrics (exact)
+// ---------------------------------------------------------------------------
+
+/// PSNR in dB between two same-shape tensors; the dynamic range is taken
+/// from the reference tensor (paper protocol: vs the non-cached output).
+pub fn psnr(reference: &Tensor, test: &Tensor) -> f64 {
+    assert_eq!(reference.shape, test.shape);
+    let n = reference.len() as f64;
+    let mse: f64 = reference
+        .data
+        .iter()
+        .zip(&test.data)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / n;
+    let lo = reference.data.iter().cloned().fold(f32::MAX, f32::min) as f64;
+    let hi = reference.data.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let range = (hi - lo).max(1e-9);
+    if mse <= 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * ((range * range) / mse).log10()
+}
+
+/// Global SSIM (universal quality index): luminance/contrast/structure
+/// over whole-sample statistics.
+pub fn ssim(reference: &Tensor, test: &Tensor) -> f64 {
+    assert_eq!(reference.shape, test.shape);
+    let mx = reference.mean();
+    let my = test.mean();
+    let vx = reference.var();
+    let vy = test.var();
+    let n = reference.len() as f64;
+    let cov: f64 = reference
+        .data
+        .iter()
+        .zip(&test.data)
+        .map(|(&a, &b)| (a as f64 - mx) * (b as f64 - my))
+        .sum::<f64>()
+        / n;
+    let lo = reference.data.iter().cloned().fold(f32::MAX, f32::min) as f64;
+    let hi = reference.data.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let l = (hi - lo).max(1e-9);
+    let c1 = (0.01 * l).powi(2);
+    let c2 = (0.03 * l).powi(2);
+    ((2.0 * mx * my + c1) * (2.0 * cov + c2)) / ((mx * mx + my * my + c1) * (vx + vy + c2))
+}
+
+// ---------------------------------------------------------------------------
+// Fixed random feature space (the FID/LPIPS/IS substitution substrate)
+// ---------------------------------------------------------------------------
+
+/// Two-layer random projection with tanh nonlinearity:
+/// feat = W2 · tanh(W1 · x / sqrt(n)). Deterministic given (seed, dims).
+pub struct FeatureExtractor {
+    seed: u64,
+    pub dim: usize,
+    hidden: usize,
+    // lazily built per input size
+    cache: std::cell::RefCell<std::collections::HashMap<usize, (Vec<f32>, Vec<f32>)>>,
+}
+
+impl FeatureExtractor {
+    pub fn new(seed: u64, dim: usize) -> FeatureExtractor {
+        FeatureExtractor { seed, dim, hidden: 2 * dim, cache: Default::default() }
+    }
+
+    fn weights_for(&self, n: usize) -> (Vec<f32>, Vec<f32>) {
+        if let Some(w) = self.cache.borrow().get(&n) {
+            return w.clone();
+        }
+        let mut rng = Rng::new(self.seed ^ (n as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let w1: Vec<f32> = (0..n * self.hidden)
+            .map(|_| rng.normal_f32() / (n as f32).sqrt())
+            .collect();
+        let w2: Vec<f32> = (0..self.hidden * self.dim)
+            .map(|_| rng.normal_f32() / (self.hidden as f32).sqrt())
+            .collect();
+        self.cache.borrow_mut().insert(n, (w1.clone(), w2.clone()));
+        (w1, w2)
+    }
+
+    /// Features of one sample (any shape; flattened).
+    pub fn features(&self, sample: &Tensor) -> Vec<f64> {
+        let n = sample.len();
+        let (w1, w2) = self.weights_for(n);
+        let mut h = vec![0.0f32; self.hidden];
+        for (i, &x) in sample.data.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let row = &w1[i * self.hidden..(i + 1) * self.hidden];
+            for (hj, &w) in h.iter_mut().zip(row) {
+                *hj += x * w;
+            }
+        }
+        for v in &mut h {
+            *v = v.tanh();
+        }
+        let mut out = vec![0.0f64; self.dim];
+        for (j, &hv) in h.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let row = &w2[j * self.dim..(j + 1) * self.dim];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += (hv * w) as f64;
+            }
+        }
+        out
+    }
+
+    /// Feature matrix (n_samples × dim, row-major) over a batch tensor.
+    pub fn features_batch(&self, batch: &Tensor) -> Vec<f64> {
+        let b = batch.dim0();
+        let mut out = Vec::with_capacity(b * self.dim);
+        for i in 0..b {
+            out.extend(self.features(&batch.sample(i)));
+        }
+        out
+    }
+}
+
+/// Fréchet Feature Distance between two sample sets (batch tensors).
+pub fn ffd(fx: &FeatureExtractor, set_a: &Tensor, set_b: &Tensor) -> f64 {
+    let fa = fx.features_batch(set_a);
+    let fb = fx.features_batch(set_b);
+    let (na, nb) = (set_a.dim0(), set_b.dim0());
+    assert!(na >= 2 && nb >= 2, "FFD needs >= 2 samples per set");
+    let mu_a = mean_rows(&fa, na, fx.dim);
+    let mu_b = mean_rows(&fb, nb, fx.dim);
+    let ca = covariance(&fa, na, fx.dim);
+    let cb = covariance(&fb, nb, fx.dim);
+    frechet_distance_sq(&mu_a, &ca, &mu_b, &cb).sqrt()
+}
+
+/// LPIPS-proxy: mean normalized feature-space L2 distance per pair
+/// (paired samples, e.g. cached vs no-cache generations, same seeds).
+pub fn lpips_proxy(fx: &FeatureExtractor, reference: &Tensor, test: &Tensor) -> f64 {
+    assert_eq!(reference.dim0(), test.dim0());
+    let b = reference.dim0();
+    let mut total = 0.0;
+    for i in 0..b {
+        let fr = fx.features(&reference.sample(i));
+        let ft = fx.features(&test.sample(i));
+        let d2: f64 = fr.iter().zip(&ft).map(|(a, b)| (a - b) * (a - b)).sum();
+        let nr: f64 = fr.iter().map(|x| x * x).sum::<f64>().max(1e-12);
+        total += (d2 / nr).sqrt();
+    }
+    total / b as f64
+}
+
+/// CLAP-proxy: mean cosine similarity between the features of paired
+/// samples (prompt-adherence preservation; 1.0 = identical content).
+pub fn clap_proxy(fx: &FeatureExtractor, reference: &Tensor, test: &Tensor) -> f64 {
+    assert_eq!(reference.dim0(), test.dim0());
+    let b = reference.dim0();
+    let mut total = 0.0;
+    for i in 0..b {
+        let fr = fx.features(&reference.sample(i));
+        let ft = fx.features(&test.sample(i));
+        let dot: f64 = fr.iter().zip(&ft).map(|(a, b)| a * b).sum();
+        let na: f64 = fr.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb: f64 = ft.iter().map(|x| x * x).sum::<f64>().sqrt();
+        total += dot / (na * nb).max(1e-12);
+    }
+    total / b as f64
+}
+
+/// Class distribution of one sample under the fixed random classifier.
+fn class_probs(fx: &FeatureExtractor, sample: &Tensor, classes: usize, seed: u64) -> Vec<f64> {
+    let f = fx.features(sample);
+    let mut rng = Rng::new(seed);
+    let w: Vec<f64> = (0..fx.dim * classes).map(|_| rng.normal()).collect();
+    let mut logits = vec![0.0f64; classes];
+    for (i, &fv) in f.iter().enumerate() {
+        for c in 0..classes {
+            logits[c] += fv * w[i * classes + c];
+        }
+    }
+    let mx = logits.iter().cloned().fold(f64::MIN, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - mx).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// IS-proxy: exp(E_x KL(p(y|x) ‖ p(y))) over the fixed random classifier.
+pub fn is_proxy(fx: &FeatureExtractor, set: &Tensor, classes: usize) -> f64 {
+    let b = set.dim0();
+    let probs: Vec<Vec<f64>> =
+        (0..b).map(|i| class_probs(fx, &set.sample(i), classes, fx.seed ^ 0xC1A55)).collect();
+    let mut marginal = vec![0.0f64; classes];
+    for p in &probs {
+        for (m, &v) in marginal.iter_mut().zip(p) {
+            *m += v / b as f64;
+        }
+    }
+    let mut kl_sum = 0.0;
+    for p in &probs {
+        for (c, &v) in p.iter().enumerate() {
+            if v > 1e-12 {
+                kl_sum += v * (v / marginal[c].max(1e-12)).ln();
+            }
+        }
+    }
+    (kl_sum / b as f64).exp()
+}
+
+/// KL-proxy: mean KL between paired per-sample class distributions.
+pub fn kl_proxy(fx: &FeatureExtractor, reference: &Tensor, test: &Tensor, classes: usize) -> f64 {
+    assert_eq!(reference.dim0(), test.dim0());
+    let b = reference.dim0();
+    let mut total = 0.0;
+    for i in 0..b {
+        let p = class_probs(fx, &reference.sample(i), classes, fx.seed ^ 0xC1A55);
+        let q = class_probs(fx, &test.sample(i), classes, fx.seed ^ 0xC1A55);
+        for c in 0..classes {
+            if p[c] > 1e-12 {
+                total += p[c] * (p[c] / q[c].max(1e-12)).ln();
+            }
+        }
+    }
+    total / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noisy_copy(t: &Tensor, sigma: f32, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        t.map(|v| v + sigma * rng.normal_f32())
+    }
+
+    fn random_set(b: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(vec![b, n], &mut rng)
+    }
+
+    #[test]
+    fn psnr_identical_infinite_and_monotone() {
+        let a = random_set(1, 256, 1);
+        assert!(psnr(&a, &a).is_infinite());
+        let p_small = psnr(&a, &noisy_copy(&a, 0.01, 2));
+        let p_big = psnr(&a, &noisy_copy(&a, 0.2, 2));
+        assert!(p_small > p_big, "{p_small} vs {p_big}");
+        assert!(p_small > 20.0);
+    }
+
+    #[test]
+    fn ssim_identical_is_one_and_monotone() {
+        let a = random_set(1, 256, 3);
+        assert!((ssim(&a, &a) - 1.0).abs() < 1e-9);
+        let s_small = ssim(&a, &noisy_copy(&a, 0.05, 4));
+        let s_big = ssim(&a, &noisy_copy(&a, 0.5, 4));
+        assert!(s_small > s_big);
+        assert!(s_big < 1.0);
+    }
+
+    #[test]
+    fn features_deterministic() {
+        let fx = FeatureExtractor::new(42, 16);
+        let a = random_set(1, 64, 5);
+        assert_eq!(fx.features(&a), fx.features(&a));
+        let fx2 = FeatureExtractor::new(42, 16);
+        assert_eq!(fx.features(&a), fx2.features(&a));
+    }
+
+    #[test]
+    fn ffd_zero_for_same_distribution_and_grows_with_shift() {
+        let fx = FeatureExtractor::new(7, 8);
+        let a = random_set(64, 32, 10);
+        let b = random_set(64, 32, 11);
+        let base = ffd(&fx, &a, &b);
+        // shifted distribution
+        let shifted = b.map(|v| v + 2.0);
+        let far = ffd(&fx, &a, &shifted);
+        assert!(base < far, "{base} vs {far}");
+    }
+
+    #[test]
+    fn ffd_monotone_in_noise() {
+        let fx = FeatureExtractor::new(7, 8);
+        let a = random_set(64, 32, 20);
+        let d1 = ffd(&fx, &a, &noisy_copy(&a, 0.1, 21));
+        let d2 = ffd(&fx, &a, &noisy_copy(&a, 1.0, 21));
+        assert!(d1 < d2, "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn lpips_proxy_zero_identical_monotone() {
+        let fx = FeatureExtractor::new(9, 16);
+        let a = random_set(8, 64, 30);
+        assert!(lpips_proxy(&fx, &a, &a) < 1e-9);
+        let d1 = lpips_proxy(&fx, &a, &noisy_copy(&a, 0.05, 31));
+        let d2 = lpips_proxy(&fx, &a, &noisy_copy(&a, 0.5, 31));
+        assert!(d1 < d2);
+    }
+
+    #[test]
+    fn clap_proxy_one_identical_decays() {
+        let fx = FeatureExtractor::new(11, 16);
+        let a = random_set(8, 64, 40);
+        assert!((clap_proxy(&fx, &a, &a) - 1.0).abs() < 1e-9);
+        let c1 = clap_proxy(&fx, &a, &noisy_copy(&a, 0.1, 41));
+        let c2 = clap_proxy(&fx, &a, &noisy_copy(&a, 1.0, 41));
+        assert!(c1 > c2);
+    }
+
+    #[test]
+    fn is_proxy_higher_for_diverse_set() {
+        let fx = FeatureExtractor::new(13, 16);
+        // diverse: random; degenerate: one sample repeated
+        let diverse = random_set(32, 64, 50);
+        let one = diverse.sample(0);
+        let degenerate = one.pad0_to(32);
+        let is_div = is_proxy(&fx, &diverse, 10);
+        let is_deg = is_proxy(&fx, &degenerate, 10);
+        assert!(is_div > is_deg, "{is_div} vs {is_deg}");
+        assert!((is_deg - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_proxy_zero_identical_monotone() {
+        let fx = FeatureExtractor::new(15, 16);
+        let a = random_set(8, 64, 60);
+        assert!(kl_proxy(&fx, &a, &a, 10) < 1e-9);
+        let k1 = kl_proxy(&fx, &a, &noisy_copy(&a, 0.1, 61), 10);
+        let k2 = kl_proxy(&fx, &a, &noisy_copy(&a, 1.0, 61), 10);
+        assert!(k1 < k2);
+    }
+}

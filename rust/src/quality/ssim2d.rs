@@ -1,0 +1,148 @@
+//! Windowed 2-D SSIM (the standard image-domain formulation, gaussian
+//! 7×7 window) — complements the global universal-quality-index form in
+//! quality::ssim for image-family comparisons.
+
+use crate::tensor::Tensor;
+
+fn gaussian_kernel(radius: usize, sigma: f64) -> Vec<f64> {
+    let size = 2 * radius + 1;
+    let mut k = Vec::with_capacity(size * size);
+    let mut sum = 0.0;
+    for y in 0..size {
+        for x in 0..size {
+            let dy = y as f64 - radius as f64;
+            let dx = x as f64 - radius as f64;
+            let v = (-(dx * dx + dy * dy) / (2.0 * sigma * sigma)).exp();
+            k.push(v);
+            sum += v;
+        }
+    }
+    for v in &mut k {
+        *v /= sum;
+    }
+    k
+}
+
+/// Gaussian-filtered local map (same size, clamped borders).
+fn filter(img: &[f64], h: usize, w: usize, kernel: &[f64], radius: usize) -> Vec<f64> {
+    let size = 2 * radius + 1;
+    let mut out = vec![0.0; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0.0;
+            for ky in 0..size {
+                for kx in 0..size {
+                    let sy = (y + ky).saturating_sub(radius).min(h - 1);
+                    let sx = (x + kx).saturating_sub(radius).min(w - 1);
+                    acc += kernel[ky * size + kx] * img[sy * w + sx];
+                }
+            }
+            out[y * w + x] = acc;
+        }
+    }
+    out
+}
+
+/// Windowed SSIM over a single-channel [H, W] plane pair.
+pub fn ssim2d_plane(a: &[f64], b: &[f64], h: usize, w: usize) -> f64 {
+    assert_eq!(a.len(), h * w);
+    assert_eq!(b.len(), h * w);
+    let radius = 3;
+    let kernel = gaussian_kernel(radius, 1.5);
+    let mu_a = filter(a, h, w, &kernel, radius);
+    let mu_b = filter(b, h, w, &kernel, radius);
+    let aa: Vec<f64> = a.iter().map(|v| v * v).collect();
+    let bb: Vec<f64> = b.iter().map(|v| v * v).collect();
+    let ab: Vec<f64> = a.iter().zip(b).map(|(x, y)| x * y).collect();
+    let s_aa = filter(&aa, h, w, &kernel, radius);
+    let s_bb = filter(&bb, h, w, &kernel, radius);
+    let s_ab = filter(&ab, h, w, &kernel, radius);
+
+    let lo = a.iter().chain(b).cloned().fold(f64::MAX, f64::min);
+    let hi = a.iter().chain(b).cloned().fold(f64::MIN, f64::max);
+    let l = (hi - lo).max(1e-9);
+    let c1 = (0.01 * l).powi(2);
+    let c2 = (0.03 * l).powi(2);
+
+    let mut total = 0.0;
+    for i in 0..h * w {
+        let va = s_aa[i] - mu_a[i] * mu_a[i];
+        let vb = s_bb[i] - mu_b[i] * mu_b[i];
+        let cov = s_ab[i] - mu_a[i] * mu_b[i];
+        total += ((2.0 * mu_a[i] * mu_b[i] + c1) * (2.0 * cov + c2))
+            / ((mu_a[i] * mu_a[i] + mu_b[i] * mu_b[i] + c1) * (va + vb + c2));
+    }
+    total / (h * w) as f64
+}
+
+/// Windowed SSIM over [1, H, W, C] image latents, averaged across
+/// channels; for batches, averaged across samples.
+pub fn ssim2d(reference: &Tensor, test: &Tensor) -> f64 {
+    assert_eq!(reference.shape, test.shape);
+    assert_eq!(reference.rank(), 4, "expected [N, H, W, C]");
+    let (n, h, w, c) =
+        (reference.shape[0], reference.shape[1], reference.shape[2], reference.shape[3]);
+    let mut total = 0.0;
+    for s in 0..n {
+        for ch in 0..c {
+            let plane = |t: &Tensor| -> Vec<f64> {
+                (0..h * w)
+                    .map(|i| t.data[s * h * w * c + i * c + ch] as f64)
+                    .collect()
+            };
+            total += ssim2d_plane(&plane(reference), &plane(test), h, w);
+        }
+    }
+    total / (n * c) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_images_score_one() {
+        let mut rng = Rng::new(1);
+        let img = Tensor::randn(vec![1, 16, 16, 4], &mut rng);
+        assert!((ssim2d(&img, &img) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_noise() {
+        let mut rng = Rng::new(2);
+        let img = Tensor::randn(vec![2, 16, 16, 4], &mut rng);
+        let mut r1 = Rng::new(3);
+        let small = img.map(|v| v + 0.05 * r1.normal_f32());
+        let mut r2 = Rng::new(3);
+        let big = img.map(|v| v + 0.8 * r2.normal_f32());
+        let s1 = ssim2d(&img, &small);
+        let s2 = ssim2d(&img, &big);
+        assert!(s1 > s2, "{s1} vs {s2}");
+        assert!(s2 < 0.9);
+    }
+
+    #[test]
+    fn structural_shift_detected() {
+        // constant image vs shifted-structure image: SSIM penalises
+        // structure more than a uniform brightness change
+        let h = 16;
+        let base: Vec<f64> = (0..h * h)
+            .map(|i| ((i / h) as f64 / h as f64 * 6.0).sin())
+            .collect();
+        let bright: Vec<f64> = base.iter().map(|v| v + 0.05).collect();
+        let transposed: Vec<f64> = (0..h * h)
+            .map(|i| base[(i % h) * h + i / h])
+            .collect();
+        let s_bright = ssim2d_plane(&base, &bright, h, h);
+        let s_trans = ssim2d_plane(&base, &transposed, h, h);
+        assert!(s_bright > s_trans);
+    }
+
+    #[test]
+    fn gaussian_kernel_normalized() {
+        let k = gaussian_kernel(3, 1.5);
+        assert!((k.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(k.len(), 49);
+    }
+}

@@ -1,0 +1,232 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! Interchange is HLO **text** (jax ≥ 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Weights are uploaded once as device-resident [`xla::PjRtBuffer`]s and
+//! passed by reference on every call (`execute_b`), so the request path
+//! transfers only activations.
+//!
+//! PJRT handles are not `Send`/`Sync`; the engine owns them on a single
+//! executor thread (coordinator threads talk to it over channels).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Host-side executable input (f32 tensor or i32 index array).
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn f32(t: Tensor) -> HostValue {
+        HostValue::F32(t)
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostValue {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => &t.shape,
+            HostValue::I32 { shape, .. } => shape,
+        }
+    }
+}
+
+/// Cumulative runtime counters (perf pass + MAC/latency accounting).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_seconds: f64,
+    pub uploads: u64,
+    pub upload_seconds: f64,
+    pub compiles: u64,
+    pub compile_seconds: f64,
+}
+
+/// A compiled PJRT executable plus its interface metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub num_outputs: usize,
+}
+
+/// PJRT client + executable cache. One per executor thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    stats: std::cell::RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, stats: Default::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path, num_outputs: usize) -> Result<Executable> {
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        let mut s = self.stats.borrow_mut();
+        s.compiles += 1;
+        s.compile_seconds += t.elapsed().as_secs_f64();
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+            num_outputs,
+        })
+    }
+
+    /// Upload a host value to a device-resident buffer.
+    pub fn upload(&self, v: &HostValue) -> Result<xla::PjRtBuffer> {
+        let t = Instant::now();
+        let buf = match v {
+            HostValue::F32(t) => self
+                .client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                .map_err(|e| anyhow!("upload f32: {e:?}"))?,
+            HostValue::I32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer::<i32>(data, shape, None)
+                .map_err(|e| anyhow!("upload i32: {e:?}"))?,
+        };
+        let mut s = self.stats.borrow_mut();
+        s.uploads += 1;
+        s.upload_seconds += t.elapsed().as_secs_f64();
+        Ok(buf)
+    }
+
+    /// Execute with device-resident argument buffers; download all tuple
+    /// outputs as f32 host tensors.
+    pub fn execute(
+        &self,
+        exe: &Executable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let t = Instant::now();
+        let out = exe
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", exe.name))?;
+        let result = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("execute {}: empty result", exe.name))?;
+        let lit = result
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download {}: {e:?}", exe.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", exe.name))?;
+        if parts.len() != exe.num_outputs {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                exe.name,
+                exe.num_outputs,
+                parts.len()
+            ));
+        }
+        let mut tensors = Vec::with_capacity(parts.len());
+        for p in parts {
+            let shape = p
+                .array_shape()
+                .map_err(|e| anyhow!("shape {}: {e:?}", exe.name))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec {}: {e:?}", exe.name))?;
+            tensors.push(Tensor::new(dims, data));
+        }
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.exec_seconds += t.elapsed().as_secs_f64();
+        Ok(tensors)
+    }
+
+    /// Convenience: upload host args then execute.
+    pub fn execute_host(
+        &self,
+        exe: &Executable,
+        host_args: &[HostValue],
+        device_args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let uploaded: Vec<xla::PjRtBuffer> =
+            host_args.iter().map(|v| self.upload(v)).collect::<Result<_>>()?;
+        let mut all: Vec<&xla::PjRtBuffer> = uploaded.iter().collect();
+        all.extend_from_slice(device_args);
+        self.execute(exe, &all)
+    }
+}
+
+/// Artifact registry: resolves (family, entry, batch) → compiled
+/// executable, compiling lazily and caching the handle.
+pub struct Registry {
+    pub dir: PathBuf,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Registry {
+    pub fn new(dir: PathBuf) -> Registry {
+        Registry { dir, cache: Default::default() }
+    }
+
+    pub fn get(
+        &self,
+        rt: &Runtime,
+        file: &str,
+        num_outputs: usize,
+    ) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {file} not found in {:?} — run `make artifacts`",
+                self.dir
+            ));
+        }
+        let exe = std::rc::Rc::new(
+            rt.load_hlo(&path, num_outputs)
+                .with_context(|| format!("loading {file}"))?,
+        );
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,274 @@
+//! TCP JSON-lines serving front-end + client library.
+//!
+//! One JSON object per line in each direction. Request fields:
+//! `family`, `steps`, `solver`, `policy`, `cfg`, `seed`, and either
+//! `label` (image) or `prompt_ids` (audio/video); `return_latent`
+//! includes the generated latent in the response. Control commands:
+//! `{"cmd": "ping"}`, `{"cmd": "metrics"}`, `{"cmd": "shutdown"}`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{Coordinator, Policy, Request};
+use crate::model::Cond;
+use crate::solvers::SolverKind;
+use crate::util::json::{parse, Json};
+use crate::util::threadpool::ThreadPool;
+
+/// Parse one request line into a coordinator [`Request`].
+pub fn parse_request(j: &Json) -> Result<(Request, bool)> {
+    let family = j
+        .get("family")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing family"))?
+        .to_string();
+    let steps = j.get("steps").and_then(|v| v.as_usize()).unwrap_or(50);
+    let solver_name = j.get("solver").and_then(|v| v.as_str()).unwrap_or("ddim");
+    let solver =
+        SolverKind::parse(solver_name).ok_or_else(|| anyhow!("unknown solver {solver_name}"))?;
+    let policy_s = j.get("policy").and_then(|v| v.as_str()).unwrap_or("no-cache");
+    let policy = Policy::parse(policy_s)?;
+    let cfg_scale = j.get("cfg").and_then(|v| v.as_f64()).unwrap_or(1.0) as f32;
+    let seed = j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let cond = if let Some(l) = j.get("label").and_then(|v| v.as_f64()) {
+        Cond::Label(vec![l as i32])
+    } else if let Some(p) = j.get("prompt_ids").and_then(|v| v.as_f64_vec()) {
+        Cond::Prompt(p.into_iter().map(|x| x as i32).collect())
+    } else {
+        return Err(anyhow!("need label or prompt_ids"));
+    };
+    let return_latent = j.get("return_latent").and_then(|v| v.as_bool()).unwrap_or(false);
+    Ok((
+        Request { id: 0, family, cond, solver, steps, cfg_scale, seed, policy },
+        return_latent,
+    ))
+}
+
+fn handle_line(coord: &Coordinator, line: &str, stop: &AtomicBool) -> String {
+    let fail = |msg: String| Json::obj().set("ok", false).set("error", msg).to_string();
+    let j = match parse(line) {
+        Ok(j) => j,
+        Err(e) => return fail(format!("bad json: {e}")),
+    };
+    if let Some(cmd) = j.get("cmd").and_then(|v| v.as_str()) {
+        return match cmd {
+            "ping" => Json::obj().set("ok", true).set("pong", true).to_string(),
+            "metrics" => Json::obj()
+                .set("ok", true)
+                .set("summary", coord.metrics().summary())
+                .to_string(),
+            "shutdown" => {
+                stop.store(true, Ordering::SeqCst);
+                Json::obj().set("ok", true).set("stopping", true).to_string()
+            }
+            other => fail(format!("unknown cmd {other}")),
+        };
+    }
+    let (request, return_latent) = match parse_request(&j) {
+        Ok(r) => r,
+        Err(e) => return fail(format!("{e}")),
+    };
+    match coord.generate_blocking(request) {
+        Ok(resp) => {
+            let mut out = Json::obj()
+                .set("ok", true)
+                .set("id", resp.id)
+                .set(
+                    "latent_shape",
+                    resp.latent.shape.iter().map(|&d| Json::Num(d as f64)).collect::<Vec<_>>(),
+                )
+                .set("batch_size", resp.batch_size)
+                .set("queue_s", resp.queue_seconds)
+                .set("exec_s", resp.exec_seconds)
+                .set("total_s", resp.total_seconds)
+                .set("skip_fraction", resp.gen_stats.skip_fraction());
+            if return_latent {
+                out = out.set(
+                    "latent",
+                    resp.latent.data.iter().map(|&v| Json::Num(v as f64)).collect::<Vec<_>>(),
+                );
+            }
+            out.to_string()
+        }
+        Err(e) => fail(format!("{e}")),
+    }
+}
+
+/// A running TCP server.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve. `addr` like "127.0.0.1:0" (0 = ephemeral port).
+    pub fn start(addr: &str, coord: Arc<Coordinator>, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("smoothcache-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers.max(1));
+                loop {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let coord = Arc::clone(&coord);
+                            let stop3 = Arc::clone(&stop2);
+                            pool.execute(move || {
+                                let _ = handle_conn(stream, &coord, &stop3);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, accept_handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Result<()> {
+    // Periodic read timeouts let the handler observe the stop flag even
+    // while a client holds an idle connection open (otherwise server
+    // shutdown would deadlock joining this thread).
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = handle_line(coord, trimmed, stop);
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+    }
+}
+
+/// Minimal blocking client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send one JSON value, read one JSON reply.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(line.trim()).map_err(|e| anyhow!("bad reply: {e} ({line:?})"))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let r = self.call(&Json::obj().set("cmd", "ping"))?;
+        Ok(r.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+
+    pub fn metrics_summary(&mut self) -> Result<String> {
+        let r = self.call(&Json::obj().set("cmd", "metrics"))?;
+        Ok(r.get("summary").and_then(|v| v.as_str()).unwrap_or("").to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_image() {
+        let j = parse(
+            r#"{"family":"image","label":3,"steps":12,"solver":"ddim",
+                "cfg":1.5,"seed":9,"policy":"smooth:0.18"}"#,
+        )
+        .unwrap();
+        let (r, ret) = parse_request(&j).unwrap();
+        assert_eq!(r.family, "image");
+        assert_eq!(r.cond, Cond::Label(vec![3]));
+        assert_eq!(r.steps, 12);
+        assert_eq!(r.cfg_scale, 1.5);
+        assert_eq!(r.policy, Policy::Smooth(0.18));
+        assert!(!ret);
+    }
+
+    #[test]
+    fn parse_request_prompt() {
+        let j = parse(
+            r#"{"family":"audio","prompt_ids":[1,2,3,4,5,6,7,8],
+                "solver":"dpmpp3m-sde","policy":"fora:2","return_latent":true}"#,
+        )
+        .unwrap();
+        let (r, ret) = parse_request(&j).unwrap();
+        assert_eq!(r.cond, Cond::Prompt(vec![1, 2, 3, 4, 5, 6, 7, 8]));
+        assert_eq!(r.solver, SolverKind::DpmPP3M { sde: true });
+        assert!(ret);
+    }
+
+    #[test]
+    fn parse_request_rejects_missing_cond() {
+        let j = parse(r#"{"family":"image"}"#).unwrap();
+        assert!(parse_request(&j).is_err());
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_solver() {
+        let j = parse(r#"{"family":"image","label":0,"solver":"magic"}"#).unwrap();
+        assert!(parse_request(&j).is_err());
+    }
+}

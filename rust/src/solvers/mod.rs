@@ -1,0 +1,437 @@
+//! Diffusion samplers: DDIM, ancestral DDPM, DPM-Solver++ (2M / 3M, with
+//! an optional SDE noise term), and Rectified-Flow Euler — the solver
+//! matrix the paper evaluates SmoothCache under (DDIM for DiT-XL,
+//! DPM-Solver++(3M) SDE for Stable Audio Open, RF for OpenSora).
+//!
+//! Solvers are model-agnostic: the pipeline feeds them the (CFG-merged)
+//! model prediction each step; multistep state lives inside
+//! [`SolverRun`]. Validated against an analytic Gaussian diffusion in
+//! the tests below (exact-eps model ⇒ known terminal distribution).
+
+pub mod heun;
+pub mod noise;
+
+pub use heun::HeunRun;
+pub use noise::{AlphaBar, Cosine};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use noise::LinearBeta;
+
+/// What the network's output means to the solver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Prediction {
+    /// epsilon (noise) prediction — DDPM-family solvers.
+    Epsilon,
+    /// velocity v = eps - x0 on the linear path — rectified flow.
+    Velocity,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    Ddim,
+    DdpmAncestral,
+    DpmPP2M,
+    /// 3rd-order multistep; `sde` adds the stochastic churn term.
+    DpmPP3M { sde: bool },
+    RectifiedFlow,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        Some(match s {
+            "ddim" => SolverKind::Ddim,
+            "ddpm" => SolverKind::DdpmAncestral,
+            "dpmpp2m" => SolverKind::DpmPP2M,
+            "dpmpp3m" => SolverKind::DpmPP3M { sde: false },
+            "dpmpp3m-sde" => SolverKind::DpmPP3M { sde: true },
+            "rf" => SolverKind::RectifiedFlow,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Ddim => "ddim",
+            SolverKind::DdpmAncestral => "ddpm",
+            SolverKind::DpmPP2M => "dpmpp2m",
+            SolverKind::DpmPP3M { sde: false } => "dpmpp3m",
+            SolverKind::DpmPP3M { sde: true } => "dpmpp3m-sde",
+            SolverKind::RectifiedFlow => "rf",
+        }
+    }
+
+    pub fn prediction(&self) -> Prediction {
+        match self {
+            SolverKind::RectifiedFlow => Prediction::Velocity,
+            _ => Prediction::Epsilon,
+        }
+    }
+}
+
+/// One sampling trajectory: holds the timestep grid and multistep state.
+pub struct SolverRun {
+    pub kind: SolverKind,
+    /// t_0 > t_1 > … > t_{steps} = 0 (length steps+1; step i integrates
+    /// t_i → t_{i+1}).
+    pub ts: Vec<f64>,
+    sched: LinearBeta,
+    /// previous x0 predictions (most recent first) for multistep solvers.
+    history: Vec<Tensor>,
+    /// previous lambda values aligned with history fills.
+    lambda_history: Vec<f64>,
+}
+
+/// Terminal t for epsilon solvers (avoid the degenerate sigma→0 region
+/// of the discrete schedule; standard practice).
+const T_MIN: f64 = 1e-3;
+
+impl SolverRun {
+    pub fn new(kind: SolverKind, steps: usize) -> SolverRun {
+        assert!(steps >= 1);
+        let ts = match kind {
+            SolverKind::RectifiedFlow => {
+                // uniform 1 → 0 Euler grid
+                (0..=steps).map(|i| 1.0 - i as f64 / steps as f64).collect()
+            }
+            _ => {
+                // uniform 1 → T_MIN, then a final hop to 0
+                let mut ts: Vec<f64> = (0..steps)
+                    .map(|i| 1.0 - (1.0 - T_MIN) * i as f64 / steps as f64)
+                    .collect();
+                ts.push(0.0);
+                ts
+            }
+        };
+        SolverRun {
+            kind,
+            ts,
+            sched: LinearBeta::new(),
+            history: Vec::new(),
+            lambda_history: Vec::new(),
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.ts.len() - 1
+    }
+
+    /// The t the model is evaluated at for step i.
+    pub fn model_t(&self, i: usize) -> f64 {
+        self.ts[i]
+    }
+
+    /// Initial latent: standard normal.
+    pub fn init_latent(shape: Vec<usize>, rng: &mut Rng) -> Tensor {
+        Tensor::randn(shape, rng)
+    }
+
+    /// Advance x from t_i to t_{i+1} given the model output at t_i.
+    pub fn step(&mut self, i: usize, x: &Tensor, model_out: &Tensor, rng: &mut Rng) -> Tensor {
+        let (t, t_next) = (self.ts[i], self.ts[i + 1]);
+        match self.kind {
+            SolverKind::RectifiedFlow => {
+                // x' = x - dt * v  (v points data → noise as t: 0 → 1)
+                let dt = t - t_next;
+                x.zip(model_out, |xv, v| xv - (dt as f32) * v)
+            }
+            SolverKind::Ddim => {
+                let (a, s) = (self.sched.alpha(t), self.sched.sigma(t));
+                let (an, sn) = (self.sched.alpha(t_next), self.sched.sigma(t_next));
+                // x0 = (x - s·eps)/a ; x' = an·x0 + sn·eps
+                x.zip(model_out, |xv, e| {
+                    let x0 = (xv - (s as f32) * e) / (a as f32);
+                    (an as f32) * x0 + (sn as f32) * e
+                })
+            }
+            SolverKind::DdpmAncestral => {
+                let ab = self.sched.alpha_bar(t);
+                let abn = self.sched.alpha_bar(t_next);
+                let a_step = (ab / abn).clamp(1e-12, 1.0); // per-step alpha
+                let beta = 1.0 - a_step;
+                let coef = beta / (1.0 - ab).max(1e-12).sqrt();
+                let inv_sqrt_a = 1.0 / a_step.sqrt();
+                let var = (beta * (1.0 - abn) / (1.0 - ab).max(1e-12)).max(0.0);
+                let sd = if t_next > 0.0 { var.sqrt() } else { 0.0 };
+                let mut out =
+                    x.zip(model_out, |xv, e| (inv_sqrt_a as f32) * (xv - (coef as f32) * e));
+                if sd > 0.0 {
+                    for v in &mut out.data {
+                        *v += (sd as f32) * rng.normal_f32();
+                    }
+                }
+                out
+            }
+            SolverKind::DpmPP2M | SolverKind::DpmPP3M { .. } => {
+                self.dpmpp_step(i, x, model_out, rng)
+            }
+        }
+    }
+
+    /// DPM-Solver++ multistep update (data-prediction formulation).
+    fn dpmpp_step(&mut self, i: usize, x: &Tensor, eps: &Tensor, rng: &mut Rng) -> Tensor {
+        let (t, t_next) = (self.ts[i], self.ts[i + 1]);
+        let (a, s) = (self.sched.alpha(t), self.sched.sigma(t));
+        let lam = self.sched.lambda(t);
+        // x0 prediction at the current point
+        let x0 = x.zip(eps, |xv, e| (xv - (s as f32) * e) / (a as f32));
+
+        if t_next <= 0.0 {
+            // final step: jump straight to the predicted x0
+            self.push_history(x0.clone(), lam);
+            return x0;
+        }
+        let an = self.sched.alpha(t_next);
+        let sn = self.sched.sigma(t_next);
+        let lam_next = self.sched.lambda(t_next);
+        let h = lam_next - lam; // > 0 (lambda rises as t falls)
+
+        let order = match self.kind {
+            SolverKind::DpmPP2M => 2,
+            SolverKind::DpmPP3M { .. } => 3,
+            _ => unreachable!(),
+        };
+        let sde = matches!(self.kind, SolverKind::DpmPP3M { sde: true });
+
+        if order >= 3 && self.history.len() >= 2 {
+            let h_prev = lam - self.lambda_history[0];
+            let r0 = (h_prev / h).max(1e-8);
+            let h_prev2 = self.lambda_history[0] - self.lambda_history[1];
+            let r1 = (h_prev2 / h).max(1e-8);
+            let m1 = &self.history[0];
+            let m2 = &self.history[1];
+            // third-order correction (diffusers-style multistep)
+            let d1_0 = x0.zip(m1, |c, p| (c - p) / r0 as f32);
+            let d1_1 = m1.zip(m2, |c, p| (c - p) / r1 as f32);
+            let frac = (r0 / (r0 + r1)) as f32;
+            let d1 = d1_0.zip(&d1_1, |u, v| u + frac * (u - v));
+            let d2 = d1_0.zip(&d1_1, |u, v| (u - v) / (r0 + r1) as f32);
+            let phi1 = (-h).exp_m1(); // e^{-h} - 1 (< 0)
+            let phi2 = phi1 / h + 1.0;
+            let phi3 = phi2 / h - 0.5;
+            let mut out = x.scale((sn / s) as f32);
+            out.axpy(&x0, (-(an) * phi1) as f32);
+            out.axpy(&d1, (-(an) * phi2) as f32);
+            out.axpy(&d2, (-(an) * phi3) as f32);
+            self.push_history(x0, lam);
+            return self.maybe_churn(out, sn, h, sde, rng);
+        }
+
+        // Effective data estimate D from multistep history (2nd order).
+        let d = if order >= 2 && !self.history.is_empty() {
+            let h_prev = lam - self.lambda_history[0];
+            let r0 = (h_prev / h).max(1e-8);
+            let m1 = &self.history[0];
+            let w = (1.0 + 1.0 / (2.0 * r0)) as f32;
+            x0.zip(m1, |c, p| w * c + (1.0 - w) * p)
+        } else {
+            x0.clone()
+        };
+
+        let phi1 = (-h).exp_m1();
+        let mut out = x.scale((sn / s) as f32);
+        out.axpy(&d, (-(an) * phi1) as f32);
+        self.push_history(x0, lam);
+        self.maybe_churn(out, sn, h, sde, rng)
+    }
+
+    fn maybe_churn(&self, mut out: Tensor, sn: f64, h: f64, sde: bool, rng: &mut Rng) -> Tensor {
+        if sde {
+            // SDE variant: inject fresh noise with matched marginal scale
+            // (Karras-style churn at half strength).
+            let churn = (sn * (1.0 - (-2.0 * h).exp()).max(0.0).sqrt() * 0.5) as f32;
+            if churn > 0.0 {
+                for v in &mut out.data {
+                    *v += churn * rng.normal_f32();
+                }
+            }
+        }
+        out
+    }
+
+    fn push_history(&mut self, x0: Tensor, lam: f64) {
+        self.history.insert(0, x0);
+        self.lambda_history.insert(0, lam);
+        self.history.truncate(2);
+        self.lambda_history.truncate(2);
+    }
+}
+
+/// Classifier-free guidance merge: `uncond + scale · (cond − uncond)`.
+pub fn cfg_merge(cond: &Tensor, uncond: &Tensor, scale: f32) -> Tensor {
+    uncond.zip(cond, |u, c| u + scale * (c - u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Analytic eps model for Gaussian data x0 ~ N(mu, s2·I) under the
+    /// DDPM forward process: E[eps | x_t] is linear in x_t.
+    struct GaussianEps {
+        mu: f32,
+        s2: f64,
+        sched: LinearBeta,
+    }
+
+    impl GaussianEps {
+        fn eps(&self, x: &Tensor, t: f64) -> Tensor {
+            let a = self.sched.alpha(t);
+            let sg = self.sched.sigma(t);
+            let denom = a * a * self.s2 + sg * sg;
+            x.map(|xv| ((sg / denom) as f32) * (xv - (a as f32) * self.mu))
+        }
+    }
+
+    /// Analytic RF velocity for Gaussian data on the linear path
+    /// x_t = (1-t)·x0 + t·e:  v = E[e − x0 | x_t].
+    struct GaussianVel {
+        mu: f32,
+        s2: f64,
+    }
+
+    impl GaussianVel {
+        fn vel(&self, x: &Tensor, t: f64) -> Tensor {
+            let c = 1.0 - t;
+            let var = c * c * self.s2 + t * t;
+            x.map(|xv| {
+                let z = xv - (c as f32) * self.mu;
+                let e = (t / var) as f32 * z;
+                let x0 = self.mu + ((c * self.s2 / var) as f32) * z;
+                e - x0
+            })
+        }
+    }
+
+    fn terminal_stats(kind: SolverKind, steps: usize, mu: f32, s2: f64, n: usize) -> (f64, f64) {
+        let mut rng = Rng::new(99);
+        let eps_model = GaussianEps { mu, s2, sched: LinearBeta::new() };
+        let vel_model = GaussianVel { mu, s2 };
+        let mut all = Vec::with_capacity(n * 8);
+        for _ in 0..n {
+            let mut run = SolverRun::new(kind, steps);
+            let mut x = SolverRun::init_latent(vec![8], &mut rng);
+            for i in 0..run.steps() {
+                let t = run.model_t(i);
+                let out = match kind.prediction() {
+                    Prediction::Epsilon => eps_model.eps(&x, t),
+                    Prediction::Velocity => vel_model.vel(&x, t),
+                };
+                x = run.step(i, &x, &out, &mut rng);
+            }
+            all.extend(x.data.iter().map(|&v| v as f64));
+        }
+        let m = all.iter().sum::<f64>() / all.len() as f64;
+        let v = all.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / all.len() as f64;
+        (m, v)
+    }
+
+    #[test]
+    fn ddim_recovers_gaussian() {
+        let (m, v) = terminal_stats(SolverKind::Ddim, 50, 2.0, 0.25, 300);
+        assert!((m - 2.0).abs() < 0.1, "mean={m}");
+        assert!((v - 0.25).abs() < 0.08, "var={v}");
+    }
+
+    #[test]
+    fn ddpm_ancestral_recovers_gaussian() {
+        let (m, v) = terminal_stats(SolverKind::DdpmAncestral, 100, -1.0, 0.5, 300);
+        assert!((m + 1.0).abs() < 0.15, "mean={m}");
+        assert!((v - 0.5).abs() < 0.15, "var={v}");
+    }
+
+    #[test]
+    fn dpmpp2m_recovers_gaussian() {
+        let (m, v) = terminal_stats(SolverKind::DpmPP2M, 20, 1.5, 0.09, 300);
+        assert!((m - 1.5).abs() < 0.1, "mean={m}");
+        assert!((v - 0.09).abs() < 0.06, "var={v}");
+    }
+
+    #[test]
+    fn dpmpp3m_recovers_gaussian() {
+        let (m, v) = terminal_stats(SolverKind::DpmPP3M { sde: false }, 20, 0.5, 1.0, 300);
+        assert!((m - 0.5).abs() < 0.12, "mean={m}");
+        assert!((v - 1.0).abs() < 0.3, "var={v}");
+    }
+
+    #[test]
+    fn dpmpp3m_sde_recovers_gaussian_mean() {
+        let (m, _v) = terminal_stats(SolverKind::DpmPP3M { sde: true }, 50, 0.8, 0.25, 300);
+        assert!((m - 0.8).abs() < 0.15, "mean={m}");
+    }
+
+    #[test]
+    fn rectified_flow_recovers_gaussian() {
+        let (m, v) = terminal_stats(SolverKind::RectifiedFlow, 50, 1.0, 0.16, 300);
+        assert!((m - 1.0).abs() < 0.1, "mean={m}");
+        assert!((v - 0.16).abs() < 0.08, "var={v}");
+    }
+
+    #[test]
+    fn dpmpp_fewer_steps_close_to_many_steps_ddim() {
+        // 2nd-order with 10 steps should land near DDIM with 100 steps
+        let (m10, v10) = terminal_stats(SolverKind::DpmPP2M, 10, 2.0, 0.25, 200);
+        let (m100, v100) = terminal_stats(SolverKind::Ddim, 100, 2.0, 0.25, 200);
+        assert!((m10 - m100).abs() < 0.12, "m10={m10} m100={m100}");
+        assert!((v10 - v100).abs() < 0.1, "v10={v10} v100={v100}");
+    }
+
+    #[test]
+    fn timestep_grids_are_descending_to_zero() {
+        for kind in [
+            SolverKind::Ddim,
+            SolverKind::DdpmAncestral,
+            SolverKind::DpmPP2M,
+            SolverKind::DpmPP3M { sde: false },
+            SolverKind::RectifiedFlow,
+        ] {
+            let run = SolverRun::new(kind, 30);
+            assert_eq!(run.steps(), 30);
+            assert_eq!(*run.ts.last().unwrap(), 0.0);
+            assert!((run.ts[0] - 1.0).abs() < 1e-12);
+            for w in run.ts.windows(2) {
+                assert!(w[0] > w[1], "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cfg_merge_identity_at_scale_one() {
+        let c = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let u = Tensor::new(vec![3], vec![0., 0., 0.]);
+        assert_eq!(cfg_merge(&c, &u, 1.0).data, vec![1., 2., 3.]);
+        assert_eq!(cfg_merge(&c, &u, 2.0).data, vec![2., 4., 6.]);
+        assert_eq!(cfg_merge(&c, &u, 0.0).data, vec![0., 0., 0.]);
+    }
+
+    #[test]
+    fn solver_kind_parse_roundtrip() {
+        for name in ["ddim", "ddpm", "dpmpp2m", "dpmpp3m", "dpmpp3m-sde", "rf"] {
+            assert_eq!(SolverKind::parse(name).unwrap().name(), name);
+        }
+        assert!(SolverKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn deterministic_solvers_are_deterministic() {
+        for kind in [SolverKind::Ddim, SolverKind::DpmPP2M, SolverKind::RectifiedFlow] {
+            let run_one = |seed: u64| {
+                let mut rng = Rng::new(seed);
+                let model = GaussianEps { mu: 0.0, s2: 1.0, sched: LinearBeta::new() };
+                let vel = GaussianVel { mu: 0.0, s2: 1.0 };
+                let mut run = SolverRun::new(kind, 10);
+                let mut x = SolverRun::init_latent(vec![4], &mut rng);
+                for i in 0..run.steps() {
+                    let t = run.model_t(i);
+                    let out = match kind.prediction() {
+                        Prediction::Epsilon => model.eps(&x, t),
+                        Prediction::Velocity => vel.vel(&x, t),
+                    };
+                    x = run.step(i, &x, &out, &mut rng);
+                }
+                x
+            };
+            assert_eq!(run_one(5).data, run_one(5).data, "{kind:?}");
+        }
+    }
+}

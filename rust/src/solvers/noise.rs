@@ -1,0 +1,175 @@
+//! Noise schedules: continuous-time wrappers over the discrete training
+//! schedule, plus the rectified-flow linear path.
+//!
+//! The image family is trained (python/compile/train.py) with the
+//! standard linear-beta DDPM schedule, T=1000; `alpha_bar(t)` here
+//! reproduces that discretisation exactly so the Rust solvers see the
+//! same forward process the model was trained under.
+
+pub const T_TRAIN: usize = 1000;
+
+/// Common interface over diffusion noise schedules: everything the
+/// solvers need derives from ᾱ(t).
+pub trait AlphaBar {
+    /// Cumulative ᾱ(t) for continuous t ∈ [0, 1].
+    fn alpha_bar(&self, t: f64) -> f64;
+
+    /// alpha(t) = sqrt(ᾱ), the signal coefficient.
+    fn alpha(&self, t: f64) -> f64 {
+        self.alpha_bar(t).sqrt()
+    }
+
+    /// sigma(t) = sqrt(1 − ᾱ), the noise coefficient.
+    fn sigma(&self, t: f64) -> f64 {
+        (1.0 - self.alpha_bar(t)).max(1e-12).sqrt()
+    }
+
+    /// Half-log-SNR λ(t) = ln(alpha/sigma), used by DPM-Solver++.
+    fn lambda(&self, t: f64) -> f64 {
+        (self.alpha(t) / self.sigma(t)).ln()
+    }
+}
+
+/// Linear-beta schedule (beta: 1e-4 → 0.02 over 1000 steps).
+#[derive(Clone, Debug)]
+pub struct LinearBeta {
+    log_ab: Vec<f64>,
+}
+
+impl Default for LinearBeta {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LinearBeta {
+    pub fn new() -> LinearBeta {
+        let mut log_ab = Vec::with_capacity(T_TRAIN);
+        let mut acc = 0.0f64;
+        for i in 0..T_TRAIN {
+            let beta = 1e-4 + (0.02 - 1e-4) * i as f64 / (T_TRAIN - 1) as f64;
+            acc += (1.0 - beta).ln();
+            log_ab.push(acc);
+        }
+        LinearBeta { log_ab }
+    }
+
+    /// Cumulative ᾱ(t) for continuous t ∈ [0, 1] (matches train.py).
+    pub fn alpha_bar(&self, t: f64) -> f64 {
+        if t <= 0.0 {
+            return 1.0;
+        }
+        let idx = ((t * (T_TRAIN - 1) as f64) as usize).min(T_TRAIN - 1);
+        self.log_ab[idx].exp()
+    }
+
+    /// alpha(t) = sqrt(ᾱ), the signal coefficient.
+    pub fn alpha(&self, t: f64) -> f64 {
+        self.alpha_bar(t).sqrt()
+    }
+
+    /// sigma(t) = sqrt(1 - ᾱ), the noise coefficient.
+    pub fn sigma(&self, t: f64) -> f64 {
+        (1.0 - self.alpha_bar(t)).max(1e-12).sqrt()
+    }
+
+    /// Half-log-SNR λ(t) = ln(alpha/sigma), used by DPM-Solver++.
+    pub fn lambda(&self, t: f64) -> f64 {
+        (self.alpha(t) / self.sigma(t)).ln()
+    }
+}
+
+impl AlphaBar for LinearBeta {
+    fn alpha_bar(&self, t: f64) -> f64 {
+        LinearBeta::alpha_bar(self, t)
+    }
+}
+
+/// Nichol & Dhariwal cosine schedule:
+/// ᾱ(t) = cos²(((t + s)/(1 + s))·π/2) / cos²((s/(1 + s))·π/2), s = 0.008.
+///
+/// Extension feature: the image family is *trained* under the linear
+/// schedule, so cosine is for solver-compatibility experiments, not the
+/// default sampling path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cosine;
+
+impl AlphaBar for Cosine {
+    fn alpha_bar(&self, t: f64) -> f64 {
+        const S: f64 = 0.008;
+        let f = |u: f64| ((u + S) / (1.0 + S) * std::f64::consts::FRAC_PI_2).cos().powi(2);
+        (f(t.clamp(0.0, 1.0)) / f(0.0)).clamp(1e-9, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_bar_monotone_decreasing() {
+        let s = LinearBeta::new();
+        let mut prev = s.alpha_bar(0.0);
+        assert!((prev - 1.0).abs() < 1e-12);
+        for i in 1..=100 {
+            let t = i as f64 / 100.0;
+            let ab = s.alpha_bar(t);
+            assert!(ab < prev, "t={t}");
+            assert!(ab > 0.0);
+            prev = ab;
+        }
+    }
+
+    #[test]
+    fn signal_noise_unit_norm() {
+        let s = LinearBeta::new();
+        for i in 0..=10 {
+            let t = i as f64 / 10.0;
+            let total = s.alpha(t).powi(2) + s.sigma(t).powi(2);
+            // sigma uses max(1-ab, eps), so near t=0 the identity is approximate
+            assert!((total - 1.0).abs() < 1e-6, "t={t} total={total}");
+        }
+    }
+
+    #[test]
+    fn lambda_monotone_decreasing_in_t() {
+        let s = LinearBeta::new();
+        let mut prev = s.lambda(0.01);
+        for i in 2..=100 {
+            let t = i as f64 / 100.0;
+            let l = s.lambda(t);
+            assert!(l < prev, "t={t}");
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn terminal_snr_is_low() {
+        let s = LinearBeta::new();
+        // at t=1 the process should be nearly pure noise
+        assert!(s.alpha_bar(1.0) < 0.01);
+    }
+
+    #[test]
+    fn cosine_schedule_monotone_and_bounded() {
+        let c = Cosine;
+        let mut prev = AlphaBar::alpha_bar(&c, 0.0);
+        assert!((prev - 1.0).abs() < 1e-9);
+        for i in 1..=50 {
+            let t = i as f64 / 50.0;
+            let ab = AlphaBar::alpha_bar(&c, t);
+            assert!(ab <= prev + 1e-12 && ab > 0.0, "t={t}");
+            prev = ab;
+        }
+        assert!(AlphaBar::alpha_bar(&c, 1.0) < 1e-3);
+    }
+
+    #[test]
+    fn cosine_decays_slower_early_than_linear() {
+        // the cosine schedule's signature property: more signal retained
+        // at small t than linear-beta
+        let lin = LinearBeta::new();
+        let cos = Cosine;
+        assert!(AlphaBar::alpha_bar(&cos, 0.25) > lin.alpha_bar(0.25));
+    }
+}

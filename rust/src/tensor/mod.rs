@@ -1,0 +1,284 @@
+//! Host-side dense f32 tensor (substrate).
+//!
+//! The L3 hot path moves activations between PJRT executions, solvers
+//! and the layer cache as host tensors; this module provides the small
+//! op set those layers need (no BLAS — PJRT owns the heavy math).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+            "shape {shape:?} vs data len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn randn(shape: Vec<usize>, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: rng.normal_vec(n) }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Leading (batch) dimension.
+    pub fn dim0(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+
+    /// Elements per leading-dim slice.
+    pub fn stride0(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    // ---- elementwise -------------------------------------------------------
+
+    pub fn map(&self, mut f: impl FnMut(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip(&self, other: &Tensor, mut f: impl FnMut(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// self += other * s (in place; the engine's residual-add hot path).
+    pub fn axpy(&mut self, other: &Tensor, s: f32) {
+        assert_eq!(self.shape, other.shape);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += b * s;
+        }
+    }
+
+    pub fn add_inplace(&mut self, other: &Tensor) {
+        self.axpy(other, 1.0);
+    }
+
+    // ---- reductions --------------------------------------------------------
+
+    pub fn l1(&self) -> f64 {
+        self.data.iter().map(|&x| x.abs() as f64).sum()
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        let m = self.mean();
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / self.data.len() as f64
+        }
+    }
+
+    /// Paper Eq. 4 numerator/denominator: ||a - b||1 / ||a||1.
+    pub fn rel_l1_error(&self, other: &Tensor) -> f64 {
+        let denom = self.l1().max(1e-12);
+        self.sub(other).l1() / denom
+    }
+
+    // ---- batch manipulation (dim 0) ----------------------------------------
+
+    /// Copy of samples `[lo, hi)` along dim 0.
+    pub fn batch_slice(&self, lo: usize, hi: usize) -> Tensor {
+        let s = self.stride0();
+        assert!(hi <= self.dim0() && lo <= hi);
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor { shape, data: self.data[lo * s..hi * s].to_vec() }
+    }
+
+    /// One sample along dim 0 (keeps the leading dim as 1).
+    pub fn sample(&self, i: usize) -> Tensor {
+        self.batch_slice(i, i + 1)
+    }
+
+    /// Concatenate along dim 0. All inputs must agree on trailing dims.
+    pub fn cat0(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape[1..];
+        let mut total = 0;
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail, "trailing dims differ");
+            total += p.dim0();
+        }
+        let mut shape = parts[0].shape.clone();
+        shape[0] = total;
+        let mut data = Vec::with_capacity(total * parts[0].stride0());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Tensor { shape, data }
+    }
+
+    /// Pad dim 0 up to `n` by repeating the last sample (batcher padding).
+    pub fn pad0_to(&self, n: usize) -> Tensor {
+        let b = self.dim0();
+        assert!(n >= b && b > 0);
+        if n == b {
+            return self.clone();
+        }
+        let s = self.stride0();
+        let mut data = self.data.clone();
+        let last = self.data[(b - 1) * s..b * s].to_vec();
+        for _ in b..n {
+            data.extend_from_slice(&last);
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Tensor { shape, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.stride0(), 3);
+        let r = t.reshape(vec![3, 2]);
+        assert_eq!(r.shape, vec![3, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let b = Tensor::new(vec![3], vec![10., 20., 30.]);
+        assert_eq!(a.add(&b).data, vec![11., 22., 33.]);
+        assert_eq!(b.sub(&a).data, vec![9., 18., 27.]);
+        assert_eq!(a.mul(&b).data, vec![10., 40., 90.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn axpy_inplace() {
+        let mut a = Tensor::new(vec![2], vec![1., 1.]);
+        let b = Tensor::new(vec![2], vec![2., 4.]);
+        a.axpy(&b, 0.5);
+        assert_eq!(a.data, vec![2., 3.]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(vec![4], vec![1., -2., 3., -4.]);
+        assert_eq!(t.l1(), 10.0);
+        assert!((t.l2() - 30f64.sqrt()).abs() < 1e-9);
+        assert_eq!(t.max_abs(), 4.0);
+        assert_eq!(t.mean(), -0.5);
+    }
+
+    #[test]
+    fn rel_l1_error_of_self_is_zero() {
+        let t = Tensor::new(vec![3], vec![1., 2., 3.]);
+        assert_eq!(t.rel_l1_error(&t), 0.0);
+        let o = Tensor::new(vec![3], vec![2., 2., 3.]);
+        assert!((t.rel_l1_error(&o) - 1.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_slice_and_cat() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.batch_slice(1, 3);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![3., 4., 5., 6.]);
+        let c = Tensor::cat0(&[&t.sample(0), &s]);
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.data, t.data);
+    }
+
+    #[test]
+    fn pad0_repeats_last() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let p = t.pad0_to(4);
+        assert_eq!(p.shape, vec![4, 2]);
+        assert_eq!(&p.data[4..], &[3., 4., 3., 4.]);
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        assert_eq!(Tensor::randn(vec![10], &mut r1), Tensor::randn(vec![10], &mut r2));
+    }
+}

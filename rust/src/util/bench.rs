@@ -1,0 +1,225 @@
+//! Benchmark harness (substrate; no criterion offline).
+//!
+//! Every `[[bench]]` target in this repo uses `harness = false` and this
+//! module: warmup, timed iterations, robust statistics, and aligned
+//! table printing so each bench binary can emit the same rows/series as
+//! the corresponding paper table or figure.
+//!
+//! `SMOOTHCACHE_BENCH_FAST=1` trims sample counts for smoke runs.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: xs[0],
+            max_s: xs[n - 1],
+            p50_s: pct(0.50),
+            p95_s: pct(0.95),
+            p99_s: pct(0.99),
+        }
+    }
+}
+
+pub fn fast_mode() -> bool {
+    std::env::var("SMOOTHCACHE_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    let (warmup, iters) = if fast_mode() {
+        (warmup.min(1), iters.clamp(1, 3))
+    } else {
+        (warmup, iters)
+    };
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Simple stopwatch for one-shot timings inside bench tables.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Aligned text table, used by every bench to print paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+
+    /// CSV for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render a series as a crude ASCII plot (for figure benches).
+pub fn ascii_plot(title: &str, series: &[(String, Vec<f64>)], height: usize) -> String {
+    let all: Vec<f64> = series.iter().flat_map(|(_, ys)| ys.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("{title}\n(empty)\n");
+    }
+    let (lo, hi) = all.iter().fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+    let span = (hi - lo).max(1e-12);
+    let width = series.iter().map(|(_, ys)| ys.len()).max().unwrap();
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (x, &y) in ys.iter().enumerate() {
+            let r = (((y - lo) / span) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - r][x] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}  [min={lo:.4}, max={hi:.4}]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.n, 100);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+        assert!(s.p95_s <= s.p99_s && s.p99_s <= s.max_s);
+        assert!((s.mean_s - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0;
+        std::env::remove_var("SMOOTHCACHE_BENCH_FAST");
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_alignment_and_csv() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["short".into(), "1".into()]);
+        t.row(&["a-much-longer-name".into(), "2.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("a-much-longer-name"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("name,value"));
+    }
+
+    #[test]
+    fn ascii_plot_contains_series() {
+        let p = ascii_plot("t", &[("a".into(), vec![0.0, 1.0, 0.5])], 5);
+        assert!(p.contains('*'));
+        assert!(p.contains("a"));
+    }
+}

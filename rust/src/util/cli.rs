@@ -1,0 +1,219 @@
+//! Declarative CLI flag parser (substrate; no clap offline).
+//!
+//! Supports `--name value`, `--name=value`, boolean `--flag`, and a
+//! leading positional subcommand. Generates usage text from the specs.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_bool: bool,
+}
+
+#[derive(Default)]
+pub struct CliSpec {
+    pub command: String,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+impl CliSpec {
+    pub fn new(command: &str, about: &'static str) -> CliSpec {
+        CliSpec { command: command.to_string(), about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(Flag {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    pub fn req_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, is_bool: false });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag {
+            name,
+            help,
+            default: Some("false".into()),
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.command, self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => String::new(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    pub fn parse(&self, args: &[String]) -> Result<ParsedArgs, String> {
+        let mut vals: BTreeMap<String, String> = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                vals.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            let Some(stripped) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {a:?}\n\n{}", self.usage()));
+            };
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let Some(flag) = self.flags.iter().find(|f| f.name == name) else {
+                return Err(format!("unknown flag --{name}\n\n{}", self.usage()));
+            };
+            let val = if let Some(v) = inline_val {
+                v
+            } else if flag.is_bool {
+                "true".to_string()
+            } else {
+                i += 1;
+                args.get(i).cloned().ok_or(format!("--{name} needs a value"))?
+            };
+            vals.insert(name.to_string(), val);
+            i += 1;
+        }
+        for f in &self.flags {
+            if !vals.contains_key(f.name) {
+                return Err(format!("missing required flag --{}\n\n{}", f.name, self.usage()));
+            }
+        }
+        Ok(ParsedArgs { vals })
+    }
+}
+
+#[derive(Debug)]
+pub struct ParsedArgs {
+    vals: BTreeMap<String, String>,
+}
+
+impl ParsedArgs {
+    pub fn str(&self, name: &str) -> &str {
+        self.vals.get(name).map(|s| s.as_str()).unwrap_or_else(|| panic!("flag {name} not in spec"))
+    }
+
+    pub fn string(&self, name: &str) -> String {
+        self.str(name).to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.str(name).parse().map_err(|_| format!("--{name}: expected integer, got {:?}", self.str(name)))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.str(name).parse().map_err(|_| format!("--{name}: expected integer, got {:?}", self.str(name)))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.str(name).parse().map_err(|_| format!("--{name}: expected number, got {:?}", self.str(name)))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.str(name) == "true"
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        let s = self.str(name);
+        if s.is_empty() {
+            vec![]
+        } else {
+            s.split(',').map(|p| p.trim().to_string()).collect()
+        }
+    }
+
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>, String> {
+        self.list(name)
+            .iter()
+            .map(|s| s.parse().map_err(|_| format!("--{name}: bad number {s:?}")))
+            .collect()
+    }
+
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
+        self.list(name)
+            .iter()
+            .map(|s| s.parse().map_err(|_| format!("--{name}: bad integer {s:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CliSpec {
+        CliSpec::new("test", "a test command")
+            .flag("alpha", "0.1", "threshold")
+            .req_flag("family", "model family")
+            .bool_flag("verbose", "log more")
+    }
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_required() {
+        let a = spec().parse(&argv(&["--family", "image"])).unwrap();
+        assert_eq!(a.str("alpha"), "0.1");
+        assert_eq!(a.f64("alpha").unwrap(), 0.1);
+        assert_eq!(a.str("family"), "image");
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_bools() {
+        let a = spec().parse(&argv(&["--family=audio", "--alpha=0.3", "--verbose"])).unwrap();
+        assert_eq!(a.str("family"), "audio");
+        assert_eq!(a.f64("alpha").unwrap(), 0.3);
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&argv(&["--alpha", "0.2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(spec().parse(&argv(&["--family", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = spec().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--alpha"));
+        assert!(err.contains("threshold"));
+    }
+
+    #[test]
+    fn lists_parse() {
+        let s = CliSpec::new("t", "x").flag("steps", "30,50,70", "steps");
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.usize_list("steps").unwrap(), vec![30, 50, 70]);
+    }
+}

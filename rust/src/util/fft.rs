@@ -1,0 +1,205 @@
+//! Radix-2 FFT and spectrogram utilities (substrate).
+//!
+//! Powers the audio-domain quality metrics: the paper evaluates Stable
+//! Audio Open with FD_OpenL3 / KL_PaSST, both of which operate on
+//! time-frequency representations. Our proxies (quality::audio) compute
+//! log-magnitude spectrogram features through this module, so the
+//! "audio metric looks at spectra" semantics survive the substitution
+//! (DESIGN.md §3).
+
+use std::f64::consts::PI;
+
+/// In-place iterative radix-2 Cooley-Tukey FFT over interleaved
+/// (re, im) pairs. `n` must be a power of two.
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    // butterflies
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr0, vi0) = (re[i + k + len / 2], im[i + k + len / 2]);
+                let vr = vr0 * cr - vi0 * ci;
+                let vi = vr0 * ci + vi0 * cr;
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Forward FFT of a real signal; returns (re, im) of length n (padded to
+/// the next power of two).
+pub fn rfft(signal: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = signal.len().next_power_of_two();
+    let mut re = signal.to_vec();
+    re.resize(n, 0.0);
+    let mut im = vec![0.0; n];
+    fft_inplace(&mut re, &mut im, false);
+    (re, im)
+}
+
+/// Magnitude spectrum (first n/2+1 bins) of a real signal.
+pub fn magnitude_spectrum(signal: &[f64]) -> Vec<f64> {
+    let (re, im) = rfft(signal);
+    let n = re.len();
+    (0..=n / 2).map(|i| (re[i] * re[i] + im[i] * im[i]).sqrt()).collect()
+}
+
+/// Hann window.
+pub fn hann(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| 0.5 * (1.0 - (2.0 * PI * i as f64 / n as f64).cos()))
+        .collect()
+}
+
+/// Log-magnitude STFT spectrogram: frames × (n_fft/2 + 1).
+pub fn log_spectrogram(signal: &[f64], n_fft: usize, hop: usize) -> Vec<Vec<f64>> {
+    assert!(n_fft.is_power_of_two() && hop > 0);
+    let w = hann(n_fft);
+    let mut frames = Vec::new();
+    let mut start = 0;
+    while start + n_fft <= signal.len().max(n_fft) {
+        let mut frame = vec![0.0; n_fft];
+        for i in 0..n_fft {
+            let v = signal.get(start + i).copied().unwrap_or(0.0);
+            frame[i] = v * w[i];
+        }
+        let mag = magnitude_spectrum(&frame);
+        frames.push(mag.into_iter().map(|m| (m + 1e-8).ln()).collect());
+        if start + hop + n_fft > signal.len() && start + n_fft >= signal.len() {
+            break;
+        }
+        start += hop;
+    }
+    if frames.is_empty() {
+        frames.push(vec![0.0; n_fft / 2 + 1]);
+    }
+    frames
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut re: Vec<f64> = (0..16).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut im = vec![0.0; 16];
+        let orig = re.clone();
+        fft_inplace(&mut re, &mut im, false);
+        fft_inplace(&mut re, &mut im, true);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        for v in im {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_of_pure_tone_peaks_at_bin() {
+        // cos(2π·4·t/N) → energy concentrated at bin 4
+        let n = 64;
+        let sig: Vec<f64> =
+            (0..n).map(|i| (2.0 * PI * 4.0 * i as f64 / n as f64).cos()).collect();
+        let mag = magnitude_spectrum(&sig);
+        let peak = mag
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak, 4);
+        assert!((mag[4] - n as f64 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let n = 128;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let sig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (re, im) = rfft(&sig);
+        let time_e: f64 = sig.iter().map(|x| x * x).sum();
+        let freq_e: f64 =
+            re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f64>() / n as f64;
+        assert!((time_e - freq_e).abs() < 1e-9 * time_e.max(1.0));
+    }
+
+    #[test]
+    fn dc_signal_has_only_dc_bin() {
+        let mag = magnitude_spectrum(&[1.0; 32]);
+        assert!((mag[0] - 32.0).abs() < 1e-9);
+        for &m in &mag[1..] {
+            assert!(m < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        let mut re = vec![0.0; 12];
+        let mut im = vec![0.0; 12];
+        fft_inplace(&mut re, &mut im, false);
+    }
+
+    #[test]
+    fn spectrogram_shape_and_determinism() {
+        let sig: Vec<f64> = (0..256).map(|i| (i as f64 * 0.1).sin()).collect();
+        let s1 = log_spectrogram(&sig, 64, 32);
+        let s2 = log_spectrogram(&sig, 64, 32);
+        assert_eq!(s1.len(), s2.len());
+        assert_eq!(s1[0].len(), 33);
+        assert!(s1.len() >= 6);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn hann_window_properties() {
+        let w = hann(64);
+        assert!(w[0] < 1e-12);
+        assert!((w[32] - 1.0).abs() < 1e-3);
+        assert!(w.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

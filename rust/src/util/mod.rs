@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (DESIGN.md section 3, offline-crate substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod fft;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,239 @@
+//! Mini property-based testing framework (substrate; no proptest offline).
+//!
+//! `forall` runs a property over `cases` generated inputs. On failure it
+//! greedily shrinks the failing case via the `Shrink` trait before
+//! reporting, and always prints the replay seed. Coordinator invariants
+//! (routing, batching, schedule state machines) are tested with this.
+
+use super::rng::Rng;
+
+/// Types that can propose strictly-smaller variants of themselves.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // drop halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // drop one element
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        // shrink one element
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                for s in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone, C: Shrink + Clone> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<(A, B, C)> {
+        let mut out: Vec<(A, B, C)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+pub struct PropError {
+    pub seed: u64,
+    pub case_index: usize,
+    pub message: String,
+}
+
+impl std::fmt::Debug for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed (replay: seed={}, case={}): {}",
+            self.seed, self.case_index, self.message
+        )
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics with the shrunk
+/// counterexample on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink greedily
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in best.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (replay seed={seed}, case={i})\n  shrunk input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::super::rng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi)
+    }
+
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        rng.range_f64(lo, hi)
+    }
+
+    pub fn vec_of<T>(rng: &mut Rng, len_lo: usize, len_hi: usize, f: impl Fn(&mut Rng) -> T) -> Vec<T> {
+        let n = rng.range(len_lo, len_hi);
+        (0..n).map(|_| f(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            1,
+            200,
+            |r| gen::vec_of(r, 0, 20, |r| r.below(100)),
+            |v: &Vec<usize>| {
+                let mut s = v.clone();
+                s.sort_unstable();
+                if s.len() == v.len() {
+                    Ok(())
+                } else {
+                    Err("sort changed length".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_replay() {
+        forall(2, 100, |r| r.below(1000), |&x: &usize| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // capture the panic message and assert the shrunk value is minimal-ish
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 100, |r| r.below(1000) + 500, |&x: &usize| {
+                if x < 500 {
+                    Ok(())
+                } else {
+                    Err("ge 500".into())
+                }
+            });
+        });
+        let msg = match result {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("should have failed"),
+        };
+        assert!(msg.contains("shrunk input: 500"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller() {
+        let v = vec![5usize, 6, 7];
+        assert!(v.shrink().iter().all(|s| s.len() < v.len() || s.iter().sum::<usize>() < 18));
+    }
+}

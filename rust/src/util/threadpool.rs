@@ -1,0 +1,156 @@
+//! Fixed-size worker thread pool (substrate).
+//!
+//! The offline crate set has no tokio; the serving coordinator is built
+//! on OS threads and mpsc channels instead (DESIGN.md section 3,
+//! offline-crate substitutions). Provides `execute` for fire-and-forget
+//! jobs and `parallel_map` for fork-join data parallelism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::Builder::new()
+                    .name(format!("smoothcache-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                pending.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::SeqCst)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Fork-join: apply `f` to every item, preserving order.
+    pub fn parallel_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.execute(move || {
+                let r = f(item);
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("worker panicked")).collect()
+    }
+
+    /// Block until the queue is drained.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.parallel_map((0..50).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn single_worker_is_sequential() {
+        let pool = ThreadPool::new(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..10 {
+            let log = Arc::clone(&log);
+            pool.execute(move || log.lock().unwrap().push(i));
+        }
+        pool.wait_idle();
+        assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,93 @@
+//! Workload generation: Poisson arrivals, conditioning samplers and
+//! trace record/replay for the serving benches (the paper measures
+//! steady-state latency; the e2e bench adds open-loop arrivals).
+
+use crate::model::Cond;
+use crate::util::rng::Rng;
+
+/// One request in a workload trace.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    /// arrival offset from trace start, seconds.
+    pub arrival_s: f64,
+    pub cond: Cond,
+    pub seed: u64,
+}
+
+/// Open-loop Poisson arrival trace over random conditionings.
+pub struct PoissonTrace {
+    pub items: Vec<TraceItem>,
+}
+
+impl PoissonTrace {
+    /// `rate_rps` requests/second for `n` requests.
+    pub fn generate(
+        rate_rps: f64,
+        n: usize,
+        num_classes: usize,
+        vocab: usize,
+        cond_len: usize,
+        seed: u64,
+    ) -> PoissonTrace {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut items = Vec::with_capacity(n);
+        for i in 0..n {
+            t += rng.exponential(rate_rps);
+            let cond = crate::cache::sample_cond(&mut rng, num_classes, vocab, cond_len, false);
+            items.push(TraceItem { arrival_s: t, cond, seed: seed ^ (i as u64) << 17 });
+        }
+        PoissonTrace { items }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.items.last().map(|i| i.arrival_s).unwrap_or(0.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_rate_approximates() {
+        let tr = PoissonTrace::generate(20.0, 2000, 10, 0, 0, 1);
+        assert_eq!(tr.len(), 2000);
+        let measured = tr.len() as f64 / tr.duration();
+        assert!((measured - 20.0).abs() < 2.0, "rate={measured}");
+        // arrivals strictly increasing
+        for w in tr.items.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn trace_conditioning_matches_family_kind() {
+        let labels = PoissonTrace::generate(1.0, 10, 10, 0, 0, 2);
+        assert!(labels.items.iter().all(|i| matches!(i.cond, Cond::Label(_))));
+        let prompts = PoissonTrace::generate(1.0, 10, 0, 256, 8, 3);
+        assert!(prompts
+            .items
+            .iter()
+            .all(|i| matches!(&i.cond, Cond::Prompt(p) if p.len() == 8)));
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let a = PoissonTrace::generate(5.0, 50, 10, 0, 0, 9);
+        let b = PoissonTrace::generate(5.0, 50, 10, 0, 0, 9);
+        assert_eq!(a.items.len(), b.items.len());
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.cond, y.cond);
+        }
+    }
+}

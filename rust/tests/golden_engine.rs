@@ -1,0 +1,116 @@
+//! Cross-language golden test: the Rust engine's composed forward pass
+//! (embed → branches via AOT executables → final) must reproduce the
+//! JAX reference forward recorded by aot.py in artifacts/goldens/.
+//!
+//! This pins the entire stack: Pallas kernels → HLO text → PJRT load →
+//! weight binding → branch composition → residual arithmetic.
+
+use smoothcache::model::{Cond, Engine};
+use smoothcache::tensor::Tensor;
+use smoothcache::util::json::{parse, Json};
+
+fn artifacts_ready() -> bool {
+    smoothcache::artifacts_dir().join("manifest.json").exists()
+}
+
+fn load_golden(family: &str) -> Json {
+    let p = smoothcache::artifacts_dir().join("goldens").join(format!("{family}.json"));
+    parse(&std::fs::read_to_string(p).expect("golden file")).expect("golden json")
+}
+
+fn run_family_golden(family: &str) {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let g = load_golden(family);
+    let mut engine = Engine::open(smoothcache::artifacts_dir()).expect("engine open");
+    engine.load_family(family).expect("load family");
+    let fm = engine.family_manifest(family).unwrap().clone();
+
+    let x = Tensor::new(
+        {
+            let mut s = vec![1usize];
+            s.extend(&fm.latent_shape);
+            s
+        },
+        g.get("x").unwrap().as_f32_vec().unwrap(),
+    );
+    let t: Vec<f32> = g.get("t").unwrap().as_f32_vec().unwrap();
+    let cond = if fm.num_classes > 0 {
+        Cond::Label(
+            g.get("label")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as i32)
+                .collect(),
+        )
+    } else {
+        Cond::Prompt(
+            g.get("prompt_ids")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as i32)
+                .collect(),
+        )
+    };
+
+    // Collect per-branch delta L1 norms while running the forward pass.
+    let mut deltas: Vec<(String, f64)> = Vec::new();
+    let eps = {
+        let mut cb = |block: usize, br: &str, d: &Tensor| {
+            deltas.push((format!("blocks.{block}.{br}"), d.l1()));
+        };
+        engine
+            .forward(family, &x, &t, &cond, Some(&mut cb))
+            .expect("forward")
+    };
+
+    // 1) final eps matches the jax reference elementwise.
+    let want: Vec<f32> = g.get("eps").unwrap().as_f32_vec().unwrap();
+    assert_eq!(eps.len(), want.len(), "eps length");
+    let max_ref = want.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-6);
+    let mut max_err = 0.0f32;
+    for (a, b) in eps.data.iter().zip(&want) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err / max_ref < 1e-4,
+        "{family}: eps rel Linf err {} (abs {max_err}, ref scale {max_ref})",
+        max_err / max_ref
+    );
+
+    // 2) every branch delta's L1 matches the recorded value.
+    let want_deltas = g.get("branch_delta_l1").unwrap().as_obj().unwrap();
+    assert_eq!(deltas.len(), want_deltas.len(), "branch count");
+    for (name, l1) in &deltas {
+        let want_l1 = want_deltas
+            .iter()
+            .find(|(k, _)| k == name)
+            .unwrap_or_else(|| panic!("{family}: golden missing {name}"))
+            .1
+            .as_f64()
+            .unwrap();
+        let rel = (l1 - want_l1).abs() / want_l1.max(1e-9);
+        assert!(rel < 1e-3, "{family}/{name}: delta L1 {l1} vs {want_l1} (rel {rel})");
+    }
+}
+
+#[test]
+fn golden_image() {
+    run_family_golden("image");
+}
+
+#[test]
+fn golden_audio() {
+    run_family_golden("audio");
+}
+
+#[test]
+fn golden_video() {
+    run_family_golden("video");
+}

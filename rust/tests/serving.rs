@@ -1,0 +1,162 @@
+//! Serving-stack integration: coordinator batching + TCP server + client
+//! against real artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Metrics, Policy, Request};
+use smoothcache::model::Cond;
+use smoothcache::server::{Client, Server};
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::json::Json;
+
+fn artifacts_ready() -> bool {
+    smoothcache::artifacts_dir().join("manifest.json").exists()
+}
+
+fn coord() -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(10);
+    cfg.calib_samples = 2;
+    Coordinator::start(cfg).expect("coordinator")
+}
+
+fn image_request(seed: u64, policy: Policy) -> Request {
+    Request {
+        id: 0,
+        family: "image".into(),
+        cond: Cond::Label(vec![(seed % 10) as i32]),
+        solver: SolverKind::Ddim,
+        steps: 8,
+        cfg_scale: 1.0,
+        seed,
+        policy,
+    }
+}
+
+#[test]
+fn coordinator_serves_single_request() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let c = coord();
+    let resp = c.generate_blocking(image_request(1, Policy::NoCache)).expect("response");
+    assert_eq!(resp.latent.shape, vec![1, 16, 16, 4]);
+    assert!(resp.total_seconds > 0.0);
+    assert_eq!(Metrics::get(&c.metrics().requests_completed), 1);
+    c.shutdown();
+}
+
+#[test]
+fn coordinator_batches_concurrent_requests() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let c = coord();
+    // submit 4 compatible requests back-to-back; the batcher should
+    // group them (max_wait 10ms) into ≤ 2 batches rather than 4.
+    let rxs: Vec<_> = (0..4)
+        .map(|i| c.submit(image_request(100 + i, Policy::Fora(2))))
+        .collect();
+    let mut sizes = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().expect("ok");
+        sizes.push(resp.batch_size);
+    }
+    assert!(
+        sizes.iter().any(|&s| s >= 2),
+        "expected some batching, got sizes {sizes:?}"
+    );
+    let batches = Metrics::get(&c.metrics().batches_executed);
+    assert!(batches <= 3, "batches={batches}");
+    // FORA(2) must have produced real skips
+    assert!(Metrics::get(&c.metrics().branch_reuses) > 0);
+    c.shutdown();
+}
+
+#[test]
+fn batched_result_matches_solo_result() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let c = coord();
+    // run one request alone...
+    let solo = c.generate_blocking(image_request(7, Policy::NoCache)).unwrap();
+    // ...then the same seed inside a concurrent burst
+    let rxs: Vec<_> = [7u64, 8, 9, 10]
+        .iter()
+        .map(|&s| c.submit(image_request(s, Policy::NoCache)))
+        .collect();
+    let batched: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    let same = &batched[0];
+    assert_eq!(solo.latent.shape, same.latent.shape);
+    // identical seeds → identical latents regardless of batch composition
+    let max_err = solo
+        .latent
+        .data
+        .iter()
+        .zip(&same.latent.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "batch composition changed the result: {max_err}");
+    c.shutdown();
+}
+
+#[test]
+fn smoothcache_policy_calibrates_once_and_skips() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let c = coord();
+    let r1 = c.generate_blocking(image_request(1, Policy::Smooth(0.5))).unwrap();
+    let r2 = c.generate_blocking(image_request(2, Policy::Smooth(0.5))).unwrap();
+    assert!(r1.gen_stats.skip_fraction() > 0.0, "alpha 0.5 should skip");
+    assert_eq!(r1.gen_stats.skip_fraction(), r2.gen_stats.skip_fraction());
+    // calibration ran exactly once (cached for the second request)
+    assert_eq!(Metrics::get(&c.metrics().calibrations), 1);
+    c.shutdown();
+}
+
+#[test]
+fn server_round_trip() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut client = Client::connect(&server.addr).expect("client");
+    assert!(client.ping().unwrap());
+
+    let req = Json::obj()
+        .set("family", "image")
+        .set("label", 4.0)
+        .set("steps", 6usize)
+        .set("solver", "ddim")
+        .set("policy", "fora:2")
+        .set("seed", 11u64)
+        .set("return_latent", true);
+    let resp = client.call(&req).expect("call");
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    assert_eq!(
+        resp.get("latent_shape").unwrap().as_usize_vec().unwrap(),
+        vec![1, 16, 16, 4]
+    );
+    let latent = resp.get("latent").unwrap().as_f32_vec().unwrap();
+    assert_eq!(latent.len(), 16 * 16 * 4);
+    assert!(resp.get("skip_fraction").unwrap().as_f64().unwrap() > 0.0);
+
+    let summary = client.metrics_summary().unwrap();
+    assert!(summary.contains("completed=1"), "{summary}");
+
+    // malformed request is answered, not dropped
+    let bad = client.call(&Json::obj().set("family", "image")).unwrap();
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+
+    server.stop();
+}
