@@ -11,7 +11,7 @@ use smoothcache::solvers::SolverKind;
 use smoothcache::util::bench::{ascii_plot, Table};
 use smoothcache::util::cli::CliSpec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smoothcache::util::error::Result<()> {
     let spec = CliSpec::new("calibrate_and_sweep", "calibration + alpha sweep")
         .flag("family", "image", "model family (image|audio|video)")
         .flag("solver", "ddim", "solver (ddim|ddpm|dpmpp2m|dpmpp3m|dpmpp3m-sde|rf)")
@@ -32,8 +32,8 @@ fn main() -> anyhow::Result<()> {
 
     let family = args.string("family");
     let solver = SolverKind::parse(args.str("solver"))
-        .ok_or_else(|| anyhow::anyhow!("bad solver"))?;
-    let steps = args.usize("steps").map_err(anyhow::Error::msg)?;
+        .ok_or_else(|| smoothcache::err!("bad solver"))?;
+    let steps = args.usize("steps").map_err(smoothcache::util::error::Error::msg)?;
 
     let mut engine = Engine::open(smoothcache::artifacts_dir())?;
     engine.load_family(&family)?;
@@ -42,9 +42,9 @@ fn main() -> anyhow::Result<()> {
     let cc = CalibrationConfig {
         solver,
         steps,
-        k_max: args.usize("k-max").map_err(anyhow::Error::msg)?,
-        num_samples: args.usize("samples").map_err(anyhow::Error::msg)?,
-        cfg_scale: args.f64("cfg").map_err(anyhow::Error::msg)? as f32,
+        k_max: args.usize("k-max").map_err(smoothcache::util::error::Error::msg)?,
+        num_samples: args.usize("samples").map_err(smoothcache::util::error::Error::msg)?,
+        cfg_scale: args.f64("cfg").map_err(smoothcache::util::error::Error::msg)? as f32,
         seed: 7,
     };
     println!(
@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
 
     // alpha sweep
     let mut table = Table::new(&["alpha", "skip%", "max gap", "schedule"]);
-    for alpha in args.f64_list("alphas").map_err(anyhow::Error::msg)? {
+    for alpha in args.f64_list("alphas").map_err(smoothcache::util::error::Error::msg)? {
         let s = curves.smoothcache_schedule(alpha, &fm.branch_types);
         let compact: String = s
             .ascii()

@@ -25,7 +25,7 @@ fn write_pgm(path: &str, data: &[f32], h: usize, w: usize) -> std::io::Result<()
     std::fs::write(path, out)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smoothcache::util::error::Result<()> {
     let out_dir = "bench_out/multimodal";
     std::fs::create_dir_all(out_dir)?;
     let mut engine = Engine::open(smoothcache::artifacts_dir())?;

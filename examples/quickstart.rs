@@ -9,7 +9,7 @@ use smoothcache::pipeline::{generate, CacheMode, GenConfig};
 use smoothcache::quality::psnr;
 use smoothcache::solvers::SolverKind;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smoothcache::util::error::Result<()> {
     let dir = smoothcache::artifacts_dir();
     println!("artifacts: {dir:?}");
     let mut engine = Engine::open(dir)?;
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "loaded image family ({} parameters) on {}",
         engine.total_params("image").unwrap(),
-        engine.rt.platform()
+        engine.platform()
     );
 
     // 1. One calibration pass (the paper's single hyperparameter setup).

@@ -16,7 +16,7 @@ use smoothcache::util::cli::CliSpec;
 use smoothcache::util::json::Json;
 use smoothcache::workload::PoissonTrace;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smoothcache::util::error::Result<()> {
     let spec = CliSpec::new("serve_e2e", "end-to-end serving driver")
         .flag("requests", "32", "requests per policy")
         .flag("rate", "4.0", "Poisson arrival rate (req/s)")
@@ -31,9 +31,9 @@ fn main() -> anyhow::Result<()> {
             return Ok(());
         }
     };
-    let n_requests = args.usize("requests").map_err(anyhow::Error::msg)?;
-    let rate = args.f64("rate").map_err(anyhow::Error::msg)?;
-    let steps = args.usize("steps").map_err(anyhow::Error::msg)?;
+    let n_requests = args.usize("requests").map_err(smoothcache::util::error::Error::msg)?;
+    let rate = args.f64("rate").map_err(smoothcache::util::error::Error::msg)?;
+    let steps = args.usize("steps").map_err(smoothcache::util::error::Error::msg)?;
     let policies = args.list("policies");
 
     let mut table = Table::new(&[
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
         cfg.preload = vec!["image".into()];
         cfg.max_wait = Duration::from_millis(25);
-        cfg.calib_samples = args.usize("calib-samples").map_err(anyhow::Error::msg)?;
+        cfg.calib_samples = args.usize("calib-samples").map_err(smoothcache::util::error::Error::msg)?;
         let coord = Arc::new(Coordinator::start(cfg)?);
         let server = Server::start("127.0.0.1:0", Arc::clone(&coord), 4)?;
         println!("serving on {} — policy {policy}", server.addr);
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         // warmup: compile + calibrate outside the measured window
         for b in 0..3 {
             let r = client.call(&mk_req(b, 50 + b as u64))?;
-            anyhow::ensure!(
+            smoothcache::ensure!(
                 r.get("ok").and_then(|v| v.as_bool()) == Some(true),
                 "warmup failed: {r:?}"
             );

@@ -5,17 +5,15 @@
 
 use smoothcache::model::{Cond, Engine};
 use smoothcache::pipeline::{generate, CacheMode, GenConfig};
-use smoothcache::runtime::HostValue;
 use smoothcache::solvers::SolverKind;
 use smoothcache::tensor::Tensor;
 use smoothcache::util::bench::{bench, fast_mode, Table};
 use smoothcache::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smoothcache::util::error::Result<()> {
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built — run `make artifacts`");
-        return Ok(());
+        eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
@@ -35,12 +33,13 @@ fn main() -> anyhow::Result<()> {
         let ctx = engine.make_step_ctx(&emb)?;
         let tokens = emb.tokens.clone();
 
-        // upload overhead alone
+        // per-step conditioning staging overhead alone (device upload on
+        // PJRT, host clone on the reference backend)
         let up = bench(3, iters, || {
-            let _ = engine.rt.upload(&HostValue::F32(tokens.clone())).unwrap();
+            let _ = engine.make_step_ctx(&emb).unwrap();
         });
         table.row(&[
-            "host→device upload (tokens)".into(),
+            "stage step ctx (c/cond)".into(),
             batch.to_string(),
             format!("{:.0}", up.mean_s * 1e6),
             format!("{:.0}", up.p95_s * 1e6),
@@ -107,7 +106,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
-    let stats = engine.rt.stats();
+    let stats = engine.stats();
     println!("\n§Perf — engine hot-path decomposition (image family)");
     table.print();
     println!(

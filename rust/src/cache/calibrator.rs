@@ -6,7 +6,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::curves::ErrorCurves;
 use crate::model::{Cond, Engine};

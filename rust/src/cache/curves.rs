@@ -14,7 +14,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 use super::schedule::{Decision, Schedule};
 use crate::util::json::{parse, Json};
@@ -273,15 +273,15 @@ impl ErrorCurves {
     }
 
     pub fn parse_str(text: &str) -> Result<ErrorCurves> {
-        let j = parse(text).map_err(|e| anyhow!("curves json: {e}"))?;
+        let j = parse(text).map_err(|e| crate::err!("curves json: {e}"))?;
         let de_curves = |v: &Json| -> Result<BTreeMap<String, Vec<Vec<Acc>>>> {
             let mut m = BTreeMap::new();
-            for (k, rows) in v.as_obj().ok_or_else(|| anyhow!("curves obj"))? {
+            for (k, rows) in v.as_obj().ok_or_else(|| crate::err!("curves obj"))? {
                 let mut out_rows = Vec::new();
-                for row in rows.as_arr().ok_or_else(|| anyhow!("rows"))? {
+                for row in rows.as_arr().ok_or_else(|| crate::err!("rows"))? {
                     let mut accs = Vec::new();
-                    for a in row.as_arr().ok_or_else(|| anyhow!("row"))? {
-                        let triple = a.as_f64_vec().ok_or_else(|| anyhow!("acc"))?;
+                    for a in row.as_arr().ok_or_else(|| crate::err!("row"))? {
+                        let triple = a.as_f64_vec().ok_or_else(|| crate::err!("acc"))?;
                         let n = triple[0] as u64;
                         let mean = triple[1];
                         let std = triple[2];
@@ -298,8 +298,8 @@ impl ErrorCurves {
         Ok(ErrorCurves {
             family: j.req("family")?.as_str().unwrap_or("").into(),
             solver: j.req("solver")?.as_str().unwrap_or("").into(),
-            steps: j.req("steps")?.as_usize().ok_or_else(|| anyhow!("steps"))?,
-            k_max: j.req("k_max")?.as_usize().ok_or_else(|| anyhow!("k_max"))?,
+            steps: j.req("steps")?.as_usize().ok_or_else(|| crate::err!("steps"))?,
+            k_max: j.req("k_max")?.as_usize().ok_or_else(|| crate::err!("k_max"))?,
             num_samples: j.req("num_samples")?.as_usize().unwrap_or(0),
             grouped: de_curves(j.req("grouped")?)?,
             per_site: de_curves(j.req("per_site")?)?,

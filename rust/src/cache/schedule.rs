@@ -9,7 +9,7 @@
 //! motivates (mitigating cascaded approximation error); the grouping
 //! ablation relaxes this to per-site decisions.
 
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 use crate::util::json::{parse, Json};
 
@@ -116,25 +116,25 @@ impl Schedule {
     /// tests drive random generators through this.
     pub fn validate(&self) -> Result<()> {
         if self.decisions.len() != self.steps {
-            return Err(anyhow!("decision rows {} != steps {}", self.decisions.len(), self.steps));
+            return Err(crate::err!("decision rows {} != steps {}", self.decisions.len(), self.steps));
         }
         for (step, row) in self.decisions.iter().enumerate() {
             if row.len() != self.branch_types.len() {
-                return Err(anyhow!("step {step}: row width mismatch"));
+                return Err(crate::err!("step {step}: row width mismatch"));
             }
             for (bt, d) in row.iter().enumerate() {
                 if let Decision::Reuse { filled_at } = d {
                     if step == 0 {
-                        return Err(anyhow!("step 0 must compute (cache empty)"));
+                        return Err(crate::err!("step 0 must compute (cache empty)"));
                     }
                     if *filled_at >= step {
-                        return Err(anyhow!(
+                        return Err(crate::err!(
                             "step {step}/{}: filled_at {filled_at} not in the past",
                             self.branch_types[bt]
                         ));
                     }
                     if !self.decisions[*filled_at][bt].is_compute() {
-                        return Err(anyhow!(
+                        return Err(crate::err!(
                             "step {step}/{}: filled_at {filled_at} was not computed",
                             self.branch_types[bt]
                         ));
@@ -142,7 +142,7 @@ impl Schedule {
                     // the fill must be the *latest* compute before `step`
                     for mid in (*filled_at + 1)..step {
                         if self.decisions[mid][bt].is_compute() {
-                            return Err(anyhow!(
+                            return Err(crate::err!(
                                 "step {step}/{}: stale reuse (computed at {mid} after fill {filled_at})",
                                 self.branch_types[bt]
                             ));
@@ -193,19 +193,19 @@ impl Schedule {
 
     pub fn from_json(j: &Json) -> Result<Schedule> {
         let name = j.req("name")?.as_str().unwrap_or("schedule").to_string();
-        let steps = j.req("steps")?.as_usize().ok_or_else(|| anyhow!("steps"))?;
+        let steps = j.req("steps")?.as_usize().ok_or_else(|| crate::err!("steps"))?;
         let branch_types: Vec<String> = j
             .req("branch_types")?
             .as_arr()
-            .ok_or_else(|| anyhow!("branch_types"))?
+            .ok_or_else(|| crate::err!("branch_types"))?
             .iter()
             .filter_map(|v| v.as_str().map(String::from))
             .collect();
         let mut decisions = Vec::with_capacity(steps);
-        for row in j.req("decisions")?.as_arr().ok_or_else(|| anyhow!("decisions"))? {
+        for row in j.req("decisions")?.as_arr().ok_or_else(|| crate::err!("decisions"))? {
             decisions.push(
                 row.as_arr()
-                    .ok_or_else(|| anyhow!("decision row"))?
+                    .ok_or_else(|| crate::err!("decision row"))?
                     .iter()
                     .map(|v| {
                         let n = v.as_f64().unwrap_or(-1.0);
@@ -224,7 +224,7 @@ impl Schedule {
     }
 
     pub fn parse_str(text: &str) -> Result<Schedule> {
-        Schedule::from_json(&parse(text).map_err(|e| anyhow!("schedule json: {e}"))?)
+        Schedule::from_json(&parse(text).map_err(|e| crate::err!("schedule json: {e}"))?)
     }
 
     /// Compact visual: one line per branch type, `#` compute / `.` reuse.

@@ -1,13 +1,14 @@
-//! The executor: the single thread that owns the PJRT engine, resolves
-//! caching policies to concrete schedules (calibrating on demand), and
-//! runs batched generations.
+//! The executor: the single thread that owns the engine (and thus the
+//! execution backend — PJRT handles are thread-bound), resolves caching
+//! policies to concrete schedules (calibrating on demand), and runs
+//! batched generations.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 use super::metrics::Metrics;
 use super::request::{InFlight, Policy, Request, Response};
@@ -210,7 +211,7 @@ pub fn execute_batch(
             let eff = if cfg_on { 2 * b } else { b };
             supported_batches.contains(&eff)
         })
-        .ok_or_else(|| anyhow!("no supported batch ≥ {n}"))?;
+        .ok_or_else(|| crate::err!("no supported batch ≥ {n}"))?;
     Metrics::add(&metrics.padded_slots, (target - n) as u64);
 
     // conditioning: concat + pad
@@ -289,7 +290,7 @@ pub fn run_executor(
             // fail every incoming request
             for batch in rx {
                 for it in batch {
-                    let _ = it.reply.send(Err(anyhow!("engine unavailable")));
+                    let _ = it.reply.send(Err(crate::err!("engine unavailable")));
                 }
             }
             return;
@@ -312,7 +313,7 @@ pub fn run_executor(
             eprintln!("executor: batch {ids:?} failed: {e:#}");
             for r in replies {
                 Metrics::inc(&metrics.requests_failed);
-                let _ = r.send(Err(anyhow!("batch execution failed: {e}")));
+                let _ = r.send(Err(crate::err!("batch execution failed: {e}")));
             }
         }
     }

@@ -4,15 +4,15 @@
 //!
 //! ```text
 //!  clients ──submit()──► [batcher thread] ──batches──► [executor thread]
-//!                         groups by key,                owns the PJRT
-//!                         flushes on size                engine + the
+//!                         groups by key,                owns the engine
+//!                         flushes on size                (backend) + the
 //!                         or deadline                    schedule store
 //! ```
 //!
-//! The executor is intentionally single-threaded: PJRT handles are not
-//! `Send`, and a single CPU device gains nothing from concurrent
-//! executions — batching is the concurrency mechanism, exactly as in
-//! the paper's serving setting.
+//! The executor is intentionally single-threaded: backend handles may
+//! not be `Send` (PJRT), and a single CPU device gains nothing from
+//! concurrent executions — batching is the concurrency mechanism,
+//! exactly as in the paper's serving setting.
 
 pub mod batcher;
 pub mod executor;
@@ -24,7 +24,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use executor::{ExecutorConfig, ScheduleStore};
@@ -78,7 +78,7 @@ impl Coordinator {
         let batcher_handle = std::thread::Builder::new()
             .name("smoothcache-batcher".into())
             .spawn(move || run_batcher(bcfg, req_rx, batch_tx))
-            .map_err(|e| anyhow!("spawn batcher: {e}"))?;
+            .map_err(|e| crate::err!("spawn batcher: {e}"))?;
 
         let ecfg = ExecutorConfig {
             artifacts_dir: config.artifacts_dir,
@@ -92,7 +92,7 @@ impl Coordinator {
         let executor_handle = std::thread::Builder::new()
             .name("smoothcache-executor".into())
             .spawn(move || executor::run_executor(ecfg, supported, batch_rx, m2))
-            .map_err(|e| anyhow!("spawn executor: {e}"))?;
+            .map_err(|e| crate::err!("spawn executor: {e}"))?;
 
         Ok(Coordinator {
             tx: Some(req_tx),
@@ -125,7 +125,7 @@ impl Coordinator {
     /// Submit and wait.
     pub fn generate_blocking(&self, request: Request) -> Result<Response> {
         let rx = self.submit(request);
-        rx.recv().map_err(|_| anyhow!("coordinator shut down"))?
+        rx.recv().map_err(|_| crate::err!("coordinator shut down"))?
     }
 
     /// Drain and stop both threads.

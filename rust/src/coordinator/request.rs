@@ -2,7 +2,7 @@
 
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 use crate::model::Cond;
 use crate::pipeline::GenStats;
@@ -36,20 +36,20 @@ impl Policy {
             return Ok(Policy::Alternate);
         }
         if let Some(n) = s.strip_prefix("fora:") {
-            return Ok(Policy::Fora(n.parse().map_err(|_| anyhow!("bad fora n: {n}"))?));
+            return Ok(Policy::Fora(n.parse().map_err(|_| crate::err!("bad fora n: {n}"))?));
         }
         if let Some(a) = s.strip_prefix("smooth-persite:") {
             return Ok(Policy::SmoothPerSite(
-                a.parse().map_err(|_| anyhow!("bad alpha: {a}"))?,
+                a.parse().map_err(|_| crate::err!("bad alpha: {a}"))?,
             ));
         }
         if let Some(a) = s.strip_prefix("smooth:") {
-            return Ok(Policy::Smooth(a.parse().map_err(|_| anyhow!("bad alpha: {a}"))?));
+            return Ok(Policy::Smooth(a.parse().map_err(|_| crate::err!("bad alpha: {a}"))?));
         }
         if let Some(n) = s.strip_prefix("delta-dit:") {
-            return Ok(Policy::DeltaDit(n.parse().map_err(|_| anyhow!("bad delta-dit n: {n}"))?));
+            return Ok(Policy::DeltaDit(n.parse().map_err(|_| crate::err!("bad delta-dit n: {n}"))?));
         }
-        Err(anyhow!("unknown policy {s:?}"))
+        Err(crate::err!("unknown policy {s:?}"))
     }
 
     pub fn wire(&self) -> String {

@@ -4,7 +4,7 @@
 //! bundles. Every table/figure bench builds on this module so all rows
 //! are computed identically.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::cache::sample_cond;
 use crate::model::{Cond, Engine, FamilyManifest};

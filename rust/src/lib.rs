@@ -6,14 +6,19 @@
 //! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`).
 //! * **L2** — JAX DiT model families, AOT-lowered to HLO text per
 //!   (family, branch, batch) — `python/compile/model.py` + `aot.py`.
-//! * **L3** — this crate: the serving coordinator. It loads the AOT
-//!   artifacts through PJRT ([`runtime`]), composes forward passes at the
-//!   caching granularity ([`model`]), runs the diffusion solvers
-//!   ([`solvers`]), and implements the paper's contribution — the
-//!   calibration-driven caching schedule ([`cache`]) — under a dynamic
-//!   batching serving loop ([`coordinator`], [`server`]).
+//! * **L3** — this crate: the serving coordinator. It executes the DiT
+//!   through a pluggable [`runtime::Backend`] (the pure-Rust
+//!   [`runtime::reference`] backend by default; PJRT-loaded AOT
+//!   artifacts behind the `pjrt` cargo feature), composes forward
+//!   passes at the caching granularity ([`model`]), runs the diffusion
+//!   solvers ([`solvers`]), and implements the paper's contribution —
+//!   the calibration-driven caching schedule ([`cache`]) — under a
+//!   dynamic batching serving loop ([`coordinator`], [`server`]; wire
+//!   format in docs/protocol.md).
 //!
-//! Python never runs on the request path.
+//! Python never runs on the request path, and the default build needs
+//! no artifacts, network, or external crates at all
+//! (docs/adr/001-zero-dependency-default-build.md).
 
 pub mod cache;
 pub mod coordinator;

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use smoothcache::util::error::{Error, Result};
 use smoothcache::cache::{calibrate, CalibrationConfig};
 use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
 use smoothcache::model::{Cond, Engine, Manifest};
@@ -72,8 +72,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
     let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
     cfg.preload = args.list("preload");
-    cfg.max_wait = Duration::from_millis(args.u64("max-wait-ms").map_err(anyhow::Error::msg)?);
-    cfg.calib_samples = args.usize("calib-samples").map_err(anyhow::Error::msg)?;
+    cfg.max_wait = Duration::from_millis(args.u64("max-wait-ms").map_err(Error::msg)?);
+    cfg.calib_samples = args.usize("calib-samples").map_err(Error::msg)?;
     if !args.str("curves-dir").is_empty() {
         cfg.curves_dir = Some(args.string("curves-dir").into());
     }
@@ -81,7 +81,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let server = Server::start(
         args.str("addr"),
         Arc::clone(&coord),
-        args.usize("workers").map_err(anyhow::Error::msg)?,
+        args.usize("workers").map_err(Error::msg)?,
     )?;
     println!("smoothcache serving on {}", server.addr);
     println!("protocol: one JSON object per line; try {{\"cmd\": \"ping\"}}");
@@ -107,15 +107,15 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
 
     let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
     cfg.preload = vec![args.string("family")];
-    cfg.calib_samples = args.usize("calib-samples").map_err(anyhow::Error::msg)?;
+    cfg.calib_samples = args.usize("calib-samples").map_err(Error::msg)?;
     let coord = Coordinator::start(cfg)?;
 
     let cond = if args.str("prompt-ids").is_empty() {
-        Cond::Label(vec![args.usize("label").map_err(anyhow::Error::msg)? as i32])
+        Cond::Label(vec![args.usize("label").map_err(Error::msg)? as i32])
     } else {
         Cond::Prompt(
             args.usize_list("prompt-ids")
-                .map_err(anyhow::Error::msg)?
+                .map_err(Error::msg)?
                 .into_iter()
                 .map(|v| v as i32)
                 .collect(),
@@ -125,10 +125,10 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         id: 0,
         family: args.string("family"),
         cond,
-        solver: SolverKind::parse(args.str("solver")).ok_or_else(|| anyhow!("bad solver"))?,
-        steps: args.usize("steps").map_err(anyhow::Error::msg)?,
-        cfg_scale: args.f64("cfg").map_err(anyhow::Error::msg)? as f32,
-        seed: args.u64("seed").map_err(anyhow::Error::msg)?,
+        solver: SolverKind::parse(args.str("solver")).ok_or_else(|| smoothcache::err!("bad solver"))?,
+        steps: args.usize("steps").map_err(Error::msg)?,
+        cfg_scale: args.f64("cfg").map_err(Error::msg)? as f32,
+        seed: args.u64("seed").map_err(Error::msg)?,
         policy: Policy::parse(args.str("policy"))?,
     };
     let resp = coord.generate_blocking(request)?;
@@ -171,13 +171,13 @@ fn cmd_calibrate(argv: &[String]) -> Result<()> {
     let family = args.string("family");
     let mut engine = Engine::open(smoothcache::artifacts_dir())?;
     engine.load_family(&family)?;
-    let solver = SolverKind::parse(args.str("solver")).ok_or_else(|| anyhow!("bad solver"))?;
+    let solver = SolverKind::parse(args.str("solver")).ok_or_else(|| smoothcache::err!("bad solver"))?;
     let cc = CalibrationConfig {
         solver,
-        steps: args.usize("steps").map_err(anyhow::Error::msg)?,
-        k_max: args.usize("k-max").map_err(anyhow::Error::msg)?,
-        num_samples: args.usize("samples").map_err(anyhow::Error::msg)?,
-        cfg_scale: args.f64("cfg").map_err(anyhow::Error::msg)? as f32,
+        steps: args.usize("steps").map_err(Error::msg)?,
+        k_max: args.usize("k-max").map_err(Error::msg)?,
+        num_samples: args.usize("samples").map_err(Error::msg)?,
+        cfg_scale: args.f64("cfg").map_err(Error::msg)? as f32,
         seed: 7,
     };
     let t0 = std::time::Instant::now();
@@ -206,11 +206,11 @@ fn cmd_schedule(argv: &[String]) -> Result<()> {
     let family = args.string("family");
     let mut engine = Engine::open(smoothcache::artifacts_dir())?;
     engine.load_family(&family)?;
-    let solver = SolverKind::parse(args.str("solver")).ok_or_else(|| anyhow!("bad solver"))?;
-    let steps = args.usize("steps").map_err(anyhow::Error::msg)?;
+    let solver = SolverKind::parse(args.str("solver")).ok_or_else(|| smoothcache::err!("bad solver"))?;
+    let steps = args.usize("steps").map_err(Error::msg)?;
     let policy = Policy::parse(args.str("policy"))?;
     let mut store = smoothcache::coordinator::ScheduleStore::new(
-        args.usize("calib-samples").map_err(anyhow::Error::msg)?,
+        args.usize("calib-samples").map_err(Error::msg)?,
         7,
         None,
     );
@@ -241,8 +241,8 @@ fn cmd_schedule(argv: &[String]) -> Result<()> {
 
 fn cmd_info(_argv: &[String]) -> Result<()> {
     let dir = smoothcache::artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
-    println!("artifacts dir : {dir:?}");
+    let (manifest, on_disk) = Manifest::load_or_builtin(&dir)?;
+    println!("artifacts dir : {dir:?}{}", if on_disk { "" } else { " (none — builtin geometry)" });
     println!("kernel impl   : {}", manifest.impl_name);
     println!("batch sizes   : {:?}", manifest.batch_sizes);
     for (name, fm) in &manifest.families {

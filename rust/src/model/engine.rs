@@ -1,67 +1,74 @@
-//! Forward composition engine: executes a DiT forward pass from
-//! per-branch AOT executables, with residual adds on the host.
+//! Forward composition engine: executes a DiT forward pass one branch
+//! at a time through a pluggable [`Backend`].
 //!
 //! This is the piece that makes SmoothCache *real* in this stack: the
 //! denoising pipeline asks for one branch delta at a time
 //! (`x <- x + delta`), so replacing a branch execution with a cached
-//! tensor skips an actual PJRT execution (paper Fig. 3).
+//! tensor skips an actual backend execution (paper Fig. 3). The engine
+//! resolves families from the manifest (on-disk artifacts, or the
+//! builtin geometry when none exist), loads weights (from weights.bin,
+//! or deterministic synthesis), and delegates the math to the backend
+//! selected by [`crate::runtime::select_backend`].
 //!
-//! The engine owns the PJRT runtime (not `Send`); the coordinator talks
-//! to it from a single executor thread.
+//! Backend handles may be thread-bound (PJRT); the coordinator talks to
+//! the engine from a single executor thread.
 
 use std::collections::HashMap;
-
-use anyhow::{anyhow, Result};
 
 use super::manifest::{FamilyManifest, Manifest};
 use super::weights::WeightStore;
 use super::Cond;
-use crate::runtime::{HostValue, Registry, Runtime};
+use crate::runtime::{reference, Backend, RuntimeStats};
+pub use crate::runtime::{EmbedOut, StepCtx};
 use crate::tensor::Tensor;
+use crate::util::error::{Context, Result};
 
-/// Output of the embed entry for one (batch, t) invocation.
-pub struct EmbedOut {
-    pub tokens: Tensor,
-    pub c: Tensor,
-    pub cond: Option<Tensor>,
-}
-
-/// Device-resident per-step conditioning (c uploaded once per step, not
-/// once per branch — the branch hot path uploads only the tokens).
-pub struct StepCtx {
-    pub batch: usize,
-    c_buf: xla::PjRtBuffer,
-    cond_buf: Option<xla::PjRtBuffer>,
-}
+/// Seed for deterministic weight synthesis when no weights.bin artifact
+/// exists (reference backend / offline quickstart).
+const SYNTH_WEIGHT_SEED: u64 = 0x5EED_D17;
 
 struct LoadedFamily {
-    manifest: FamilyManifest,
-    #[allow(dead_code)]
-    weights: WeightStore,
-    /// resolved tensor name → device buffer (uploaded once at load).
-    device_weights: HashMap<String, xla::PjRtBuffer>,
     total_params: usize,
 }
 
 pub struct Engine {
-    pub rt: Runtime,
-    pub registry: Registry,
+    backend: Box<dyn Backend>,
+    artifacts_dir: std::path::PathBuf,
+    /// true when the manifest was read from disk — weight files are
+    /// then required (a missing one means a broken artifact build).
+    manifest_on_disk: bool,
     pub manifest: Manifest,
     families: HashMap<String, LoadedFamily>,
 }
 
 impl Engine {
-    /// Open the artifacts directory and parse the manifest. Families are
-    /// loaded on demand (`load_family`) or lazily on first use.
+    /// Open the artifacts directory (or fall back to the builtin
+    /// manifest + reference backend when it holds none) and select the
+    /// execution backend. Families are loaded on demand
+    /// (`load_family`).
     pub fn open(dir: std::path::PathBuf) -> Result<Engine> {
-        let rt = Runtime::cpu()?;
-        let manifest = Manifest::load(&dir)?;
+        let (manifest, on_disk) = Manifest::load_or_builtin(&dir)?;
+        let backend = crate::runtime::select_backend(&dir, on_disk)?;
         Ok(Engine {
-            rt,
-            registry: Registry::new(dir),
+            backend,
+            artifacts_dir: dir,
+            manifest_on_disk: on_disk,
             manifest,
             families: HashMap::new(),
         })
+    }
+
+    /// The active backend's identifier ("reference", "pjrt-cpu", …).
+    pub fn platform(&self) -> String {
+        self.backend.name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.backend.stats()
+    }
+
+    pub fn reset_stats(&self) {
+        self.backend.reset_stats()
     }
 
     pub fn family_manifest(&self, family: &str) -> Result<&FamilyManifest> {
@@ -76,133 +83,61 @@ impl Engine {
         self.families.get(family).map(|f| f.total_params)
     }
 
-    /// Load a family: read weights.bin and upload every tensor to the
-    /// device once. Executables compile lazily per (entry, batch).
+    /// Load a family: read weights.bin when the artifact exists,
+    /// synthesize deterministic weights otherwise, and hand them to the
+    /// backend (which uploads to its device where applicable).
     pub fn load_family(&mut self, family: &str) -> Result<()> {
         if self.families.contains_key(family) {
             return Ok(());
         }
         let fm = self.manifest.family(family)?.clone();
-        let weights = WeightStore::load(&self.registry.dir.join(&fm.weights_file))?;
-        let mut device_weights = HashMap::new();
-        for name in weights.names() {
-            let t = weights.get(name)?;
-            device_weights.insert(name.clone(), self.rt.upload(&HostValue::F32(t.clone()))?);
-        }
+        let weights_path = self.artifacts_dir.join(&fm.weights_file);
+        let weights = if weights_path.exists() {
+            WeightStore::load(&weights_path)?
+        } else if self.manifest_on_disk {
+            // a real manifest promises its weight files; synthesizing
+            // here would silently serve garbage from a broken build
+            return Err(crate::err!(
+                "artifacts manifest lists {:?} but the file is missing — run `make artifacts`",
+                fm.weights_file
+            ));
+        } else {
+            reference::synth_weights(&fm, SYNTH_WEIGHT_SEED)
+        };
         let total_params = weights.total_params();
-        self.families.insert(
-            family.to_string(),
-            LoadedFamily { manifest: fm, weights, device_weights, total_params },
-        );
+        self.backend
+            .load_family(&fm, weights)
+            .with_context(|| format!("loading family {family}"))?;
+        self.families.insert(family.to_string(), LoadedFamily { total_params });
         Ok(())
     }
 
-    /// Pre-compile every executable for the given batch size (avoids
-    /// first-request compile latency; used by the server warmup).
+    /// Prepare every executable for the given batch size (avoids
+    /// first-request latency on backends with a compile stage; used by
+    /// the server warmup).
     pub fn warmup(&mut self, family: &str, batch: usize) -> Result<()> {
         self.load_family(family)?;
-        let fm = self.families[family].manifest.clone();
-        for (ename, entry) in &fm.entries {
-            let file = entry
-                .artifacts
-                .get(&batch)
-                .ok_or_else(|| anyhow!("{family}/{ename}: no batch-{batch} artifact"))?;
-            self.registry.get(&self.rt, file, outputs_of(&fm, ename))?;
+        let fm = self.manifest.family(family)?.clone();
+        self.backend.warmup(&fm, batch)
+    }
+
+    fn loaded_manifest(&self, family: &str) -> Result<&FamilyManifest> {
+        if !self.families.contains_key(family) {
+            return Err(crate::err!("family {family:?} not loaded — call load_family"));
         }
-        Ok(())
-    }
-
-    fn loaded(&self, family: &str) -> Result<&LoadedFamily> {
-        self.families
-            .get(family)
-            .ok_or_else(|| anyhow!("family {family:?} not loaded — call load_family"))
-    }
-
-    fn weight_buffers<'a>(
-        &'a self,
-        lf: &'a LoadedFamily,
-        templates: &[String],
-        block: usize,
-    ) -> Result<Vec<&'a xla::PjRtBuffer>> {
-        templates
-            .iter()
-            .map(|tpl| {
-                let name = tpl.replace("{i}", &block.to_string());
-                lf.device_weights
-                    .get(&name)
-                    .ok_or_else(|| anyhow!("device weight {name:?} missing"))
-            })
-            .collect()
-    }
-
-    fn exec_entry(
-        &self,
-        family: &str,
-        entry_name: &str,
-        batch: usize,
-        host_args: &[HostValue],
-        extra_device: &[&xla::PjRtBuffer],
-        block: usize,
-    ) -> Result<Vec<Tensor>> {
-        let lf = self.loaded(family)?;
-        let entry = lf.manifest.entry(entry_name)?;
-        let file = entry.artifacts.get(&batch).ok_or_else(|| {
-            anyhow!(
-                "{family}/{entry_name}: unsupported batch {batch} (have {:?})",
-                entry.artifacts.keys().collect::<Vec<_>>()
-            )
-        })?;
-        let exe = self
-            .registry
-            .get(&self.rt, file, outputs_of(&lf.manifest, entry_name))?;
-        let wbufs = self.weight_buffers(lf, &entry.weights, block)?;
-        let uploaded: Vec<xla::PjRtBuffer> =
-            host_args.iter().map(|v| self.rt.upload(v)).collect::<Result<_>>()?;
-        let mut args: Vec<&xla::PjRtBuffer> = uploaded.iter().collect();
-        args.extend_from_slice(extra_device);
-        args.extend(wbufs);
-        self.rt.execute(&exe, &args)
+        self.manifest.family(family)
     }
 
     /// Run the embed entry: latent + t + conditioning → (tokens, c, cond).
     pub fn embed(&self, family: &str, x: &Tensor, t: &[f32], cond: &Cond) -> Result<EmbedOut> {
-        let lf = self.loaded(family)?;
-        let fm = &lf.manifest;
-        let batch = x.dim0();
-        assert_eq!(t.len(), batch, "t batch mismatch");
-        let cond_val = match cond {
-            Cond::Label(l) => {
-                assert_eq!(l.len(), batch);
-                HostValue::i32(vec![batch], l.clone())
-            }
-            Cond::Prompt(p) => {
-                assert_eq!(p.len(), batch * fm.cond_len);
-                HostValue::i32(vec![batch, fm.cond_len], p.clone())
-            }
-        };
-        let host_args = vec![
-            HostValue::F32(x.clone()),
-            HostValue::F32(Tensor::new(vec![batch], t.to_vec())),
-            cond_val,
-        ];
-        let mut out = self.exec_entry(family, "embed", batch, &host_args, &[], 0)?;
-        let cond_t = if out.len() == 3 { Some(out.pop().unwrap()) } else { None };
-        let c = out.pop().unwrap();
-        let tokens = out.pop().unwrap();
-        Ok(EmbedOut { tokens, c, cond: cond_t })
+        let fm = self.loaded_manifest(family)?;
+        self.backend.embed(fm, x, t, cond)
     }
 
-    /// Upload the per-step conditioning once (reused across all branches
+    /// Stage the per-step conditioning once (reused across all branches
     /// of the step).
     pub fn make_step_ctx(&self, embed: &EmbedOut) -> Result<StepCtx> {
-        Ok(StepCtx {
-            batch: embed.tokens.dim0(),
-            c_buf: self.rt.upload(&HostValue::F32(embed.c.clone()))?,
-            cond_buf: match &embed.cond {
-                Some(c) => Some(self.rt.upload(&HostValue::F32(c.clone()))?),
-                None => None,
-            },
-        })
+        self.backend.make_step_ctx(embed)
     }
 
     /// Execute one branch: returns the gated pre-residual delta.
@@ -214,37 +149,14 @@ impl Engine {
         tokens: &Tensor,
         ctx: &StepCtx,
     ) -> Result<Tensor> {
-        let lf = self.loaded(family)?;
-        let entry_name = format!("branch.{branch}");
-        let entry = lf.manifest.entry(&entry_name)?;
-        let needs_cond = entry.inputs.iter().any(|i| i == "cond");
-        let host_args = vec![HostValue::F32(tokens.clone())];
-        let mut extra: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2);
-        if needs_cond {
-            extra.push(
-                ctx.cond_buf
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("{entry_name} needs cond tokens"))?,
-            );
-        }
-        extra.push(&ctx.c_buf);
-        let mut out =
-            self.exec_entry(family, &entry_name, ctx.batch, &host_args, &extra, block)?;
-        Ok(out.pop().unwrap())
+        let fm = self.loaded_manifest(family)?;
+        self.backend.branch(fm, block, branch, tokens, ctx)
     }
 
     /// Execute the final head: tokens → epsilon prediction.
     pub fn final_head(&self, family: &str, tokens: &Tensor, ctx: &StepCtx) -> Result<Tensor> {
-        let host_args = vec![HostValue::F32(tokens.clone())];
-        let mut out = self.exec_entry(
-            family,
-            "final",
-            ctx.batch,
-            &host_args,
-            &[&ctx.c_buf],
-            0,
-        )?;
-        Ok(out.pop().unwrap())
+        let fm = self.loaded_manifest(family)?;
+        self.backend.final_head(fm, tokens, ctx)
     }
 
     /// Full no-cache forward pass (calibration / golden tests). Returns
@@ -258,7 +170,7 @@ impl Engine {
         cond: &Cond,
         mut on_delta: Option<&mut dyn FnMut(usize, &str, &Tensor)>,
     ) -> Result<Tensor> {
-        let fm = self.loaded(family)?.manifest.clone();
+        let fm = self.loaded_manifest(family)?.clone();
         let emb = self.embed(family, x, t, cond)?;
         let ctx = self.make_step_ctx(&emb)?;
         let mut tokens = emb.tokens;
@@ -273,16 +185,60 @@ impl Engine {
     }
 }
 
-/// Tuple arity of each entry's output.
-fn outputs_of(fm: &FamilyManifest, entry: &str) -> usize {
-    match entry {
-        "embed" => {
-            if fm.cond_len > 0 {
-                3
-            } else {
-                2
-            }
-        }
-        _ => 1,
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Engine over a directory with no artifacts: builtin manifest +
+    /// reference backend + synthesized weights.
+    fn offline_engine() -> Engine {
+        let mut e = Engine::open(std::path::PathBuf::from("/nonexistent-artifacts")).unwrap();
+        e.load_family("image").unwrap();
+        e
+    }
+
+    #[test]
+    fn open_without_artifacts_uses_reference_backend() {
+        let e = offline_engine();
+        assert_eq!(e.platform(), "reference");
+        assert!(e.is_loaded("image"));
+        assert!(e.total_params("image").unwrap() > 100_000);
+        assert!(!e.is_loaded("audio"));
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_latent_shaped() {
+        let e = offline_engine();
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(vec![1, 16, 16, 4], &mut rng);
+        let cond = Cond::Label(vec![3]);
+        let a = e.forward("image", &x, &[0.5], &cond, None).unwrap();
+        let b = e.forward("image", &x, &[0.5], &cond, None).unwrap();
+        assert_eq!(a.shape, vec![1, 16, 16, 4]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn forward_visits_every_branch_site() {
+        let e = offline_engine();
+        let mut rng = Rng::new(12);
+        let x = Tensor::randn(vec![1, 16, 16, 4], &mut rng);
+        let mut sites = Vec::new();
+        let mut cb = |block: usize, br: &str, _d: &Tensor| sites.push((block, br.to_string()));
+        e.forward("image", &x, &[0.5], &Cond::Label(vec![0]), Some(&mut cb)).unwrap();
+        let fm = e.family_manifest("image").unwrap();
+        assert_eq!(sites, fm.branch_sites());
+    }
+
+    #[test]
+    fn unloaded_family_errors() {
+        let e = offline_engine();
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(vec![1, 64, 8], &mut rng);
+        let err = e
+            .embed("audio", &x, &[0.5], &Cond::Prompt(vec![1; 8]))
+            .unwrap_err();
+        assert!(err.to_string().contains("not loaded"), "{err}");
     }
 }

@@ -3,7 +3,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::util::json::{parse, Json};
 
@@ -58,7 +58,7 @@ impl FamilyManifest {
     pub fn entry(&self, name: &str) -> Result<&EntryManifest> {
         self.entries
             .get(name)
-            .ok_or_else(|| anyhow!("family {}: no entry {name:?}", self.name))
+            .ok_or_else(|| crate::err!("family {}: no entry {name:?}", self.name))
     }
 }
 
@@ -77,18 +77,90 @@ impl Manifest {
         Self::parse_str(&text)
     }
 
+    /// Load `manifest.json` when the artifacts directory has one,
+    /// otherwise fall back to the [`Manifest::builtin`] geometry (the
+    /// reference backend needs no on-disk artifacts). Returns the
+    /// manifest and whether it came from disk. A *present but invalid*
+    /// manifest is still an error — silent fallback would mask broken
+    /// artifact builds.
+    pub fn load_or_builtin(dir: &Path) -> Result<(Manifest, bool)> {
+        if dir.join("manifest.json").exists() {
+            Ok((Self::load(dir)?, true))
+        } else {
+            Ok((Self::builtin(), false))
+        }
+    }
+
+    /// The three in-tree family geometries, mirroring
+    /// `python/compile/families.py` (the single source of truth for the
+    /// AOT path; this constructor is its Rust twin so the reference
+    /// backend serves identical shapes with zero artifacts).
+    pub fn builtin() -> Manifest {
+        let mut families = BTreeMap::new();
+        families.insert(
+            "image".to_string(),
+            builtin_family(BuiltinSpec {
+                name: "image",
+                depth: 6,
+                latent_shape: vec![16, 16, 4],
+                seq_len: 64,
+                branch_types: &["attn", "ffn"],
+                cond_len: 0,
+                num_classes: 10,
+                vocab: 0,
+                frames: 0,
+                spatial_tokens: 0,
+            }),
+        );
+        families.insert(
+            "audio".to_string(),
+            builtin_family(BuiltinSpec {
+                name: "audio",
+                depth: 6,
+                latent_shape: vec![64, 8],
+                seq_len: 64,
+                branch_types: &["attn", "xattn", "ffn"],
+                cond_len: 8,
+                num_classes: 0,
+                vocab: 256,
+                frames: 0,
+                spatial_tokens: 0,
+            }),
+        );
+        families.insert(
+            "video".to_string(),
+            builtin_family(BuiltinSpec {
+                name: "video",
+                depth: 4,
+                latent_shape: vec![4, 8, 8, 4],
+                seq_len: 64,
+                branch_types: &["s_attn", "s_xattn", "s_ffn", "t_attn", "t_xattn", "t_ffn"],
+                cond_len: 8,
+                num_classes: 0,
+                vocab: 256,
+                frames: 4,
+                spatial_tokens: 16,
+            }),
+        );
+        Manifest {
+            impl_name: "reference".to_string(),
+            batch_sizes: vec![1, 2, 4, 8],
+            families,
+        }
+    }
+
     pub fn parse_str(text: &str) -> Result<Manifest> {
-        let j = parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let j = parse(text).map_err(|e| crate::err!("manifest.json: {e}"))?;
         let impl_name = j.req("impl")?.as_str().unwrap_or("pallas").to_string();
         let batch_sizes = j
             .req("batch_sizes")?
             .as_usize_vec()
-            .ok_or_else(|| anyhow!("bad batch_sizes"))?;
+            .ok_or_else(|| crate::err!("bad batch_sizes"))?;
         let mut families = BTreeMap::new();
         for (name, fj) in j
             .req("families")?
             .as_obj()
-            .ok_or_else(|| anyhow!("families not an object"))?
+            .ok_or_else(|| crate::err!("families not an object"))?
         {
             families.insert(name.clone(), parse_family(name, fj)?);
         }
@@ -98,16 +170,122 @@ impl Manifest {
     pub fn family(&self, name: &str) -> Result<&FamilyManifest> {
         self.families
             .get(name)
-            .ok_or_else(|| anyhow!("unknown family {name:?} (have: {:?})",
+            .ok_or_else(|| crate::err!("unknown family {name:?} (have: {:?})",
                 self.families.keys().collect::<Vec<_>>()))
+    }
+}
+
+/// Per-block weight parameter names for a branch type, in argument
+/// order (mirrors `python/compile/families.py::branch_weight_names`).
+/// Single source of truth for the builtin manifest entries and the
+/// reference backend's weight synthesis / load validation.
+pub fn branch_weight_names(branch: &str) -> &'static [&'static str] {
+    if branch.ends_with("xattn") {
+        &["mod_w", "mod_b", "q_w", "q_b", "kv_w", "kv_b", "o_w", "o_b"]
+    } else if branch.ends_with("attn") {
+        &["mod_w", "mod_b", "qkv_w", "qkv_b", "o_w", "o_b"]
+    } else {
+        &["mod_w", "mod_b", "w1", "b1", "w2", "b2"]
+    }
+}
+
+/// Geometry knobs that differ between the builtin families (everything
+/// else — hidden 128, 4 heads, mlp×4, patch 2, 64-dim t embedding — is
+/// shared, as in python/compile/families.py).
+struct BuiltinSpec {
+    name: &'static str,
+    depth: usize,
+    latent_shape: Vec<usize>,
+    seq_len: usize,
+    branch_types: &'static [&'static str],
+    cond_len: usize,
+    num_classes: usize,
+    vocab: usize,
+    frames: usize,
+    spatial_tokens: usize,
+}
+
+fn builtin_family(spec: BuiltinSpec) -> FamilyManifest {
+    let branch_types: Vec<String> = spec.branch_types.iter().map(|s| s.to_string()).collect();
+    let mut entries = BTreeMap::new();
+
+    let embed_inputs: Vec<String> = if spec.num_classes > 0 {
+        vec!["x".into(), "t".into(), "label".into()]
+    } else {
+        vec!["x".into(), "t".into(), "prompt_ids".into()]
+    };
+    let mut embed_weights: Vec<String> =
+        ["patch_w", "patch_b", "pos", "temb_w1", "temb_b1", "temb_w2", "temb_b2"]
+            .iter()
+            .map(|n| format!("embed.{n}"))
+            .collect();
+    if spec.num_classes > 0 {
+        embed_weights.push("embed.label_emb".into());
+    }
+    if spec.vocab > 0 {
+        embed_weights.push("embed.prompt_emb".into());
+    }
+    entries.insert(
+        "embed".to_string(),
+        EntryManifest { inputs: embed_inputs, weights: embed_weights, artifacts: BTreeMap::new() },
+    );
+
+    for bt in &branch_types {
+        let names = branch_weight_names(bt);
+        let inputs: Vec<String> = if bt.ends_with("xattn") {
+            vec!["x".into(), "cond".into(), "c".into()]
+        } else {
+            vec!["x".into(), "c".into()]
+        };
+        entries.insert(
+            format!("branch.{bt}"),
+            EntryManifest {
+                inputs,
+                weights: names.iter().map(|n| format!("blocks.{{i}}.{bt}.{n}")).collect(),
+                artifacts: BTreeMap::new(),
+            },
+        );
+    }
+
+    entries.insert(
+        "final".to_string(),
+        EntryManifest {
+            inputs: vec!["x".into(), "c".into()],
+            weights: ["mod_w", "mod_b", "lin_w", "lin_b"]
+                .iter()
+                .map(|n| format!("final.{n}"))
+                .collect(),
+            artifacts: BTreeMap::new(),
+        },
+    );
+
+    FamilyManifest {
+        name: spec.name.to_string(),
+        hidden: 128,
+        heads: 4,
+        depth: spec.depth,
+        mlp_ratio: 4,
+        seq_len: spec.seq_len,
+        latent_shape: spec.latent_shape,
+        branch_types,
+        cond_len: spec.cond_len,
+        num_classes: spec.num_classes,
+        vocab: spec.vocab,
+        frames: spec.frames,
+        spatial_tokens: spec.spatial_tokens,
+        patch: 2,
+        t_freq_dim: 64,
+        weights_file: format!("weights_{}.bin", spec.name),
+        impl_name: "reference".to_string(),
+        entries,
     }
 }
 
 fn get_usize(j: &Json, key: &str) -> Result<usize> {
     j.req(key)
-        .map_err(|e| anyhow!("{e}"))?
+        .map_err(|e| crate::err!("{e}"))?
         .as_usize()
-        .ok_or_else(|| anyhow!("{key}: not a number"))
+        .ok_or_else(|| crate::err!("{key}: not a number"))
 }
 
 fn parse_family(name: &str, j: &Json) -> Result<FamilyManifest> {
@@ -115,19 +293,19 @@ fn parse_family(name: &str, j: &Json) -> Result<FamilyManifest> {
     for (ename, ej) in j
         .req("entries")?
         .as_obj()
-        .ok_or_else(|| anyhow!("entries not an object"))?
+        .ok_or_else(|| crate::err!("entries not an object"))?
     {
         let inputs = ej
             .req("inputs")?
             .as_arr()
-            .ok_or_else(|| anyhow!("inputs"))?
+            .ok_or_else(|| crate::err!("inputs"))?
             .iter()
             .filter_map(|v| v.as_str().map(String::from))
             .collect();
         let weights = ej
             .req("weights")?
             .as_arr()
-            .ok_or_else(|| anyhow!("weights"))?
+            .ok_or_else(|| crate::err!("weights"))?
             .iter()
             .filter_map(|v| v.as_str().map(String::from))
             .collect();
@@ -135,11 +313,11 @@ fn parse_family(name: &str, j: &Json) -> Result<FamilyManifest> {
         for (b, f) in ej
             .req("artifacts")?
             .as_obj()
-            .ok_or_else(|| anyhow!("artifacts"))?
+            .ok_or_else(|| crate::err!("artifacts"))?
         {
             artifacts.insert(
-                b.parse::<usize>().map_err(|_| anyhow!("bad batch key {b}"))?,
-                f.as_str().ok_or_else(|| anyhow!("artifact name"))?.to_string(),
+                b.parse::<usize>().map_err(|_| crate::err!("bad batch key {b}"))?,
+                f.as_str().ok_or_else(|| crate::err!("artifact name"))?.to_string(),
             );
         }
         entries.insert(ename.clone(), EntryManifest { inputs, weights, artifacts });
@@ -154,11 +332,11 @@ fn parse_family(name: &str, j: &Json) -> Result<FamilyManifest> {
         latent_shape: j
             .req("latent_shape")?
             .as_usize_vec()
-            .ok_or_else(|| anyhow!("latent_shape"))?,
+            .ok_or_else(|| crate::err!("latent_shape"))?,
         branch_types: j
             .req("branch_types")?
             .as_arr()
-            .ok_or_else(|| anyhow!("branch_types"))?
+            .ok_or_else(|| crate::err!("branch_types"))?
             .iter()
             .filter_map(|v| v.as_str().map(String::from))
             .collect(),
@@ -172,12 +350,12 @@ fn parse_family(name: &str, j: &Json) -> Result<FamilyManifest> {
         weights_file: j
             .req("weights_file")?
             .as_str()
-            .ok_or_else(|| anyhow!("weights_file"))?
+            .ok_or_else(|| crate::err!("weights_file"))?
             .to_string(),
         impl_name: j
             .req("impl")?
             .as_str()
-            .ok_or_else(|| anyhow!("impl"))?
+            .ok_or_else(|| crate::err!("impl"))?
             .to_string(),
         entries,
     })
@@ -224,6 +402,24 @@ mod tests {
             f.entry("branch.attn").unwrap().artifacts.get(&1).unwrap(),
             "image_branch_attn_b1.hlo.txt"
         );
+    }
+
+    #[test]
+    fn builtin_manifest_is_consistent() {
+        let m = Manifest::builtin();
+        for name in ["image", "audio", "video"] {
+            let f = m.family(name).unwrap();
+            assert_eq!(f.latent_size() % f.seq_len, 0, "{name}: non-integer patch dim");
+            assert!(f.entries.contains_key("embed"));
+            assert!(f.entries.contains_key("final"));
+            for bt in &f.branch_types {
+                let e = f.entry(&format!("branch.{bt}")).unwrap();
+                let needs_cond = e.inputs.iter().any(|i| i == "cond");
+                assert_eq!(needs_cond, bt.ends_with("xattn"), "{name}/{bt}");
+            }
+        }
+        assert_eq!(m.family("image").unwrap().branch_sites().len(), 12);
+        assert_eq!(m.family("video").unwrap().branch_sites().len(), 24);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::tensor::Tensor;
 use crate::util::json::parse;
@@ -19,6 +19,16 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
+    /// An empty store; backends fill it via [`WeightStore::insert`]
+    /// (deterministic synthesis when no weights.bin artifact exists).
+    pub fn new() -> WeightStore {
+        WeightStore::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
     pub fn load(path: &Path) -> Result<WeightStore> {
         let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
         Self::parse_bytes(&bytes)
@@ -26,19 +36,19 @@ impl WeightStore {
 
     pub fn parse_bytes(bytes: &[u8]) -> Result<WeightStore> {
         if bytes.len() < 12 || &bytes[..8] != MAGIC {
-            return Err(anyhow!("bad weights magic"));
+            return Err(crate::err!("bad weights magic"));
         }
         let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
         let header_end = 12 + hlen;
         if bytes.len() < header_end {
-            return Err(anyhow!("truncated weights header"));
+            return Err(crate::err!("truncated weights header"));
         }
         let header = std::str::from_utf8(&bytes[12..header_end])
-            .map_err(|_| anyhow!("header not utf8"))?;
-        let j = parse(header).map_err(|e| anyhow!("weights header: {e}"))?;
+            .map_err(|_| crate::err!("header not utf8"))?;
+        let j = parse(header).map_err(|e| crate::err!("weights header: {e}"))?;
         let data = &bytes[header_end..];
         if data.len() % 4 != 0 {
-            return Err(anyhow!("data section not f32-aligned"));
+            return Err(crate::err!("data section not f32-aligned"));
         }
         let floats: Vec<f32> = data
             .chunks_exact(4)
@@ -48,36 +58,36 @@ impl WeightStore {
         let mut tensors = BTreeMap::new();
         for t in j
             .req("tensors")
-            .map_err(|e| anyhow!("{e}"))?
+            .map_err(|e| crate::err!("{e}"))?
             .as_arr()
-            .ok_or_else(|| anyhow!("tensors not an array"))?
+            .ok_or_else(|| crate::err!("tensors not an array"))?
         {
             let name = t
                 .req("name")
-                .map_err(|e| anyhow!("{e}"))?
+                .map_err(|e| crate::err!("{e}"))?
                 .as_str()
-                .ok_or_else(|| anyhow!("tensor name"))?
+                .ok_or_else(|| crate::err!("tensor name"))?
                 .to_string();
             let shape = t
                 .req("shape")
-                .map_err(|e| anyhow!("{e}"))?
+                .map_err(|e| crate::err!("{e}"))?
                 .as_usize_vec()
-                .ok_or_else(|| anyhow!("tensor shape"))?;
+                .ok_or_else(|| crate::err!("tensor shape"))?;
             let offset = t
                 .req("offset")
-                .map_err(|e| anyhow!("{e}"))?
+                .map_err(|e| crate::err!("{e}"))?
                 .as_usize()
-                .ok_or_else(|| anyhow!("tensor offset"))?;
+                .ok_or_else(|| crate::err!("tensor offset"))?;
             let count = t
                 .req("count")
-                .map_err(|e| anyhow!("{e}"))?
+                .map_err(|e| crate::err!("{e}"))?
                 .as_usize()
-                .ok_or_else(|| anyhow!("tensor count"))?;
+                .ok_or_else(|| crate::err!("tensor count"))?;
             if offset + count > floats.len() {
-                return Err(anyhow!("tensor {name}: out of bounds"));
+                return Err(crate::err!("tensor {name}: out of bounds"));
             }
             if shape.iter().product::<usize>() != count {
-                return Err(anyhow!("tensor {name}: shape/count mismatch"));
+                return Err(crate::err!("tensor {name}: shape/count mismatch"));
             }
             tensors.insert(name, Tensor::new(shape, floats[offset..offset + count].to_vec()));
         }
@@ -87,7 +97,7 @@ impl WeightStore {
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)
-            .ok_or_else(|| anyhow!("weight tensor {name:?} not found"))
+            .ok_or_else(|| crate::err!("weight tensor {name:?} not found"))
     }
 
     pub fn names(&self) -> impl Iterator<Item = &String> {

@@ -11,7 +11,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 use crate::cache::schedule::{Decision, Schedule};
 use crate::model::{Cond, Engine};
@@ -100,7 +100,7 @@ pub fn generate(
     let fm = engine.family_manifest(&cfg.family)?.clone();
     let batch = cond.batch(fm.cond_len);
     if batch == 0 {
-        return Err(anyhow!("empty batch"));
+        return Err(crate::err!("empty batch"));
     }
     let mut rng = Rng::new(cfg.seed);
     let mut latent_shape = vec![batch];
@@ -124,17 +124,17 @@ pub fn generate_from(
     let fm = engine.family_manifest(&cfg.family)?.clone();
     let batch = cond.batch(fm.cond_len);
     if batch == 0 {
-        return Err(anyhow!("empty batch"));
+        return Err(crate::err!("empty batch"));
     }
     if x_init.dim0() != batch {
-        return Err(anyhow!("x_init batch {} != cond batch {batch}", x_init.dim0()));
+        return Err(crate::err!("x_init batch {} != cond batch {batch}", x_init.dim0()));
     }
     if let CacheMode::Grouped(s) = mode {
         if s.steps != cfg.steps {
-            return Err(anyhow!("schedule has {} steps, request has {}", s.steps, cfg.steps));
+            return Err(crate::err!("schedule has {} steps, request has {}", s.steps, cfg.steps));
         }
         if s.branch_types != fm.branch_types {
-            return Err(anyhow!("schedule branch types do not match family"));
+            return Err(crate::err!("schedule branch types do not match family"));
         }
     }
 
@@ -187,7 +187,7 @@ pub fn generate_from(
                     cache
                         .get(&key)
                         .cloned()
-                        .ok_or_else(|| anyhow!("cache miss at step {i} {block}.{br}"))?
+                        .ok_or_else(|| crate::err!("cache miss at step {i} {block}.{br}"))?
                 }
             };
             tokens.add_inplace(&delta);

@@ -1,24 +1,43 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Execution backends: the seam between the model-agnostic serving /
+//! caching layers and whatever actually runs the DiT math.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
-//! Interchange is HLO **text** (jax ≥ 0.5 emits 64-bit instruction ids
-//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! The SmoothCache policy machinery (calibration, schedules, the
+//! coordinator, the TCP server) only ever needs four operations at the
+//! paper's caching granularity — embed, branch, final head, plus a
+//! per-step context — so those are the [`Backend`] trait. Two
+//! implementations exist:
 //!
-//! Weights are uploaded once as device-resident [`xla::PjRtBuffer`]s and
-//! passed by reference on every call (`execute_b`), so the request path
-//! transfers only activations.
+//! * [`reference`] — a pure-Rust CPU DiT forward over the in-tree
+//!   [`crate::tensor`] substrate with deterministic weight synthesis.
+//!   Always available; the default. Lets calibration, schedule
+//!   generation, serving and every integration test run fully offline.
+//! * `pjrt` *(cargo feature `pjrt`; module `runtime::pjrt`)* — loads
+//!   the AOT HLO-text
+//!   artifacts produced by `python/compile/aot.py` through the PJRT C
+//!   API (`xla` crate) and keeps weights device-resident. See
+//!   DESIGN.md §"Backend seam".
 //!
-//! PJRT handles are not `Send`/`Sync`; the engine owns them on a single
-//! executor thread (coordinator threads talk to it over channels).
+//! Backends are selected by [`select_backend`]: `SMOOTHCACHE_BACKEND`
+//! (`reference` | `pjrt`) wins; otherwise PJRT is used when compiled in
+//! and the artifacts directory holds a manifest, else the reference
+//! backend.
+//!
+//! Backend handles are not `Send`/`Sync` in general (PJRT buffers are
+//! thread-bound); the engine owns its backend on a single executor
+//! thread and coordinator threads talk to it over channels.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
+pub mod reference;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
+use std::any::Any;
+
+use crate::model::manifest::FamilyManifest;
+use crate::model::weights::WeightStore;
+use crate::model::Cond;
 use crate::tensor::Tensor;
+use crate::util::error::Result;
 
 /// Host-side executable input (f32 tensor or i32 index array).
 #[derive(Clone, Debug)]
@@ -46,6 +65,8 @@ impl HostValue {
 }
 
 /// Cumulative runtime counters (perf pass + MAC/latency accounting).
+/// `uploads`/`compiles` stay zero on backends without a device transfer
+/// or compile stage.
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
     pub executions: u64,
@@ -56,177 +77,124 @@ pub struct RuntimeStats {
     pub compile_seconds: f64,
 }
 
-/// A compiled PJRT executable plus its interface metadata.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-    pub num_outputs: usize,
+/// Output of the embed entry for one (batch, t) invocation.
+pub struct EmbedOut {
+    /// `[B, S, D]` patchified + positional tokens.
+    pub tokens: Tensor,
+    /// `[B, D]` adaLN conditioning vector.
+    pub c: Tensor,
+    /// `[B, Sc, D]` cross-attention tokens (prompt families only).
+    pub cond: Option<Tensor>,
 }
 
-/// PJRT client + executable cache. One per executor thread.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    stats: std::cell::RefCell<RuntimeStats>,
+/// Per-step context produced by [`Backend::make_step_ctx`] and consumed
+/// by every branch / final-head call of that solver step. The payload is
+/// backend-specific (the PJRT backend stores device-resident buffers so
+/// the branch hot path uploads only the tokens; the reference backend
+/// stores host tensors).
+pub struct StepCtx {
+    pub batch: usize,
+    inner: Box<dyn Any>,
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client, stats: Default::default() })
+impl StepCtx {
+    pub fn new(batch: usize, inner: Box<dyn Any>) -> StepCtx {
+        StepCtx { batch, inner }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Recover the backend-specific payload. Backends panic-free
+    /// downcast and error on a foreign context.
+    pub fn payload<T: 'static>(&self) -> Option<&T> {
+        self.inner.downcast_ref::<T>()
+    }
+}
+
+/// A DiT execution backend at SmoothCache's caching granularity.
+///
+/// The contract mirrors the branch decomposition of
+/// `python/compile/model.py`: one `embed` per (step, batch), then one
+/// `branch` call per (block, branch-type) site — each returning the
+/// gated pre-residual delta the pipeline may cache — and one
+/// `final_head` per step. See docs/protocol.md for how requests reach
+/// this trait and DESIGN.md for the layer map.
+pub trait Backend {
+    /// Short identifier ("reference", "pjrt-cpu", …).
+    fn name(&self) -> String;
+
+    /// Make a family executable: bind its weights (uploading to the
+    /// device where applicable). Idempotent per family.
+    fn load_family(&mut self, fm: &FamilyManifest, weights: WeightStore) -> Result<()>;
+
+    /// Prepare for a batch size ahead of traffic (compile caches etc.).
+    /// No-op for backends without a compile stage.
+    fn warmup(&mut self, _fm: &FamilyManifest, _batch: usize) -> Result<()> {
+        Ok(())
     }
 
-    pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
-    }
+    /// Run the embed entry: latent + t + conditioning → tokens, c, cond.
+    fn embed(&self, fm: &FamilyManifest, x: &Tensor, t: &[f32], cond: &Cond) -> Result<EmbedOut>;
 
-    pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = RuntimeStats::default();
-    }
+    /// Stage the per-step conditioning (reused across all branches of
+    /// the step).
+    fn make_step_ctx(&self, embed: &EmbedOut) -> Result<StepCtx>;
 
-    /// Load + compile one HLO-text artifact.
-    pub fn load_hlo(&self, path: &Path, num_outputs: usize) -> Result<Executable> {
-        let t = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
-        let mut s = self.stats.borrow_mut();
-        s.compiles += 1;
-        s.compile_seconds += t.elapsed().as_secs_f64();
-        Ok(Executable {
-            exe,
-            name: path.file_name().unwrap().to_string_lossy().into_owned(),
-            num_outputs,
-        })
-    }
-
-    /// Upload a host value to a device-resident buffer.
-    pub fn upload(&self, v: &HostValue) -> Result<xla::PjRtBuffer> {
-        let t = Instant::now();
-        let buf = match v {
-            HostValue::F32(t) => self
-                .client
-                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-                .map_err(|e| anyhow!("upload f32: {e:?}"))?,
-            HostValue::I32 { shape, data } => self
-                .client
-                .buffer_from_host_buffer::<i32>(data, shape, None)
-                .map_err(|e| anyhow!("upload i32: {e:?}"))?,
-        };
-        let mut s = self.stats.borrow_mut();
-        s.uploads += 1;
-        s.upload_seconds += t.elapsed().as_secs_f64();
-        Ok(buf)
-    }
-
-    /// Execute with device-resident argument buffers; download all tuple
-    /// outputs as f32 host tensors.
-    pub fn execute(
+    /// Execute one branch site: returns the gated pre-residual delta.
+    fn branch(
         &self,
-        exe: &Executable,
-        args: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<Tensor>> {
-        let t = Instant::now();
-        let out = exe
-            .exe
-            .execute_b(args)
-            .map_err(|e| anyhow!("execute {}: {e:?}", exe.name))?;
-        let result = out
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("execute {}: empty result", exe.name))?;
-        let lit = result
-            .to_literal_sync()
-            .map_err(|e| anyhow!("download {}: {e:?}", exe.name))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", exe.name))?;
-        if parts.len() != exe.num_outputs {
-            return Err(anyhow!(
-                "{}: expected {} outputs, got {}",
-                exe.name,
-                exe.num_outputs,
-                parts.len()
-            ));
-        }
-        let mut tensors = Vec::with_capacity(parts.len());
-        for p in parts {
-            let shape = p
-                .array_shape()
-                .map_err(|e| anyhow!("shape {}: {e:?}", exe.name))?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data = p
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("to_vec {}: {e:?}", exe.name))?;
-            tensors.push(Tensor::new(dims, data));
-        }
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.exec_seconds += t.elapsed().as_secs_f64();
-        Ok(tensors)
-    }
+        fm: &FamilyManifest,
+        block: usize,
+        branch: &str,
+        tokens: &Tensor,
+        ctx: &StepCtx,
+    ) -> Result<Tensor>;
 
-    /// Convenience: upload host args then execute.
-    pub fn execute_host(
-        &self,
-        exe: &Executable,
-        host_args: &[HostValue],
-        device_args: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<Tensor>> {
-        let uploaded: Vec<xla::PjRtBuffer> =
-            host_args.iter().map(|v| self.upload(v)).collect::<Result<_>>()?;
-        let mut all: Vec<&xla::PjRtBuffer> = uploaded.iter().collect();
-        all.extend_from_slice(device_args);
-        self.execute(exe, &all)
+    /// Execute the final head: tokens → epsilon/velocity prediction in
+    /// latent shape.
+    fn final_head(&self, fm: &FamilyManifest, tokens: &Tensor, ctx: &StepCtx) -> Result<Tensor>;
+
+    fn stats(&self) -> RuntimeStats;
+
+    fn reset_stats(&self);
+}
+
+/// Construct the backend for an artifacts directory.
+///
+/// `manifest_on_disk` says whether `dir` held a real `manifest.json`
+/// (required for PJRT — its executables are on-disk artifacts). The
+/// `SMOOTHCACHE_BACKEND` env var (`reference` | `pjrt`) overrides the
+/// default choice.
+pub fn select_backend(
+    dir: &std::path::Path,
+    manifest_on_disk: bool,
+) -> Result<Box<dyn Backend>> {
+    let choice = std::env::var("SMOOTHCACHE_BACKEND").unwrap_or_default();
+    match choice.as_str() {
+        "reference" => Ok(Box::new(reference::ReferenceBackend::new())),
+        "pjrt" => open_pjrt(dir, manifest_on_disk),
+        "" => {
+            if cfg!(feature = "pjrt") && manifest_on_disk {
+                open_pjrt(dir, manifest_on_disk)
+            } else {
+                Ok(Box::new(reference::ReferenceBackend::new()))
+            }
+        }
+        other => Err(crate::err!(
+            "unknown SMOOTHCACHE_BACKEND {other:?} (expected reference|pjrt)"
+        )),
     }
 }
 
-/// Artifact registry: resolves (family, entry, batch) → compiled
-/// executable, compiling lazily and caching the handle.
-pub struct Registry {
-    pub dir: PathBuf,
-    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+#[cfg(feature = "pjrt")]
+fn open_pjrt(dir: &std::path::Path, manifest_on_disk: bool) -> Result<Box<dyn Backend>> {
+    if !manifest_on_disk {
+        crate::bail!("pjrt backend needs an artifacts manifest in {dir:?} — run `make artifacts`");
+    }
+    Ok(Box::new(pjrt::PjrtBackend::open(dir.to_path_buf())?))
 }
 
-impl Registry {
-    pub fn new(dir: PathBuf) -> Registry {
-        Registry { dir, cache: Default::default() }
-    }
-
-    pub fn get(
-        &self,
-        rt: &Runtime,
-        file: &str,
-        num_outputs: usize,
-    ) -> Result<std::rc::Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(file) {
-            return Ok(e.clone());
-        }
-        let path = self.dir.join(file);
-        if !path.exists() {
-            return Err(anyhow!(
-                "artifact {file} not found in {:?} — run `make artifacts`",
-                self.dir
-            ));
-        }
-        let exe = std::rc::Rc::new(
-            rt.load_hlo(&path, num_outputs)
-                .with_context(|| format!("loading {file}"))?,
-        );
-        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
+#[cfg(not(feature = "pjrt"))]
+fn open_pjrt(_dir: &std::path::Path, _manifest_on_disk: bool) -> Result<Box<dyn Backend>> {
+    Err(crate::err!(
+        "this build has no PJRT support — rebuild with `--features pjrt` (see DESIGN.md)"
+    ))
 }

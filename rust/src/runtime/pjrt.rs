@@ -1,0 +1,395 @@
+//! PJRT backend (cargo feature `pjrt`): load AOT HLO-text artifacts and
+//! execute them through the `xla` crate (PJRT C API, CPU plugin).
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute_b`. Interchange is HLO **text** (jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids).
+//!
+//! Weights are uploaded once as device-resident [`xla::PjRtBuffer`]s and
+//! passed by reference on every call (`execute_b`), so the request path
+//! transfers only activations. PJRT handles are not `Send`/`Sync`; the
+//! engine owns this backend on a single executor thread.
+//!
+//! NOTE: the `xla` dependency is intentionally not declared in
+//! Cargo.toml (docs/adr/001-zero-dependency-default-build.md); enabling
+//! this feature requires vendoring xla-rs and adding it to
+//! `[dependencies]`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::{Backend, EmbedOut, HostValue, RuntimeStats, StepCtx};
+use crate::model::manifest::FamilyManifest;
+use crate::model::weights::WeightStore;
+use crate::model::Cond;
+use crate::tensor::Tensor;
+use crate::util::error::{Context, Result};
+
+/// A compiled PJRT executable plus its interface metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub num_outputs: usize,
+}
+
+/// PJRT client + executable cache. One per executor thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    stats: std::cell::RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| crate::err!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, stats: Default::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path, num_outputs: usize) -> Result<Executable> {
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| crate::err!("non-utf8 path"))?,
+        )
+        .map_err(|e| crate::err!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| crate::err!("compile {path:?}: {e:?}"))?;
+        let mut s = self.stats.borrow_mut();
+        s.compiles += 1;
+        s.compile_seconds += t.elapsed().as_secs_f64();
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+            num_outputs,
+        })
+    }
+
+    /// Upload a host value to a device-resident buffer.
+    pub fn upload(&self, v: &HostValue) -> Result<xla::PjRtBuffer> {
+        let t = Instant::now();
+        let buf = match v {
+            HostValue::F32(t) => self
+                .client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                .map_err(|e| crate::err!("upload f32: {e:?}"))?,
+            HostValue::I32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer::<i32>(data, shape, None)
+                .map_err(|e| crate::err!("upload i32: {e:?}"))?,
+        };
+        let mut s = self.stats.borrow_mut();
+        s.uploads += 1;
+        s.upload_seconds += t.elapsed().as_secs_f64();
+        Ok(buf)
+    }
+
+    /// Execute with device-resident argument buffers; download all tuple
+    /// outputs as f32 host tensors.
+    pub fn execute(&self, exe: &Executable, args: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let t = Instant::now();
+        let out = exe
+            .exe
+            .execute_b(args)
+            .map_err(|e| crate::err!("execute {}: {e:?}", exe.name))?;
+        let result = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| crate::err!("execute {}: empty result", exe.name))?;
+        let lit = result
+            .to_literal_sync()
+            .map_err(|e| crate::err!("download {}: {e:?}", exe.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| crate::err!("untuple {}: {e:?}", exe.name))?;
+        if parts.len() != exe.num_outputs {
+            return Err(crate::err!(
+                "{}: expected {} outputs, got {}",
+                exe.name,
+                exe.num_outputs,
+                parts.len()
+            ));
+        }
+        let mut tensors = Vec::with_capacity(parts.len());
+        for p in parts {
+            let shape = p
+                .array_shape()
+                .map_err(|e| crate::err!("shape {}: {e:?}", exe.name))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = p
+                .to_vec::<f32>()
+                .map_err(|e| crate::err!("to_vec {}: {e:?}", exe.name))?;
+            tensors.push(Tensor::new(dims, data));
+        }
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.exec_seconds += t.elapsed().as_secs_f64();
+        Ok(tensors)
+    }
+}
+
+/// Artifact registry: resolves artifact file → compiled executable,
+/// compiling lazily and caching the handle.
+pub struct Registry {
+    pub dir: PathBuf,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Registry {
+    pub fn new(dir: PathBuf) -> Registry {
+        Registry { dir, cache: Default::default() }
+    }
+
+    pub fn get(
+        &self,
+        rt: &Runtime,
+        file: &str,
+        num_outputs: usize,
+    ) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        if !path.exists() {
+            return Err(crate::err!(
+                "artifact {file} not found in {:?} — run `make artifacts`",
+                self.dir
+            ));
+        }
+        let exe = std::rc::Rc::new(
+            rt.load_hlo(&path, num_outputs)
+                .with_context(|| format!("loading {file}"))?,
+        );
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Step payload: device-resident per-step conditioning (c uploaded once
+/// per step, not once per branch — the branch hot path uploads only the
+/// tokens).
+struct PjrtStepCtx {
+    c_buf: xla::PjRtBuffer,
+    cond_buf: Option<xla::PjRtBuffer>,
+}
+
+/// The [`Backend`] over PJRT: artifact executables + device weights.
+pub struct PjrtBackend {
+    rt: Runtime,
+    registry: Registry,
+    /// family → resolved tensor name → device buffer (uploaded at load).
+    device_weights: HashMap<String, HashMap<String, xla::PjRtBuffer>>,
+}
+
+impl PjrtBackend {
+    pub fn open(dir: PathBuf) -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            rt: Runtime::cpu()?,
+            registry: Registry::new(dir),
+            device_weights: HashMap::new(),
+        })
+    }
+
+    fn family_weights(&self, family: &str) -> Result<&HashMap<String, xla::PjRtBuffer>> {
+        self.device_weights
+            .get(family)
+            .ok_or_else(|| crate::err!("family {family:?} not loaded in pjrt backend"))
+    }
+
+    fn weight_buffers<'a>(
+        &'a self,
+        family: &str,
+        templates: &[String],
+        block: usize,
+    ) -> Result<Vec<&'a xla::PjRtBuffer>> {
+        let dw = self.family_weights(family)?;
+        templates
+            .iter()
+            .map(|tpl| {
+                let name = tpl.replace("{i}", &block.to_string());
+                dw.get(&name)
+                    .ok_or_else(|| crate::err!("device weight {name:?} missing"))
+            })
+            .collect()
+    }
+
+    fn exec_entry(
+        &self,
+        fm: &FamilyManifest,
+        entry_name: &str,
+        batch: usize,
+        host_args: &[HostValue],
+        extra_device: &[&xla::PjRtBuffer],
+        block: usize,
+    ) -> Result<Vec<Tensor>> {
+        let entry = fm.entry(entry_name)?;
+        let file = entry.artifacts.get(&batch).ok_or_else(|| {
+            crate::err!(
+                "{}/{entry_name}: unsupported batch {batch} (have {:?})",
+                fm.name,
+                entry.artifacts.keys().collect::<Vec<_>>()
+            )
+        })?;
+        let exe = self.registry.get(&self.rt, file, outputs_of(fm, entry_name))?;
+        let wbufs = self.weight_buffers(&fm.name, &entry.weights, block)?;
+        let uploaded: Vec<xla::PjRtBuffer> =
+            host_args.iter().map(|v| self.rt.upload(v)).collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> = uploaded.iter().collect();
+        args.extend_from_slice(extra_device);
+        args.extend(wbufs);
+        self.rt.execute(&exe, &args)
+    }
+
+    fn step_payload<'a>(&self, ctx: &'a StepCtx) -> Result<&'a PjrtStepCtx> {
+        ctx.payload::<PjrtStepCtx>()
+            .ok_or_else(|| crate::err!("step ctx was not produced by the pjrt backend"))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt-{}", self.rt.platform())
+    }
+
+    /// Upload every weight tensor to the device once.
+    fn load_family(&mut self, fm: &FamilyManifest, weights: WeightStore) -> Result<()> {
+        if self.device_weights.contains_key(&fm.name) {
+            return Ok(());
+        }
+        let mut dw = HashMap::new();
+        for name in weights.names() {
+            let t = weights.get(name)?;
+            dw.insert(name.clone(), self.rt.upload(&HostValue::F32(t.clone()))?);
+        }
+        self.device_weights.insert(fm.name.clone(), dw);
+        Ok(())
+    }
+
+    /// Pre-compile every executable for the given batch size (avoids
+    /// first-request compile latency; used by the server warmup).
+    fn warmup(&mut self, fm: &FamilyManifest, batch: usize) -> Result<()> {
+        for (ename, entry) in &fm.entries {
+            let file = entry
+                .artifacts
+                .get(&batch)
+                .ok_or_else(|| crate::err!("{}/{ename}: no batch-{batch} artifact", fm.name))?;
+            self.registry.get(&self.rt, file, outputs_of(fm, ename))?;
+        }
+        Ok(())
+    }
+
+    fn embed(&self, fm: &FamilyManifest, x: &Tensor, t: &[f32], cond: &Cond) -> Result<EmbedOut> {
+        let batch = x.dim0();
+        assert_eq!(t.len(), batch, "t batch mismatch");
+        let cond_val = match cond {
+            Cond::Label(l) => {
+                assert_eq!(l.len(), batch);
+                HostValue::i32(vec![batch], l.clone())
+            }
+            Cond::Prompt(p) => {
+                assert_eq!(p.len(), batch * fm.cond_len);
+                HostValue::i32(vec![batch, fm.cond_len], p.clone())
+            }
+        };
+        let host_args = vec![
+            HostValue::F32(x.clone()),
+            HostValue::F32(Tensor::new(vec![batch], t.to_vec())),
+            cond_val,
+        ];
+        let mut out = self.exec_entry(fm, "embed", batch, &host_args, &[], 0)?;
+        let cond_t = if out.len() == 3 { Some(out.pop().unwrap()) } else { None };
+        let c = out.pop().unwrap();
+        let tokens = out.pop().unwrap();
+        Ok(EmbedOut { tokens, c, cond: cond_t })
+    }
+
+    /// Upload the per-step conditioning once (reused across all branches
+    /// of the step).
+    fn make_step_ctx(&self, embed: &EmbedOut) -> Result<StepCtx> {
+        let payload = PjrtStepCtx {
+            c_buf: self.rt.upload(&HostValue::F32(embed.c.clone()))?,
+            cond_buf: match &embed.cond {
+                Some(c) => Some(self.rt.upload(&HostValue::F32(c.clone()))?),
+                None => None,
+            },
+        };
+        Ok(StepCtx::new(embed.tokens.dim0(), Box::new(payload)))
+    }
+
+    fn branch(
+        &self,
+        fm: &FamilyManifest,
+        block: usize,
+        branch: &str,
+        tokens: &Tensor,
+        ctx: &StepCtx,
+    ) -> Result<Tensor> {
+        let payload = self.step_payload(ctx)?;
+        let entry_name = format!("branch.{branch}");
+        let entry = fm.entry(&entry_name)?;
+        let needs_cond = entry.inputs.iter().any(|i| i == "cond");
+        let host_args = vec![HostValue::F32(tokens.clone())];
+        let mut extra: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2);
+        if needs_cond {
+            extra.push(
+                payload
+                    .cond_buf
+                    .as_ref()
+                    .ok_or_else(|| crate::err!("{entry_name} needs cond tokens"))?,
+            );
+        }
+        extra.push(&payload.c_buf);
+        let mut out = self.exec_entry(fm, &entry_name, ctx.batch, &host_args, &extra, block)?;
+        Ok(out.pop().unwrap())
+    }
+
+    fn final_head(&self, fm: &FamilyManifest, tokens: &Tensor, ctx: &StepCtx) -> Result<Tensor> {
+        let payload = self.step_payload(ctx)?;
+        let host_args = vec![HostValue::F32(tokens.clone())];
+        let mut out =
+            self.exec_entry(fm, "final", ctx.batch, &host_args, &[&payload.c_buf], 0)?;
+        Ok(out.pop().unwrap())
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.rt.stats()
+    }
+
+    fn reset_stats(&self) {
+        self.rt.reset_stats()
+    }
+}
+
+/// Tuple arity of each entry's output.
+fn outputs_of(fm: &FamilyManifest, entry: &str) -> usize {
+    match entry {
+        "embed" => {
+            if fm.cond_len > 0 {
+                3
+            } else {
+                2
+            }
+        }
+        _ => 1,
+    }
+}

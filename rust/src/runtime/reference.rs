@@ -1,0 +1,1052 @@
+//! Pure-Rust CPU reference backend.
+//!
+//! A faithful port of the branch-decomposed DiT forward defined by
+//! `python/compile/model.py` (the jnp oracle path), executed directly on
+//! the host [`crate::tensor`] substrate — no PJRT, no artifacts, no
+//! dependencies. Branches are computed at exactly SmoothCache's caching
+//! granularity (gated pre-residual deltas), so every policy, schedule,
+//! calibration pass, bench and serving flow exercises the same code
+//! path it would under the PJRT backend.
+//!
+//! Weights are synthesized deterministically per (family, tensor name)
+//! with [`crate::util::rng::Rng`] when no `weights.bin` artifact exists
+//! (mirroring `init_weights(adaln_zero=False)`: std 0.02 linears, unit
+//! gate biases so untrained families still produce O(1) branch deltas
+//! for calibration), which makes the whole offline stack reproducible
+//! from seeds alone.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::{Backend, EmbedOut, RuntimeStats, StepCtx};
+use crate::model::manifest::{branch_weight_names, FamilyManifest};
+use crate::model::weights::WeightStore;
+use crate::model::Cond;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Step payload: host copies of the per-step conditioning.
+struct RefStepCtx {
+    c: Tensor,
+    cond: Option<Tensor>,
+}
+
+pub struct ReferenceBackend {
+    families: HashMap<String, WeightStore>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend { families: HashMap::new(), stats: RefCell::new(RuntimeStats::default()) }
+    }
+
+    fn weights(&self, family: &str) -> Result<&WeightStore> {
+        self.families
+            .get(family)
+            .ok_or_else(|| crate::err!("family {family:?} not loaded in reference backend"))
+    }
+
+    fn tick(&self, t0: Instant) {
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.exec_seconds += t0.elapsed().as_secs_f64();
+    }
+
+    fn step_payload<'a>(&self, ctx: &'a StepCtx) -> Result<&'a RefStepCtx> {
+        ctx.payload::<RefStepCtx>()
+            .ok_or_else(|| crate::err!("step ctx was not produced by the reference backend"))
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> String {
+        "reference".to_string()
+    }
+
+    fn load_family(&mut self, fm: &FamilyManifest, weights: WeightStore) -> Result<()> {
+        // sanity: the forward below needs every branch-site tensor
+        for (block, br) in fm.branch_sites() {
+            for wn in branch_weight_names(&br) {
+                let name = format!("blocks.{block}.{br}.{wn}");
+                weights
+                    .get(&name)
+                    .map_err(|e| e.context(format!("reference backend: {}", fm.name)))?;
+            }
+        }
+        self.families.insert(fm.name.clone(), weights);
+        Ok(())
+    }
+
+    fn embed(&self, fm: &FamilyManifest, x: &Tensor, t: &[f32], cond: &Cond) -> Result<EmbedOut> {
+        let t0 = Instant::now();
+        let ws = self.weights(&fm.name)?;
+        let b = x.dim0();
+        if t.len() != b {
+            crate::bail!("embed: t batch {} != x batch {b}", t.len());
+        }
+        let d = fm.hidden;
+        let s = fm.seq_len;
+        let pd = patch_dim(fm);
+
+        // --- patchify to [B, S, pd] ------------------------------------
+        let xp = patchify(fm, x)?;
+
+        // --- tokens = xp @ patch_w + patch_b + pos ---------------------
+        let patch_w = ws.get("embed.patch_w")?;
+        let patch_b = ws.get("embed.patch_b")?;
+        let pos = ws.get("embed.pos")?;
+        let mut tokens = affine(&xp, b * s, pd, patch_w, Some(patch_b))?;
+        for bi in 0..b {
+            for si in 0..s {
+                for j in 0..d {
+                    tokens[(bi * s + si) * d + j] += pos.data[si * d + j];
+                }
+            }
+        }
+        let tokens = Tensor::new(vec![b, s, d], tokens);
+
+        // --- timestep embedding → c [B, D] -----------------------------
+        let temb = timestep_embedding(t, fm.t_freq_dim);
+        let h1 = affine(&temb, b, fm.t_freq_dim, ws.get("embed.temb_w1")?, Some(ws.get("embed.temb_b1")?))?;
+        let h1: Vec<f32> = h1.into_iter().map(silu).collect();
+        let mut c = affine(&h1, b, d, ws.get("embed.temb_w2")?, Some(ws.get("embed.temb_b2")?))?;
+
+        // --- conditioning ---------------------------------------------
+        let mut cond_tokens: Option<Tensor> = None;
+        match cond {
+            Cond::Label(labels) => {
+                if fm.num_classes == 0 {
+                    crate::bail!("family {} takes prompt conditioning, got a label", fm.name);
+                }
+                if labels.len() != b {
+                    crate::bail!("label batch {} != x batch {b}", labels.len());
+                }
+                let emb = ws.get("embed.label_emb")?; // [classes+1, D]
+                for (bi, &l) in labels.iter().enumerate() {
+                    let l = l as usize;
+                    if l > fm.num_classes {
+                        crate::bail!("label {l} out of range (null class = {})", fm.num_classes);
+                    }
+                    for j in 0..d {
+                        c[bi * d + j] += emb.data[l * d + j];
+                    }
+                }
+            }
+            Cond::Prompt(ids) => {
+                if fm.vocab == 0 {
+                    crate::bail!("family {} takes label conditioning, got a prompt", fm.name);
+                }
+                let sc = fm.cond_len;
+                if ids.len() != b * sc {
+                    crate::bail!("prompt ids {} != batch {b} × cond_len {sc}", ids.len());
+                }
+                let emb = ws.get("embed.prompt_emb")?; // [vocab, D]
+                let mut ct = vec![0.0f32; b * sc * d];
+                for bi in 0..b {
+                    for si in 0..sc {
+                        let id = ids[bi * sc + si] as usize;
+                        if id >= fm.vocab {
+                            crate::bail!("prompt id {id} out of vocab {}", fm.vocab);
+                        }
+                        ct[(bi * sc + si) * d..(bi * sc + si + 1) * d]
+                            .copy_from_slice(&emb.data[id * d..(id + 1) * d]);
+                    }
+                }
+                // c += mean over the conditioning axis
+                for bi in 0..b {
+                    for j in 0..d {
+                        let mut m = 0.0f32;
+                        for si in 0..sc {
+                            m += ct[(bi * sc + si) * d + j];
+                        }
+                        c[bi * d + j] += m / sc as f32;
+                    }
+                }
+                cond_tokens = Some(Tensor::new(vec![b, sc, d], ct));
+            }
+        }
+
+        self.tick(t0);
+        Ok(EmbedOut { tokens, c: Tensor::new(vec![b, d], c), cond: cond_tokens })
+    }
+
+    fn make_step_ctx(&self, embed: &EmbedOut) -> Result<StepCtx> {
+        Ok(StepCtx::new(
+            embed.tokens.dim0(),
+            Box::new(RefStepCtx { c: embed.c.clone(), cond: embed.cond.clone() }),
+        ))
+    }
+
+    fn branch(
+        &self,
+        fm: &FamilyManifest,
+        block: usize,
+        branch: &str,
+        tokens: &Tensor,
+        ctx: &StepCtx,
+    ) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let ws = self.weights(&fm.name)?;
+        let sc = self.step_payload(ctx)?;
+        let prefix = format!("blocks.{block}.{branch}.");
+        let out = if fm.frames > 0 {
+            video_branch(fm, ws, &prefix, branch, tokens, sc.cond.as_ref(), &sc.c)?
+        } else {
+            plain_branch(fm, ws, &prefix, branch, tokens, sc.cond.as_ref(), &sc.c)?
+        };
+        self.tick(t0);
+        Ok(out)
+    }
+
+    fn final_head(&self, fm: &FamilyManifest, tokens: &Tensor, ctx: &StepCtx) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let ws = self.weights(&fm.name)?;
+        let sc = self.step_payload(ctx)?;
+        let b = tokens.dim0();
+        let d = fm.hidden;
+        let s = fm.seq_len;
+        let pd = patch_dim(fm);
+
+        let parts = mod_params(&sc.c, b, d, ws.get("final.mod_w")?, ws.get("final.mod_b")?, 2)?;
+        let h = ln_modulate(tokens, b, s, d, &parts[0], &parts[1]);
+        let y = affine(&h, b * s, d, ws.get("final.lin_w")?, Some(ws.get("final.lin_b")?))?;
+        let out = unpatchify(fm, &y, b, pd)?;
+        self.tick(t0);
+        Ok(out)
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Branch bodies (pre-residual, gated) — ports of model.py
+// ---------------------------------------------------------------------------
+
+/// Dispatch for flat-token families (image / audio).
+fn plain_branch(
+    fm: &FamilyManifest,
+    ws: &WeightStore,
+    prefix: &str,
+    branch: &str,
+    x: &Tensor,
+    cond: Option<&Tensor>,
+    c: &Tensor,
+) -> Result<Tensor> {
+    let b = x.dim0();
+    let s = x.shape[1];
+    if branch.ends_with("xattn") {
+        let cond = cond.ok_or_else(|| crate::err!("{prefix}: cross-attention needs cond tokens"))?;
+        branch_xattn(fm, ws, prefix, x, b, s, cond, c)
+    } else if branch.ends_with("attn") {
+        branch_attn(fm, ws, prefix, x, b, s, c)
+    } else if branch.ends_with("ffn") {
+        branch_ffn(fm, ws, prefix, x, b, s, c)
+    } else {
+        Err(crate::err!("unknown branch type {branch:?}"))
+    }
+}
+
+/// Video factorisation: spatial branches attend within a frame, temporal
+/// branches across frames at a fixed spatial site. Tokens stay flat
+/// `[B, F·Ssp, D]`; the sub-batched view is materialised, the branch body
+/// runs on it, and the delta is mapped back.
+///
+/// The repeated conditioning (`cs`/`conds`) is invariant across a solver
+/// step; staging it in the step context instead of rebuilding per branch
+/// call would save depth×branch_types copies per step.
+fn video_branch(
+    fm: &FamilyManifest,
+    ws: &WeightStore,
+    prefix: &str,
+    branch: &str,
+    x: &Tensor,
+    cond: Option<&Tensor>,
+    c: &Tensor,
+) -> Result<Tensor> {
+    let b = x.dim0();
+    let d = fm.hidden;
+    let f = fm.frames;
+    let ssp = fm.spatial_tokens;
+    if x.shape[1] != f * ssp {
+        crate::bail!("video tokens: seq {} != frames {f} × spatial {ssp}", x.shape[1]);
+    }
+    let spatial = branch.starts_with("s_");
+    if !spatial && !branch.starts_with("t_") {
+        crate::bail!("video branch {branch:?} must be s_* or t_*");
+    }
+
+    // sub-batched tokens + repeated conditioning
+    let (sub_b, sub_s, reps) = if spatial { (b * f, ssp, f) } else { (b * ssp, f, ssp) };
+    let xs = if spatial {
+        // [B, F*Ssp, D] -> [B*F, Ssp, D]: identical memory layout
+        Tensor::new(vec![sub_b, sub_s, d], x.data.clone())
+    } else {
+        // [B, F*Ssp, D] -> [B*Ssp, F, D]
+        let mut data = vec![0.0f32; x.data.len()];
+        for bi in 0..b {
+            for fi in 0..f {
+                for sp in 0..ssp {
+                    let src = ((bi * f + fi) * ssp + sp) * d;
+                    let dst = ((bi * ssp + sp) * f + fi) * d;
+                    data[dst..dst + d].copy_from_slice(&x.data[src..src + d]);
+                }
+            }
+        }
+        Tensor::new(vec![sub_b, sub_s, d], data)
+    };
+    let cs = repeat_rows(c, b, d, reps);
+    let conds = match cond {
+        Some(ct) => Some(repeat_seq_rows(ct, b, reps)),
+        None => None,
+    };
+
+    let base = &branch[2..];
+    let delta = plain_branch(fm, ws, prefix, base, &xs, conds.as_ref(), &cs)?;
+
+    // map the delta back to the flat token layout
+    if spatial {
+        Ok(Tensor::new(vec![b, f * ssp, d], delta.data))
+    } else {
+        let mut data = vec![0.0f32; delta.data.len()];
+        for bi in 0..b {
+            for fi in 0..f {
+                for sp in 0..ssp {
+                    let src = ((bi * ssp + sp) * f + fi) * d;
+                    let dst = ((bi * f + fi) * ssp + sp) * d;
+                    data[dst..dst + d].copy_from_slice(&delta.data[src..src + d]);
+                }
+            }
+        }
+        Ok(Tensor::new(vec![b, f * ssp, d], data))
+    }
+}
+
+/// Self-attention branch delta: gate · Attn(modulate(LN(x))).
+fn branch_attn(
+    fm: &FamilyManifest,
+    ws: &WeightStore,
+    prefix: &str,
+    x: &Tensor,
+    b: usize,
+    s: usize,
+    c: &Tensor,
+) -> Result<Tensor> {
+    let d = fm.hidden;
+    let parts = mod_params(c, b, d, ws.get(&format!("{prefix}mod_w"))?, ws.get(&format!("{prefix}mod_b"))?, 3)?;
+    let h = ln_modulate(x, b, s, d, &parts[0], &parts[1]);
+    let qkv = affine(
+        &h,
+        b * s,
+        d,
+        ws.get(&format!("{prefix}qkv_w"))?,
+        Some(ws.get(&format!("{prefix}qkv_b"))?),
+    )?;
+    // split [B*S, 3D] into q/k/v [B*S, D]
+    let mut q = vec![0.0f32; b * s * d];
+    let mut k = vec![0.0f32; b * s * d];
+    let mut v = vec![0.0f32; b * s * d];
+    for r in 0..b * s {
+        q[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d..r * 3 * d + d]);
+        k[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + d..r * 3 * d + 2 * d]);
+        v[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d]);
+    }
+    let o = attention(&q, &k, &v, b, s, s, d, fm.heads);
+    let y = affine(
+        &o,
+        b * s,
+        d,
+        ws.get(&format!("{prefix}o_w"))?,
+        Some(ws.get(&format!("{prefix}o_b"))?),
+    )?;
+    Ok(gate(y, b, s, d, &parts[2]))
+}
+
+/// Cross-attention branch delta over conditioning tokens.
+fn branch_xattn(
+    fm: &FamilyManifest,
+    ws: &WeightStore,
+    prefix: &str,
+    x: &Tensor,
+    b: usize,
+    s: usize,
+    cond: &Tensor,
+    c: &Tensor,
+) -> Result<Tensor> {
+    let d = fm.hidden;
+    let sc = cond.shape[1];
+    if cond.dim0() != b {
+        crate::bail!("{prefix}: cond batch {} != token batch {b}", cond.dim0());
+    }
+    let parts = mod_params(c, b, d, ws.get(&format!("{prefix}mod_w"))?, ws.get(&format!("{prefix}mod_b"))?, 3)?;
+    let h = ln_modulate(x, b, s, d, &parts[0], &parts[1]);
+    let q = affine(
+        &h,
+        b * s,
+        d,
+        ws.get(&format!("{prefix}q_w"))?,
+        Some(ws.get(&format!("{prefix}q_b"))?),
+    )?;
+    let kv = affine(
+        &cond.data,
+        b * sc,
+        d,
+        ws.get(&format!("{prefix}kv_w"))?,
+        Some(ws.get(&format!("{prefix}kv_b"))?),
+    )?;
+    let mut k = vec![0.0f32; b * sc * d];
+    let mut v = vec![0.0f32; b * sc * d];
+    for r in 0..b * sc {
+        k[r * d..(r + 1) * d].copy_from_slice(&kv[r * 2 * d..r * 2 * d + d]);
+        v[r * d..(r + 1) * d].copy_from_slice(&kv[r * 2 * d + d..r * 2 * d + 2 * d]);
+    }
+    let o = attention(&q, &k, &v, b, s, sc, d, fm.heads);
+    let y = affine(
+        &o,
+        b * s,
+        d,
+        ws.get(&format!("{prefix}o_w"))?,
+        Some(ws.get(&format!("{prefix}o_b"))?),
+    )?;
+    Ok(gate(y, b, s, d, &parts[2]))
+}
+
+/// Feed-forward branch delta: gate · MLP(modulate(LN(x))).
+fn branch_ffn(
+    fm: &FamilyManifest,
+    ws: &WeightStore,
+    prefix: &str,
+    x: &Tensor,
+    b: usize,
+    s: usize,
+    c: &Tensor,
+) -> Result<Tensor> {
+    let d = fm.hidden;
+    let dff = d * fm.mlp_ratio;
+    let parts = mod_params(c, b, d, ws.get(&format!("{prefix}mod_w"))?, ws.get(&format!("{prefix}mod_b"))?, 3)?;
+    let h = ln_modulate(x, b, s, d, &parts[0], &parts[1]);
+    let mut h1 = affine(
+        &h,
+        b * s,
+        d,
+        ws.get(&format!("{prefix}w1"))?,
+        Some(ws.get(&format!("{prefix}b1"))?),
+    )?;
+    for vme in h1.iter_mut() {
+        *vme = gelu(*vme);
+    }
+    let y = affine(
+        &h1,
+        b * s,
+        dff,
+        ws.get(&format!("{prefix}w2"))?,
+        Some(ws.get(&format!("{prefix}b2"))?),
+    )?;
+    Ok(gate(y, b, s, d, &parts[2]))
+}
+
+// ---------------------------------------------------------------------------
+// Kernels (ports of python/compile/kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// tanh-approximation GELU (the variant the Pallas kernel fuses).
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// `y = x @ w + b` for row-major `x` `[rows, din]`, `w` `[din, dout]`.
+fn affine(x: &[f32], rows: usize, din: usize, w: &Tensor, b: Option<&Tensor>) -> Result<Vec<f32>> {
+    if w.shape.len() != 2 || w.shape[0] != din {
+        crate::bail!("affine: weight shape {:?} incompatible with input dim {din}", w.shape);
+    }
+    let dout = w.shape[1];
+    if x.len() != rows * din {
+        crate::bail!("affine: input len {} != rows {rows} × din {din}", x.len());
+    }
+    let mut out = vec![0.0f32; rows * dout];
+    for r in 0..rows {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        if let Some(bias) = b {
+            orow.copy_from_slice(&bias.data);
+        }
+        let xrow = &x[r * din..(r + 1) * din];
+        for (ki, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[ki * dout..(ki + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// adaLN parameters: `silu(c) @ mod_w + mod_b` split into `n` chunks of
+/// width D. Returns `n` buffers of `[B, D]`.
+fn mod_params(
+    c: &Tensor,
+    b: usize,
+    d: usize,
+    mod_w: &Tensor,
+    mod_b: &Tensor,
+    n: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let sc: Vec<f32> = c.data.iter().map(|&x| silu(x)).collect();
+    let p = affine(&sc, b, d, mod_w, Some(mod_b))?; // [B, n*D]
+    let mut parts = vec![vec![0.0f32; b * d]; n];
+    for bi in 0..b {
+        for (j, part) in parts.iter_mut().enumerate() {
+            part[bi * d..(bi + 1) * d]
+                .copy_from_slice(&p[bi * n * d + j * d..bi * n * d + (j + 1) * d]);
+        }
+    }
+    Ok(parts)
+}
+
+/// adaLN modulation: `(1 + scale) · LN(x) + shift` with LN over the
+/// trailing axis (no learned affine), shift/scale `[B, D]` broadcast
+/// over the sequence. Returns a flat `[B*S, D]` buffer.
+fn ln_modulate(x: &Tensor, b: usize, s: usize, d: usize, shift: &[f32], scale: &[f32]) -> Vec<f32> {
+    const EPS: f64 = 1e-6;
+    let mut out = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        for si in 0..s {
+            let row = &x.data[(bi * s + si) * d..(bi * s + si + 1) * d];
+            let mut mean = 0.0f64;
+            for &v in row {
+                mean += v as f64;
+            }
+            mean /= d as f64;
+            let mut var = 0.0f64;
+            for &v in row {
+                let dv = v as f64 - mean;
+                var += dv * dv;
+            }
+            var /= d as f64;
+            let rstd = 1.0 / (var + EPS).sqrt();
+            let orow = &mut out[(bi * s + si) * d..(bi * s + si + 1) * d];
+            for j in 0..d {
+                let ln = ((row[j] as f64 - mean) * rstd) as f32;
+                orow[j] = ln * (1.0 + scale[bi * d + j]) + shift[bi * d + j];
+            }
+        }
+    }
+    out
+}
+
+/// adaLN-zero gating: `y · g` with `g` `[B, D]` broadcast over the
+/// sequence axis. Consumes the flat `[B*S, D]` buffer, returns a tensor.
+fn gate(mut y: Vec<f32>, b: usize, s: usize, d: usize, g: &[f32]) -> Tensor {
+    for bi in 0..b {
+        for si in 0..s {
+            let row = &mut y[(bi * s + si) * d..(bi * s + si + 1) * d];
+            for j in 0..d {
+                row[j] *= g[bi * d + j];
+            }
+        }
+    }
+    Tensor::new(vec![b, s, d], y)
+}
+
+/// Multi-head scaled dot-product attention. `q` is `[B, Sq, D]`, `k`/`v`
+/// are `[B, Sk, D]` (flat row-major buffers), heads split the trailing
+/// dim. Softmax in f32 with max-subtraction (the numerically-stable
+/// contract the Pallas kernel also honours). Returns `[B, Sq, D]`.
+fn attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    sq: usize,
+    sk: usize,
+    d: usize,
+    heads: usize,
+) -> Vec<f32> {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; b * sq * d];
+    let mut scores = vec![0.0f32; sk];
+    for bi in 0..b {
+        for h in 0..heads {
+            let off = h * dh;
+            for qi in 0..sq {
+                let qrow = &q[(bi * sq + qi) * d + off..(bi * sq + qi) * d + off + dh];
+                let mut max = f32::NEG_INFINITY;
+                for ki in 0..sk {
+                    let krow = &k[(bi * sk + ki) * d + off..(bi * sk + ki) * d + off + dh];
+                    let mut dot = 0.0f32;
+                    for t in 0..dh {
+                        dot += qrow[t] * krow[t];
+                    }
+                    let sv = dot * scale;
+                    scores[ki] = sv;
+                    if sv > max {
+                        max = sv;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for sv in scores.iter_mut() {
+                    *sv = (*sv - max).exp();
+                    denom += *sv;
+                }
+                let inv = 1.0 / denom;
+                let orow = &mut out[(bi * sq + qi) * d + off..(bi * sq + qi) * d + off + dh];
+                for ki in 0..sk {
+                    let p = scores[ki] * inv;
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v[(bi * sk + ki) * d + off..(bi * sk + ki) * d + off + dh];
+                    for t in 0..dh {
+                        orow[t] += p * vrow[t];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Sinusoidal embedding of continuous t (scaled to [0, 1000]):
+/// `[cos(args) ‖ sin(args)]`, args = 1000·t·exp(−ln 10⁴·i/half).
+fn timestep_embedding(t: &[f32], freq_dim: usize) -> Vec<f32> {
+    let half = freq_dim / 2;
+    let mut out = vec![0.0f32; t.len() * freq_dim];
+    for (bi, &tv) in t.iter().enumerate() {
+        for i in 0..half {
+            let freq = (-(10000.0f64.ln()) * i as f64 / half as f64).exp();
+            let arg = (tv as f64) * 1000.0 * freq;
+            out[bi * freq_dim + i] = arg.cos() as f32;
+            out[bi * freq_dim + half + i] = arg.sin() as f32;
+        }
+    }
+    out
+}
+
+/// Per-sample flattened patch width.
+pub fn patch_dim(fm: &FamilyManifest) -> usize {
+    fm.latent_size() / fm.seq_len
+}
+
+/// Repeat each row of a `[B, D]` tensor `reps` times consecutively
+/// (`jnp.repeat(c, reps, axis=0)`): `[B·reps, D]`.
+fn repeat_rows(c: &Tensor, b: usize, d: usize, reps: usize) -> Tensor {
+    let mut data = Vec::with_capacity(b * reps * d);
+    for bi in 0..b {
+        for _ in 0..reps {
+            data.extend_from_slice(&c.data[bi * d..(bi + 1) * d]);
+        }
+    }
+    Tensor::new(vec![b * reps, d], data)
+}
+
+/// Repeat each `[Sc, D]` sample of a `[B, Sc, D]` tensor `reps` times.
+fn repeat_seq_rows(ct: &Tensor, b: usize, reps: usize) -> Tensor {
+    let stride = ct.stride0();
+    let mut data = Vec::with_capacity(b * reps * stride);
+    for bi in 0..b {
+        for _ in 0..reps {
+            data.extend_from_slice(&ct.data[bi * stride..(bi + 1) * stride]);
+        }
+    }
+    let mut shape = ct.shape.clone();
+    shape[0] = b * reps;
+    Tensor::new(shape, data)
+}
+
+/// Patchify the latent into `[B, S, pd]` (flat buffer), mirroring
+/// model.py's reshape/transpose per family kind (by latent rank:
+/// 3 = image H·W·C, 2 = audio T·C pass-through, 4 = video F·H·W·C).
+fn patchify(fm: &FamilyManifest, x: &Tensor) -> Result<Vec<f32>> {
+    let b = x.dim0();
+    let p = fm.patch.max(1);
+    let mut expect = vec![b];
+    expect.extend(&fm.latent_shape);
+    if x.shape != expect {
+        crate::bail!("latent shape {:?} != expected {:?}", x.shape, expect);
+    }
+    match fm.latent_shape.len() {
+        2 => Ok(x.data.clone()), // [B, T, C] already tokens
+        3 => {
+            let (hh, ww, ch) = (fm.latent_shape[0], fm.latent_shape[1], fm.latent_shape[2]);
+            let (gh, gw) = (hh / p, ww / p);
+            let pd = p * p * ch;
+            let mut out = vec![0.0f32; b * gh * gw * pd];
+            for bi in 0..b {
+                for gi in 0..gh {
+                    for gj in 0..gw {
+                        let tok = gi * gw + gj;
+                        for pi in 0..p {
+                            for pj in 0..p {
+                                let src = ((bi * hh + gi * p + pi) * ww + gj * p + pj) * ch;
+                                let dst = (bi * gh * gw + tok) * pd + (pi * p + pj) * ch;
+                                out[dst..dst + ch].copy_from_slice(&x.data[src..src + ch]);
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        }
+        4 => {
+            let (ff, hh, ww, ch) = (
+                fm.latent_shape[0],
+                fm.latent_shape[1],
+                fm.latent_shape[2],
+                fm.latent_shape[3],
+            );
+            let (gh, gw) = (hh / p, ww / p);
+            let pd = p * p * ch;
+            let toks = ff * gh * gw;
+            let mut out = vec![0.0f32; b * toks * pd];
+            for bi in 0..b {
+                for fi in 0..ff {
+                    for gi in 0..gh {
+                        for gj in 0..gw {
+                            let tok = fi * gh * gw + gi * gw + gj;
+                            for pi in 0..p {
+                                for pj in 0..p {
+                                    let src = (((bi * ff + fi) * hh + gi * p + pi) * ww
+                                        + gj * p
+                                        + pj)
+                                        * ch;
+                                    let dst = (bi * toks + tok) * pd + (pi * p + pj) * ch;
+                                    out[dst..dst + ch].copy_from_slice(&x.data[src..src + ch]);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        }
+        r => Err(crate::err!("unsupported latent rank {r}")),
+    }
+}
+
+/// Inverse of [`patchify`]: `[B, S, pd]` head output back to the latent
+/// shape.
+fn unpatchify(fm: &FamilyManifest, y: &[f32], b: usize, pd: usize) -> Result<Tensor> {
+    let p = fm.patch.max(1);
+    let mut shape = vec![b];
+    shape.extend(&fm.latent_shape);
+    match fm.latent_shape.len() {
+        2 => Ok(Tensor::new(shape, y.to_vec())),
+        3 => {
+            let (hh, ww, ch) = (fm.latent_shape[0], fm.latent_shape[1], fm.latent_shape[2]);
+            let (gh, gw) = (hh / p, ww / p);
+            let mut out = vec![0.0f32; b * hh * ww * ch];
+            for bi in 0..b {
+                for gi in 0..gh {
+                    for gj in 0..gw {
+                        let tok = gi * gw + gj;
+                        for pi in 0..p {
+                            for pj in 0..p {
+                                let dst = ((bi * hh + gi * p + pi) * ww + gj * p + pj) * ch;
+                                let src = (bi * gh * gw + tok) * pd + (pi * p + pj) * ch;
+                                out[dst..dst + ch].copy_from_slice(&y[src..src + ch]);
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(Tensor::new(shape, out))
+        }
+        4 => {
+            let (ff, hh, ww, ch) = (
+                fm.latent_shape[0],
+                fm.latent_shape[1],
+                fm.latent_shape[2],
+                fm.latent_shape[3],
+            );
+            let (gh, gw) = (hh / p, ww / p);
+            let toks = ff * gh * gw;
+            let mut out = vec![0.0f32; b * ff * hh * ww * ch];
+            for bi in 0..b {
+                for fi in 0..ff {
+                    for gi in 0..gh {
+                        for gj in 0..gw {
+                            let tok = fi * gh * gw + gi * gw + gj;
+                            for pi in 0..p {
+                                for pj in 0..p {
+                                    let dst = (((bi * ff + fi) * hh + gi * p + pi) * ww
+                                        + gj * p
+                                        + pj)
+                                        * ch;
+                                    let src = (bi * toks + tok) * pd + (pi * p + pj) * ch;
+                                    out[dst..dst + ch].copy_from_slice(&y[src..src + ch]);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(Tensor::new(shape, out))
+        }
+        r => Err(crate::err!("unsupported latent rank {r}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic weight synthesis (port of init_weights, adaln_zero=False)
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over (family, tensor name): every tensor gets an independent,
+/// order-insensitive stream.
+fn tensor_seed(seed: u64, family: &str, name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ seed;
+    for &byte in family.as_bytes().iter().chain(b"/").chain(name.as_bytes()) {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Synthesize the full weight set for a family, deterministically from
+/// `seed`. Layout and inits mirror `model.init_weights` with
+/// `adaln_zero=False`: std-0.02 linears, std-0.5 embeddings, fixed
+/// sin-cos positional table, zero biases except the unit gate bias.
+pub fn synth_weights(fm: &FamilyManifest, seed: u64) -> WeightStore {
+    let d = fm.hidden;
+    let dff = d * fm.mlp_ratio;
+    let pd = patch_dim(fm);
+    let mut ws = WeightStore::new();
+
+    let lin = |name: &str, shape: Vec<usize>, std: f32| -> Tensor {
+        let mut rng = Rng::new(tensor_seed(seed, &fm.name, name));
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal_f32() * std).collect();
+        Tensor::new(shape, data)
+    };
+
+    ws.insert("embed.patch_w", lin("embed.patch_w", vec![pd, d], 0.02));
+    ws.insert("embed.patch_b", Tensor::zeros(vec![d]));
+    ws.insert("embed.pos", sincos_pos(fm.seq_len, d));
+    ws.insert("embed.temb_w1", lin("embed.temb_w1", vec![fm.t_freq_dim, d], 0.02));
+    ws.insert("embed.temb_b1", Tensor::zeros(vec![d]));
+    ws.insert("embed.temb_w2", lin("embed.temb_w2", vec![d, d], 0.02));
+    ws.insert("embed.temb_b2", Tensor::zeros(vec![d]));
+    if fm.num_classes > 0 {
+        ws.insert(
+            "embed.label_emb",
+            lin("embed.label_emb", vec![fm.num_classes + 1, d], 0.5),
+        );
+    }
+    if fm.vocab > 0 {
+        ws.insert("embed.prompt_emb", lin("embed.prompt_emb", vec![fm.vocab, d], 0.5));
+    }
+
+    for i in 0..fm.depth {
+        for br in &fm.branch_types {
+            let pre = format!("blocks.{i}.{br}.");
+            let name = |suffix: &str| format!("{pre}{suffix}");
+            ws.insert(name("mod_w"), lin(&name("mod_w"), vec![d, 3 * d], 0.02));
+            // unit gate bias: untrained families behave like standard
+            // pre-LN transformers, so caching perturbations are material
+            let mut mod_b = vec![0.0f32; 3 * d];
+            for g in &mut mod_b[2 * d..] {
+                *g = 1.0;
+            }
+            ws.insert(name("mod_b"), Tensor::new(vec![3 * d], mod_b));
+            if br.ends_with("xattn") {
+                ws.insert(name("q_w"), lin(&name("q_w"), vec![d, d], 0.02));
+                ws.insert(name("q_b"), Tensor::zeros(vec![d]));
+                ws.insert(name("kv_w"), lin(&name("kv_w"), vec![d, 2 * d], 0.02));
+                ws.insert(name("kv_b"), Tensor::zeros(vec![2 * d]));
+                ws.insert(name("o_w"), lin(&name("o_w"), vec![d, d], 0.02));
+                ws.insert(name("o_b"), Tensor::zeros(vec![d]));
+            } else if br.ends_with("attn") {
+                ws.insert(name("qkv_w"), lin(&name("qkv_w"), vec![d, 3 * d], 0.02));
+                ws.insert(name("qkv_b"), Tensor::zeros(vec![3 * d]));
+                ws.insert(name("o_w"), lin(&name("o_w"), vec![d, d], 0.02));
+                ws.insert(name("o_b"), Tensor::zeros(vec![d]));
+            } else {
+                ws.insert(name("w1"), lin(&name("w1"), vec![d, dff], 0.02));
+                ws.insert(name("b1"), Tensor::zeros(vec![dff]));
+                ws.insert(name("w2"), lin(&name("w2"), vec![dff, d], 0.02));
+                ws.insert(name("b2"), Tensor::zeros(vec![d]));
+            }
+        }
+    }
+
+    ws.insert("final.mod_w", lin("final.mod_w", vec![d, 2 * d], 0.02));
+    ws.insert("final.mod_b", Tensor::zeros(vec![2 * d]));
+    ws.insert("final.lin_w", lin("final.lin_w", vec![d, pd], 0.02));
+    ws.insert("final.lin_b", Tensor::zeros(vec![pd]));
+    ws
+}
+
+/// Fixed sin-cos positional embedding over the flat token axis:
+/// `[sin(pos·div) ‖ cos(pos·div)]`, `div = exp(−ln 10⁴·i/(D/2))`.
+fn sincos_pos(s: usize, d: usize) -> Tensor {
+    let half = d / 2;
+    let mut data = vec![0.0f32; s * d];
+    for pos in 0..s {
+        for i in 0..half {
+            let div = (-(10000.0f64.ln()) * i as f64 / half as f64).exp();
+            let ang = pos as f64 * div;
+            data[pos * d + i] = ang.sin() as f32;
+            data[pos * d + half + i] = ang.cos() as f32;
+        }
+    }
+    Tensor::new(vec![s, d], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+
+    fn image_fm() -> FamilyManifest {
+        Manifest::builtin().family("image").unwrap().clone()
+    }
+
+    fn video_fm() -> FamilyManifest {
+        Manifest::builtin().family("video").unwrap().clone()
+    }
+
+    fn loaded_backend(fm: &FamilyManifest) -> ReferenceBackend {
+        let mut be = ReferenceBackend::new();
+        be.load_family(fm, synth_weights(fm, 0)).unwrap();
+        be
+    }
+
+    #[test]
+    fn synth_weights_are_deterministic_and_complete() {
+        let fm = image_fm();
+        let a = synth_weights(&fm, 0);
+        let b = synth_weights(&fm, 0);
+        assert_eq!(a.len(), b.len());
+        for name in a.names() {
+            assert_eq!(a.get(name).unwrap(), b.get(name).unwrap(), "{name}");
+        }
+        // different seed actually changes the linears
+        let c = synth_weights(&fm, 1);
+        assert_ne!(
+            a.get("embed.patch_w").unwrap().data,
+            c.get("embed.patch_w").unwrap().data
+        );
+    }
+
+    #[test]
+    fn patchify_roundtrips_through_unpatchify() {
+        for fm in [image_fm(), video_fm()] {
+            let mut rng = Rng::new(3);
+            let mut shape = vec![2usize];
+            shape.extend(&fm.latent_shape);
+            let x = Tensor::randn(shape, &mut rng);
+            let xp = patchify(&fm, &x).unwrap();
+            let back = unpatchify(&fm, &xp, 2, patch_dim(&fm)).unwrap();
+            assert_eq!(back, x, "{}", fm.name);
+        }
+    }
+
+    #[test]
+    fn attention_rows_sum_preserved_for_uniform_values() {
+        // with constant V, attention output equals that constant
+        let (b, s, d, heads) = (1usize, 4usize, 8usize, 2usize);
+        let mut rng = Rng::new(9);
+        let q: Vec<f32> = (0..b * s * d).map(|_| rng.normal_f32()).collect();
+        let k: Vec<f32> = (0..b * s * d).map(|_| rng.normal_f32()).collect();
+        let v = vec![2.5f32; b * s * d];
+        let o = attention(&q, &k, &v, b, s, s, d, heads);
+        for val in o {
+            assert!((val - 2.5).abs() < 1e-5, "{val}");
+        }
+    }
+
+    #[test]
+    fn embed_shapes_and_determinism() {
+        let fm = image_fm();
+        let be = loaded_backend(&fm);
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(vec![2, 16, 16, 4], &mut rng);
+        let cond = Cond::Label(vec![1, 4]);
+        let e1 = be.embed(&fm, &x, &[0.5, 0.25], &cond).unwrap();
+        assert_eq!(e1.tokens.shape, vec![2, 64, 128]);
+        assert_eq!(e1.c.shape, vec![2, 128]);
+        assert!(e1.cond.is_none());
+        let e2 = be.embed(&fm, &x, &[0.5, 0.25], &cond).unwrap();
+        assert_eq!(e1.tokens, e2.tokens);
+        assert_eq!(e1.c, e2.c);
+    }
+
+    #[test]
+    fn branch_deltas_have_token_shape_and_depend_on_block() {
+        let fm = image_fm();
+        let be = loaded_backend(&fm);
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(vec![1, 16, 16, 4], &mut rng);
+        let emb = be.embed(&fm, &x, &[0.7], &Cond::Label(vec![0])).unwrap();
+        let ctx = be.make_step_ctx(&emb).unwrap();
+        let d0 = be.branch(&fm, 0, "attn", &emb.tokens, &ctx).unwrap();
+        let d1 = be.branch(&fm, 1, "attn", &emb.tokens, &ctx).unwrap();
+        assert_eq!(d0.shape, emb.tokens.shape);
+        assert_ne!(d0.data, d1.data, "different blocks must use different weights");
+        // gated deltas of an untrained family are O(1), not degenerate
+        assert!(d0.max_abs() > 1e-4);
+        assert!(d0.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn video_spatial_and_temporal_branches_differ() {
+        let fm = video_fm();
+        let be = loaded_backend(&fm);
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(vec![1, 4, 8, 8, 4], &mut rng);
+        let cond = Cond::Prompt(vec![7; fm.cond_len]);
+        let emb = be.embed(&fm, &x, &[0.9], &cond).unwrap();
+        assert!(emb.cond.is_some());
+        let ctx = be.make_step_ctx(&emb).unwrap();
+        let ds = be.branch(&fm, 0, "s_attn", &emb.tokens, &ctx).unwrap();
+        let dt = be.branch(&fm, 0, "t_attn", &emb.tokens, &ctx).unwrap();
+        assert_eq!(ds.shape, emb.tokens.shape);
+        assert_eq!(dt.shape, emb.tokens.shape);
+        assert_ne!(ds.data, dt.data);
+        let dx = be.branch(&fm, 0, "s_xattn", &emb.tokens, &ctx).unwrap();
+        assert!(dx.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn final_head_returns_latent_shape() {
+        let fm = image_fm();
+        let be = loaded_backend(&fm);
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(vec![2, 16, 16, 4], &mut rng);
+        let emb = be.embed(&fm, &x, &[0.3, 0.3], &Cond::Label(vec![2, 3])).unwrap();
+        let ctx = be.make_step_ctx(&emb).unwrap();
+        let eps = be.final_head(&fm, &emb.tokens, &ctx).unwrap();
+        assert_eq!(eps.shape, vec![2, 16, 16, 4]);
+        let st = be.stats();
+        assert!(st.executions >= 2);
+    }
+
+    #[test]
+    fn gelu_and_silu_reference_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((silu(1.0) - 0.731058).abs() < 1e-4);
+    }
+}

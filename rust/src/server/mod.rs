@@ -5,13 +5,18 @@
 //! `label` (image) or `prompt_ids` (audio/video); `return_latent`
 //! includes the generated latent in the response. Control commands:
 //! `{"cmd": "ping"}`, `{"cmd": "metrics"}`, `{"cmd": "shutdown"}`.
+//! Failures are answered in-line as `{"ok": false, "error": "…"}`.
+//!
+//! The full wire contract (field semantics, defaults, batching
+//! guarantees, error shape) is specified in `docs/protocol.md` at the
+//! repository root — keep the two in sync when evolving the protocol.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::coordinator::{Coordinator, Policy, Request};
 use crate::model::Cond;
@@ -24,12 +29,12 @@ pub fn parse_request(j: &Json) -> Result<(Request, bool)> {
     let family = j
         .get("family")
         .and_then(|v| v.as_str())
-        .ok_or_else(|| anyhow!("missing family"))?
+        .ok_or_else(|| crate::err!("missing family"))?
         .to_string();
     let steps = j.get("steps").and_then(|v| v.as_usize()).unwrap_or(50);
     let solver_name = j.get("solver").and_then(|v| v.as_str()).unwrap_or("ddim");
     let solver =
-        SolverKind::parse(solver_name).ok_or_else(|| anyhow!("unknown solver {solver_name}"))?;
+        SolverKind::parse(solver_name).ok_or_else(|| crate::err!("unknown solver {solver_name}"))?;
     let policy_s = j.get("policy").and_then(|v| v.as_str()).unwrap_or("no-cache");
     let policy = Policy::parse(policy_s)?;
     let cfg_scale = j.get("cfg").and_then(|v| v.as_f64()).unwrap_or(1.0) as f32;
@@ -39,7 +44,7 @@ pub fn parse_request(j: &Json) -> Result<(Request, bool)> {
     } else if let Some(p) = j.get("prompt_ids").and_then(|v| v.as_f64_vec()) {
         Cond::Prompt(p.into_iter().map(|x| x as i32).collect())
     } else {
-        return Err(anyhow!("need label or prompt_ids"));
+        return Err(crate::err!("need label or prompt_ids"));
     };
     let return_latent = j.get("return_latent").and_then(|v| v.as_bool()).unwrap_or(false);
     Ok((
@@ -213,7 +218,7 @@ impl Client {
         self.writer.flush()?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
-        parse(line.trim()).map_err(|e| anyhow!("bad reply: {e} ({line:?})"))
+        parse(line.trim()).map_err(|e| crate::err!("bad reply: {e} ({line:?})"))
     }
 
     pub fn ping(&mut self) -> Result<bool> {

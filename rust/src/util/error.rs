@@ -1,0 +1,199 @@
+//! Minimal error handling for the zero-dependency default build
+//! (docs/adr/001-zero-dependency-default-build.md).
+//!
+//! Stands in for `anyhow` with the subset this crate uses: a single
+//! string-chained [`Error`] type, a [`Result`] alias with a defaulted
+//! error parameter, a [`Context`] extension trait (`context` /
+//! `with_context` on both `Result` and `Option`), and the
+//! [`err!`](crate::err)/[`bail!`](crate::bail)/[`ensure!`](crate::ensure)
+//! macros. Display renders the context chain outermost-first,
+//! `"loading manifest: reading \"…\": No such file"` style, so existing
+//! `{e}` / `{e:#}` call sites keep printing the full story.
+
+use std::fmt;
+
+/// A chain of human-readable messages; `chain[0]` is the outermost
+/// context, the last entry is the root cause.
+#[derive(Clone, Debug)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors
+    /// `anyhow::Error::msg`).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias; the defaulted parameter lets signatures
+/// written for `anyhow::Result<T>` port unchanged.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+// ---- conversions (for `?` on common error sources) -------------------------
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { chain: vec![s] }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error { chain: vec![s.to_string()] }
+    }
+}
+
+// ---- context extension ------------------------------------------------------
+
+/// `anyhow::Context`-shaped extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+// ---- macros -----------------------------------------------------------------
+
+/// Build an [`Error`] from a format string (replaces `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(crate::err!("root {}", 42))
+    }
+
+    #[test]
+    fn display_chains_outermost_first() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32> = Ok(7);
+        let v = ok.with_context(|| -> String { panic!("not evaluated on Ok") });
+        assert_eq!(v.unwrap(), 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/here")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(v: i32) -> Result<i32> {
+            crate::ensure!(v > 0, "need positive, got {v}");
+            Ok(v)
+        }
+        assert!(check(-1).is_err());
+        assert_eq!(check(3).unwrap(), 3);
+    }
+}

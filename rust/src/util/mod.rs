@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod fft;
 pub mod json;
 pub mod propcheck;

@@ -1,5 +1,5 @@
 //! Serving-stack integration: coordinator batching + TCP server + client
-//! against real artifacts.
+//! over the engine-selected backend (pure-Rust reference offline).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -9,10 +9,6 @@ use smoothcache::model::Cond;
 use smoothcache::server::{Client, Server};
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::json::Json;
-
-fn artifacts_ready() -> bool {
-    smoothcache::artifacts_dir().join("manifest.json").exists()
-}
 
 fn coord() -> Coordinator {
     let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
@@ -37,10 +33,6 @@ fn image_request(seed: u64, policy: Policy) -> Request {
 
 #[test]
 fn coordinator_serves_single_request() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let c = coord();
     let resp = c.generate_blocking(image_request(1, Policy::NoCache)).expect("response");
     assert_eq!(resp.latent.shape, vec![1, 16, 16, 4]);
@@ -51,10 +43,6 @@ fn coordinator_serves_single_request() {
 
 #[test]
 fn coordinator_batches_concurrent_requests() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let c = coord();
     // submit 4 compatible requests back-to-back; the batcher should
     // group them (max_wait 10ms) into ≤ 2 batches rather than 4.
@@ -79,10 +67,6 @@ fn coordinator_batches_concurrent_requests() {
 
 #[test]
 fn batched_result_matches_solo_result() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let c = coord();
     // run one request alone...
     let solo = c.generate_blocking(image_request(7, Policy::NoCache)).unwrap();
@@ -108,14 +92,13 @@ fn batched_result_matches_solo_result() {
 
 #[test]
 fn smoothcache_policy_calibrates_once_and_skips() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let c = coord();
-    let r1 = c.generate_blocking(image_request(1, Policy::Smooth(0.5))).unwrap();
-    let r2 = c.generate_blocking(image_request(2, Policy::Smooth(0.5))).unwrap();
-    assert!(r1.gen_stats.skip_fraction() > 0.0, "alpha 0.5 should skip");
+    // a generous alpha: any populated error cell below it triggers
+    // reuse, so skips are guaranteed without pinning the (untrained)
+    // model's absolute error scale
+    let r1 = c.generate_blocking(image_request(1, Policy::Smooth(2.0))).unwrap();
+    let r2 = c.generate_blocking(image_request(2, Policy::Smooth(2.0))).unwrap();
+    assert!(r1.gen_stats.skip_fraction() > 0.0, "alpha 2.0 should skip");
     assert_eq!(r1.gen_stats.skip_fraction(), r2.gen_stats.skip_fraction());
     // calibration ran exactly once (cached for the second request)
     assert_eq!(Metrics::get(&c.metrics().calibrations), 1);
@@ -124,10 +107,6 @@ fn smoothcache_policy_calibrates_once_and_skips() {
 
 #[test]
 fn server_round_trip() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let c = Arc::new(coord());
     let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
     let mut client = Client::connect(&server.addr).expect("client");

@@ -1,17 +1,14 @@
-//! End-to-end SmoothCache integration over real AOT artifacts:
-//! calibrate → generate schedule → run cached generation → verify the
-//! paper's core behaviours (real skips, bounded quality drift,
-//! monotonicity in alpha, determinism).
+//! End-to-end SmoothCache integration: calibrate → generate schedule →
+//! run cached generation → verify the paper's core behaviours (real
+//! skips, bounded quality drift, monotonicity in alpha, determinism).
+//! Runs against whatever backend the engine selects — the pure-Rust
+//! reference backend offline, PJRT artifacts when built and present.
 
 use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
 use smoothcache::model::{Cond, Engine};
 use smoothcache::pipeline::{generate, CacheMode, GenConfig};
 use smoothcache::quality::psnr;
 use smoothcache::solvers::SolverKind;
-
-fn artifacts_ready() -> bool {
-    smoothcache::artifacts_dir().join("manifest.json").exists()
-}
 
 fn engine_with(family: &str) -> Engine {
     let mut e = Engine::open(smoothcache::artifacts_dir()).expect("engine");
@@ -21,10 +18,6 @@ fn engine_with(family: &str) -> Engine {
 
 #[test]
 fn calibrate_then_cache_image_family() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let engine = engine_with("image");
     let cc = CalibrationConfig {
         steps: 12,
@@ -81,10 +74,6 @@ fn calibrate_then_cache_image_family() {
 
 #[test]
 fn cached_generation_is_deterministic() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let engine = engine_with("image");
     let bts = engine.family_manifest("image").unwrap().branch_types.clone();
     let schedule = Schedule::fora(8, &bts, 2);
@@ -107,10 +96,6 @@ fn cached_generation_is_deterministic() {
 
 #[test]
 fn cfg_generation_and_fora_on_audio() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let engine = engine_with("audio");
     let fm = engine.family_manifest("audio").unwrap().clone();
     let schedule = Schedule::fora(6, &fm.branch_types, 2);
@@ -126,10 +111,6 @@ fn cfg_generation_and_fora_on_audio() {
 
 #[test]
 fn video_family_generates_with_rf() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let engine = engine_with("video");
     let fm = engine.family_manifest("video").unwrap().clone();
     let cfg = GenConfig::new("video", SolverKind::RectifiedFlow, 4).with_seed(3);
@@ -141,10 +122,6 @@ fn video_family_generates_with_rf() {
 
 #[test]
 fn per_site_mode_matches_grouped_when_uniform() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let engine = engine_with("image");
     let fm = engine.family_manifest("image").unwrap().clone();
     let schedule = Schedule::fora(6, &fm.branch_types, 2);

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, and rustdoc with broken intra-doc
+# links promoted to errors. Run from anywhere; CI invokes this script.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps (broken intra-doc links are errors)"
+RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D rustdoc::broken-intra-doc-links" \
+    cargo doc --no-deps --quiet
+
+echo "verify: OK"
