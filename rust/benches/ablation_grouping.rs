@@ -12,7 +12,7 @@ use smoothcache::model::Engine;
 use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{ffd, lpips_proxy, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{fast_mode, Table};
+use smoothcache::util::bench::{arg_usize, fast_mode, Table};
 
 fn persite_skip_fraction(m: &BTreeMap<String, Vec<Decision>>) -> f64 {
     let total: usize = m.values().map(|v| v.len()).sum();
@@ -26,6 +26,8 @@ fn main() -> smoothcache::util::error::Result<()> {
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("image")?;
@@ -45,7 +47,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     let (corpus, _) = image_corpus(128, 0xC0FFEE);
 
     // paired no-cache reference for LPIPS
-    let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps);
+    let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps).with_threads(threads);
     ec.n_samples = n_samples;
     let conds = eval_conds(&fm, n_samples, 777);
     let (ref_set, _) = generate_set(&engine, &ec, &conds, &CacheMode::None)?;

@@ -10,13 +10,15 @@ use smoothcache::model::Engine;
 use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{ffd, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{ascii_plot, fast_mode, Table};
+use smoothcache::util::bench::{arg_usize, ascii_plot, fast_mode, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("image")?;
@@ -51,7 +53,7 @@ fn main() -> smoothcache::util::error::Result<()> {
 
         // warmup
         {
-            let mut ec = EvalConfig::new("image", SolverKind::Ddim, 2);
+            let mut ec = EvalConfig::new("image", SolverKind::Ddim, 2).with_threads(threads);
             ec.n_samples = 4;
             ec.cfg_scale = 1.5;
             let conds = eval_conds(&fm, 4, 1);
@@ -59,7 +61,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         }
 
         for (method, param, schedule) in &roster {
-            let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps);
+            let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps).with_threads(threads);
             ec.n_samples = n_samples;
             ec.cfg_scale = 1.5; // paper protocol
             let conds = eval_conds(&fm, n_samples, 777);

@@ -1,20 +1,28 @@
 //! End-to-end serving bench: the full coordinator stack (router →
-//! dynamic batcher → executor) under open-loop Poisson traffic, per
-//! caching policy. Reports throughput, latency percentiles, batch
+//! dynamic batcher → executor pool) under open-loop Poisson traffic,
+//! per caching policy. Reports throughput, latency percentiles, batch
 //! occupancy and skip fraction — the serving-system view of the paper's
 //! acceleration claim.
+//!
+//! Flags: `--workers N` sizes the executor replica pool, `--threads N`
+//! pins the GEMM compute pool (0 = auto).
 
 use std::time::{Duration, Instant};
 
 use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{fast_mode, Table};
+use smoothcache::util::bench::{arg_usize, fast_mode, Table};
 use smoothcache::workload::PoissonTrace;
 
 fn main() -> smoothcache::util::error::Result<()> {
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
+    }
+    let workers = arg_usize("workers", 2);
+    let threads = arg_usize("threads", 0);
+    if threads > 0 {
+        smoothcache::tensor::gemm::set_threads(threads);
     }
     std::fs::create_dir_all("bench_out")?;
 
@@ -36,6 +44,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         cfg.preload = vec!["image".into()];
         cfg.max_wait = Duration::from_millis(25);
         cfg.calib_samples = if fast_mode() { 2 } else { 6 };
+        cfg.workers = workers;
         let coord = Coordinator::start(cfg)?;
 
         // warmup: force calibration + executable compiles out of the
@@ -116,7 +125,11 @@ fn main() -> smoothcache::util::error::Result<()> {
         coord.shutdown();
     }
 
-    println!("\nE2E serving — image family, DDIM-{steps}, Poisson {rate_rps} req/s");
+    println!(
+        "\nE2E serving — image family, DDIM-{steps}, Poisson {rate_rps} req/s, \
+         {workers} executor replicas, {} GEMM threads",
+        smoothcache::tensor::gemm::threads()
+    );
     table.print();
     std::fs::write("bench_out/e2e_serving.csv", table.to_csv())?;
     Ok(())

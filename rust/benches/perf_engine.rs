@@ -1,19 +1,29 @@
 //! §Perf microbench: engine hot-path decomposition. Measures per-entry
-//! PJRT execution latency, host-upload overhead, and the full-step /
+//! backend execution latency, host-upload overhead, and the full-step /
 //! full-generation path at each batch size — the profile that drives
-//! the L3 optimization loop in EXPERIMENTS.md §Perf.
+//! the L3 optimization loop in EXPERIMENTS.md §Perf. The final section
+//! sweeps the GEMM compute-thread count over the single-request forward
+//! and reports the 4-thread / 1-thread throughput ratio (ISSUE 2
+//! acceptance: ≥ 2×).
+//!
+//! Flags: `--threads N` pins the pool for the per-entry sections
+//! (0 = auto; the sweep section always pins its own counts).
 
 use smoothcache::model::{Cond, Engine};
 use smoothcache::pipeline::{generate, CacheMode, GenConfig};
 use smoothcache::solvers::SolverKind;
-use smoothcache::tensor::Tensor;
-use smoothcache::util::bench::{bench, fast_mode, Table};
+use smoothcache::tensor::{gemm, Tensor};
+use smoothcache::util::bench::{arg_usize, bench, fast_mode, Table};
 use smoothcache::util::rng::Rng;
 
 fn main() -> smoothcache::util::error::Result<()> {
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
+    }
+    let cli_threads = arg_usize("threads", 0);
+    if cli_threads > 0 {
+        gemm::set_threads(cli_threads);
     }
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
@@ -115,5 +125,39 @@ fn main() -> smoothcache::util::error::Result<()> {
         stats.compiles, stats.compile_seconds
     );
     std::fs::write("bench_out/perf_engine.csv", table.to_csv())?;
+
+    // ---- parallel-substrate sweep: single-request forward vs threads ----
+    // (results are bitwise thread-count-invariant; only wall time moves)
+    let mut sweep = Table::new(&["threads", "fwd mean (us)", "fwd/s", "speedup vs 1t"]);
+    let x1 = Tensor::randn(vec![1, 16, 16, 4], &mut rng);
+    let t1 = vec![0.5f32; 1];
+    let cond1 = Cond::Label(vec![1]);
+    let sweep_iters = if fast_mode() { 5 } else { 30 };
+    let mut base_mean = 0.0f64;
+    let mut mean_at = std::collections::HashMap::new();
+    for &nt in &[1usize, 2, 4, 8] {
+        let s = gemm::with_threads(nt, || {
+            bench(2, sweep_iters, || {
+                let _ = engine.forward("image", &x1, &t1, &cond1, None).unwrap();
+            })
+        });
+        if nt == 1 {
+            base_mean = s.mean_s;
+        }
+        mean_at.insert(nt, s.mean_s);
+        sweep.row(&[
+            nt.to_string(),
+            format!("{:.0}", s.mean_s * 1e6),
+            format!("{:.1}", 1.0 / s.mean_s),
+            format!("{:.2}x", base_mean / s.mean_s),
+        ]);
+    }
+    println!("\n§Perf — parallel GEMM substrate: single-request image forward");
+    sweep.print();
+    let ratio4 = base_mean / mean_at.get(&4).copied().unwrap_or(base_mean);
+    println!(
+        "throughput at 4 threads vs 1 thread: {ratio4:.2}x (acceptance target >= 2x)"
+    );
+    std::fs::write("bench_out/perf_engine_threads.csv", sweep.to_csv())?;
     Ok(())
 }

@@ -16,13 +16,15 @@ use smoothcache::model::Engine;
 use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{ffd, is_proxy, lpips_proxy, psnr, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{fast_mode, Table};
+use smoothcache::util::bench::{arg_usize, fast_mode, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("image")?;
@@ -55,7 +57,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         // warm up batch-4 executables so the first roster row's latency
         // column is not polluted by one-time PJRT compiles
         {
-            let mut ec = EvalConfig::new("image", SolverKind::Ddim, 2);
+            let mut ec = EvalConfig::new("image", SolverKind::Ddim, 2).with_threads(threads);
             ec.n_samples = 4;
             ec.cfg_scale = 1.5;
             let conds = eval_conds(&fm, 4, 1);
@@ -84,7 +86,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         // protocol applied to Table 1 as the discriminating signal)
         let mut refs: Vec<(EvalConfig, Vec<smoothcache::model::Cond>, smoothcache::tensor::Tensor, smoothcache::experiments::EvalStats)> = Vec::new();
         for trial in 0..trials {
-            let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps);
+            let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps).with_threads(threads);
             ec.n_samples = n_samples;
             ec.cfg_scale = 1.5;
             ec.base_seed = 9000 + trial as u64 * 1000;

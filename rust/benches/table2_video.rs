@@ -14,13 +14,15 @@ use smoothcache::model::Engine;
 use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{lpips_proxy, psnr, ssim, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{fast_mode, Table};
+use smoothcache::util::bench::{arg_usize, fast_mode, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("video")?;
@@ -62,7 +64,7 @@ fn main() -> smoothcache::util::error::Result<()> {
 
     // warmup compile (batch 4 + cfg doubling → batch 8 executables)
     {
-        let mut ec = EvalConfig::new("video", solver, 2);
+        let mut ec = EvalConfig::new("video", solver, 2).with_threads(threads);
         ec.n_samples = 4;
         ec.cfg_scale = cfg_scale;
         let conds = eval_conds(&fm, 4, 1);
@@ -72,7 +74,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     // per-trial reference sets (paired with identical seeds/conds)
     let mut refs = Vec::new();
     for trial in 0..trials {
-        let mut ec = EvalConfig::new("video", solver, steps);
+        let mut ec = EvalConfig::new("video", solver, steps).with_threads(threads);
         ec.n_samples = n_samples;
         ec.cfg_scale = cfg_scale;
         ec.base_seed = 4000 + trial as u64 * 500;

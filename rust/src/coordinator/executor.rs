@@ -1,11 +1,14 @@
-//! The executor: the single thread that owns the engine (and thus the
-//! execution backend — PJRT handles are thread-bound), resolves caching
-//! policies to concrete schedules (calibrating on demand), and runs
+//! The executor replicas: each executor thread owns its *own* engine
+//! (and thus its own backend instance — PJRT handles are thread-bound,
+//! so that backend runs exactly one replica; the reference backend
+//! replicates freely), resolves caching policies to concrete schedules
+//! through the pool-shared [`ScheduleStore`] (calibrating on demand,
+//! exactly once per configuration across all replicas), and runs
 //! batched generations.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::util::error::Result;
@@ -19,6 +22,7 @@ use crate::solvers::SolverRun;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+#[derive(Clone)]
 pub struct ExecutorConfig {
     pub artifacts_dir: std::path::PathBuf,
     /// families to preload at startup (lazy for the rest).
@@ -30,6 +34,20 @@ pub struct ExecutorConfig {
     /// optional directory with pre-computed calibration curves
     /// (artifacts/calibration/{family}_{solver}_{steps}.json).
     pub curves_dir: Option<std::path::PathBuf>,
+}
+
+/// One [`ScheduleStore`] shared by every executor replica: calibration
+/// is expensive, so the first replica to need a (family, solver, steps)
+/// configuration calibrates while the others block on the mutex and
+/// then read the cached curves — the "calibrate once per config"
+/// serving contract holds at any pool size.
+pub type SharedScheduleStore = Arc<Mutex<ScheduleStore>>;
+
+/// Lock the shared store, recovering from a replica that panicked while
+/// holding it (the store's maps are always left consistent: entries are
+/// inserted fully-formed).
+pub fn lock_store(store: &SharedScheduleStore) -> MutexGuard<'_, ScheduleStore> {
+    store.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Caches calibration curves and resolved schedules across requests.
@@ -191,7 +209,7 @@ impl ResolvedPolicy {
 /// Execute one homogeneous batch of requests on the engine.
 pub fn execute_batch(
     engine: &mut Engine,
-    store: &mut ScheduleStore,
+    store: &SharedScheduleStore,
     metrics: &Metrics,
     batch: Vec<InFlight>,
     supported_batches: &[usize],
@@ -235,14 +253,23 @@ pub fn execute_batch(
     }
     let x_init = Tensor::cat0(&refs);
 
-    let resolved = store.resolve(
-        engine,
-        Some(metrics),
-        &family,
-        req0.solver,
-        req0.steps,
-        &req0.policy,
-    )?;
+    // NoCache needs no store state — skip the shared lock entirely so a
+    // replica calibrating a smooth:α config never stalls no-cache
+    // traffic on its siblings. (Policies that *do* resolve still share
+    // one lock, and calibration deliberately runs under it: that is what
+    // makes "calibrate once per config" hold across the pool.)
+    let resolved = if matches!(req0.policy, Policy::NoCache) {
+        ResolvedPolicy::None
+    } else {
+        lock_store(store).resolve(
+            engine,
+            Some(metrics),
+            &family,
+            req0.solver,
+            req0.steps,
+            &req0.policy,
+        )?
+    };
     let gen_cfg = GenConfig::new(&family, req0.solver, req0.steps)
         .with_cfg(req0.cfg_scale)
         .with_seed(req0.seed);
@@ -276,17 +303,21 @@ pub fn execute_batch(
     Ok(())
 }
 
-/// The executor loop: drains the batch channel until it closes.
+/// One executor replica's loop: opens its own engine on this thread,
+/// then drains its batch channel until it closes. `worker` is the
+/// replica index (used for log prefixes and per-replica metrics).
 pub fn run_executor(
+    worker: usize,
     config: ExecutorConfig,
     supported_batches: Vec<usize>,
     rx: Receiver<Vec<InFlight>>,
     metrics: Arc<Metrics>,
+    store: SharedScheduleStore,
 ) {
     let mut engine = match Engine::open(config.artifacts_dir.clone()) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("executor: failed to open engine: {e:#}");
+            eprintln!("executor[{worker}]: failed to open engine: {e:#}");
             // fail every incoming request
             for batch in rx {
                 for it in batch {
@@ -298,19 +329,16 @@ pub fn run_executor(
     };
     for fam in &config.preload {
         if let Err(e) = engine.load_family(fam) {
-            eprintln!("executor: preload {fam}: {e:#}");
+            eprintln!("executor[{worker}]: preload {fam}: {e:#}");
         }
     }
-    let mut store =
-        ScheduleStore::new(config.calib_samples, config.calib_seed, config.curves_dir.clone());
 
     for batch in rx {
         // keep reply handles in case of failure
         let ids: Vec<u64> = batch.iter().map(|b| b.request.id).collect();
         let replies: Vec<_> = batch.iter().map(|b| b.reply.clone()).collect();
-        if let Err(e) = execute_batch(&mut engine, &mut store, &metrics, batch, &supported_batches)
-        {
-            eprintln!("executor: batch {ids:?} failed: {e:#}");
+        if let Err(e) = execute_batch(&mut engine, &store, &metrics, batch, &supported_batches) {
+            eprintln!("executor[{worker}]: batch {ids:?} failed: {e:#}");
             for r in replies {
                 Metrics::inc(&metrics.requests_failed);
                 let _ = r.send(Err(crate::err!("batch execution failed: {e}")));

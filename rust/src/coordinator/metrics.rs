@@ -70,6 +70,9 @@ impl Histogram {
 /// Coordinator-wide counters.
 #[derive(Default)]
 pub struct Metrics {
+    /// Size of the executor replica pool (set once at startup; 1 when
+    /// the backend cannot replicate).
+    pub executor_replicas: AtomicU64,
     pub requests_submitted: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_failed: AtomicU64,
@@ -112,8 +115,9 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} completed={} failed={} batches={} occupancy={:.2} \
+            "workers={} requests={} completed={} failed={} batches={} occupancy={:.2} \
              e2e_mean={:.3}s e2e_p95={:.3}s queue_mean={:.3}s skips={}/{}",
+            Self::get(&self.executor_replicas).max(1),
             Self::get(&self.requests_submitted),
             Self::get(&self.requests_completed),
             Self::get(&self.requests_failed),

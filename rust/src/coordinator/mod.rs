@@ -1,18 +1,28 @@
-//! L3 serving coordinator: router → dynamic batcher → executor.
+//! L3 serving coordinator: router → dynamic batcher → executor pool.
 //!
 //! Thread topology (no tokio offline; DESIGN.md §3):
 //!
 //! ```text
-//!  clients ──submit()──► [batcher thread] ──batches──► [executor thread]
-//!                         groups by key,                owns the engine
-//!                         flushes on size                (backend) + the
-//!                         or deadline                    schedule store
+//!  clients ──submit()──► [batcher thread] ──batches──► [executor 0]
+//!                         groups by key,      │         [executor 1]
+//!                         flushes on size     │  ...      ...
+//!                         or deadline         └──────► [executor N-1]
+//!                         dispatches batches            each owns its own
+//!                         round-robin                   engine (backend
+//!                                                       replica); all share
+//!                                                       one schedule store
 //! ```
 //!
-//! The executor is intentionally single-threaded: backend handles may
-//! not be `Send` (PJRT), and a single CPU device gains nothing from
-//! concurrent executions — batching is the concurrency mechanism,
-//! exactly as in the paper's serving setting.
+//! Batching remains the primary concurrency mechanism (as in the
+//! paper's serving setting); the executor *pool* adds a second axis for
+//! backends that can replicate — the reference backend runs one engine
+//! per worker thread, each of which also fans its GEMM row panels over
+//! the shared compute pool ([`crate::tensor::gemm`]). Backends with
+//! thread-bound device handles (PJRT) transparently degrade to a pool
+//! of one ([`crate::runtime::backend_supports_replicas`]). Calibration
+//! state lives in one [`executor::SharedScheduleStore`] behind an
+//! `Arc<Mutex>`, so "calibrate once per configuration" holds at any
+//! pool size.
 
 pub mod batcher;
 pub mod executor;
@@ -21,13 +31,13 @@ pub mod request;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::error::Result;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use executor::{ExecutorConfig, ScheduleStore};
+pub use executor::{ExecutorConfig, ScheduleStore, SharedScheduleStore};
 pub use metrics::{Histogram, Metrics};
 pub use request::{BatchKey, InFlight, Policy, Request, Response};
 
@@ -39,6 +49,10 @@ pub struct CoordinatorConfig {
     pub calib_samples: usize,
     pub calib_seed: u64,
     pub curves_dir: Option<std::path::PathBuf>,
+    /// Executor replicas (engines) to run; clamped to 1 when the
+    /// selected backend cannot replicate (PJRT). Default: the
+    /// `SMOOTHCACHE_WORKERS` environment variable, else 2.
+    pub workers: usize,
 }
 
 impl CoordinatorConfig {
@@ -51,8 +65,22 @@ impl CoordinatorConfig {
             calib_samples: 4,
             calib_seed: 0xCA11B,
             curves_dir: None,
+            workers: default_workers(),
         }
     }
+
+    pub fn with_workers(mut self, n: usize) -> CoordinatorConfig {
+        self.workers = n.max(1);
+        self
+    }
+}
+
+fn default_workers() -> usize {
+    std::env::var("SMOOTHCACHE_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(2)
 }
 
 /// Handle to a running coordinator. Dropping it shuts the pipeline down
@@ -62,23 +90,25 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     batcher_handle: Option<std::thread::JoinHandle<()>>,
-    executor_handle: Option<std::thread::JoinHandle<()>>,
+    executor_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
     pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
         let metrics = Arc::new(Metrics::default());
         let (req_tx, req_rx) = channel::<InFlight>();
-        let (batch_tx, batch_rx) = channel::<Vec<InFlight>>();
 
-        let bcfg = BatcherConfig {
-            supported_batches: config.supported_batches.clone(),
-            max_wait: config.max_wait,
+        // executor replica pool (PJRT degrades to a pool of one)
+        let manifest_on_disk = config.artifacts_dir.join("manifest.json").exists();
+        let replicas = if crate::runtime::backend_supports_replicas(
+            &config.artifacts_dir,
+            manifest_on_disk,
+        ) {
+            config.workers.max(1)
+        } else {
+            1
         };
-        let batcher_handle = std::thread::Builder::new()
-            .name("smoothcache-batcher".into())
-            .spawn(move || run_batcher(bcfg, req_rx, batch_tx))
-            .map_err(|e| crate::err!("spawn batcher: {e}"))?;
+        metrics.executor_replicas.store(replicas as u64, Ordering::Relaxed);
 
         let ecfg = ExecutorConfig {
             artifacts_dir: config.artifacts_dir,
@@ -87,19 +117,42 @@ impl Coordinator {
             calib_seed: config.calib_seed,
             curves_dir: config.curves_dir,
         };
-        let supported = config.supported_batches;
-        let m2 = Arc::clone(&metrics);
-        let executor_handle = std::thread::Builder::new()
-            .name("smoothcache-executor".into())
-            .spawn(move || executor::run_executor(ecfg, supported, batch_rx, m2))
-            .map_err(|e| crate::err!("spawn executor: {e}"))?;
+        let store: SharedScheduleStore = Arc::new(Mutex::new(ScheduleStore::new(
+            ecfg.calib_samples,
+            ecfg.calib_seed,
+            ecfg.curves_dir.clone(),
+        )));
+        let mut batch_txs = Vec::with_capacity(replicas);
+        let mut executor_handles = Vec::with_capacity(replicas);
+        for w in 0..replicas {
+            let (batch_tx, batch_rx) = channel::<Vec<InFlight>>();
+            batch_txs.push(batch_tx);
+            let cfg_w = ecfg.clone();
+            let supported = config.supported_batches.clone();
+            let m2 = Arc::clone(&metrics);
+            let store_w = Arc::clone(&store);
+            let handle = std::thread::Builder::new()
+                .name(format!("smoothcache-executor-{w}"))
+                .spawn(move || executor::run_executor(w, cfg_w, supported, batch_rx, m2, store_w))
+                .map_err(|e| crate::err!("spawn executor {w}: {e}"))?;
+            executor_handles.push(handle);
+        }
+
+        let bcfg = BatcherConfig {
+            supported_batches: config.supported_batches.clone(),
+            max_wait: config.max_wait,
+        };
+        let batcher_handle = std::thread::Builder::new()
+            .name("smoothcache-batcher".into())
+            .spawn(move || run_batcher(bcfg, req_rx, batch_txs))
+            .map_err(|e| crate::err!("spawn batcher: {e}"))?;
 
         Ok(Coordinator {
             tx: Some(req_tx),
             metrics,
             next_id: AtomicU64::new(1),
             batcher_handle: Some(batcher_handle),
-            executor_handle: Some(executor_handle),
+            executor_handles,
         })
     }
 
@@ -128,7 +181,7 @@ impl Coordinator {
         rx.recv().map_err(|_| crate::err!("coordinator shut down"))?
     }
 
-    /// Drain and stop both threads.
+    /// Drain and stop the batcher and every executor replica.
     pub fn shutdown(mut self) {
         self.do_shutdown();
     }
@@ -136,9 +189,9 @@ impl Coordinator {
     fn do_shutdown(&mut self) {
         drop(self.tx.take());
         if let Some(h) = self.batcher_handle.take() {
-            let _ = h.join();
+            let _ = h.join(); // closes every executor channel on exit
         }
-        if let Some(h) = self.executor_handle.take() {
+        for h in self.executor_handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -150,9 +203,43 @@ impl Drop for Coordinator {
     }
 }
 
-/// Batcher thread: pull requests, group, flush on size or deadline.
-fn run_batcher(config: BatcherConfig, rx: Receiver<InFlight>, tx: Sender<Vec<InFlight>>) {
+/// Round-robin router over the executor pool. Each flushed batch (one
+/// [`BatchKey`] by construction) takes the next replica in rotation, so
+/// even a workload with a *single* key — the common production shape —
+/// keeps every replica busy once multiple batches are in flight.
+/// Replica choice never affects results (replicas are identical
+/// engines over the shared schedule store), so no key affinity is
+/// needed, and the router carries no per-key state to bound.
+///
+/// Known tradeoff: rotation into per-replica channels can queue a batch
+/// behind a replica that is busy (e.g. mid-calibration) while a sibling
+/// idles. A shared work queue (`Mutex<Receiver>`, as `ThreadPool` uses)
+/// would dispatch load-aware; tracked in ROADMAP.md.
+struct Router {
+    next: usize,
+    n: usize,
+}
+
+impl Router {
+    fn new(n: usize) -> Router {
+        Router { next: 0, n: n.max(1) }
+    }
+
+    fn route(&mut self) -> usize {
+        let idx = self.next % self.n;
+        self.next += 1;
+        idx
+    }
+}
+
+/// Batcher thread: pull requests, group, flush on size or deadline,
+/// dispatch each flushed batch to the next executor replica in rotation.
+fn run_batcher(config: BatcherConfig, rx: Receiver<InFlight>, txs: Vec<Sender<Vec<InFlight>>>) {
     let mut batcher = Batcher::new(config);
+    let mut router = Router::new(txs.len());
+    let dispatch = |router: &mut Router, batch: Vec<InFlight>| -> bool {
+        txs[router.route()].send(batch).is_ok()
+    };
     loop {
         let now = Instant::now();
         let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(100));
@@ -160,19 +247,19 @@ fn run_batcher(config: BatcherConfig, rx: Receiver<InFlight>, tx: Sender<Vec<InF
             Ok(item) => {
                 let now = Instant::now();
                 if let Some(batch) = batcher.push(item, now) {
-                    if tx.send(batch).is_err() {
+                    if !dispatch(&mut router, batch) {
                         return;
                     }
                 }
                 for batch in batcher.poll(now) {
-                    if tx.send(batch).is_err() {
+                    if !dispatch(&mut router, batch) {
                         return;
                     }
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                 for batch in batcher.poll(Instant::now()) {
-                    if tx.send(batch).is_err() {
+                    if !dispatch(&mut router, batch) {
                         return;
                     }
                 }
@@ -180,12 +267,36 @@ fn run_batcher(config: BatcherConfig, rx: Receiver<InFlight>, tx: Sender<Vec<InF
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 // drain remaining groups, then stop
                 for batch in batcher.drain() {
-                    if tx.send(batch).is_err() {
+                    if !dispatch(&mut router, batch) {
                         return;
                     }
                 }
                 return;
             }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_rotates_across_replicas() {
+        let mut r = Router::new(3);
+        // consecutive batches spread over the whole pool, then wrap —
+        // including for a single-key workload
+        assert_eq!(
+            (0..7).map(|_| r.route()).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2, 0]
+        );
+    }
+
+    #[test]
+    fn router_with_one_replica_routes_everything_to_it() {
+        let mut r = Router::new(1);
+        for _ in 0..4 {
+            assert_eq!(r.route(), 0);
         }
     }
 }

@@ -120,6 +120,10 @@ pub struct EvalConfig {
     pub n_samples: usize,
     pub batch: usize,
     pub base_seed: u64,
+    /// GEMM compute threads to pin for this evaluation (0 = inherit the
+    /// process-wide setting). Results are bitwise invariant to this —
+    /// it only changes wall time (`tests/parallel_parity.rs`).
+    pub threads: usize,
 }
 
 impl EvalConfig {
@@ -132,7 +136,13 @@ impl EvalConfig {
             n_samples: 32,
             batch: 4,
             base_seed: 1234,
+            threads: 0,
         }
+    }
+
+    pub fn with_threads(mut self, n: usize) -> EvalConfig {
+        self.threads = n;
+        self
     }
 }
 
@@ -154,7 +164,22 @@ pub struct EvalStats {
 
 /// Generate `cfg.n_samples` samples under one caching mode, batching at
 /// `cfg.batch`. Returns the stacked sample set and aggregate stats.
+/// Honors `cfg.threads` by pinning the GEMM pool for the duration.
 pub fn generate_set(
+    engine: &Engine,
+    cfg: &EvalConfig,
+    conds: &[Cond],
+    mode: &CacheMode,
+) -> Result<(Tensor, EvalStats)> {
+    if cfg.threads > 0 {
+        return crate::tensor::gemm::with_threads(cfg.threads, || {
+            generate_set_inner(engine, cfg, conds, mode)
+        });
+    }
+    generate_set_inner(engine, cfg, conds, mode)
+}
+
+fn generate_set_inner(
     engine: &Engine,
     cfg: &EvalConfig,
     conds: &[Cond],

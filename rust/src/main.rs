@@ -35,7 +35,7 @@ fn main() {
                 "smoothcache — SmoothCache serving stack\n\n\
                  usage: smoothcache <serve|generate|calibrate|schedule|info> [flags]\n\
                  examples:\n  \
-                 smoothcache serve --addr 127.0.0.1:7878 --preload image\n  \
+                 smoothcache serve --addr 127.0.0.1:7878 --preload image --workers 2 --threads 4\n  \
                  smoothcache generate --family image --label 3 --policy smooth:0.35\n  \
                  smoothcache calibrate --family audio --solver dpmpp3m-sde --steps 100\n  \
                  smoothcache schedule --family image --steps 50 --policy fora:2\n  \
@@ -67,13 +67,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("max-wait-ms", "20", "batcher flush deadline")
         .flag("calib-samples", "6", "calibration samples for smooth policies")
         .flag("curves-dir", "", "directory of pre-computed calibration curves")
-        .flag("workers", "4", "connection handler threads");
+        .flag("workers", "2", "executor replicas (backend engines; PJRT clamps to 1)")
+        .flag("threads", "0", "GEMM compute threads per process (0 = auto)")
+        .flag("conn-threads", "4", "connection handler threads");
     let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
 
+    let threads = args.usize("threads").map_err(Error::msg)?;
+    if threads > 0 {
+        smoothcache::tensor::gemm::set_threads(threads);
+    }
     let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
     cfg.preload = args.list("preload");
     cfg.max_wait = Duration::from_millis(args.u64("max-wait-ms").map_err(Error::msg)?);
     cfg.calib_samples = args.usize("calib-samples").map_err(Error::msg)?;
+    cfg.workers = args.usize("workers").map_err(Error::msg)?.max(1);
     if !args.str("curves-dir").is_empty() {
         cfg.curves_dir = Some(args.string("curves-dir").into());
     }
@@ -81,9 +88,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let server = Server::start(
         args.str("addr"),
         Arc::clone(&coord),
-        args.usize("workers").map_err(Error::msg)?,
+        args.usize("conn-threads").map_err(Error::msg)?,
     )?;
-    println!("smoothcache serving on {}", server.addr);
+    println!(
+        "smoothcache serving on {} (workers={}, threads={})",
+        server.addr,
+        smoothcache::coordinator::Metrics::get(&coord.metrics().executor_replicas).max(1),
+        smoothcache::tensor::gemm::threads()
+    );
     println!("protocol: one JSON object per line; try {{\"cmd\": \"ping\"}}");
     // serve until killed
     loop {
@@ -102,12 +114,19 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("seed", "0", "random seed")
         .flag("policy", "no-cache", "caching policy (no-cache|fora:N|alternate|smooth:A)")
         .flag("calib-samples", "6", "calibration samples for smooth policies")
+        .flag("workers", "1", "executor replicas (one is plenty for a one-off)")
+        .flag("threads", "0", "GEMM compute threads (0 = auto)")
         .flag("out", "", "write latent to this path (JSON)");
     let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
 
+    let threads = args.usize("threads").map_err(Error::msg)?;
+    if threads > 0 {
+        smoothcache::tensor::gemm::set_threads(threads);
+    }
     let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
     cfg.preload = vec![args.string("family")];
     cfg.calib_samples = args.usize("calib-samples").map_err(Error::msg)?;
+    cfg.workers = args.usize("workers").map_err(Error::msg)?.max(1);
     let coord = Coordinator::start(cfg)?;
 
     let cond = if args.str("prompt-ids").is_empty() {

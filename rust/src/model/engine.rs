@@ -11,7 +11,8 @@
 //! selected by [`crate::runtime::select_backend`].
 //!
 //! Backend handles may be thread-bound (PJRT); the coordinator talks to
-//! the engine from a single executor thread.
+//! each engine from exactly one executor thread (replicable backends
+//! get one engine per executor in the worker pool).
 
 use std::collections::HashMap;
 

@@ -23,8 +23,10 @@
 //! backend.
 //!
 //! Backend handles are not `Send`/`Sync` in general (PJRT buffers are
-//! thread-bound); the engine owns its backend on a single executor
-//! thread and coordinator threads talk to it over channels.
+//! thread-bound); each engine owns its backend on one executor thread
+//! and coordinator threads talk to it over channels. Backends that *can*
+//! replicate (reference) may run one independent instance per executor
+//! in the coordinator's worker pool — see [`backend_supports_replicas`].
 
 pub mod reference;
 
@@ -157,6 +159,33 @@ pub trait Backend {
     fn reset_stats(&self);
 }
 
+/// The backend kind [`select_backend`] will construct — the single
+/// resolver both backend construction and replica-pool sizing consult,
+/// so the two can never disagree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BackendChoice {
+    Reference,
+    Pjrt,
+}
+
+fn backend_choice(manifest_on_disk: bool) -> Result<BackendChoice> {
+    let choice = std::env::var("SMOOTHCACHE_BACKEND").unwrap_or_default();
+    match choice.as_str() {
+        "reference" => Ok(BackendChoice::Reference),
+        "pjrt" => Ok(BackendChoice::Pjrt),
+        "" => {
+            if cfg!(feature = "pjrt") && manifest_on_disk {
+                Ok(BackendChoice::Pjrt)
+            } else {
+                Ok(BackendChoice::Reference)
+            }
+        }
+        other => Err(crate::err!(
+            "unknown SMOOTHCACHE_BACKEND {other:?} (expected reference|pjrt)"
+        )),
+    }
+}
+
 /// Construct the backend for an artifacts directory.
 ///
 /// `manifest_on_disk` says whether `dir` held a real `manifest.json`
@@ -167,21 +196,22 @@ pub fn select_backend(
     dir: &std::path::Path,
     manifest_on_disk: bool,
 ) -> Result<Box<dyn Backend>> {
-    let choice = std::env::var("SMOOTHCACHE_BACKEND").unwrap_or_default();
-    match choice.as_str() {
-        "reference" => Ok(Box::new(reference::ReferenceBackend::new())),
-        "pjrt" => open_pjrt(dir, manifest_on_disk),
-        "" => {
-            if cfg!(feature = "pjrt") && manifest_on_disk {
-                open_pjrt(dir, manifest_on_disk)
-            } else {
-                Ok(Box::new(reference::ReferenceBackend::new()))
-            }
-        }
-        other => Err(crate::err!(
-            "unknown SMOOTHCACHE_BACKEND {other:?} (expected reference|pjrt)"
-        )),
+    match backend_choice(manifest_on_disk)? {
+        BackendChoice::Reference => Ok(Box::new(reference::ReferenceBackend::new())),
+        BackendChoice::Pjrt => open_pjrt(dir, manifest_on_disk),
     }
+}
+
+/// Whether the backend [`select_backend`] would choose for this
+/// configuration can be *replicated* — one independent instance per
+/// executor thread in the coordinator's worker pool. The reference
+/// backend replicates freely (pure host state, deterministic weight
+/// synthesis); PJRT does not (thread-bound device handles, one device),
+/// so the coordinator transparently degrades its pool to N = 1 there.
+/// An invalid `SMOOTHCACHE_BACKEND` also degrades to 1: the executors'
+/// own `select_backend` calls will surface the error.
+pub fn backend_supports_replicas(_dir: &std::path::Path, manifest_on_disk: bool) -> bool {
+    matches!(backend_choice(manifest_on_disk), Ok(BackendChoice::Reference))
 }
 
 #[cfg(feature = "pjrt")]

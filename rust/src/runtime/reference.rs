@@ -8,6 +8,12 @@
 //! calibration pass, bench and serving flow exercises the same code
 //! path it would under the PJRT backend.
 //!
+//! All matmuls — projections, FFN, per-head attention products — route
+//! through [`crate::tensor::gemm`], the cache-blocked threadpool GEMM
+//! whose results are bitwise invariant to the configured thread count
+//! (`--threads` / `SMOOTHCACHE_THREADS`), so caching decisions and
+//! calibration curves never depend on parallelism.
+//!
 //! Weights are synthesized deterministically per (family, tensor name)
 //! with [`crate::util::rng::Rng`] when no `weights.bin` artifact exists
 //! (mirroring `init_weights(adaln_zero=False)`: std 0.02 linears, unit
@@ -23,7 +29,7 @@ use super::{Backend, EmbedOut, RuntimeStats, StepCtx};
 use crate::model::manifest::{branch_weight_names, FamilyManifest};
 use crate::model::weights::WeightStore;
 use crate::model::Cond;
-use crate::tensor::Tensor;
+use crate::tensor::{gemm, Tensor};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
@@ -474,6 +480,10 @@ fn gelu(x: f32) -> f32 {
 }
 
 /// `y = x @ w + b` for row-major `x` `[rows, din]`, `w` `[din, dout]`.
+/// The heavy lifting happens in [`crate::tensor::gemm`] — cache-blocked
+/// and row-panel-parallel over the shared compute pool, with f32
+/// accumulation order (and therefore results) bitwise independent of
+/// the thread count.
 fn affine(x: &[f32], rows: usize, din: usize, w: &Tensor, b: Option<&Tensor>) -> Result<Vec<f32>> {
     if w.shape.len() != 2 || w.shape[0] != din {
         crate::bail!("affine: weight shape {:?} incompatible with input dim {din}", w.shape);
@@ -482,24 +492,7 @@ fn affine(x: &[f32], rows: usize, din: usize, w: &Tensor, b: Option<&Tensor>) ->
     if x.len() != rows * din {
         crate::bail!("affine: input len {} != rows {rows} × din {din}", x.len());
     }
-    let mut out = vec![0.0f32; rows * dout];
-    for r in 0..rows {
-        let orow = &mut out[r * dout..(r + 1) * dout];
-        if let Some(bias) = b {
-            orow.copy_from_slice(&bias.data);
-        }
-        let xrow = &x[r * din..(r + 1) * din];
-        for (ki, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w.data[ki * dout..(ki + 1) * dout];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-        }
-    }
-    Ok(out)
+    Ok(gemm::matmul(x, rows, din, &w.data, dout, b.map(|t| t.data.as_slice())))
 }
 
 /// adaLN parameters: `silu(c) @ mod_w + mod_b` split into `n` chunks of
@@ -573,6 +566,13 @@ fn gate(mut y: Vec<f32>, b: usize, s: usize, d: usize, g: &[f32]) -> Tensor {
 /// are `[B, Sk, D]` (flat row-major buffers), heads split the trailing
 /// dim. Softmax in f32 with max-subtraction (the numerically-stable
 /// contract the Pallas kernel also honours). Returns `[B, Sq, D]`.
+///
+/// Each `(batch, head)` panel is gathered contiguous and its score
+/// (`Qh @ Kh^T`) and value (`P @ Vh`) products routed through
+/// [`crate::tensor::gemm`]; panels fan out over the shared compute pool
+/// when large enough to pay for dispatch. Per-element accumulation
+/// order is identical to the serial triple loop, so outputs are bitwise
+/// invariant to the thread count.
 fn attention(
     q: &[f32],
     k: &[f32],
@@ -585,44 +585,68 @@ fn attention(
 ) -> Vec<f32> {
     let dh = d / heads;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = vec![0.0f32; b * sq * d];
-    let mut scores = vec![0.0f32; sk];
-    for bi in 0..b {
-        for h in 0..heads {
-            let off = h * dh;
-            for qi in 0..sq {
-                let qrow = &q[(bi * sq + qi) * d + off..(bi * sq + qi) * d + off + dh];
-                let mut max = f32::NEG_INFINITY;
-                for ki in 0..sk {
-                    let krow = &k[(bi * sk + ki) * d + off..(bi * sk + ki) * d + off + dh];
-                    let mut dot = 0.0f32;
-                    for t in 0..dh {
-                        dot += qrow[t] * krow[t];
-                    }
-                    let sv = dot * scale;
-                    scores[ki] = sv;
-                    if sv > max {
-                        max = sv;
-                    }
-                }
-                let mut denom = 0.0f32;
-                for sv in scores.iter_mut() {
-                    *sv = (*sv - max).exp();
-                    denom += *sv;
-                }
-                let inv = 1.0 / denom;
-                let orow = &mut out[(bi * sq + qi) * d + off..(bi * sq + qi) * d + off + dh];
-                for ki in 0..sk {
-                    let p = scores[ki] * inv;
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let vrow = &v[(bi * sk + ki) * d + off..(bi * sk + ki) * d + off + dh];
-                    for t in 0..dh {
-                        orow[t] += p * vrow[t];
-                    }
+
+    // one job per (batch, head) panel; returns the contiguous [Sq, dh]
+    // head output to scatter back into the interleaved layout
+    let head_out = |bh: usize| -> Vec<f32> {
+        let bi = bh / heads;
+        let off = (bh % heads) * dh;
+        let gather = |src: &[f32], s: usize| -> Vec<f32> {
+            let mut panel = vec![0.0f32; s * dh];
+            for si in 0..s {
+                let base = (bi * s + si) * d + off;
+                panel[si * dh..(si + 1) * dh].copy_from_slice(&src[base..base + dh]);
+            }
+            panel
+        };
+        let qh = gather(q, sq);
+        let kh = gather(k, sk);
+        let vh = gather(v, sk);
+        // scores[Sq, Sk] = Qh @ Kh^T (transposed-B: Kh stays [Sk, dh])
+        let mut scores = gemm::matmul_bt(&qh, sq, dh, &kh, sk, None);
+        for qi in 0..sq {
+            let row = &mut scores[qi * sk..(qi + 1) * sk];
+            let mut max = f32::NEG_INFINITY;
+            for sv in row.iter_mut() {
+                *sv *= scale;
+                if *sv > max {
+                    max = *sv;
                 }
             }
+            let mut denom = 0.0f32;
+            for sv in row.iter_mut() {
+                *sv = (*sv - max).exp();
+                denom += *sv;
+            }
+            let inv = 1.0 / denom;
+            for sv in row.iter_mut() {
+                *sv *= inv;
+            }
+        }
+        // [Sq, dh] = P @ Vh (the axpy kernel skips p == 0 terms exactly
+        // like the serial path did)
+        gemm::matmul(&scores, sq, sk, &vh, dh, None)
+    };
+
+    let items: Vec<usize> = (0..b * heads).collect();
+    // tiny panels (video temporal slices) aren't worth a channel round
+    // trip per job; the math is identical either way. (The serial branch
+    // still pays the per-head gather allocations — acceptable churn to
+    // keep one code path whose numerics are bitwise-shared with the
+    // parallel branch.)
+    let outs: Vec<Vec<f32>> = if sq * sk * dh >= 16 * 1024 {
+        gemm::parallel_over(items, &head_out)
+    } else {
+        items.into_iter().map(&head_out).collect()
+    };
+
+    let mut out = vec![0.0f32; b * sq * d];
+    for (bh, ho) in outs.iter().enumerate() {
+        let bi = bh / heads;
+        let off = (bh % heads) * dh;
+        for qi in 0..sq {
+            let base = (bi * sq + qi) * d + off;
+            out[base..base + dh].copy_from_slice(&ho[qi * dh..(qi + 1) * dh]);
         }
     }
     out

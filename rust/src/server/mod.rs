@@ -112,7 +112,12 @@ pub struct Server {
 
 impl Server {
     /// Bind and serve. `addr` like "127.0.0.1:0" (0 = ephemeral port).
-    pub fn start(addr: &str, coord: Arc<Coordinator>, workers: usize) -> Result<Server> {
+    ///
+    /// `conn_threads` sizes the *connection-handler* pool (blocked
+    /// mostly on socket I/O and coordinator replies) — distinct from
+    /// the coordinator's `--workers` executor replicas and the
+    /// `--threads` GEMM compute pool (see DESIGN.md §3).
+    pub fn start(addr: &str, coord: Arc<Coordinator>, conn_threads: usize) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -121,7 +126,7 @@ impl Server {
         let handle = std::thread::Builder::new()
             .name("smoothcache-accept".into())
             .spawn(move || {
-                let pool = ThreadPool::new(workers.max(1));
+                let pool = ThreadPool::new(conn_threads.max(1));
                 loop {
                     if stop2.load(Ordering::SeqCst) {
                         break;

@@ -1,0 +1,415 @@
+//! Cache-blocked, threadpool-parallel f32 GEMM (the shared parallel
+//! compute substrate).
+//!
+//! Every reference-backend matmul — token/QKV/output projections, the
+//! FFN, the per-head score/value products inside attention — routes
+//! through [`matmul`] / [`matmul_bt`]. Work is split into row panels
+//! and fanned out over a process-wide [`ThreadPool`] via
+//! [`ThreadPool::scoped_map`]; inside a panel the k-dimension is walked
+//! in fixed-size blocks so a `KC x n` slab of `w` stays hot in cache
+//! across the panel's rows.
+//!
+//! **Determinism contract:** for a given output element the f32
+//! accumulation order is ascending `k`, one term at a time, regardless
+//! of thread count, panel boundaries or k-blocking — so results are
+//! *bitwise identical* across `--threads` settings and equal to the
+//! naive serial triple loop. `tests/parallel_parity.rs` and CI
+//! (`SMOOTHCACHE_THREADS=1` vs `4`) lock this in; caching decisions
+//! must never depend on parallelism.
+//!
+//! Thread-count resolution (first match wins):
+//! 1. a [`with_threads`] scope on the calling thread,
+//! 2. the process-wide count from [`set_threads`] (the `--threads`
+//!    CLI knob),
+//! 3. the `SMOOTHCACHE_THREADS` environment variable,
+//! 4. `available_parallelism()` capped at 8.
+//!
+//! Calls issued *from* a pool worker (nested parallelism) degrade to
+//! inline serial execution instead of deadlocking — see
+//! [`on_worker_thread`].
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::threadpool::{on_worker_thread, ThreadPool};
+
+/// k-dimension block: a `KC x n` slab of `w` (`KC x 512` f32 = 256 KiB
+/// at the largest builtin width) is reused across every row of a panel
+/// before the walk advances.
+const KC: usize = 128;
+
+/// Below this many multiply-accumulates a GEMM runs inline: job
+/// dispatch over the channel-based pool costs more than it buys.
+const MIN_PAR_MACS: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------------
+// Thread-count configuration
+// ---------------------------------------------------------------------------
+
+/// Process-wide thread count; 0 = not yet resolved.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override installed by [`with_threads`]; 0 = none.
+    static TL_THREADS: Cell<usize> = const { Cell::new(0) };
+}
+
+fn env_or_auto_threads() -> usize {
+    std::env::var("SMOOTHCACHE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(8)
+        })
+}
+
+/// Set the process-wide compute thread count (the `--threads` knob).
+/// Takes effect for every subsequent GEMM on any thread without an
+/// active [`with_threads`] scope.
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::SeqCst);
+}
+
+/// The thread count the next GEMM on this thread will use.
+pub fn threads() -> usize {
+    let tl = TL_THREADS.with(|c| c.get());
+    if tl > 0 {
+        return tl;
+    }
+    let g = GLOBAL_THREADS.load(Ordering::SeqCst);
+    if g > 0 {
+        return g;
+    }
+    let resolved = env_or_auto_threads();
+    // benign race: every contender resolves the same value
+    let _ = GLOBAL_THREADS.compare_exchange(0, resolved, Ordering::SeqCst, Ordering::SeqCst);
+    GLOBAL_THREADS.load(Ordering::SeqCst)
+}
+
+/// Run `f` with this thread's GEMM thread count pinned to `n`
+/// (restored afterwards, panic-safe). The parity tests sweep thread
+/// counts with this without perturbing other test threads.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TL_THREADS.with(|c| c.set(self.0));
+        }
+    }
+    let prev = TL_THREADS.with(|c| c.replace(n.max(1)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Process-wide pool registry, one pool per size. Pools live for the
+/// process lifetime; the handful of sizes in play (CLI value, test
+/// sweep values) bounds the registry.
+fn pool_for(n: usize) -> Arc<ThreadPool> {
+    static POOLS: OnceLock<Mutex<HashMap<usize, Arc<ThreadPool>>>> = OnceLock::new();
+    let pools = POOLS.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = pools.lock().unwrap();
+    Arc::clone(guard.entry(n).or_insert_with(|| Arc::new(ThreadPool::new(n))))
+}
+
+// ---------------------------------------------------------------------------
+// Serial panel kernels
+// ---------------------------------------------------------------------------
+
+/// `out[rows, n] = x[rows, k] @ w[k, n] (+ bias)`, k-blocked, axpy form:
+/// each output row accumulates terms in ascending `k`, one at a time.
+fn gemm_panel(
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(x.len(), rows * k);
+    for r in 0..rows {
+        let orow = &mut out[r * n..(r + 1) * n];
+        match bias {
+            Some(b) => orow.copy_from_slice(b),
+            None => orow.fill(0.0),
+        }
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let kend = (k0 + KC).min(k);
+        for r in 0..rows {
+            let xrow = &x[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            for ki in k0..kend {
+                let xv = xrow[ki];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[ki * n..(ki + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        k0 = kend;
+    }
+}
+
+/// `out[rows, n] = x[rows, k] @ wt[n, k]^T (+ bias)` — transposed-B
+/// variant (each output element is a running dot over ascending `k`).
+fn gemm_bt_panel(
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    wt: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(x.len(), rows * k);
+    for r in 0..rows {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wrow = &wt[j * k..(j + 1) * k];
+            let mut acc = match bias {
+                Some(b) => b[j],
+                None => 0.0,
+            };
+            for (xv, wv) in xrow.iter().zip(wrow) {
+                acc += xv * wv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel drivers
+// ---------------------------------------------------------------------------
+
+fn check_dims(x: &[f32], m: usize, k: usize, w: &[f32], w_len: usize, n: usize, bias: Option<&[f32]>) {
+    assert_eq!(x.len(), m * k, "gemm: x len {} != {m} x {k}", x.len());
+    assert_eq!(w.len(), w_len, "gemm: w len {} != expected {w_len}", w.len());
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "gemm: bias len {} != {n}", b.len());
+    }
+}
+
+fn run_panels(
+    out: &mut [f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    kernel: fn(&mut [f32], &[f32], usize, usize, &[f32], usize, Option<&[f32]>),
+) {
+    let nt = threads();
+    if nt <= 1 || m < 2 || m * k * n < MIN_PAR_MACS || on_worker_thread() {
+        kernel(out, x, m, k, w, n, bias);
+        return;
+    }
+    let rows_per_panel = (m + nt - 1) / nt;
+    // disjoint &mut row panels of `out`, fanned out by index
+    let panels: Vec<(usize, &mut [f32])> =
+        out.chunks_mut(rows_per_panel * n).enumerate().collect();
+    pool_for(nt).scoped_map(panels, |(pi, chunk)| {
+        let lo = pi * rows_per_panel;
+        let rows = chunk.len() / n;
+        kernel(chunk, &x[lo * k..(lo + rows) * k], rows, k, w, n, bias);
+    });
+}
+
+/// `y[m, n] = x[m, k] @ w[k, n] (+ bias)`, row-major, panel-parallel.
+pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, bias: Option<&[f32]>) -> Vec<f32> {
+    check_dims(x, m, k, w, k * n, n, bias);
+    let mut out = vec![0.0f32; m * n];
+    run_panels(&mut out, x, m, k, w, n, bias, gemm_panel);
+    out
+}
+
+/// `y[m, n] = x[m, k] @ wt[n, k]^T (+ bias)` — transposed-B variant
+/// (attention scores `Q @ K^T` without materialising `K^T`).
+pub fn matmul_bt(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    wt: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    check_dims(x, m, k, wt, n * k, n, bias);
+    let mut out = vec![0.0f32; m * n];
+    run_panels(&mut out, x, m, k, wt, n, bias, gemm_bt_panel);
+    out
+}
+
+/// Fan `f` over `items` on the compute pool this thread is configured
+/// for (order-preserving). Degrades to an inline serial map when the
+/// pool is serial, there is only one item, or the caller is already a
+/// pool worker — so callers can nest it under [`matmul`] fan-outs (and
+/// vice versa) without deadlock. The reference backend uses this to
+/// parallelise attention across `(batch, head)` panels.
+pub fn parallel_over<'env, T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'env,
+    R: Send + 'env,
+    F: Fn(T) -> R + Send + Sync + 'env,
+{
+    let nt = threads();
+    if nt <= 1 || items.len() < 2 || on_worker_thread() {
+        return items.into_iter().map(f).collect();
+    }
+    pool_for(nt).scoped_map(items, f)
+}
+
+/// Reference triple loop (unblocked, unconditionally serial). The parity
+/// suite pins the parallel kernels to this within 1e-5 per element; it
+/// is also the fallback the module tests shrink against.
+pub fn matmul_naive(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    check_dims(x, m, k, w, k * n, n, bias);
+    let mut out = vec![0.0f32; m * n];
+    for r in 0..m {
+        for j in 0..n {
+            let mut acc = match bias {
+                Some(b) => b[j],
+                None => 0.0,
+            };
+            for ki in 0..k {
+                acc += x[r * k + ki] * w[ki * n + j];
+            }
+            out[r * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        rng.normal_vec(n)
+    }
+
+    #[test]
+    fn matmul_matches_naive_across_shapes_and_threads() {
+        for &(m, k, n) in &[
+            (1usize, 7usize, 5usize),
+            (3, 16, 9),
+            (8, 128, 384),
+            (64, 128, 512),
+            (65, 130, 33), // ragged panels
+        ] {
+            let x = rand_vec(m * k, 1);
+            let w = rand_vec(k * n, 2);
+            let b = rand_vec(n, 3);
+            let want = matmul_naive(&x, m, k, &w, n, Some(&b));
+            for nt in [1usize, 2, 8] {
+                let got = with_threads(nt, || matmul(&x, m, k, &w, n, Some(&b)));
+                assert_eq!(got.len(), want.len());
+                for (i, (g, e)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - e).abs() <= 1e-5,
+                        "({m},{k},{n}) threads={nt} i={i}: {g} vs {e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_is_bitwise_deterministic_across_thread_counts() {
+        let (m, k, n) = (64usize, 128usize, 512usize);
+        let x = rand_vec(m * k, 4);
+        let w = rand_vec(k * n, 5);
+        let t1 = with_threads(1, || matmul(&x, m, k, &w, n, None));
+        for nt in [2usize, 3, 8] {
+            let tn = with_threads(nt, || matmul(&x, m, k, &w, n, None));
+            assert_eq!(t1, tn, "threads={nt} diverged bitwise");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_materialised_transpose() {
+        for &(m, k, n) in &[(4usize, 32usize, 10usize), (64, 32, 64), (33, 17, 29)] {
+            let x = rand_vec(m * k, 6);
+            let wt = rand_vec(n * k, 7); // [n, k]
+            // materialise w = wt^T as [k, n]
+            let mut w = vec![0.0f32; k * n];
+            for j in 0..n {
+                for ki in 0..k {
+                    w[ki * n + j] = wt[j * k + ki];
+                }
+            }
+            let want = matmul_naive(&x, m, k, &w, n, None);
+            for nt in [1usize, 2, 8] {
+                let got = with_threads(nt, || matmul_bt(&x, m, k, &wt, n, None));
+                for (g, e) in got.iter().zip(&want) {
+                    assert!((g - e).abs() <= 1e-5, "({m},{k},{n}) threads={nt}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_is_applied_per_output_column() {
+        let x = vec![0.0f32; 2 * 3];
+        let w = vec![0.0f32; 3 * 4];
+        let b = vec![1.0f32, 2.0, 3.0, 4.0];
+        let out = matmul(&x, 2, 3, &w, 4, Some(&b));
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn with_threads_restores_previous_value() {
+        // pin a thread-local scope for the whole test so the global
+        // set_threads probe below cannot leak into sibling tests (the
+        // CI lanes pin SMOOTHCACHE_THREADS and must keep their setting)
+        with_threads(3, || {
+            assert_eq!(threads(), 3);
+            let inner = with_threads(7, threads);
+            assert_eq!(inner, 7);
+            assert_eq!(threads(), 3);
+            // nested scopes unwind correctly
+            with_threads(2, || {
+                assert_eq!(threads(), 2);
+                with_threads(5, || assert_eq!(threads(), 5));
+                assert_eq!(threads(), 2);
+            });
+            assert_eq!(threads(), 3);
+        });
+        // set_threads moves the process-wide default; restore it so the
+        // rest of the test process keeps the lane's configuration
+        let prev = threads();
+        set_threads(prev + 1);
+        assert_eq!(threads(), prev + 1);
+        set_threads(prev);
+        assert_eq!(threads(), prev);
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm: x len")]
+    fn dimension_mismatch_panics() {
+        matmul(&[0.0; 5], 2, 3, &[0.0; 12], 4, None);
+    }
+}

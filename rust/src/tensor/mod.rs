@@ -1,8 +1,13 @@
 //! Host-side dense f32 tensor (substrate).
 //!
-//! The L3 hot path moves activations between PJRT executions, solvers
+//! The L3 hot path moves activations between backend executions, solvers
 //! and the layer cache as host tensors; this module provides the small
-//! op set those layers need (no BLAS — PJRT owns the heavy math).
+//! op set those layers need. Heavy matmuls live in the [`gemm`]
+//! submodule — a cache-blocked, threadpool-parallel f32 GEMM that the
+//! reference backend routes every projection, FFN and attention product
+//! through (no BLAS offline; PJRT owns the math on that backend).
+
+pub mod gemm;
 
 use crate::util::rng::Rng;
 

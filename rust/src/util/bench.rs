@@ -46,6 +46,28 @@ pub fn fast_mode() -> bool {
     std::env::var("SMOOTHCACHE_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Parse `--name N` / `--name=N` from this bench binary's argv. Bench
+/// targets run with `harness = false`, but cargo may still inject flags
+/// of its own (e.g. `--bench`), so anything unrecognised is ignored
+/// rather than rejected. Used for the `--threads` / `--workers` knobs.
+pub fn arg_usize(name: &str, default: usize) -> usize {
+    let flag = format!("--{name}");
+    let prefix = format!("--{name}=");
+    let args: Vec<String> = std::env::args().collect();
+    for (i, a) in args.iter().enumerate() {
+        if *a == flag {
+            if let Some(v) = args.get(i + 1).and_then(|s| s.parse().ok()) {
+                return v;
+            }
+        } else if let Some(rest) = a.strip_prefix(&prefix) {
+            if let Ok(v) = rest.parse() {
+                return v;
+            }
+        }
+    }
+    default
+}
+
 /// Time `f` for `iters` iterations after `warmup` untimed ones.
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
     let (warmup, iters) = if fast_mode() {
@@ -202,6 +224,12 @@ mod tests {
         let s = bench(2, 5, || count += 1);
         assert_eq!(count, 7);
         assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn arg_usize_falls_back_to_default() {
+        // the test harness argv carries no such flag
+        assert_eq!(arg_usize("definitely-not-a-flag", 7), 7);
     }
 
     #[test]

@@ -1,10 +1,23 @@
 //! Fixed-size worker thread pool (substrate).
 //!
-//! The offline crate set has no tokio; the serving coordinator is built
+//! The offline crate set has no tokio or rayon; the serving coordinator
+//! and the parallel GEMM substrate ([`crate::tensor::gemm`]) are built
 //! on OS threads and mpsc channels instead (DESIGN.md section 3,
 //! offline-crate substitutions). Provides `execute` for fire-and-forget
-//! jobs and `parallel_map` for fork-join data parallelism.
+//! jobs, `parallel_map` for fork-join data parallelism over owned data,
+//! and `scoped_map` for fork-join over borrowed data (the GEMM row-panel
+//! hot path).
+//!
+//! Panic containment: a panicking job is caught on the worker, the
+//! worker survives, and the pending-job counter is released by a drop
+//! guard — so `wait_idle` and the fork-join drains never deadlock on a
+//! poisoned queue. A fork-join caller still observes the failure: the
+//! panic payload travels back over the result channel and is
+//! `resume_unwind`-ed in the caller with its original message, *after*
+//! every other job has drained.
 
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -12,8 +25,32 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+thread_local! {
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on threads owned by any [`ThreadPool`]. Fork-join entry points
+/// use this to degrade to inline execution instead of deadlocking: a
+/// worker that blocked waiting on sub-jobs would occupy the very slot
+/// those sub-jobs need.
+pub fn on_worker_thread() -> bool {
+    IS_POOL_WORKER.with(|c| c.get())
+}
+
+/// Decrements the pending counter even when the job unwinds.
+struct PendingGuard(Arc<AtomicUsize>);
+
+impl Drop for PendingGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    /// Job submission side; `Mutex` keeps the pool `Sync` on every
+    /// supported toolchain so a single pool can be shared by reference
+    /// across executor replicas.
+    tx: Option<Mutex<Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,
     pending: Arc<AtomicUsize>,
 }
@@ -30,23 +67,28 @@ impl ThreadPool {
                 let pending = Arc::clone(&pending);
                 std::thread::Builder::new()
                     .name(format!("smoothcache-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => {
-                                job();
-                                pending.fetch_sub(1, Ordering::SeqCst);
+                    .spawn(move || {
+                        IS_POOL_WORKER.with(|c| c.set(true));
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match job {
+                                Ok(job) => {
+                                    let _guard = PendingGuard(Arc::clone(&pending));
+                                    // contain panics: the worker survives
+                                    // and the guard releases `pending`
+                                    let _ = catch_unwind(AssertUnwindSafe(job));
+                                }
+                                Err(_) => break, // sender dropped: shut down
                             }
-                            Err(_) => break, // sender dropped: shut down
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, pending }
+        ThreadPool { tx: Some(Mutex::new(tx)), workers, pending }
     }
 
     pub fn size(&self) -> usize {
@@ -57,39 +99,113 @@ impl ThreadPool {
         self.pending.load(Ordering::SeqCst)
     }
 
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+    /// Non-panicking enqueue. Fails only if the pool was shut down —
+    /// impossible while a caller holds `&self`, but kept infallible so
+    /// `scoped_map` can enforce its no-unwind window explicitly.
+    fn try_submit(&self, job: Job) -> Result<(), ()> {
+        let Some(tx) = self.tx.as_ref() else { return Err(()) };
+        let guard = tx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         self.pending.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("workers alive");
+        guard.send(job).map_err(|_| {
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+        })
     }
 
-    /// Fork-join: apply `f` to every item, preserving order.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.try_submit(Box::new(f)).expect("pool shut down");
+    }
+
+    /// Fork-join over borrowed data: apply `f` to every item, preserving
+    /// order. Called from a pool worker it runs inline (see
+    /// [`on_worker_thread`]); otherwise items are fanned out to the
+    /// workers and this call blocks until every job has completed or
+    /// unwound — which is what makes lending `'env` borrows to the
+    /// workers sound (see SAFETY below).
+    pub fn scoped_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Send + Sync + 'env,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if on_worker_thread() || self.size() == 1 || n == 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let f = Arc::new(f);
+        type Outcome<R> = std::thread::Result<R>; // Ok(r) | Err(panic payload)
+        let (tx, rx): (Sender<(usize, Outcome<R>)>, Receiver<(usize, Outcome<R>)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                // `item` is consumed inside the catch (dropped there even
+                // on unwind) and the result — or the panic payload, so
+                // the caller can resume it with context intact — moves
+                // into the channel; when this closure's environment
+                // drops, no borrow of `'env` data remains on the worker.
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = tx.send((i, r));
+            });
+            // SAFETY: erasing `'env` to `'static` is sound because this
+            // function does not return before (a) the receive loop below
+            // has observed every sender clone dropping — so every job,
+            // including panicked ones, has finished executing against the
+            // borrowed data — and (b) the strong-count barrier after it
+            // has observed every job's `Arc<F>` clone dropping — so no
+            // worker is still running `F`'s (or its captures') destructor.
+            // Nothing between the first enqueue and the barrier may
+            // unwind: `try_submit` is non-panicking and failure aborts.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            if self.try_submit(job).is_err() {
+                // queued 'env-erased jobs may already be running; an
+                // unwind here would free their borrows under them
+                eprintln!("threadpool: pool shut down with scoped jobs in flight; aborting");
+                std::process::abort();
+            }
+        }
+        drop(tx);
+        let mut out: Vec<Option<Outcome<R>>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        // Closure-capture drop order is unspecified: a worker may drop a
+        // job's `tx` clone (disconnecting us above) *before* its `Arc<F>`
+        // clone. Spin until every job-held clone is gone so no worker can
+        // still be dropping `F` (whose destructor may touch `'env` data)
+        // after we return. `T` items need no such barrier — they are
+        // consumed (or unwound) inside the catch frame, strictly before
+        // the job's `tx` clone drops.
+        while Arc::strong_count(&f) > 1 {
+            std::thread::yield_now();
+        }
+        // order the workers' drop effects before anything the caller
+        // does with the reclaimed borrows
+        std::sync::atomic::fence(Ordering::Acquire);
+        let mut results = Vec::with_capacity(n);
+        for slot in out {
+            match slot.expect("scoped job vanished without reporting") {
+                Ok(r) => results.push(r),
+                // re-raise the first job panic with its original payload
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        results
+    }
+
+    /// Fork-join over owned data: apply `f` to every item, preserving
+    /// order. (A `'static` specialization of [`ThreadPool::scoped_map`].)
     pub fn parallel_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
-        let n = items.len();
-        let f = Arc::new(f);
-        let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
-        for (i, item) in items.into_iter().enumerate() {
-            let tx = tx.clone();
-            let f = Arc::clone(&f);
-            self.execute(move || {
-                let r = f(item);
-                let _ = tx.send((i, r));
-            });
-        }
-        drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            out[i] = Some(r);
-        }
-        out.into_iter().map(|r| r.expect("worker panicked")).collect()
+        self.scoped_map(items, f)
     }
 
     /// Block until the queue is drained.
@@ -136,6 +252,28 @@ mod tests {
     }
 
     #[test]
+    fn scoped_map_borrows_caller_data() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..64).collect();
+        let out = pool.scoped_map((0..data.len()).collect(), |i| data[i] * 2);
+        assert_eq!(out, data.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_writes_through_disjoint_slices() {
+        let pool = ThreadPool::new(4);
+        let mut buf = vec![0u64; 40];
+        let chunks: Vec<(usize, &mut [u64])> =
+            buf.chunks_mut(10).enumerate().collect();
+        pool.scoped_map(chunks, |(ci, chunk)| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (ci * 10 + j) as u64;
+            }
+        });
+        assert_eq!(buf, (0..40).collect::<Vec<u64>>());
+    }
+
+    #[test]
     fn drop_joins_workers() {
         let pool = ThreadPool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
@@ -152,5 +290,62 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    /// Satellite regression: a panicking job used to leave `pending`
+    /// forever-incremented (the decrement sat *after* the call), so
+    /// `wait_idle` deadlocked and the worker thread died. The drop guard
+    /// plus `catch_unwind` keep the pool fully usable.
+    #[test]
+    fn survives_panicking_jobs() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.execute(|| panic!("job goes boom"));
+        }
+        pool.wait_idle(); // must return, not spin forever
+        assert_eq!(pool.pending(), 0);
+        // both workers must still be alive and processing
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    /// A fork-join with one panicking item drains the others, then
+    /// re-raises the *original* panic payload in the caller.
+    #[test]
+    fn scoped_map_reports_panicked_item_after_drain() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_map((0..8).collect::<Vec<usize>>(), |x| {
+                if x == 3 {
+                    panic!("poisoned item");
+                }
+                x * 2
+            })
+        }));
+        let payload = result.expect_err("caller must observe the job panic");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "poisoned item", "original payload must survive");
+        // the pool itself is unharmed
+        let out = pool.scoped_map((0..8).collect::<Vec<usize>>(), |x| x + 1);
+        assert_eq!(out, (1..9).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn nested_scoped_map_runs_inline() {
+        // a job that fans out again must not deadlock: the inner map
+        // detects the worker thread and degrades to inline execution
+        let pool = Arc::new(ThreadPool::new(2));
+        let p2 = Arc::clone(&pool);
+        let out = pool.scoped_map(vec![10usize, 20, 30], move |x| {
+            p2.scoped_map((0..x).collect(), |y: usize| y).len()
+        });
+        assert_eq!(out, vec![10, 20, 30]);
     }
 }

@@ -1,0 +1,193 @@
+//! `util::propcheck` properties for the coordinator (ISSUE 2): under
+//! randomized Poisson arrival traces and executor worker counts,
+//! (a) every submitted request is answered exactly once,
+//! (b) batches never mix `BatchKey`s (observable end-to-end: every
+//!     response carries its own request's latent geometry and nothing
+//!     fails; and directly at the batcher layer below), and
+//! (c) deadline flushes fire — partial groups never strand.
+
+use std::time::{Duration, Instant};
+
+use smoothcache::coordinator::{
+    Batcher, BatcherConfig, Coordinator, CoordinatorConfig, InFlight, Metrics, Policy, Request,
+};
+use smoothcache::model::{Cond, Manifest};
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::propcheck::{forall, gen};
+use smoothcache::workload::PoissonTrace;
+
+fn cond_for(family: &str, i: usize) -> Cond {
+    if family == "image" {
+        Cond::Label(vec![(i % 10) as i32])
+    } else {
+        Cond::Prompt(vec![(i % 256) as i32; 8])
+    }
+}
+
+/// End-to-end property over the live coordinator: random worker counts,
+/// Poisson-timed submissions, two families × two step counts (four
+/// distinct `BatchKey`s in flight).
+#[test]
+fn prop_every_request_answered_exactly_once_any_worker_count() {
+    let manifest = Manifest::builtin();
+    forall(
+        0xC0081,
+        5,
+        |r| {
+            (
+                gen::usize_in(r, 1, 4), // worker-pool size 1..=3
+                gen::vec_of(r, 1, 9, |r| (r.below(2), r.below(2))),
+            )
+        },
+        |case: &(usize, Vec<(usize, usize)>)| {
+            let (workers, reqs) = case;
+            let mut cfg =
+                CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(*workers);
+            cfg.max_wait = Duration::from_millis(5);
+            let coord = Coordinator::start(cfg).map_err(|e| e.to_string())?;
+
+            let trace =
+                PoissonTrace::generate(300.0, reqs.len(), 10, 0, 0, 0xAC1D ^ *workers as u64);
+            let t0 = Instant::now();
+            let mut rxs = Vec::new();
+            for (i, &(f, s)) in reqs.iter().enumerate() {
+                let target = t0 + Duration::from_secs_f64(trace.items[i].arrival_s);
+                if let Some(d) = target.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(d);
+                }
+                let family = ["image", "audio"][f];
+                let req = Request {
+                    id: 0,
+                    family: family.into(),
+                    cond: cond_for(family, i),
+                    solver: SolverKind::Ddim,
+                    steps: 2 + s,
+                    cfg_scale: 1.0,
+                    seed: i as u64,
+                    policy: Policy::NoCache,
+                };
+                rxs.push((family, coord.submit(req)));
+            }
+
+            for (family, rx) in &rxs {
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .map_err(|_| "request never answered — deadline flush missing?".to_string())?
+                    .map_err(|e| format!("request failed: {e}"))?;
+                let fm = manifest.family(family).unwrap();
+                let mut want = vec![1usize];
+                want.extend(&fm.latent_shape);
+                if resp.latent.shape != want {
+                    return Err(format!(
+                        "latent shape {:?} != {:?} for family {family} — batch mixed keys?",
+                        resp.latent.shape, want
+                    ));
+                }
+            }
+
+            let m = coord.metrics();
+            let n = reqs.len() as u64;
+            if Metrics::get(&m.requests_submitted) != n {
+                return Err(format!("submitted {} != {n}", Metrics::get(&m.requests_submitted)));
+            }
+            if Metrics::get(&m.requests_completed) != n {
+                return Err(format!(
+                    "completed {} != {n} (answered more or less than once)",
+                    Metrics::get(&m.requests_completed)
+                ));
+            }
+            if Metrics::get(&m.requests_failed) != 0 {
+                return Err(format!("{} requests failed", Metrics::get(&m.requests_failed)));
+            }
+            coord.shutdown();
+            // exactly once: the reply channels must now be disconnected
+            // with no second message pending
+            for (_, rx) in &rxs {
+                match rx.try_recv() {
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {}
+                    other => return Err(format!("reply channel not drained: {other:?}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batcher-layer property with synthetic clocks (no sleeping): under
+/// Poisson inter-arrival offsets, every request flushes by
+/// `last_arrival + max_wait`, every flushed batch is homogeneous in
+/// `BatchKey`, and no batch exceeds the effective max size.
+#[test]
+fn prop_deadline_flushes_fire_under_poisson_arrivals() {
+    forall(
+        0xF1054,
+        40,
+        |r| gen::vec_of(r, 1, 30, |r| (r.below(3), r.below(2))),
+        |seq: &Vec<(usize, usize)>| {
+            let max_wait = Duration::from_millis(50);
+            let config = BatcherConfig {
+                supported_batches: vec![1, 2, 4, 8],
+                max_wait,
+            };
+            let mut batcher = Batcher::new(config);
+            let trace = PoissonTrace::generate(100.0, seq.len(), 10, 0, 0, seq.len() as u64);
+            let t0 = Instant::now();
+            let families = ["image", "audio", "video"];
+            let mut keep_rx = Vec::new(); // keep reply receivers alive
+            let mut flushed = 0usize;
+            let check_batches = |batches: Vec<Vec<InFlight>>| -> Result<usize, String> {
+                let mut count = 0;
+                for batch in batches {
+                    let key = batch[0].request.batch_key();
+                    if batch.len() > 8 {
+                        return Err(format!("batch of {} exceeds max", batch.len()));
+                    }
+                    for it in &batch {
+                        if it.request.batch_key() != key {
+                            return Err("batch mixes BatchKeys".into());
+                        }
+                    }
+                    count += batch.len();
+                }
+                Ok(count)
+            };
+            let mut last = t0;
+            for (i, &(f, s)) in seq.iter().enumerate() {
+                let now = t0 + Duration::from_secs_f64(trace.items[i].arrival_s);
+                last = now;
+                let (tx, rx) = std::sync::mpsc::channel();
+                keep_rx.push(rx);
+                let item = InFlight {
+                    request: Request {
+                        id: i as u64,
+                        family: families[f].into(),
+                        cond: cond_for(families[f], i),
+                        solver: SolverKind::Ddim,
+                        steps: 10 + s,
+                        cfg_scale: 1.0,
+                        seed: i as u64,
+                        policy: Policy::NoCache,
+                    },
+                    submitted: Instant::now(),
+                    reply: tx,
+                };
+                if let Some(batch) = batcher.push(item, now) {
+                    flushed += check_batches(vec![batch])?;
+                }
+                flushed += check_batches(batcher.poll(now))?;
+            }
+            // one deadline sweep after the last arrival must drain all
+            flushed += check_batches(batcher.poll(last + max_wait))?;
+            if batcher.pending() != 0 {
+                return Err(format!(
+                    "{} requests stranded past the flush deadline",
+                    batcher.pending()
+                ));
+            }
+            if flushed != seq.len() {
+                return Err(format!("flushed {flushed} != submitted {}", seq.len()));
+            }
+            Ok(())
+        },
+    );
+}

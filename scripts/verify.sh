@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, test, and rustdoc with broken intra-doc
-# links promoted to errors. Run from anywhere; CI invokes this script.
+# Tier-1 verification: build, test (at two GEMM thread counts, so any
+# serial/parallel divergence in the compute substrate fails tier-1),
+# and rustdoc with broken intra-doc links promoted to errors. Run from
+# anywhere; CI invokes this script.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "==> cargo build --release"
 cargo build --release
 
-echo "==> cargo test -q"
-cargo test -q
+echo "==> cargo test -q (SMOOTHCACHE_THREADS=1, serial substrate)"
+SMOOTHCACHE_THREADS=1 cargo test -q
+
+echo "==> cargo test -q (SMOOTHCACHE_THREADS=4, parallel substrate)"
+SMOOTHCACHE_THREADS=4 cargo test -q
 
 echo "==> cargo doc --no-deps (broken intra-doc links are errors)"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D rustdoc::broken-intra-doc-links" \
