@@ -1,11 +1,14 @@
-//! End-to-end serving bench: the full coordinator stack (router →
-//! dynamic batcher → executor pool) under open-loop Poisson traffic,
-//! per caching policy. Reports throughput, latency percentiles, batch
-//! occupancy and skip fraction — the serving-system view of the paper's
-//! acceleration claim.
+//! End-to-end serving bench: the full coordinator stack (dynamic
+//! batcher → shared work queue → executor pool) under open-loop
+//! Poisson traffic, per caching policy. Reports throughput, latency
+//! percentiles, *queue wait vs execution time* (the scheduler's own
+//! latency contribution, ADR-002), admission rejections, batch
+//! occupancy and skip fraction — the serving-system view of the
+//! paper's acceleration claim.
 //!
 //! Flags: `--workers N` sizes the executor replica pool, `--threads N`
-//! pins the GEMM compute pool (0 = auto).
+//! pins the GEMM compute pool (0 = auto), `--queue-depth N` bounds the
+//! shared work queue (rejected requests are counted, not retried).
 
 use std::time::{Duration, Instant};
 
@@ -20,6 +23,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
     let workers = arg_usize("workers", 2);
+    let queue_depth = arg_usize("queue-depth", 256);
     let threads = arg_usize("threads", 0);
     if threads > 0 {
         smoothcache::tensor::gemm::set_threads(threads);
@@ -29,8 +33,8 @@ fn main() -> smoothcache::util::error::Result<()> {
     let (steps, n_requests, rate_rps) = if fast_mode() { (8, 16, 8.0) } else { (50, 48, 4.0) };
 
     let mut table = Table::new(&[
-        "policy", "served", "throughput (req/s)", "p50 (s)", "p95 (s)", "mean exec (s)",
-        "occupancy", "skip%",
+        "policy", "served", "rejected", "throughput (req/s)", "p50 (s)", "p95 (s)",
+        "mean qwait (s)", "mean exec (s)", "occupancy", "skip%",
     ]);
 
     for policy in [
@@ -45,6 +49,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         cfg.max_wait = Duration::from_millis(25);
         cfg.calib_samples = if fast_mode() { 2 } else { 6 };
         cfg.workers = workers;
+        cfg.queue_depth = queue_depth;
         let coord = Coordinator::start(cfg)?;
 
         // warmup: force calibration + executable compiles out of the
@@ -97,22 +102,40 @@ fn main() -> smoothcache::util::error::Result<()> {
             pending.push(coord.submit(req));
         }
         let mut latencies = Vec::new();
+        let mut rejected = 0usize;
         let mut skip = 0.0;
         for rx in pending {
-            let resp = rx.recv().unwrap()?;
-            latencies.push(resp.total_seconds);
-            skip = resp.gen_stats.skip_fraction();
+            // an overloaded rejection is a valid outcome under a bounded
+            // queue — count it instead of aborting the bench; any other
+            // error is a real failure and must surface
+            match rx.recv().unwrap() {
+                Ok(resp) => {
+                    latencies.push(resp.total_seconds);
+                    skip = resp.gen_stats.skip_fraction();
+                }
+                Err(e) if format!("{e}").starts_with("overloaded:") => rejected += 1,
+                Err(e) => return Err(e),
+            }
         }
         let wall = t0.elapsed().as_secs_f64();
         latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |q: f64| latencies[((q * (latencies.len() - 1) as f64) as usize).min(latencies.len() - 1)];
+        let served = latencies.len();
+        let pct = |q: f64| {
+            if latencies.is_empty() {
+                f64::NAN
+            } else {
+                latencies[((q * (served - 1) as f64) as usize).min(served - 1)]
+            }
+        };
         let m = coord.metrics();
         table.row(&[
             policy.wire(),
-            n_requests.to_string(),
-            format!("{:.2}", n_requests as f64 / wall),
+            served.to_string(),
+            rejected.to_string(),
+            format!("{:.2}", served as f64 / wall),
             format!("{:.3}", pct(0.5)),
             format!("{:.3}", pct(0.95)),
+            format!("{:.3}", m.queue_wait.mean()),
             format!("{:.3}", m.exec_latency.mean()),
             format!("{:.2}", m.occupancy()),
             format!("{:.0}%", skip * 100.0),
@@ -127,7 +150,7 @@ fn main() -> smoothcache::util::error::Result<()> {
 
     println!(
         "\nE2E serving — image family, DDIM-{steps}, Poisson {rate_rps} req/s, \
-         {workers} executor replicas, {} GEMM threads",
+         {workers} executor replicas, queue depth {queue_depth}, {} GEMM threads",
         smoothcache::tensor::gemm::threads()
     );
     table.print();

@@ -4,11 +4,16 @@
 //! the L3 optimization loop in EXPERIMENTS.md §Perf. The final section
 //! sweeps the GEMM compute-thread count over the single-request forward
 //! and reports the 4-thread / 1-thread throughput ratio (ISSUE 2
-//! acceptance: ≥ 2×).
+//! acceptance: ≥ 2×), and a final section decomposes coordinator
+//! latency into work-queue wait vs execution time under a burst
+//! (ISSUE 3 — the shared work-queue scheduler's own overhead).
 //!
 //! Flags: `--threads N` pins the pool for the per-entry sections
 //! (0 = auto; the sweep section always pins its own counts).
 
+use std::time::Duration;
+
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Metrics, Policy, Request};
 use smoothcache::model::{Cond, Engine};
 use smoothcache::pipeline::{generate, CacheMode, GenConfig};
 use smoothcache::solvers::SolverKind;
@@ -159,5 +164,63 @@ fn main() -> smoothcache::util::error::Result<()> {
         "throughput at 4 threads vs 1 thread: {ratio4:.2}x (acceptance target >= 2x)"
     );
     std::fs::write("bench_out/perf_engine_threads.csv", sweep.to_csv())?;
+
+    // ---- queue decomposition: scheduler wait vs execution under a burst ----
+    // A closed burst of compatible requests through the full coordinator
+    // (batcher → shared work queue → executor pool): how much of each
+    // request's latency is the scheduler's own queueing vs model time.
+    let (burst, qsteps) = if fast_mode() { (8usize, 4usize) } else { (24, 10) };
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(5);
+    cfg.workers = 2;
+    let coord = Coordinator::start(cfg)?;
+    let rxs: Vec<_> = (0..burst)
+        .map(|i| {
+            coord.submit(Request {
+                id: 0,
+                family: "image".into(),
+                cond: Cond::Label(vec![(i % 10) as i32]),
+                solver: SolverKind::Ddim,
+                steps: qsteps,
+                cfg_scale: 1.0,
+                seed: i as u64,
+                policy: Policy::NoCache,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap()?;
+    }
+    let m = coord.metrics();
+    let mut qtable = Table::new(&["stage", "mean (ms)", "p95 (ms)"]);
+    qtable.row(&[
+        "queue wait (enqueue→pull)".into(),
+        format!("{:.2}", m.queue_wait.mean() * 1e3),
+        format!("{:.2}", m.queue_wait.quantile(0.95) * 1e3),
+    ]);
+    qtable.row(&[
+        "batch execute".into(),
+        format!("{:.2}", m.exec_latency.mean() * 1e3),
+        format!("{:.2}", m.exec_latency.quantile(0.95) * 1e3),
+    ]);
+    qtable.row(&[
+        "submit→exec start (incl. batcher)".into(),
+        format!("{:.2}", m.queue_latency.mean() * 1e3),
+        format!("{:.2}", m.queue_latency.quantile(0.95) * 1e3),
+    ]);
+    qtable.row(&[
+        "end-to-end".into(),
+        format!("{:.2}", m.e2e_latency.mean() * 1e3),
+        format!("{:.2}", m.e2e_latency.quantile(0.95) * 1e3),
+    ]);
+    println!(
+        "\n§Perf — work-queue scheduler decomposition \
+         ({burst}-request no-cache burst, DDIM-{qsteps}, 2 replicas, peak queue depth {})",
+        Metrics::get(&m.queue_peak_depth)
+    );
+    qtable.print();
+    std::fs::write("bench_out/perf_engine_queue.csv", qtable.to_csv())?;
+    coord.shutdown();
     Ok(())
 }

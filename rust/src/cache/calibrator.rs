@@ -15,9 +15,13 @@ use crate::solvers::SolverKind;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+/// Settings for one calibration pass over a (family, solver, steps)
+/// configuration.
 #[derive(Clone, Debug)]
 pub struct CalibrationConfig {
+    /// solver whose trajectory the errors are measured along.
     pub solver: SolverKind,
+    /// sampling steps of the calibrated configuration.
     pub steps: usize,
     /// maximum reuse gap considered (paper: 3 for DiT/StableAudio, 5 for
     /// OpenSora).
@@ -27,10 +31,13 @@ pub struct CalibrationConfig {
     /// CFG scale during calibration (1.0 = unconditional, the DiT
     /// protocol; >1 = conditional, the OpenSora/StableAudio protocol).
     pub cfg_scale: f32,
+    /// seed for conditioning draws and initial latents.
     pub seed: u64,
 }
 
 impl CalibrationConfig {
+    /// Paper defaults (k_max 3, 10 samples, unconditional) for a
+    /// (solver, steps) pair.
     pub fn new(solver: SolverKind, steps: usize) -> CalibrationConfig {
         CalibrationConfig { solver, steps, k_max: 3, num_samples: 10, cfg_scale: 1.0, seed: 7 }
     }

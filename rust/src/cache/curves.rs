@@ -22,12 +22,15 @@ use crate::util::json::{parse, Json};
 /// Streaming mean/variance accumulator (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Acc {
+    /// number of observations pushed.
     pub n: u64,
+    /// running mean of the observations.
     pub mean: f64,
     m2: f64,
 }
 
 impl Acc {
+    /// Fold one observation into the running mean/variance.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -35,6 +38,7 @@ impl Acc {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Unbiased sample variance (0 with fewer than two observations).
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -43,6 +47,7 @@ impl Acc {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -60,10 +65,15 @@ impl Acc {
 /// Error curves for one (family, solver, steps) calibration run.
 #[derive(Clone, Debug)]
 pub struct ErrorCurves {
+    /// model family the curves were calibrated on.
     pub family: String,
+    /// solver name (the schedule is trajectory-specific).
     pub solver: String,
+    /// sampling steps of the calibrated configuration.
     pub steps: usize,
+    /// maximum reuse gap recorded.
     pub k_max: usize,
+    /// calibration samples accumulated so far.
     pub num_samples: usize,
     /// grouped over depth: branch type → `[steps][k_max]` accumulators;
     /// entry `[s][k-1]` is E(s, k), defined for s ≥ k (else n == 0).
@@ -73,6 +83,7 @@ pub struct ErrorCurves {
 }
 
 impl ErrorCurves {
+    /// Empty curves for a configuration (all accumulators at n = 0).
     pub fn new(
         family: &str,
         solver: &str,
@@ -119,6 +130,7 @@ impl ErrorCurves {
         }
     }
 
+    /// Mean error for a per-site curve (`"block.branch"`) at (step, k).
     pub fn site_mean(&self, site: &str, step: usize, k: usize) -> Option<f64> {
         let acc = &self.per_site.get(site)?[step][k - 1];
         if acc.n == 0 {
@@ -128,6 +140,7 @@ impl ErrorCurves {
         }
     }
 
+    /// Branch types the grouped curves cover, in sorted order.
     pub fn branch_types(&self) -> Vec<String> {
         self.grouped.keys().cloned().collect()
     }
@@ -236,6 +249,7 @@ impl ErrorCurves {
 
     // ---- JSON persistence ---------------------------------------------------
 
+    /// Serialise the curves (counts, means, stds) for on-disk caching.
     pub fn to_json(&self) -> Json {
         let ser_curves = |m: &BTreeMap<String, Vec<Vec<Acc>>>| {
             Json::Obj(
@@ -272,6 +286,8 @@ impl ErrorCurves {
             .set("per_site", ser_curves(&self.per_site))
     }
 
+    /// Parse curves serialised by [`ErrorCurves::to_json`] (variance is
+    /// reconstructed from the stored std — lossy but sufficient).
     pub fn parse_str(text: &str) -> Result<ErrorCurves> {
         let j = parse(text).map_err(|e| crate::err!("curves json: {e}"))?;
         let de_curves = |v: &Json| -> Result<BTreeMap<String, Vec<Vec<Acc>>>> {

@@ -10,6 +10,7 @@
 //!    executes; baselines (FORA, alternate/L2C-proxy, no-cache) are
 //!    constructors on the same type so every bench compares like with
 //!    like.
+#![deny(missing_docs)]
 
 pub mod calibrator;
 pub mod curves;

@@ -13,13 +13,22 @@ use crate::util::error::Result;
 
 use crate::util::json::{parse, Json};
 
+/// What one (step, branch) site does at inference time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Decision {
+    /// run the branch executables and refill the layer cache.
     Compute,
-    Reuse { filled_at: usize },
+    /// skip execution; re-inject the delta cached at an earlier step.
+    Reuse {
+        /// the step whose computed delta is re-injected. Invariant
+        /// ([`Schedule::validate`]): strictly in the past, computed,
+        /// and the *latest* compute before this step.
+        filled_at: usize,
+    },
 }
 
 impl Decision {
+    /// `true` for [`Decision::Compute`].
     pub fn is_compute(&self) -> bool {
         matches!(self, Decision::Compute)
     }
@@ -28,9 +37,14 @@ impl Decision {
 /// Schedule over (step, branch-type). `decisions[step][bt]`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Schedule {
+    /// human-readable policy name (`no-cache`, `fora-n2`,
+    /// `smoothcache-a0.35`, …) used in bench tables.
     pub name: String,
+    /// solver steps the schedule spans.
     pub steps: usize,
+    /// branch-type column order of `decisions`.
     pub branch_types: Vec<String>,
+    /// `decisions[step][bt]`; invariants in [`Schedule::validate`].
     pub decisions: Vec<Vec<Decision>>,
 }
 
@@ -70,10 +84,12 @@ impl Schedule {
         s
     }
 
+    /// Number of branch-type columns.
     pub fn n_branch_types(&self) -> usize {
         self.branch_types.len()
     }
 
+    /// The decision at (step, branch type); panics on an unknown type.
     pub fn decision(&self, step: usize, branch_type: &str) -> Decision {
         let bt = self
             .branch_types
@@ -169,6 +185,7 @@ impl Schedule {
 
     // ---- JSON round-trip ----------------------------------------------------
 
+    /// Serialise (compute = -1, reuse = the fill step).
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
             .decisions
@@ -191,6 +208,7 @@ impl Schedule {
             .set("decisions", Json::Arr(rows))
     }
 
+    /// Deserialise and [`Schedule::validate`] a schedule.
     pub fn from_json(j: &Json) -> Result<Schedule> {
         let name = j.req("name")?.as_str().unwrap_or("schedule").to_string();
         let steps = j.req("steps")?.as_usize().ok_or_else(|| crate::err!("steps"))?;
@@ -223,6 +241,7 @@ impl Schedule {
         Ok(s)
     }
 
+    /// Parse a schedule from JSON text (see [`Schedule::to_json`]).
     pub fn parse_str(text: &str) -> Result<Schedule> {
         Schedule::from_json(&parse(text).map_err(|e| crate::err!("schedule json: {e}"))?)
     }

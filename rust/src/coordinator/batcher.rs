@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 
 use super::request::{BatchKey, InFlight};
 
+/// Tunables for the grouping policy (sizes come from the manifest).
 pub struct BatcherConfig {
     /// AOT-compiled batch sizes (ascending), from the manifest.
     pub supported_batches: Vec<usize>,
@@ -46,16 +47,22 @@ struct Group {
 }
 
 /// Accumulates requests per compatibility key; yields flushable batches.
+/// Invariant: every yielded batch is homogeneous in [`BatchKey`] and
+/// never exceeds the effective max size (propcheck-locked in
+/// `tests/coordinator_props.rs`).
 pub struct Batcher {
+    /// The grouping tunables this batcher was built with.
     pub config: BatcherConfig,
     groups: HashMap<BatchKey, Group>,
 }
 
 impl Batcher {
+    /// An empty batcher with the given tunables.
     pub fn new(config: BatcherConfig) -> Batcher {
         Batcher { config, groups: HashMap::new() }
     }
 
+    /// Requests currently buffered across all groups (not yet flushed).
     pub fn pending(&self) -> usize {
         self.groups.values().map(|g| g.items.len()).sum()
     }

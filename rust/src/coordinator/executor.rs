@@ -1,19 +1,22 @@
 //! The executor replicas: each executor thread owns its *own* engine
 //! (and thus its own backend instance — PJRT handles are thread-bound,
 //! so that backend runs exactly one replica; the reference backend
-//! replicates freely), resolves caching policies to concrete schedules
-//! through the pool-shared [`ScheduleStore`] (calibrating on demand,
-//! exactly once per configuration across all replicas), and runs
-//! batched generations.
+//! replicates freely), pulls batches from the coordinator's shared
+//! [`WorkQueue`] whenever it goes idle,
+//! resolves caching policies to concrete schedules through the
+//! pool-shared [`ScheduleStore`] (calibrating on demand, exactly once
+//! per configuration across all replicas), and runs batched
+//! generations.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::mpsc::Receiver;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::util::error::Result;
 
 use super::metrics::Metrics;
+use super::queue::WorkQueue;
 use super::request::{InFlight, Policy, Request, Response};
 use crate::cache::{calibrate, CalibrationConfig, Decision, ErrorCurves, Schedule};
 use crate::model::Engine;
@@ -22,14 +25,18 @@ use crate::solvers::SolverRun;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+/// Per-replica configuration (cloned into every executor thread).
 #[derive(Clone)]
 pub struct ExecutorConfig {
+    /// artifact directory the replica's engine opens (manifest,
+    /// weights, executables — or nothing, for the builtin geometry).
     pub artifacts_dir: std::path::PathBuf,
     /// families to preload at startup (lazy for the rest).
     pub preload: Vec<String>,
     /// calibration samples for on-demand SmoothCache calibration
     /// (paper: 10; servers may trade a few for startup time).
     pub calib_samples: usize,
+    /// seed for on-demand calibration passes.
     pub calib_seed: u64,
     /// optional directory with pre-computed calibration curves
     /// (artifacts/calibration/{family}_{solver}_{steps}.json).
@@ -51,9 +58,16 @@ pub fn lock_store(store: &SharedScheduleStore) -> MutexGuard<'_, ScheduleStore> 
 }
 
 /// Caches calibration curves and resolved schedules across requests.
+/// Invariant: entries are only ever inserted fully-formed, so any
+/// observable state is consistent even after a panic mid-request.
 pub struct ScheduleStore {
+    /// calibration samples for on-demand calibration (see
+    /// [`ExecutorConfig::calib_samples`]).
     pub calib_samples: usize,
+    /// seed for on-demand calibration passes.
     pub calib_seed: u64,
+    /// optional directory of pre-computed calibration curves, checked
+    /// before calibrating.
     pub curves_dir: Option<std::path::PathBuf>,
     curves: HashMap<(String, String, usize), ErrorCurves>,
     schedules: HashMap<(String, String, usize, String), Schedule>,
@@ -61,6 +75,7 @@ pub struct ScheduleStore {
 }
 
 impl ScheduleStore {
+    /// An empty store with the given calibration settings.
     pub fn new(
         calib_samples: usize,
         calib_seed: u64,
@@ -92,6 +107,34 @@ impl ScheduleStore {
             1.0
         } else {
             7.0
+        }
+    }
+
+    /// Whether calibration curves for (family, solver, steps) are
+    /// already available — in memory, or pre-computed on disk under
+    /// `curves_dir` — i.e. a `smooth:*` request for this configuration
+    /// would resolve without paying a calibration. The batcher uses
+    /// this (via `try_lock`, never blocking behind an in-flight
+    /// calibration) to pick the work-queue lane.
+    pub fn has_curves(
+        &self,
+        family: &str,
+        solver: crate::solvers::SolverKind,
+        steps: usize,
+    ) -> bool {
+        if self
+            .curves
+            .contains_key(&(family.to_string(), solver.name().to_string(), steps))
+        {
+            return true;
+        }
+        // disk-cached curves load without calibrating (see `curves()`),
+        // so they make the key just as hot as in-memory ones
+        match &self.curves_dir {
+            Some(dir) => dir
+                .join(format!("{family}_{}_{steps}.json", solver.name()))
+                .exists(),
+            None => false,
         }
     }
 
@@ -190,13 +233,21 @@ impl ScheduleStore {
     }
 }
 
+/// A caching policy resolved to the concrete artifact the pipeline
+/// executes (invariant: resolved schedules always pass
+/// [`Schedule::validate`]).
 pub enum ResolvedPolicy {
+    /// No caching: every branch computes at every step.
     None,
+    /// One depth-grouped [`Schedule`] (the paper's decision shape).
     Grouped(Schedule),
+    /// Per-site decisions keyed `"block.branch"` (grouping ablation and
+    /// δ-DiT-style baselines).
     PerSite(BTreeMap<String, Vec<Decision>>),
 }
 
 impl ResolvedPolicy {
+    /// Borrow as the [`CacheMode`] the pipeline's generate loop takes.
     pub fn as_mode(&self) -> CacheMode<'_> {
         match self {
             ResolvedPolicy::None => CacheMode::None,
@@ -253,22 +304,40 @@ pub fn execute_batch(
     }
     let x_init = Tensor::cat0(&refs);
 
-    // NoCache needs no store state — skip the shared lock entirely so a
-    // replica calibrating a smooth:α config never stalls no-cache
-    // traffic on its siblings. (Policies that *do* resolve still share
-    // one lock, and calibration deliberately runs under it: that is what
-    // makes "calibrate once per config" hold across the pool.)
-    let resolved = if matches!(req0.policy, Policy::NoCache) {
-        ResolvedPolicy::None
-    } else {
-        lock_store(store).resolve(
+    // Calibration-free policies are pure functions of the manifest
+    // geometry — resolve them WITHOUT the shared store lock, so a
+    // replica calibrating a smooth:α config can never stall them on its
+    // siblings. This is what makes the work queue's priority lane a real
+    // no-head-of-line-blocking guarantee (ADR-002): overtaking in the
+    // queue would be worthless if the batch then parked on the store
+    // mutex a calibration holds. Only smooth:* policies take the lock,
+    // and calibration deliberately runs under it: that is what makes
+    // "calibrate once per config" hold across the pool. (Residual,
+    // documented in ADR-002: an already-calibrated smooth key can still
+    // wait behind an in-flight calibration of a *different* smooth key.)
+    let resolved = match &req0.policy {
+        Policy::NoCache => ResolvedPolicy::None,
+        Policy::Fora(n) => {
+            ResolvedPolicy::Grouped(Schedule::fora(req0.steps, &fm.branch_types, *n))
+        }
+        Policy::Alternate => {
+            ResolvedPolicy::Grouped(Schedule::alternate(req0.steps, &fm.branch_types))
+        }
+        Policy::DeltaDit(n) => ResolvedPolicy::PerSite(crate::cache::delta_dit(
+            req0.steps,
+            fm.depth,
+            &fm.branch_types,
+            *n,
+            0.5,
+        )),
+        Policy::Smooth(_) | Policy::SmoothPerSite(_) => lock_store(store).resolve(
             engine,
             Some(metrics),
             &family,
             req0.solver,
             req0.steps,
             &req0.policy,
-        )?
+        )?,
     };
     let gen_cfg = GenConfig::new(&family, req0.solver, req0.steps)
         .with_cfg(req0.cfg_scale)
@@ -304,13 +373,19 @@ pub fn execute_batch(
 }
 
 /// One executor replica's loop: opens its own engine on this thread,
-/// then drains its batch channel until it closes. `worker` is the
-/// replica index (used for log prefixes and per-replica metrics).
+/// then pulls batches from the shared work queue until the queue is
+/// closed and drained — the pull model means a replica busy with a
+/// long calibration simply stops pulling, and can never
+/// head-of-line-block batches a sibling could serve. `worker` is the
+/// replica index (used for log prefixes); `live` counts replicas whose
+/// engine opened, so the *last* replica to fail startup stays behind
+/// to fail queued requests instead of letting them hang.
 pub fn run_executor(
     worker: usize,
     config: ExecutorConfig,
     supported_batches: Vec<usize>,
-    rx: Receiver<Vec<InFlight>>,
+    queue: Arc<WorkQueue>,
+    live: Arc<AtomicUsize>,
     metrics: Arc<Metrics>,
     store: SharedScheduleStore,
 ) {
@@ -318,10 +393,18 @@ pub fn run_executor(
         Ok(e) => e,
         Err(e) => {
             eprintln!("executor[{worker}]: failed to open engine: {e:#}");
-            // fail every incoming request
-            for batch in rx {
-                for it in batch {
-                    let _ = it.reply.send(Err(crate::err!("engine unavailable")));
+            // With a shared queue a broken replica must NOT keep
+            // pulling (it would race healthy siblings for work just to
+            // fail it). Leave the pool — unless every replica is gone,
+            // in which case drain-and-fail so requests error instead of
+            // hanging until shutdown.
+            if live.fetch_sub(1, Ordering::SeqCst) == 1 {
+                while let Some(q) = queue.pop() {
+                    Metrics::set(&metrics.queue_depth, queue.len() as u64);
+                    for it in q.batch {
+                        Metrics::inc(&metrics.requests_failed);
+                        let _ = it.reply.send(Err(crate::err!("engine unavailable")));
+                    }
                 }
             }
             return;
@@ -333,7 +416,10 @@ pub fn run_executor(
         }
     }
 
-    for batch in rx {
+    while let Some(q) = queue.pop() {
+        Metrics::set(&metrics.queue_depth, queue.len() as u64);
+        metrics.queue_wait.observe(q.enqueued.elapsed().as_secs_f64());
+        let batch = q.batch;
         // keep reply handles in case of failure
         let ids: Vec<u64> = batch.iter().map(|b| b.request.id).collect();
         let replies: Vec<_> = batch.iter().map(|b| b.reply.clone()).collect();

@@ -18,6 +18,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram with 1ms·2^i bucket bounds.
     pub fn new() -> Histogram {
         // 1ms · 2^i buckets
         let bounds: Vec<f64> = (0..22).map(|i| 0.001 * 2f64.powi(i)).collect();
@@ -25,6 +26,7 @@ impl Histogram {
         Histogram { bounds, buckets, sum_us: AtomicU64::new(0), count: AtomicU64::new(0) }
     }
 
+    /// Record one latency observation, in seconds.
     pub fn observe(&self, seconds: f64) {
         let idx = self
             .bounds
@@ -36,10 +38,12 @@ impl Histogram {
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Number of observations recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean of all observations (0 when empty).
     pub fn mean(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -73,33 +77,71 @@ pub struct Metrics {
     /// Size of the executor replica pool (set once at startup; 1 when
     /// the backend cannot replicate).
     pub executor_replicas: AtomicU64,
+    /// Requests accepted by [`super::Coordinator::submit`].
     pub requests_submitted: AtomicU64,
+    /// Requests answered with a successful response (each request is
+    /// answered exactly once; see `tests/coordinator_props.rs`).
     pub requests_completed: AtomicU64,
+    /// Requests answered with an execution error (admission rejections
+    /// count under [`Metrics::queue_rejections`] instead).
     pub requests_failed: AtomicU64,
+    /// Batches pulled from the work queue and executed.
     pub batches_executed: AtomicU64,
+    /// Padding slots added to reach an AOT-compiled batch size.
     pub padded_slots: AtomicU64,
+    /// Branch executions actually computed across all generations.
     pub branch_computes: AtomicU64,
+    /// Branch executions skipped by reusing a cached delta.
     pub branch_reuses: AtomicU64,
+    /// Calibration passes run (once per cold (family, solver, steps)).
     pub calibrations: AtomicU64,
+    /// Requests rejected at work-queue admission because the queue was
+    /// full (`--queue-depth`); surfaced to clients as `overloaded:`
+    /// errors (docs/protocol.md).
+    pub queue_rejections: AtomicU64,
+    /// Requests currently waiting in the shared work queue (gauge,
+    /// refreshed on every push/pop).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of [`Metrics::queue_depth`] since startup.
+    pub queue_peak_depth: AtomicU64,
     /// end-to-end (submit → response) latency.
     pub e2e_latency: Histogram,
-    /// queueing delay (submit → batch execution start).
+    /// queueing delay (submit → batch execution start; includes batcher
+    /// grouping time).
     pub queue_latency: Histogram,
+    /// work-queue wait per batch (queue admission → pulled by an
+    /// executor) — the scheduler's own contribution to latency,
+    /// reported next to [`Metrics::exec_latency`] by the serving
+    /// benches.
+    pub queue_wait: Histogram,
     /// model execution time per batch.
     pub exec_latency: Histogram,
 }
 
 impl Metrics {
+    /// Increment a counter by one.
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Add `v` to a counter.
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Read a counter.
     pub fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite a gauge (last-writer-wins; used for queue depth).
+    pub fn set(gauge: &AtomicU64, v: u64) {
+        gauge.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise a high-water-mark gauge to at least `v`.
+    pub fn raise(gauge: &AtomicU64, v: u64) {
+        gauge.fetch_max(v, Ordering::Relaxed);
     }
 
     /// Mean request batch occupancy (real requests / executed slots).
@@ -113,19 +155,30 @@ impl Metrics {
         }
     }
 
+    /// One-line human-readable snapshot of every counter (the payload
+    /// of the server's `{"cmd": "metrics"}` command; field list in
+    /// docs/protocol.md).
     pub fn summary(&self) -> String {
         format!(
-            "workers={} requests={} completed={} failed={} batches={} occupancy={:.2} \
-             e2e_mean={:.3}s e2e_p95={:.3}s queue_mean={:.3}s skips={}/{}",
+            "workers={} requests={} completed={} failed={} rejected={} batches={} \
+             qdepth={} qpeak={} occupancy={:.2} \
+             e2e_mean={:.3}s e2e_p95={:.3}s queue_mean={:.3}s qwait_mean={:.3}s \
+             qwait_p95={:.3}s exec_mean={:.3}s skips={}/{}",
             Self::get(&self.executor_replicas).max(1),
             Self::get(&self.requests_submitted),
             Self::get(&self.requests_completed),
             Self::get(&self.requests_failed),
+            Self::get(&self.queue_rejections),
             Self::get(&self.batches_executed),
+            Self::get(&self.queue_depth),
+            Self::get(&self.queue_peak_depth),
             self.occupancy(),
             self.e2e_latency.mean(),
             self.e2e_latency.quantile(0.95),
             self.queue_latency.mean(),
+            self.queue_wait.mean(),
+            self.queue_wait.quantile(0.95),
+            self.exec_latency.mean(),
             Self::get(&self.branch_reuses),
             Self::get(&self.branch_computes) + Self::get(&self.branch_reuses),
         )
@@ -172,5 +225,20 @@ mod tests {
         let m = Metrics::default();
         Metrics::inc(&m.requests_submitted);
         assert!(m.summary().contains("requests=1"));
+    }
+
+    #[test]
+    fn summary_reports_queue_counters() {
+        let m = Metrics::default();
+        Metrics::add(&m.queue_rejections, 3);
+        Metrics::set(&m.queue_depth, 5);
+        Metrics::raise(&m.queue_peak_depth, 5);
+        Metrics::raise(&m.queue_peak_depth, 2); // raise never lowers
+        m.queue_wait.observe(0.25);
+        let s = m.summary();
+        assert!(s.contains("rejected=3"), "{s}");
+        assert!(s.contains("qdepth=5"), "{s}");
+        assert!(s.contains("qpeak=5"), "{s}");
+        assert!(s.contains("qwait_mean=0.250s"), "{s}");
     }
 }

@@ -1,16 +1,15 @@
-//! L3 serving coordinator: router → dynamic batcher → executor pool.
+//! L3 serving coordinator: dynamic batcher → shared work queue →
+//! executor pool.
 //!
 //! Thread topology (no tokio offline; DESIGN.md §3):
 //!
 //! ```text
-//!  clients ──submit()──► [batcher thread] ──batches──► [executor 0]
-//!                         groups by key,      │         [executor 1]
-//!                         flushes on size     │  ...      ...
-//!                         or deadline         └──────► [executor N-1]
-//!                         dispatches batches            each owns its own
-//!                         round-robin                   engine (backend
-//!                                                       replica); all share
-//!                                                       one schedule store
+//!  clients ──submit()──► [batcher thread] ──batches──► [work queue] ◄──pull── [executor 0]
+//!                         groups by key,               bounded,     ◄──pull── [executor 1]
+//!                         flushes on size              2 lanes       ...        ...
+//!                         or deadline                 (prio|normal) ◄──pull── [executor N-1]
+//!                                                                              each owns its
+//!                                                                              own engine
 //! ```
 //!
 //! Batching remains the primary concurrency mechanism (as in the
@@ -19,17 +18,27 @@
 //! per worker thread, each of which also fans its GEMM row panels over
 //! the shared compute pool ([`crate::tensor::gemm`]). Backends with
 //! thread-bound device handles (PJRT) transparently degrade to a pool
-//! of one ([`crate::runtime::backend_supports_replicas`]). Calibration
-//! state lives in one [`executor::SharedScheduleStore`] behind an
-//! `Arc<Mutex>`, so "calibrate once per configuration" holds at any
-//! pool size.
+//! of one ([`crate::runtime::backend_supports_replicas`]).
+//!
+//! Between the batcher and the pool sits one bounded, two-lane
+//! [`queue::WorkQueue`] (ADR-002): executors *pull* their next batch
+//! when free, so a replica stuck in a long calibration stops pulling
+//! instead of starving a private channel; batches that need no cold
+//! calibration take the priority lane and overtake ones that do; and
+//! when the queue is full, new batches are rejected with an
+//! `overloaded:` error rather than queued without bound
+//! (`--queue-depth`, docs/protocol.md). Calibration state lives in one
+//! [`executor::SharedScheduleStore`] behind an `Arc<Mutex>`, so
+//! "calibrate once per configuration" holds at any pool size.
+#![deny(missing_docs)]
 
 pub mod batcher;
 pub mod executor;
 pub mod metrics;
+pub mod queue;
 pub mod request;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -39,23 +48,40 @@ use crate::util::error::Result;
 pub use batcher::{Batcher, BatcherConfig};
 pub use executor::{ExecutorConfig, ScheduleStore, SharedScheduleStore};
 pub use metrics::{Histogram, Metrics};
+pub use queue::{Lane, QueuedBatch, WorkQueue};
 pub use request::{BatchKey, InFlight, Policy, Request, Response};
 
+/// Everything [`Coordinator::start`] needs to bring the serving
+/// pipeline up.
 pub struct CoordinatorConfig {
+    /// Artifact directory every executor replica opens its engine on.
     pub artifacts_dir: std::path::PathBuf,
+    /// Families to preload in each replica at startup (lazy otherwise).
     pub preload: Vec<String>,
+    /// AOT-compiled batch sizes requests may be padded to (ascending).
     pub supported_batches: Vec<usize>,
+    /// Max time the oldest request in a batcher group may wait before a
+    /// deadline flush.
     pub max_wait: Duration,
+    /// Calibration samples for on-demand `smooth:*` calibration.
     pub calib_samples: usize,
+    /// Seed for on-demand calibration passes.
     pub calib_seed: u64,
+    /// Optional directory of pre-computed calibration curves.
     pub curves_dir: Option<std::path::PathBuf>,
     /// Executor replicas (engines) to run; clamped to 1 when the
     /// selected backend cannot replicate (PJRT). Default: the
     /// `SMOOTHCACHE_WORKERS` environment variable, else 2.
     pub workers: usize,
+    /// Work-queue admission bound, in *requests* waiting for an
+    /// executor (`--queue-depth`): pushes beyond it are rejected with
+    /// an `overloaded:` error. Default: the `SMOOTHCACHE_QUEUE_DEPTH`
+    /// environment variable, else 256.
+    pub queue_depth: usize,
 }
 
 impl CoordinatorConfig {
+    /// Defaults for serving out of `artifacts_dir` (see field docs).
     pub fn new(artifacts_dir: std::path::PathBuf) -> CoordinatorConfig {
         CoordinatorConfig {
             artifacts_dir,
@@ -66,11 +92,21 @@ impl CoordinatorConfig {
             calib_seed: 0xCA11B,
             curves_dir: None,
             workers: default_workers(),
+            queue_depth: default_queue_depth(),
         }
     }
 
+    /// Builder-style override of [`CoordinatorConfig::workers`]
+    /// (clamped to ≥ 1).
     pub fn with_workers(mut self, n: usize) -> CoordinatorConfig {
         self.workers = n.max(1);
+        self
+    }
+
+    /// Builder-style override of [`CoordinatorConfig::queue_depth`]
+    /// (clamped to ≥ 1).
+    pub fn with_queue_depth(mut self, depth: usize) -> CoordinatorConfig {
+        self.queue_depth = depth.max(1);
         self
     }
 }
@@ -83,10 +119,19 @@ fn default_workers() -> usize {
         .unwrap_or(2)
 }
 
+fn default_queue_depth() -> usize {
+    std::env::var("SMOOTHCACHE_QUEUE_DEPTH")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(256)
+}
+
 /// Handle to a running coordinator. Dropping it shuts the pipeline down
 /// (in-flight requests drain first).
 pub struct Coordinator {
     tx: Option<Sender<InFlight>>,
+    queue: Arc<WorkQueue>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     batcher_handle: Option<std::thread::JoinHandle<()>>,
@@ -94,6 +139,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Spawn the batcher thread, the shared work queue, and the
+    /// executor replica pool; returns once every thread is running.
     pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
         let metrics = Arc::new(Metrics::default());
         let (req_tx, req_rx) = channel::<InFlight>();
@@ -122,18 +169,21 @@ impl Coordinator {
             ecfg.calib_seed,
             ecfg.curves_dir.clone(),
         )));
-        let mut batch_txs = Vec::with_capacity(replicas);
+        let queue = Arc::new(WorkQueue::new(config.queue_depth));
+        let live = Arc::new(AtomicUsize::new(replicas));
         let mut executor_handles = Vec::with_capacity(replicas);
         for w in 0..replicas {
-            let (batch_tx, batch_rx) = channel::<Vec<InFlight>>();
-            batch_txs.push(batch_tx);
             let cfg_w = ecfg.clone();
             let supported = config.supported_batches.clone();
+            let q2 = Arc::clone(&queue);
+            let live2 = Arc::clone(&live);
             let m2 = Arc::clone(&metrics);
             let store_w = Arc::clone(&store);
             let handle = std::thread::Builder::new()
                 .name(format!("smoothcache-executor-{w}"))
-                .spawn(move || executor::run_executor(w, cfg_w, supported, batch_rx, m2, store_w))
+                .spawn(move || {
+                    executor::run_executor(w, cfg_w, supported, q2, live2, m2, store_w)
+                })
                 .map_err(|e| crate::err!("spawn executor {w}: {e}"))?;
             executor_handles.push(handle);
         }
@@ -142,13 +192,17 @@ impl Coordinator {
             supported_batches: config.supported_batches.clone(),
             max_wait: config.max_wait,
         };
+        let q_batcher = Arc::clone(&queue);
+        let store_batcher = Arc::clone(&store);
+        let m_batcher = Arc::clone(&metrics);
         let batcher_handle = std::thread::Builder::new()
             .name("smoothcache-batcher".into())
-            .spawn(move || run_batcher(bcfg, req_rx, batch_txs))
+            .spawn(move || run_batcher(bcfg, req_rx, q_batcher, store_batcher, m_batcher))
             .map_err(|e| crate::err!("spawn batcher: {e}"))?;
 
         Ok(Coordinator {
             tx: Some(req_tx),
+            queue,
             metrics,
             next_id: AtomicU64::new(1),
             batcher_handle: Some(batcher_handle),
@@ -156,11 +210,20 @@ impl Coordinator {
         })
     }
 
+    /// The coordinator's counters (live; shared with every thread).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
-    /// Submit a request; returns the reply channel immediately.
+    /// Requests currently waiting in the shared work queue.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Submit a request; returns the reply channel immediately. The
+    /// reply is either a [`Response`], an execution error, or — when
+    /// the work queue is at `--queue-depth` — an admission-control
+    /// rejection whose message starts with `overloaded:`.
     pub fn submit(&self, mut request: Request) -> Receiver<Result<Response>> {
         if request.id == 0 {
             request.id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -189,8 +252,11 @@ impl Coordinator {
     fn do_shutdown(&mut self) {
         drop(self.tx.take());
         if let Some(h) = self.batcher_handle.take() {
-            let _ = h.join(); // closes every executor channel on exit
+            let _ = h.join(); // drains its groups into the queue, then closes it
         }
+        // Defensive: if the batcher thread died without closing the
+        // queue, close it here so executor joins cannot hang.
+        self.queue.close();
         for h in self.executor_handles.drain(..) {
             let _ = h.join();
         }
@@ -203,42 +269,69 @@ impl Drop for Coordinator {
     }
 }
 
-/// Round-robin router over the executor pool. Each flushed batch (one
-/// [`BatchKey`] by construction) takes the next replica in rotation, so
-/// even a workload with a *single* key — the common production shape —
-/// keeps every replica busy once multiple batches are in flight.
-/// Replica choice never affects results (replicas are identical
-/// engines over the shared schedule store), so no key affinity is
-/// needed, and the router carries no per-key state to bound.
-///
-/// Known tradeoff: rotation into per-replica channels can queue a batch
-/// behind a replica that is busy (e.g. mid-calibration) while a sibling
-/// idles. A shared work queue (`Mutex<Receiver>`, as `ThreadPool` uses)
-/// would dispatch load-aware; tracked in ROADMAP.md.
-struct Router {
-    next: usize,
-    n: usize,
-}
-
-impl Router {
-    fn new(n: usize) -> Router {
-        Router { next: 0, n: n.max(1) }
-    }
-
-    fn route(&mut self) -> usize {
-        let idx = self.next % self.n;
-        self.next += 1;
-        idx
+/// Pick the work-queue lane for a flushed batch: priority for every
+/// policy that resolves without a cold calibration (`no-cache`,
+/// `fora:*`, `alternate`, `delta-dit:*`, and `smooth:*` whose curves
+/// are already cached), normal for `smooth:*` keys that still need one.
+/// Uses `try_lock` on the schedule store: if a calibration currently
+/// holds the lock we cannot cheaply tell whether *this* key is hot, and
+/// conservatively treat it as cold — the batcher must never block
+/// behind a calibration, that is the exact head-of-line failure the
+/// queue exists to prevent.
+fn lane_for(store: &SharedScheduleStore, request: &Request) -> Lane {
+    match &request.policy {
+        Policy::NoCache | Policy::Fora(_) | Policy::Alternate | Policy::DeltaDit(_) => {
+            Lane::Priority
+        }
+        Policy::Smooth(_) | Policy::SmoothPerSite(_) => {
+            let hot = match store.try_lock() {
+                Ok(s) => s.has_curves(&request.family, request.solver, request.steps),
+                Err(std::sync::TryLockError::Poisoned(p)) => {
+                    p.into_inner()
+                        .has_curves(&request.family, request.solver, request.steps)
+                }
+                Err(std::sync::TryLockError::WouldBlock) => false,
+            };
+            if hot {
+                Lane::Priority
+            } else {
+                Lane::Normal
+            }
+        }
     }
 }
 
 /// Batcher thread: pull requests, group, flush on size or deadline,
-/// dispatch each flushed batch to the next executor replica in rotation.
-fn run_batcher(config: BatcherConfig, rx: Receiver<InFlight>, txs: Vec<Sender<Vec<InFlight>>>) {
+/// push each flushed batch onto the shared work queue (rejecting every
+/// request of a batch the queue cannot admit). On channel disconnect it
+/// drains the remaining groups into the queue and closes it, which in
+/// turn lets the executor pool drain and exit.
+fn run_batcher(
+    config: BatcherConfig,
+    rx: Receiver<InFlight>,
+    queue: Arc<WorkQueue>,
+    store: SharedScheduleStore,
+    metrics: Arc<Metrics>,
+) {
     let mut batcher = Batcher::new(config);
-    let mut router = Router::new(txs.len());
-    let dispatch = |router: &mut Router, batch: Vec<InFlight>| -> bool {
-        txs[router.route()].send(batch).is_ok()
+    let dispatch = |batch: Vec<InFlight>| {
+        let lane = lane_for(&store, &batch[0].request);
+        match queue.push(batch, lane) {
+            Ok(()) => {
+                let depth = queue.len() as u64;
+                Metrics::set(&metrics.queue_depth, depth);
+                Metrics::raise(&metrics.queue_peak_depth, depth);
+            }
+            Err(rejected) => {
+                Metrics::add(&metrics.queue_rejections, rejected.len() as u64);
+                let bound = queue.depth();
+                for it in rejected {
+                    let _ = it.reply.send(Err(crate::err!(
+                        "overloaded: work queue full ({bound} requests); retry later"
+                    )));
+                }
+            }
+        }
     };
     loop {
         let now = Instant::now();
@@ -247,30 +340,24 @@ fn run_batcher(config: BatcherConfig, rx: Receiver<InFlight>, txs: Vec<Sender<Ve
             Ok(item) => {
                 let now = Instant::now();
                 if let Some(batch) = batcher.push(item, now) {
-                    if !dispatch(&mut router, batch) {
-                        return;
-                    }
+                    dispatch(batch);
                 }
                 for batch in batcher.poll(now) {
-                    if !dispatch(&mut router, batch) {
-                        return;
-                    }
+                    dispatch(batch);
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                 for batch in batcher.poll(Instant::now()) {
-                    if !dispatch(&mut router, batch) {
-                        return;
-                    }
+                    dispatch(batch);
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                // drain remaining groups, then stop
+                // graceful drain: flush remaining groups, then close the
+                // queue so executors drain it and exit
                 for batch in batcher.drain() {
-                    if !dispatch(&mut router, batch) {
-                        return;
-                    }
+                    dispatch(batch);
                 }
+                queue.close();
                 return;
             }
         }
@@ -280,23 +367,42 @@ fn run_batcher(config: BatcherConfig, rx: Receiver<InFlight>, txs: Vec<Sender<Ve
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::Cond;
+    use crate::solvers::SolverKind;
 
-    #[test]
-    fn router_rotates_across_replicas() {
-        let mut r = Router::new(3);
-        // consecutive batches spread over the whole pool, then wrap —
-        // including for a single-key workload
-        assert_eq!(
-            (0..7).map(|_| r.route()).collect::<Vec<_>>(),
-            vec![0, 1, 2, 0, 1, 2, 0]
-        );
+    fn req(policy: Policy) -> Request {
+        Request {
+            id: 1,
+            family: "image".into(),
+            cond: Cond::Label(vec![1]),
+            solver: SolverKind::Ddim,
+            steps: 8,
+            cfg_scale: 1.0,
+            seed: 1,
+            policy,
+        }
     }
 
     #[test]
-    fn router_with_one_replica_routes_everything_to_it() {
-        let mut r = Router::new(1);
-        for _ in 0..4 {
-            assert_eq!(r.route(), 0);
+    fn lane_for_routes_calibration_free_policies_to_priority() {
+        let store: SharedScheduleStore =
+            Arc::new(Mutex::new(ScheduleStore::new(2, 7, None)));
+        for p in [Policy::NoCache, Policy::Fora(2), Policy::Alternate, Policy::DeltaDit(2)] {
+            assert_eq!(lane_for(&store, &req(p)), Lane::Priority);
         }
+        // cold smooth keys wait in the normal lane
+        assert_eq!(lane_for(&store, &req(Policy::Smooth(0.2))), Lane::Normal);
+        assert_eq!(lane_for(&store, &req(Policy::SmoothPerSite(0.2))), Lane::Normal);
+    }
+
+    #[test]
+    fn lane_for_is_conservative_while_store_is_locked() {
+        let store: SharedScheduleStore =
+            Arc::new(Mutex::new(ScheduleStore::new(2, 7, None)));
+        let guard = store.lock().unwrap(); // a "calibration in flight"
+        assert_eq!(lane_for(&store, &req(Policy::Smooth(0.2))), Lane::Normal);
+        // lock never blocks lane selection for calibration-free policies
+        assert_eq!(lane_for(&store, &req(Policy::NoCache)), Lane::Priority);
+        drop(guard);
     }
 }

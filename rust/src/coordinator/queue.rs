@@ -1,0 +1,299 @@
+//! The shared pull-model work queue between the batcher and the
+//! executor replica pool (ADR-002).
+//!
+//! One bounded, two-lane MPMC queue replaces the per-replica channels
+//! the round-robin `Router` used to feed: the batcher pushes every
+//! flushed batch here, and each executor pulls its next batch the
+//! moment it goes idle. A replica stuck in a long calibration simply
+//! stops pulling — it can no longer head-of-line-block batches a
+//! sibling could serve, which was the failure mode recorded in
+//! ROADMAP.md after the PR 2 review.
+//!
+//! Three properties the queue maintains:
+//!
+//! * **Bounded depth / admission control** — at most `depth` *requests*
+//!   (summed over queued batches) wait at any time. A push that would
+//!   exceed the bound is rejected and the whole batch handed back to
+//!   the caller, which fails each request with a well-formed
+//!   `overloaded:` error instead of letting latency grow without
+//!   bound (the backpressure story; see docs/protocol.md). An empty
+//!   queue always admits one batch regardless of its size, so a
+//!   `depth` smaller than the largest supported batch can never wedge
+//!   the pipeline.
+//! * **Priority lane** — batches whose policy needs no cold
+//!   calibration (`no-cache`, `fora`, `alternate`, `delta-dit`, and
+//!   `smooth:*` keys whose curves are already cached) overtake batches
+//!   that are about to pay a calibration, so cheap traffic never waits
+//!   behind an expensive cold key. Within a lane, order is FIFO. The
+//!   priority lane is served strictly first; under a sustained flood
+//!   of priority traffic a normal-lane batch waits until the flood
+//!   ebbs — bounded depth turns that starvation into admission
+//!   rejections rather than unbounded queueing (tradeoff recorded in
+//!   ADR-002).
+//! * **Graceful drain** — [`WorkQueue::close`] stops admissions while
+//!   letting executors drain everything already queued; [`WorkQueue::pop`]
+//!   returns `None` only once the queue is both closed and empty.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use super::request::InFlight;
+
+/// Which lane a batch enters the queue on. See the module docs for the
+/// overtaking semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// Served first: the batch's policy resolves without a cold
+    /// calibration, so an idle replica can run it immediately.
+    Priority,
+    /// Served when the priority lane is empty: the batch will trigger
+    /// (or wait on) an expensive calibration.
+    Normal,
+}
+
+/// A batch travelling through the queue, stamped at admission so the
+/// executor that pops it can account queue wait separately from
+/// execution time ([`super::Metrics::queue_wait`]).
+pub struct QueuedBatch {
+    /// The flushed batch (homogeneous in [`super::BatchKey`] by
+    /// construction — the batcher never mixes keys).
+    pub batch: Vec<InFlight>,
+    /// When [`WorkQueue::push`] admitted the batch.
+    pub enqueued: Instant,
+    /// The lane the batch was admitted on.
+    pub lane: Lane,
+}
+
+struct State {
+    prio: VecDeque<QueuedBatch>,
+    normal: VecDeque<QueuedBatch>,
+    /// Invariant: always equals the sum of `batch.len()` over both lanes.
+    queued_requests: usize,
+    open: bool,
+}
+
+/// Bounded two-lane MPMC work queue (`Mutex` + `Condvar`; no external
+/// crates offline). Producers ([`WorkQueue::push`]) never block —
+/// admission either succeeds or fails immediately. Consumers
+/// ([`WorkQueue::pop`]) block until a batch is available or the queue
+/// is closed and drained.
+pub struct WorkQueue {
+    depth: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// Poison recovery: the queue's internal lock is only ever held for a
+/// few pointer moves (no user code runs under it), so its state is
+/// always consistent even if a holder thread panicked.
+fn lock(m: &Mutex<State>) -> std::sync::MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl WorkQueue {
+    /// Create a queue admitting at most `depth` queued requests
+    /// (`depth` is clamped to ≥ 1).
+    pub fn new(depth: usize) -> WorkQueue {
+        WorkQueue {
+            depth: depth.max(1),
+            state: Mutex::new(State {
+                prio: VecDeque::new(),
+                normal: VecDeque::new(),
+                queued_requests: 0,
+                open: true,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// The configured admission bound, in requests.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Requests currently waiting (summed over queued batches in both
+    /// lanes; excludes batches already popped by an executor).
+    pub fn len(&self) -> usize {
+        lock(&self.state).queued_requests
+    }
+
+    /// `true` when no batch is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit a batch on `lane`, or hand it back when the queue is full
+    /// (or closed) so the caller can reject each request with an error.
+    /// Never blocks.
+    pub fn push(&self, batch: Vec<InFlight>, lane: Lane) -> Result<(), Vec<InFlight>> {
+        let mut st = lock(&self.state);
+        if !st.open {
+            return Err(batch);
+        }
+        let n = batch.len();
+        // admit-if-empty: a single batch larger than `depth` must still
+        // be servable, otherwise it could never run at any queue state
+        if st.queued_requests > 0 && st.queued_requests + n > self.depth {
+            return Err(batch);
+        }
+        st.queued_requests += n;
+        let q = QueuedBatch { batch, enqueued: Instant::now(), lane };
+        match lane {
+            Lane::Priority => st.prio.push_back(q),
+            Lane::Normal => st.normal.push_back(q),
+        }
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pull the next batch: priority lane first, FIFO within a lane.
+    /// Blocks while the queue is open and empty; returns `None` once
+    /// the queue is closed **and** fully drained (the executor's signal
+    /// to exit).
+    pub fn pop(&self) -> Option<QueuedBatch> {
+        let mut st = lock(&self.state);
+        loop {
+            let next = match st.prio.pop_front() {
+                Some(q) => Some(q),
+                None => st.normal.pop_front(),
+            };
+            if let Some(q) = next {
+                st.queued_requests -= q.batch.len();
+                return Some(q);
+            }
+            if !st.open {
+                return None;
+            }
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+    }
+
+    /// Stop admissions and wake every blocked consumer. Batches already
+    /// queued remain poppable (graceful drain); once they are gone,
+    /// [`WorkQueue::pop`] returns `None`. Idempotent.
+    pub fn close(&self) {
+        lock(&self.state).open = false;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Policy, Request};
+    use crate::model::Cond;
+    use crate::solvers::SolverKind;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn mk_batch(ids: &[u64]) -> Vec<InFlight> {
+        ids.iter()
+            .map(|&id| {
+                let (tx, rx) = channel();
+                std::mem::forget(rx); // keep the reply channel alive
+                InFlight {
+                    request: Request {
+                        id,
+                        family: "image".into(),
+                        cond: Cond::Label(vec![1]),
+                        solver: SolverKind::Ddim,
+                        steps: 4,
+                        cfg_scale: 1.0,
+                        seed: id,
+                        policy: Policy::NoCache,
+                    },
+                    submitted: Instant::now(),
+                    reply: tx,
+                }
+            })
+            .collect()
+    }
+
+    fn ids(q: &QueuedBatch) -> Vec<u64> {
+        q.batch.iter().map(|it| it.request.id).collect()
+    }
+
+    #[test]
+    fn fifo_within_lane_priority_overtakes() {
+        let q = WorkQueue::new(64);
+        q.push(mk_batch(&[1]), Lane::Normal).unwrap();
+        q.push(mk_batch(&[2]), Lane::Normal).unwrap();
+        q.push(mk_batch(&[3]), Lane::Priority).unwrap();
+        q.push(mk_batch(&[4]), Lane::Priority).unwrap();
+        assert_eq!(ids(&q.pop().unwrap()), vec![3]);
+        assert_eq!(ids(&q.pop().unwrap()), vec![4]);
+        assert_eq!(ids(&q.pop().unwrap()), vec![1]);
+        assert_eq!(ids(&q.pop().unwrap()), vec![2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn admission_rejects_when_full_and_hands_batch_back() {
+        let q = WorkQueue::new(2);
+        q.push(mk_batch(&[1, 2]), Lane::Priority).unwrap();
+        assert_eq!(q.len(), 2);
+        let rejected = q.push(mk_batch(&[3]), Lane::Priority).unwrap_err();
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].request.id, 3); // intact, caller can reply
+        assert_eq!(q.len(), 2); // rejection did not corrupt accounting
+        // draining frees capacity again
+        q.pop().unwrap();
+        q.push(mk_batch(&[4]), Lane::Normal).unwrap();
+    }
+
+    #[test]
+    fn empty_queue_admits_oversized_batch() {
+        let q = WorkQueue::new(1);
+        q.push(mk_batch(&[1, 2, 3]), Lane::Priority).unwrap();
+        // but a second batch is over the bound until the first drains
+        assert!(q.push(mk_batch(&[4]), Lane::Priority).is_err());
+        assert_eq!(ids(&q.pop().unwrap()), vec![1, 2, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = WorkQueue::new(8);
+        q.push(mk_batch(&[1]), Lane::Normal).unwrap();
+        q.push(mk_batch(&[2]), Lane::Priority).unwrap();
+        q.close();
+        // pushes after close are rejected…
+        assert!(q.push(mk_batch(&[3]), Lane::Priority).is_err());
+        // …but queued work still drains, priority first
+        assert_eq!(ids(&q.pop().unwrap()), vec![2]);
+        assert_eq!(ids(&q.pop().unwrap()), vec![1]);
+        assert!(q.pop().is_none());
+        assert!(q.pop().is_none()); // idempotent
+    }
+
+    #[test]
+    fn pop_blocks_until_a_push_arrives() {
+        let q = Arc::new(WorkQueue::new(8));
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            q2.push(mk_batch(&[7]), Lane::Normal).unwrap();
+        });
+        let t0 = Instant::now();
+        let got = q.pop().expect("batch");
+        assert_eq!(ids(&got), vec![7]);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+        assert!(got.enqueued.elapsed() < std::time::Duration::from_secs(5));
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(WorkQueue::new(8));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || q2.pop().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(consumer.join().unwrap(), "blocked pop must observe close");
+    }
+}

@@ -14,8 +14,11 @@ use crate::tensor::Tensor;
 /// trigger a one-time calibration per (family, solver, steps)).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Policy {
+    /// every branch computes at every step (the paper's baseline rows).
     NoCache,
+    /// FORA-style uniform caching: compute every n-th step.
     Fora(usize),
+    /// L2C-proxy: cache every other step.
     Alternate,
     /// the paper's method, α threshold (grouped decisions).
     Smooth(f64),
@@ -52,6 +55,7 @@ impl Policy {
         Err(crate::err!("unknown policy {s:?}"))
     }
 
+    /// Render the wire format [`Policy::parse`] accepts.
     pub fn wire(&self) -> String {
         match self {
             Policy::NoCache => "no-cache".into(),
@@ -67,13 +71,21 @@ impl Policy {
 /// One generation request (single sample; the batcher groups them).
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Unique id; 0 lets the coordinator assign one at submit time.
     pub id: u64,
+    /// Model family (`image`, `audio`, `video`).
     pub family: String,
+    /// Conditioning input (class label or prompt token ids).
     pub cond: Cond,
+    /// Diffusion solver to run.
     pub solver: SolverKind,
+    /// Sampling steps.
     pub steps: usize,
+    /// Classifier-free-guidance scale; 1.0 disables CFG.
     pub cfg_scale: f32,
+    /// Seed for the initial latent and stochastic solvers.
     pub seed: u64,
+    /// Caching policy to resolve and execute.
     pub policy: Policy,
 }
 
@@ -90,32 +102,50 @@ impl Request {
     }
 }
 
+/// The batching compatibility key (see [`Request::batch_key`]).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
+    /// Model family.
     pub family: String,
+    /// Diffusion solver.
     pub solver: SolverKind,
+    /// Sampling steps.
     pub steps: usize,
+    /// CFG scale in milli-units (so the key stays `Eq + Hash`).
     pub cfg_milli: u32,
+    /// Caching policy in wire form.
     pub policy: String,
 }
 
 /// Completed generation for one request.
 #[derive(Debug)]
 pub struct Response {
+    /// The request id this response answers.
     pub id: u64,
     /// `[1, …latent]`
     pub latent: Tensor,
+    /// Executed batch size after dynamic batching + padding.
     pub batch_size: usize,
+    /// Submit → batch-execution-start delay for this request.
     pub queue_seconds: f64,
+    /// Model execution time of the batch that served this request.
     pub exec_seconds: f64,
+    /// End-to-end submit → response time.
     pub total_seconds: f64,
+    /// Branch compute/reuse counters from the generation.
     pub gen_stats: GenStats,
 }
 
 /// A request travelling through the coordinator with its reply channel.
+#[derive(Debug)]
 pub struct InFlight {
+    /// The request itself.
     pub request: Request,
+    /// When the coordinator accepted the request.
     pub submitted: Instant,
+    /// Single-use reply channel back to the submitter. Invariant:
+    /// exactly one message is ever sent on it — a response, an
+    /// execution error, or an `overloaded:` admission rejection.
     pub reply: std::sync::mpsc::Sender<Result<Response>>,
 }
 

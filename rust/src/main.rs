@@ -68,6 +68,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("calib-samples", "6", "calibration samples for smooth policies")
         .flag("curves-dir", "", "directory of pre-computed calibration curves")
         .flag("workers", "2", "executor replicas (backend engines; PJRT clamps to 1)")
+        .flag("queue-depth", "256", "max requests waiting in the shared work queue before admission rejects with an overloaded error")
         .flag("threads", "0", "GEMM compute threads per process (0 = auto)")
         .flag("conn-threads", "4", "connection handler threads");
     let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
@@ -81,9 +82,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     cfg.max_wait = Duration::from_millis(args.u64("max-wait-ms").map_err(Error::msg)?);
     cfg.calib_samples = args.usize("calib-samples").map_err(Error::msg)?;
     cfg.workers = args.usize("workers").map_err(Error::msg)?.max(1);
+    cfg.queue_depth = args.usize("queue-depth").map_err(Error::msg)?.max(1);
     if !args.str("curves-dir").is_empty() {
         cfg.curves_dir = Some(args.string("curves-dir").into());
     }
+    let queue_depth = cfg.queue_depth;
     let coord = Arc::new(Coordinator::start(cfg)?);
     let server = Server::start(
         args.str("addr"),
@@ -91,10 +94,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         args.usize("conn-threads").map_err(Error::msg)?,
     )?;
     println!(
-        "smoothcache serving on {} (workers={}, threads={})",
+        "smoothcache serving on {} (workers={}, threads={}, queue-depth={})",
         server.addr,
         smoothcache::coordinator::Metrics::get(&coord.metrics().executor_replicas).max(1),
-        smoothcache::tensor::gemm::threads()
+        smoothcache::tensor::gemm::threads(),
+        queue_depth
     );
     println!("protocol: one JSON object per line; try {{\"cmd\": \"ping\"}}");
     // serve until killed

@@ -5,11 +5,16 @@
 //! `label` (image) or `prompt_ids` (audio/video); `return_latent`
 //! includes the generated latent in the response. Control commands:
 //! `{"cmd": "ping"}`, `{"cmd": "metrics"}`, `{"cmd": "shutdown"}`.
-//! Failures are answered in-line as `{"ok": false, "error": "…"}`.
+//! Failures are answered in-line as `{"ok": false, "error": "…"}`;
+//! admission-control rejections (the coordinator's work queue at
+//! `--queue-depth`, see [`crate::coordinator::queue`]) additionally
+//! carry `"overloaded": true` so clients can back off and retry
+//! rather than treating the reply as a permanent failure.
 //!
 //! The full wire contract (field semantics, defaults, batching
-//! guarantees, error shape) is specified in `docs/protocol.md` at the
-//! repository root — keep the two in sync when evolving the protocol.
+//! guarantees, error + overload shapes, metrics-summary fields) is
+//! specified in `docs/protocol.md` at the repository root — keep the
+//! two in sync when evolving the protocol.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -99,7 +104,19 @@ fn handle_line(coord: &Coordinator, line: &str, stop: &AtomicBool) -> String {
             }
             out.to_string()
         }
-        Err(e) => fail(format!("{e}")),
+        Err(e) => {
+            let msg = format!("{e}");
+            if msg.starts_with("overloaded:") {
+                // queue-admission rejection: mark it machine-readably so
+                // clients know to back off and retry (docs/protocol.md)
+                return Json::obj()
+                    .set("ok", false)
+                    .set("overloaded", true)
+                    .set("error", msg)
+                    .to_string();
+            }
+            fail(msg)
+        }
     }
 }
 

@@ -5,7 +5,7 @@
 //! string-chained [`Error`] type, a [`Result`] alias with a defaulted
 //! error parameter, a [`Context`] extension trait (`context` /
 //! `with_context` on both `Result` and `Option`), and the
-//! [`err!`](crate::err)/[`bail!`](crate::bail)/[`ensure!`](crate::ensure)
+//! `err!` / `bail!` / `ensure!`
 //! macros. Display renders the context chain outermost-first,
 //! `"loading manifest: reading \"…\": No such file"` style, so existing
 //! `{e}` / `{e:#}` call sites keep printing the full story.

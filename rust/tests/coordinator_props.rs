@@ -5,6 +5,13 @@
 //!     response carries its own request's latent geometry and nothing
 //!     fails; and directly at the batcher layer below), and
 //! (c) deadline flushes fire — partial groups never strand.
+//!
+//! Plus the ISSUE 3 shared-work-queue scheduler contracts:
+//! (d) a replica stuck in a long calibration does not delay batches a
+//!     sibling could serve (no head-of-line blocking), and
+//! (e) when the queue is full, admission control answers every
+//!     rejected request with a well-formed `overloaded:` error — it
+//!     never hangs or drops them.
 
 use std::time::{Duration, Instant};
 
@@ -111,6 +118,133 @@ fn prop_every_request_answered_exactly_once_any_worker_count() {
             Ok(())
         },
     );
+}
+
+fn image_request(steps: usize, seed: u64, policy: Policy) -> Request {
+    Request {
+        id: 0,
+        family: "image".into(),
+        cond: Cond::Label(vec![(seed % 10) as i32]),
+        solver: SolverKind::Ddim,
+        steps,
+        cfg_scale: 1.0,
+        seed,
+        policy,
+    }
+}
+
+/// ISSUE 3 tentpole contract: with one replica held inside a long
+/// calibration, warm (priority-lane) batches must be served by the
+/// idle sibling *while the calibration is still running*. Under the
+/// old round-robin per-replica channels roughly half of these batches
+/// queued behind the calibrating replica and completed only after it
+/// finished — exactly the head-of-line failure the shared pull queue
+/// removes.
+#[test]
+fn stuck_calibration_does_not_delay_warm_batches_on_siblings() {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(2);
+    cfg.max_wait = Duration::from_millis(5);
+    cfg.calib_samples = 8; // deliberately long: 8 samples × 16 steps
+    let coord = Coordinator::start(cfg).expect("coordinator");
+
+    // cold smooth key → normal lane → one replica calibrates (generous
+    // alpha: any populated error cell below it yields reuse, so skips
+    // are guaranteed without pinning the untrained model's error scale)
+    let cold_rx = coord.submit(image_request(16, 1, Policy::Smooth(2.0)));
+
+    // wait until a replica is demonstrably inside the calibration
+    let t0 = Instant::now();
+    while Metrics::get(&coord.metrics().calibrations) == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "calibration never started"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // warm traffic on the priority lane: both no-cache (no resolution at
+    // all) AND fora:2 (a *resolving* calibration-free policy — it must
+    // resolve without touching the store lock the calibration holds,
+    // or the sibling would park on the mutex and the pool would be
+    // head-of-line-blocked anyway)
+    let warm_rxs: Vec<_> = (0..2)
+        .map(|i| coord.submit(image_request(2, 10 + i, Policy::NoCache)))
+        .chain((0..2).map(|i| coord.submit(image_request(2, 20 + i, Policy::Fora(2)))))
+        .collect();
+    for rx in &warm_rxs {
+        rx.recv_timeout(Duration::from_secs(120))
+            .expect("warm request hung behind the calibrating replica")
+            .expect("warm request failed");
+    }
+    // the sharp part: every warm response arrived while the cold
+    // request was still in flight
+    match cold_rx.try_recv() {
+        Err(std::sync::mpsc::TryRecvError::Empty) => {}
+        other => panic!(
+            "cold request finished before the warm ones were all served: {other:?}"
+        ),
+    }
+    let cold = cold_rx
+        .recv_timeout(Duration::from_secs(300))
+        .expect("cold request hung")
+        .expect("cold request failed");
+    assert!(cold.gen_stats.skip_fraction() > 0.0, "smooth α=2.0 should skip");
+
+    let m = coord.metrics();
+    assert_eq!(Metrics::get(&m.calibrations), 1);
+    assert_eq!(Metrics::get(&m.requests_failed), 0);
+    assert_eq!(Metrics::get(&m.queue_rejections), 0);
+    assert!(m.queue_wait.count() > 0, "executors must account queue wait");
+    coord.shutdown();
+}
+
+/// ISSUE 3 admission-control contract: a burst far beyond
+/// `--queue-depth` gets its overflow *rejected* with a well-formed
+/// `overloaded:` error — rejected requests are answered immediately,
+/// never hung, and the admitted ones still complete.
+#[test]
+fn queue_full_rejects_with_well_formed_overloaded_error() {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir())
+        .with_workers(1)
+        .with_queue_depth(1);
+    cfg.max_wait = Duration::from_millis(1);
+    let coord = Coordinator::start(cfg).expect("coordinator");
+
+    // 16 distinct step counts → 16 distinct BatchKeys → 16 batches
+    // flushed nearly simultaneously into a depth-1 queue with a single
+    // (busy) executor
+    let rxs: Vec<_> = (0..16u64)
+        .map(|i| coord.submit(image_request(2 + i as usize, i, Policy::NoCache)))
+        .collect();
+
+    let mut ok = 0u64;
+    let mut rejected = 0u64;
+    for rx in &rxs {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(Ok(resp)) => {
+                assert_eq!(resp.latent.shape, vec![1, 16, 16, 4]);
+                ok += 1;
+            }
+            Ok(Err(e)) => {
+                let msg = format!("{e}");
+                assert!(
+                    msg.starts_with("overloaded:"),
+                    "rejection must carry the overloaded error shape, got {msg:?}"
+                );
+                rejected += 1;
+            }
+            Err(_) => panic!("request neither served nor rejected (hang)"),
+        }
+    }
+    assert_eq!(ok + rejected, 16);
+    assert!(rejected >= 1, "a 16-batch burst into a depth-1 queue must reject");
+    assert!(ok >= 1, "admission control must not reject everything");
+
+    let m = coord.metrics();
+    assert_eq!(Metrics::get(&m.queue_rejections), rejected);
+    assert_eq!(Metrics::get(&m.requests_completed), ok);
+    assert_eq!(Metrics::get(&m.requests_submitted), 16);
+    coord.shutdown();
 }
 
 /// Batcher-layer property with synthetic clocks (no sleeping): under
