@@ -5,9 +5,9 @@
 //!
 //!     cargo run --release --example multimodal_generate
 
-use smoothcache::cache::{calibrate, paper_protocol};
+use smoothcache::cache::{calibrate, paper_protocol, CachePlan, PlanRef};
 use smoothcache::model::{Cond, Engine};
-use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::pipeline::{generate, GenConfig};
 use smoothcache::quality::psnr;
 use smoothcache::util::bench::Table;
 
@@ -49,8 +49,11 @@ fn main() -> smoothcache::util::error::Result<()> {
             .with_cfg(if family == "image" { 1.0 } else { 7.0 })
             .with_seed(11);
 
-        let base = generate(&engine, &cfg, &cond, &CacheMode::None, None)?;
-        let fast = generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None)?;
+        let sites = fm.branch_sites();
+        let no_cache = CachePlan::no_cache(cc.steps, &sites);
+        let plan = CachePlan::from_grouped(&schedule, &sites)?;
+        let base = generate(&engine, &cfg, &cond, PlanRef::Plan(&no_cache), None)?;
+        let fast = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None)?;
 
         match family {
             "image" => {

@@ -3,9 +3,9 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use smoothcache::cache::{calibrate, CalibrationConfig};
+use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef};
 use smoothcache::model::{Cond, Engine};
-use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::pipeline::{generate, GenConfig};
 use smoothcache::quality::psnr;
 use smoothcache::solvers::SolverKind;
 
@@ -31,8 +31,8 @@ fn main() -> smoothcache::util::error::Result<()> {
 
     // 2. Threshold the error curves at alpha to get a static schedule.
     let alpha = 0.35;
-    let bts = engine.family_manifest("image")?.branch_types.clone();
-    let schedule = curves.smoothcache_schedule(alpha, &bts);
+    let fm = engine.family_manifest("image")?.clone();
+    let schedule = curves.smoothcache_schedule(alpha, &fm.branch_types);
     println!("\nSmoothCache schedule at alpha={alpha} (#=compute, .=reuse):");
     print!("{}", schedule.ascii());
     println!("skip fraction: {:.0}%\n", schedule.skip_fraction() * 100.0);
@@ -40,8 +40,11 @@ fn main() -> smoothcache::util::error::Result<()> {
     // 3. Generate the same sample with and without the cache.
     let cond = Cond::Label(vec![7]);
     let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(42);
-    let base = generate(&engine, &cfg, &cond, &CacheMode::None, None)?;
-    let cached = generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None)?;
+    let sites = fm.branch_sites();
+    let no_cache = CachePlan::no_cache(steps, &sites);
+    let plan = CachePlan::from_grouped(&schedule, &sites)?;
+    let base = generate(&engine, &cfg, &cond, PlanRef::Plan(&no_cache), None)?;
+    let cached = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None)?;
 
     println!(
         "no-cache : {:.3}s ({} branch executions)",

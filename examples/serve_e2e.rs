@@ -21,7 +21,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         .flag("requests", "32", "requests per policy")
         .flag("rate", "4.0", "Poisson arrival rate (req/s)")
         .flag("steps", "50", "DDIM steps")
-        .flag("policies", "no-cache,fora:2,smooth:0.35", "policies to compare")
+        .flag("policies", "no-cache,fora:2,smooth:0.35,drift:0.35", "policies to compare")
         .flag("calib-samples", "6", "calibration samples for smooth policies");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match spec.parse(&argv) {

@@ -4,22 +4,12 @@
 //! grouping is needed because per-site calibration errors stop
 //! predicting true errors once earlier layers are approximated.
 
-use std::collections::BTreeMap;
-
-use smoothcache::cache::{calibrate, CalibrationConfig, Decision};
+use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef};
 use smoothcache::experiments::{eval_conds, generate_set, image_corpus, EvalConfig};
 use smoothcache::model::Engine;
-use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{ffd, lpips_proxy, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::bench::{arg_usize, fast_mode, Table};
-
-fn persite_skip_fraction(m: &BTreeMap<String, Vec<Decision>>) -> f64 {
-    let total: usize = m.values().map(|v| v.len()).sum();
-    let skipped: usize =
-        m.values().map(|v| v.iter().filter(|d| !d.is_compute()).count()).sum();
-    skipped as f64 / total as f64
-}
 
 fn main() -> smoothcache::util::error::Result<()> {
     let dir = smoothcache::artifacts_dir();
@@ -33,6 +23,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     engine.load_family("image")?;
     let fm = engine.family_manifest("image")?.clone();
     let bts = fm.branch_types.clone();
+    let sites = fm.branch_sites();
 
     let (steps, n_samples, calib_samples) =
         if fast_mode() { (10, 12, 2) } else { (50, 24, 10) };
@@ -50,28 +41,27 @@ fn main() -> smoothcache::util::error::Result<()> {
     let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps).with_threads(threads);
     ec.n_samples = n_samples;
     let conds = eval_conds(&fm, n_samples, 777);
-    let (ref_set, _) = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+    let no_cache = CachePlan::no_cache(steps, &sites);
+    let (ref_set, _) = generate_set(&engine, &ec, &conds, PlanRef::Plan(&no_cache))?;
     eprintln!("[grouping] reference set done");
 
     let mut table = Table::new(&[
         "alpha", "mode", "skip%", "FFD (dn)", "LPIPS vs no-cache (dn)", "lat(s)",
     ]);
     for alpha in [0.15, 0.3, 0.5] {
-        let grouped = curves.smoothcache_schedule(alpha, &bts);
-        let per_site = curves.per_site_schedule(alpha);
-        for (mode_name, mode, skip) in [
-            (
-                "grouped (paper)",
-                CacheMode::Grouped(&grouped),
-                grouped.skip_fraction(),
-            ),
-            (
-                "per-site",
-                CacheMode::PerSite(&per_site),
-                persite_skip_fraction(&per_site),
-            ),
-        ] {
-            let (set, stats) = generate_set(&engine, &ec, &conds, &mode)?;
+        let grouped =
+            CachePlan::from_grouped(&curves.smoothcache_schedule(alpha, &bts), &sites)?;
+        // the per-site map resolves through the same CachePlan surface —
+        // site-set mismatches would fail loudly here, not mid-generation
+        let per_site = CachePlan::from_site_map(
+            &format!("per-site-a{alpha}"),
+            steps,
+            &sites,
+            &curves.per_site_schedule(alpha),
+        )?;
+        for (mode_name, plan) in [("grouped (paper)", &grouped), ("per-site", &per_site)] {
+            let skip = plan.skip_fraction();
+            let (set, stats) = generate_set(&engine, &ec, &conds, PlanRef::Plan(plan))?;
             table.row(&[
                 format!("{alpha}"),
                 mode_name.into(),

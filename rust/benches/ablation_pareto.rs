@@ -3,11 +3,10 @@
 //! prints the (GMACs, FFD) frontier — the paper's claim is that
 //! SmoothCache's front dominates static caching's.
 
-use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
+use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef, Schedule};
 use smoothcache::experiments::{eval_conds, generate_set, image_corpus, EvalConfig};
 use smoothcache::macs::{as_gmacs, generation_macs};
 use smoothcache::model::Engine;
-use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{ffd, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::bench::{arg_usize, ascii_plot, fast_mode, Table};
@@ -24,6 +23,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     engine.load_family("image")?;
     let fm = engine.family_manifest("image")?.clone();
     let bts = fm.branch_types.clone();
+    let sites = fm.branch_sites();
 
     let (steps_list, n_samples, calib_samples) =
         if fast_mode() { (vec![10], 12, 2) } else { (vec![50], 24, 10) };
@@ -57,7 +57,8 @@ fn main() -> smoothcache::util::error::Result<()> {
             ec.n_samples = 4;
             ec.cfg_scale = 1.5;
             let conds = eval_conds(&fm, 4, 1);
-            let _ = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+            let warm_plan = CachePlan::no_cache(2, &sites);
+            let _ = generate_set(&engine, &ec, &conds, PlanRef::Plan(&warm_plan))?;
         }
 
         for (method, param, schedule) in &roster {
@@ -65,8 +66,8 @@ fn main() -> smoothcache::util::error::Result<()> {
             ec.n_samples = n_samples;
             ec.cfg_scale = 1.5; // paper protocol
             let conds = eval_conds(&fm, n_samples, 777);
-            let (set, stats) =
-                generate_set(&engine, &ec, &conds, &CacheMode::Grouped(schedule))?;
+            let plan = CachePlan::from_grouped(schedule, &sites)?;
+            let (set, stats) = generate_set(&engine, &ec, &conds, PlanRef::Plan(&plan))?;
             let f = ffd(&fx, &corpus, &set);
             let g = as_gmacs(generation_macs(&fm, schedule, true));
             table.row(&[

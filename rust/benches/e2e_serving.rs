@@ -4,7 +4,9 @@
 //! percentiles, *queue wait vs execution time* (the scheduler's own
 //! latency contribution, ADR-002), admission rejections, batch
 //! occupancy and skip fraction — the serving-system view of the
-//! paper's acceleration claim.
+//! paper's acceleration claim. The per-policy `metrics:` summary line
+//! includes the plan-store counters (`plan_hits`/`plan_miss`) so
+//! plan-cache behaviour under traffic is visible per run.
 //!
 //! Flags: `--workers N` sizes the executor replica pool, `--threads N`
 //! pins the GEMM compute pool (0 = auto), `--queue-depth N` bounds the
@@ -38,11 +40,14 @@ fn main() -> smoothcache::util::error::Result<()> {
     ]);
 
     for policy in [
-        Policy::NoCache,
-        Policy::Fora(2),
-        Policy::Fora(3),
-        Policy::Smooth(0.25),
-        Policy::Smooth(0.5),
+        Policy::no_cache(),
+        Policy::fora(2),
+        Policy::fora(3),
+        Policy::smooth(0.25),
+        Policy::smooth(0.5),
+        // runtime-adaptive error-feedback policy: no calibration, the
+        // StepPlanner decides per (step, site) from observed drift
+        Policy::drift(0.35),
     ] {
         let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
         cfg.preload = vec!["image".into()];
@@ -129,7 +134,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         };
         let m = coord.metrics();
         table.row(&[
-            policy.wire(),
+            policy.wire().to_string(),
             served.to_string(),
             rejected.to_string(),
             format!("{:.2}", served as f64 / wall),

@@ -8,9 +8,9 @@
 //!
 //! Everything lands under bench_out/qualitative/.
 
-use smoothcache::cache::{calibrate, paper_protocol, Schedule};
+use smoothcache::cache::{calibrate, paper_protocol, CachePlan, PlanRef, Schedule};
 use smoothcache::model::{Cond, Engine};
-use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::pipeline::{generate, GenConfig};
 use smoothcache::tensor::Tensor;
 use smoothcache::util::bench::fast_mode;
 
@@ -62,14 +62,16 @@ fn main() -> smoothcache::util::error::Result<()> {
         (format!("smooth-lo-a{a_lo:.2}"), s_lo),
         (format!("smooth-hi-a{a_hi:.2}"), s_hi),
     ];
+    let sites = fm.branch_sites();
     for (name, schedule) in &schedules {
+        let plan = CachePlan::from_grouped(schedule, &sites)?;
         for class in [0i32, 3, 7] {
             let cfg = GenConfig::new("image", cc.solver, cc.steps).with_seed(42 + class as u64);
             let out = generate(
                 &engine,
                 &cfg,
                 &Cond::Label(vec![class]),
-                &CacheMode::Grouped(schedule),
+                PlanRef::Plan(&plan),
                 None,
             )?;
             let plane = channel0(&out.latent, 16, 16, 4);
@@ -96,10 +98,11 @@ fn main() -> smoothcache::util::error::Result<()> {
         (format!("smooth-a{aa2:.2}"), sa2),
     ];
     let prompt = Cond::Prompt((10..10 + fma.cond_len as i32).collect());
+    let sites_a = fma.branch_sites();
     for (name, schedule) in &schedules_a {
+        let plan = CachePlan::from_grouped(schedule, &sites_a)?;
         let cfg = GenConfig::new("audio", cca.solver, cca.steps).with_cfg(7.0).with_seed(7);
-        let out =
-            generate(&engine, &cfg, &prompt, &CacheMode::Grouped(schedule), None)?;
+        let out = generate(&engine, &cfg, &prompt, PlanRef::Plan(&plan), None)?;
         // "spectrogram": |latent| [T, C] as CSV (T rows)
         let mut csv = String::new();
         for t in 0..64 {
@@ -128,9 +131,11 @@ fn main() -> smoothcache::util::error::Result<()> {
         (format!("smooth-a{av:.2}"), sv),
     ];
     let vprompt = Cond::Prompt((20..20 + fmv.cond_len as i32).collect());
+    let sites_v = fmv.branch_sites();
     for (name, schedule) in &schedules_v {
+        let plan = CachePlan::from_grouped(schedule, &sites_v)?;
         let cfg = GenConfig::new("video", ccv.solver, ccv.steps).with_cfg(7.0).with_seed(21);
-        let out = generate(&engine, &cfg, &vprompt, &CacheMode::Grouped(schedule), None)?;
+        let out = generate(&engine, &cfg, &vprompt, PlanRef::Plan(&plan), None)?;
         // first / middle / last frame, channel 0
         for (tag, f) in [("first", 0usize), ("middle", 2), ("last", 3)] {
             let frame_len = 8 * 8 * 4;

@@ -4,18 +4,21 @@
 //! the L3 optimization loop in EXPERIMENTS.md §Perf. The final section
 //! sweeps the GEMM compute-thread count over the single-request forward
 //! and reports the 4-thread / 1-thread throughput ratio (ISSUE 2
-//! acceptance: ≥ 2×), and a final section decomposes coordinator
-//! latency into work-queue wait vs execution time under a burst
-//! (ISSUE 3 — the shared work-queue scheduler's own overhead).
+//! acceptance: ≥ 2×), a section decomposes coordinator latency into
+//! work-queue wait vs execution time under a burst (ISSUE 3 — the
+//! shared work-queue scheduler's own overhead), and a scheduling-
+//! overhead section compares the dense `CachePlan` decision lookup
+//! against the old string-keyed per-site map path (ISSUE 4).
 //!
 //! Flags: `--threads N` pins the pool for the per-entry sections
 //! (0 = auto; the sweep section always pins its own counts).
 
 use std::time::Duration;
 
+use smoothcache::cache::{CachePlan, Decision, PlanRef, Schedule};
 use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Metrics, Policy, Request};
 use smoothcache::model::{Cond, Engine};
-use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::pipeline::{generate, GenConfig};
 use smoothcache::solvers::SolverKind;
 use smoothcache::tensor::{gemm, Tensor};
 use smoothcache::util::bench::{arg_usize, bench, fast_mode, Table};
@@ -106,12 +109,16 @@ fn main() -> smoothcache::util::error::Result<()> {
     // end-to-end generation micro
     for &(steps, skip) in &[(10usize, false), (10, true)] {
         let cond = Cond::Label(vec![1, 2, 3, 4]);
-        let bts = fm.branch_types.clone();
-        let schedule = smoothcache::cache::Schedule::fora(steps, &bts, 2);
-        let mode = if skip { CacheMode::Grouped(&schedule) } else { CacheMode::None };
+        let sites = fm.branch_sites();
+        let plan = if skip {
+            let schedule = Schedule::fora(steps, &fm.branch_types, 2);
+            CachePlan::from_grouped(&schedule, &sites)?
+        } else {
+            CachePlan::no_cache(steps, &sites)
+        };
         let g = bench(1, (iters / 10).max(2), || {
             let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(3);
-            let _ = generate(&engine, &cfg, &cond, &mode, None).unwrap();
+            let _ = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).unwrap();
         });
         table.row(&[
             format!("generate {steps}-step b4 {}", if skip { "fora:2" } else { "no-cache" }),
@@ -130,6 +137,78 @@ fn main() -> smoothcache::util::error::Result<()> {
         stats.compiles, stats.compile_seconds
     );
     std::fs::write("bench_out/perf_engine.csv", table.to_csv())?;
+
+    // ---- scheduling overhead: dense CachePlan vs string-keyed map ----
+    // The generate loop used to pay a format!("{block}.{br}") heap
+    // allocation plus a BTreeMap lookup per site per step; a CachePlan
+    // decision is one flat-array read. Walk a full 50-step plan both
+    // ways and report decision-lookup throughput.
+    {
+        let sched_steps = 50usize;
+        let sites = fm.branch_sites();
+        let schedule = Schedule::fora(sched_steps, &fm.branch_types, 2);
+        let plan = CachePlan::from_grouped(&schedule, &sites)?;
+        let mut legacy: std::collections::BTreeMap<String, Vec<Decision>> =
+            std::collections::BTreeMap::new();
+        for (s_idx, (b, t)) in sites.iter().enumerate() {
+            legacy.insert(
+                format!("{b}.{t}"),
+                (0..sched_steps).map(|s| plan.decision(s, s_idx)).collect(),
+            );
+        }
+        let lookups = (sched_steps * sites.len()) as f64;
+        let sched_iters = if fast_mode() { 3 } else { 2000 };
+        let mut sink = 0usize;
+        let dense = bench(10, sched_iters, || {
+            let mut computes = 0usize;
+            for s in 0..sched_steps {
+                for idx in 0..sites.len() {
+                    if plan.decision(s, idx).is_compute() {
+                        computes += 1;
+                    }
+                }
+            }
+            sink = sink.wrapping_add(computes);
+        });
+        let stringy = bench(10, sched_iters, || {
+            let mut computes = 0usize;
+            for s in 0..sched_steps {
+                for (b, t) in &sites {
+                    let d = legacy
+                        .get(&format!("{b}.{t}"))
+                        .map(|ds| ds[s])
+                        .unwrap_or(Decision::Compute);
+                    if d.is_compute() {
+                        computes += 1;
+                    }
+                }
+            }
+            sink = sink.wrapping_add(computes);
+        });
+        assert!(sink > 0, "decision walks must not be optimised away");
+        let mut sched_table =
+            Table::new(&["decision path", "ns/lookup", "lookups/sec", "speedup"]);
+        let dense_ns = dense.mean_s * 1e9 / lookups;
+        let stringy_ns = stringy.mean_s * 1e9 / lookups;
+        sched_table.row(&[
+            "dense CachePlan (flat array)".into(),
+            format!("{dense_ns:.1}"),
+            format!("{:.2e}", lookups / dense.mean_s),
+            format!("{:.1}x", stringy.mean_s / dense.mean_s),
+        ]);
+        sched_table.row(&[
+            "string-keyed BTreeMap (legacy)".into(),
+            format!("{stringy_ns:.1}"),
+            format!("{:.2e}", lookups / stringy.mean_s),
+            "1.0x".into(),
+        ]);
+        println!(
+            "\n§Perf — scheduling overhead: {sched_steps}-step × {}-site decision walk",
+            sites.len()
+        );
+        sched_table.print();
+        std::fs::write("bench_out/perf_engine_sched.csv", sched_table.to_csv())?;
+    }
 
     // ---- parallel-substrate sweep: single-request forward vs threads ----
     // (results are bitwise thread-count-invariant; only wall time moves)
@@ -185,7 +264,7 @@ fn main() -> smoothcache::util::error::Result<()> {
                 steps: qsteps,
                 cfg_scale: 1.0,
                 seed: i as u64,
-                policy: Policy::NoCache,
+                policy: Policy::no_cache(),
             })
         })
         .collect();

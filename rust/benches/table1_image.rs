@@ -9,11 +9,10 @@
 //!
 //! SMOOTHCACHE_BENCH_FAST=1 trims steps/samples/trials.
 
-use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
+use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef, Schedule};
 use smoothcache::experiments::{eval_conds, fmt_pm, generate_set, image_corpus, mean_std, EvalConfig};
 use smoothcache::macs::{as_gmacs, generation_macs};
 use smoothcache::model::Engine;
-use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{ffd, is_proxy, lpips_proxy, psnr, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::bench::{arg_usize, fast_mode, Table};
@@ -30,6 +29,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     engine.load_family("image")?;
     let fm = engine.family_manifest("image")?.clone();
     let bts = fm.branch_types.clone();
+    let sites = fm.branch_sites();
 
     let (steps_list, n_samples, trials, calib_samples) = if fast_mode() {
         (vec![10], 16, 1, 2)
@@ -61,7 +61,8 @@ fn main() -> smoothcache::util::error::Result<()> {
             ec.n_samples = 4;
             ec.cfg_scale = 1.5;
             let conds = eval_conds(&fm, 4, 1);
-            let _ = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+            let warm_plan = CachePlan::no_cache(2, &sites);
+            let _ = generate_set(&engine, &ec, &conds, PlanRef::Plan(&warm_plan))?;
         }
 
         // schedule roster for this step count
@@ -91,13 +92,15 @@ fn main() -> smoothcache::util::error::Result<()> {
             ec.cfg_scale = 1.5;
             ec.base_seed = 9000 + trial as u64 * 1000;
             let conds = eval_conds(&fm, ec.n_samples, 777 + trial as u64);
-            let (set, stats) = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+            let no_cache = CachePlan::no_cache(steps, &sites);
+            let (set, stats) = generate_set(&engine, &ec, &conds, PlanRef::Plan(&no_cache))?;
             refs.push((ec, conds, set, stats));
         }
 
         let mut rows: Vec<(f64, Vec<String>)> = Vec::new();
         for (name, schedule) in &roster {
             schedule.validate().unwrap();
+            let plan = CachePlan::from_grouped(schedule, &sites)?;
             let gmacs = as_gmacs(generation_macs(&fm, schedule, true)); // CFG doubles
             let mut ffds = Vec::new();
             let mut sffds = Vec::new();
@@ -109,7 +112,7 @@ fn main() -> smoothcache::util::error::Result<()> {
                 let (set, stats) = if schedule.skip_fraction() == 0.0 {
                     (ref_set.clone(), ref_stats.clone())
                 } else {
-                    generate_set(&engine, ec, conds, &CacheMode::Grouped(schedule))?
+                    generate_set(&engine, ec, conds, PlanRef::Plan(&plan))?
                 };
                 ffds.push(ffd(&fx, &corpus, &set));
                 sffds.push(ffd(&fx_s, &corpus, &set));

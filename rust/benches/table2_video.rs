@@ -5,13 +5,12 @@
 //! generations (the paper's protocol); VBench is the composite proxy
 //! from DESIGN.md section 3.
 
-use smoothcache::cache::{calibrate, CalibrationConfig};
+use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef};
 use smoothcache::experiments::{
     eval_conds, fmt_pm, generate_set, mean_std, vbench_proxy, EvalConfig,
 };
 use smoothcache::macs::{as_gmacs, generation_macs};
 use smoothcache::model::Engine;
-use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{lpips_proxy, psnr, ssim, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::bench::{arg_usize, fast_mode, Table};
@@ -28,6 +27,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     engine.load_family("video")?;
     let fm = engine.family_manifest("video")?.clone();
     let bts = fm.branch_types.clone();
+    let sites = fm.branch_sites();
 
     let (steps, n_samples, trials, calib_samples) =
         if fast_mode() { (8, 8, 1, 2) } else { (30, 16, 1, 10) };
@@ -68,7 +68,8 @@ fn main() -> smoothcache::util::error::Result<()> {
         ec.n_samples = 4;
         ec.cfg_scale = cfg_scale;
         let conds = eval_conds(&fm, 4, 1);
-        let _ = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+        let warm_plan = CachePlan::no_cache(2, &sites);
+        let _ = generate_set(&engine, &ec, &conds, PlanRef::Plan(&warm_plan))?;
     }
 
     // per-trial reference sets (paired with identical seeds/conds)
@@ -79,7 +80,8 @@ fn main() -> smoothcache::util::error::Result<()> {
         ec.cfg_scale = cfg_scale;
         ec.base_seed = 4000 + trial as u64 * 500;
         let conds = eval_conds(&fm, n_samples, 555 + trial as u64);
-        let (set, stats) = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+        let no_cache = CachePlan::no_cache(steps, &sites);
+        let (set, stats) = generate_set(&engine, &ec, &conds, PlanRef::Plan(&no_cache))?;
         refs.push((ec, conds, set, stats));
     }
 
@@ -97,7 +99,10 @@ fn main() -> smoothcache::util::error::Result<()> {
         for (ec, conds, ref_set, ref_stats) in &refs {
             let (set, stats) = match sched {
                 None => (ref_set.clone(), ref_stats.clone()),
-                Some(s) => generate_set(&engine, ec, conds, &CacheMode::Grouped(s))?,
+                Some(s) => {
+                    let plan = CachePlan::from_grouped(s, &sites)?;
+                    generate_set(&engine, ec, conds, PlanRef::Plan(&plan))?
+                }
             };
             vb.push(vbench_proxy(&fx, ref_set, &set));
             if sched.is_some() {

@@ -5,13 +5,12 @@
 //! KL-proxy and CLAP-proxy (vs paired no-cache generations) — DESIGN.md
 //! section 3 documents each substitution.
 
-use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
+use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef, Schedule};
 use smoothcache::experiments::{
     audio_corpus, eval_conds, fmt_pm, generate_set, mean_std, EvalConfig,
 };
 use smoothcache::macs::{as_gmacs, generation_macs};
 use smoothcache::model::Engine;
-use smoothcache::pipeline::CacheMode;
 use smoothcache::quality::{clap_proxy, ffd, kl_proxy, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::bench::{arg_usize, fast_mode, Table};
@@ -28,6 +27,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     engine.load_family("audio")?;
     let fm = engine.family_manifest("audio")?.clone();
     let bts = fm.branch_types.clone();
+    let sites = fm.branch_sites();
 
     let (steps, n_samples, calib_samples) = if fast_mode() { (10, 8, 2) } else { (100, 12, 10) };
     let solver = SolverKind::DpmPP3M { sde: true };
@@ -56,7 +56,8 @@ fn main() -> smoothcache::util::error::Result<()> {
         ec.n_samples = 4;
         ec.cfg_scale = cfg_scale;
         let conds = eval_conds(&fm, 4, 1);
-        let _ = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+        let warm_plan = CachePlan::no_cache(2, &sites);
+        let _ = generate_set(&engine, &ec, &conds, PlanRef::Plan(&warm_plan))?;
     }
 
     let mut header = vec!["Schedule".to_string()];
@@ -85,13 +86,15 @@ fn main() -> smoothcache::util::error::Result<()> {
         ec.cfg_scale = cfg_scale;
         ec.base_seed = 7000 + seed;
         let conds = eval_conds(&fm, n_samples, *seed);
-        let (set, stats) = generate_set(&engine, &ec, &conds, &CacheMode::None)?;
+        let no_cache = CachePlan::no_cache(steps, &sites);
+        let (set, stats) = generate_set(&engine, &ec, &conds, PlanRef::Plan(&no_cache))?;
         eprintln!("[table3] reference set {suite}: done");
         refs.push((ec, conds, set, stats));
     }
 
     for (name, schedule) in &roster {
         schedule.validate().unwrap();
+        let plan = CachePlan::from_grouped(schedule, &sites)?;
         let gmacs = as_gmacs(generation_macs(&fm, schedule, true));
         let mut row = vec![name.clone()];
         let mut lats = Vec::new();
@@ -99,7 +102,7 @@ fn main() -> smoothcache::util::error::Result<()> {
             let (set, stats) = if schedule.skip_fraction() == 0.0 {
                 (ref_set.clone(), ref_stats.clone())
             } else {
-                generate_set(&engine, ec, conds, &CacheMode::Grouped(schedule))?
+                generate_set(&engine, ec, conds, PlanRef::Plan(&plan))?
             };
             let fd = ffd(&fx, &corpus, &set);
             let kl = kl_proxy(&fx, ref_set, &set, 10);

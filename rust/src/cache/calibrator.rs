@@ -9,8 +9,9 @@ use std::collections::HashMap;
 use crate::util::error::Result;
 
 use super::curves::ErrorCurves;
+use super::plan::{CachePlan, PlanRef};
 use crate::model::{Cond, Engine};
-use crate::pipeline::{generate, CacheMode, GenConfig};
+use crate::pipeline::{generate, GenConfig};
 use crate::solvers::SolverKind;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -100,6 +101,8 @@ pub fn calibrate(
         fm.depth,
     );
     let mut rng = Rng::new(cc.seed);
+    // calibration runs the no-cache trajectory (every branch computes)
+    let no_cache = CachePlan::no_cache(cc.steps, &fm.branch_sites());
 
     for sample in 0..cc.num_samples {
         // DiT protocol: calibrate unconditionally (null label) when CFG is
@@ -127,7 +130,7 @@ pub fn calibrate(
                 let keep_from = step.saturating_sub(cc.k_max);
                 entry.retain(|(s, _)| *s >= keep_from);
             };
-            generate(engine, &gen_cfg, &cond, &CacheMode::None, Some(&mut observer))?;
+            generate(engine, &gen_cfg, &cond, PlanRef::Plan(&no_cache), Some(&mut observer))?;
         }
         curves.num_samples += 1;
     }

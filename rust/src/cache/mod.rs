@@ -6,19 +6,29 @@
 //!    per branch type (paper Fig. 2, Eq. 4 LHS).
 //! 2. [`curves::ErrorCurves::smoothcache_schedule`] — greedy α-threshold
 //!    schedule generation (paper Eq. 4).
-//! 3. [`schedule::Schedule`] — the static artifact the serving pipeline
-//!    executes; baselines (FORA, alternate/L2C-proxy, no-cache) are
-//!    constructors on the same type so every bench compares like with
-//!    like.
+//! 3. [`schedule::Schedule`] — the grouped-by-branch-type artifact the
+//!    schedule generator emits; baselines (FORA, alternate/L2C-proxy,
+//!    no-cache) are constructors on the same type so every bench
+//!    compares like with like.
+//! 4. [`plan::CachePlan`] — the canonical *resolved* policy: one dense
+//!    `[steps × sites]` decision matrix the pipeline executes, produced
+//!    by [`plan::Planner`]s from the policy registry
+//!    ([`plan::registry`]); runtime-adaptive policies plug in through
+//!    [`plan::StepPlanner`].
 #![deny(missing_docs)]
 
 pub mod calibrator;
 pub mod curves;
+pub mod plan;
 pub mod policies;
 pub mod schedule;
 
 pub use calibrator::{calibrate, paper_protocol, sample_cond, CalibrationConfig};
 pub use curves::{Acc, ErrorCurves};
+pub use plan::{
+    parse_policy, registry, registry_markdown_rows, CachePlan, PlanCtx, PlanRef, Planner,
+    PolicySpec, StepObs, StepPlanner,
+};
 pub use policies::delta_dit;
 pub use schedule::{Decision, Schedule};
 

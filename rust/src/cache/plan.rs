@@ -1,0 +1,1035 @@
+//! The first-class caching-policy surface: dense [`CachePlan`]s, the
+//! [`Planner`] trait that produces them, the [`StepPlanner`] hook for
+//! runtime-adaptive policies, and the policy *registry* every layer
+//! (CLI, server wire format, coordinator lanes, benches) consumes.
+//!
+//! The paper's mechanism is "resolve a policy to per-(step, site)
+//! compute/reuse decisions, then execute them". Historically the repo
+//! spelled that object three ways (a grouped [`Schedule`], a
+//! stringly-keyed per-site `BTreeMap`, and a `no-cache` special case),
+//! forcing every consumer to triple-match. A [`CachePlan`] is the one
+//! canonical form: a `[steps × sites]` decision matrix with sites
+//! enumerated once from the family manifest, indexed by
+//! `(step, site_idx)` with an O(1) flat-array lookup — no string keys,
+//! no per-step allocation on the generate hot path.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::util::error::Result;
+
+use super::curves::ErrorCurves;
+use super::schedule::{Decision, Schedule};
+use crate::model::FamilyManifest;
+use crate::solvers::SolverKind;
+
+// ---------------------------------------------------------------------------
+// CachePlan — the dense decision matrix
+// ---------------------------------------------------------------------------
+
+/// One resolved caching policy: a dense `[steps × sites]` matrix of
+/// [`Decision`]s over the family's (block, branch) sites in execution
+/// order. This is the single artifact the pipeline executes; every
+/// static policy (no-cache, FORA, alternate, SmoothCache grouped or
+/// per-site, δ-DiT) resolves to one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachePlan {
+    /// human-readable policy name (`no-cache`, `fora-n2`,
+    /// `smoothcache-a0.35`, …) used in bench tables and renders.
+    pub name: String,
+    /// solver steps the plan spans (matrix rows).
+    pub steps: usize,
+    /// `(block, branch-type)` sites in execution order (matrix columns);
+    /// must equal [`FamilyManifest::branch_sites`] of the family the
+    /// plan executes on ([`CachePlan::validate_for`]).
+    pub sites: Vec<(usize, String)>,
+    /// row-major `[steps × sites]` decisions.
+    decisions: Vec<Decision>,
+}
+
+impl CachePlan {
+    /// Construct from a raw decision matrix **without validating** —
+    /// callers (tests, random generators) should run
+    /// [`CachePlan::validate`] themselves. `decisions` is row-major by
+    /// step: entry `(step, site)` lives at `step * sites.len() + site`.
+    pub fn from_decisions(
+        name: &str,
+        steps: usize,
+        sites: Vec<(usize, String)>,
+        decisions: Vec<Decision>,
+    ) -> CachePlan {
+        CachePlan { name: name.into(), steps, sites, decisions }
+    }
+
+    /// All-compute plan (the "No Cache" rows; also what calibration
+    /// trajectories execute).
+    pub fn no_cache(steps: usize, sites: &[(usize, String)]) -> CachePlan {
+        CachePlan {
+            name: "no-cache".into(),
+            steps,
+            sites: sites.to_vec(),
+            decisions: vec![Decision::Compute; steps * sites.len()],
+        }
+    }
+
+    /// Expand a grouped-by-branch-type [`Schedule`] (the paper's
+    /// decision shape) over concrete sites. Errors if a site's branch
+    /// type is missing from the schedule or the result is invalid.
+    pub fn from_grouped(schedule: &Schedule, sites: &[(usize, String)]) -> Result<CachePlan> {
+        let mut cols = Vec::with_capacity(sites.len());
+        for (_, bt) in sites {
+            let idx = schedule
+                .branch_types
+                .iter()
+                .position(|b| b == bt)
+                .ok_or_else(|| {
+                    crate::err!("schedule {:?} lacks branch type {bt:?}", schedule.name)
+                })?;
+            cols.push(idx);
+        }
+        let mut decisions = Vec::with_capacity(schedule.steps * sites.len());
+        for row in &schedule.decisions {
+            for &c in &cols {
+                decisions.push(row[c]);
+            }
+        }
+        let plan = CachePlan {
+            name: schedule.name.clone(),
+            steps: schedule.steps,
+            sites: sites.to_vec(),
+            decisions,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Build a plan from a per-site decision map keyed `"block.branch"`
+    /// (the shape the grouping ablation and δ-DiT produce). The site
+    /// set must match `sites` **exactly** — a map built for a different
+    /// family (missing or extra sites, wrong step count) is rejected
+    /// loudly instead of silently defaulting unmatched sites to
+    /// `Compute`.
+    pub fn from_site_map(
+        name: &str,
+        steps: usize,
+        sites: &[(usize, String)],
+        map: &BTreeMap<String, Vec<Decision>>,
+    ) -> Result<CachePlan> {
+        if map.len() != sites.len() {
+            let expected: std::collections::BTreeSet<String> =
+                sites.iter().map(|(b, t)| format!("{b}.{t}")).collect();
+            let got: std::collections::BTreeSet<String> = map.keys().cloned().collect();
+            let missing: Vec<&String> = expected.difference(&got).collect();
+            let extra: Vec<&String> = got.difference(&expected).collect();
+            return Err(crate::err!(
+                "plan {name:?}: site-set mismatch ({} sites expected, {} given; \
+                 missing {missing:?}, extra {extra:?})",
+                sites.len(),
+                map.len()
+            ));
+        }
+        let mut decisions = vec![Decision::Compute; steps * sites.len()];
+        for (s_idx, (b, t)) in sites.iter().enumerate() {
+            let key = format!("{b}.{t}");
+            let ds = map.get(&key).ok_or_else(|| {
+                crate::err!("plan {name:?}: per-site map missing site {key:?}")
+            })?;
+            if ds.len() != steps {
+                return Err(crate::err!(
+                    "plan {name:?}: site {key:?} has {} decisions for {steps} steps",
+                    ds.len()
+                ));
+            }
+            for (step, d) in ds.iter().enumerate() {
+                decisions[step * sites.len() + s_idx] = *d;
+            }
+        }
+        let plan =
+            CachePlan { name: name.into(), steps, sites: sites.to_vec(), decisions };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Number of (block, branch) sites (matrix columns).
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// The decision at `(step, site_idx)` — one flat-array read, the
+    /// generate loop's entire per-site scheduling cost.
+    #[inline]
+    pub fn decision(&self, step: usize, site: usize) -> Decision {
+        self.decisions[step * self.sites.len() + site]
+    }
+
+    /// `"block.branch"` label of a site column (renders, errors).
+    pub fn site_name(&self, site: usize) -> String {
+        let (b, t) = &self.sites[site];
+        format!("{b}.{t}")
+    }
+
+    /// Structural invariants every valid plan satisfies (the same rules
+    /// [`Schedule::validate`] enforces, applied per site): the matrix
+    /// is exactly `steps × sites`; step 0 computes (the cache is
+    /// empty); every reuse points at the *latest* computed step
+    /// strictly in its past.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.sites.len();
+        if self.decisions.len() != self.steps * n {
+            return Err(crate::err!(
+                "plan {:?}: {} decisions for {} steps x {n} sites",
+                self.name,
+                self.decisions.len(),
+                self.steps
+            ));
+        }
+        for site in 0..n {
+            for step in 0..self.steps {
+                if let Decision::Reuse { filled_at } = self.decision(step, site) {
+                    let label = self.site_name(site);
+                    if step == 0 {
+                        return Err(crate::err!(
+                            "plan {:?}: step 0 must compute at {label} (cache empty)",
+                            self.name
+                        ));
+                    }
+                    if filled_at >= step {
+                        return Err(crate::err!(
+                            "plan {:?}: step {step}/{label}: filled_at {filled_at} not in the past",
+                            self.name
+                        ));
+                    }
+                    if !self.decision(filled_at, site).is_compute() {
+                        return Err(crate::err!(
+                            "plan {:?}: step {step}/{label}: filled_at {filled_at} was not computed",
+                            self.name
+                        ));
+                    }
+                    for mid in (filled_at + 1)..step {
+                        if self.decision(mid, site).is_compute() {
+                            return Err(crate::err!(
+                                "plan {:?}: step {step}/{label}: stale reuse \
+                                 (computed at {mid} after fill {filled_at})",
+                                self.name
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Check this plan matches an execution configuration: the step
+    /// count and the family's site enumeration. Rejects plans built for
+    /// a different family loudly (site-set mismatch), mirroring what
+    /// the grouped path has always done for step/branch-type
+    /// mismatches.
+    pub fn validate_for(&self, fm: &FamilyManifest, steps: usize) -> Result<()> {
+        if self.steps != steps {
+            return Err(crate::err!(
+                "plan {:?} has {} steps, request has {steps}",
+                self.name,
+                self.steps
+            ));
+        }
+        let expected = fm.branch_sites();
+        if self.sites != expected {
+            return Err(crate::err!(
+                "plan {:?} sites do not match family {:?} ({} plan sites vs {} family sites)",
+                self.name,
+                fm.name,
+                self.sites.len(),
+                expected.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Fraction of branch evaluations skipped (the paper's headline
+    /// compute-saving knob).
+    pub fn skip_fraction(&self) -> f64 {
+        if self.decisions.is_empty() {
+            return 0.0;
+        }
+        let skipped = self.decisions.iter().filter(|d| !d.is_compute()).count();
+        skipped as f64 / self.decisions.len() as f64
+    }
+
+    /// Largest reuse gap in the plan.
+    pub fn max_gap(&self) -> usize {
+        let n = self.sites.len();
+        let mut g = 0;
+        for (i, d) in self.decisions.iter().enumerate() {
+            if let Decision::Reuse { filled_at } = d {
+                g = g.max(i / n - filled_at);
+            }
+        }
+        g
+    }
+
+    /// Total computed branch evaluations across the plan.
+    pub fn computes_total(&self) -> usize {
+        self.decisions.iter().filter(|d| d.is_compute()).count()
+    }
+
+    /// Compact visual: one line per site, `#` compute / `.` reuse.
+    pub fn ascii(&self) -> String {
+        let mut out = String::new();
+        for site in 0..self.sites.len() {
+            out.push_str(&format!("{:>12} ", self.site_name(site)));
+            for step in 0..self.steps {
+                out.push(if self.decision(step, site).is_compute() { '#' } else { '.' });
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Planner — policy → plan
+// ---------------------------------------------------------------------------
+
+/// Everything a [`Planner`] may consult when resolving a policy to a
+/// [`CachePlan`] for one (family, solver, steps) configuration.
+pub struct PlanCtx<'a> {
+    /// family geometry: site enumeration, branch types, depth.
+    pub family: &'a FamilyManifest,
+    /// solver of the configuration (plans from calibrated curves are
+    /// trajectory-specific).
+    pub solver: SolverKind,
+    /// sampling steps the plan must span.
+    pub steps: usize,
+    /// calibrated error curves for the configuration; `Some` exactly
+    /// when the policy's [`Planner::needs_curves`] is true (the store
+    /// calibrates or loads them before calling [`Planner::plan`]).
+    pub curves: Option<&'a ErrorCurves>,
+}
+
+/// A caching policy: resolves to a static [`CachePlan`], or exposes a
+/// [`StepPlanner`] for runtime-adaptive decisions. Implementations are
+/// registered in [`registry`] and reached through
+/// [`parse_policy`] — the one table the CLI, the server wire format,
+/// the coordinator's lane choice, and the benches all consume.
+pub trait Planner: Send + Sync {
+    /// Canonical wire string ([`parse_policy`] round-trips it).
+    fn wire(&self) -> String;
+
+    /// True when [`Planner::plan`] requires calibrated
+    /// [`PlanCtx::curves`]. Such policies may pay a cold calibration on
+    /// first use — the coordinator routes them to the work queue's
+    /// normal lane until their curves are hot.
+    fn needs_curves(&self) -> bool {
+        false
+    }
+
+    /// Resolve the policy to a static plan for one configuration.
+    /// Dynamic policies (where [`Planner::dynamic`] returns `Some`)
+    /// have no static plan and error here.
+    fn plan(&self, ctx: &PlanCtx) -> Result<CachePlan>;
+
+    /// Runtime-adaptive hook: `Some` when decisions are made per
+    /// (step, site) from runtime observations instead of a
+    /// precomputed matrix.
+    fn dynamic(&self) -> Option<&dyn StepPlanner> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StepPlanner — runtime-adaptive policies
+// ---------------------------------------------------------------------------
+
+/// What the pipeline knows about one site when a dynamic policy
+/// decides. The pipeline owns all per-run state (cache fills, observed
+/// drift), so [`StepPlanner::decide`] can stay pure — decisions are
+/// deterministic functions of the trajectory, which keeps dynamic
+/// policies bitwise reproducible across thread counts and replicas.
+#[derive(Clone, Copy, Debug)]
+pub struct StepObs {
+    /// step at which this site's cached delta was computed
+    /// (`None` = cold cache; the decision must be `Compute`).
+    pub filled_at: Option<usize>,
+    /// relative L1 drift measured at this site's most recent compute
+    /// against the delta it replaced (`None` until the site has
+    /// computed twice).
+    pub last_drift: Option<f64>,
+}
+
+/// Per-(step, site) decision maker for runtime-adaptive policies.
+pub trait StepPlanner: Send + Sync {
+    /// Policy name for stats and renders.
+    fn name(&self) -> &str;
+
+    /// Decide what `(step, site)` does given the runtime observation.
+    /// Contract: must return `Compute` when `obs.filled_at` is `None`
+    /// (the pipeline rejects an impossible `Reuse` loudly).
+    fn decide(&self, step: usize, site: usize, obs: &StepObs) -> Decision;
+}
+
+/// What the generate loop executes: a dense precomputed [`CachePlan`]
+/// (static policies) or a [`StepPlanner`] deciding at runtime.
+#[derive(Clone, Copy)]
+pub enum PlanRef<'a> {
+    /// every (step, site) decision precomputed.
+    Plan(&'a CachePlan),
+    /// decisions made per (step, site) from runtime observations.
+    Planner(&'a dyn StepPlanner),
+}
+
+impl<'a> From<&'a CachePlan> for PlanRef<'a> {
+    fn from(p: &'a CachePlan) -> PlanRef<'a> {
+        PlanRef::Plan(p)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Concrete planners
+// ---------------------------------------------------------------------------
+
+/// `no-cache`: every branch computes at every step.
+struct NoCachePlanner;
+
+impl Planner for NoCachePlanner {
+    fn wire(&self) -> String {
+        "no-cache".into()
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> Result<CachePlan> {
+        Ok(CachePlan::no_cache(ctx.steps, &ctx.family.branch_sites()))
+    }
+}
+
+/// `fora:N`: compute on every N-th step, reuse otherwise.
+struct ForaPlanner {
+    n: usize,
+}
+
+impl Planner for ForaPlanner {
+    fn wire(&self) -> String {
+        format!("fora:{}", self.n)
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> Result<CachePlan> {
+        let s = Schedule::fora(ctx.steps, &ctx.family.branch_types, self.n);
+        CachePlan::from_grouped(&s, &ctx.family.branch_sites())
+    }
+}
+
+/// `alternate`: cache every other step (L2C proxy).
+struct AlternatePlanner;
+
+impl Planner for AlternatePlanner {
+    fn wire(&self) -> String {
+        "alternate".into()
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> Result<CachePlan> {
+        let s = Schedule::alternate(ctx.steps, &ctx.family.branch_types);
+        CachePlan::from_grouped(&s, &ctx.family.branch_sites())
+    }
+}
+
+/// `smooth:ALPHA`: the paper's grouped α-threshold schedule.
+struct SmoothPlanner {
+    alpha: f64,
+}
+
+impl Planner for SmoothPlanner {
+    fn wire(&self) -> String {
+        format!("smooth:{}", self.alpha)
+    }
+
+    fn needs_curves(&self) -> bool {
+        true
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> Result<CachePlan> {
+        let curves = ctx
+            .curves
+            .ok_or_else(|| crate::err!("smooth:{} needs calibrated curves", self.alpha))?;
+        let s = curves.smoothcache_schedule(self.alpha, &ctx.family.branch_types);
+        CachePlan::from_grouped(&s, &ctx.family.branch_sites())
+    }
+}
+
+/// `smooth-persite:ALPHA`: independent per-site α-threshold decisions
+/// (the grouping ablation).
+struct SmoothPerSitePlanner {
+    alpha: f64,
+}
+
+impl Planner for SmoothPerSitePlanner {
+    fn wire(&self) -> String {
+        format!("smooth-persite:{}", self.alpha)
+    }
+
+    fn needs_curves(&self) -> bool {
+        true
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> Result<CachePlan> {
+        let curves = ctx.curves.ok_or_else(|| {
+            crate::err!("smooth-persite:{} needs calibrated curves", self.alpha)
+        })?;
+        let map = curves.per_site_schedule(self.alpha);
+        CachePlan::from_site_map(
+            &format!("smoothcache-persite-a{}", self.alpha),
+            ctx.steps,
+            &ctx.family.branch_sites(),
+            &map,
+        )
+    }
+}
+
+/// `delta-dit:N`: depth-aware baseline (phase-dependent half of the
+/// block stack cached, refresh interval N).
+struct DeltaDitPlanner {
+    n: usize,
+}
+
+impl Planner for DeltaDitPlanner {
+    fn wire(&self) -> String {
+        format!("delta-dit:{}", self.n)
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> Result<CachePlan> {
+        let map = super::policies::delta_dit(
+            ctx.steps,
+            ctx.family.depth,
+            &ctx.family.branch_types,
+            self.n,
+            0.5,
+        );
+        CachePlan::from_site_map(
+            &format!("delta-dit-n{}", self.n),
+            ctx.steps,
+            &ctx.family.branch_sites(),
+            &map,
+        )
+    }
+}
+
+/// `drift:BOUND[:GAP]` — the runtime-adaptive error-feedback policy: a
+/// site keeps reusing its cached delta while the drift observed at its
+/// most recent refresh stayed below `BOUND`, and falls back to
+/// computing every step once the delta moves faster than that. Reuse
+/// runs are additionally capped at `GAP` steps (default 3, the paper's
+/// k_max) so stale deltas are refreshed — and each refresh measures
+/// drift again, re-opening reuse when the trajectory calms down.
+///
+/// This is the CorGi/Δ-DiT-successor shape the static-only API could
+/// not express: the decision depends on the *observed* trajectory, not
+/// on offline calibration, so it needs no calibration pass at all.
+pub struct DriftPlanner {
+    /// relative L1 drift bound: reuse while the last observed
+    /// per-refresh drift is ≤ this.
+    pub bound: f64,
+    /// maximum consecutive reuse steps per site.
+    pub max_gap: usize,
+}
+
+impl Planner for DriftPlanner {
+    fn wire(&self) -> String {
+        if self.max_gap == DRIFT_DEFAULT_GAP {
+            format!("drift:{}", self.bound)
+        } else {
+            format!("drift:{}:{}", self.bound, self.max_gap)
+        }
+    }
+
+    fn plan(&self, _ctx: &PlanCtx) -> Result<CachePlan> {
+        Err(crate::err!(
+            "drift:{} is runtime-adaptive: it has no static plan (use Planner::dynamic)",
+            self.bound
+        ))
+    }
+
+    fn dynamic(&self) -> Option<&dyn StepPlanner> {
+        Some(self)
+    }
+}
+
+impl StepPlanner for DriftPlanner {
+    fn name(&self) -> &str {
+        "drift"
+    }
+
+    fn decide(&self, step: usize, _site: usize, obs: &StepObs) -> Decision {
+        let Some(filled_at) = obs.filled_at else {
+            return Decision::Compute; // cold cache
+        };
+        if step - filled_at > self.max_gap {
+            return Decision::Compute; // cap staleness
+        }
+        match obs.last_drift {
+            // error feedback: reuse only while the last refresh saw the
+            // delta drifting slower than the bound
+            Some(d) if d <= self.bound => Decision::Reuse { filled_at },
+            _ => Decision::Compute,
+        }
+    }
+}
+
+const DRIFT_DEFAULT_GAP: usize = 3;
+
+// ---------------------------------------------------------------------------
+// Registry — the one policy table
+// ---------------------------------------------------------------------------
+
+/// Parser signature of one registry row: receives the text after
+/// `name:` (or `None` when the wire string is the bare name).
+pub type PolicyParseFn = fn(Option<&str>) -> Result<Arc<dyn Planner>>;
+
+/// One row of the policy registry: wire name, syntax, lane hints, a
+/// one-line description (rendered into docs/protocol.md — kept in sync
+/// by a test), and the parser.
+pub struct PolicySpec {
+    /// wire-format name (the part before `:`).
+    pub name: &'static str,
+    /// full wire syntax, e.g. `fora:N`.
+    pub syntax: &'static str,
+    /// one-line human description (no `|` characters — it is rendered
+    /// into a markdown table).
+    pub summary: &'static str,
+    /// true when resolving needs calibrated error curves (the policy
+    /// may pay a cold calibration → work-queue normal lane until hot).
+    pub needs_curves: bool,
+    /// true when decisions are made at runtime by a [`StepPlanner`].
+    pub dynamic: bool,
+    /// parse the argument portion into a planner.
+    pub parse: PolicyParseFn,
+}
+
+fn parse_bare(
+    name: &'static str,
+    arg: Option<&str>,
+    mk: fn() -> Arc<dyn Planner>,
+) -> Result<Arc<dyn Planner>> {
+    match arg {
+        None => Ok(mk()),
+        Some(a) => Err(crate::err!("policy {name} takes no argument, got {a:?}")),
+    }
+}
+
+/// Parse an α argument: finite and ≥ 0 (rejects `NaN`, `inf`, negatives).
+fn parse_alpha(name: &str, arg: Option<&str>) -> Result<f64> {
+    let a = arg.ok_or_else(|| crate::err!("{name} needs an alpha, e.g. {name}:0.35"))?;
+    let v: f64 = a.parse().map_err(|_| crate::err!("bad {name} alpha {a:?}"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(crate::err!("{name} alpha must be finite and >= 0, got {a:?}"));
+    }
+    Ok(v)
+}
+
+/// Parse a refresh-interval argument: an integer ≥ 1 (rejects 0 — a
+/// zero interval used to panic an executor replica from wire input).
+fn parse_interval(name: &str, arg: Option<&str>) -> Result<usize> {
+    let a = arg.ok_or_else(|| crate::err!("{name} needs an interval, e.g. {name}:2"))?;
+    let v: usize = a.parse().map_err(|_| crate::err!("bad {name} interval {a:?}"))?;
+    if v < 1 {
+        return Err(crate::err!("{name} interval must be >= 1, got {a:?}"));
+    }
+    Ok(v)
+}
+
+static REGISTRY: [PolicySpec; 7] = [
+    PolicySpec {
+        name: "no-cache",
+        syntax: "no-cache",
+        summary: "every branch computes at every step (baseline rows; calibration)",
+        needs_curves: false,
+        dynamic: false,
+        parse: |arg| parse_bare("no-cache", arg, || Arc::new(NoCachePlanner)),
+    },
+    PolicySpec {
+        name: "fora",
+        syntax: "fora:N",
+        summary: "compute on every N-th step, reuse otherwise (FORA baseline)",
+        needs_curves: false,
+        dynamic: false,
+        parse: |arg| Ok(Arc::new(ForaPlanner { n: parse_interval("fora", arg)? })),
+    },
+    PolicySpec {
+        name: "alternate",
+        syntax: "alternate",
+        summary: "cache every other step (L2C-proxy baseline)",
+        needs_curves: false,
+        dynamic: false,
+        parse: |arg| parse_bare("alternate", arg, || Arc::new(AlternatePlanner)),
+    },
+    PolicySpec {
+        name: "smooth",
+        syntax: "smooth:ALPHA",
+        summary: "SmoothCache grouped schedule thresholded at ALPHA (paper Eq. 4)",
+        needs_curves: true,
+        dynamic: false,
+        parse: |arg| Ok(Arc::new(SmoothPlanner { alpha: parse_alpha("smooth", arg)? })),
+    },
+    PolicySpec {
+        name: "smooth-persite",
+        syntax: "smooth-persite:ALPHA",
+        summary: "SmoothCache with independent per-site decisions (grouping ablation)",
+        needs_curves: true,
+        dynamic: false,
+        parse: |arg| {
+            Ok(Arc::new(SmoothPerSitePlanner { alpha: parse_alpha("smooth-persite", arg)? }))
+        },
+    },
+    PolicySpec {
+        name: "delta-dit",
+        syntax: "delta-dit:N",
+        summary: "depth-aware baseline: the phase-dependent half of the block stack reuses with refresh interval N",
+        needs_curves: false,
+        dynamic: false,
+        parse: |arg| Ok(Arc::new(DeltaDitPlanner { n: parse_interval("delta-dit", arg)? })),
+    },
+    PolicySpec {
+        name: "drift",
+        syntax: "drift:BOUND[:GAP]",
+        summary: "runtime-adaptive error feedback: reuse while the observed cached-delta drift stays below BOUND, recompute otherwise (reuse runs capped at GAP steps, default 3)",
+        needs_curves: false,
+        dynamic: true,
+        parse: parse_drift,
+    },
+];
+
+fn parse_drift(arg: Option<&str>) -> Result<Arc<dyn Planner>> {
+    let a = arg.ok_or_else(|| crate::err!("drift needs a bound, e.g. drift:0.35"))?;
+    let (bound_s, gap_s) = match a.split_once(':') {
+        Some((b, g)) => (b, Some(g)),
+        None => (a, None),
+    };
+    let bound: f64 =
+        bound_s.parse().map_err(|_| crate::err!("bad drift bound {bound_s:?}"))?;
+    if !bound.is_finite() || bound <= 0.0 {
+        return Err(crate::err!("drift bound must be finite and > 0, got {bound_s:?}"));
+    }
+    let max_gap = match gap_s {
+        None => DRIFT_DEFAULT_GAP,
+        Some(g) => {
+            let v: usize = g.parse().map_err(|_| crate::err!("bad drift gap {g:?}"))?;
+            if v < 1 {
+                return Err(crate::err!("drift gap must be >= 1, got {g:?}"));
+            }
+            v
+        }
+    };
+    Ok(Arc::new(DriftPlanner { bound, max_gap }))
+}
+
+/// The policy registry: every caching policy the stack understands, in
+/// wire-documentation order. The CLI help text, the server's wire
+/// format, `coordinator`'s lane choice and docs/protocol.md's policy
+/// table are all derived from this one table.
+pub fn registry() -> &'static [PolicySpec] {
+    &REGISTRY
+}
+
+/// Parse a wire-format policy string (`no-cache`, `fora:2`,
+/// `smooth:0.35`, `drift:0.3`, …) through the registry. Parameters are
+/// validated here — malformed wire input (zero intervals, non-finite
+/// alphas) returns a well-formed error instead of panicking later.
+pub fn parse_policy(s: &str) -> Result<Arc<dyn Planner>> {
+    let (name, arg) = match s.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (s, None),
+    };
+    for spec in registry() {
+        if spec.name == name {
+            return (spec.parse)(arg);
+        }
+    }
+    let known: Vec<&str> = registry().iter().map(|p| p.name).collect();
+    Err(crate::err!("unknown policy {s:?} (known: {known:?})"))
+}
+
+/// The registry rendered as markdown table rows (one per policy) —
+/// docs/protocol.md embeds exactly these rows, and a test asserts it,
+/// so the wire docs can no longer drift from the parser.
+pub fn registry_markdown_rows() -> Vec<String> {
+    registry()
+        .iter()
+        .map(|s| {
+            let kind = if s.dynamic {
+                "dynamic (runtime-decided)"
+            } else if s.needs_curves {
+                "static, needs calibration"
+            } else {
+                "static, calibration-free"
+            };
+            format!("| `{}` | `{}` | {} | {} |", s.name, s.syntax, kind, s.summary)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, gen};
+
+    fn sites2() -> Vec<(usize, String)> {
+        vec![
+            (0, "attn".into()),
+            (0, "ffn".into()),
+            (1, "attn".into()),
+            (1, "ffn".into()),
+        ]
+    }
+
+    #[test]
+    fn no_cache_plan_is_all_compute() {
+        let p = CachePlan::no_cache(5, &sites2());
+        p.validate().unwrap();
+        assert_eq!(p.skip_fraction(), 0.0);
+        assert_eq!(p.computes_total(), 20);
+        assert_eq!(p.max_gap(), 0);
+    }
+
+    #[test]
+    fn from_grouped_expands_branch_types_over_sites() {
+        let bts = vec!["attn".to_string(), "ffn".to_string()];
+        let s = Schedule::fora(6, &bts, 2);
+        let p = CachePlan::from_grouped(&s, &sites2()).unwrap();
+        p.validate().unwrap();
+        for step in 0..6 {
+            for (site, (_, bt)) in sites2().iter().enumerate() {
+                assert_eq!(p.decision(step, site), s.decision(step, bt), "step {step} site {site}");
+            }
+        }
+        assert!((p.skip_fraction() - s.skip_fraction()).abs() < 1e-12);
+        assert_eq!(p.max_gap(), s.max_gap());
+    }
+
+    #[test]
+    fn from_grouped_rejects_missing_branch_type() {
+        let s = Schedule::fora(4, &["attn".to_string()], 2);
+        assert!(CachePlan::from_grouped(&s, &sites2()).is_err());
+    }
+
+    #[test]
+    fn from_site_map_roundtrips_and_rejects_mismatches() {
+        let mut map = BTreeMap::new();
+        for (b, t) in sites2() {
+            map.insert(format!("{b}.{t}"), vec![Decision::Compute; 4]);
+        }
+        let p = CachePlan::from_site_map("t", 4, &sites2(), &map).unwrap();
+        assert_eq!(p.skip_fraction(), 0.0);
+
+        // missing site → loud
+        let mut missing = map.clone();
+        missing.remove("1.ffn");
+        let err = CachePlan::from_site_map("t", 4, &sites2(), &missing).unwrap_err();
+        assert!(format!("{err}").contains("mismatch"), "{err}");
+
+        // extra site → loud
+        let mut extra = map.clone();
+        extra.insert("9.ffn".into(), vec![Decision::Compute; 4]);
+        assert!(CachePlan::from_site_map("t", 4, &sites2(), &extra).is_err());
+
+        // wrong step count → loud
+        let mut short = map.clone();
+        short.insert("0.attn".into(), vec![Decision::Compute; 3]);
+        assert!(CachePlan::from_site_map("t", 4, &sites2(), &short).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_broken_invariants() {
+        let n = sites2().len();
+        let mk = |f: &dyn Fn(&mut Vec<Decision>)| {
+            let mut d = vec![Decision::Compute; 4 * n];
+            f(&mut d);
+            CachePlan::from_decisions("t", 4, sites2(), d)
+        };
+        assert!(mk(&|_| {}).validate().is_ok());
+        // step-0 reuse
+        assert!(mk(&|d| d[0] = Decision::Reuse { filled_at: 0 }).validate().is_err());
+        // future fill
+        assert!(mk(&|d| d[n] = Decision::Reuse { filled_at: 2 }).validate().is_err());
+        // fill was not computed
+        assert!(mk(&|d| {
+            d[n] = Decision::Reuse { filled_at: 0 };
+            d[2 * n] = Decision::Reuse { filled_at: 1 };
+        })
+        .validate()
+        .is_err());
+        // stale reuse (a newer compute exists between fill and step)
+        assert!(mk(&|d| d[3 * n] = Decision::Reuse { filled_at: 1 }).validate().is_err());
+        // wrong matrix size
+        assert!(CachePlan::from_decisions("t", 4, sites2(), vec![Decision::Compute; 7])
+            .validate()
+            .is_err());
+    }
+
+    /// validate() accepts *exactly* the invariant-respecting plans: an
+    /// independent oracle over random (mostly invalid) matrices agrees
+    /// with it on every case.
+    #[test]
+    fn prop_validate_matches_independent_oracle() {
+        fn oracle(steps: usize, n: usize, d: &[Decision]) -> bool {
+            if d.len() != steps * n {
+                return false;
+            }
+            for site in 0..n {
+                for step in 0..steps {
+                    if let Decision::Reuse { filled_at } = d[step * n + site] {
+                        if step == 0 || filled_at >= step {
+                            return false;
+                        }
+                        if !d[filled_at * n + site].is_compute() {
+                            return false;
+                        }
+                        if ((filled_at + 1)..step).any(|m| d[m * n + site].is_compute()) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        }
+        forall(
+            0x9A11,
+            400,
+            |r| {
+                let steps = gen::usize_in(r, 1, 8);
+                let n = gen::usize_in(r, 1, 4);
+                let cells = gen::vec_of(r, steps * n, steps * n + 1, |r| r.below(steps + 1));
+                (steps, n, cells)
+            },
+            |&(steps, n, ref cells): &(usize, usize, Vec<usize>)| {
+                let mut cells = cells.clone();
+                cells.resize(steps * n, 0);
+                let decisions: Vec<Decision> = cells
+                    .iter()
+                    .map(|&c| {
+                        if c == 0 {
+                            Decision::Compute
+                        } else {
+                            Decision::Reuse { filled_at: c - 1 }
+                        }
+                    })
+                    .collect();
+                let sites: Vec<(usize, String)> =
+                    (0..n).map(|i| (i, "bt".to_string())).collect();
+                let want = oracle(steps, n, &decisions);
+                let plan = CachePlan::from_decisions("p", steps, sites, decisions);
+                let got = plan.validate().is_ok();
+                if got != want {
+                    return Err(format!("validate={got} oracle={want}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Random *valid-by-construction* plans always pass validate().
+    #[test]
+    fn prop_constructed_plans_always_valid() {
+        forall(
+            0x9A12,
+            200,
+            |r| {
+                let steps = gen::usize_in(r, 1, 12);
+                let n = gen::usize_in(r, 1, 4);
+                let cells = gen::vec_of(r, steps * n, steps * n + 1, |r| r.below(3));
+                (steps, n, cells)
+            },
+            |&(steps, n, ref cells): &(usize, usize, Vec<usize>)| {
+                let mut cells = cells.clone();
+                cells.resize(steps * n, 0);
+                // walk each site column keeping a last-fill pointer, so
+                // every reuse is structurally legal by construction
+                let mut decisions = vec![Decision::Compute; steps * n];
+                for site in 0..n {
+                    let mut last_fill = 0usize;
+                    for step in 1..steps {
+                        if cells[step * n + site] > 0 {
+                            decisions[step * n + site] =
+                                Decision::Reuse { filled_at: last_fill };
+                        } else {
+                            last_fill = step;
+                        }
+                    }
+                }
+                let sites: Vec<(usize, String)> =
+                    (0..n).map(|i| (i, "bt".to_string())).collect();
+                CachePlan::from_decisions("p", steps, sites, decisions)
+                    .validate()
+                    .map_err(|e| e.to_string())
+            },
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_parameters() {
+        // zero intervals used to panic an executor via Schedule::fora's assert
+        assert!(parse_policy("fora:0").is_err());
+        assert!(parse_policy("delta-dit:0").is_err());
+        // non-finite / negative alphas parse as f64 but are rejected here
+        assert!(parse_policy("smooth:NaN").is_err());
+        assert!(parse_policy("smooth:inf").is_err());
+        assert!(parse_policy("smooth:-0.5").is_err());
+        assert!(parse_policy("smooth-persite:nan").is_err());
+        // drift: bound must be finite and positive, gap >= 1
+        assert!(parse_policy("drift:0").is_err());
+        assert!(parse_policy("drift:NaN").is_err());
+        assert!(parse_policy("drift:0.3:0").is_err());
+        // missing / extra arguments
+        assert!(parse_policy("fora").is_err());
+        assert!(parse_policy("smooth").is_err());
+        assert!(parse_policy("no-cache:1").is_err());
+        assert!(parse_policy("alternate:2").is_err());
+        assert!(parse_policy("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_roundtrips_canonical_wire() {
+        for wire in [
+            "no-cache",
+            "fora:2",
+            "alternate",
+            "smooth:0.18",
+            "smooth-persite:0.05",
+            "delta-dit:3",
+            "drift:0.3",
+            "drift:0.3:5",
+        ] {
+            let p = parse_policy(wire).unwrap();
+            assert_eq!(p.wire(), wire);
+            // re-parse of the canonical form is stable
+            assert_eq!(parse_policy(&p.wire()).unwrap().wire(), wire);
+        }
+        // default gap is elided from the canonical form
+        assert_eq!(parse_policy("drift:0.3:3").unwrap().wire(), "drift:0.3");
+    }
+
+    #[test]
+    fn drift_planner_implements_error_feedback() {
+        let p = DriftPlanner { bound: 0.5, max_gap: 3 };
+        let cold = StepObs { filled_at: None, last_drift: None };
+        assert!(p.decide(0, 0, &cold).is_compute());
+        // filled but drift unknown yet → compute (records the first drift)
+        let unknown = StepObs { filled_at: Some(0), last_drift: None };
+        assert!(p.decide(1, 0, &unknown).is_compute());
+        // calm delta → reuse
+        let calm = StepObs { filled_at: Some(1), last_drift: Some(0.1) };
+        assert_eq!(p.decide(2, 0, &calm), Decision::Reuse { filled_at: 1 });
+        // gap cap: filled at 1, step 5 would be gap 4 > 3
+        let stale = StepObs { filled_at: Some(1), last_drift: Some(0.1) };
+        assert!(p.decide(5, 0, &stale).is_compute());
+        // drifting delta → fall back to compute
+        let hot = StepObs { filled_at: Some(4), last_drift: Some(0.9) };
+        assert!(p.decide(5, 0, &hot).is_compute());
+    }
+
+    #[test]
+    fn registry_rows_cover_every_policy() {
+        let rows = registry_markdown_rows();
+        assert_eq!(rows.len(), registry().len());
+        for (row, spec) in rows.iter().zip(registry()) {
+            assert!(row.contains(spec.name));
+            assert!(!spec.summary.contains('|'), "{}: markdown-breaking summary", spec.name);
+        }
+    }
+}

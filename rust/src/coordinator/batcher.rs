@@ -143,7 +143,7 @@ mod tests {
                 steps,
                 cfg_scale: cfg,
                 seed: id,
-                policy: Policy::NoCache,
+                policy: Policy::no_cache(),
             },
             submitted: Instant::now(),
             reply: tx,

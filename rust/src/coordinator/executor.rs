@@ -3,12 +3,13 @@
 //! so that backend runs exactly one replica; the reference backend
 //! replicates freely), pulls batches from the coordinator's shared
 //! [`WorkQueue`] whenever it goes idle,
-//! resolves caching policies to concrete schedules through the
-//! pool-shared [`ScheduleStore`] (calibrating on demand, exactly once
-//! per configuration across all replicas), and runs batched
-//! generations.
+//! resolves caching policies to concrete [`CachePlan`]s through the
+//! pool-shared [`PlanStore`] (calibrating on demand, exactly once per
+//! configuration across all replicas) — or drives a
+//! [`crate::cache::StepPlanner`] at runtime for dynamic policies — and
+//! runs batched generations.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
@@ -17,10 +18,11 @@ use crate::util::error::Result;
 
 use super::metrics::Metrics;
 use super::queue::WorkQueue;
-use super::request::{InFlight, Policy, Request, Response};
-use crate::cache::{calibrate, CalibrationConfig, Decision, ErrorCurves, Schedule};
+use super::request::{InFlight, Request, Response};
+use crate::cache::plan::{CachePlan, PlanCtx, PlanRef};
+use crate::cache::{calibrate, CalibrationConfig, ErrorCurves};
 use crate::model::Engine;
-use crate::pipeline::{generate_from, CacheMode, GenConfig};
+use crate::pipeline::{generate_from, GenConfig};
 use crate::solvers::SolverRun;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -43,24 +45,41 @@ pub struct ExecutorConfig {
     pub curves_dir: Option<std::path::PathBuf>,
 }
 
-/// One [`ScheduleStore`] shared by every executor replica: calibration
-/// is expensive, so the first replica to need a (family, solver, steps)
+/// One [`PlanStore`] shared by every executor replica: calibration is
+/// expensive, so the first replica to need a (family, solver, steps)
 /// configuration calibrates while the others block on the mutex and
 /// then read the cached curves — the "calibrate once per config"
 /// serving contract holds at any pool size.
-pub type SharedScheduleStore = Arc<Mutex<ScheduleStore>>;
+pub type SharedPlanStore = Arc<Mutex<PlanStore>>;
 
 /// Lock the shared store, recovering from a replica that panicked while
 /// holding it (the store's maps are always left consistent: entries are
 /// inserted fully-formed).
-pub fn lock_store(store: &SharedScheduleStore) -> MutexGuard<'_, ScheduleStore> {
+pub fn lock_store(store: &SharedPlanStore) -> MutexGuard<'_, PlanStore> {
     store.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
-/// Caches calibration curves and resolved schedules across requests.
-/// Invariant: entries are only ever inserted fully-formed, so any
-/// observable state is consistent even after a panic mid-request.
-pub struct ScheduleStore {
+/// Cache key for one resolved plan: the full configuration a
+/// [`CachePlan`] is specific to.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// model family the plan was built for.
+    pub family: String,
+    /// solver name (calibrated plans are trajectory-specific).
+    pub solver: String,
+    /// sampling steps the plan spans.
+    pub steps: usize,
+    /// canonical policy wire string.
+    pub policy: String,
+}
+
+/// Caches calibration curves and resolved [`CachePlan`]s across
+/// requests: one `PlanKey → Arc<CachePlan>` map for every policy shape
+/// (this replaced the pre-plan-API trio of grouped-schedule and
+/// per-site-map caches keyed by ad-hoc tuples). Invariant: entries are
+/// only ever inserted fully-formed, so any observable state is
+/// consistent even after a panic mid-request.
+pub struct PlanStore {
     /// calibration samples for on-demand calibration (see
     /// [`ExecutorConfig::calib_samples`]).
     pub calib_samples: usize,
@@ -70,24 +89,22 @@ pub struct ScheduleStore {
     /// before calibrating.
     pub curves_dir: Option<std::path::PathBuf>,
     curves: HashMap<(String, String, usize), ErrorCurves>,
-    schedules: HashMap<(String, String, usize, String), Schedule>,
-    per_site: HashMap<(String, String, usize, String), BTreeMap<String, Vec<Decision>>>,
+    plans: HashMap<PlanKey, Arc<CachePlan>>,
 }
 
-impl ScheduleStore {
+impl PlanStore {
     /// An empty store with the given calibration settings.
     pub fn new(
         calib_samples: usize,
         calib_seed: u64,
         curves_dir: Option<std::path::PathBuf>,
-    ) -> ScheduleStore {
-        ScheduleStore {
+    ) -> PlanStore {
+        PlanStore {
             calib_samples,
             calib_seed,
             curves_dir,
             curves: HashMap::new(),
-            schedules: HashMap::new(),
-            per_site: HashMap::new(),
+            plans: HashMap::new(),
         }
     }
 
@@ -112,10 +129,10 @@ impl ScheduleStore {
 
     /// Whether calibration curves for (family, solver, steps) are
     /// already available — in memory, or pre-computed on disk under
-    /// `curves_dir` — i.e. a `smooth:*` request for this configuration
-    /// would resolve without paying a calibration. The batcher uses
-    /// this (via `try_lock`, never blocking behind an in-flight
-    /// calibration) to pick the work-queue lane.
+    /// `curves_dir` — i.e. a curve-needing request for this
+    /// configuration would resolve without paying a calibration. The
+    /// batcher uses this (via `try_lock`, never blocking behind an
+    /// in-flight calibration) to pick the work-queue lane.
     pub fn has_curves(
         &self,
         family: &str,
@@ -179,88 +196,58 @@ impl ScheduleStore {
         Ok(self.curves.get(&key).unwrap())
     }
 
-    /// Resolve a policy to a grouped schedule (or a per-site map).
-    pub fn resolve(
+    /// Resolve a static policy to its [`CachePlan`] for one
+    /// configuration, building (and calibrating) on first use and
+    /// returning the shared cached plan afterwards. Dynamic policies
+    /// never reach the store — the executor drives their
+    /// [`crate::cache::StepPlanner`] directly, without the lock.
+    pub fn plan(
         &mut self,
         engine: &Engine,
         metrics: Option<&Metrics>,
         family: &str,
         solver: crate::solvers::SolverKind,
         steps: usize,
-        policy: &Policy,
-    ) -> Result<ResolvedPolicy> {
+        policy: &super::request::Policy,
+    ) -> Result<Arc<CachePlan>> {
+        let key = PlanKey {
+            family: family.to_string(),
+            solver: solver.name().to_string(),
+            steps,
+            policy: policy.wire().to_string(),
+        };
+        if let Some(p) = self.plans.get(&key) {
+            if let Some(m) = metrics {
+                Metrics::inc(&m.plan_cache_hits);
+            }
+            return Ok(Arc::clone(p));
+        }
         let fm = engine.family_manifest(family)?;
-        let bts = fm.branch_types.clone();
-        let skey = (family.to_string(), solver.name().to_string(), steps, policy.wire());
-        match policy {
-            Policy::NoCache => Ok(ResolvedPolicy::None),
-            Policy::Fora(n) => {
-                if !self.schedules.contains_key(&skey) {
-                    self.schedules.insert(skey.clone(), Schedule::fora(steps, &bts, *n));
-                }
-                Ok(ResolvedPolicy::Grouped(self.schedules[&skey].clone()))
-            }
-            Policy::Alternate => {
-                if !self.schedules.contains_key(&skey) {
-                    self.schedules.insert(skey.clone(), Schedule::alternate(steps, &bts));
-                }
-                Ok(ResolvedPolicy::Grouped(self.schedules[&skey].clone()))
-            }
-            Policy::Smooth(alpha) => {
-                if !self.schedules.contains_key(&skey) {
-                    let curves = self.curves(engine, metrics, family, solver, steps)?;
-                    let s = curves.smoothcache_schedule(*alpha, &bts);
-                    self.schedules.insert(skey.clone(), s);
-                }
-                Ok(ResolvedPolicy::Grouped(self.schedules[&skey].clone()))
-            }
-            Policy::DeltaDit(n) => {
-                if !self.per_site.contains_key(&skey) {
-                    let m = crate::cache::delta_dit(steps, fm.depth, &bts, *n, 0.5);
-                    self.per_site.insert(skey.clone(), m);
-                }
-                Ok(ResolvedPolicy::PerSite(self.per_site[&skey].clone()))
-            }
-            Policy::SmoothPerSite(alpha) => {
-                if !self.per_site.contains_key(&skey) {
-                    let curves = self.curves(engine, metrics, family, solver, steps)?;
-                    let m = curves.per_site_schedule(*alpha);
-                    self.per_site.insert(skey.clone(), m);
-                }
-                Ok(ResolvedPolicy::PerSite(self.per_site[&skey].clone()))
-            }
+        let planner = policy.planner();
+        let plan = if planner.needs_curves() {
+            let curves = self.curves(engine, metrics, family, solver, steps)?;
+            Arc::new(planner.plan(&PlanCtx { family: fm, solver, steps, curves: Some(curves) })?)
+        } else {
+            Arc::new(planner.plan(&PlanCtx { family: fm, solver, steps, curves: None })?)
+        };
+        self.plans.insert(key, Arc::clone(&plan));
+        // counted only after a successful build + insert, so the
+        // counter means "plans actually built and cached"
+        if let Some(m) = metrics {
+            Metrics::inc(&m.plan_cache_misses);
         }
-    }
-}
-
-/// A caching policy resolved to the concrete artifact the pipeline
-/// executes (invariant: resolved schedules always pass
-/// [`Schedule::validate`]).
-pub enum ResolvedPolicy {
-    /// No caching: every branch computes at every step.
-    None,
-    /// One depth-grouped [`Schedule`] (the paper's decision shape).
-    Grouped(Schedule),
-    /// Per-site decisions keyed `"block.branch"` (grouping ablation and
-    /// δ-DiT-style baselines).
-    PerSite(BTreeMap<String, Vec<Decision>>),
-}
-
-impl ResolvedPolicy {
-    /// Borrow as the [`CacheMode`] the pipeline's generate loop takes.
-    pub fn as_mode(&self) -> CacheMode<'_> {
-        match self {
-            ResolvedPolicy::None => CacheMode::None,
-            ResolvedPolicy::Grouped(s) => CacheMode::Grouped(s),
-            ResolvedPolicy::PerSite(m) => CacheMode::PerSite(m),
-        }
+        Ok(plan)
     }
 }
 
 /// Execute one homogeneous batch of requests on the engine.
+/// `local_plans` is this replica's private cache for calibration-free
+/// static plans (see the resolution comment below) — pass an empty map
+/// for one-off execution.
 pub fn execute_batch(
     engine: &mut Engine,
-    store: &SharedScheduleStore,
+    store: &SharedPlanStore,
+    local_plans: &mut HashMap<PlanKey, Arc<CachePlan>>,
     metrics: &Metrics,
     batch: Vec<InFlight>,
     supported_batches: &[usize],
@@ -306,45 +293,63 @@ pub fn execute_batch(
 
     // Calibration-free policies are pure functions of the manifest
     // geometry — resolve them WITHOUT the shared store lock, so a
-    // replica calibrating a smooth:α config can never stall them on its
-    // siblings. This is what makes the work queue's priority lane a real
-    // no-head-of-line-blocking guarantee (ADR-002): overtaking in the
-    // queue would be worthless if the batch then parked on the store
-    // mutex a calibration holds. Only smooth:* policies take the lock,
-    // and calibration deliberately runs under it: that is what makes
-    // "calibrate once per config" hold across the pool. (Residual,
-    // documented in ADR-002: an already-calibrated smooth key can still
-    // wait behind an in-flight calibration of a *different* smooth key.)
-    let resolved = match &req0.policy {
-        Policy::NoCache => ResolvedPolicy::None,
-        Policy::Fora(n) => {
-            ResolvedPolicy::Grouped(Schedule::fora(req0.steps, &fm.branch_types, *n))
-        }
-        Policy::Alternate => {
-            ResolvedPolicy::Grouped(Schedule::alternate(req0.steps, &fm.branch_types))
-        }
-        Policy::DeltaDit(n) => ResolvedPolicy::PerSite(crate::cache::delta_dit(
-            req0.steps,
-            fm.depth,
-            &fm.branch_types,
-            *n,
-            0.5,
-        )),
-        Policy::Smooth(_) | Policy::SmoothPerSite(_) => lock_store(store).resolve(
+    // replica calibrating a curve-needing config can never stall them
+    // on its siblings. This is what makes the work queue's priority
+    // lane a real no-head-of-line-blocking guarantee (ADR-002):
+    // overtaking in the queue would be worthless if the batch then
+    // parked on the store mutex a calibration holds. Only policies
+    // whose planner needs curves take the lock, and calibration
+    // deliberately runs under it: that is what makes "calibrate once
+    // per config" hold across the pool. (Residual, documented in
+    // ADR-002: an already-calibrated smooth key can still wait behind
+    // an in-flight calibration of a *different* smooth key.) Dynamic
+    // policies carry no plan at all — their StepPlanner decides inside
+    // the generate loop from runtime observations.
+    let planner = req0.policy.planner();
+    let held_plan;
+    let plan = if let Some(sp) = planner.dynamic() {
+        PlanRef::Planner(sp)
+    } else if !planner.needs_curves() {
+        // cached per *replica* (lock-free), built at most once per
+        // configuration — repeated traffic pays one flat-map lookup,
+        // not a rebuild + validate per batch
+        let key = PlanKey {
+            family: family.clone(),
+            solver: req0.solver.name().to_string(),
+            steps: req0.steps,
+            policy: req0.policy.wire().to_string(),
+        };
+        held_plan = match local_plans.get(&key) {
+            Some(p) => Arc::clone(p),
+            None => {
+                let p = Arc::new(planner.plan(&PlanCtx {
+                    family: &fm,
+                    solver: req0.solver,
+                    steps: req0.steps,
+                    curves: None,
+                })?);
+                local_plans.insert(key, Arc::clone(&p));
+                p
+            }
+        };
+        PlanRef::Plan(&held_plan)
+    } else {
+        held_plan = lock_store(store).plan(
             engine,
             Some(metrics),
             &family,
             req0.solver,
             req0.steps,
             &req0.policy,
-        )?,
+        )?;
+        PlanRef::Plan(&held_plan)
     };
     let gen_cfg = GenConfig::new(&family, req0.solver, req0.steps)
         .with_cfg(req0.cfg_scale)
         .with_seed(req0.seed);
 
     let queue_at = exec_start;
-    let out = generate_from(engine, &gen_cfg, &cond, x_init, &resolved.as_mode(), None)?;
+    let out = generate_from(engine, &gen_cfg, &cond, x_init, plan, None)?;
     let exec_seconds = exec_start.elapsed().as_secs_f64();
 
     Metrics::inc(&metrics.batches_executed);
@@ -387,7 +392,7 @@ pub fn run_executor(
     queue: Arc<WorkQueue>,
     live: Arc<AtomicUsize>,
     metrics: Arc<Metrics>,
-    store: SharedScheduleStore,
+    store: SharedPlanStore,
 ) {
     let mut engine = match Engine::open(config.artifacts_dir.clone()) {
         Ok(e) => e,
@@ -416,6 +421,12 @@ pub fn run_executor(
         }
     }
 
+    // replica-local cache of calibration-free static plans: lock-free
+    // by construction (never shared), so ADR-002's no-head-of-line
+    // guarantee is untouched while repeated traffic stops rebuilding
+    // identical plans per batch
+    let mut local_plans: HashMap<PlanKey, Arc<CachePlan>> = HashMap::new();
+
     while let Some(q) = queue.pop() {
         Metrics::set(&metrics.queue_depth, queue.len() as u64);
         metrics.queue_wait.observe(q.enqueued.elapsed().as_secs_f64());
@@ -423,7 +434,14 @@ pub fn run_executor(
         // keep reply handles in case of failure
         let ids: Vec<u64> = batch.iter().map(|b| b.request.id).collect();
         let replies: Vec<_> = batch.iter().map(|b| b.reply.clone()).collect();
-        if let Err(e) = execute_batch(&mut engine, &store, &metrics, batch, &supported_batches) {
+        if let Err(e) = execute_batch(
+            &mut engine,
+            &store,
+            &mut local_plans,
+            &metrics,
+            batch,
+            &supported_batches,
+        ) {
             eprintln!("executor[{worker}]: batch {ids:?} failed: {e:#}");
             for r in replies {
                 Metrics::inc(&metrics.requests_failed);

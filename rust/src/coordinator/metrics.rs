@@ -95,6 +95,11 @@ pub struct Metrics {
     pub branch_reuses: AtomicU64,
     /// Calibration passes run (once per cold (family, solver, steps)).
     pub calibrations: AtomicU64,
+    /// Plan-store lookups answered from the `PlanKey → CachePlan`
+    /// cache (curve-needing policies resolved without rebuilding).
+    pub plan_cache_hits: AtomicU64,
+    /// Plan-store lookups that built (and cached) a fresh `CachePlan`.
+    pub plan_cache_misses: AtomicU64,
     /// Requests rejected at work-queue admission because the queue was
     /// full (`--queue-depth`); surfaced to clients as `overloaded:`
     /// errors (docs/protocol.md).
@@ -161,7 +166,7 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "workers={} requests={} completed={} failed={} rejected={} batches={} \
-             qdepth={} qpeak={} occupancy={:.2} \
+             qdepth={} qpeak={} occupancy={:.2} plan_hits={} plan_miss={} \
              e2e_mean={:.3}s e2e_p95={:.3}s queue_mean={:.3}s qwait_mean={:.3}s \
              qwait_p95={:.3}s exec_mean={:.3}s skips={}/{}",
             Self::get(&self.executor_replicas).max(1),
@@ -173,6 +178,8 @@ impl Metrics {
             Self::get(&self.queue_depth),
             Self::get(&self.queue_peak_depth),
             self.occupancy(),
+            Self::get(&self.plan_cache_hits),
+            Self::get(&self.plan_cache_misses),
             self.e2e_latency.mean(),
             self.e2e_latency.quantile(0.95),
             self.queue_latency.mean(),
@@ -225,6 +232,16 @@ mod tests {
         let m = Metrics::default();
         Metrics::inc(&m.requests_submitted);
         assert!(m.summary().contains("requests=1"));
+    }
+
+    #[test]
+    fn summary_reports_plan_cache_counters() {
+        let m = Metrics::default();
+        Metrics::add(&m.plan_cache_hits, 4);
+        Metrics::inc(&m.plan_cache_misses);
+        let s = m.summary();
+        assert!(s.contains("plan_hits=4"), "{s}");
+        assert!(s.contains("plan_miss=1"), "{s}");
     }
 
     #[test]

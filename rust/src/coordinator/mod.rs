@@ -27,9 +27,12 @@
 //! calibration take the priority lane and overtake ones that do; and
 //! when the queue is full, new batches are rejected with an
 //! `overloaded:` error rather than queued without bound
-//! (`--queue-depth`, docs/protocol.md). Calibration state lives in one
-//! [`executor::SharedScheduleStore`] behind an `Arc<Mutex>`, so
-//! "calibrate once per configuration" holds at any pool size.
+//! (`--queue-depth`, docs/protocol.md). Calibration curves and resolved
+//! [`crate::cache::CachePlan`]s live in one
+//! [`executor::SharedPlanStore`] behind an `Arc<Mutex>`, so "calibrate
+//! once per configuration" holds at any pool size; the lane choice for
+//! each batch comes straight from the policy registry
+//! ([`crate::cache::plan::registry`]) instead of re-matching an enum.
 #![deny(missing_docs)]
 
 pub mod batcher;
@@ -46,7 +49,7 @@ use std::time::{Duration, Instant};
 use crate::util::error::Result;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use executor::{ExecutorConfig, ScheduleStore, SharedScheduleStore};
+pub use executor::{ExecutorConfig, PlanKey, PlanStore, SharedPlanStore};
 pub use metrics::{Histogram, Metrics};
 pub use queue::{Lane, QueuedBatch, WorkQueue};
 pub use request::{BatchKey, InFlight, Policy, Request, Response};
@@ -164,7 +167,7 @@ impl Coordinator {
             calib_seed: config.calib_seed,
             curves_dir: config.curves_dir,
         };
-        let store: SharedScheduleStore = Arc::new(Mutex::new(ScheduleStore::new(
+        let store: SharedPlanStore = Arc::new(Mutex::new(PlanStore::new(
             ecfg.calib_samples,
             ecfg.calib_seed,
             ecfg.curves_dir.clone(),
@@ -270,34 +273,31 @@ impl Drop for Coordinator {
 }
 
 /// Pick the work-queue lane for a flushed batch: priority for every
-/// policy that resolves without a cold calibration (`no-cache`,
-/// `fora:*`, `alternate`, `delta-dit:*`, and `smooth:*` whose curves
-/// are already cached), normal for `smooth:*` keys that still need one.
-/// Uses `try_lock` on the schedule store: if a calibration currently
-/// holds the lock we cannot cheaply tell whether *this* key is hot, and
-/// conservatively treat it as cold — the batcher must never block
-/// behind a calibration, that is the exact head-of-line failure the
-/// queue exists to prevent.
-fn lane_for(store: &SharedScheduleStore, request: &Request) -> Lane {
-    match &request.policy {
-        Policy::NoCache | Policy::Fora(_) | Policy::Alternate | Policy::DeltaDit(_) => {
-            Lane::Priority
+/// policy that resolves without a cold calibration, normal for
+/// curve-needing keys that still need one. The calibration-free check
+/// is the policy registry's lane hint
+/// ([`request::Policy::needs_curves`]) — no per-policy enum matching.
+/// For curve-needing policies this uses `try_lock` on the plan store:
+/// if a calibration currently holds the lock we cannot cheaply tell
+/// whether *this* key is hot, and conservatively treat it as cold —
+/// the batcher must never block behind a calibration, that is the
+/// exact head-of-line failure the queue exists to prevent.
+fn lane_for(store: &SharedPlanStore, request: &Request) -> Lane {
+    if !request.policy.needs_curves() {
+        return Lane::Priority;
+    }
+    let hot = match store.try_lock() {
+        Ok(s) => s.has_curves(&request.family, request.solver, request.steps),
+        Err(std::sync::TryLockError::Poisoned(p)) => {
+            p.into_inner()
+                .has_curves(&request.family, request.solver, request.steps)
         }
-        Policy::Smooth(_) | Policy::SmoothPerSite(_) => {
-            let hot = match store.try_lock() {
-                Ok(s) => s.has_curves(&request.family, request.solver, request.steps),
-                Err(std::sync::TryLockError::Poisoned(p)) => {
-                    p.into_inner()
-                        .has_curves(&request.family, request.solver, request.steps)
-                }
-                Err(std::sync::TryLockError::WouldBlock) => false,
-            };
-            if hot {
-                Lane::Priority
-            } else {
-                Lane::Normal
-            }
-        }
+        Err(std::sync::TryLockError::WouldBlock) => false,
+    };
+    if hot {
+        Lane::Priority
+    } else {
+        Lane::Normal
     }
 }
 
@@ -310,7 +310,7 @@ fn run_batcher(
     config: BatcherConfig,
     rx: Receiver<InFlight>,
     queue: Arc<WorkQueue>,
-    store: SharedScheduleStore,
+    store: SharedPlanStore,
     metrics: Arc<Metrics>,
 ) {
     let mut batcher = Batcher::new(config);
@@ -385,24 +385,28 @@ mod tests {
 
     #[test]
     fn lane_for_routes_calibration_free_policies_to_priority() {
-        let store: SharedScheduleStore =
-            Arc::new(Mutex::new(ScheduleStore::new(2, 7, None)));
-        for p in [Policy::NoCache, Policy::Fora(2), Policy::Alternate, Policy::DeltaDit(2)] {
+        let store: SharedPlanStore = Arc::new(Mutex::new(PlanStore::new(2, 7, None)));
+        for p in [
+            Policy::no_cache(),
+            Policy::fora(2),
+            Policy::alternate(),
+            Policy::delta_dit(2),
+            Policy::drift(0.3), // dynamic policies never calibrate
+        ] {
             assert_eq!(lane_for(&store, &req(p)), Lane::Priority);
         }
-        // cold smooth keys wait in the normal lane
-        assert_eq!(lane_for(&store, &req(Policy::Smooth(0.2))), Lane::Normal);
-        assert_eq!(lane_for(&store, &req(Policy::SmoothPerSite(0.2))), Lane::Normal);
+        // cold curve-needing keys wait in the normal lane
+        assert_eq!(lane_for(&store, &req(Policy::smooth(0.2))), Lane::Normal);
+        assert_eq!(lane_for(&store, &req(Policy::smooth_per_site(0.2))), Lane::Normal);
     }
 
     #[test]
     fn lane_for_is_conservative_while_store_is_locked() {
-        let store: SharedScheduleStore =
-            Arc::new(Mutex::new(ScheduleStore::new(2, 7, None)));
+        let store: SharedPlanStore = Arc::new(Mutex::new(PlanStore::new(2, 7, None)));
         let guard = store.lock().unwrap(); // a "calibration in flight"
-        assert_eq!(lane_for(&store, &req(Policy::Smooth(0.2))), Lane::Normal);
+        assert_eq!(lane_for(&store, &req(Policy::smooth(0.2))), Lane::Normal);
         // lock never blocks lane selection for calibration-free policies
-        assert_eq!(lane_for(&store, &req(Policy::NoCache)), Lane::Priority);
+        assert_eq!(lane_for(&store, &req(Policy::no_cache())), Lane::Priority);
         drop(guard);
     }
 }

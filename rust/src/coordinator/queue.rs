@@ -205,7 +205,7 @@ mod tests {
                         steps: 4,
                         cfg_scale: 1.0,
                         seed: id,
-                        policy: Policy::NoCache,
+                        policy: Policy::no_cache(),
                     },
                     submitted: Instant::now(),
                     reply: tx,

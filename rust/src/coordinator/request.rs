@@ -1,70 +1,109 @@
 //! Request/response types and the caching-policy vocabulary.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::util::error::Result;
 
+use crate::cache::plan::{parse_policy, Planner};
 use crate::model::Cond;
 use crate::pipeline::GenStats;
 use crate::solvers::SolverKind;
 use crate::tensor::Tensor;
 
-/// Caching policy a request selects (resolved to a concrete
-/// [`crate::cache::Schedule`] by the executor; SmoothCache policies
-/// trigger a one-time calibration per (family, solver, steps)).
-#[derive(Clone, Debug, PartialEq)]
-pub enum Policy {
-    /// every branch computes at every step (the paper's baseline rows).
-    NoCache,
-    /// FORA-style uniform caching: compute every n-th step.
-    Fora(usize),
-    /// L2C-proxy: cache every other step.
-    Alternate,
-    /// the paper's method, α threshold (grouped decisions).
-    Smooth(f64),
-    /// grouping ablation: per-site decisions at α.
-    SmoothPerSite(f64),
-    /// δ-DiT-style depth-aware baseline (refresh interval n).
-    DeltaDit(usize),
+/// Caching policy a request selects: a parsed wire string bound to its
+/// [`Planner`] from the policy registry
+/// ([`crate::cache::plan::registry`]). The executor resolves it to a
+/// concrete [`crate::cache::CachePlan`] (cached per configuration in
+/// the pool-shared plan store) or drives its
+/// [`crate::cache::StepPlanner`] at runtime; policies whose planner
+/// [`Planner::needs_curves`] trigger a one-time calibration per
+/// (family, solver, steps).
+///
+/// Equality, hashing inputs ([`Request::batch_key`]) and `Debug` all go
+/// through the canonical wire string, so two spellings of the same
+/// policy batch together.
+#[derive(Clone)]
+pub struct Policy {
+    wire: String,
+    planner: Arc<dyn Planner>,
 }
 
 impl Policy {
-    /// Parse the wire format: `no-cache`, `fora:2`, `alternate`,
-    /// `smooth:0.18`, `smooth-persite:0.18`.
+    /// Parse the wire format through the policy registry: `no-cache`,
+    /// `fora:2`, `alternate`, `smooth:0.18`, `smooth-persite:0.18`,
+    /// `delta-dit:2`, `drift:0.3`. Parameters are validated here —
+    /// malformed wire input returns an error instead of panicking an
+    /// executor later.
     pub fn parse(s: &str) -> Result<Policy> {
-        if s == "no-cache" {
-            return Ok(Policy::NoCache);
-        }
-        if s == "alternate" {
-            return Ok(Policy::Alternate);
-        }
-        if let Some(n) = s.strip_prefix("fora:") {
-            return Ok(Policy::Fora(n.parse().map_err(|_| crate::err!("bad fora n: {n}"))?));
-        }
-        if let Some(a) = s.strip_prefix("smooth-persite:") {
-            return Ok(Policy::SmoothPerSite(
-                a.parse().map_err(|_| crate::err!("bad alpha: {a}"))?,
-            ));
-        }
-        if let Some(a) = s.strip_prefix("smooth:") {
-            return Ok(Policy::Smooth(a.parse().map_err(|_| crate::err!("bad alpha: {a}"))?));
-        }
-        if let Some(n) = s.strip_prefix("delta-dit:") {
-            return Ok(Policy::DeltaDit(n.parse().map_err(|_| crate::err!("bad delta-dit n: {n}"))?));
-        }
-        Err(crate::err!("unknown policy {s:?}"))
+        let planner = parse_policy(s)?;
+        Ok(Policy { wire: planner.wire(), planner })
     }
 
-    /// Render the wire format [`Policy::parse`] accepts.
-    pub fn wire(&self) -> String {
-        match self {
-            Policy::NoCache => "no-cache".into(),
-            Policy::Fora(n) => format!("fora:{n}"),
-            Policy::Alternate => "alternate".into(),
-            Policy::Smooth(a) => format!("smooth:{a}"),
-            Policy::SmoothPerSite(a) => format!("smooth-persite:{a}"),
-            Policy::DeltaDit(n) => format!("delta-dit:{n}"),
-        }
+    /// The canonical wire form ([`Policy::parse`] round-trips it).
+    pub fn wire(&self) -> &str {
+        &self.wire
+    }
+
+    /// The planner behind this policy.
+    pub fn planner(&self) -> &dyn Planner {
+        self.planner.as_ref()
+    }
+
+    /// Whether resolving needs calibrated error curves (lane hint: such
+    /// policies may pay a cold calibration on first use).
+    pub fn needs_curves(&self) -> bool {
+        self.planner.needs_curves()
+    }
+
+    /// `no-cache` (every branch computes at every step).
+    pub fn no_cache() -> Policy {
+        Policy::parse("no-cache").expect("registry")
+    }
+
+    /// `fora:N`. Panics if `n == 0` (use [`Policy::parse`] for wire input).
+    pub fn fora(n: usize) -> Policy {
+        Policy::parse(&format!("fora:{n}")).expect("fora interval must be >= 1")
+    }
+
+    /// `alternate` (cache every other step).
+    pub fn alternate() -> Policy {
+        Policy::parse("alternate").expect("registry")
+    }
+
+    /// `smooth:ALPHA`. Panics on non-finite or negative alphas (use
+    /// [`Policy::parse`] for wire input).
+    pub fn smooth(alpha: f64) -> Policy {
+        Policy::parse(&format!("smooth:{alpha}")).expect("alpha must be finite and >= 0")
+    }
+
+    /// `smooth-persite:ALPHA`. Panics on non-finite or negative alphas.
+    pub fn smooth_per_site(alpha: f64) -> Policy {
+        Policy::parse(&format!("smooth-persite:{alpha}"))
+            .expect("alpha must be finite and >= 0")
+    }
+
+    /// `delta-dit:N`. Panics if `n == 0`.
+    pub fn delta_dit(n: usize) -> Policy {
+        Policy::parse(&format!("delta-dit:{n}")).expect("delta-dit interval must be >= 1")
+    }
+
+    /// `drift:BOUND` (runtime-adaptive error feedback, default gap cap).
+    /// Panics on non-finite or non-positive bounds.
+    pub fn drift(bound: f64) -> Policy {
+        Policy::parse(&format!("drift:{bound}")).expect("drift bound must be finite and > 0")
+    }
+}
+
+impl PartialEq for Policy {
+    fn eq(&self, other: &Policy) -> bool {
+        self.wire == other.wire
+    }
+}
+
+impl std::fmt::Debug for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Policy({})", self.wire)
     }
 }
 
@@ -97,7 +136,7 @@ impl Request {
             solver: self.solver,
             steps: self.steps,
             cfg_milli: (self.cfg_scale * 1000.0).round() as u32,
-            policy: self.policy.wire(),
+            policy: self.policy.wire().to_string(),
         }
     }
 }
@@ -113,7 +152,7 @@ pub struct BatchKey {
     pub steps: usize,
     /// CFG scale in milli-units (so the key stays `Eq + Hash`).
     pub cfg_milli: u32,
-    /// Caching policy in wire form.
+    /// Caching policy in canonical wire form.
     pub policy: String,
 }
 
@@ -156,17 +195,42 @@ mod tests {
     #[test]
     fn policy_wire_roundtrip() {
         for p in [
-            Policy::NoCache,
-            Policy::Fora(3),
-            Policy::Alternate,
-            Policy::Smooth(0.18),
-            Policy::SmoothPerSite(0.05),
-            Policy::DeltaDit(3),
+            Policy::no_cache(),
+            Policy::fora(3),
+            Policy::alternate(),
+            Policy::smooth(0.18),
+            Policy::smooth_per_site(0.05),
+            Policy::delta_dit(3),
+            Policy::drift(0.3),
         ] {
-            assert_eq!(Policy::parse(&p.wire()).unwrap(), p);
+            assert_eq!(Policy::parse(p.wire()).unwrap(), p);
         }
         assert!(Policy::parse("bogus").is_err());
         assert!(Policy::parse("fora:x").is_err());
+    }
+
+    #[test]
+    fn policy_parse_validates_parameters_from_wire() {
+        // these used to parse fine and panic (or misbehave) deep inside
+        // an executor replica; now they fail at the wire boundary
+        assert!(Policy::parse("fora:0").is_err());
+        assert!(Policy::parse("delta-dit:0").is_err());
+        assert!(Policy::parse("smooth:NaN").is_err());
+        assert!(Policy::parse("smooth:inf").is_err());
+        assert!(Policy::parse("drift:0").is_err());
+    }
+
+    #[test]
+    fn policy_lane_hints_come_from_the_registry() {
+        assert!(!Policy::no_cache().needs_curves());
+        assert!(!Policy::fora(2).needs_curves());
+        assert!(!Policy::delta_dit(2).needs_curves());
+        assert!(!Policy::drift(0.3).needs_curves());
+        assert!(Policy::smooth(0.2).needs_curves());
+        assert!(Policy::smooth_per_site(0.2).needs_curves());
+        // exactly the dynamic policies expose a StepPlanner
+        assert!(Policy::drift(0.3).planner().dynamic().is_some());
+        assert!(Policy::smooth(0.2).planner().dynamic().is_none());
     }
 
     #[test]
@@ -179,14 +243,14 @@ mod tests {
             steps: 50,
             cfg_scale: 1.5,
             seed,
-            policy: Policy::Smooth(0.18),
+            policy: Policy::smooth(0.18),
         };
         assert_eq!(mk(1, 3).batch_key(), mk(2, 7).batch_key());
         let mut other = mk(3, 1);
         other.steps = 30;
         assert_ne!(mk(1, 3).batch_key(), other.batch_key());
         let mut pol = mk(4, 1);
-        pol.policy = Policy::NoCache;
+        pol.policy = Policy::no_cache();
         assert_ne!(mk(1, 3).batch_key(), pol.batch_key());
     }
 }

@@ -6,9 +6,10 @@
 
 use crate::util::error::Result;
 
+use crate::cache::plan::PlanRef;
 use crate::cache::sample_cond;
 use crate::model::{Cond, Engine, FamilyManifest};
-use crate::pipeline::{generate, CacheMode, GenConfig, GenStats};
+use crate::pipeline::{generate, GenConfig, GenStats};
 use crate::solvers::SolverKind;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -162,28 +163,29 @@ pub struct EvalStats {
     pub gen: GenStats,
 }
 
-/// Generate `cfg.n_samples` samples under one caching mode, batching at
-/// `cfg.batch`. Returns the stacked sample set and aggregate stats.
-/// Honors `cfg.threads` by pinning the GEMM pool for the duration.
+/// Generate `cfg.n_samples` samples under one cache plan (or runtime
+/// planner), batching at `cfg.batch`. Returns the stacked sample set
+/// and aggregate stats. Honors `cfg.threads` by pinning the GEMM pool
+/// for the duration.
 pub fn generate_set(
     engine: &Engine,
     cfg: &EvalConfig,
     conds: &[Cond],
-    mode: &CacheMode,
+    plan: PlanRef<'_>,
 ) -> Result<(Tensor, EvalStats)> {
     if cfg.threads > 0 {
         return crate::tensor::gemm::with_threads(cfg.threads, || {
-            generate_set_inner(engine, cfg, conds, mode)
+            generate_set_inner(engine, cfg, conds, plan)
         });
     }
-    generate_set_inner(engine, cfg, conds, mode)
+    generate_set_inner(engine, cfg, conds, plan)
 }
 
 fn generate_set_inner(
     engine: &Engine,
     cfg: &EvalConfig,
     conds: &[Cond],
-    mode: &CacheMode,
+    plan: PlanRef<'_>,
 ) -> Result<(Tensor, EvalStats)> {
     assert_eq!(conds.len(), cfg.n_samples);
     let fm = engine.family_manifest(&cfg.family)?.clone();
@@ -202,7 +204,7 @@ fn generate_set_inner(
         let gen_cfg = GenConfig::new(&cfg.family, cfg.solver, cfg.steps)
             .with_cfg(cfg.cfg_scale)
             .with_seed(cfg.base_seed.wrapping_add(i as u64));
-        let out = generate(engine, &gen_cfg, &cond, mode, None)?;
+        let out = generate(engine, &gen_cfg, &cond, plan, None)?;
         for j in 0..b {
             outputs.push(out.latent.sample(j));
         }

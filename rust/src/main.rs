@@ -116,7 +116,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("steps", "50", "sampling steps")
         .flag("cfg", "1.0", "CFG scale")
         .flag("seed", "0", "random seed")
-        .flag("policy", "no-cache", "caching policy (no-cache|fora:N|alternate|smooth:A)")
+        .flag("policy", "no-cache", "caching policy (no-cache|fora:N|alternate|smooth:A|drift:B; table: smoothcache info)")
         .flag("calib-samples", "6", "calibration samples for smooth policies")
         .flag("workers", "1", "executor replicas (one is plenty for a one-off)")
         .flag("threads", "0", "GEMM compute threads (0 = auto)")
@@ -218,11 +218,11 @@ fn cmd_calibrate(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_schedule(argv: &[String]) -> Result<()> {
-    let spec = CliSpec::new("smoothcache schedule", "print a resolved schedule")
+    let spec = CliSpec::new("smoothcache schedule", "print a resolved cache plan")
         .flag("family", "image", "model family")
         .flag("solver", "ddim", "solver")
         .flag("steps", "50", "sampling steps")
-        .flag("policy", "smooth:0.35", "caching policy")
+        .flag("policy", "smooth:0.35", "caching policy (table: smoothcache info)")
         .flag("calib-samples", "6", "calibration samples if needed");
     let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
 
@@ -232,33 +232,28 @@ fn cmd_schedule(argv: &[String]) -> Result<()> {
     let solver = SolverKind::parse(args.str("solver")).ok_or_else(|| smoothcache::err!("bad solver"))?;
     let steps = args.usize("steps").map_err(Error::msg)?;
     let policy = Policy::parse(args.str("policy"))?;
-    let mut store = smoothcache::coordinator::ScheduleStore::new(
+    if policy.planner().dynamic().is_some() {
+        println!(
+            "{}: runtime-adaptive policy — decisions are made per (step, site) \
+             from the observed trajectory; there is no static plan to print",
+            policy.wire()
+        );
+        return Ok(());
+    }
+    let mut store = smoothcache::coordinator::PlanStore::new(
         args.usize("calib-samples").map_err(Error::msg)?,
         7,
         None,
     );
-    match store.resolve(&engine, None, &family, solver, steps, &policy)? {
-        smoothcache::coordinator::executor::ResolvedPolicy::None => {
-            println!("no-cache: every branch computes at every step");
-        }
-        smoothcache::coordinator::executor::ResolvedPolicy::Grouped(s) => {
-            println!(
-                "{} — skip {:.0}%, max gap {}",
-                s.name,
-                s.skip_fraction() * 100.0,
-                s.max_gap()
-            );
-            print!("{}", s.ascii());
-        }
-        smoothcache::coordinator::executor::ResolvedPolicy::PerSite(m) => {
-            println!("per-site schedule over {} sites:", m.len());
-            for (site, ds) in m {
-                let line: String =
-                    ds.iter().map(|d| if d.is_compute() { '#' } else { '.' }).collect();
-                println!("{site:>12} {line}");
-            }
-        }
-    }
+    let plan = store.plan(&engine, None, &family, solver, steps, &policy)?;
+    println!(
+        "{} — {} sites, skip {:.0}%, max gap {}",
+        plan.name,
+        plan.n_sites(),
+        plan.skip_fraction() * 100.0,
+        plan.max_gap()
+    );
+    print!("{}", plan.ascii());
     Ok(())
 }
 
@@ -268,6 +263,17 @@ fn cmd_info(_argv: &[String]) -> Result<()> {
     println!("artifacts dir : {dir:?}{}", if on_disk { "" } else { " (none — builtin geometry)" });
     println!("kernel impl   : {}", manifest.impl_name);
     println!("batch sizes   : {:?}", manifest.batch_sizes);
+    println!("\ncaching policies (wire syntax — the registry the server and CLI share):");
+    for spec in smoothcache::cache::registry() {
+        let kind = if spec.dynamic {
+            "dynamic"
+        } else if spec.needs_curves {
+            "calibrated"
+        } else {
+            "static"
+        };
+        println!("  {:>22}  [{kind:^10}]  {}", spec.syntax, spec.summary);
+    }
     for (name, fm) in &manifest.families {
         println!(
             "\nfamily {name}: hidden={} heads={} depth={} seq={} latent={:?}",

@@ -4,16 +4,20 @@
 //! the pipeline walks the (block, branch) sites in order; a `Compute`
 //! decision runs the branch's AOT executable and refills the layer
 //! cache, a `Reuse` decision re-injects the cached delta through the
-//! residual connection without touching PJRT (paper Fig. 3). Decisions
-//! come from a static [`Schedule`] (grouped by branch type, the paper's
-//! default) or a per-site decision map (grouping ablation).
+//! residual connection without touching the backend (paper Fig. 3).
+//! Decisions come from one [`PlanRef`]: a dense
+//! [`crate::cache::CachePlan`] (static policies; the inner loop's
+//! scheduling cost is a single flat-array read per site — no string
+//! keys, no map lookups) or a
+//! [`crate::cache::StepPlanner`] deciding at runtime from per-site
+//! observations (cache age, last observed delta drift).
 
-use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
 use crate::util::error::Result;
 
-use crate::cache::schedule::{Decision, Schedule};
+use crate::cache::plan::{PlanRef, StepObs};
+use crate::cache::schedule::Decision;
 use crate::model::{Cond, Engine};
 use crate::solvers::{cfg_merge, SolverKind, SolverRun};
 use crate::tensor::Tensor;
@@ -50,16 +54,6 @@ impl GenConfig {
     }
 }
 
-/// Caching policy for one generation.
-pub enum CacheMode<'a> {
-    /// compute everything (No-Cache rows; calibration).
-    None,
-    /// the paper's grouped-by-type static schedule.
-    Grouped(&'a Schedule),
-    /// per-(block, branch) decisions — grouping ablation.
-    PerSite(&'a BTreeMap<String, Vec<Decision>>),
-}
-
 #[derive(Clone, Debug, Default)]
 pub struct GenStats {
     pub branch_computes: usize,
@@ -94,7 +88,7 @@ pub fn generate(
     engine: &Engine,
     cfg: &GenConfig,
     cond: &Cond,
-    mode: &CacheMode,
+    plan: PlanRef<'_>,
     observer: Option<DeltaObserver>,
 ) -> Result<GenOutput> {
     let fm = engine.family_manifest(&cfg.family)?.clone();
@@ -106,7 +100,7 @@ pub fn generate(
     let mut latent_shape = vec![batch];
     latent_shape.extend(&fm.latent_shape);
     let x0 = SolverRun::init_latent(latent_shape, &mut rng);
-    generate_from(engine, cfg, cond, x0, mode, observer)
+    generate_from(engine, cfg, cond, x0, plan, observer)
 }
 
 /// Like [`generate`] but with a caller-provided initial latent — the
@@ -117,7 +111,7 @@ pub fn generate_from(
     cfg: &GenConfig,
     cond: &Cond,
     x_init: Tensor,
-    mode: &CacheMode,
+    plan: PlanRef<'_>,
     mut observer: Option<DeltaObserver>,
 ) -> Result<GenOutput> {
     let t_start = Instant::now();
@@ -129,14 +123,14 @@ pub fn generate_from(
     if x_init.dim0() != batch {
         return Err(crate::err!("x_init batch {} != cond batch {batch}", x_init.dim0()));
     }
-    if let CacheMode::Grouped(s) = mode {
-        if s.steps != cfg.steps {
-            return Err(crate::err!("schedule has {} steps, request has {}", s.steps, cfg.steps));
-        }
-        if s.branch_types != fm.branch_types {
-            return Err(crate::err!("schedule branch types do not match family"));
-        }
+    // Static plans are checked against this exact configuration up
+    // front: step count and the family's site enumeration must match —
+    // a plan built for a different family fails loudly here instead of
+    // silently computing at unmatched sites.
+    if let PlanRef::Plan(p) = plan {
+        p.validate_for(&fm, cfg.steps)?;
     }
+    let dynamic = matches!(plan, PlanRef::Planner(_));
 
     let mut rng = Rng::new(cfg.seed ^ 0x50D4_11CE);
     let mut run = SolverRun::new(cfg.solver, cfg.steps);
@@ -151,7 +145,15 @@ pub fn generate_from(
     let batch_eff = if cfg.uses_cfg() { 2 * batch } else { batch };
 
     let sites = fm.branch_sites();
-    let mut cache: HashMap<(usize, String), Tensor> = HashMap::new();
+    let n_sites = sites.len();
+    // per-site state, indexed by site position (no string keys):
+    let mut cache: Vec<Option<Tensor>> = vec![None; n_sites];
+    let mut filled_at: Vec<Option<usize>> = vec![None; n_sites];
+    // drift feedback for dynamic planners: relative L1 error between a
+    // freshly computed delta and the cached one it replaces. Only
+    // tracked when a StepPlanner is driving — static plans skip the
+    // extra tensor pass entirely.
+    let mut last_drift: Vec<Option<f64>> = vec![None; n_sites];
     let mut stats = GenStats { steps: cfg.steps, ..Default::default() };
 
     for i in 0..cfg.steps {
@@ -162,16 +164,17 @@ pub fn generate_from(
         let ctx = engine.make_step_ctx(&emb)?;
         let mut tokens = emb.tokens;
 
-        for (block, br) in &sites {
-            let decision = match mode {
-                CacheMode::None => Decision::Compute,
-                CacheMode::Grouped(s) => s.decision(i, br),
-                CacheMode::PerSite(m) => m
-                    .get(&format!("{block}.{br}"))
-                    .map(|ds| ds[i])
-                    .unwrap_or(Decision::Compute),
+        for (s_idx, (block, br)) in sites.iter().enumerate() {
+            let decision = match plan {
+                PlanRef::Plan(p) => p.decision(i, s_idx),
+                PlanRef::Planner(sp) => {
+                    let obs = StepObs {
+                        filled_at: filled_at[s_idx],
+                        last_drift: last_drift[s_idx],
+                    };
+                    sp.decide(i, s_idx, &obs)
+                }
             };
-            let key = (*block, br.clone());
             let delta = match decision {
                 Decision::Compute => {
                     let d = engine.branch(&cfg.family, *block, br, &tokens, &ctx)?;
@@ -179,15 +182,23 @@ pub fn generate_from(
                         obs(i, *block, br, &d);
                     }
                     stats.branch_computes += 1;
-                    cache.insert(key, d.clone());
+                    if dynamic {
+                        if let Some(old) = &cache[s_idx] {
+                            last_drift[s_idx] = Some(d.rel_l1_error(old));
+                        }
+                    }
+                    filled_at[s_idx] = Some(i);
+                    cache[s_idx] = Some(d.clone());
                     d
                 }
                 Decision::Reuse { .. } => {
                     stats.branch_reuses += 1;
-                    cache
-                        .get(&key)
-                        .cloned()
-                        .ok_or_else(|| crate::err!("cache miss at step {i} {block}.{br}"))?
+                    cache[s_idx].clone().ok_or_else(|| {
+                        crate::err!(
+                            "cache miss at step {i} site {block}.{br}: \
+                             plan decided Reuse before any compute"
+                        )
+                    })?
                 }
             };
             tokens.add_inplace(&delta);

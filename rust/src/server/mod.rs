@@ -14,7 +14,10 @@
 //! The full wire contract (field semantics, defaults, batching
 //! guarantees, error + overload shapes, metrics-summary fields) is
 //! specified in `docs/protocol.md` at the repository root — keep the
-//! two in sync when evolving the protocol.
+//! two in sync when evolving the protocol. The `policy` vocabulary is
+//! the registry in [`crate::cache::plan::registry`]: the doc's policy
+//! table is generated from it (and pinned by a test), so adding a
+//! policy there is all a new wire value needs.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -270,7 +273,7 @@ mod tests {
         assert_eq!(r.cond, Cond::Label(vec![3]));
         assert_eq!(r.steps, 12);
         assert_eq!(r.cfg_scale, 1.5);
-        assert_eq!(r.policy, Policy::Smooth(0.18));
+        assert_eq!(r.policy, Policy::smooth(0.18));
         assert!(!ret);
     }
 
@@ -285,6 +288,23 @@ mod tests {
         assert_eq!(r.cond, Cond::Prompt(vec![1, 2, 3, 4, 5, 6, 7, 8]));
         assert_eq!(r.solver, SolverKind::DpmPP3M { sde: true });
         assert!(ret);
+    }
+
+    #[test]
+    fn parse_request_rejects_malformed_policy_parameters() {
+        // wire input with invalid parameters must fail at parse time
+        // (it used to reach — and panic — an executor replica)
+        for policy in ["fora:0", "smooth:NaN", "smooth:inf", "delta-dit:0", "drift:0"] {
+            let j = parse(&format!(
+                r#"{{"family":"image","label":1,"policy":"{policy}"}}"#
+            ))
+            .unwrap();
+            assert!(parse_request(&j).is_err(), "{policy} should be rejected");
+        }
+        // the dynamic drift policy is a first-class wire policy
+        let j = parse(r#"{"family":"image","label":1,"policy":"drift:0.3"}"#).unwrap();
+        let (r, _) = parse_request(&j).unwrap();
+        assert_eq!(r.policy.wire(), "drift:0.3");
     }
 
     #[test]

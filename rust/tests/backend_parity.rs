@@ -6,9 +6,9 @@
 //! step; SmoothCache computes monotonically less as α grows, bounded by
 //! k_max).
 
-use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
+use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef, Schedule};
 use smoothcache::model::{Cond, Engine};
-use smoothcache::pipeline::{generate, CacheMode, GenConfig, GenStats};
+use smoothcache::pipeline::{generate, GenConfig, GenStats};
 use smoothcache::solvers::SolverKind;
 
 const STEPS: usize = 10;
@@ -19,18 +19,25 @@ fn engine() -> Engine {
     e
 }
 
-fn run(engine: &Engine, mode: &CacheMode) -> (Vec<f32>, GenStats) {
+fn run(engine: &Engine, plan: PlanRef<'_>) -> (Vec<f32>, GenStats) {
     let cfg = GenConfig::new("image", SolverKind::Ddim, STEPS).with_seed(21);
-    let out = generate(engine, &cfg, &Cond::Label(vec![5]), mode, None).expect("generate");
+    let out = generate(engine, &cfg, &Cond::Label(vec![5]), plan, None).expect("generate");
     (out.latent.data, out.stats)
+}
+
+fn no_cache_plan(engine: &Engine) -> CachePlan {
+    let fm = engine.family_manifest("image").unwrap();
+    CachePlan::no_cache(STEPS, &fm.branch_sites())
 }
 
 #[test]
 fn reference_backend_is_deterministic_across_instances() {
     // two completely independent engines (fresh backend, fresh
     // synthesized weights) must agree bit-for-bit
-    let (a, sa) = run(&engine(), &CacheMode::None);
-    let (b, sb) = run(&engine(), &CacheMode::None);
+    let e1 = engine();
+    let e2 = engine();
+    let (a, sa) = run(&e1, PlanRef::Plan(&no_cache_plan(&e1)));
+    let (b, sb) = run(&e2, PlanRef::Plan(&no_cache_plan(&e2)));
     assert_eq!(a, b, "same seed, fresh engine → identical latents");
     assert_eq!(sa.branch_computes, sb.branch_computes);
     assert!(a.iter().all(|v| v.is_finite()));
@@ -41,7 +48,7 @@ fn no_cache_executes_every_site_every_step() {
     let e = engine();
     let fm = e.family_manifest("image").unwrap().clone();
     let sites = fm.depth * fm.branch_types.len();
-    let (_, stats) = run(&e, &CacheMode::None);
+    let (_, stats) = run(&e, PlanRef::Plan(&no_cache_plan(&e)));
     assert_eq!(stats.branch_computes, STEPS * sites);
     assert_eq!(stats.branch_reuses, 0);
 }
@@ -52,7 +59,8 @@ fn fora_halves_branch_executions() {
     let fm = e.family_manifest("image").unwrap().clone();
     let sites = fm.depth * fm.branch_types.len();
     let schedule = Schedule::fora(STEPS, &fm.branch_types, 2);
-    let (_, stats) = run(&e, &CacheMode::Grouped(&schedule));
+    let plan = CachePlan::from_grouped(&schedule, &fm.branch_sites()).unwrap();
+    let (_, stats) = run(&e, PlanRef::Plan(&plan));
     // n=2 over 10 steps: compute on steps 0,2,4,6,8 → half the work
     assert_eq!(stats.branch_computes, STEPS / 2 * sites);
     assert_eq!(stats.branch_reuses, STEPS / 2 * sites);
@@ -73,7 +81,8 @@ fn smoothcache_alpha_monotonically_trades_compute() {
 
     // α = 0 admits no reuse at all (every calibrated error exceeds it)
     let s0 = curves.smoothcache_schedule(0.0, &fm.branch_types);
-    let (_, stats0) = run(&e, &CacheMode::Grouped(&s0));
+    let p0 = CachePlan::from_grouped(&s0, &fm.branch_sites()).unwrap();
+    let (_, stats0) = run(&e, PlanRef::Plan(&p0));
     assert_eq!(stats0.branch_computes, STEPS * sites);
 
     // compute count is non-increasing in α …
@@ -83,7 +92,8 @@ fn smoothcache_alpha_monotonically_trades_compute() {
         let s = curves.smoothcache_schedule(alpha, &fm.branch_types);
         s.validate().expect("valid schedule");
         assert!(s.max_gap() <= cc.k_max, "gap bounded by k_max");
-        let (_, stats) = run(&e, &CacheMode::Grouped(&s));
+        let p = CachePlan::from_grouped(&s, &fm.branch_sites()).unwrap();
+        let (_, stats) = run(&e, PlanRef::Plan(&p));
         assert_eq!(
             stats.branch_computes + stats.branch_reuses,
             STEPS * sites,
@@ -111,8 +121,10 @@ fn distinct_families_share_one_engine() {
     assert!(e.is_loaded("image") && e.is_loaded("audio"));
     let img = GenConfig::new("image", SolverKind::Ddim, 2).with_seed(1);
     let aud = GenConfig::new("audio", SolverKind::Ddim, 2).with_seed(1);
-    let gi = generate(&e, &img, &Cond::Label(vec![0]), &CacheMode::None, None).unwrap();
-    let ga = generate(&e, &aud, &Cond::Prompt(vec![3; 8]), &CacheMode::None, None).unwrap();
+    let nc_img = CachePlan::no_cache(2, &e.family_manifest("image").unwrap().branch_sites());
+    let nc_aud = CachePlan::no_cache(2, &e.family_manifest("audio").unwrap().branch_sites());
+    let gi = generate(&e, &img, &Cond::Label(vec![0]), PlanRef::Plan(&nc_img), None).unwrap();
+    let ga = generate(&e, &aud, &Cond::Prompt(vec![3; 8]), PlanRef::Plan(&nc_aud), None).unwrap();
     assert_eq!(gi.latent.shape, vec![1, 16, 16, 4]);
     assert_eq!(ga.latent.shape, vec![1, 64, 8]);
 }

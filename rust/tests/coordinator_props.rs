@@ -71,7 +71,7 @@ fn prop_every_request_answered_exactly_once_any_worker_count() {
                     steps: 2 + s,
                     cfg_scale: 1.0,
                     seed: i as u64,
-                    policy: Policy::NoCache,
+                    policy: Policy::no_cache(),
                 };
                 rxs.push((family, coord.submit(req)));
             }
@@ -150,7 +150,7 @@ fn stuck_calibration_does_not_delay_warm_batches_on_siblings() {
     // cold smooth key → normal lane → one replica calibrates (generous
     // alpha: any populated error cell below it yields reuse, so skips
     // are guaranteed without pinning the untrained model's error scale)
-    let cold_rx = coord.submit(image_request(16, 1, Policy::Smooth(2.0)));
+    let cold_rx = coord.submit(image_request(16, 1, Policy::smooth(2.0)));
 
     // wait until a replica is demonstrably inside the calibration
     let t0 = Instant::now();
@@ -168,8 +168,8 @@ fn stuck_calibration_does_not_delay_warm_batches_on_siblings() {
     // or the sibling would park on the mutex and the pool would be
     // head-of-line-blocked anyway)
     let warm_rxs: Vec<_> = (0..2)
-        .map(|i| coord.submit(image_request(2, 10 + i, Policy::NoCache)))
-        .chain((0..2).map(|i| coord.submit(image_request(2, 20 + i, Policy::Fora(2)))))
+        .map(|i| coord.submit(image_request(2, 10 + i, Policy::no_cache())))
+        .chain((0..2).map(|i| coord.submit(image_request(2, 20 + i, Policy::fora(2)))))
         .collect();
     for rx in &warm_rxs {
         rx.recv_timeout(Duration::from_secs(120))
@@ -214,7 +214,7 @@ fn queue_full_rejects_with_well_formed_overloaded_error() {
     // flushed nearly simultaneously into a depth-1 queue with a single
     // (busy) executor
     let rxs: Vec<_> = (0..16u64)
-        .map(|i| coord.submit(image_request(2 + i as usize, i, Policy::NoCache)))
+        .map(|i| coord.submit(image_request(2 + i as usize, i, Policy::no_cache())))
         .collect();
 
     let mut ok = 0u64;
@@ -300,7 +300,7 @@ fn prop_deadline_flushes_fire_under_poisson_arrivals() {
                         steps: 10 + s,
                         cfg_scale: 1.0,
                         seed: i as u64,
-                        policy: Policy::NoCache,
+                        policy: Policy::no_cache(),
                     },
                     submitted: Instant::now(),
                     reply: tx,

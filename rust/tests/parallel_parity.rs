@@ -11,10 +11,10 @@
 //! results are bitwise identical — but the suite asserts the tolerance
 //! the issue specifies plus bitwise equality where it is load-bearing.
 
-use smoothcache::cache::Schedule;
+use smoothcache::cache::{CachePlan, PlanRef, Schedule};
 use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
 use smoothcache::model::{Cond, Engine, Manifest};
-use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::pipeline::{generate, GenConfig};
 use smoothcache::solvers::SolverKind;
 use smoothcache::tensor::{gemm, Tensor};
 use smoothcache::util::rng::Rng;
@@ -99,14 +99,15 @@ fn generate_is_identical_across_thread_counts_for_every_family() {
         let engine = offline_engine(name);
         let (_, cond) = family_inputs(fm);
         let schedule = Schedule::fora(3, &fm.branch_types, 2);
+        let plan = CachePlan::from_grouped(&schedule, &fm.branch_sites()).unwrap();
         let cfg = GenConfig::new(name, SolverKind::Ddim, 3).with_seed(42);
         let base = gemm::with_threads(1, || {
-            generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None)
+            generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None)
         })
         .expect("serial generate");
         for nt in [2usize, 8] {
             let out = gemm::with_threads(nt, || {
-                generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None)
+                generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None)
             })
             .expect("parallel generate");
             assert_eq!(base.latent, out.latent, "{name} threads={nt}");
@@ -129,7 +130,7 @@ fn generate_is_identical_across_worker_pool_sizes() {
         steps: 4,
         cfg_scale: 1.0,
         seed: 0xF1DE,
-        policy: Policy::Fora(2),
+        policy: Policy::fora(2),
     };
     let mut outputs = Vec::new();
     for workers in [1usize, 2, 3] {
@@ -158,13 +159,14 @@ fn runtime_stats_invariant_across_thread_counts_for_cached_schedule() {
     let engine = offline_engine("image");
     let fm = engine.family_manifest("image").expect("manifest").clone();
     let schedule = Schedule::fora(6, &fm.branch_types, 2);
+    let plan = CachePlan::from_grouped(&schedule, &fm.branch_sites()).unwrap();
     let cfg = GenConfig::new("image", SolverKind::Ddim, 6).with_seed(9);
     let cond = Cond::Label(vec![2]);
     let mut observed = Vec::new();
     for nt in [1usize, 2, 8] {
         engine.reset_stats();
         let out = gemm::with_threads(nt, || {
-            generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None)
+            generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None)
         })
         .expect("generate");
         let st = engine.stats();

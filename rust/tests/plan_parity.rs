@@ -1,0 +1,176 @@
+//! Plan-parity suite (ISSUE 4): every policy in the registry resolves
+//! to a [`CachePlan`] whose per-(step, site) decisions are identical to
+//! the legacy representations (grouped [`Schedule`]s and stringly-keyed
+//! per-site maps) for all three families × two solvers; the dynamic
+//! `drift:*` policy is bitwise invariant to the GEMM thread count; and
+//! docs/protocol.md's policy table is pinned to the registry so the
+//! wire docs cannot drift from the parser.
+
+use std::collections::BTreeMap;
+
+use smoothcache::cache::{
+    calibrate, delta_dit, parse_policy, registry, registry_markdown_rows, CalibrationConfig,
+    Decision, PlanCtx, PlanRef, Schedule,
+};
+use smoothcache::model::{Cond, Engine};
+use smoothcache::pipeline::{generate, GenConfig};
+use smoothcache::solvers::SolverKind;
+use smoothcache::tensor::gemm;
+
+fn engine_with(family: &str) -> Engine {
+    let mut e = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    e.load_family(family).expect("load");
+    e
+}
+
+/// The legacy spelling of a resolved policy, for comparison.
+enum Legacy {
+    Grouped(Schedule),
+    Map(BTreeMap<String, Vec<Decision>>),
+}
+
+#[test]
+fn every_policy_resolves_identically_to_its_legacy_representation() {
+    let steps = 6usize;
+    let wires = [
+        "no-cache",
+        "fora:2",
+        "fora:3",
+        "alternate",
+        "delta-dit:2",
+        "smooth:0.3",
+        "smooth-persite:0.3",
+    ];
+    for family in ["image", "audio", "video"] {
+        let engine = engine_with(family);
+        let fm = engine.family_manifest(family).unwrap().clone();
+        let sites = fm.branch_sites();
+        for solver in [SolverKind::Ddim, SolverKind::RectifiedFlow] {
+            let cc = CalibrationConfig {
+                steps,
+                num_samples: 2,
+                k_max: 2,
+                ..CalibrationConfig::new(solver, steps)
+            };
+            let curves = calibrate(&engine, family, &cc).expect("calibrate");
+            for wire in wires {
+                let planner = parse_policy(wire).unwrap();
+                let ctx = PlanCtx {
+                    family: &fm,
+                    solver,
+                    steps,
+                    curves: if planner.needs_curves() { Some(&curves) } else { None },
+                };
+                let plan = planner.plan(&ctx).expect(wire);
+                plan.validate().expect(wire);
+                plan.validate_for(&fm, steps).expect(wire);
+
+                let legacy = match wire {
+                    "no-cache" => Legacy::Grouped(Schedule::no_cache(steps, &fm.branch_types)),
+                    "fora:2" => Legacy::Grouped(Schedule::fora(steps, &fm.branch_types, 2)),
+                    "fora:3" => Legacy::Grouped(Schedule::fora(steps, &fm.branch_types, 3)),
+                    "alternate" => {
+                        Legacy::Grouped(Schedule::alternate(steps, &fm.branch_types))
+                    }
+                    "smooth:0.3" => {
+                        Legacy::Grouped(curves.smoothcache_schedule(0.3, &fm.branch_types))
+                    }
+                    "smooth-persite:0.3" => Legacy::Map(curves.per_site_schedule(0.3)),
+                    "delta-dit:2" => {
+                        Legacy::Map(delta_dit(steps, fm.depth, &fm.branch_types, 2, 0.5))
+                    }
+                    other => panic!("unlisted wire {other}"),
+                };
+                for (s_idx, (block, bt)) in sites.iter().enumerate() {
+                    for step in 0..steps {
+                        let expected = match &legacy {
+                            Legacy::Grouped(s) => s.decision(step, bt),
+                            Legacy::Map(m) => m[&format!("{block}.{bt}")][step],
+                        };
+                        assert_eq!(
+                            plan.decision(step, s_idx),
+                            expected,
+                            "{family}/{}/{wire} step {step} site {block}.{bt}",
+                            solver.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dynamic_drift_policy_is_bitwise_invariant_to_thread_count() {
+    let engine = engine_with("image");
+    let cfg = GenConfig::new("image", SolverKind::Ddim, 8).with_seed(13);
+    let cond = Cond::Label(vec![4]);
+    // generous bound: once any drift is measured the site reuses until
+    // the gap cap, so skips are guaranteed for the untrained model
+    let generous = parse_policy("drift:1e9").unwrap();
+    let sp = generous.dynamic().expect("drift is dynamic");
+    let base = gemm::with_threads(1, || {
+        generate(&engine, &cfg, &cond, PlanRef::Planner(sp), None)
+    })
+    .expect("serial generate");
+    assert!(base.stats.branch_reuses > 0, "drift:1e9 must reuse");
+    for nt in [2usize, 8] {
+        let out = gemm::with_threads(nt, || {
+            generate(&engine, &cfg, &cond, PlanRef::Planner(sp), None)
+        })
+        .expect("parallel generate");
+        assert_eq!(base.latent.data, out.latent.data, "threads={nt}");
+        assert_eq!(base.stats.branch_computes, out.stats.branch_computes, "threads={nt}");
+        assert_eq!(base.stats.branch_reuses, out.stats.branch_reuses, "threads={nt}");
+    }
+    // a tight bound takes drift-dependent decisions — whatever they
+    // are, they must not depend on the thread count either
+    let tight = parse_policy("drift:0.25").unwrap();
+    let tsp = tight.dynamic().unwrap();
+    let b2 = gemm::with_threads(1, || {
+        generate(&engine, &cfg, &cond, PlanRef::Planner(tsp), None)
+    })
+    .expect("serial generate");
+    for nt in [2usize, 8] {
+        let o2 = gemm::with_threads(nt, || {
+            generate(&engine, &cfg, &cond, PlanRef::Planner(tsp), None)
+        })
+        .expect("parallel generate");
+        assert_eq!(b2.latent.data, o2.latent.data, "threads={nt}");
+        assert_eq!(b2.stats.branch_computes, o2.stats.branch_computes, "threads={nt}");
+    }
+}
+
+#[test]
+fn dynamic_drift_policy_bounds_reuse_gaps() {
+    // with an unbounded drift tolerance the only compute trigger after
+    // warmup is the gap cap: per site, computes at steps 0 and 1, then
+    // one compute per (gap+1) window
+    let engine = engine_with("image");
+    let fm = engine.family_manifest("image").unwrap().clone();
+    let n_sites = fm.depth * fm.branch_types.len();
+    let steps = 10usize;
+    let planner = parse_policy("drift:1e9:2").unwrap();
+    let sp = planner.dynamic().unwrap();
+    let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(3);
+    let out = generate(&engine, &cfg, &Cond::Label(vec![1]), PlanRef::Planner(sp), None)
+        .expect("generate");
+    // per site: compute at 0, 1; reuse 2,3 (gap cap 2); compute 4;
+    // reuse 5,6; compute 7; reuse 8,9 → 4 computes / 6 reuses
+    assert_eq!(out.stats.branch_computes, 4 * n_sites);
+    assert_eq!(out.stats.branch_reuses, 6 * n_sites);
+}
+
+#[test]
+fn protocol_doc_policy_table_matches_registry() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/protocol.md");
+    let doc = std::fs::read_to_string(path).expect("docs/protocol.md must exist");
+    assert_eq!(registry_markdown_rows().len(), registry().len());
+    for row in registry_markdown_rows() {
+        assert!(
+            doc.contains(&row),
+            "docs/protocol.md policy table is missing the registry row:\n  {row}\n\
+             (regenerate the table from cache::plan::registry_markdown_rows)"
+        );
+    }
+}

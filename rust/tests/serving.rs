@@ -34,7 +34,7 @@ fn image_request(seed: u64, policy: Policy) -> Request {
 #[test]
 fn coordinator_serves_single_request() {
     let c = coord();
-    let resp = c.generate_blocking(image_request(1, Policy::NoCache)).expect("response");
+    let resp = c.generate_blocking(image_request(1, Policy::no_cache())).expect("response");
     assert_eq!(resp.latent.shape, vec![1, 16, 16, 4]);
     assert!(resp.total_seconds > 0.0);
     assert_eq!(Metrics::get(&c.metrics().requests_completed), 1);
@@ -47,7 +47,7 @@ fn coordinator_batches_concurrent_requests() {
     // submit 4 compatible requests back-to-back; the batcher should
     // group them (max_wait 10ms) into ≤ 2 batches rather than 4.
     let rxs: Vec<_> = (0..4)
-        .map(|i| c.submit(image_request(100 + i, Policy::Fora(2))))
+        .map(|i| c.submit(image_request(100 + i, Policy::fora(2))))
         .collect();
     let mut sizes = Vec::new();
     for rx in rxs {
@@ -69,11 +69,11 @@ fn coordinator_batches_concurrent_requests() {
 fn batched_result_matches_solo_result() {
     let c = coord();
     // run one request alone...
-    let solo = c.generate_blocking(image_request(7, Policy::NoCache)).unwrap();
+    let solo = c.generate_blocking(image_request(7, Policy::no_cache())).unwrap();
     // ...then the same seed inside a concurrent burst
     let rxs: Vec<_> = [7u64, 8, 9, 10]
         .iter()
-        .map(|&s| c.submit(image_request(s, Policy::NoCache)))
+        .map(|&s| c.submit(image_request(s, Policy::no_cache())))
         .collect();
     let batched: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     let same = &batched[0];
@@ -96,12 +96,42 @@ fn smoothcache_policy_calibrates_once_and_skips() {
     // a generous alpha: any populated error cell below it triggers
     // reuse, so skips are guaranteed without pinning the (untrained)
     // model's absolute error scale
-    let r1 = c.generate_blocking(image_request(1, Policy::Smooth(2.0))).unwrap();
-    let r2 = c.generate_blocking(image_request(2, Policy::Smooth(2.0))).unwrap();
+    let r1 = c.generate_blocking(image_request(1, Policy::smooth(2.0))).unwrap();
+    let r2 = c.generate_blocking(image_request(2, Policy::smooth(2.0))).unwrap();
     assert!(r1.gen_stats.skip_fraction() > 0.0, "alpha 2.0 should skip");
     assert_eq!(r1.gen_stats.skip_fraction(), r2.gen_stats.skip_fraction());
     // calibration ran exactly once (cached for the second request)
     assert_eq!(Metrics::get(&c.metrics().calibrations), 1);
+    c.shutdown();
+}
+
+#[test]
+fn dynamic_drift_policy_serves_deterministically_without_calibration() {
+    let c = coord();
+    // a generous bound: once a site has measured any drift it keeps
+    // reusing until the gap cap, so skips are guaranteed without
+    // pinning the untrained model's absolute drift scale
+    let r1 = c.generate_blocking(image_request(1, Policy::drift(1e9))).unwrap();
+    let r2 = c.generate_blocking(image_request(1, Policy::drift(1e9))).unwrap();
+    assert!(r1.gen_stats.skip_fraction() > 0.0, "drift:1e9 should skip");
+    // same request → identical runtime decisions (pure function of the
+    // trajectory) and identical latents
+    assert_eq!(r1.gen_stats.branch_computes, r2.gen_stats.branch_computes);
+    assert_eq!(r1.latent.data, r2.latent.data);
+    // dynamic policies never calibrate and never touch the plan store
+    assert_eq!(Metrics::get(&c.metrics().calibrations), 0);
+    assert_eq!(Metrics::get(&c.metrics().plan_cache_misses), 0);
+    c.shutdown();
+}
+
+#[test]
+fn smooth_policy_plan_is_cached_across_requests() {
+    let c = coord();
+    let _ = c.generate_blocking(image_request(1, Policy::smooth(2.0))).unwrap();
+    let _ = c.generate_blocking(image_request(2, Policy::smooth(2.0))).unwrap();
+    // first request builds the plan, second hits the PlanKey cache
+    assert_eq!(Metrics::get(&c.metrics().plan_cache_misses), 1);
+    assert!(Metrics::get(&c.metrics().plan_cache_hits) >= 1);
     c.shutdown();
 }
 
@@ -133,9 +163,27 @@ fn server_round_trip() {
     let summary = client.metrics_summary().unwrap();
     assert!(summary.contains("completed=1"), "{summary}");
 
+    // a dynamic policy serves over the wire like any other
+    let dyn_req = Json::obj()
+        .set("family", "image")
+        .set("label", 2.0)
+        .set("steps", 6usize)
+        .set("policy", "drift:1e9")
+        .set("seed", 5u64);
+    let dyn_resp = client.call(&dyn_req).expect("drift call");
+    assert_eq!(dyn_resp.get("ok").unwrap().as_bool(), Some(true), "{dyn_resp:?}");
+    assert!(dyn_resp.get("skip_fraction").unwrap().as_f64().unwrap() > 0.0);
+
     // malformed request is answered, not dropped
     let bad = client.call(&Json::obj().set("family", "image")).unwrap();
     assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+
+    // malformed policy parameters are answered with an error, not a
+    // panicked executor
+    let bad_pol = client
+        .call(&Json::obj().set("family", "image").set("label", 1.0).set("policy", "fora:0"))
+        .unwrap();
+    assert_eq!(bad_pol.get("ok").unwrap().as_bool(), Some(false));
 
     server.stop();
 }

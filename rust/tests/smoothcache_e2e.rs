@@ -4,9 +4,9 @@
 //! Runs against whatever backend the engine selects — the pure-Rust
 //! reference backend offline, PJRT artifacts when built and present.
 
-use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
+use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef, Schedule};
 use smoothcache::model::{Cond, Engine};
-use smoothcache::pipeline::{generate, CacheMode, GenConfig};
+use smoothcache::pipeline::{generate, GenConfig};
 use smoothcache::quality::psnr;
 use smoothcache::solvers::SolverKind;
 
@@ -36,12 +36,16 @@ fn calibrate_then_cache_image_family() {
         }
     }
 
-    let bts = engine.family_manifest("image").unwrap().branch_types.clone();
+    let fm = engine.family_manifest("image").unwrap().clone();
+    let bts = fm.branch_types.clone();
+    let sites = fm.branch_sites();
     let cond = Cond::Label(vec![3]);
     let base_cfg = GenConfig::new("image", SolverKind::Ddim, 12).with_seed(42);
 
     // no-cache reference
-    let reference = generate(&engine, &base_cfg, &cond, &CacheMode::None, None).expect("gen");
+    let no_cache = CachePlan::no_cache(12, &sites);
+    let reference =
+        generate(&engine, &base_cfg, &cond, PlanRef::Plan(&no_cache), None).expect("gen");
     assert_eq!(reference.stats.branch_computes, 12 * 12); // 6 blocks × 2 types × 12 steps
     assert_eq!(reference.stats.branch_reuses, 0);
 
@@ -54,7 +58,8 @@ fn calibrate_then_cache_image_family() {
         assert!(skip >= prev_skip, "alpha={alpha}");
         prev_skip = skip;
 
-        let out = generate(&engine, &base_cfg, &cond, &CacheMode::Grouped(&schedule), None)
+        let plan = CachePlan::from_grouped(&schedule, &sites).expect("plan");
+        let out = generate(&engine, &base_cfg, &cond, PlanRef::Plan(&plan), None)
             .expect("cached gen");
         let expected_computes: usize =
             schedule.computes_per_type().iter().sum::<usize>() * 6; // × depth
@@ -75,19 +80,20 @@ fn calibrate_then_cache_image_family() {
 #[test]
 fn cached_generation_is_deterministic() {
     let engine = engine_with("image");
-    let bts = engine.family_manifest("image").unwrap().branch_types.clone();
-    let schedule = Schedule::fora(8, &bts, 2);
+    let fm = engine.family_manifest("image").unwrap().clone();
+    let schedule = Schedule::fora(8, &fm.branch_types, 2);
+    let plan = CachePlan::from_grouped(&schedule, &fm.branch_sites()).unwrap();
     let cfg = GenConfig::new("image", SolverKind::Ddim, 8).with_seed(7);
     let cond = Cond::Label(vec![1]);
-    let a = generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None).unwrap();
-    let b = generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None).unwrap();
+    let a = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).unwrap();
+    let b = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).unwrap();
     assert_eq!(a.latent.data, b.latent.data);
     // different seed diverges
     let c = generate(
         &engine,
         &GenConfig::new("image", SolverKind::Ddim, 8).with_seed(8),
         &cond,
-        &CacheMode::Grouped(&schedule),
+        PlanRef::Plan(&plan),
         None,
     )
     .unwrap();
@@ -99,11 +105,12 @@ fn cfg_generation_and_fora_on_audio() {
     let engine = engine_with("audio");
     let fm = engine.family_manifest("audio").unwrap().clone();
     let schedule = Schedule::fora(6, &fm.branch_types, 2);
+    let plan = CachePlan::from_grouped(&schedule, &fm.branch_sites()).unwrap();
     let cfg = GenConfig::new("audio", SolverKind::DpmPP3M { sde: true }, 6)
         .with_cfg(7.0)
         .with_seed(5);
     let cond = Cond::Prompt((1..=fm.cond_len as i32).collect());
-    let out = generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None).unwrap();
+    let out = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).unwrap();
     assert_eq!(out.latent.shape, vec![1, 64, 8]);
     assert!(out.latent.data.iter().all(|v| v.is_finite()));
     assert!(out.stats.branch_reuses > 0);
@@ -115,15 +122,17 @@ fn video_family_generates_with_rf() {
     let fm = engine.family_manifest("video").unwrap().clone();
     let cfg = GenConfig::new("video", SolverKind::RectifiedFlow, 4).with_seed(3);
     let cond = Cond::Prompt(vec![9; fm.cond_len]);
-    let out = generate(&engine, &cfg, &cond, &CacheMode::None, None).unwrap();
+    let no_cache = CachePlan::no_cache(4, &fm.branch_sites());
+    let out = generate(&engine, &cfg, &cond, PlanRef::Plan(&no_cache), None).unwrap();
     assert_eq!(out.latent.shape, vec![1, 4, 8, 8, 4]);
     assert_eq!(out.stats.branch_computes, 4 * fm.depth * fm.branch_types.len());
 }
 
 #[test]
-fn per_site_mode_matches_grouped_when_uniform() {
+fn per_site_plan_matches_grouped_when_uniform() {
     let engine = engine_with("image");
     let fm = engine.family_manifest("image").unwrap().clone();
+    let sites = fm.branch_sites();
     let schedule = Schedule::fora(6, &fm.branch_types, 2);
     // expand the grouped schedule into an identical per-site map
     let mut map = std::collections::BTreeMap::new();
@@ -133,9 +142,32 @@ fn per_site_mode_matches_grouped_when_uniform() {
             map.insert(format!("{b}.{bt}"), ds);
         }
     }
+    let grouped = CachePlan::from_grouped(&schedule, &sites).unwrap();
+    let per_site = CachePlan::from_site_map("uniform", 6, &sites, &map).unwrap();
     let cfg = GenConfig::new("image", SolverKind::Ddim, 6).with_seed(11);
     let cond = Cond::Label(vec![2]);
-    let a = generate(&engine, &cfg, &cond, &CacheMode::Grouped(&schedule), None).unwrap();
-    let b = generate(&engine, &cfg, &cond, &CacheMode::PerSite(&map), None).unwrap();
+    let a = generate(&engine, &cfg, &cond, PlanRef::Plan(&grouped), None).unwrap();
+    let b = generate(&engine, &cfg, &cond, PlanRef::Plan(&per_site), None).unwrap();
     assert_eq!(a.latent.data, b.latent.data);
+}
+
+#[test]
+fn mismatched_plans_are_rejected_loudly() {
+    let engine = engine_with("image");
+    let fm = engine.family_manifest("image").unwrap().clone();
+    let cond = Cond::Label(vec![1]);
+    // wrong step count
+    let plan = CachePlan::no_cache(5, &fm.branch_sites());
+    let cfg = GenConfig::new("image", SolverKind::Ddim, 6).with_seed(1);
+    assert!(generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).is_err());
+    // plan built for another family's site set (audio) must not be
+    // silently accepted with unmatched sites defaulting to Compute
+    let mut audio_engine = smoothcache::model::Engine::open(smoothcache::artifacts_dir())
+        .expect("engine");
+    audio_engine.load_family("audio").expect("audio");
+    let afm = audio_engine.family_manifest("audio").unwrap().clone();
+    let audio_plan = CachePlan::no_cache(6, &afm.branch_sites());
+    let err = generate(&engine, &cfg, &cond, PlanRef::Plan(&audio_plan), None)
+        .expect_err("family mismatch must fail");
+    assert!(format!("{err}").contains("sites"), "{err}");
 }

@@ -9,6 +9,15 @@ cd "$(dirname "$0")/.."
 echo "==> cargo build --release"
 cargo build --release
 
+echo "==> cargo clippy --all-targets -- -D warnings"
+# lint gate over every target (lib, bins, tests, benches, examples);
+# skipped with a warning when the clippy component is not installed
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "warning: cargo-clippy not installed; skipping lint gate" >&2
+fi
+
 echo "==> cargo test -q (SMOOTHCACHE_THREADS=1, serial substrate)"
 SMOOTHCACHE_THREADS=1 cargo test -q
 
