@@ -1,0 +1,100 @@
+//! Streaming + cancellation demo: start the serving stack, run one
+//! generation in streaming mode (one `{"event":"step",…}` line per
+//! solver step over the socket), then start a second long generation
+//! and cancel it mid-flight by id from a sibling connection — the
+//! executor stops at the next solver step and the admission slot
+//! frees (docs/protocol.md §Streaming, §Cancellation).
+//!
+//!     cargo run --release --example stream_cancel -- --steps 40
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig};
+use smoothcache::server::{Client, Server};
+use smoothcache::util::cli::CliSpec;
+use smoothcache::util::json::Json;
+
+fn main() -> smoothcache::util::error::Result<()> {
+    let spec = CliSpec::new("stream_cancel", "streaming + cancellation demo")
+        .flag("steps", "40", "DDIM steps for the streamed generation")
+        .flag("cancel-after", "3", "cancel the second request after this many step events");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match spec.parse(&argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return Ok(());
+        }
+    };
+    let steps = args.usize("steps").map_err(smoothcache::util::error::Error::msg)?;
+    let cancel_after = args.usize("cancel-after").map_err(smoothcache::util::error::Error::msg)?;
+
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(5);
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    let server = Server::start("127.0.0.1:0", Arc::clone(&coord), 4)?;
+    println!("serving on {}", server.addr);
+
+    // 1. a streamed generation: step events arrive as they execute
+    let mut client = Client::connect(&server.addr)?;
+    let req = Json::obj()
+        .set("family", "image")
+        .set("label", 3.0)
+        .set("steps", steps)
+        .set("policy", "fora:2")
+        .set("seed", 7u64);
+    println!("\n— streaming a {steps}-step generation —");
+    let done = client.call_streaming(&req, |ev| match ev.get("event").and_then(|v| v.as_str()) {
+        Some("accepted") => println!("accepted id={}", ev.get("id").unwrap().as_u64().unwrap()),
+        Some("step") => println!(
+            "  step {:>3}/{} computes={} reuses={} t={:.3}s",
+            ev.get("step").and_then(|v| v.as_u64()).unwrap_or(0) + 1,
+            ev.get("steps").and_then(|v| v.as_u64()).unwrap_or(0),
+            ev.get("computes").and_then(|v| v.as_u64()).unwrap_or(0),
+            ev.get("reuses").and_then(|v| v.as_u64()).unwrap_or(0),
+            ev.get("t_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        ),
+        _ => {}
+    })?;
+    println!(
+        "done: ok={:?} skip_fraction={:.2}",
+        done.get("ok").and_then(|v| v.as_bool()),
+        done.get("skip_fraction").and_then(|v| v.as_f64()).unwrap_or(0.0)
+    );
+
+    // 2. a long generation cancelled mid-flight from another connection
+    println!("\n— cancelling a long generation after {cancel_after} steps —");
+    let mut killer = Client::connect(&server.addr)?;
+    let long_req = Json::obj()
+        .set("family", "image")
+        .set("label", 5.0)
+        .set("steps", steps * 10)
+        .set("policy", "no-cache")
+        .set("seed", 8u64);
+    let mut id = 0u64;
+    let mut seen = 0usize;
+    let mut cancelled = false;
+    let outcome = client.call_streaming(&long_req, |ev| {
+        match ev.get("event").and_then(|v| v.as_str()) {
+            Some("accepted") => id = ev.get("id").and_then(|v| v.as_u64()).unwrap_or(0),
+            Some("step") => seen += 1,
+            _ => {}
+        }
+        if seen >= cancel_after && !cancelled && id != 0 {
+            cancelled = true;
+            let acked = killer.cancel(id).expect("cancel rpc");
+            println!("  cancel sent from sibling connection (acknowledged: {acked})");
+        }
+    })?;
+    println!(
+        "outcome after {seen} step events: ok={:?} cancelled={:?}",
+        outcome.get("ok").and_then(|v| v.as_bool()),
+        outcome.get("cancelled").and_then(|v| v.as_bool()),
+    );
+
+    println!("\ncoordinator metrics: {}", coord.metrics().summary());
+    server.stop();
+    Ok(())
+}

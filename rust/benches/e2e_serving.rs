@@ -10,11 +10,16 @@
 //!
 //! Flags: `--workers N` sizes the executor replica pool, `--threads N`
 //! pins the GEMM compute pool (0 = auto), `--queue-depth N` bounds the
-//! shared work queue (rejected requests are counted, not retried).
+//! shared work queue (rejected requests are counted, not retried), and
+//! `--deadline-ms N` attaches a best-effort deadline to every request
+//! (0 = none) so the `dl miss` column reports how much of the load
+//! would have been late under that latency budget.
 
 use std::time::{Duration, Instant};
 
-use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
+use smoothcache::coordinator::{
+    Coordinator, CoordinatorConfig, Deadline, DeadlinePolicy, Metrics, Policy, Request, SubmitOpts,
+};
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::bench::{arg_usize, fast_mode, Table};
 use smoothcache::workload::PoissonTrace;
@@ -27,6 +32,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     let workers = arg_usize("workers", 2);
     let queue_depth = arg_usize("queue-depth", 256);
     let threads = arg_usize("threads", 0);
+    let deadline_ms = arg_usize("deadline-ms", 0);
     if threads > 0 {
         smoothcache::tensor::gemm::set_threads(threads);
     }
@@ -35,7 +41,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     let (steps, n_requests, rate_rps) = if fast_mode() { (8, 16, 8.0) } else { (50, 48, 4.0) };
 
     let mut table = Table::new(&[
-        "policy", "served", "rejected", "throughput (req/s)", "p50 (s)", "p95 (s)",
+        "policy", "served", "rejected", "dl miss", "throughput (req/s)", "p50 (s)", "p95 (s)",
         "mean qwait (s)", "mean exec (s)", "occupancy", "skip%",
     ]);
 
@@ -104,7 +110,15 @@ fn main() -> smoothcache::util::error::Result<()> {
                 seed: item.seed ^ i as u64,
                 policy: policy.clone(),
             };
-            pending.push(coord.submit(req));
+            // optional best-effort deadline: late responses are still
+            // delivered and show up in the dl-miss column
+            let deadline = (deadline_ms > 0).then(|| {
+                Deadline::after(
+                    Duration::from_millis(deadline_ms as u64),
+                    DeadlinePolicy::BestEffort,
+                )
+            });
+            pending.push(coord.submit_opts(req, SubmitOpts { progress: None, deadline }).reply);
         }
         let mut latencies = Vec::new();
         let mut rejected = 0usize;
@@ -137,6 +151,7 @@ fn main() -> smoothcache::util::error::Result<()> {
             policy.wire().to_string(),
             served.to_string(),
             rejected.to_string(),
+            Metrics::get(&m.deadline_missed).to_string(),
             format!("{:.2}", served as f64 / wall),
             format!("{:.3}", pct(0.5)),
             format!("{:.3}", pct(0.95)),

@@ -18,7 +18,7 @@ use std::time::Duration;
 use smoothcache::cache::{CachePlan, Decision, PlanRef, Schedule};
 use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Metrics, Policy, Request};
 use smoothcache::model::{Cond, Engine};
-use smoothcache::pipeline::{generate, GenConfig};
+use smoothcache::pipeline::{generate, GenConfig, GenSession};
 use smoothcache::solvers::SolverKind;
 use smoothcache::tensor::{gemm, Tensor};
 use smoothcache::util::bench::{arg_usize, bench, fast_mode, Table};
@@ -126,6 +126,55 @@ fn main() -> smoothcache::util::error::Result<()> {
             format!("{:.0}", g.mean_s * 1e6),
             format!("{:.0}", g.p95_s * 1e6),
         ]);
+    }
+
+    // ---- session-stepping overhead: one-shot driver vs manual steps ----
+    // The serving executor drives a GenSession step by step (checking a
+    // cancellation flag between steps); this section pins that the
+    // step-driven surface costs nothing measurable over the one-shot
+    // loop it replaced.
+    {
+        let sess_steps = 10usize;
+        let sites = fm.branch_sites();
+        let schedule = Schedule::fora(sess_steps, &fm.branch_types, 2);
+        let plan = CachePlan::from_grouped(&schedule, &sites)?;
+        let cond = Cond::Label(vec![1, 2, 3, 4]);
+        let cfg = GenConfig::new("image", SolverKind::Ddim, sess_steps).with_seed(3);
+        let sess_iters = (iters / 10).max(2);
+        let driver = bench(1, sess_iters, || {
+            let _ = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).unwrap();
+        });
+        let cancelled = std::sync::atomic::AtomicBool::new(false);
+        let stepped = bench(1, sess_iters, || {
+            let mut s =
+                GenSession::new(&engine, &cfg, &cond, PlanRef::Plan(&plan)).unwrap();
+            while !s.is_done() {
+                // the executor's between-step check, modelled exactly
+                if cancelled.load(std::sync::atomic::Ordering::SeqCst) {
+                    break;
+                }
+                s.step().unwrap();
+            }
+            let _ = s.finish();
+        });
+        let mut sess_table = Table::new(&["path", "mean (us)", "p95 (us)", "overhead"]);
+        sess_table.row(&[
+            "generate (one-shot driver)".into(),
+            format!("{:.0}", driver.mean_s * 1e6),
+            format!("{:.0}", driver.p95_s * 1e6),
+            "1.00x".into(),
+        ]);
+        sess_table.row(&[
+            "GenSession steps + cancel check".into(),
+            format!("{:.0}", stepped.mean_s * 1e6),
+            format!("{:.0}", stepped.p95_s * 1e6),
+            format!("{:.2}x", stepped.mean_s / driver.mean_s),
+        ]);
+        println!(
+            "\n§Perf — session-stepping overhead ({sess_steps}-step fora:2 generation, batch 4)"
+        );
+        sess_table.print();
+        std::fs::write("bench_out/perf_engine_session.csv", sess_table.to_csv())?;
     }
 
     let stats = engine.stats();

@@ -106,6 +106,28 @@ impl Batcher {
         self.groups.drain().map(|(_, g)| g.items).collect()
     }
 
+    /// Remove buffered (not yet flushed) requests matching `pred`,
+    /// dropping groups left empty; the removed requests are returned so
+    /// the caller can answer them. The coordinator uses this to shed
+    /// cancelled / deadline-expired requests before they ever reach the
+    /// work queue. Group flush deadlines are left untouched (a purged
+    /// oldest member can only make the group flush early, never late).
+    pub fn remove_where(&mut self, pred: impl Fn(&InFlight) -> bool) -> Vec<InFlight> {
+        let mut removed = Vec::new();
+        self.groups.retain(|_, g| {
+            let mut i = 0;
+            while i < g.items.len() {
+                if pred(&g.items[i]) {
+                    removed.push(g.items.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            !g.items.is_empty()
+        });
+        removed
+    }
+
     /// Time until the next deadline-based flush, if any.
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.groups
@@ -134,8 +156,8 @@ mod tests {
         let (tx, _rx) = channel();
         // keep the receiver alive long enough for tests that don't reply
         std::mem::forget(_rx);
-        InFlight {
-            request: Request {
+        InFlight::new(
+            Request {
                 id,
                 family: family.into(),
                 cond: Cond::Label(vec![1]),
@@ -145,9 +167,8 @@ mod tests {
                 seed: id,
                 policy: Policy::no_cache(),
             },
-            submitted: Instant::now(),
-            reply: tx,
-        }
+            tx,
+        )
     }
 
     fn cfg() -> BatcherConfig {
@@ -222,6 +243,29 @@ mod tests {
         b.push(mk_inflight("image", 10, 1.0, 0), t0);
         let d = b.next_deadline(t0 + Duration::from_millis(20)).unwrap();
         assert!(d <= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn remove_where_purges_buffered_requests_and_empty_groups() {
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push(mk_inflight("image", 10, 1.0, i), now);
+        }
+        b.push(mk_inflight("audio", 10, 1.0, 3), now);
+        assert_eq!(b.pending(), 4);
+
+        // purge one member of the image group and the whole audio group
+        let removed = b.remove_where(|it| it.request.id >= 2);
+        assert_eq!(removed.len(), 2);
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.groups.len(), 1, "emptied groups must be dropped");
+
+        // survivors still flush normally
+        let flushed = b.poll(now + Duration::from_millis(60));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].len(), 2);
+        assert!(b.remove_where(|_| true).is_empty());
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Cooperative cancellation, per-request deadlines and streaming
+//! progress for in-flight generation work.
+//!
+//! A [`CancelToken`] is a cheaply cloneable flag attached to every
+//! submitted request. Setting it never interrupts anything directly —
+//! each stage of the pipeline checks it at its own safe points: the
+//! batcher when flushing a group, the work queue when
+//! [`Coordinator::cancel`](super::Coordinator::cancel) purges queued
+//! requests (freeing their admission slots immediately), and the
+//! executor **between solver steps** while driving a
+//! [`crate::pipeline::GenSession`] — so a cancelled request stops
+//! within one step without ever poisoning shared state (including the
+//! pool-shared plan store a sibling calibration may hold).
+//!
+//! A [`Deadline`] is an absolute must-finish-by instant with one of two
+//! policies: [`DeadlinePolicy::RejectLate`] drops the work (a request
+//! whose deadline expired never starts executing, and a late result is
+//! answered with a `deadline:` error), while
+//! [`DeadlinePolicy::BestEffort`] always delivers the result and only
+//! counts/flags the miss.
+//!
+//! [`Progress`] is the per-step event the executor emits to a
+//! request's optional progress channel — the server forwards it as
+//! `{"event":"step",…}` lines in streaming mode (docs/protocol.md).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::request::InFlight;
+
+/// Cheaply cloneable cancellation flag shared by everything holding a
+/// reference to one request. Setting it is idempotent and never blocks.
+#[derive(Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Work already past its last check point
+    /// still completes; everything else stops at the next safe point.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Identity comparison (same underlying flag, not same state) —
+    /// distinguishes requests that share a caller-chosen id.
+    pub(crate) fn same(&self, other: &CancelToken) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CancelToken({})",
+            if self.is_cancelled() { "cancelled" } else { "live" }
+        )
+    }
+}
+
+/// What to do with work that outlives its [`Deadline`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeadlinePolicy {
+    /// Run to completion regardless; a late response is still delivered
+    /// (flagged `deadline_missed`, counted in the metrics summary).
+    /// The default — a missed best-effort deadline costs nothing extra.
+    #[default]
+    BestEffort,
+    /// Shed late work: an expired request never starts executing, and a
+    /// result arriving past the deadline is answered with a `deadline:`
+    /// error instead of the latent.
+    RejectLate,
+}
+
+impl DeadlinePolicy {
+    /// Parse the wire spelling: `best-effort` or `reject`.
+    pub fn parse(s: &str) -> Option<DeadlinePolicy> {
+        match s {
+            "best-effort" => Some(DeadlinePolicy::BestEffort),
+            "reject" => Some(DeadlinePolicy::RejectLate),
+            _ => None,
+        }
+    }
+
+    /// The canonical wire spelling ([`DeadlinePolicy::parse`] inverse).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeadlinePolicy::BestEffort => "best-effort",
+            DeadlinePolicy::RejectLate => "reject",
+        }
+    }
+}
+
+/// An absolute latency budget for one request.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    /// The instant the request must be answered by.
+    pub at: Instant,
+    /// What happens to work that misses it.
+    pub policy: DeadlinePolicy,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration, policy: DeadlinePolicy) -> Deadline {
+        Deadline { at: Instant::now() + budget, policy }
+    }
+
+    /// Whether the deadline has passed.
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+}
+
+/// One per-step progress report for a request whose batch is executing
+/// (sent on the channel passed in
+/// [`SubmitOpts::progress`](super::SubmitOpts)). Decision counters are
+/// batch-level: they count sites across the whole executed batch.
+#[derive(Clone, Copy, Debug)]
+pub struct Progress {
+    /// The request this event belongs to.
+    pub id: u64,
+    /// 0-based solver step that just executed.
+    pub step: usize,
+    /// Total steps in the trajectory.
+    pub steps: usize,
+    /// Branch sites computed in this step (whole batch).
+    pub computes: usize,
+    /// Branch sites that reused a cached delta in this step.
+    pub reuses: usize,
+    /// Largest per-refresh drift observed this step (dynamic policies).
+    pub drift: Option<f64>,
+    /// Seconds since this batch started executing — the per-step
+    /// progress timestamp streaming clients see.
+    pub elapsed_s: f64,
+}
+
+/// The coordinator's live id → token registry. Entries are added at
+/// submit and removed by the [`CancelRegistration`] drop guard when the
+/// request is answered (whatever path answered it), so the map never
+/// outgrows the in-flight set.
+pub(crate) type CancelMap = Arc<Mutex<HashMap<u64, CancelToken>>>;
+
+pub(crate) fn lock_cancels(map: &CancelMap) -> std::sync::MutexGuard<'_, HashMap<u64, CancelToken>> {
+    // the lock only guards map inserts/removals; always consistent
+    map.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Drop guard that removes one request's token from the registry when
+/// its [`InFlight`] is consumed (answered or dropped on any path).
+pub(crate) struct CancelRegistration {
+    map: CancelMap,
+    id: u64,
+    token: CancelToken,
+}
+
+impl CancelRegistration {
+    /// Insert `token` under `id` and return the guard that removes it.
+    pub(crate) fn register(map: &CancelMap, id: u64, token: CancelToken) -> CancelRegistration {
+        lock_cancels(map).insert(id, token.clone());
+        CancelRegistration { map: Arc::clone(map), id, token }
+    }
+}
+
+impl Drop for CancelRegistration {
+    fn drop(&mut self) {
+        let mut m = lock_cancels(&self.map);
+        // only remove our own entry — a caller-chosen duplicate id may
+        // have overwritten it with a different request's token
+        if m.get(&self.id).is_some_and(|t| t.same(&self.token)) {
+            m.remove(&self.id);
+        }
+    }
+}
+
+impl std::fmt::Debug for CancelRegistration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CancelRegistration({})", self.id)
+    }
+}
+
+/// Answer a request that must not (or can no longer) execute: cancelled
+/// requests get a `cancelled:` error, reject-late-expired ones a
+/// `deadline:` error; the matching metrics counter is bumped. Every
+/// call consumes the [`InFlight`], preserving the exactly-one-reply
+/// invariant.
+pub(crate) fn reply_dead(metrics: &Metrics, it: InFlight) {
+    let id = it.request.id;
+    if it.cancel.is_cancelled() {
+        Metrics::inc(&metrics.requests_cancelled);
+        let _ = it
+            .reply
+            .send(Err(crate::err!("cancelled: request {id} was cancelled")));
+    } else {
+        Metrics::inc(&metrics.deadline_missed);
+        let _ = it.reply.send(Err(crate::err!(
+            "deadline: request {id} exceeded its deadline before completing"
+        )));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_cancels_once_visible_to_clones() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_cancelled());
+        t.cancel();
+        assert!(t2.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_policy_wire_roundtrip() {
+        for p in [DeadlinePolicy::BestEffort, DeadlinePolicy::RejectLate] {
+            assert_eq!(DeadlinePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(DeadlinePolicy::parse("strict"), None);
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let d = Deadline::after(Duration::from_secs(3600), DeadlinePolicy::BestEffort);
+        assert!(!d.expired());
+        let past = Deadline { at: Instant::now(), policy: DeadlinePolicy::RejectLate };
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(past.expired());
+    }
+
+    #[test]
+    fn registration_guard_removes_only_its_own_entry() {
+        let map: CancelMap = Arc::default();
+        let t1 = CancelToken::new();
+        let r1 = CancelRegistration::register(&map, 7, t1);
+        assert!(lock_cancels(&map).contains_key(&7));
+        // a duplicate id overwrites the entry with a different token…
+        let t2 = CancelToken::new();
+        let r2 = CancelRegistration::register(&map, 7, t2.clone());
+        drop(r1); // …so the first guard must not remove the second's entry
+        assert!(lock_cancels(&map).get(&7).is_some_and(|t| t.same(&t2)));
+        drop(r2);
+        assert!(!lock_cancels(&map).contains_key(&7));
+    }
+}

@@ -16,13 +16,14 @@ use std::time::Instant;
 
 use crate::util::error::Result;
 
+use super::cancel::{reply_dead, DeadlinePolicy, Progress};
 use super::metrics::Metrics;
 use super::queue::WorkQueue;
 use super::request::{InFlight, Request, Response};
 use crate::cache::plan::{CachePlan, PlanCtx, PlanRef};
 use crate::cache::{calibrate, CalibrationConfig, ErrorCurves};
 use crate::model::Engine;
-use crate::pipeline::{generate_from, GenConfig};
+use crate::pipeline::{GenConfig, GenSession};
 use crate::solvers::SolverRun;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -256,6 +257,10 @@ pub fn execute_batch(
     let exec_start = Instant::now();
     let req0: &Request = &batch[0].request;
     let family = req0.family.clone();
+    // cloned (Arc-backed) so the session's PlanRef can borrow the
+    // dynamic planner from a local instead of from `batch`, which the
+    // step loop must be free to answer and consume
+    let policy = req0.policy.clone();
     engine.load_family(&family)?;
     let fm = engine.family_manifest(&family)?.clone();
     let cfg_on = req0.cfg_scale != 1.0;
@@ -305,7 +310,11 @@ pub fn execute_batch(
     // an in-flight calibration of a *different* smooth key.) Dynamic
     // policies carry no plan at all — their StepPlanner decides inside
     // the generate loop from runtime observations.
-    let planner = req0.policy.planner();
+    let gen_cfg = GenConfig::new(&family, req0.solver, req0.steps)
+        .with_cfg(req0.cfg_scale)
+        .with_seed(req0.seed);
+    let (solver, steps) = (req0.solver, req0.steps);
+    let planner = policy.planner();
     let held_plan;
     let plan = if let Some(sp) = planner.dynamic() {
         PlanRef::Planner(sp)
@@ -315,17 +324,17 @@ pub fn execute_batch(
         // not a rebuild + validate per batch
         let key = PlanKey {
             family: family.clone(),
-            solver: req0.solver.name().to_string(),
-            steps: req0.steps,
-            policy: req0.policy.wire().to_string(),
+            solver: solver.name().to_string(),
+            steps,
+            policy: policy.wire().to_string(),
         };
         held_plan = match local_plans.get(&key) {
             Some(p) => Arc::clone(p),
             None => {
                 let p = Arc::new(planner.plan(&PlanCtx {
                     family: &fm,
-                    solver: req0.solver,
-                    steps: req0.steps,
+                    solver,
+                    steps,
                     curves: None,
                 })?);
                 local_plans.insert(key, Arc::clone(&p));
@@ -334,22 +343,52 @@ pub fn execute_batch(
         };
         PlanRef::Plan(&held_plan)
     } else {
-        held_plan = lock_store(store).plan(
-            engine,
-            Some(metrics),
-            &family,
-            req0.solver,
-            req0.steps,
-            &req0.policy,
-        )?;
+        held_plan =
+            lock_store(store).plan(engine, Some(metrics), &family, solver, steps, &policy)?;
         PlanRef::Plan(&held_plan)
     };
-    let gen_cfg = GenConfig::new(&family, req0.solver, req0.steps)
-        .with_cfg(req0.cfg_scale)
-        .with_seed(req0.seed);
 
+    // Step-driven execution over a GenSession: between every solver
+    // step the executor checks cancellation and reject-late deadlines
+    // (abandoning the whole batch once every member is dead — a live
+    // sibling's work always completes), emits per-step progress events
+    // to streaming requests, and accounts per-step latency. This is the
+    // cooperative-cancellation seam: no locks are held across a check,
+    // so aborting is always safe, including while another replica holds
+    // the plan store inside a calibration.
     let queue_at = exec_start;
-    let out = generate_from(engine, &gen_cfg, &cond, x_init, plan, None)?;
+    let mut session = GenSession::from_latent(engine, &gen_cfg, &cond, x_init, plan)?;
+    let steps_total = session.total_steps();
+    while !session.is_done() {
+        if batch.iter().all(|it| it.dead_on_arrival()) {
+            for it in batch {
+                reply_dead(metrics, it);
+            }
+            return Ok(());
+        }
+        let t_step = Instant::now();
+        let ev = session.step()?;
+        metrics.step_latency.observe(t_step.elapsed().as_secs_f64());
+        Metrics::inc(&metrics.steps_executed);
+        let elapsed_s = exec_start.elapsed().as_secs_f64();
+        for it in &batch {
+            if it.cancel.is_cancelled() {
+                continue;
+            }
+            if let Some(tx) = &it.progress {
+                let _ = tx.send(Progress {
+                    id: it.request.id,
+                    step: ev.step,
+                    steps: steps_total,
+                    computes: ev.computes,
+                    reuses: ev.reuses,
+                    drift: ev.max_drift,
+                    elapsed_s,
+                });
+            }
+        }
+    }
+    let out = session.finish();
     let exec_seconds = exec_start.elapsed().as_secs_f64();
 
     Metrics::inc(&metrics.batches_executed);
@@ -357,7 +396,23 @@ pub fn execute_batch(
     Metrics::add(&metrics.branch_reuses, out.stats.branch_reuses as u64);
     metrics.exec_latency.observe(exec_seconds);
 
+    let now = Instant::now();
     for (i, it) in batch.into_iter().enumerate() {
+        // cancelled / reject-late-expired while siblings kept the batch
+        // alive: the result is discarded for this request only
+        if it.cancel.is_cancelled()
+            || it
+                .deadline
+                .is_some_and(|d| d.policy == DeadlinePolicy::RejectLate && now >= d.at)
+        {
+            reply_dead(metrics, it);
+            continue;
+        }
+        let deadline_missed = it.deadline.is_some_and(|d| now >= d.at);
+        if deadline_missed {
+            // best-effort deadline: deliver the late result, count it
+            Metrics::inc(&metrics.deadline_missed);
+        }
         let queue_seconds = queue_at.duration_since(it.submitted).as_secs_f64();
         let total = it.submitted.elapsed().as_secs_f64();
         metrics.queue_latency.observe(queue_seconds);
@@ -367,6 +422,8 @@ pub fn execute_batch(
             id: it.request.id,
             latent: out.latent.sample(i),
             batch_size: target,
+            steps_completed: out.stats.steps,
+            deadline_missed,
             queue_seconds,
             exec_seconds,
             total_seconds: total,
@@ -430,7 +487,17 @@ pub fn run_executor(
     while let Some(q) = queue.pop() {
         Metrics::set(&metrics.queue_depth, queue.len() as u64);
         metrics.queue_wait.observe(q.enqueued.elapsed().as_secs_f64());
-        let batch = q.batch;
+        // shed requests that died while queued (cancelled, or past a
+        // reject-late deadline) before any work happens — they never
+        // reach the engine, and a fully dead batch is skipped outright
+        let (batch, dead): (Vec<_>, Vec<_>) =
+            q.batch.into_iter().partition(|it| !it.dead_on_arrival());
+        for it in dead {
+            reply_dead(&metrics, it);
+        }
+        if batch.is_empty() {
+            continue;
+        }
         // keep reply handles in case of failure
         let ids: Vec<u64> = batch.iter().map(|b| b.request.id).collect();
         let replies: Vec<_> = batch.iter().map(|b| b.reply.clone()).collect();

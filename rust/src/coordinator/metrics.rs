@@ -85,6 +85,17 @@ pub struct Metrics {
     /// Requests answered with an execution error (admission rejections
     /// count under [`Metrics::queue_rejections`] instead).
     pub requests_failed: AtomicU64,
+    /// Requests answered with a `cancelled:` error — cancelled while
+    /// buffered, queued, or between solver steps of an in-flight
+    /// generation (each counted exactly once, wherever it was shed).
+    pub requests_cancelled: AtomicU64,
+    /// Deadline misses: reject-late requests answered with a
+    /// `deadline:` error plus best-effort responses delivered late
+    /// (flagged `deadline_missed` on the [`super::Response`]).
+    pub deadline_missed: AtomicU64,
+    /// Solver steps executed across all batches (the coarse progress
+    /// pulse: it advancing means the pool is making forward progress).
+    pub steps_executed: AtomicU64,
     /// Batches pulled from the work queue and executed.
     pub batches_executed: AtomicU64,
     /// Padding slots added to reach an AOT-compiled batch size.
@@ -121,6 +132,10 @@ pub struct Metrics {
     pub queue_wait: Histogram,
     /// model execution time per batch.
     pub exec_latency: Histogram,
+    /// per-solver-step execution time (one observation per step per
+    /// batch) — the granularity cancellation and streaming progress
+    /// operate at: a cancel lands within roughly one `step_mean`.
+    pub step_latency: Histogram,
 }
 
 impl Metrics {
@@ -165,14 +180,17 @@ impl Metrics {
     /// docs/protocol.md).
     pub fn summary(&self) -> String {
         format!(
-            "workers={} requests={} completed={} failed={} rejected={} batches={} \
-             qdepth={} qpeak={} occupancy={:.2} plan_hits={} plan_miss={} \
-             e2e_mean={:.3}s e2e_p95={:.3}s queue_mean={:.3}s qwait_mean={:.3}s \
-             qwait_p95={:.3}s exec_mean={:.3}s skips={}/{}",
+            "workers={} requests={} completed={} failed={} cancelled={} dl_miss={} \
+             rejected={} batches={} qdepth={} qpeak={} occupancy={:.2} plan_hits={} \
+             plan_miss={} e2e_mean={:.3}s e2e_p95={:.3}s queue_mean={:.3}s \
+             qwait_mean={:.3}s qwait_p95={:.3}s exec_mean={:.3}s steps={} \
+             step_mean={:.4}s skips={}/{}",
             Self::get(&self.executor_replicas).max(1),
             Self::get(&self.requests_submitted),
             Self::get(&self.requests_completed),
             Self::get(&self.requests_failed),
+            Self::get(&self.requests_cancelled),
+            Self::get(&self.deadline_missed),
             Self::get(&self.queue_rejections),
             Self::get(&self.batches_executed),
             Self::get(&self.queue_depth),
@@ -186,6 +204,8 @@ impl Metrics {
             self.queue_wait.mean(),
             self.queue_wait.quantile(0.95),
             self.exec_latency.mean(),
+            Self::get(&self.steps_executed),
+            self.step_latency.mean(),
             Self::get(&self.branch_reuses),
             Self::get(&self.branch_computes) + Self::get(&self.branch_reuses),
         )
@@ -242,6 +262,20 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("plan_hits=4"), "{s}");
         assert!(s.contains("plan_miss=1"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_cancellation_and_step_counters() {
+        let m = Metrics::default();
+        Metrics::add(&m.requests_cancelled, 2);
+        Metrics::inc(&m.deadline_missed);
+        Metrics::add(&m.steps_executed, 50);
+        m.step_latency.observe(0.002);
+        let s = m.summary();
+        assert!(s.contains("cancelled=2"), "{s}");
+        assert!(s.contains("dl_miss=1"), "{s}");
+        assert!(s.contains("steps=50"), "{s}");
+        assert!(s.contains("step_mean=0.0020s"), "{s}");
     }
 
     #[test]

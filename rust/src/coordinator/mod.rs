@@ -33,9 +33,20 @@
 //! once per configuration" holds at any pool size; the lane choice for
 //! each batch comes straight from the policy registry
 //! ([`crate::cache::plan::registry`]) instead of re-matching an enum.
+//!
+//! Requests are controllable while in flight (ADR-004, [`cancel`]):
+//! every submission carries a cancellation token and an optional
+//! [`Deadline`]; [`Coordinator::cancel`] (or a client disconnect at
+//! the server layer) stops queued work immediately — the admission
+//! slot frees and the batch never reaches a replica — and stops
+//! executing work at the next solver-step boundary, since executors
+//! drive each batch as a step-wise [`crate::pipeline::GenSession`].
+//! The same step loop emits per-step [`Progress`] events for
+//! streaming clients.
 #![deny(missing_docs)]
 
 pub mod batcher;
+pub mod cancel;
 pub mod executor;
 pub mod metrics;
 pub mod queue;
@@ -48,7 +59,10 @@ use std::time::{Duration, Instant};
 
 use crate::util::error::Result;
 
+use cancel::{lock_cancels, reply_dead, CancelMap, CancelRegistration, CancelToken};
+
 pub use batcher::{Batcher, BatcherConfig};
+pub use cancel::{Deadline, DeadlinePolicy, Progress};
 pub use executor::{ExecutorConfig, PlanKey, PlanStore, SharedPlanStore};
 pub use metrics::{Histogram, Metrics};
 pub use queue::{Lane, QueuedBatch, WorkQueue};
@@ -130,6 +144,30 @@ fn default_queue_depth() -> usize {
         .unwrap_or(256)
 }
 
+/// Options a submission may carry beyond the [`Request`] itself:
+/// a per-step progress stream (streaming clients) and a latency
+/// deadline. `SubmitOpts::default()` is a plain blocking submission.
+#[derive(Debug, Default)]
+pub struct SubmitOpts {
+    /// Receive one [`Progress`] event per solver step while the
+    /// request's batch executes.
+    pub progress: Option<Sender<Progress>>,
+    /// Optional latency budget (see [`Deadline`]).
+    pub deadline: Option<Deadline>,
+}
+
+/// Handle returned by [`Coordinator::submit_opts`]: the assigned
+/// request id — usable with [`Coordinator::cancel`] while the request
+/// is in flight — plus the single-use reply channel.
+pub struct Ticket {
+    /// The coordinator-assigned (or caller-chosen, if nonzero) id.
+    pub id: u64,
+    /// Exactly one message ever arrives here: the [`Response`], an
+    /// execution error, an `overloaded:` rejection, a `cancelled:`
+    /// abort or a `deadline:` rejection.
+    pub reply: Receiver<Result<Response>>,
+}
+
 /// Handle to a running coordinator. Dropping it shuts the pipeline down
 /// (in-flight requests drain first).
 pub struct Coordinator {
@@ -137,6 +175,7 @@ pub struct Coordinator {
     queue: Arc<WorkQueue>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    cancels: CancelMap,
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     executor_handles: Vec<std::thread::JoinHandle<()>>,
 }
@@ -208,6 +247,7 @@ impl Coordinator {
             queue,
             metrics,
             next_id: AtomicU64::new(1),
+            cancels: CancelMap::default(),
             batcher_handle: Some(batcher_handle),
             executor_handles,
         })
@@ -227,24 +267,70 @@ impl Coordinator {
     /// reply is either a [`Response`], an execution error, or — when
     /// the work queue is at `--queue-depth` — an admission-control
     /// rejection whose message starts with `overloaded:`.
-    pub fn submit(&self, mut request: Request) -> Receiver<Result<Response>> {
+    pub fn submit(&self, request: Request) -> Receiver<Result<Response>> {
+        self.submit_opts(request, SubmitOpts::default()).reply
+    }
+
+    /// Submit with [`SubmitOpts`] (progress stream, deadline); the
+    /// returned [`Ticket`] carries the assigned id, which
+    /// [`Coordinator::cancel`] accepts while the request is in flight.
+    pub fn submit_opts(&self, mut request: Request, opts: SubmitOpts) -> Ticket {
         if request.id == 0 {
             request.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
+        let id = request.id;
         Metrics::inc(&self.metrics.requests_submitted);
         let (tx, rx) = channel();
-        let item = InFlight { request, submitted: Instant::now(), reply: tx };
+        let token = CancelToken::new();
+        let registration = CancelRegistration::register(&self.cancels, id, token.clone());
+        let item = InFlight {
+            request,
+            submitted: Instant::now(),
+            reply: tx,
+            cancel: token,
+            deadline: opts.deadline,
+            progress: opts.progress,
+            registration: Some(registration),
+        };
         if let Some(q) = &self.tx {
             // a send error means shutdown; the caller sees a disconnect
             let _ = q.send(item);
         }
-        rx
+        Ticket { id, reply: rx }
     }
 
     /// Submit and wait.
     pub fn generate_blocking(&self, request: Request) -> Result<Response> {
         let rx = self.submit(request);
         rx.recv().map_err(|_| crate::err!("coordinator shut down"))?
+    }
+
+    /// Cooperatively cancel an in-flight request by id. Returns `true`
+    /// when the id was known (submitted and not yet answered); the
+    /// request's reply channel still receives exactly one message — a
+    /// `cancelled:` error, or the finished [`Response`] if it won the
+    /// race. A request still waiting in the shared work queue is pulled
+    /// out *now*: its admission slot frees immediately and it never
+    /// reaches a replica; one buffered in the batcher is shed at its
+    /// group's next flush; one executing stops at the next solver-step
+    /// boundary (see [`cancel`](crate::coordinator::cancel)).
+    pub fn cancel(&self, id: u64) -> bool {
+        let token = lock_cancels(&self.cancels).get(&id).cloned();
+        let Some(token) = token else {
+            return false;
+        };
+        token.cancel();
+        // purge by token identity, not by id: with duplicate
+        // caller-chosen ids only the registered (latest) request was
+        // cancelled, and an unrelated same-id request must stay queued
+        let removed = self.queue.remove_where(|it| it.cancel.same(&token));
+        if !removed.is_empty() {
+            Metrics::set(&self.metrics.queue_depth, self.queue.len() as u64);
+            for it in removed {
+                reply_dead(&self.metrics, it);
+            }
+        }
+        true
     }
 
     /// Drain and stop the batcher and every executor replica.
@@ -315,6 +401,17 @@ fn run_batcher(
 ) {
     let mut batcher = Batcher::new(config);
     let dispatch = |batch: Vec<InFlight>| {
+        // shed members that died while buffered (cancelled requests,
+        // expired reject-late deadlines) — they are answered here and
+        // never consume queue admission
+        let (batch, dead): (Vec<_>, Vec<_>) =
+            batch.into_iter().partition(|it| !it.dead_on_arrival());
+        for it in dead {
+            reply_dead(&metrics, it);
+        }
+        if batch.is_empty() {
+            return;
+        }
         let lane = lane_for(&store, &batch[0].request);
         match queue.push(batch, lane) {
             Ok(()) => {
@@ -334,6 +431,12 @@ fn run_batcher(
         }
     };
     loop {
+        // purge buffered requests that died while waiting in a group —
+        // answered promptly (within one recv timeout) instead of riding
+        // along until their group's flush deadline
+        for it in batcher.remove_where(|it| it.dead_on_arrival()) {
+            reply_dead(&metrics, it);
+        }
         let now = Instant::now();
         let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(100));
         match rx.recv_timeout(timeout) {

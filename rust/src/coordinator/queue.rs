@@ -180,6 +180,37 @@ impl WorkQueue {
         lock(&self.state).open = false;
         self.cv.notify_all();
     }
+
+    /// Pull every queued request matching `pred` out of the queue —
+    /// their admission slots free immediately and they never reach a
+    /// replica — returning them so the caller can answer each one
+    /// (cancellation purge, [`super::Coordinator::cancel`]). Batches
+    /// left empty are dropped; FIFO order of the rest is untouched.
+    pub fn remove_where(&self, pred: impl Fn(&InFlight) -> bool) -> Vec<InFlight> {
+        fn take(
+            lane: &mut VecDeque<QueuedBatch>,
+            pred: &impl Fn(&InFlight) -> bool,
+            removed: &mut Vec<InFlight>,
+        ) {
+            for qb in lane.iter_mut() {
+                let mut i = 0;
+                while i < qb.batch.len() {
+                    if pred(&qb.batch[i]) {
+                        removed.push(qb.batch.remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            lane.retain(|qb| !qb.batch.is_empty());
+        }
+        let mut removed = Vec::new();
+        let mut st = lock(&self.state);
+        take(&mut st.prio, &pred, &mut removed);
+        take(&mut st.normal, &pred, &mut removed);
+        st.queued_requests -= removed.len();
+        removed
+    }
 }
 
 #[cfg(test)]
@@ -196,8 +227,8 @@ mod tests {
             .map(|&id| {
                 let (tx, rx) = channel();
                 std::mem::forget(rx); // keep the reply channel alive
-                InFlight {
-                    request: Request {
+                InFlight::new(
+                    Request {
                         id,
                         family: "image".into(),
                         cond: Cond::Label(vec![1]),
@@ -207,9 +238,8 @@ mod tests {
                         seed: id,
                         policy: Policy::no_cache(),
                     },
-                    submitted: Instant::now(),
-                    reply: tx,
-                }
+                    tx,
+                )
             })
             .collect()
     }
@@ -269,6 +299,34 @@ mod tests {
         assert_eq!(ids(&q.pop().unwrap()), vec![1]);
         assert!(q.pop().is_none());
         assert!(q.pop().is_none()); // idempotent
+    }
+
+    #[test]
+    fn remove_where_frees_slots_and_drops_empty_batches() {
+        let q = WorkQueue::new(4);
+        q.push(mk_batch(&[1, 2]), Lane::Priority).unwrap();
+        q.push(mk_batch(&[3]), Lane::Normal).unwrap();
+        assert_eq!(q.len(), 3);
+        // queue is full enough that another 2-request batch is rejected
+        assert!(q.push(mk_batch(&[4, 5]), Lane::Normal).is_err());
+
+        // purge one request out of the priority batch and the whole
+        // normal batch — slots free immediately
+        let removed = q.remove_where(|it| it.request.id == 2 || it.request.id == 3);
+        assert_eq!(
+            removed.iter().map(|it| it.request.id).collect::<Vec<_>>(),
+            vec![2, 3]
+        );
+        assert_eq!(q.len(), 1);
+        // freed capacity admits the batch that was rejected above
+        q.push(mk_batch(&[4, 5]), Lane::Normal).unwrap();
+
+        // the emptied normal batch is gone; the surviving priority
+        // request still pops first, then the new batch
+        assert_eq!(ids(&q.pop().unwrap()), vec![1]);
+        assert_eq!(ids(&q.pop().unwrap()), vec![4, 5]);
+        assert!(q.is_empty());
+        assert!(q.remove_where(|_| true).is_empty());
     }
 
     #[test]

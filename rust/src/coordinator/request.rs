@@ -5,6 +5,7 @@ use std::time::Instant;
 
 use crate::util::error::Result;
 
+use super::cancel::{CancelRegistration, CancelToken, Deadline, DeadlinePolicy, Progress};
 use crate::cache::plan::{parse_policy, Planner};
 use crate::model::Cond;
 use crate::pipeline::GenStats;
@@ -165,6 +166,13 @@ pub struct Response {
     pub latent: Tensor,
     /// Executed batch size after dynamic batching + padding.
     pub batch_size: usize,
+    /// Solver steps the generation executed (the full trajectory; an
+    /// aborted generation never produces a `Response`).
+    pub steps_completed: usize,
+    /// True when the request carried a best-effort deadline and the
+    /// response is late (reject-late deadlines answer a `deadline:`
+    /// error instead).
+    pub deadline_missed: bool,
     /// Submit → batch-execution-start delay for this request.
     pub queue_seconds: f64,
     /// Model execution time of the batch that served this request.
@@ -175,7 +183,10 @@ pub struct Response {
     pub gen_stats: GenStats,
 }
 
-/// A request travelling through the coordinator with its reply channel.
+/// A request travelling through the coordinator with its reply channel
+/// and transport state (cancellation token, optional deadline and
+/// progress stream). Build one with [`InFlight::new`]; the coordinator
+/// attaches deadline/progress/registry state at submit.
 #[derive(Debug)]
 pub struct InFlight {
     /// The request itself.
@@ -184,8 +195,46 @@ pub struct InFlight {
     pub submitted: Instant,
     /// Single-use reply channel back to the submitter. Invariant:
     /// exactly one message is ever sent on it — a response, an
-    /// execution error, or an `overloaded:` admission rejection.
+    /// execution error, an `overloaded:` admission rejection, a
+    /// `cancelled:` abort or a `deadline:` rejection.
     pub reply: std::sync::mpsc::Sender<Result<Response>>,
+    /// Cooperative cancellation flag, checked by the batcher at flush,
+    /// by queue purges, and by executors between solver steps.
+    pub cancel: CancelToken,
+    /// Optional latency budget (see [`super::cancel::Deadline`]).
+    pub deadline: Option<Deadline>,
+    /// Optional per-step progress stream (streaming clients).
+    pub progress: Option<std::sync::mpsc::Sender<Progress>>,
+    /// Registry drop guard: removes the cancel token from the
+    /// coordinator's id map when this request is answered on any path.
+    pub(super) registration: Option<CancelRegistration>,
+}
+
+impl InFlight {
+    /// Wrap a request and its reply channel with default transport
+    /// state: a fresh cancel token, no deadline, no progress stream.
+    pub fn new(request: Request, reply: std::sync::mpsc::Sender<Result<Response>>) -> InFlight {
+        InFlight {
+            request,
+            submitted: Instant::now(),
+            reply,
+            cancel: CancelToken::new(),
+            deadline: None,
+            progress: None,
+            registration: None,
+        }
+    }
+
+    /// True when this request must not start executing: it was
+    /// cancelled, or its reject-late deadline has already expired
+    /// (best-effort deadlines still run). The batcher, queue purge and
+    /// executor pre-filter all shed on this predicate.
+    pub fn dead_on_arrival(&self) -> bool {
+        self.cancel.is_cancelled()
+            || self
+                .deadline
+                .is_some_and(|d| d.policy == DeadlinePolicy::RejectLate && d.expired())
+    }
 }
 
 #[cfg(test)]

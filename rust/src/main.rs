@@ -14,7 +14,9 @@ use std::time::Duration;
 
 use smoothcache::util::error::{Error, Result};
 use smoothcache::cache::{calibrate, CalibrationConfig};
-use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
+use smoothcache::coordinator::{
+    Coordinator, CoordinatorConfig, Deadline, DeadlinePolicy, Policy, Request, SubmitOpts,
+};
 use smoothcache::model::{Cond, Engine, Manifest};
 use smoothcache::server::Server;
 use smoothcache::solvers::SolverKind;
@@ -120,6 +122,9 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("calib-samples", "6", "calibration samples for smooth policies")
         .flag("workers", "1", "executor replicas (one is plenty for a one-off)")
         .flag("threads", "0", "GEMM compute threads (0 = auto)")
+        .flag("deadline-ms", "0", "latency deadline in ms (0 = none)")
+        .flag("deadline-policy", "best-effort", "what to do with late work: best-effort|reject")
+        .bool_flag("stream", "print one progress line per solver step")
         .flag("out", "", "write latent to this path (JSON)");
     let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
 
@@ -154,7 +159,50 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         seed: args.u64("seed").map_err(Error::msg)?,
         policy: Policy::parse(args.str("policy"))?,
     };
-    let resp = coord.generate_blocking(request)?;
+    let deadline = match args.u64("deadline-ms").map_err(Error::msg)? {
+        0 => None,
+        ms => {
+            let policy = DeadlinePolicy::parse(args.str("deadline-policy"))
+                .ok_or_else(|| smoothcache::err!("--deadline-policy: best-effort or reject"))?;
+            Some(Deadline::after(Duration::from_millis(ms), policy))
+        }
+    };
+    let (progress, progress_rx) = if args.bool("stream") {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (Some(tx), Some(rx))
+    } else {
+        (None, None)
+    };
+    let ticket = coord.submit_opts(request, SubmitOpts { progress, deadline });
+    let print_progress = |rx: &std::sync::mpsc::Receiver<smoothcache::coordinator::Progress>| {
+        while let Ok(p) = rx.try_recv() {
+            println!(
+                "step {:>4}/{} computes={} reuses={} t={:.3}s",
+                p.step + 1,
+                p.steps,
+                p.computes,
+                p.reuses,
+                p.elapsed_s
+            );
+        }
+    };
+    let resp = loop {
+        if let Some(rx) = &progress_rx {
+            print_progress(rx);
+        }
+        match ticket.reply.recv_timeout(Duration::from_millis(25)) {
+            Ok(r) => break r?,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(smoothcache::err!("coordinator shut down"));
+            }
+        }
+    };
+    // drain the step lines that raced the final reply (the executor
+    // sends every progress event before the response)
+    if let Some(rx) = &progress_rx {
+        print_progress(rx);
+    }
     println!(
         "generated {:?} in {:.3}s (exec {:.3}s, batch {}, skips {:.0}%)",
         resp.latent.shape,
@@ -163,6 +211,9 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         resp.batch_size,
         resp.gen_stats.skip_fraction() * 100.0
     );
+    if resp.deadline_missed {
+        eprintln!("warning: best-effort deadline missed ({:.3}s total)", resp.total_seconds);
+    }
     if !args.str("out").is_empty() {
         let j = smoothcache::util::json::Json::obj()
             .set(

@@ -11,17 +11,25 @@
 //! keys, no map lookups) or a
 //! [`crate::cache::StepPlanner`] deciding at runtime from per-site
 //! observations (cache age, last observed delta drift).
+//!
+//! The execution surface is the step-driven [`GenSession`] state
+//! machine ([`session`]): one solver step per [`GenSession::step`]
+//! call, with per-step [`StepEvent`]s, interim latent access and early
+//! exit — the seam the serving coordinator uses for cooperative
+//! cancellation, deadlines and streaming progress. [`generate`] and
+//! [`generate_from`] are thin drivers over it (bitwise-identical
+//! output, pinned by `tests/session_parity.rs`).
 
-use std::time::Instant;
+pub mod session;
+
+pub use session::{GenSession, StepEvent};
 
 use crate::util::error::Result;
 
-use crate::cache::plan::{PlanRef, StepObs};
-use crate::cache::schedule::Decision;
+use crate::cache::plan::PlanRef;
 use crate::model::{Cond, Engine};
-use crate::solvers::{cfg_merge, SolverKind, SolverRun};
+use crate::solvers::SolverKind;
 use crate::tensor::Tensor;
-use crate::util::rng::Rng;
 
 /// One generation request's sampling configuration.
 #[derive(Clone, Debug)]
@@ -83,24 +91,20 @@ pub struct GenOutput {
 pub type DeltaObserver<'a> = &'a mut dyn FnMut(usize, usize, &str, &Tensor);
 
 /// Run one full denoising trajectory; the initial latent is drawn from
-/// `cfg.seed`.
+/// `cfg.seed`. A thin driver over [`GenSession`] — step the session
+/// yourself for cancellation, progress or early exit.
 pub fn generate(
     engine: &Engine,
     cfg: &GenConfig,
     cond: &Cond,
     plan: PlanRef<'_>,
-    observer: Option<DeltaObserver>,
+    mut observer: Option<DeltaObserver>,
 ) -> Result<GenOutput> {
-    let fm = engine.family_manifest(&cfg.family)?.clone();
-    let batch = cond.batch(fm.cond_len);
-    if batch == 0 {
-        return Err(crate::err!("empty batch"));
+    let mut session = GenSession::new(engine, cfg, cond, plan)?;
+    while !session.is_done() {
+        session.step_observed(observer.as_deref_mut())?;
     }
-    let mut rng = Rng::new(cfg.seed);
-    let mut latent_shape = vec![batch];
-    latent_shape.extend(&fm.latent_shape);
-    let x0 = SolverRun::init_latent(latent_shape, &mut rng);
-    generate_from(engine, cfg, cond, x0, plan, observer)
+    Ok(session.finish())
 }
 
 /// Like [`generate`] but with a caller-provided initial latent — the
@@ -114,109 +118,11 @@ pub fn generate_from(
     plan: PlanRef<'_>,
     mut observer: Option<DeltaObserver>,
 ) -> Result<GenOutput> {
-    let t_start = Instant::now();
-    let fm = engine.family_manifest(&cfg.family)?.clone();
-    let batch = cond.batch(fm.cond_len);
-    if batch == 0 {
-        return Err(crate::err!("empty batch"));
+    let mut session = GenSession::from_latent(engine, cfg, cond, x_init, plan)?;
+    while !session.is_done() {
+        session.step_observed(observer.as_deref_mut())?;
     }
-    if x_init.dim0() != batch {
-        return Err(crate::err!("x_init batch {} != cond batch {batch}", x_init.dim0()));
-    }
-    // Static plans are checked against this exact configuration up
-    // front: step count and the family's site enumeration must match —
-    // a plan built for a different family fails loudly here instead of
-    // silently computing at unmatched sites.
-    if let PlanRef::Plan(p) = plan {
-        p.validate_for(&fm, cfg.steps)?;
-    }
-    let dynamic = matches!(plan, PlanRef::Planner(_));
-
-    let mut rng = Rng::new(cfg.seed ^ 0x50D4_11CE);
-    let mut run = SolverRun::new(cfg.solver, cfg.steps);
-    let mut x = x_init;
-
-    // CFG: the conditional and null batches run concatenated.
-    let cond_eff = if cfg.uses_cfg() {
-        cond.cat(&cond.null_like(fm.num_classes, fm.cond_len))
-    } else {
-        cond.clone()
-    };
-    let batch_eff = if cfg.uses_cfg() { 2 * batch } else { batch };
-
-    let sites = fm.branch_sites();
-    let n_sites = sites.len();
-    // per-site state, indexed by site position (no string keys):
-    let mut cache: Vec<Option<Tensor>> = vec![None; n_sites];
-    let mut filled_at: Vec<Option<usize>> = vec![None; n_sites];
-    // drift feedback for dynamic planners: relative L1 error between a
-    // freshly computed delta and the cached one it replaces. Only
-    // tracked when a StepPlanner is driving — static plans skip the
-    // extra tensor pass entirely.
-    let mut last_drift: Vec<Option<f64>> = vec![None; n_sites];
-    let mut stats = GenStats { steps: cfg.steps, ..Default::default() };
-
-    for i in 0..cfg.steps {
-        let t = run.model_t(i) as f32;
-        let x_in = if cfg.uses_cfg() { Tensor::cat0(&[&x, &x]) } else { x.clone() };
-        let t_vec = vec![t; batch_eff];
-        let emb = engine.embed(&cfg.family, &x_in, &t_vec, &cond_eff)?;
-        let ctx = engine.make_step_ctx(&emb)?;
-        let mut tokens = emb.tokens;
-
-        for (s_idx, (block, br)) in sites.iter().enumerate() {
-            let decision = match plan {
-                PlanRef::Plan(p) => p.decision(i, s_idx),
-                PlanRef::Planner(sp) => {
-                    let obs = StepObs {
-                        filled_at: filled_at[s_idx],
-                        last_drift: last_drift[s_idx],
-                    };
-                    sp.decide(i, s_idx, &obs)
-                }
-            };
-            let delta = match decision {
-                Decision::Compute => {
-                    let d = engine.branch(&cfg.family, *block, br, &tokens, &ctx)?;
-                    if let Some(obs) = observer.as_deref_mut() {
-                        obs(i, *block, br, &d);
-                    }
-                    stats.branch_computes += 1;
-                    if dynamic {
-                        if let Some(old) = &cache[s_idx] {
-                            last_drift[s_idx] = Some(d.rel_l1_error(old));
-                        }
-                    }
-                    filled_at[s_idx] = Some(i);
-                    cache[s_idx] = Some(d.clone());
-                    d
-                }
-                Decision::Reuse { .. } => {
-                    stats.branch_reuses += 1;
-                    cache[s_idx].clone().ok_or_else(|| {
-                        crate::err!(
-                            "cache miss at step {i} site {block}.{br}: \
-                             plan decided Reuse before any compute"
-                        )
-                    })?
-                }
-            };
-            tokens.add_inplace(&delta);
-        }
-
-        let out = engine.final_head(&cfg.family, &tokens, &ctx)?;
-        let model_out = if cfg.uses_cfg() {
-            let c = out.batch_slice(0, batch);
-            let u = out.batch_slice(batch, 2 * batch);
-            cfg_merge(&c, &u, cfg.cfg_scale)
-        } else {
-            out
-        };
-        x = run.step(i, &x, &model_out, &mut rng);
-    }
-
-    stats.wall_seconds = t_start.elapsed().as_secs_f64();
-    Ok(GenOutput { latent: x, stats })
+    Ok(session.finish())
 }
 
 #[cfg(test)]

@@ -1,0 +1,300 @@
+//! Step-driven generation sessions: the resumable state machine behind
+//! [`generate`](super::generate) / [`generate_from`](super::generate_from).
+//!
+//! The paper's mechanism is inherently per-step — SmoothCache decides
+//! Compute/Reuse at every solver step — and the serving layer needs the
+//! same granularity: cooperative cancellation between steps, per-step
+//! progress events for streaming clients, latency deadlines, and early
+//! exit with the interim latent. [`GenSession`] exposes exactly that
+//! seam: construct with [`GenSession::new`] (or
+//! [`GenSession::from_latent`] for a caller-provided initial latent),
+//! call [`GenSession::step`] once per solver step — each returns a
+//! [`StepEvent`] summarizing the decisions just executed — and
+//! [`GenSession::finish`] at any point to take the latent out: after
+//! the final step for a full trajectory, or earlier to abandon or
+//! sample mid-trajectory ([`GenSession::latent`] also exposes the
+//! interim latent without consuming the session).
+//!
+//! The one-shot drivers in the parent module are thin loops over this
+//! type and produce bitwise-identical latents and identical decision
+//! counters (pinned by `tests/session_parity.rs` across families,
+//! solvers and every registry policy).
+
+use std::time::Instant;
+
+use crate::util::error::Result;
+
+use super::{DeltaObserver, GenConfig, GenOutput, GenStats};
+use crate::cache::plan::{PlanRef, StepObs};
+use crate::cache::schedule::Decision;
+use crate::model::{Cond, Engine};
+use crate::solvers::{cfg_merge, SolverRun};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Summary of one executed solver step, returned by
+/// [`GenSession::step`].
+#[derive(Clone, Copy, Debug)]
+pub struct StepEvent {
+    /// 0-based index of the step that just executed.
+    pub step: usize,
+    /// Total steps in the trajectory.
+    pub steps: usize,
+    /// Branch sites computed in this step.
+    pub computes: usize,
+    /// Branch sites that re-injected a cached delta in this step.
+    pub reuses: usize,
+    /// Largest per-refresh relative-L1 drift measured in this step.
+    /// `None` for static plans (drift is only tracked under a dynamic
+    /// planner) and on steps where no refresh had a previous delta to
+    /// compare against.
+    pub max_drift: Option<f64>,
+    /// True when this was the trajectory's final step.
+    pub done: bool,
+}
+
+/// One in-flight denoising trajectory, advanced one solver step at a
+/// time. See the module docs for the step/finish contract.
+pub struct GenSession<'a> {
+    engine: &'a Engine,
+    cfg: GenConfig,
+    plan: PlanRef<'a>,
+    dynamic: bool,
+    run: SolverRun,
+    rng: Rng,
+    x: Tensor,
+    cond_eff: Cond,
+    batch: usize,
+    batch_eff: usize,
+    sites: Vec<(usize, String)>,
+    // per-site state, indexed by site position (no string keys):
+    cache: Vec<Option<Tensor>>,
+    filled_at: Vec<Option<usize>>,
+    // drift feedback for dynamic planners: relative L1 error between a
+    // freshly computed delta and the cached one it replaces. Only
+    // tracked when a StepPlanner is driving — static plans skip the
+    // extra tensor pass entirely.
+    last_drift: Vec<Option<f64>>,
+    stats: GenStats,
+    i: usize,
+    t_start: Instant,
+}
+
+impl<'a> GenSession<'a> {
+    /// Open a session whose initial latent is drawn from `cfg.seed`
+    /// (the [`generate`](super::generate) entry point).
+    pub fn new(
+        engine: &'a Engine,
+        cfg: &GenConfig,
+        cond: &Cond,
+        plan: PlanRef<'a>,
+    ) -> Result<GenSession<'a>> {
+        let fm = engine.family_manifest(&cfg.family)?.clone();
+        let batch = cond.batch(fm.cond_len);
+        if batch == 0 {
+            return Err(crate::err!("empty batch"));
+        }
+        let mut rng = Rng::new(cfg.seed);
+        let mut latent_shape = vec![batch];
+        latent_shape.extend(&fm.latent_shape);
+        let x0 = SolverRun::init_latent(latent_shape, &mut rng);
+        GenSession::from_latent(engine, cfg, cond, x0, plan)
+    }
+
+    /// Open a session over a caller-provided initial latent (the
+    /// [`generate_from`](super::generate_from) entry point — the
+    /// dynamic batcher seeds each request's latent from its own seed
+    /// regardless of batch composition).
+    pub fn from_latent(
+        engine: &'a Engine,
+        cfg: &GenConfig,
+        cond: &Cond,
+        x_init: Tensor,
+        plan: PlanRef<'a>,
+    ) -> Result<GenSession<'a>> {
+        let t_start = Instant::now();
+        let fm = engine.family_manifest(&cfg.family)?.clone();
+        let batch = cond.batch(fm.cond_len);
+        if batch == 0 {
+            return Err(crate::err!("empty batch"));
+        }
+        if x_init.dim0() != batch {
+            return Err(crate::err!("x_init batch {} != cond batch {batch}", x_init.dim0()));
+        }
+        // Static plans are checked against this exact configuration up
+        // front: step count and the family's site enumeration must match —
+        // a plan built for a different family fails loudly here instead of
+        // silently computing at unmatched sites.
+        if let PlanRef::Plan(p) = plan {
+            p.validate_for(&fm, cfg.steps)?;
+        }
+        let dynamic = matches!(plan, PlanRef::Planner(_));
+
+        let rng = Rng::new(cfg.seed ^ 0x50D4_11CE);
+        let run = SolverRun::new(cfg.solver, cfg.steps);
+
+        // CFG: the conditional and null batches run concatenated.
+        let cond_eff = if cfg.uses_cfg() {
+            cond.cat(&cond.null_like(fm.num_classes, fm.cond_len))
+        } else {
+            cond.clone()
+        };
+        let batch_eff = if cfg.uses_cfg() { 2 * batch } else { batch };
+
+        let sites = fm.branch_sites();
+        let n_sites = sites.len();
+        Ok(GenSession {
+            engine,
+            cfg: cfg.clone(),
+            plan,
+            dynamic,
+            run,
+            rng,
+            x: x_init,
+            cond_eff,
+            batch,
+            batch_eff,
+            sites,
+            cache: vec![None; n_sites],
+            filled_at: vec![None; n_sites],
+            last_drift: vec![None; n_sites],
+            stats: GenStats::default(),
+            i: 0,
+            t_start,
+        })
+    }
+
+    /// Total solver steps in the trajectory.
+    pub fn total_steps(&self) -> usize {
+        self.cfg.steps
+    }
+
+    /// Steps executed so far (equivalently: the index the next
+    /// [`GenSession::step`] call will run).
+    pub fn current_step(&self) -> usize {
+        self.i
+    }
+
+    /// True once every step has executed — [`GenSession::step`] errors
+    /// past this point; [`GenSession::finish`] takes the result out.
+    pub fn is_done(&self) -> bool {
+        self.i >= self.cfg.steps
+    }
+
+    /// The interim latent after [`GenSession::current_step`] steps
+    /// (mid-trajectory observation; [`GenSession::finish`] moves it out).
+    pub fn latent(&self) -> &Tensor {
+        &self.x
+    }
+
+    /// Decision counters accumulated so far.
+    pub fn stats(&self) -> &GenStats {
+        &self.stats
+    }
+
+    /// Execute the next solver step.
+    pub fn step(&mut self) -> Result<StepEvent> {
+        self.step_observed(None)
+    }
+
+    /// Like [`GenSession::step`], additionally reporting every computed
+    /// branch delta to `observer` (the calibration hook).
+    pub fn step_observed(&mut self, mut observer: Option<DeltaObserver>) -> Result<StepEvent> {
+        if self.is_done() {
+            return Err(crate::err!(
+                "GenSession: step() past the end of the {}-step trajectory",
+                self.cfg.steps
+            ));
+        }
+        let i = self.i;
+        let t = self.run.model_t(i) as f32;
+        let t_vec = vec![t; self.batch_eff];
+        let emb = if self.cfg.uses_cfg() {
+            let x_in = Tensor::cat0(&[&self.x, &self.x]);
+            self.engine.embed(&self.cfg.family, &x_in, &t_vec, &self.cond_eff)?
+        } else {
+            self.engine.embed(&self.cfg.family, &self.x, &t_vec, &self.cond_eff)?
+        };
+        let ctx = self.engine.make_step_ctx(&emb)?;
+        let mut tokens = emb.tokens;
+        let mut computes = 0usize;
+        let mut reuses = 0usize;
+        let mut max_drift: Option<f64> = None;
+
+        for (s_idx, (block, br)) in self.sites.iter().enumerate() {
+            let decision = match self.plan {
+                PlanRef::Plan(p) => p.decision(i, s_idx),
+                PlanRef::Planner(sp) => {
+                    let obs = StepObs {
+                        filled_at: self.filled_at[s_idx],
+                        last_drift: self.last_drift[s_idx],
+                    };
+                    sp.decide(i, s_idx, &obs)
+                }
+            };
+            match decision {
+                Decision::Compute => {
+                    let d = self.engine.branch(&self.cfg.family, *block, br, &tokens, &ctx)?;
+                    if let Some(obs) = observer.as_deref_mut() {
+                        obs(i, *block, br, &d);
+                    }
+                    computes += 1;
+                    if self.dynamic {
+                        if let Some(old) = &self.cache[s_idx] {
+                            let drift = d.rel_l1_error(old);
+                            self.last_drift[s_idx] = Some(drift);
+                            max_drift = Some(max_drift.map_or(drift, |m: f64| m.max(drift)));
+                        }
+                    }
+                    self.filled_at[s_idx] = Some(i);
+                    // add first, then move into the cache — the compute
+                    // path stores the delta without cloning it
+                    tokens.add_inplace(&d);
+                    self.cache[s_idx] = Some(d);
+                }
+                Decision::Reuse { .. } => {
+                    reuses += 1;
+                    // re-inject the cached delta by reference — the
+                    // reuse hot path copies no tensor at all
+                    let d = self.cache[s_idx].as_ref().ok_or_else(|| {
+                        crate::err!(
+                            "cache miss at step {i} site {block}.{br}: \
+                             plan decided Reuse before any compute"
+                        )
+                    })?;
+                    tokens.add_inplace(d);
+                }
+            }
+        }
+
+        let out = self.engine.final_head(&self.cfg.family, &tokens, &ctx)?;
+        let model_out = if self.cfg.uses_cfg() {
+            let c = out.batch_slice(0, self.batch);
+            let u = out.batch_slice(self.batch, 2 * self.batch);
+            cfg_merge(&c, &u, self.cfg.cfg_scale)
+        } else {
+            out
+        };
+        self.x = self.run.step(i, &self.x, &model_out, &mut self.rng);
+        self.stats.branch_computes += computes;
+        self.stats.branch_reuses += reuses;
+        self.i += 1;
+        Ok(StepEvent {
+            step: i,
+            steps: self.cfg.steps,
+            computes,
+            reuses,
+            max_drift,
+            done: self.is_done(),
+        })
+    }
+
+    /// Consume the session, returning the current latent and stats —
+    /// after the last step for a full trajectory, or earlier for an
+    /// early exit (`stats.steps` records how many steps actually ran).
+    pub fn finish(mut self) -> GenOutput {
+        self.stats.steps = self.i;
+        self.stats.wall_seconds = self.t_start.elapsed().as_secs_f64();
+        GenOutput { latent: self.x, stats: self.stats }
+    }
+}

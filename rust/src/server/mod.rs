@@ -3,37 +3,74 @@
 //! One JSON object per line in each direction. Request fields:
 //! `family`, `steps`, `solver`, `policy`, `cfg`, `seed`, and either
 //! `label` (image) or `prompt_ids` (audio/video); `return_latent`
-//! includes the generated latent in the response. Control commands:
-//! `{"cmd": "ping"}`, `{"cmd": "metrics"}`, `{"cmd": "shutdown"}`.
+//! includes the generated latent in the response; `stream: true`
+//! switches the reply to streaming mode (one `{"event":"step",…}` line
+//! per solver step, then the final result line); `deadline_ms` (+
+//! `deadline_policy`) attaches a latency budget. Control commands:
+//! `{"cmd": "ping"}`, `{"cmd": "metrics"}`, `{"cmd": "cancel",
+//! "id": N}`, `{"cmd": "shutdown"}`.
 //! Failures are answered in-line as `{"ok": false, "error": "…"}`;
 //! admission-control rejections (the coordinator's work queue at
 //! `--queue-depth`, see [`crate::coordinator::queue`]) additionally
-//! carry `"overloaded": true` so clients can back off and retry
-//! rather than treating the reply as a permanent failure.
+//! carry `"overloaded": true`, cancelled requests `"cancelled": true`,
+//! and deadline rejections `"deadline_missed": true`, so clients can
+//! tell transient and client-initiated outcomes from real failures.
+//! A connection that disappears mid-generation has its in-flight
+//! request cancelled (work stops at the next solver step; the
+//! admission slot frees) — see [`crate::coordinator::cancel`].
 //!
 //! The full wire contract (field semantics, defaults, batching
-//! guarantees, error + overload shapes, metrics-summary fields) is
-//! specified in `docs/protocol.md` at the repository root — keep the
-//! two in sync when evolving the protocol. The `policy` vocabulary is
-//! the registry in [`crate::cache::plan::registry`]: the doc's policy
-//! table is generated from it (and pinned by a test), so adding a
-//! policy there is all a new wire value needs.
+//! guarantees, streaming events, error + overload shapes,
+//! metrics-summary fields) is specified in `docs/protocol.md` at the
+//! repository root — keep the two in sync when evolving the protocol.
+//! The `policy` vocabulary is the registry in
+//! [`crate::cache::plan::registry`]: the doc's policy table is
+//! generated from it (and pinned by a test), so adding a policy there
+//! is all a new wire value needs.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::util::error::{Context, Result};
 
-use crate::coordinator::{Coordinator, Policy, Request};
+use crate::coordinator::{
+    Coordinator, Deadline, DeadlinePolicy, Policy, Progress, Request, Response, SubmitOpts,
+};
 use crate::model::Cond;
 use crate::solvers::SolverKind;
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 
-/// Parse one request line into a coordinator [`Request`].
-pub fn parse_request(j: &Json) -> Result<(Request, bool)> {
+/// Per-request wire options that ride beside the [`Request`] proper:
+/// response shaping (`return_latent`, `stream`) and the optional
+/// deadline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireOpts {
+    /// Include the generated latent values in the final reply.
+    pub return_latent: bool,
+    /// Streaming mode: emit an `accepted` line, one `step` event line
+    /// per solver step, then the final result line.
+    pub stream: bool,
+    /// Latency budget in milliseconds, measured from submission.
+    pub deadline_ms: Option<u64>,
+    /// What to do with work that misses the deadline.
+    pub deadline_policy: DeadlinePolicy,
+}
+
+impl WireOpts {
+    fn deadline(&self) -> Option<Deadline> {
+        self.deadline_ms
+            .map(|ms| Deadline::after(Duration::from_millis(ms), self.deadline_policy))
+    }
+}
+
+/// Parse one request line into a coordinator [`Request`] + [`WireOpts`].
+pub fn parse_request(j: &Json) -> Result<(Request, WireOpts)> {
     let family = j
         .get("family")
         .and_then(|v| v.as_str())
@@ -46,7 +83,15 @@ pub fn parse_request(j: &Json) -> Result<(Request, bool)> {
     let policy_s = j.get("policy").and_then(|v| v.as_str()).unwrap_or("no-cache");
     let policy = Policy::parse(policy_s)?;
     let cfg_scale = j.get("cfg").and_then(|v| v.as_f64()).unwrap_or(1.0) as f32;
-    let seed = j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    // seeds are parsed losslessly: an `as u64` cast used to silently
+    // truncate negative and mangle > 2^53 values, changing the latent
+    // the client thought it pinned
+    let seed = match j.get("seed") {
+        None => 0,
+        Some(v) => v.as_u64().ok_or_else(|| {
+            crate::err!("seed must be a non-negative integer <= 2^53 - 1, got {}", v.to_string())
+        })?,
+    };
     let cond = if let Some(l) = j.get("label").and_then(|v| v.as_f64()) {
         Cond::Label(vec![l as i32])
     } else if let Some(p) = j.get("prompt_ids").and_then(|v| v.as_f64_vec()) {
@@ -55,39 +100,66 @@ pub fn parse_request(j: &Json) -> Result<(Request, bool)> {
         return Err(crate::err!("need label or prompt_ids"));
     };
     let return_latent = j.get("return_latent").and_then(|v| v.as_bool()).unwrap_or(false);
+    let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => Some(v.as_u64().filter(|&ms| ms > 0).ok_or_else(|| {
+            crate::err!("deadline_ms must be a positive integer, got {}", v.to_string())
+        })?),
+    };
+    let deadline_policy = match j.get("deadline_policy").and_then(|v| v.as_str()) {
+        None => DeadlinePolicy::BestEffort,
+        Some(s) => DeadlinePolicy::parse(s)
+            .ok_or_else(|| crate::err!("deadline_policy must be best-effort or reject, got {s:?}"))?,
+    };
     Ok((
         Request { id: 0, family, cond, solver, steps, cfg_scale, seed, policy },
-        return_latent,
+        WireOpts { return_latent, stream, deadline_ms, deadline_policy },
     ))
 }
 
-fn handle_line(coord: &Coordinator, line: &str, stop: &AtomicBool) -> String {
-    let fail = |msg: String| Json::obj().set("ok", false).set("error", msg).to_string();
-    let j = match parse(line) {
-        Ok(j) => j,
-        Err(e) => return fail(format!("bad json: {e}")),
-    };
-    if let Some(cmd) = j.get("cmd").and_then(|v| v.as_str()) {
-        return match cmd {
-            "ping" => Json::obj().set("ok", true).set("pong", true).to_string(),
-            "metrics" => Json::obj()
+fn fail(msg: String) -> String {
+    Json::obj().set("ok", false).set("error", msg).to_string()
+}
+
+/// Handle a control command (a line with a `cmd` field). `None` when
+/// the line is not a control command.
+fn handle_control(coord: &Coordinator, j: &Json, stop: &AtomicBool) -> Option<String> {
+    let cmd = j.get("cmd").and_then(|v| v.as_str())?;
+    Some(match cmd {
+        "ping" => Json::obj().set("ok", true).set("pong", true).to_string(),
+        "metrics" => Json::obj()
+            .set("ok", true)
+            .set("summary", coord.metrics().summary())
+            .to_string(),
+        "cancel" => match j.get("id").and_then(|v| v.as_u64()) {
+            Some(id) => Json::obj()
                 .set("ok", true)
-                .set("summary", coord.metrics().summary())
+                .set("id", id)
+                .set("cancelled", coord.cancel(id))
                 .to_string(),
-            "shutdown" => {
-                stop.store(true, Ordering::SeqCst);
-                Json::obj().set("ok", true).set("stopping", true).to_string()
-            }
-            other => fail(format!("unknown cmd {other}")),
-        };
-    }
-    let (request, return_latent) = match parse_request(&j) {
-        Ok(r) => r,
-        Err(e) => return fail(format!("{e}")),
-    };
-    match coord.generate_blocking(request) {
+            None => fail("cancel needs an integer id".into()),
+        },
+        "shutdown" => {
+            stop.store(true, Ordering::SeqCst);
+            Json::obj().set("ok", true).set("stopping", true).to_string()
+        }
+        other => fail(format!("unknown cmd {other}")),
+    })
+}
+
+/// Render the final reply line for a generation outcome. Error replies
+/// carry machine-readable flags next to `error`: `overloaded` (queue
+/// admission, transient), `cancelled` (client-initiated), and
+/// `deadline_missed` (reject-late deadline).
+fn render_result(result: Result<Response>, opts: WireOpts) -> String {
+    match result {
         Ok(resp) => {
-            let mut out = Json::obj()
+            let mut out = Json::obj();
+            if opts.stream {
+                out = out.set("event", "done");
+            }
+            out = out
                 .set("ok", true)
                 .set("id", resp.id)
                 .set(
@@ -95,11 +167,15 @@ fn handle_line(coord: &Coordinator, line: &str, stop: &AtomicBool) -> String {
                     resp.latent.shape.iter().map(|&d| Json::Num(d as f64)).collect::<Vec<_>>(),
                 )
                 .set("batch_size", resp.batch_size)
+                .set("steps", resp.steps_completed)
                 .set("queue_s", resp.queue_seconds)
                 .set("exec_s", resp.exec_seconds)
                 .set("total_s", resp.total_seconds)
                 .set("skip_fraction", resp.gen_stats.skip_fraction());
-            if return_latent {
+            if resp.deadline_missed {
+                out = out.set("deadline_missed", true);
+            }
+            if opts.return_latent {
                 out = out.set(
                     "latent",
                     resp.latent.data.iter().map(|&v| Json::Num(v as f64)).collect::<Vec<_>>(),
@@ -109,16 +185,20 @@ fn handle_line(coord: &Coordinator, line: &str, stop: &AtomicBool) -> String {
         }
         Err(e) => {
             let msg = format!("{e}");
-            if msg.starts_with("overloaded:") {
-                // queue-admission rejection: mark it machine-readably so
-                // clients know to back off and retry (docs/protocol.md)
-                return Json::obj()
-                    .set("ok", false)
-                    .set("overloaded", true)
-                    .set("error", msg)
-                    .to_string();
+            let mut out = Json::obj();
+            if opts.stream {
+                out = out.set("event", "done");
             }
-            fail(msg)
+            out = out.set("ok", false);
+            if msg.starts_with("overloaded:") {
+                // queue-admission rejection: transient — back off, retry
+                out = out.set("overloaded", true);
+            } else if msg.starts_with("cancelled:") {
+                out = out.set("cancelled", true);
+            } else if msg.starts_with("deadline:") {
+                out = out.set("deadline_missed", true);
+            }
+            out.set("error", msg).to_string()
         }
     }
 }
@@ -186,38 +266,256 @@ impl Drop for Server {
     }
 }
 
+/// One non-blocking-ish poll of the request socket.
+enum Polled {
+    /// A complete line arrived.
+    Line(String),
+    /// The peer closed the connection.
+    Closed,
+    /// Nothing new within the read timeout.
+    Idle,
+}
+
+/// Read one line with the stream's read timeout. `buf` persists across
+/// calls so a line split over multiple reads (timeouts mid-line) is
+/// reassembled instead of dropped.
+fn poll_line(reader: &mut BufReader<TcpStream>, buf: &mut String) -> Result<Polled> {
+    match reader.read_line(buf) {
+        Ok(0) => Ok(Polled::Closed),
+        Ok(_) => {
+            let line = buf.trim().to_string();
+            buf.clear();
+            Ok(Polled::Line(line))
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            Ok(Polled::Idle)
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
+fn write_line(writer: &mut TcpStream, line: &str) -> Result<()> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// One streaming `step` event line (shared by the in-loop emitter and
+/// the post-reply drain so the two can never diverge on fields).
+fn step_event(id: u64, p: &Progress) -> Json {
+    let mut ev = Json::obj()
+        .set("event", "step")
+        .set("id", id)
+        .set("step", p.step)
+        .set("steps", p.steps)
+        .set("computes", p.computes)
+        .set("reuses", p.reuses)
+        .set("t_s", p.elapsed_s);
+    if let Some(d) = p.drift {
+        ev = ev.set("drift", d);
+    }
+    ev
+}
+
+/// Drive one generation to completion, writing streaming events when
+/// requested and watching the socket the whole time: a closed peer (or
+/// an in-band `{"cmd":"cancel"}` line) cancels the in-flight request at
+/// the coordinator, so abandoned work stops at the next solver step
+/// instead of running to completion for nobody. Pipelined non-cancel
+/// lines read while waiting are pushed onto `pending` and processed
+/// after this request's final reply, preserving reply order.
+///
+/// EOF on the request stream is the departure signal: the protocol
+/// requires clients to keep the write side open until the final reply
+/// (docs/protocol.md §Cancellation) — a TCP half-close mid-generation
+/// is indistinguishable from a vanished client, and shedding abandoned
+/// work is the point of this surface. Returns `false` when the peer is
+/// gone (the caller must drop the connection, including any pipelined
+/// lines, without submitting them).
+///
+/// While a generation is in flight the socket read timeout is dropped
+/// from the idle-loop [`IDLE_POLL_MS`] to [`GEN_POLL_MS`], so the wait
+/// loop — reply recv + socket poll — adds at most a few tens of
+/// milliseconds to the reply and drains step events at per-step
+/// cadence instead of ~5 Hz bursts; the idle timeout is restored on
+/// every exit path.
+fn run_generation(
+    coord: &Coordinator,
+    request: Request,
+    opts: WireOpts,
+    reader: &mut BufReader<TcpStream>,
+    read_buf: &mut String,
+    writer: &mut TcpStream,
+    pending: &mut VecDeque<String>,
+) -> Result<bool> {
+    let _ = reader
+        .get_ref()
+        .set_read_timeout(Some(Duration::from_millis(GEN_POLL_MS)));
+    let out = run_generation_inner(coord, request, opts, reader, read_buf, writer, pending);
+    let _ = reader
+        .get_ref()
+        .set_read_timeout(Some(Duration::from_millis(IDLE_POLL_MS)));
+    out
+}
+
+/// Socket read timeout between requests (bounds how often an idle
+/// connection handler re-checks the server stop flag).
+const IDLE_POLL_MS: u64 = 200;
+/// Socket read timeout and reply-poll interval while a generation is in
+/// flight: bounds added reply latency, step-event flush cadence and
+/// disconnect-detection time to ~2× this value.
+const GEN_POLL_MS: u64 = 10;
+
+fn run_generation_inner(
+    coord: &Coordinator,
+    request: Request,
+    opts: WireOpts,
+    reader: &mut BufReader<TcpStream>,
+    read_buf: &mut String,
+    writer: &mut TcpStream,
+    pending: &mut VecDeque<String>,
+) -> Result<bool> {
+    let (progress, progress_rx): (Option<_>, Option<Receiver<Progress>>) = if opts.stream {
+        let (tx, rx) = channel();
+        (Some(tx), Some(rx))
+    } else {
+        (None, None)
+    };
+    let ticket = coord.submit_opts(request, SubmitOpts { progress, deadline: opts.deadline() });
+    let id = ticket.id;
+    if opts.stream {
+        // streaming clients learn the id up front so a sibling
+        // connection (or this one, in-band) can cancel it
+        let accepted = Json::obj().set("event", "accepted").set("ok", true).set("id", id);
+        if write_line(writer, &accepted.to_string()).is_err() {
+            coord.cancel(id);
+            return Ok(false);
+        }
+    }
+    let result = loop {
+        if let Some(rx) = &progress_rx {
+            while let Ok(p) = rx.try_recv() {
+                if write_line(writer, &step_event(id, &p).to_string()).is_err() {
+                    // client gone mid-stream
+                    coord.cancel(id);
+                    return Ok(false);
+                }
+            }
+        }
+        match ticket.reply.recv_timeout(Duration::from_millis(GEN_POLL_MS)) {
+            Ok(r) => break r,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                break Err(crate::err!("coordinator shut down"))
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => match poll_line(reader, read_buf) {
+                Ok(Polled::Idle) => {}
+                Ok(Polled::Closed) => {
+                    // cancel-on-disconnect: nobody is left to read the
+                    // result, stop the work at the next step boundary
+                    coord.cancel(id);
+                    return Ok(false);
+                }
+                Ok(Polled::Line(l)) => {
+                    if l.is_empty() {
+                        continue;
+                    }
+                    // in-band cancel commands act immediately (their
+                    // ack interleaves with step events; the final
+                    // generation reply still arrives). Anything else
+                    // waits its turn behind this generation.
+                    match parse(&l) {
+                        Ok(j) if j.get("cmd").and_then(|v| v.as_str()) == Some("cancel") => {
+                            let reply = handle_control(coord, &j, &AtomicBool::new(false))
+                                .expect("cancel is a control command");
+                            if write_line(writer, &reply).is_err() {
+                                coord.cancel(id);
+                                return Ok(false);
+                            }
+                        }
+                        _ => pending.push_back(l),
+                    }
+                }
+                Err(e) => {
+                    coord.cancel(id);
+                    return Err(e);
+                }
+            },
+        }
+    };
+    // drain any step events that raced the final reply
+    if let Some(rx) = &progress_rx {
+        while let Ok(p) = rx.try_recv() {
+            if write_line(writer, &step_event(id, &p).to_string()).is_err() {
+                coord.cancel(id); // no-op if already answered
+                return Ok(false);
+            }
+        }
+    }
+    write_line(writer, &render_result(result, opts))?;
+    Ok(true)
+}
+
 fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Result<()> {
     // Periodic read timeouts let the handler observe the stop flag even
     // while a client holds an idle connection open (otherwise server
-    // shutdown would deadlock joining this thread).
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    // shutdown would deadlock joining this thread) — and, during a
+    // generation, let run_generation watch for disconnects (it tightens
+    // the timeout to GEN_POLL_MS for that window).
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(IDLE_POLL_MS)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut line = String::new();
+    let mut read_buf = String::new();
+    let mut pending: VecDeque<String> = VecDeque::new();
     loop {
         if stop.load(Ordering::SeqCst) {
             return Ok(());
         }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // client closed
-            Ok(_) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue;
-            }
-            Err(e) => return Err(e.into()),
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
+        let line = match pending.pop_front() {
+            Some(l) => l,
+            None => match poll_line(&mut reader, &mut read_buf)? {
+                Polled::Closed => return Ok(()), // client closed
+                Polled::Idle => continue,
+                Polled::Line(l) => l,
+            },
+        };
+        if line.is_empty() {
             continue;
         }
-        let reply = handle_line(coord, trimmed, stop);
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        let j = match parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                write_line(&mut writer, &fail(format!("bad json: {e}")))?;
+                continue;
+            }
+        };
+        if let Some(reply) = handle_control(coord, &j, stop) {
+            write_line(&mut writer, &reply)?;
+        } else {
+            match parse_request(&j) {
+                Ok((request, opts)) => {
+                    let alive = run_generation(
+                        coord,
+                        request,
+                        opts,
+                        &mut reader,
+                        &mut read_buf,
+                        &mut writer,
+                        &mut pending,
+                    )?;
+                    if !alive {
+                        // peer gone: drop the connection and any
+                        // pipelined lines instead of submitting work
+                        // for nobody
+                        return Ok(());
+                    }
+                }
+                Err(e) => write_line(&mut writer, &fail(format!("{e}")))?,
+            }
+        }
         if stop.load(Ordering::SeqCst) {
             return Ok(());
         }
@@ -241,9 +539,41 @@ impl Client {
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        self.read_reply()
+    }
+
+    fn read_reply(&mut self) -> Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         parse(line.trim()).map_err(|e| crate::err!("bad reply: {e} ({line:?})"))
+    }
+
+    /// Send a generation request in streaming mode (`stream: true` is
+    /// added to `req`), invoking `on_event` for every `accepted` /
+    /// `step` event line, and returning the final result line.
+    pub fn call_streaming(
+        &mut self,
+        req: &Json,
+        mut on_event: impl FnMut(&Json),
+    ) -> Result<Json> {
+        let req = req.clone().set("stream", true);
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        loop {
+            let j = self.read_reply()?;
+            match j.get("event").and_then(|v| v.as_str()) {
+                Some("accepted") | Some("step") => on_event(&j),
+                _ => return Ok(j), // the final result line
+            }
+        }
+    }
+
+    /// Cancel an in-flight request by id (`{"cmd":"cancel","id":N}`).
+    /// Returns whether the server still knew the id.
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        let r = self.call(&Json::obj().set("cmd", "cancel").set("id", id))?;
+        Ok(r.get("cancelled").and_then(|v| v.as_bool()).unwrap_or(false))
     }
 
     pub fn ping(&mut self) -> Result<bool> {
@@ -268,13 +598,15 @@ mod tests {
                 "cfg":1.5,"seed":9,"policy":"smooth:0.18"}"#,
         )
         .unwrap();
-        let (r, ret) = parse_request(&j).unwrap();
+        let (r, opts) = parse_request(&j).unwrap();
         assert_eq!(r.family, "image");
         assert_eq!(r.cond, Cond::Label(vec![3]));
         assert_eq!(r.steps, 12);
         assert_eq!(r.cfg_scale, 1.5);
         assert_eq!(r.policy, Policy::smooth(0.18));
-        assert!(!ret);
+        assert!(!opts.return_latent);
+        assert!(!opts.stream);
+        assert_eq!(opts.deadline_ms, None);
     }
 
     #[test]
@@ -284,10 +616,64 @@ mod tests {
                 "solver":"dpmpp3m-sde","policy":"fora:2","return_latent":true}"#,
         )
         .unwrap();
-        let (r, ret) = parse_request(&j).unwrap();
+        let (r, opts) = parse_request(&j).unwrap();
         assert_eq!(r.cond, Cond::Prompt(vec![1, 2, 3, 4, 5, 6, 7, 8]));
         assert_eq!(r.solver, SolverKind::DpmPP3M { sde: true });
-        assert!(ret);
+        assert!(opts.return_latent);
+    }
+
+    #[test]
+    fn parse_request_seed_is_lossless_and_validated() {
+        // the full exactly-representable range round-trips…
+        let j = parse(r#"{"family":"image","label":1,"seed":9007199254740991}"#).unwrap();
+        let (r, _) = parse_request(&j).unwrap();
+        assert_eq!(r.seed, (1 << 53) - 1);
+        // …absent seeds default to 0…
+        let j = parse(r#"{"family":"image","label":1}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap().0.seed, 0);
+        // …and anything an `as u64` cast would have silently mangled is
+        // a wire error instead: negatives, fractions, > 2^53, strings
+        for bad in [
+            r#"{"family":"image","label":1,"seed":-1}"#,
+            r#"{"family":"image","label":1,"seed":1.5}"#,
+            r#"{"family":"image","label":1,"seed":9007199254740993}"#,
+            r#"{"family":"image","label":1,"seed":18446744073709551615}"#,
+            r#"{"family":"image","label":1,"seed":"7"}"#,
+        ] {
+            let j = parse(bad).unwrap();
+            let err = parse_request(&j).unwrap_err();
+            assert!(format!("{err}").contains("seed"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn parse_request_stream_and_deadline_fields() {
+        let j = parse(
+            r#"{"family":"image","label":1,"stream":true,
+                "deadline_ms":250,"deadline_policy":"reject"}"#,
+        )
+        .unwrap();
+        let (_, opts) = parse_request(&j).unwrap();
+        assert!(opts.stream);
+        assert_eq!(opts.deadline_ms, Some(250));
+        assert_eq!(opts.deadline_policy, DeadlinePolicy::RejectLate);
+        assert!(opts.deadline().is_some());
+
+        // defaults: best-effort, no deadline
+        let j = parse(r#"{"family":"image","label":1,"deadline_ms":10}"#).unwrap();
+        let (_, opts) = parse_request(&j).unwrap();
+        assert_eq!(opts.deadline_policy, DeadlinePolicy::BestEffort);
+
+        // malformed values are wire errors
+        for bad in [
+            r#"{"family":"image","label":1,"deadline_ms":0}"#,
+            r#"{"family":"image","label":1,"deadline_ms":-5}"#,
+            r#"{"family":"image","label":1,"deadline_ms":1.5}"#,
+            r#"{"family":"image","label":1,"deadline_policy":"strict"}"#,
+        ] {
+            let j = parse(bad).unwrap();
+            assert!(parse_request(&j).is_err(), "{bad}");
+        }
     }
 
     #[test]
@@ -317,5 +703,24 @@ mod tests {
     fn parse_request_rejects_bad_solver() {
         let j = parse(r#"{"family":"image","label":0,"solver":"magic"}"#).unwrap();
         assert!(parse_request(&j).is_err());
+    }
+
+    #[test]
+    fn render_result_flags_error_classes() {
+        let opts = WireOpts::default();
+        for (msg, flag) in [
+            ("overloaded: queue full", "overloaded"),
+            ("cancelled: request 3 was cancelled", "cancelled"),
+            ("deadline: request 3 exceeded its deadline", "deadline_missed"),
+        ] {
+            let line = render_result(Err(crate::err!("{msg}")), opts);
+            let j = parse(&line).unwrap();
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{line}");
+            assert_eq!(j.get(flag).and_then(|v| v.as_bool()), Some(true), "{line}");
+        }
+        // plain failures carry no class flag
+        let line = render_result(Err(crate::err!("boom")), opts);
+        let j = parse(&line).unwrap();
+        assert!(j.get("overloaded").is_none() && j.get("cancelled").is_none());
     }
 }

@@ -71,6 +71,23 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Lossless unsigned-integer view: `Some` iff the value is a number
+    /// that is an exact non-negative integer within f64's 53-bit
+    /// mantissa (`0 ..= 2^53 - 1`). Anything else — negative,
+    /// fractional, non-numeric, or too large to survive the JSON
+    /// number model without rounding — is `None`, so callers can
+    /// reject it instead of silently truncating (`seed` parsing,
+    /// docs/protocol.md).
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_SAFE: f64 = 9_007_199_254_740_991.0; // 2^53 - 1
+        let n = self.as_f64()?;
+        if n.is_finite() && (0.0..=MAX_SAFE).contains(&n) && n.fract() == 0.0 {
+            Some(n as u64)
+        } else {
+            None
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -553,6 +570,22 @@ mod tests {
     #[test]
     fn nan_serializes_as_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn as_u64_is_lossless_or_none() {
+        assert_eq!(parse("0").unwrap().as_u64(), Some(0));
+        assert_eq!(parse("42").unwrap().as_u64(), Some(42));
+        // the largest exactly-representable integer round-trips…
+        assert_eq!(parse("9007199254740991").unwrap().as_u64(), Some((1 << 53) - 1));
+        // …but anything that f64 would have rounded is rejected
+        assert_eq!(parse("9007199254740993").unwrap().as_u64(), None);
+        assert_eq!(parse("18446744073709551615").unwrap().as_u64(), None);
+        assert_eq!(parse("1e300").unwrap().as_u64(), None);
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(parse("\"7\"").unwrap().as_u64(), None);
+        assert_eq!(parse("null").unwrap().as_u64(), None);
     }
 
     #[test]

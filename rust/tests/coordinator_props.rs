@@ -12,11 +12,21 @@
 //! (e) when the queue is full, admission control answers every
 //!     rejected request with a well-formed `overloaded:` error — it
 //!     never hangs or drops them.
+//!
+//! And the ISSUE 5 cancellation contracts:
+//! (f) cancelling a *queued* request frees its admission slot
+//!     immediately and it never reaches a replica,
+//! (g) cancelling an *in-flight* request stops executor work at the
+//!     next solver-step boundary — including while a sibling replica
+//!     holds the `smooth:*` calibration lock — and
+//! (h) counters always reconcile: every submission is answered exactly
+//!     once as completed, cancelled, rejected or failed.
 
 use std::time::{Duration, Instant};
 
 use smoothcache::coordinator::{
     Batcher, BatcherConfig, Coordinator, CoordinatorConfig, InFlight, Metrics, Policy, Request,
+    SubmitOpts,
 };
 use smoothcache::model::{Cond, Manifest};
 use smoothcache::solvers::SolverKind;
@@ -247,6 +257,194 @@ fn queue_full_rejects_with_well_formed_overloaded_error() {
     coord.shutdown();
 }
 
+/// ISSUE 5 (f): a request cancelled while *queued* is answered with a
+/// `cancelled:` error immediately, frees its admission slot (a request
+/// the full queue just rejected is admitted right after), and never
+/// reaches a replica.
+#[test]
+fn cancelling_a_queued_request_frees_its_admission_slot() {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir())
+        .with_workers(1)
+        .with_queue_depth(1);
+    cfg.max_wait = Duration::from_millis(1);
+    let coord = Coordinator::start(cfg).expect("coordinator");
+
+    // occupy the single executor with a long generation (distinct step
+    // counts keep every request in its own batch)
+    let (ptx, prx) = std::sync::mpsc::channel();
+    let a = coord.submit_opts(
+        image_request(800, 1, Policy::no_cache()),
+        SubmitOpts { progress: Some(ptx), deadline: None },
+    );
+    prx.recv_timeout(Duration::from_secs(120)).expect("executor never started A");
+
+    // B fills the depth-1 queue…
+    let b = coord.submit_opts(image_request(4, 2, Policy::no_cache()), SubmitOpts::default());
+    let t0 = Instant::now();
+    while coord.queue_len() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(60), "B never queued");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // …so C is rejected at admission
+    let c = coord.submit_opts(image_request(5, 3, Policy::no_cache()), SubmitOpts::default());
+    let c_err = c
+        .reply
+        .recv_timeout(Duration::from_secs(60))
+        .expect("C must be answered")
+        .expect_err("C must be rejected");
+    assert!(format!("{c_err}").starts_with("overloaded:"), "{c_err}");
+
+    // cancelling B answers it promptly and frees the slot *now* — no
+    // waiting for the long batch A to finish
+    assert!(coord.cancel(b.id), "B must be known while queued");
+    let b_err = b
+        .reply
+        .recv_timeout(Duration::from_secs(5))
+        .expect("cancelled queued request must be answered immediately")
+        .expect_err("B must not have executed");
+    assert!(format!("{b_err}").starts_with("cancelled:"), "{b_err}");
+    assert_eq!(coord.queue_len(), 0, "cancelled request must free its slot");
+
+    // the freed slot admits new work, which completes once A is gone
+    let d = coord.submit_opts(image_request(6, 4, Policy::no_cache()), SubmitOpts::default());
+    assert!(coord.cancel(a.id), "A must be known while executing");
+    let a_err = a
+        .reply
+        .recv_timeout(Duration::from_secs(120))
+        .expect("cancelled in-flight request must be answered")
+        .expect_err("A must have been aborted");
+    assert!(format!("{a_err}").starts_with("cancelled:"), "{a_err}");
+    let d_resp = d
+        .reply
+        .recv_timeout(Duration::from_secs(120))
+        .expect("D must be answered")
+        .expect("D must complete");
+    assert_eq!(d_resp.latent.shape, vec![1, 16, 16, 4]);
+
+    // (h) counters reconcile: 4 submitted = 1 completed + 2 cancelled +
+    // 1 rejected, nothing failed, nothing lost or double-answered
+    let m = coord.metrics();
+    assert_eq!(Metrics::get(&m.requests_submitted), 4);
+    assert_eq!(Metrics::get(&m.requests_completed), 1);
+    assert_eq!(Metrics::get(&m.requests_cancelled), 2);
+    assert_eq!(Metrics::get(&m.queue_rejections), 1);
+    assert_eq!(Metrics::get(&m.requests_failed), 0);
+    coord.shutdown();
+    for rx in [&a.reply, &b.reply, &c.reply, &d.reply] {
+        match rx.try_recv() {
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {}
+            other => panic!("reply channel not drained exactly once: {other:?}"),
+        }
+    }
+}
+
+/// ISSUE 5 (g): cancelling an in-flight generation stops executor work
+/// at the next solver-step boundary — pinned by watching per-step
+/// progress events: after the cancel, only a bounded number of further
+/// steps may execute (scheduling slack), not the remaining trajectory.
+#[test]
+fn cancelling_inflight_generation_stops_within_a_step() {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(1);
+    cfg.max_wait = Duration::from_millis(1);
+    let coord = Coordinator::start(cfg).expect("coordinator");
+
+    let steps = 600usize;
+    let (ptx, prx) = std::sync::mpsc::channel();
+    let ticket = coord.submit_opts(
+        image_request(steps, 1, Policy::no_cache()),
+        SubmitOpts { progress: Some(ptx), deadline: None },
+    );
+    // first progress event ⇒ the generation is demonstrably in flight
+    let first = prx.recv_timeout(Duration::from_secs(120)).expect("no progress event");
+    assert_eq!(first.id, ticket.id);
+    assert_eq!(first.steps, steps);
+    assert!(coord.cancel(ticket.id));
+
+    let err = ticket
+        .reply
+        .recv_timeout(Duration::from_secs(120))
+        .expect("cancelled request must be answered")
+        .expect_err("cancelled request must not complete");
+    assert!(format!("{err}").starts_with("cancelled:"), "{err}");
+
+    // the executor checked between steps: the trajectory was abandoned
+    // long before its 600 steps (progress events stop almost at once)
+    let mut last_step = first.step;
+    while let Ok(p) = prx.try_recv() {
+        last_step = p.step;
+    }
+    assert!(
+        last_step + 1 < steps / 2,
+        "cancel was not prompt: reached step {last_step} of {steps}"
+    );
+    let m = coord.metrics();
+    assert!(Metrics::get(&m.steps_executed) < (steps / 2) as u64);
+    assert_eq!(Metrics::get(&m.requests_cancelled), 1);
+    assert_eq!(Metrics::get(&m.requests_completed), 0);
+    assert_eq!(Metrics::get(&m.requests_failed), 0);
+    coord.shutdown();
+}
+
+/// ISSUE 5 (g), the sharp half: cancellation stays prompt and safe
+/// while a *sibling replica* holds the `smooth:*` calibration lock —
+/// the cancelled no-cache batch never touches the plan store, so the
+/// in-flight calibration cannot delay the abort, and both requests'
+/// counters reconcile afterwards.
+#[test]
+fn cancel_is_prompt_while_sibling_holds_calibration_lock() {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(2);
+    cfg.max_wait = Duration::from_millis(5);
+    cfg.calib_samples = 8; // deliberately long calibration
+    let coord = Coordinator::start(cfg).expect("coordinator");
+
+    // cold smooth key → replica 1 enters calibration (and holds the
+    // shared plan-store lock)
+    let cold_rx = coord.submit(image_request(16, 1, Policy::smooth(2.0)));
+    let t0 = Instant::now();
+    while Metrics::get(&coord.metrics().calibrations) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(120), "calibration never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // long no-cache request lands on the idle sibling…
+    let (ptx, prx) = std::sync::mpsc::channel();
+    let ticket = coord.submit_opts(
+        image_request(600, 2, Policy::no_cache()),
+        SubmitOpts { progress: Some(ptx), deadline: None },
+    );
+    prx.recv_timeout(Duration::from_secs(120)).expect("sibling never started the long batch");
+    // …and is cancelled mid-flight while the calibration still runs
+    assert!(coord.cancel(ticket.id));
+    let cancel_sent = Instant::now();
+    let err = ticket
+        .reply
+        .recv_timeout(Duration::from_secs(120))
+        .expect("cancelled request must be answered despite the held calibration lock")
+        .expect_err("cancelled request must not complete");
+    assert!(format!("{err}").starts_with("cancelled:"), "{err}");
+    let abort_latency = cancel_sent.elapsed();
+
+    // the calibrating request is untouched: it completes and skips
+    let cold = cold_rx
+        .recv_timeout(Duration::from_secs(300))
+        .expect("cold request hung")
+        .expect("cold request failed");
+    assert!(cold.gen_stats.skip_fraction() > 0.0);
+
+    let m = coord.metrics();
+    assert_eq!(Metrics::get(&m.calibrations), 1);
+    assert_eq!(Metrics::get(&m.requests_cancelled), 1);
+    assert_eq!(Metrics::get(&m.requests_completed), 1);
+    assert_eq!(Metrics::get(&m.requests_failed), 0);
+    // promptness: far faster than the 600-step trajectory (whose steps
+    // kept pace with the 16-step calibration batches on the sibling)
+    assert!(
+        abort_latency < Duration::from_secs(60),
+        "abort took {abort_latency:?} — cancellation blocked behind the calibration?"
+    );
+    coord.shutdown();
+}
+
 /// Batcher-layer property with synthetic clocks (no sleeping): under
 /// Poisson inter-arrival offsets, every request flushes by
 /// `last_arrival + max_wait`, every flushed batch is homogeneous in
@@ -291,8 +489,8 @@ fn prop_deadline_flushes_fire_under_poisson_arrivals() {
                 last = now;
                 let (tx, rx) = std::sync::mpsc::channel();
                 keep_rx.push(rx);
-                let item = InFlight {
-                    request: Request {
+                let item = InFlight::new(
+                    Request {
                         id: i as u64,
                         family: families[f].into(),
                         cond: cond_for(families[f], i),
@@ -302,9 +500,8 @@ fn prop_deadline_flushes_fire_under_poisson_arrivals() {
                         seed: i as u64,
                         policy: Policy::no_cache(),
                     },
-                    submitted: Instant::now(),
-                    reply: tx,
-                };
+                    tx,
+                );
                 if let Some(batch) = batcher.push(item, now) {
                     flushed += check_batches(vec![batch])?;
                 }

@@ -1,8 +1,13 @@
 //! Serving-stack integration: coordinator batching + TCP server + client
-//! over the engine-selected backend (pure-Rust reference offline).
+//! over the engine-selected backend (pure-Rust reference offline),
+//! including the streaming/cancellation surfaces (ISSUE 5): per-step
+//! event lines, `{"cmd":"cancel"}`, cancel-on-disconnect, and deadline
+//! rejection — with metrics that reconcile afterwards.
 
+use std::io::Write;
+use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Metrics, Policy, Request};
 use smoothcache::model::Cond;
@@ -185,5 +190,202 @@ fn server_round_trip() {
         .unwrap();
     assert_eq!(bad_pol.get("ok").unwrap().as_bool(), Some(false));
 
+    // seeds that an `as u64` cast would have silently mangled are wire
+    // errors now (lossless-integer contract, docs/protocol.md)
+    for bad_seed in ["-3", "1.5", "18446744073709551615"] {
+        let bad = client
+            .call(&parse_json(&format!(
+                r#"{{"family":"image","label":1,"seed":{bad_seed}}}"#
+            )))
+            .unwrap();
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "seed {bad_seed}");
+        assert!(
+            bad.get("error").and_then(|v| v.as_str()).unwrap_or("").contains("seed"),
+            "seed {bad_seed}: {bad:?}"
+        );
+    }
+
+    server.stop();
+}
+
+fn parse_json(s: &str) -> Json {
+    smoothcache::util::json::parse(s).expect("test json")
+}
+
+#[test]
+fn server_streams_step_events_and_matches_blocking_result() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mk = || {
+        Json::obj()
+            .set("family", "image")
+            .set("label", 4.0)
+            .set("steps", 6usize)
+            .set("policy", "fora:2")
+            .set("seed", 11u64)
+            .set("return_latent", true)
+    };
+
+    // blocking reference result first
+    let mut blocking = Client::connect(&server.addr).expect("client");
+    let reference = blocking.call(&mk()).expect("blocking call");
+    assert_eq!(reference.get("ok").unwrap().as_bool(), Some(true), "{reference:?}");
+
+    // streamed run: an accepted line, one step line per solver step
+    // (in order), then a final result line with the same latent
+    let mut streaming = Client::connect(&server.addr).expect("client");
+    let mut accepted = 0usize;
+    let mut steps_seen = Vec::new();
+    let done = streaming
+        .call_streaming(&mk(), |ev| {
+            match ev.get("event").and_then(|v| v.as_str()) {
+                Some("accepted") => {
+                    accepted += 1;
+                    assert!(ev.get("id").and_then(|v| v.as_u64()).is_some(), "{ev:?}");
+                }
+                Some("step") => {
+                    steps_seen.push(ev.get("step").and_then(|v| v.as_u64()).unwrap());
+                    assert_eq!(ev.get("steps").and_then(|v| v.as_u64()), Some(6));
+                    let c = ev.get("computes").and_then(|v| v.as_u64()).unwrap();
+                    let r = ev.get("reuses").and_then(|v| v.as_u64()).unwrap();
+                    assert!(c + r > 0, "{ev:?}");
+                    assert!(ev.get("t_s").and_then(|v| v.as_f64()).is_some());
+                }
+                other => panic!("unexpected event {other:?}: {ev:?}"),
+            }
+        })
+        .expect("streaming call");
+    assert_eq!(accepted, 1);
+    assert_eq!(steps_seen, vec![0, 1, 2, 3, 4, 5], "one ordered event per step");
+    assert_eq!(done.get("event").and_then(|v| v.as_str()), Some("done"));
+    assert_eq!(done.get("ok").unwrap().as_bool(), Some(true), "{done:?}");
+    assert_eq!(done.get("steps").and_then(|v| v.as_u64()), Some(6));
+    assert_eq!(
+        done.get("latent").unwrap().as_f32_vec().unwrap(),
+        reference.get("latent").unwrap().as_f32_vec().unwrap(),
+        "streaming must not change the generated latent"
+    );
+    server.stop();
+}
+
+#[test]
+fn server_cancel_command_aborts_inflight_generation() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut streaming = Client::connect(&server.addr).expect("client");
+    let mut killer = Client::connect(&server.addr).expect("client");
+
+    // long enough that cancellation always lands mid-flight
+    let req = Json::obj()
+        .set("family", "image")
+        .set("label", 1.0)
+        .set("steps", 2000usize)
+        .set("policy", "no-cache")
+        .set("seed", 5u64);
+    let mut cancelled_at: Option<u64> = None;
+    let outcome = streaming
+        .call_streaming(&req, |ev| {
+            // cancel from a sibling connection on the first step event
+            if ev.get("event").and_then(|v| v.as_str()) == Some("step") && cancelled_at.is_none() {
+                let id = ev.get("id").and_then(|v| v.as_u64()).unwrap();
+                assert!(killer.cancel(id).expect("cancel rpc"), "id must be known");
+                cancelled_at = Some(id);
+            }
+        })
+        .expect("streaming call");
+    assert!(cancelled_at.is_some(), "never saw a step event");
+    assert_eq!(outcome.get("ok").unwrap().as_bool(), Some(false), "{outcome:?}");
+    assert_eq!(outcome.get("cancelled").and_then(|v| v.as_bool()), Some(true), "{outcome:?}");
+
+    // the stack is still healthy: counters reconcile and new work runs
+    let summary = killer.metrics_summary().unwrap();
+    assert!(summary.contains("cancelled=1"), "{summary}");
+    assert!(summary.contains("completed=0"), "{summary}");
+    let after = killer
+        .call(&Json::obj().set("family", "image").set("label", 2.0).set("steps", 4usize))
+        .unwrap();
+    assert_eq!(after.get("ok").unwrap().as_bool(), Some(true), "{after:?}");
+    // cancelling a finished id is a no-op answered with cancelled=false
+    assert!(!killer.cancel(cancelled_at.unwrap()).unwrap());
+    server.stop();
+}
+
+#[test]
+fn server_cancels_on_disconnect() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+
+    // fire a long request and slam the connection shut without reading
+    {
+        let mut stream = TcpStream::connect(server.addr).expect("connect");
+        let req = Json::obj()
+            .set("family", "image")
+            .set("label", 0.0)
+            .set("steps", 2000usize)
+            .set("policy", "no-cache")
+            .set("seed", 3u64);
+        stream.write_all(req.to_string().as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        // wait until the request is demonstrably executing
+        let t0 = Instant::now();
+        while Metrics::get(&c.metrics().steps_executed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(120), "generation never started");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    } // drop = TCP close while the generation is mid-flight
+
+    // the server notices the disconnect and cancels the orphaned work
+    let mut probe = Client::connect(&server.addr).expect("client");
+    let t0 = Instant::now();
+    loop {
+        let summary = probe.metrics_summary().unwrap();
+        if summary.contains("cancelled=1") {
+            assert!(summary.contains("completed=0"), "{summary}");
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "disconnect never cancelled the request: {summary}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    server.stop();
+}
+
+#[test]
+fn server_rejects_late_work_under_reject_deadline() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut client = Client::connect(&server.addr).expect("client");
+
+    // a 1 ms reject-late budget on a long generation: the deadline
+    // expires before (or while) the batch runs, so the reply is a
+    // deadline rejection, not a latent
+    let req = Json::obj()
+        .set("family", "image")
+        .set("label", 1.0)
+        .set("steps", 500usize)
+        .set("policy", "no-cache")
+        .set("deadline_ms", 1usize)
+        .set("deadline_policy", "reject");
+    let resp = client.call(&req).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp:?}");
+    assert_eq!(resp.get("deadline_missed").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+    let summary = client.metrics_summary().unwrap();
+    assert!(summary.contains("dl_miss=1"), "{summary}");
+
+    // a generous best-effort budget delivers the result unflagged
+    let ok = client
+        .call(
+            &Json::obj()
+                .set("family", "image")
+                .set("label", 1.0)
+                .set("steps", 4usize)
+                .set("deadline_ms", 600_000usize),
+        )
+        .unwrap();
+    assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true), "{ok:?}");
+    assert!(ok.get("deadline_missed").is_none(), "{ok:?}");
     server.stop();
 }

@@ -1,0 +1,207 @@
+//! GenSession ↔ driver parity (ISSUE 5 acceptance): `generate` /
+//! `generate_from` are thin drivers over the step-driven
+//! [`GenSession`], and manual stepping must produce **bitwise**
+//! identical latents and identical decision counters for every policy
+//! in the registry, across two families × {ddim, rf} — plus the
+//! session-only surfaces: per-step events that reconcile with the
+//! final stats, interim latent access, and early exit.
+
+use smoothcache::cache::plan::{parse_policy, registry, PlanRef};
+use smoothcache::coordinator::{PlanStore, Policy};
+use smoothcache::model::{Cond, Engine};
+use smoothcache::pipeline::{generate, generate_from, GenConfig, GenSession};
+use smoothcache::solvers::{SolverKind, SolverRun};
+use smoothcache::util::rng::Rng;
+
+/// One wire spelling per registry row (generous parameters so smooth /
+/// drift actually skip on the untrained model). The length assertion
+/// forces this list to grow with the registry.
+fn registry_wires() -> Vec<&'static str> {
+    let wires = vec![
+        "no-cache",
+        "fora:2",
+        "alternate",
+        "smooth:2.0",
+        "smooth-persite:2.0",
+        "delta-dit:2",
+        "drift:1e9",
+    ];
+    assert_eq!(
+        wires.len(),
+        registry().len(),
+        "registry grew: add the new policy to this parity test"
+    );
+    for w in &wires {
+        parse_policy(w).expect(w);
+    }
+    wires
+}
+
+fn cond_for(family: &str) -> Cond {
+    if family == "image" {
+        Cond::Label(vec![3, 7])
+    } else {
+        Cond::Prompt(vec![1, 2, 3, 4, 5, 6, 7, 8, 11, 12, 13, 14, 15, 16, 17, 18])
+    }
+}
+
+/// Drive a session by hand, checking the per-step surfaces along the
+/// way, and return its output.
+fn step_manually(
+    engine: &Engine,
+    cfg: &GenConfig,
+    cond: &Cond,
+    plan: PlanRef<'_>,
+    expected_batch: usize,
+) -> smoothcache::pipeline::GenOutput {
+    let mut session = GenSession::new(engine, cfg, cond, plan).expect("session");
+    assert_eq!(session.total_steps(), cfg.steps);
+    let mut computes = 0usize;
+    let mut reuses = 0usize;
+    while !session.is_done() {
+        let before = session.current_step();
+        let ev = session.step().expect("step");
+        assert_eq!(ev.step, before);
+        assert_eq!(ev.steps, cfg.steps);
+        assert_eq!(session.current_step(), before + 1);
+        assert_eq!(ev.done, session.is_done());
+        computes += ev.computes;
+        reuses += ev.reuses;
+        // interim latent stays accessible mid-trajectory
+        assert_eq!(session.latent().dim0(), expected_batch);
+    }
+    // events reconcile with the session's accumulated stats
+    assert_eq!(computes, session.stats().branch_computes);
+    assert_eq!(reuses, session.stats().branch_reuses);
+    session.finish()
+}
+
+#[test]
+fn driver_and_manual_stepping_agree_for_every_registry_policy() {
+    let steps = 6usize;
+    for family in ["image", "audio"] {
+        let mut engine = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+        engine.load_family(family).expect("family");
+        let mut store = PlanStore::new(2, 7, None);
+        for solver in [SolverKind::Ddim, SolverKind::RectifiedFlow] {
+            for wire in registry_wires() {
+                let policy = Policy::parse(wire).unwrap();
+                let held;
+                let plan = match policy.planner().dynamic() {
+                    Some(sp) => PlanRef::Planner(sp),
+                    None => {
+                        held = store
+                            .plan(&engine, None, family, solver, steps, &policy)
+                            .expect(wire);
+                        PlanRef::Plan(&held)
+                    }
+                };
+                let cfg = GenConfig::new(family, solver, steps).with_seed(42);
+                let cond = cond_for(family);
+                let a = generate(&engine, &cfg, &cond, plan, None).expect(wire);
+                let b = step_manually(&engine, &cfg, &cond, plan, 2);
+                assert_eq!(
+                    a.latent.data, b.latent.data,
+                    "{family}/{}/{wire}: driver and manual stepping diverged",
+                    solver.name()
+                );
+                assert_eq!(a.stats.branch_computes, b.stats.branch_computes);
+                assert_eq!(a.stats.branch_reuses, b.stats.branch_reuses);
+                assert_eq!(a.stats.steps, b.stats.steps);
+                assert_eq!(a.stats.steps, steps);
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_holds_under_cfg_guidance() {
+    let steps = 5usize;
+    let mut engine = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    engine.load_family("image").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    let policy = Policy::fora(2);
+    let plan = store
+        .plan(&engine, None, "image", SolverKind::Ddim, steps, &policy)
+        .unwrap();
+    let cfg = GenConfig::new("image", SolverKind::Ddim, steps)
+        .with_seed(9)
+        .with_cfg(1.5);
+    let cond = Cond::Label(vec![4]);
+    let a = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).unwrap();
+    let b = step_manually(&engine, &cfg, &cond, PlanRef::Plan(&plan), 1);
+    assert_eq!(a.latent.data, b.latent.data, "CFG path diverged");
+    assert_eq!(a.stats.branch_computes, b.stats.branch_computes);
+}
+
+#[test]
+fn generate_from_matches_session_from_latent() {
+    let steps = 4usize;
+    let mut engine = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    engine.load_family("image").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    let policy = Policy::alternate();
+    let plan = store
+        .plan(&engine, None, "image", SolverKind::Ddim, steps, &policy)
+        .unwrap();
+    let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(5);
+    let cond = Cond::Label(vec![1, 2]);
+    let x0 = SolverRun::init_latent(vec![2, 16, 16, 4], &mut Rng::new(77));
+    let a = generate_from(&engine, &cfg, &cond, x0.clone(), PlanRef::Plan(&plan), None).unwrap();
+    let mut s = GenSession::from_latent(&engine, &cfg, &cond, x0, PlanRef::Plan(&plan)).unwrap();
+    while !s.is_done() {
+        s.step().unwrap();
+    }
+    let b = s.finish();
+    assert_eq!(a.latent.data, b.latent.data);
+}
+
+#[test]
+fn early_exit_returns_interim_latent_and_partial_stats() {
+    let steps = 8usize;
+    let mut engine = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    engine.load_family("image").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    let policy = Policy::no_cache();
+    let plan = store
+        .plan(&engine, None, "image", SolverKind::Ddim, steps, &policy)
+        .unwrap();
+    let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(1);
+    let cond = Cond::Label(vec![0]);
+
+    let mut s = GenSession::new(&engine, &cfg, &cond, PlanRef::Plan(&plan)).unwrap();
+    for _ in 0..3 {
+        s.step().unwrap();
+    }
+    let interim = s.latent().clone();
+    let early = s.finish();
+    assert_eq!(early.latent.data, interim.data, "finish must hand out the interim latent");
+    assert_eq!(early.stats.steps, 3, "stats.steps records executed steps on early exit");
+
+    // the abandoned trajectory differs from the completed one
+    let full = generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).unwrap();
+    assert_eq!(full.stats.steps, steps);
+    assert_ne!(full.latent.data, early.latent.data);
+}
+
+#[test]
+fn session_rejects_stepping_past_the_end_and_empty_batches() {
+    let steps = 2usize;
+    let mut engine = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    engine.load_family("image").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    let plan = store
+        .plan(&engine, None, "image", SolverKind::Ddim, steps, &Policy::no_cache())
+        .unwrap();
+    let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(1);
+
+    let mut s =
+        GenSession::new(&engine, &cfg, &Cond::Label(vec![0]), PlanRef::Plan(&plan)).unwrap();
+    s.step().unwrap();
+    s.step().unwrap();
+    assert!(s.is_done());
+    assert!(s.step().is_err(), "stepping past the end must error");
+
+    let empty = Cond::Label(vec![]);
+    assert!(GenSession::new(&engine, &cfg, &empty, PlanRef::Plan(&plan)).is_err());
+}

@@ -9,6 +9,15 @@ cd "$(dirname "$0")/.."
 echo "==> cargo build --release"
 cargo build --release
 
+echo "==> cargo fmt --check"
+# formatting gate; skipped with a warning when rustfmt is not installed
+# (the offline build container has no rustfmt component)
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "warning: rustfmt not installed; skipping format gate" >&2
+fi
+
 echo "==> cargo clippy --all-targets -- -D warnings"
 # lint gate over every target (lib, bins, tests, benches, examples);
 # skipped with a warning when the clippy component is not installed
