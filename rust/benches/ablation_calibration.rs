@@ -4,11 +4,15 @@
 //! the mean. We sweep N ∈ {1, 2, 5, 10, 20} and report (a) schedule
 //! agreement with the N=10 reference at several alphas, (b) mean CI
 //! width at k=1.
+//!
+//! Flags: `--smoke` (CI scale) and `--json OUT` (machine-readable
+//! report, docs/benchmarks.md).
 
 use smoothcache::cache::{calibrate, CalibrationConfig, Schedule};
 use smoothcache::model::Engine;
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{fast_mode, Args, Table};
 
 fn agreement(a: &Schedule, b: &Schedule) -> f64 {
     let mut same = 0usize;
@@ -25,6 +29,11 @@ fn agreement(a: &Schedule, b: &Schedule) -> f64 {
 }
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
@@ -35,12 +44,20 @@ fn main() -> smoothcache::util::error::Result<()> {
     let fm = engine.family_manifest("image")?.clone();
     let bts = fm.branch_types.clone();
 
-    let (steps, sizes): (usize, Vec<usize>) = if fast_mode() {
+    let (steps, sizes): (usize, Vec<usize>) = if smoke {
+        (6, vec![1, 2])
+    } else if fast_mode() {
         (10, vec![1, 2, 5])
     } else {
         (50, vec![1, 2, 5, 10, 20])
     };
     let alphas = [0.1, 0.2, 0.35, 0.5];
+
+    let mut report = BenchReport::new("ablation_calibration");
+    report.meta("family", "image");
+    report.meta("solver", "ddim");
+    report.meta("steps", steps);
+    report.meta("smoke", smoke);
 
     // reference curves at the paper's N=10 (or max size in fast mode)
     let ref_n = *sizes.iter().rev().find(|&&n| n <= 10).unwrap();
@@ -70,6 +87,24 @@ fn main() -> smoothcache::util::error::Result<()> {
             agreements.push(agreement(&s_ref, &s_n));
         }
         let mean_agree = agreements.iter().sum::<f64>() / agreements.len() as f64;
+        if json_out.is_some() {
+            // deterministic given the pinned calibration seed
+            report.metric_tol(&format!("n{n}/agreement_pct"), mean_agree * 100.0, "%", true, 2.0)?;
+            report.metric_tol(
+                &format!("n{n}/ci_width_attn"),
+                curves.mean_ci_width("attn"),
+                "L1",
+                false,
+                10.0,
+            )?;
+            report.metric_tol(
+                &format!("n{n}/ci_width_ffn"),
+                curves.mean_ci_width("ffn"),
+                "L1",
+                false,
+                10.0,
+            )?;
+        }
         table.row(&[
             n.to_string(),
             format!("{:.1}%", mean_agree * 100.0),
@@ -86,5 +121,9 @@ fn main() -> smoothcache::util::error::Result<()> {
         "paper claim: schedules are stable by N=10; CI narrows with N but the mean doesn't move"
     );
     std::fs::write("bench_out/ablation_calibration.csv", table.to_csv())?;
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

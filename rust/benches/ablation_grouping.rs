@@ -3,21 +3,30 @@
 //! per-(block, branch) decisions at the same alpha. The paper argues
 //! grouping is needed because per-site calibration errors stop
 //! predicting true errors once earlier layers are approximated.
+//!
+//! Flags: `--threads N`, `--smoke` (CI scale), `--json OUT`
+//! (machine-readable report, docs/benchmarks.md).
 
 use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef};
 use smoothcache::experiments::{eval_conds, generate_set, image_corpus, EvalConfig};
 use smoothcache::model::Engine;
 use smoothcache::quality::{ffd, lpips_proxy, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{arg_usize, fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{fast_mode, Args, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = args.usize("threads", 0)?;
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
-    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
-    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("image")?;
@@ -25,8 +34,22 @@ fn main() -> smoothcache::util::error::Result<()> {
     let bts = fm.branch_types.clone();
     let sites = fm.branch_sites();
 
-    let (steps, n_samples, calib_samples) =
-        if fast_mode() { (10, 12, 2) } else { (50, 24, 10) };
+    let (steps, n_samples, calib_samples) = if smoke {
+        (6usize, 4usize, 1usize)
+    } else if fast_mode() {
+        (10, 12, 2)
+    } else {
+        (50, 24, 10)
+    };
+
+    let mut report = BenchReport::new("ablation_grouping");
+    report.meta("family", "image");
+    report.meta("solver", "ddim");
+    report.meta("steps", steps);
+    report.meta("samples", n_samples);
+    report.meta("threads", threads);
+    report.meta("smoke", smoke);
+
     let cc = CalibrationConfig {
         num_samples: calib_samples,
         ..CalibrationConfig::new(SolverKind::Ddim, steps)
@@ -59,15 +82,33 @@ fn main() -> smoothcache::util::error::Result<()> {
             &sites,
             &curves.per_site_schedule(alpha),
         )?;
-        for (mode_name, plan) in [("grouped (paper)", &grouped), ("per-site", &per_site)] {
+        for (mode_slug, mode_name, plan) in
+            [("grouped", "grouped (paper)", &grouped), ("per_site", "per-site", &per_site)]
+        {
             let skip = plan.skip_fraction();
             let (set, stats) = generate_set(&engine, &ec, &conds, PlanRef::Plan(plan))?;
+            let ffd_v = ffd(&fx, &corpus, &set);
+            let lpips_v = lpips_proxy(&fx, &ref_set, &set);
+            if json_out.is_some() {
+                // alpha values are fixed roster points, safe in the key
+                let a = format!("a{}", (alpha * 100.0).round() as usize);
+                report.metric_tol(&format!("{a}/{mode_slug}/skip_pct"), skip * 100.0, "%", true, 1.0)?;
+                report.metric_tol(&format!("{a}/{mode_slug}/ffd"), ffd_v, "score", false, 2.0)?;
+                report.metric_tol(&format!("{a}/{mode_slug}/lpips"), lpips_v, "score", false, 5.0)?;
+                report.metric_tol(
+                    &format!("{a}/{mode_slug}/latency_s"),
+                    stats.per_sample_seconds,
+                    "s",
+                    false,
+                    100.0,
+                )?;
+            }
             table.row(&[
                 format!("{alpha}"),
                 mode_name.into(),
                 format!("{:.0}%", skip * 100.0),
-                format!("{:.3}", ffd(&fx, &corpus, &set)),
-                format!("{:.4}", lpips_proxy(&fx, &ref_set, &set)),
+                format!("{ffd_v:.3}"),
+                format!("{lpips_v:.4}"),
                 format!("{:.3}", stats.per_sample_seconds),
             ]);
             eprintln!("[grouping] alpha={alpha} {mode_name}: done");
@@ -78,5 +119,9 @@ fn main() -> smoothcache::util::error::Result<()> {
     table.print();
     println!("paper expectation: per-site skips more at equal alpha but degrades quality\nmore per unit of compute saved (cascading approximation error).");
     std::fs::write("bench_out/ablation_grouping.csv", table.to_csv())?;
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

@@ -2,6 +2,9 @@
 //! and SmoothCache alpha across DDIM step counts on the image family and
 //! prints the (GMACs, FFD) frontier — the paper's claim is that
 //! SmoothCache's front dominates static caching's.
+//!
+//! Flags: `--threads N`, `--smoke` (CI scale), `--json OUT`
+//! (machine-readable report, docs/benchmarks.md).
 
 use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef, Schedule};
 use smoothcache::experiments::{eval_conds, generate_set, image_corpus, EvalConfig};
@@ -9,15 +12,21 @@ use smoothcache::macs::{as_gmacs, generation_macs};
 use smoothcache::model::Engine;
 use smoothcache::quality::{ffd, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{arg_usize, ascii_plot, fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{ascii_plot, fast_mode, Args, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = args.usize("threads", 0)?;
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
-    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
-    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("image")?;
@@ -25,10 +34,23 @@ fn main() -> smoothcache::util::error::Result<()> {
     let bts = fm.branch_types.clone();
     let sites = fm.branch_sites();
 
-    let (steps_list, n_samples, calib_samples) =
-        if fast_mode() { (vec![10], 12, 2) } else { (vec![50], 24, 10) };
+    let (steps_list, n_samples, calib_samples) = if smoke {
+        (vec![6usize], 4usize, 1usize)
+    } else if fast_mode() {
+        (vec![10], 12, 2)
+    } else {
+        (vec![50], 24, 10)
+    };
     let fx = FeatureExtractor::new(0xF1D, 12);
     let (corpus, _) = image_corpus(128, 0xC0FFEE);
+
+    let mut report = BenchReport::new("ablation_pareto");
+    report.meta("family", "image");
+    report.meta("solver", "ddim");
+    report.meta("steps", steps_list[0]);
+    report.meta("samples", n_samples);
+    report.meta("threads", threads);
+    report.meta("smoke", smoke);
 
     let mut table = Table::new(&["steps", "method", "param", "skip%", "GMACs", "FFD", "lat(s)"]);
     let mut fora_pts: Vec<(f64, f64)> = Vec::new();
@@ -42,13 +64,31 @@ fn main() -> smoothcache::util::error::Result<()> {
         let curves = calibrate(&engine, "image", &cc)?;
         eprintln!("[pareto] calibrated ddim-{steps}");
 
-        let mut roster: Vec<(String, String, Schedule)> = Vec::new();
-        for n in [2usize, 3, 4] {
-            roster.push(("FORA".into(), format!("n={n}"), Schedule::fora(steps, &bts, n)));
+        // slug: stable metric key (FORA by interval, ours by target
+        // skip percent — not the calibrated alpha)
+        let mut roster: Vec<(String, String, String, Schedule)> = Vec::new();
+        let fora_ns: &[usize] = if smoke { &[2, 3] } else { &[2, 3, 4] };
+        for &n in fora_ns {
+            roster.push((
+                format!("fora_n{n}"),
+                "FORA".into(),
+                format!("n={n}"),
+                Schedule::fora(steps, &bts, n),
+            ));
         }
-        for target in [0.2, 0.35, 0.5, 0.6, 2.0 / 3.0, 0.72] {
+        let targets: &[f64] = if smoke {
+            &[0.35, 0.5]
+        } else {
+            &[0.2, 0.35, 0.5, 0.6, 2.0 / 3.0, 0.72]
+        };
+        for &target in targets {
             let (alpha, s) = curves.alpha_for_skip_fraction(target, &bts);
-            roster.push(("Ours".into(), format!("a={alpha:.3}"), s));
+            roster.push((
+                format!("ours_s{}", (target * 100.0).round() as usize),
+                "Ours".into(),
+                format!("a={alpha:.3}"),
+                s,
+            ));
         }
 
         // warmup
@@ -61,7 +101,8 @@ fn main() -> smoothcache::util::error::Result<()> {
             let _ = generate_set(&engine, &ec, &conds, PlanRef::Plan(&warm_plan))?;
         }
 
-        for (method, param, schedule) in &roster {
+        let emit_metrics = steps == steps_list[0] && json_out.is_some();
+        for (slug, method, param, schedule) in &roster {
             let mut ec = EvalConfig::new("image", SolverKind::Ddim, steps).with_threads(threads);
             ec.n_samples = n_samples;
             ec.cfg_scale = 1.5; // paper protocol
@@ -70,6 +111,17 @@ fn main() -> smoothcache::util::error::Result<()> {
             let (set, stats) = generate_set(&engine, &ec, &conds, PlanRef::Plan(&plan))?;
             let f = ffd(&fx, &corpus, &set);
             let g = as_gmacs(generation_macs(&fm, schedule, true));
+            if emit_metrics {
+                report.metric_tol(&format!("{slug}/ffd"), f, "score", false, 2.0)?;
+                report.metric_tol(&format!("{slug}/gmacs"), g, "GMACs", false, 0.1)?;
+                report.metric_tol(
+                    &format!("{slug}/latency_s"),
+                    stats.per_sample_seconds,
+                    "s",
+                    false,
+                    100.0,
+                )?;
+            }
             table.row(&[
                 steps.to_string(),
                 method.clone(),
@@ -104,5 +156,9 @@ fn main() -> smoothcache::util::error::Result<()> {
         10,
     );
     println!("{plot}");
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

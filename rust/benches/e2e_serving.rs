@@ -10,10 +10,13 @@
 //!
 //! Flags: `--workers N` sizes the executor replica pool, `--threads N`
 //! pins the GEMM compute pool (0 = auto), `--queue-depth N` bounds the
-//! shared work queue (rejected requests are counted, not retried), and
+//! shared work queue (rejected requests are counted, not retried),
 //! `--deadline-ms N` attaches a best-effort deadline to every request
 //! (0 = none) so the `dl miss` column reports how much of the load
-//! would have been late under that latency budget.
+//! would have been late under that latency budget, `--smoke` shrinks
+//! the run to CI scale (2 steps, a handful of requests), and
+//! `--json OUT` writes the machine-readable `BENCH_serving.json`
+//! report (docs/benchmarks.md).
 
 use std::time::{Duration, Instant};
 
@@ -21,30 +24,53 @@ use smoothcache::coordinator::{
     Coordinator, CoordinatorConfig, Deadline, DeadlinePolicy, Metrics, Policy, Request, SubmitOpts,
 };
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{arg_usize, fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{fast_mode, Args, Table};
 use smoothcache::workload::PoissonTrace;
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    let workers = args.usize("workers", 2)?;
+    let queue_depth = args.usize("queue-depth", 256)?;
+    let threads = args.usize("threads", 0)?;
+    let deadline_ms = args.usize("deadline-ms", 0)?;
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
-    let workers = arg_usize("workers", 2);
-    let queue_depth = arg_usize("queue-depth", 256);
-    let threads = arg_usize("threads", 0);
-    let deadline_ms = arg_usize("deadline-ms", 0);
     if threads > 0 {
         smoothcache::tensor::gemm::set_threads(threads);
     }
     std::fs::create_dir_all("bench_out")?;
 
-    let (steps, n_requests, rate_rps) = if fast_mode() { (8, 16, 8.0) } else { (50, 48, 4.0) };
+    let (steps, n_requests, rate_rps) = if smoke {
+        (2usize, 6usize, 12.0)
+    } else if fast_mode() {
+        (8, 16, 8.0)
+    } else {
+        (50, 48, 4.0)
+    };
+
+    let mut report = BenchReport::new("serving");
+    report.meta("family", "image");
+    report.meta("solver", "ddim");
+    report.meta("steps", steps);
+    report.meta("threads", threads);
+    report.meta("workers", workers);
+    report.meta("queue_depth", queue_depth);
+    report.meta("requests", n_requests);
+    report.meta("smoke", smoke);
 
     let mut table = Table::new(&[
         "policy", "served", "rejected", "dl miss", "throughput (req/s)", "p50 (s)", "p95 (s)",
         "mean qwait (s)", "mean exec (s)", "occupancy", "skip%",
     ]);
 
+    let mut no_cache_throughput = 0.0f64;
     for policy in [
         Policy::no_cache(),
         Policy::fora(2),
@@ -147,12 +173,13 @@ fn main() -> smoothcache::util::error::Result<()> {
             }
         };
         let m = coord.metrics();
+        let throughput = served as f64 / wall;
         table.row(&[
             policy.wire().to_string(),
             served.to_string(),
             rejected.to_string(),
             Metrics::get(&m.deadline_missed).to_string(),
-            format!("{:.2}", served as f64 / wall),
+            format!("{throughput:.2}"),
             format!("{:.3}", pct(0.5)),
             format!("{:.3}", pct(0.95)),
             format!("{:.3}", m.queue_wait.mean()),
@@ -165,6 +192,49 @@ fn main() -> smoothcache::util::error::Result<()> {
             policy.wire(),
             m.summary()
         );
+
+        // machine-readable per-policy metrics, keyed by the registry
+        // wire name so baselines diff cleanly across runs
+        let wire = policy.wire().to_string();
+        if wire == "no-cache" {
+            no_cache_throughput = throughput;
+        }
+        report.metric_tol(&format!("{wire}/throughput_rps"), throughput, "req/s", true, 80.0)?;
+        if served > 0 {
+            report.metric_tol(&format!("{wire}/p50_s"), pct(0.5), "s", false, 100.0)?;
+            report.metric_tol(&format!("{wire}/p95_s"), pct(0.95), "s", false, 100.0)?;
+        }
+        report.metric_tol(&format!("{wire}/qwait_mean_s"), m.queue_wait.mean(), "s", false, 150.0)?;
+        report.metric_tol(&format!("{wire}/exec_mean_s"), m.exec_latency.mean(), "s", false, 100.0)?;
+        report.metric_tol(
+            &format!("{wire}/step_mean_ms"),
+            m.step_latency.mean() * 1e3,
+            "ms",
+            false,
+            100.0,
+        )?;
+        let hits = Metrics::get(&m.plan_cache_hits) as f64;
+        let misses = Metrics::get(&m.plan_cache_misses) as f64;
+        let hit_rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
+        report.metric_tol(&format!("{wire}/plan_hit_rate"), hit_rate, "frac", true, 25.0)?;
+        report.metric_tol(&format!("{wire}/skip_pct"), skip * 100.0, "%", true, 5.0)?;
+        if no_cache_throughput > 0.0 {
+            report.metric_tol(
+                &format!("{wire}/speedup_vs_no_cache_x"),
+                throughput / no_cache_throughput,
+                "x",
+                true,
+                80.0,
+            )?;
+        }
+        report.metric_tol(&format!("{wire}/rejected"), rejected as f64, "req", false, 0.0)?;
+        report.metric_tol(
+            &format!("{wire}/dl_miss"),
+            Metrics::get(&m.deadline_missed) as f64,
+            "req",
+            false,
+            0.0,
+        )?;
         coord.shutdown();
     }
 
@@ -175,5 +245,9 @@ fn main() -> smoothcache::util::error::Result<()> {
     );
     table.print();
     std::fs::write("bench_out/e2e_serving.csv", table.to_csv())?;
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

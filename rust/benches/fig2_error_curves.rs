@@ -6,13 +6,21 @@
 //! Output: ASCII plots + `bench_out/fig2_<family>.csv` with columns
 //! step, branch_type, k, mean, ci95.
 //!
-//! SMOOTHCACHE_BENCH_FAST=1 trims steps and samples.
+//! SMOOTHCACHE_BENCH_FAST=1 trims steps and samples; `--smoke` shrinks
+//! to CI scale; `--json OUT` writes the machine-readable report
+//! (docs/benchmarks.md).
 
 use smoothcache::cache::{calibrate, paper_protocol};
 use smoothcache::model::Engine;
-use smoothcache::util::bench::{ascii_plot, fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{ascii_plot, fast_mode, Args, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
@@ -20,12 +28,19 @@ fn main() -> smoothcache::util::error::Result<()> {
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
 
+    let mut report = BenchReport::new("fig2");
+    report.meta("smoke", smoke);
+
     let mut ci_table = Table::new(&["family", "solver", "steps", "samples", "mean CI width (k=1)"]);
 
     for family in ["image", "audio", "video"] {
         engine.load_family(family)?;
         let mut cc = paper_protocol(family);
-        if fast_mode() {
+        if smoke {
+            // DPM++(3M) needs solver history, so keep at least 6 steps
+            cc.steps = cc.steps.min(6);
+            cc.num_samples = 2;
+        } else if fast_mode() {
             cc.steps = cc.steps.min(12);
             cc.num_samples = 3;
         } else {
@@ -33,11 +48,10 @@ fn main() -> smoothcache::util::error::Result<()> {
         }
         let t0 = std::time::Instant::now();
         let curves = calibrate(&engine, family, &cc)?;
+        let calib_s = t0.elapsed().as_secs_f64();
         eprintln!(
-            "[fig2] calibrated {family} ({} steps x {} samples) in {:.1}s",
-            cc.steps,
-            cc.num_samples,
-            t0.elapsed().as_secs_f64()
+            "[fig2] calibrated {family} ({} steps x {} samples) in {calib_s:.1}s",
+            cc.steps, cc.num_samples,
         );
 
         // CSV
@@ -79,7 +93,9 @@ fn main() -> smoothcache::util::error::Result<()> {
         );
 
         // the §3.3 observation: CI width predicts the pareto-front width
+        let mut widths = Vec::new();
         for bt in curves.branch_types() {
+            widths.push(curves.mean_ci_width(&bt));
             ci_table.row(&[
                 family.into(),
                 cc.solver.name().into(),
@@ -87,6 +103,11 @@ fn main() -> smoothcache::util::error::Result<()> {
                 cc.num_samples.to_string(),
                 format!("{:.5} ({bt})", curves.mean_ci_width(&bt)),
             ]);
+        }
+        if json_out.is_some() {
+            let mean_width = widths.iter().sum::<f64>() / widths.len().max(1) as f64;
+            report.metric_tol(&format!("{family}/mean_ci_width"), mean_width, "L1", false, 10.0)?;
+            report.metric_tol(&format!("{family}/calib_s"), calib_s, "s", false, 150.0)?;
         }
 
         // persist curves for reuse by other benches / the server
@@ -100,5 +121,9 @@ fn main() -> smoothcache::util::error::Result<()> {
     println!("Across-sample variability (paper §3.3: wider CI → narrower pareto front)");
     ci_table.print();
     std::fs::write("bench_out/fig2_ci_widths.csv", ci_table.to_csv())?;
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

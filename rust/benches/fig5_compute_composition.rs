@@ -1,17 +1,30 @@
 //! Fig. 5 reproduction: layer compute composition (MAC shares) of each
 //! candidate model, and the ">90% of compute is cacheable" observation.
+//!
+//! Flags: `--smoke` (accepted for roster uniformity — this bench is
+//! analytic and already instant) and `--json OUT` (machine-readable
+//! report, docs/benchmarks.md).
 
 use smoothcache::macs::{as_gmacs, cacheable_fraction, composition, forward_macs};
 use smoothcache::model::Manifest;
-use smoothcache::util::bench::Table;
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{Args, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin geometry");
     }
     std::fs::create_dir_all("bench_out")?;
     let (manifest, _) = Manifest::load_or_builtin(&dir)?;
+
+    let mut report = BenchReport::new("fig5");
+    report.meta("smoke", smoke);
 
     let mut table = Table::new(&["family", "component", "MAC share", "bar"]);
     let mut frac_table =
@@ -28,6 +41,15 @@ fn main() -> smoothcache::util::error::Result<()> {
             ]);
         }
         let frac = cacheable_fraction(fm);
+        // analytic quantities — any drift means the MAC model changed
+        report.metric_tol(&format!("{name}/cacheable_fraction"), frac, "frac", true, 0.1)?;
+        report.metric_tol(
+            &format!("{name}/forward_gmacs"),
+            as_gmacs(forward_macs(fm)),
+            "GMACs",
+            false,
+            0.1,
+        )?;
         frac_table.row(&[
             name.clone(),
             format!("{:.4}", as_gmacs(forward_macs(fm))),
@@ -42,5 +64,9 @@ fn main() -> smoothcache::util::error::Result<()> {
     frac_table.print();
     std::fs::write("bench_out/fig5_composition.csv", table.to_csv())?;
     std::fs::write("bench_out/fig5_cacheable_fraction.csv", frac_table.to_csv())?;
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

@@ -7,12 +7,17 @@
 //! * video — first/middle/last frame PGMs per schedule (Fig. 8)
 //!
 //! Everything lands under bench_out/qualitative/.
+//!
+//! Flags: `--smoke` (CI scale) and `--json OUT` (machine-readable
+//! report — for this qualitative bench the gated metric is the output
+//! artifact count per modality, docs/benchmarks.md).
 
 use smoothcache::cache::{calibrate, paper_protocol, CachePlan, PlanRef, Schedule};
 use smoothcache::model::{Cond, Engine};
 use smoothcache::pipeline::{generate, GenConfig};
 use smoothcache::tensor::Tensor;
-use smoothcache::util::bench::fast_mode;
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{fast_mode, Args};
 
 /// 8-bit PGM render of a [H, W] slice, normalized to the slice range.
 fn write_pgm(path: &str, data: &[f32], h: usize, w: usize) -> std::io::Result<()> {
@@ -36,6 +41,11 @@ fn channel0(latent: &Tensor, h: usize, w: usize, c: usize) -> Vec<f32> {
 }
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
@@ -44,11 +54,17 @@ fn main() -> smoothcache::util::error::Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let mut engine = Engine::open(dir)?;
 
+    let mut report = BenchReport::new("fig_qualitative");
+    report.meta("smoke", smoke);
+
     // ---------- image (Fig. 6) ----------
     engine.load_family("image")?;
     let fm = engine.family_manifest("image")?.clone();
     let mut cc = paper_protocol("image");
-    if fast_mode() {
+    if smoke {
+        cc.steps = 4;
+        cc.num_samples = 1;
+    } else if fast_mode() {
         cc.steps = 10;
         cc.num_samples = 2;
     }
@@ -63,6 +79,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         (format!("smooth-hi-a{a_hi:.2}"), s_hi),
     ];
     let sites = fm.branch_sites();
+    let mut image_files = 0usize;
     for (name, schedule) in &schedules {
         let plan = CachePlan::from_grouped(schedule, &sites)?;
         for class in [0i32, 3, 7] {
@@ -76,15 +93,21 @@ fn main() -> smoothcache::util::error::Result<()> {
             )?;
             let plane = channel0(&out.latent, 16, 16, 4);
             write_pgm(&format!("{out_dir}/image_{name}_class{class}.pgm"), &plane, 16, 16)?;
+            image_files += 1;
         }
         eprintln!("[qualitative] image {name}: done");
     }
+    report.metric_tol("image/files_written", image_files as f64, "files", true, 0.0)?;
 
     // ---------- audio (Fig. 7) ----------
     engine.load_family("audio")?;
     let fma = engine.family_manifest("audio")?.clone();
     let mut cca = paper_protocol("audio");
-    if fast_mode() {
+    if smoke {
+        // DPM++(3M) needs solver history, so smoke keeps 6 steps
+        cca.steps = 6;
+        cca.num_samples = 1;
+    } else if fast_mode() {
         cca.steps = 10;
         cca.num_samples = 2;
     }
@@ -99,6 +122,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     ];
     let prompt = Cond::Prompt((10..10 + fma.cond_len as i32).collect());
     let sites_a = fma.branch_sites();
+    let mut audio_files = 0usize;
     for (name, schedule) in &schedules_a {
         let plan = CachePlan::from_grouped(schedule, &sites_a)?;
         let cfg = GenConfig::new("audio", cca.solver, cca.steps).with_cfg(7.0).with_seed(7);
@@ -112,14 +136,19 @@ fn main() -> smoothcache::util::error::Result<()> {
             csv.push('\n');
         }
         std::fs::write(format!("{out_dir}/audio_{name}_spectrogram.csv"), csv)?;
+        audio_files += 1;
         eprintln!("[qualitative] audio {name}: done");
     }
+    report.metric_tol("audio/files_written", audio_files as f64, "files", true, 0.0)?;
 
     // ---------- video (Fig. 8) ----------
     engine.load_family("video")?;
     let fmv = engine.family_manifest("video")?.clone();
     let mut ccv = paper_protocol("video");
-    if fast_mode() {
+    if smoke {
+        ccv.steps = 4;
+        ccv.num_samples = 1;
+    } else if fast_mode() {
         ccv.steps = 8;
         ccv.num_samples = 2;
     }
@@ -132,6 +161,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     ];
     let vprompt = Cond::Prompt((20..20 + fmv.cond_len as i32).collect());
     let sites_v = fmv.branch_sites();
+    let mut video_files = 0usize;
     for (name, schedule) in &schedules_v {
         let plan = CachePlan::from_grouped(schedule, &sites_v)?;
         let cfg = GenConfig::new("video", ccv.solver, ccv.steps).with_cfg(7.0).with_seed(21);
@@ -143,10 +173,16 @@ fn main() -> smoothcache::util::error::Result<()> {
             let plane: Vec<f32> =
                 (0..64).map(|i| out.latent.data[start + i * 4]).collect();
             write_pgm(&format!("{out_dir}/video_{name}_{tag}.pgm"), &plane, 8, 8)?;
+            video_files += 1;
         }
         eprintln!("[qualitative] video {name}: done");
     }
+    report.metric_tol("video/files_written", video_files as f64, "files", true, 0.0)?;
 
     println!("qualitative outputs written to {out_dir}/");
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

@@ -11,7 +11,9 @@
 //! against the old string-keyed per-site map path (ISSUE 4).
 //!
 //! Flags: `--threads N` pins the pool for the per-entry sections
-//! (0 = auto; the sweep section always pins its own counts).
+//! (0 = auto; the sweep section always pins its own counts); `--smoke`
+//! shrinks everything to CI scale; `--json OUT` writes the
+//! machine-readable `BENCH_engine.json` report (docs/benchmarks.md).
 
 use std::time::Duration;
 
@@ -21,15 +23,21 @@ use smoothcache::model::{Cond, Engine};
 use smoothcache::pipeline::{generate, GenConfig, GenSession};
 use smoothcache::solvers::SolverKind;
 use smoothcache::tensor::{gemm, Tensor};
-use smoothcache::util::bench::{arg_usize, bench, fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{bench, fast_mode, Args, Table};
 use smoothcache::util::rng::Rng;
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    let cli_threads = args.usize("threads", 0)?;
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
-    let cli_threads = arg_usize("threads", 0);
     if cli_threads > 0 {
         gemm::set_threads(cli_threads);
     }
@@ -38,11 +46,21 @@ fn main() -> smoothcache::util::error::Result<()> {
     engine.load_family("image")?;
     let fm = engine.family_manifest("image")?.clone();
     let iters = if fast_mode() { 5 } else { 50 };
+    let gen_steps = if smoke { 2usize } else { 10 };
+
+    let mut report = BenchReport::new("engine");
+    report.meta("family", "image");
+    report.meta("solver", "ddim");
+    report.meta("steps", gen_steps);
+    report.meta("threads", cli_threads);
+    report.meta("workers", 2);
+    report.meta("smoke", smoke);
 
     let mut table = Table::new(&["operation", "batch", "mean (us)", "p95 (us)"]);
     let mut rng = Rng::new(1);
 
-    for &batch in &[1usize, 4, 8] {
+    let batches: &[usize] = if smoke { &[1] } else { &[1, 4, 8] };
+    for &batch in batches {
         engine.warmup("image", batch)?;
         let x = Tensor::randn(vec![batch, 16, 16, 4], &mut rng);
         let t = vec![0.5f32; batch];
@@ -104,10 +122,13 @@ fn main() -> smoothcache::util::error::Result<()> {
             format!("{:.0}", fw.mean_s * 1e6),
             format!("{:.0}", fw.p95_s * 1e6),
         ]);
+        if batch == 1 {
+            report.metric_tol("forward_b1_mean_us", fw.mean_s * 1e6, "us", false, 100.0)?;
+        }
     }
 
     // end-to-end generation micro
-    for &(steps, skip) in &[(10usize, false), (10, true)] {
+    for &(steps, skip) in &[(gen_steps, false), (gen_steps, true)] {
         let cond = Cond::Label(vec![1, 2, 3, 4]);
         let sites = fm.branch_sites();
         let plan = if skip {
@@ -126,6 +147,8 @@ fn main() -> smoothcache::util::error::Result<()> {
             format!("{:.0}", g.mean_s * 1e6),
             format!("{:.0}", g.p95_s * 1e6),
         ]);
+        let name = if skip { "generate_fora2_mean_us" } else { "generate_nocache_mean_us" };
+        report.metric_tol(name, g.mean_s * 1e6, "us", false, 100.0)?;
     }
 
     // ---- session-stepping overhead: one-shot driver vs manual steps ----
@@ -134,7 +157,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     // step-driven surface costs nothing measurable over the one-shot
     // loop it replaced.
     {
-        let sess_steps = 10usize;
+        let sess_steps = gen_steps;
         let sites = fm.branch_sites();
         let schedule = Schedule::fora(sess_steps, &fm.branch_types, 2);
         let plan = CachePlan::from_grouped(&schedule, &sites)?;
@@ -175,6 +198,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         );
         sess_table.print();
         std::fs::write("bench_out/perf_engine_session.csv", sess_table.to_csv())?;
+        report.metric_tol("session_overhead_x", stepped.mean_s / driver.mean_s, "x", false, 60.0)?;
     }
 
     let stats = engine.stats();
@@ -193,7 +217,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     // decision is one flat-array read. Walk a full 50-step plan both
     // ways and report decision-lookup throughput.
     {
-        let sched_steps = 50usize;
+        let sched_steps = if smoke { 8usize } else { 50 };
         let sites = fm.branch_sites();
         let schedule = Schedule::fora(sched_steps, &fm.branch_types, 2);
         let plan = CachePlan::from_grouped(&schedule, &sites)?;
@@ -257,6 +281,13 @@ fn main() -> smoothcache::util::error::Result<()> {
         );
         sched_table.print();
         std::fs::write("bench_out/perf_engine_sched.csv", sched_table.to_csv())?;
+        report.metric_tol(
+            "sched_speedup_dense_vs_map_x",
+            stringy.mean_s / dense.mean_s,
+            "x",
+            true,
+            80.0,
+        )?;
     }
 
     // ---- parallel-substrate sweep: single-request forward vs threads ----
@@ -268,7 +299,8 @@ fn main() -> smoothcache::util::error::Result<()> {
     let sweep_iters = if fast_mode() { 5 } else { 30 };
     let mut base_mean = 0.0f64;
     let mut mean_at = std::collections::HashMap::new();
-    for &nt in &[1usize, 2, 4, 8] {
+    let thread_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    for &nt in thread_counts {
         let s = gemm::with_threads(nt, || {
             bench(2, sweep_iters, || {
                 let _ = engine.forward("image", &x1, &t1, &cond1, None).unwrap();
@@ -292,12 +324,19 @@ fn main() -> smoothcache::util::error::Result<()> {
         "throughput at 4 threads vs 1 thread: {ratio4:.2}x (acceptance target >= 2x)"
     );
     std::fs::write("bench_out/perf_engine_threads.csv", sweep.to_csv())?;
+    report.metric_tol("threads_speedup_4t_v_1t_x", ratio4, "x", true, 60.0)?;
 
     // ---- queue decomposition: scheduler wait vs execution under a burst ----
     // A closed burst of compatible requests through the full coordinator
     // (batcher → shared work queue → executor pool): how much of each
     // request's latency is the scheduler's own queueing vs model time.
-    let (burst, qsteps) = if fast_mode() { (8usize, 4usize) } else { (24, 10) };
+    let (burst, qsteps) = if smoke {
+        (4usize, 2usize)
+    } else if fast_mode() {
+        (8, 4)
+    } else {
+        (24, 10)
+    };
     let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
     cfg.preload = vec!["image".into()];
     cfg.max_wait = Duration::from_millis(5);
@@ -349,6 +388,14 @@ fn main() -> smoothcache::util::error::Result<()> {
     );
     qtable.print();
     std::fs::write("bench_out/perf_engine_queue.csv", qtable.to_csv())?;
+    report.metric_tol("queue_wait_mean_ms", m.queue_wait.mean() * 1e3, "ms", false, 150.0)?;
+    report.metric_tol("exec_mean_ms", m.exec_latency.mean() * 1e3, "ms", false, 100.0)?;
+    report.metric_tol("e2e_mean_ms", m.e2e_latency.mean() * 1e3, "ms", false, 100.0)?;
     coord.shutdown();
+
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

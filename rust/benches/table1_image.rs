@@ -7,7 +7,9 @@
 //! substitute), IS-proxy — all against the blob-corpus reference set
 //! (DESIGN.md section 3). Mean ± std over trials.
 //!
-//! SMOOTHCACHE_BENCH_FAST=1 trims steps/samples/trials.
+//! SMOOTHCACHE_BENCH_FAST=1 trims steps/samples/trials; `--smoke`
+//! shrinks further to CI scale; `--json OUT` writes the
+//! machine-readable report for the first step count (docs/benchmarks.md).
 
 use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef, Schedule};
 use smoothcache::experiments::{eval_conds, fmt_pm, generate_set, image_corpus, mean_std, EvalConfig};
@@ -15,15 +17,21 @@ use smoothcache::macs::{as_gmacs, generation_macs};
 use smoothcache::model::Engine;
 use smoothcache::quality::{ffd, is_proxy, lpips_proxy, psnr, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{arg_usize, fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{fast_mode, Args, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = args.usize("threads", 0)?;
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
-    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
-    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("image")?;
@@ -31,11 +39,22 @@ fn main() -> smoothcache::util::error::Result<()> {
     let bts = fm.branch_types.clone();
     let sites = fm.branch_sites();
 
-    let (steps_list, n_samples, trials, calib_samples) = if fast_mode() {
+    let (steps_list, n_samples, trials, calib_samples) = if smoke {
+        (vec![4usize], 4usize, 1usize, 1usize)
+    } else if fast_mode() {
         (vec![10], 16, 1, 2)
     } else {
         (vec![50, 30], 24, 2, 10)
     };
+
+    let mut report = BenchReport::new("table1_image");
+    report.meta("family", "image");
+    report.meta("solver", "ddim");
+    report.meta("steps", steps_list[0]);
+    report.meta("samples", n_samples);
+    report.meta("trials", trials);
+    report.meta("threads", threads);
+    report.meta("smoke", smoke);
 
     let fx = FeatureExtractor::new(0xF1D, 12);
     let fx_s = FeatureExtractor::new(0x5F1D, 12); // sFID-analog seed
@@ -65,21 +84,19 @@ fn main() -> smoothcache::util::error::Result<()> {
             let _ = generate_set(&engine, &ec, &conds, PlanRef::Plan(&warm_plan))?;
         }
 
-        // schedule roster for this step count
-        let mut roster: Vec<(String, Schedule)> = vec![
-            ("No Cache".into(), Schedule::no_cache(steps, &bts)),
-            ("FORA (n=2)".into(), Schedule::fora(steps, &bts, 2)),
-            ("FORA (n=3)".into(), Schedule::fora(steps, &bts, 3)),
-            ("L2C-proxy".into(), Schedule::alternate(steps, &bts)),
+        // schedule roster for this step count; the slug is the stable
+        // metric key (keyed by the *target* skip fraction, not the
+        // calibrated alpha, so report names survive recalibration)
+        let mut roster: Vec<(&'static str, String, Schedule)> = vec![
+            ("no_cache", "No Cache".into(), Schedule::no_cache(steps, &bts)),
+            ("fora2", "FORA (n=2)".into(), Schedule::fora(steps, &bts, 2)),
+            ("fora3", "FORA (n=3)".into(), Schedule::fora(steps, &bts, 3)),
+            ("l2c", "L2C-proxy".into(), Schedule::alternate(steps, &bts)),
         ];
         // Ours at compute matched to FORA n=2 / n=3, plus a conservative point
-        for target in [0.5, 2.0 / 3.0] {
+        for (slug, target) in [("ours_s50", 0.5), ("ours_s67", 2.0 / 3.0), ("ours_s20", 0.2)] {
             let (alpha, s) = curves.alpha_for_skip_fraction(target, &bts);
-            roster.push((format!("Ours (a={alpha:.3})"), s));
-        }
-        {
-            let (alpha, s) = curves.alpha_for_skip_fraction(0.2, &bts);
-            roster.push((format!("Ours (a={alpha:.3})"), s));
+            roster.push((slug, format!("Ours (a={alpha:.3})"), s));
         }
 
         // per-trial paired no-cache reference sets (for the drift columns:
@@ -97,8 +114,9 @@ fn main() -> smoothcache::util::error::Result<()> {
             refs.push((ec, conds, set, stats));
         }
 
+        let emit_metrics = steps == steps_list[0] && json_out.is_some();
         let mut rows: Vec<(f64, Vec<String>)> = Vec::new();
-        for (name, schedule) in &roster {
+        for (slug, name, schedule) in &roster {
             schedule.validate().unwrap();
             let plan = CachePlan::from_grouped(schedule, &sites)?;
             let gmacs = as_gmacs(generation_macs(&fm, schedule, true)); // CFG doubles
@@ -127,6 +145,29 @@ fn main() -> smoothcache::util::error::Result<()> {
             let (sm, ss) = mean_std(&sffds);
             let (im, is_) = mean_std(&iss);
             let (lm, _) = mean_std(&lats);
+            if emit_metrics {
+                report.metric_tol(&format!("{slug}/ffd"), fm_, "score", false, 2.0)?;
+                report.metric_tol(&format!("{slug}/sffd"), sm, "score", false, 2.0)?;
+                report.metric_tol(&format!("{slug}/is_proxy"), im, "score", true, 2.0)?;
+                report.metric_tol(&format!("{slug}/gmacs"), gmacs, "GMACs", false, 0.1)?;
+                report.metric_tol(&format!("{slug}/latency_s"), lm, "s", false, 100.0)?;
+                report.metric_tol(
+                    &format!("{slug}/skip_pct"),
+                    schedule.skip_fraction() * 100.0,
+                    "%",
+                    true,
+                    1.0,
+                )?;
+                if !drifts.is_empty() {
+                    report.metric_tol(&format!("{slug}/lpips"), mean_std(&drifts).0, "score", false, 5.0)?;
+                    let p = mean_std(&psnrs).0;
+                    // psnr is +inf for bitwise-identical sets; a report
+                    // only holds finite values
+                    if p.is_finite() {
+                        report.metric_tol(&format!("{slug}/psnr"), p, "dB", true, 5.0)?;
+                    }
+                }
+            }
             let drift_cell = if drifts.is_empty() {
                 "-".to_string()
             } else {
@@ -166,5 +207,9 @@ fn main() -> smoothcache::util::error::Result<()> {
     println!("\nTable 1 — DiT image family, DDIM (paper: DiT-XL-256x256; ours: blob-DiT proxy)");
     table.print();
     std::fs::write("bench_out/table1_image.csv", table.to_csv())?;
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

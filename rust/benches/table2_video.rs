@@ -4,6 +4,9 @@
 //! ~18%). LPIPS / PSNR / SSIM are computed against the no-cache
 //! generations (the paper's protocol); VBench is the composite proxy
 //! from DESIGN.md section 3.
+//!
+//! Flags: `--threads N`, `--smoke` (CI scale), `--json OUT`
+//! (machine-readable report, docs/benchmarks.md).
 
 use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef};
 use smoothcache::experiments::{
@@ -13,15 +16,21 @@ use smoothcache::macs::{as_gmacs, generation_macs};
 use smoothcache::model::Engine;
 use smoothcache::quality::{lpips_proxy, psnr, ssim, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{arg_usize, fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{fast_mode, Args, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = args.usize("threads", 0)?;
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
-    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
-    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("video")?;
@@ -29,10 +38,24 @@ fn main() -> smoothcache::util::error::Result<()> {
     let bts = fm.branch_types.clone();
     let sites = fm.branch_sites();
 
-    let (steps, n_samples, trials, calib_samples) =
-        if fast_mode() { (8, 8, 1, 2) } else { (30, 16, 1, 10) };
+    let (steps, n_samples, trials, calib_samples) = if smoke {
+        (4usize, 4usize, 1usize, 1usize)
+    } else if fast_mode() {
+        (8, 8, 1, 2)
+    } else {
+        (30, 16, 1, 10)
+    };
     let solver = SolverKind::RectifiedFlow;
     let cfg_scale = 7.0f32;
+
+    let mut report = BenchReport::new("table2_video");
+    report.meta("family", "video");
+    report.meta("solver", "rectified-flow");
+    report.meta("steps", steps);
+    report.meta("samples", n_samples);
+    report.meta("trials", trials);
+    report.meta("threads", threads);
+    report.meta("smoke", smoke);
 
     eprintln!("[table2] calibrating rf-{steps} (conditional, cfg=7) ...");
     let cc = CalibrationConfig {
@@ -54,12 +77,13 @@ fn main() -> smoothcache::util::error::Result<()> {
         "Latency (s)", "skip%",
     ]);
 
-    // reference (no-cache) sets per trial
+    // reference (no-cache) sets per trial; the slug is the stable
+    // metric key (keyed by target skip fraction, not calibrated alpha)
     let mut rows: Vec<Vec<String>> = Vec::new();
     let roster = [
-        ("No Cache".to_string(), None),
-        (format!("Ours (a={a1:.3})"), Some(&s1)),
-        (format!("Ours (a={a2:.3})"), Some(&s2)),
+        ("no_cache", "No Cache".to_string(), None),
+        ("ours_s15", format!("Ours (a={a1:.3})"), Some(&s1)),
+        ("ours_s22", format!("Ours (a={a2:.3})"), Some(&s2)),
     ];
 
     // warmup compile (batch 4 + cfg doubling → batch 8 executables)
@@ -85,7 +109,7 @@ fn main() -> smoothcache::util::error::Result<()> {
         refs.push((ec, conds, set, stats));
     }
 
-    for (name, sched) in &roster {
+    for (slug, name, sched) in &roster {
         if let Some(s) = sched {
             s.validate().unwrap();
         }
@@ -114,6 +138,27 @@ fn main() -> smoothcache::util::error::Result<()> {
         }
         let (vm, vs) = mean_std(&vb);
         let (lm, _) = mean_std(&lat);
+        if json_out.is_some() {
+            report.metric_tol(&format!("{slug}/vbench"), vm, "score", true, 2.0)?;
+            report.metric_tol(&format!("{slug}/gmacs"), gmacs, "GMACs", false, 0.1)?;
+            report.metric_tol(&format!("{slug}/latency_s"), lm, "s", false, 100.0)?;
+            report.metric_tol(
+                &format!("{slug}/skip_pct"),
+                schedule_or_nocache.skip_fraction() * 100.0,
+                "%",
+                true,
+                1.0,
+            )?;
+            if !lp.is_empty() {
+                report.metric_tol(&format!("{slug}/lpips"), mean_std(&lp).0, "score", false, 5.0)?;
+                let p = mean_std(&ps).0;
+                // psnr is +inf for bitwise-identical sets
+                if p.is_finite() {
+                    report.metric_tol(&format!("{slug}/psnr"), p, "dB", true, 5.0)?;
+                }
+                report.metric_tol(&format!("{slug}/ssim"), mean_std(&ss_).0, "score", true, 2.0)?;
+            }
+        }
         let lpips_cell = if lp.is_empty() {
             "-".to_string()
         } else {
@@ -151,5 +196,9 @@ fn main() -> smoothcache::util::error::Result<()> {
     println!("\nTable 2 — video family, Rectified Flow {steps} steps, CFG 7.0 (paper: OpenSora v1.2)");
     table.print();
     std::fs::write("bench_out/table2_video.csv", table.to_csv())?;
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

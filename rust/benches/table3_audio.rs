@@ -4,6 +4,9 @@
 //! Metrics per suite: FD-proxy (vs the harmonic reference corpus),
 //! KL-proxy and CLAP-proxy (vs paired no-cache generations) — DESIGN.md
 //! section 3 documents each substitution.
+//!
+//! Flags: `--threads N`, `--smoke` (CI scale), `--json OUT`
+//! (machine-readable report, docs/benchmarks.md).
 
 use smoothcache::cache::{calibrate, CachePlan, CalibrationConfig, PlanRef, Schedule};
 use smoothcache::experiments::{
@@ -13,15 +16,21 @@ use smoothcache::macs::{as_gmacs, generation_macs};
 use smoothcache::model::Engine;
 use smoothcache::quality::{clap_proxy, ffd, kl_proxy, FeatureExtractor};
 use smoothcache::solvers::SolverKind;
-use smoothcache::util::bench::{arg_usize, fast_mode, Table};
+use smoothcache::util::bench::report::BenchReport;
+use smoothcache::util::bench::{fast_mode, Args, Table};
 
 fn main() -> smoothcache::util::error::Result<()> {
+    let args = Args::parse();
+    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
+    let threads = args.usize("threads", 0)?;
+    let smoke = args.flag("smoke")?;
+    let json_out = args.str_opt("json")?;
+    args.finish()?;
+
     let dir = smoothcache::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: no artifacts in {dir:?} — using the builtin reference backend");
     }
-    // `--threads N` pins the GEMM pool per evaluation (0 = auto)
-    let threads = arg_usize("threads", 0);
     std::fs::create_dir_all("bench_out")?;
     let mut engine = Engine::open(dir)?;
     engine.load_family("audio")?;
@@ -29,9 +38,24 @@ fn main() -> smoothcache::util::error::Result<()> {
     let bts = fm.branch_types.clone();
     let sites = fm.branch_sites();
 
-    let (steps, n_samples, calib_samples) = if fast_mode() { (10, 8, 2) } else { (100, 12, 10) };
+    // DPM-Solver++(3M) needs solver history, so smoke keeps 6 steps
+    let (steps, n_samples, calib_samples) = if smoke {
+        (6usize, 4usize, 1usize)
+    } else if fast_mode() {
+        (10, 8, 2)
+    } else {
+        (100, 12, 10)
+    };
     let solver = SolverKind::DpmPP3M { sde: true };
     let cfg_scale = 7.0f32;
+
+    let mut report = BenchReport::new("table3_audio");
+    report.meta("family", "audio");
+    report.meta("solver", "dpmpp3m-sde");
+    report.meta("steps", steps);
+    report.meta("samples", n_samples);
+    report.meta("threads", threads);
+    report.meta("smoke", smoke);
 
     eprintln!("[table3] calibrating dpmpp3m-sde-{steps} ...");
     let cc = CalibrationConfig {
@@ -49,6 +73,8 @@ fn main() -> smoothcache::util::error::Result<()> {
     let corpus = audio_corpus(128, 0xFEED);
     let suites: [(&str, u64); 3] =
         [("AudioCaps-proxy", 101), ("MusicCaps-proxy", 202), ("SongDescriber-proxy", 303)];
+    // stable per-suite metric key prefixes
+    let suite_slugs = ["audiocaps", "musiccaps", "songdescriber"];
 
     // warmup (batch 4 × CFG → batch 8 executables)
     {
@@ -72,10 +98,11 @@ fn main() -> smoothcache::util::error::Result<()> {
     let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&hdr_refs);
 
-    let roster: Vec<(String, Schedule)> = vec![
-        ("No Cache".into(), Schedule::no_cache(steps, &bts)),
-        (format!("Ours (a={a1:.3})"), s1),
-        (format!("Ours (a={a2:.3})"), s2),
+    // slugs keyed by target skip fraction, not calibrated alpha
+    let roster: Vec<(&'static str, String, Schedule)> = vec![
+        ("no_cache", "No Cache".into(), Schedule::no_cache(steps, &bts)),
+        ("ours_s20", format!("Ours (a={a1:.3})"), s1),
+        ("ours_s37", format!("Ours (a={a2:.3})"), s2),
     ];
 
     // reference (no-cache) sets per suite, paired seeds
@@ -92,13 +119,13 @@ fn main() -> smoothcache::util::error::Result<()> {
         refs.push((ec, conds, set, stats));
     }
 
-    for (name, schedule) in &roster {
+    for (slug, name, schedule) in &roster {
         schedule.validate().unwrap();
         let plan = CachePlan::from_grouped(schedule, &sites)?;
         let gmacs = as_gmacs(generation_macs(&fm, schedule, true));
         let mut row = vec![name.clone()];
         let mut lats = Vec::new();
-        for (ec, conds, ref_set, ref_stats) in &refs {
+        for (si, (ec, conds, ref_set, ref_stats)) in refs.iter().enumerate() {
             let (set, stats) = if schedule.skip_fraction() == 0.0 {
                 (ref_set.clone(), ref_stats.clone())
             } else {
@@ -107,12 +134,29 @@ fn main() -> smoothcache::util::error::Result<()> {
             let fd = ffd(&fx, &corpus, &set);
             let kl = kl_proxy(&fx, ref_set, &set, 10);
             let clap = clap_proxy(&fx, ref_set, &set);
+            if json_out.is_some() {
+                let suite = suite_slugs[si];
+                report.metric_tol(&format!("{slug}/{suite}/fd"), fd, "score", false, 2.0)?;
+                report.metric_tol(&format!("{slug}/{suite}/kl"), kl, "nats", false, 10.0)?;
+                report.metric_tol(&format!("{slug}/{suite}/clap"), clap, "score", true, 2.0)?;
+            }
             row.push(fmt_pm(fd, 0.0, 3));
             row.push(fmt_pm(kl, 0.0, 6));
             row.push(fmt_pm(clap, 0.0, 6));
             lats.push(stats.per_sample_seconds);
         }
         let (lm, _) = mean_std(&lats);
+        if json_out.is_some() {
+            report.metric_tol(&format!("{slug}/gmacs"), gmacs, "GMACs", false, 0.1)?;
+            report.metric_tol(&format!("{slug}/latency_s"), lm, "s", false, 100.0)?;
+            report.metric_tol(
+                &format!("{slug}/skip_pct"),
+                schedule.skip_fraction() * 100.0,
+                "%",
+                true,
+                1.0,
+            )?;
+        }
         row.push(format!("{gmacs:.2}"));
         row.push(format!("{lm:.3}"));
         row.push(format!("{:.0}%", schedule.skip_fraction() * 100.0));
@@ -126,5 +170,9 @@ fn main() -> smoothcache::util::error::Result<()> {
     );
     table.print();
     std::fs::write("bench_out/table3_audio.csv", table.to_csv())?;
+    if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
     Ok(())
 }

@@ -1,0 +1,57 @@
+//! bench_diff — the regression gate over `BENCH_<area>.json` files.
+//!
+//! Usage: `bench_diff BASELINE.json CANDIDATE.json [--tol PCT]`
+//!
+//! Compares a candidate bench report against a committed baseline under
+//! per-metric tolerance thresholds (the baseline's embedded `tol_pct`
+//! wins; `--tol` sets the default band, 10% when omitted), prints a
+//! readable comparison table, and exits:
+//!
+//! * `0` — gate passed (every metric within tolerance, or improved);
+//! * `1` — at least one metric regressed beyond tolerance;
+//! * `2` — structural failure: unreadable file, schema violation,
+//!   baseline metric missing from the candidate, or unit/direction/area
+//!   mismatch.
+//!
+//! `scripts/verify.sh` and CI run this against `BENCH_baseline/` after
+//! the smoke benches; see docs/benchmarks.md for the refresh workflow.
+
+use smoothcache::util::bench::report::{diff, BenchReport};
+use smoothcache::util::bench::Args;
+use smoothcache::util::error::Result;
+
+const USAGE: &str = "usage: bench_diff BASELINE.json CANDIDATE.json [--tol PCT]";
+
+fn run() -> Result<i32> {
+    let args = Args::parse();
+    let tol = args.f64("tol", 10.0)?;
+    let pos = args.positional();
+    args.finish()?;
+    let [base_path, cand_path] = match pos.as_slice() {
+        [b, c] => [b.clone(), c.clone()],
+        _ => smoothcache::bail!("expected exactly two report paths, got {}\n{USAGE}", pos.len()),
+    };
+    let base = BenchReport::load(&base_path)?;
+    let cand = BenchReport::load(&cand_path)?;
+    let d = diff(&base, &cand, tol);
+    println!("bench_diff: area {:?}, baseline {base_path}, candidate {cand_path}", base.area);
+    print!("{}", d.to_table().to_string());
+    println!("{}", d.summary());
+    if d.hard_errors() > 0 {
+        Ok(2)
+    } else if d.regressions() > 0 {
+        Ok(1)
+    } else {
+        Ok(0)
+    }
+}
+
+fn main() {
+    match run() {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("bench_diff: {e}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,477 @@
+//! Benchmark harness (substrate; no criterion offline).
+//!
+//! Every `[[bench]]` target in this repo uses `harness = false` and this
+//! module: warmup, timed iterations, robust statistics, aligned table
+//! printing, a typed argv parser ([`Args`]), and the machine-readable
+//! [`report`] layer (`BENCH_<area>.json` trajectory files plus the
+//! `bench_diff` regression gate — docs/benchmarks.md).
+//!
+//! Run-size tiers: `SMOOTHCACHE_BENCH_FAST=1` trims sample counts for
+//! quick local runs; the `--smoke` flag (every bench target accepts it)
+//! implies fast mode *and* shrinks the workload itself (steps, batch,
+//! roster) to CI-seconds scale so the full bench matrix can run — and
+//! emit its JSON trajectory — inside `scripts/verify.sh`.
+
+pub mod report;
+
+use crate::util::error::Result;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: xs[0],
+            max_s: xs[n - 1],
+            p50_s: pct(0.50),
+            p95_s: pct(0.95),
+            p99_s: pct(0.99),
+        }
+    }
+}
+
+/// Fast mode trims warmup/iteration counts: `SMOOTHCACHE_BENCH_FAST=1`
+/// or the `--smoke` flag (which additionally shrinks the workload —
+/// see [`smoke_mode`]).
+pub fn fast_mode() -> bool {
+    std::env::var("SMOOTHCACHE_BENCH_FAST").map(|v| v == "1").unwrap_or(false) || smoke_mode()
+}
+
+/// True when the bench binary was invoked with `--smoke`: the tiny
+/// CI-scale configuration (2-ish steps, one family, minimal rosters)
+/// that `scripts/verify.sh` and `tests/bench_smoke.rs` run. Implies
+/// [`fast_mode`].
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Typed argv parser for `harness = false` bench binaries and the
+/// `bench_diff` tool.
+///
+/// Grammar: `--name value`, `--name=value`, bare `--name` presence
+/// flags, and positional operands. Unlike the pre-PR-6 `arg_usize`
+/// free function — which silently returned the default on a malformed
+/// value and ignored typos — every failure mode here is a typed
+/// [`Error`](crate::util::error::Error):
+///
+/// * malformed value (`--threads abc`) — error naming flag and value;
+/// * duplicate flag (`--threads 1 --threads=2`) — error;
+/// * bare flag given a value (`--smoke=1`) or value flag left bare —
+///   error;
+/// * unknown/unconsumed arguments — error from [`Args::finish`]
+///   (cargo's own `--bench` injection is whitelisted).
+///
+/// Accessors mark their tokens consumed; call [`Args::finish`] last.
+pub struct Args {
+    argv: Vec<String>,
+    used: std::cell::RefCell<Vec<bool>>,
+}
+
+impl Args {
+    /// Parse the process argv (minus the binary name).
+    pub fn parse() -> Args {
+        Args::from_vec(std::env::args().skip(1).collect())
+    }
+
+    /// Build from an explicit token list (tests).
+    pub fn from_vec(argv: Vec<String>) -> Args {
+        let used = std::cell::RefCell::new(vec![false; argv.len()]);
+        Args { argv, used }
+    }
+
+    /// Locate `--name`, marking its tokens consumed. Only a
+    /// value-taking accessor consumes the following token (so a bare
+    /// presence flag next to a positional operand never swallows it).
+    /// Returns the value (`Some` for `--name v` / `--name=v`, `None`
+    /// for a bare occurrence); outer `None` when absent. Errors on
+    /// duplicates.
+    fn find(&self, name: &str, wants_value: bool) -> Result<Option<Option<String>>> {
+        let flag = format!("--{name}");
+        let prefix = format!("--{name}=");
+        let mut found: Option<Option<String>> = None;
+        let mut used = self.used.borrow_mut();
+        let mut i = 0;
+        while i < self.argv.len() {
+            let a = &self.argv[i];
+            let hit = if *a == flag {
+                used[i] = true;
+                // `--name value`: the next token is the value unless it
+                // is itself a flag (leading `--`; a single `-` may open
+                // a negative number)
+                match self.argv.get(i + 1) {
+                    Some(v) if wants_value && !v.starts_with("--") => {
+                        used[i + 1] = true;
+                        i += 1;
+                        Some(Some(v.clone()))
+                    }
+                    _ => Some(None),
+                }
+            } else if let Some(rest) = a.strip_prefix(&prefix) {
+                used[i] = true;
+                Some(Some(rest.to_string()))
+            } else {
+                None
+            };
+            if let Some(v) = hit {
+                crate::ensure!(found.is_none(), "duplicate flag --{name}");
+                found = Some(v);
+            }
+            i += 1;
+        }
+        Ok(found)
+    }
+
+    /// `--name` as a bare presence flag. Errors if it was given a value.
+    pub fn flag(&self, name: &str) -> Result<bool> {
+        match self.find(name, false)? {
+            None => Ok(false),
+            Some(None) => Ok(true),
+            Some(Some(v)) => Err(crate::err!("flag --{name} takes no value (got {v:?})")),
+        }
+    }
+
+    /// `--name VALUE` as a string, if present. Errors if left bare.
+    pub fn str_opt(&self, name: &str) -> Result<Option<String>> {
+        match self.find(name, true)? {
+            None => Ok(None),
+            Some(Some(v)) => Ok(Some(v)),
+            Some(None) => Err(crate::err!("missing value for --{name}")),
+        }
+    }
+
+    /// `--name N` as a usize, with a default when absent. A present but
+    /// unparsable value is an error, not the default.
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.str_opt(name)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| crate::err!("invalid value for --{name}: {v:?} (expected an unsigned integer)")),
+        }
+    }
+
+    /// `--name X` as an f64, with a default when absent. Non-finite
+    /// values (`nan`, `inf`) are rejected — every consumer here is a
+    /// threshold or knob where they would poison comparisons.
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.str_opt(name)? {
+            None => Ok(default),
+            Some(v) => {
+                let x: f64 = v
+                    .parse()
+                    .map_err(|_| crate::err!("invalid value for --{name}: {v:?} (expected a number)"))?;
+                crate::ensure!(x.is_finite(), "invalid value for --{name}: {v:?} (must be finite)");
+                Ok(x)
+            }
+        }
+    }
+
+    /// Remaining non-flag tokens, in order, marked consumed. Call after
+    /// every flag accessor (a value-bearing flag's operand would
+    /// otherwise be misread as positional).
+    pub fn positional(&self) -> Vec<String> {
+        let mut used = self.used.borrow_mut();
+        let mut out = Vec::new();
+        for (i, a) in self.argv.iter().enumerate() {
+            if !used[i] && !a.starts_with("--") {
+                used[i] = true;
+                out.push(a.clone());
+            }
+        }
+        out
+    }
+
+    /// Error on any argument no accessor consumed. Cargo passes
+    /// `--bench` to `harness = false` targets under `cargo bench`, so a
+    /// bare `--bench` is tolerated; everything else unknown fails.
+    pub fn finish(&self) -> Result<()> {
+        let used = self.used.borrow();
+        for (i, a) in self.argv.iter().enumerate() {
+            if used[i] || a == "--bench" {
+                continue;
+            }
+            if a.starts_with("--") {
+                crate::bail!("unknown flag {a}");
+            }
+            crate::bail!("unexpected argument {a:?}");
+        }
+        Ok(())
+    }
+}
+
+/// One-flag convenience over [`Args`] with the historical `arg_usize`
+/// name: parse `--name N` from this binary's argv. Malformed or
+/// duplicated values are typed errors (they used to silently fall back
+/// to the default); unknown flags are diagnosed only by the full
+/// [`Args`] workflow (`parse` → accessors → `finish`), which the bench
+/// targets use.
+pub fn arg_usize(name: &str, default: usize) -> Result<usize> {
+    Args::parse().usize(name, default)
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    let (warmup, iters) = if fast_mode() {
+        (warmup.min(1), iters.clamp(1, 3))
+    } else {
+        (warmup, iters)
+    };
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Simple stopwatch for one-shot timings inside bench tables.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Aligned text table, used by every bench to print paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+
+    /// CSV for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render a series as a crude ASCII plot (for figure benches).
+pub fn ascii_plot(title: &str, series: &[(String, Vec<f64>)], height: usize) -> String {
+    let all: Vec<f64> = series.iter().flat_map(|(_, ys)| ys.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("{title}\n(empty)\n");
+    }
+    let (lo, hi) = all.iter().fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+    let span = (hi - lo).max(1e-12);
+    let width = series.iter().map(|(_, ys)| ys.len()).max().unwrap();
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (x, &y) in ys.iter().enumerate() {
+            let r = (((y - lo) / span) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - r][x] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}  [min={lo:.4}, max={hi:.4}]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.n, 100);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+        assert!(s.p95_s <= s.p99_s && s.p99_s <= s.max_s);
+        assert!((s.mean_s - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0;
+        std::env::remove_var("SMOOTHCACHE_BENCH_FAST");
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn arg_usize_falls_back_to_default() {
+        // the test harness argv carries no such flag
+        assert_eq!(arg_usize("definitely-not-a-flag", 7).unwrap(), 7);
+    }
+
+    fn args(toks: &[&str]) -> Args {
+        Args::from_vec(toks.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn args_happy_path() {
+        let a = args(&["--threads", "4", "--json=out.json", "--smoke", "base", "cand"]);
+        assert_eq!(a.usize("threads", 0).unwrap(), 4);
+        assert_eq!(a.str_opt("json").unwrap().as_deref(), Some("out.json"));
+        assert!(a.flag("smoke").unwrap());
+        assert!(!a.flag("quiet").unwrap());
+        assert_eq!(a.positional(), vec!["base", "cand"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn args_malformed_value_is_error_not_default() {
+        let a = args(&["--threads", "abc"]);
+        let e = a.usize("threads", 3).unwrap_err();
+        assert!(e.to_string().contains("--threads"), "{e}");
+    }
+
+    #[test]
+    fn args_duplicate_flag_is_error() {
+        let a = args(&["--threads", "1", "--threads=2"]);
+        let e = a.usize("threads", 0).unwrap_err();
+        assert!(e.to_string().contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn args_unknown_flag_fails_finish_but_cargo_bench_is_tolerated() {
+        let a = args(&["--bench", "--typo-flag"]);
+        let e = a.finish().unwrap_err();
+        assert!(e.to_string().contains("--typo-flag"), "{e}");
+        args(&["--bench"]).finish().unwrap();
+    }
+
+    #[test]
+    fn args_value_flag_left_bare_is_error() {
+        let a = args(&["--json"]);
+        assert!(a.str_opt("json").unwrap_err().to_string().contains("missing value"));
+    }
+
+    #[test]
+    fn args_bare_flag_with_value_is_error() {
+        let a = args(&["--smoke=1"]);
+        assert!(a.flag("smoke").unwrap_err().to_string().contains("takes no value"));
+    }
+
+    #[test]
+    fn args_bare_flag_does_not_swallow_positionals() {
+        let a = args(&["--smoke", "base.json"]);
+        assert!(a.flag("smoke").unwrap());
+        assert_eq!(a.positional(), vec!["base.json"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn args_f64_rejects_non_finite() {
+        assert!(args(&["--tol", "nan"]).f64("tol", 1.0).unwrap_err().to_string().contains("finite"));
+        assert!((args(&["--tol", "2.5"]).f64("tol", 1.0).unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_alignment_and_csv() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["short".into(), "1".into()]);
+        t.row(&["a-much-longer-name".into(), "2.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("a-much-longer-name"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("name,value"));
+    }
+
+    #[test]
+    fn ascii_plot_contains_series() {
+        let p = ascii_plot("t", &[("a".into(), vec![0.0, 1.0, 0.5])], 5);
+        assert!(p.contains('*'));
+        assert!(p.contains("a"));
+    }
+}

@@ -1,0 +1,620 @@
+//! Machine-readable benchmark reports: the `BENCH_<area>.json`
+//! trajectory layer (docs/benchmarks.md, ADR-005).
+//!
+//! Every bench target serialises one [`BenchReport`] — run metadata
+//! (policy, family, solver, steps, threads, workers, smoke) plus a flat
+//! list of named [`Metric`]s — through `util::json`, so the repo's
+//! performance claims (throughput, queue-wait vs execute decomposition,
+//! step_mean, plan hit-rate, speedup-vs-no-cache, quality scores) are
+//! diffable artifacts instead of human tables. [`diff`] compares two
+//! reports under per-metric tolerance thresholds and backs the
+//! `bench_diff` binary that gates `scripts/verify.sh` and CI against
+//! the committed `BENCH_baseline/` snapshot.
+//!
+//! Invariants enforced loudly (tests/bench_report.rs):
+//! * metric values and tolerances are finite — NaN/inf are rejected at
+//!   insert, at save, and at load (JSON `null` never round-trips into
+//!   a silent 0);
+//! * metric names are unique within a report;
+//! * a diff treats a metric present in the baseline but missing from
+//!   the candidate as a hard error, never a silent pass.
+
+use super::Table;
+use crate::util::error::Result;
+use crate::util::json::{parse, Json};
+
+/// Schema tag written into every report file; [`BenchReport::from_json`]
+/// rejects anything else so format drift fails loudly.
+pub const SCHEMA: &str = "smoothcache-bench/v1";
+
+/// One named measurement inside a [`BenchReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    /// Stable identifier, unique within the report. Convention:
+    /// `scope/stat` (e.g. `fora:2/throughput_rps`) — names are matched
+    /// exactly by [`diff`], so keep them independent of run-derived
+    /// values like calibrated alphas.
+    pub name: String,
+    /// Finite measurement value (enforced by [`BenchReport::push`]).
+    pub value: f64,
+    /// Human-readable unit (`req/s`, `us`, `%`, `x`, `score`, …).
+    pub unit: String,
+    /// Direction: `true` when larger is better (throughput, PSNR),
+    /// `false` when smaller is better (latency, FFD, LPIPS).
+    pub higher_is_better: bool,
+    /// Optional per-metric gate tolerance in percent, overriding the
+    /// diff-wide default. Benches set this wide for wall-clock metrics
+    /// (machine-dependent) and tight for deterministic ones (skip
+    /// fractions, GMACs, quality scores — bitwise thread-invariant).
+    pub tol_pct: Option<f64>,
+}
+
+/// A machine-readable bench run: area + run metadata + metrics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BenchReport {
+    /// Which bench produced this (`engine`, `serving`, `table1_image`, …).
+    pub area: String,
+    /// Ordered run-metadata pairs (family, solver, steps, threads,
+    /// workers, policy roster, smoke…), all stringly so the schema
+    /// stays flat.
+    pub meta: Vec<(String, String)>,
+    /// The measurements, in insertion order.
+    pub metrics: Vec<Metric>,
+}
+
+impl BenchReport {
+    /// Empty report for `area`.
+    pub fn new(area: &str) -> BenchReport {
+        BenchReport { area: area.to_string(), meta: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Append a run-metadata pair (last write wins on duplicate keys at
+    /// read time; benches write each key once).
+    pub fn meta(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    /// Append a metric, rejecting non-finite values, non-finite or
+    /// negative tolerances, and duplicate names.
+    pub fn push(&mut self, m: Metric) -> Result<()> {
+        crate::ensure!(
+            m.value.is_finite(),
+            "metric {:?}: non-finite value {} (NaN/inf cannot enter a bench report)",
+            m.name,
+            m.value
+        );
+        if let Some(t) = m.tol_pct {
+            crate::ensure!(
+                t.is_finite() && t >= 0.0,
+                "metric {:?}: invalid tolerance {t} (must be finite and >= 0)",
+                m.name
+            );
+        }
+        crate::ensure!(!m.name.is_empty(), "metric with empty name");
+        crate::ensure!(
+            self.get(&m.name).is_none(),
+            "duplicate metric name {:?} in area {:?}",
+            m.name,
+            self.area
+        );
+        self.metrics.push(m);
+        Ok(())
+    }
+
+    /// Convenience: append a metric gated at the diff-wide default
+    /// tolerance.
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str, higher_is_better: bool) -> Result<()> {
+        self.push(Metric {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+            higher_is_better,
+            tol_pct: None,
+        })
+    }
+
+    /// Convenience: append a metric with its own gate tolerance (percent).
+    pub fn metric_tol(
+        &mut self,
+        name: &str,
+        value: f64,
+        unit: &str,
+        higher_is_better: bool,
+        tol_pct: f64,
+    ) -> Result<()> {
+        self.push(Metric {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+            higher_is_better,
+            tol_pct: Some(tol_pct),
+        })
+    }
+
+    /// Look up a metric by exact name.
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// Re-check every invariant [`BenchReport::push`] enforces (the
+    /// fields are public, so `save` revalidates before writing).
+    pub fn validate(&self) -> Result<()> {
+        let mut check = BenchReport::new(&self.area);
+        for m in &self.metrics {
+            check.push(m.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Serialise (schema, area, meta, metrics) preserving order.
+    pub fn to_json(&self) -> Json {
+        let mut meta = Json::obj();
+        for (k, v) in &self.meta {
+            meta = meta.set(k, v.as_str());
+        }
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                let mut j = Json::obj()
+                    .set("name", m.name.as_str())
+                    .set("value", m.value)
+                    .set("unit", m.unit.as_str())
+                    .set("higher_is_better", m.higher_is_better);
+                if let Some(t) = m.tol_pct {
+                    j = j.set("tol_pct", t);
+                }
+                j
+            })
+            .collect();
+        Json::obj()
+            .set("schema", SCHEMA)
+            .set("area", self.area.as_str())
+            .set("meta", meta)
+            .set("metrics", Json::Arr(metrics))
+    }
+
+    /// Parse and validate a report. Wrong schema tags, missing fields,
+    /// non-finite or non-numeric values (a NaN clamps to `null` in
+    /// JSON — it is rejected here, not zeroed) and duplicate names are
+    /// all errors.
+    pub fn from_json(j: &Json) -> Result<BenchReport> {
+        let schema = j.req("schema")?.as_str().ok_or_else(|| crate::err!("schema must be a string"))?;
+        crate::ensure!(schema == SCHEMA, "unsupported bench-report schema {schema:?} (want {SCHEMA:?})");
+        let area = j.req("area")?.as_str().ok_or_else(|| crate::err!("area must be a string"))?;
+        crate::ensure!(!area.is_empty(), "empty area");
+        let mut report = BenchReport::new(area);
+        if let Some(meta) = j.get("meta") {
+            let kv = meta.as_obj().ok_or_else(|| crate::err!("meta must be an object"))?;
+            for (k, v) in kv {
+                let vs = v
+                    .as_str()
+                    .ok_or_else(|| crate::err!("meta value for {k:?} must be a string"))?;
+                report.meta(k, vs);
+            }
+        }
+        let metrics = j
+            .req("metrics")?
+            .as_arr()
+            .ok_or_else(|| crate::err!("metrics must be an array"))?;
+        for (i, mj) in metrics.iter().enumerate() {
+            let name = mj
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| crate::err!("metric #{i}: name must be a string"))?
+                .to_string();
+            let value = mj
+                .req("value")?
+                .as_f64()
+                .ok_or_else(|| crate::err!("metric {name:?}: value must be a finite number"))?;
+            let unit = mj
+                .req("unit")?
+                .as_str()
+                .ok_or_else(|| crate::err!("metric {name:?}: unit must be a string"))?
+                .to_string();
+            let higher_is_better = mj
+                .req("higher_is_better")?
+                .as_bool()
+                .ok_or_else(|| crate::err!("metric {name:?}: higher_is_better must be a bool"))?;
+            let tol_pct = match mj.get("tol_pct") {
+                None => None,
+                Some(t) => Some(
+                    t.as_f64()
+                        .ok_or_else(|| crate::err!("metric {name:?}: tol_pct must be a finite number"))?,
+                ),
+            };
+            report.push(Metric { name, value, unit, higher_is_better, tol_pct })?;
+        }
+        Ok(report)
+    }
+
+    /// Write the report to `path`, pretty-printed with a trailing
+    /// newline, after revalidating invariants.
+    pub fn save(&self, path: &str) -> Result<()> {
+        use crate::util::error::Context;
+        self.validate()?;
+        let mut body = self.to_json().to_string_pretty();
+        body.push('\n');
+        std::fs::write(path, body).with_context(|| format!("writing bench report {path}"))?;
+        Ok(())
+    }
+
+    /// Read and validate a report from `path`.
+    pub fn load(path: &str) -> Result<BenchReport> {
+        use crate::util::error::Context;
+        let body =
+            std::fs::read_to_string(path).with_context(|| format!("reading bench report {path}"))?;
+        let j = parse(&body).with_context(|| format!("parsing bench report {path}"))?;
+        BenchReport::from_json(&j).with_context(|| format!("validating bench report {path}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Diffing / regression gating
+// ---------------------------------------------------------------------------
+
+/// Outcome of comparing one metric between baseline and candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffStatus {
+    /// Within the tolerance band (symmetric: ±tol around the baseline).
+    Unchanged,
+    /// Moved beyond tolerance in the *better* direction.
+    Improved,
+    /// Moved beyond tolerance in the *worse* direction — fails the gate.
+    Regressed,
+    /// Present in the baseline, absent from the candidate — hard error
+    /// (a silently dropped metric must never pass the gate).
+    Missing,
+    /// Present only in the candidate — informational, not gated (lets
+    /// the trajectory grow metrics without a baseline refresh).
+    New,
+    /// Unit / direction / area disagreement between the files — hard
+    /// error: the comparison itself is meaningless.
+    Mismatched,
+}
+
+impl DiffStatus {
+    fn label(self) -> &'static str {
+        match self {
+            DiffStatus::Unchanged => "ok",
+            DiffStatus::Improved => "improved",
+            DiffStatus::Regressed => "REGRESSED",
+            DiffStatus::Missing => "MISSING",
+            DiffStatus::New => "new",
+            DiffStatus::Mismatched => "MISMATCHED",
+        }
+    }
+}
+
+/// One row of a [`DiffReport`].
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    /// Metric name (or `<area>` for a report-level mismatch).
+    pub name: String,
+    /// Baseline value, when the metric exists there.
+    pub base: Option<f64>,
+    /// Candidate value, when the metric exists there.
+    pub cand: Option<f64>,
+    /// Signed relative change in percent (positive = value went up);
+    /// ±inf when the baseline is exactly 0 and the candidate is not.
+    pub change_pct: f64,
+    /// Tolerance applied to this row, in percent.
+    pub tol_pct: f64,
+    /// Verdict.
+    pub status: DiffStatus,
+}
+
+/// Result of [`diff`]: per-metric rows plus gate accounting.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    /// One row per union-of-names metric, baseline order first.
+    pub rows: Vec<DiffRow>,
+    /// The diff-wide default tolerance that applied where no per-metric
+    /// tolerance was set.
+    pub default_tol_pct: f64,
+}
+
+impl DiffReport {
+    /// Metrics that moved beyond tolerance in the worse direction.
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.status == DiffStatus::Regressed).count()
+    }
+
+    /// Structural failures: missing metrics, unit/direction/area
+    /// mismatches.
+    pub fn hard_errors(&self) -> usize {
+        self.rows
+            .iter()
+            .filter(|r| matches!(r.status, DiffStatus::Missing | DiffStatus::Mismatched))
+            .count()
+    }
+
+    /// True when the candidate passes the gate.
+    pub fn gate_ok(&self) -> bool {
+        self.regressions() == 0 && self.hard_errors() == 0
+    }
+
+    /// Render the readable comparison table `bench_diff` prints.
+    pub fn to_table(&self) -> Table {
+        fn fmt(v: Option<f64>) -> String {
+            match v {
+                None => "-".into(),
+                Some(x) if x == 0.0 => "0".into(),
+                Some(x) if x.abs() >= 1e4 || x.abs() < 1e-3 => format!("{x:.3e}"),
+                Some(x) => format!("{x:.4}"),
+            }
+        }
+        let mut t = Table::new(&["metric", "baseline", "candidate", "change", "tol", "status"]);
+        for r in &self.rows {
+            let change = if r.base.is_none() || r.cand.is_none() {
+                "-".into()
+            } else if r.change_pct.is_infinite() {
+                format!("{}inf%", if r.change_pct > 0.0 { "+" } else { "-" })
+            } else {
+                format!("{:+.1}%", r.change_pct)
+            };
+            t.row(&[
+                r.name.clone(),
+                fmt(r.base),
+                fmt(r.cand),
+                change,
+                format!("±{:.1}%", r.tol_pct),
+                r.status.label().into(),
+            ]);
+        }
+        t
+    }
+
+    /// One-line verdict (`bench_diff`'s last stdout line).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} metrics compared: {} regressed, {} hard errors, {} improved ({})",
+            self.rows.len(),
+            self.regressions(),
+            self.hard_errors(),
+            self.rows.iter().filter(|r| r.status == DiffStatus::Improved).count(),
+            if self.gate_ok() { "gate: OK" } else { "gate: FAIL" },
+        )
+    }
+}
+
+/// Compare `cand` against `base` under per-metric tolerances.
+///
+/// Semantics (pinned by tests/bench_report.rs):
+/// * tolerance band is symmetric around the baseline value; only a
+///   move beyond tolerance in the metric's *worse* direction
+///   (`higher_is_better`-aware) regresses;
+/// * the applied tolerance is the **baseline** metric's `tol_pct` when
+///   set, else `default_tol_pct` — the committed baseline carries the
+///   gate thresholds;
+/// * baseline metric missing from the candidate → [`DiffStatus::Missing`]
+///   (hard error); candidate-only metrics → [`DiffStatus::New`] (not
+///   gated);
+/// * unit or direction disagreement → [`DiffStatus::Mismatched`] (hard
+///   error), as is an area mismatch between the two reports;
+/// * a zero baseline with a non-zero candidate is an infinite change:
+///   regression or improvement purely by direction.
+pub fn diff(base: &BenchReport, cand: &BenchReport, default_tol_pct: f64) -> DiffReport {
+    let mut rows = Vec::new();
+    if base.area != cand.area {
+        rows.push(DiffRow {
+            name: format!("<area: {:?} vs {:?}>", base.area, cand.area),
+            base: None,
+            cand: None,
+            change_pct: 0.0,
+            tol_pct: default_tol_pct,
+            status: DiffStatus::Mismatched,
+        });
+    }
+    for bm in &base.metrics {
+        let tol = bm.tol_pct.unwrap_or(default_tol_pct);
+        let row = match cand.get(&bm.name) {
+            None => DiffRow {
+                name: bm.name.clone(),
+                base: Some(bm.value),
+                cand: None,
+                change_pct: 0.0,
+                tol_pct: tol,
+                status: DiffStatus::Missing,
+            },
+            Some(cm) if cm.unit != bm.unit || cm.higher_is_better != bm.higher_is_better => DiffRow {
+                name: bm.name.clone(),
+                base: Some(bm.value),
+                cand: Some(cm.value),
+                change_pct: 0.0,
+                tol_pct: tol,
+                status: DiffStatus::Mismatched,
+            },
+            Some(cm) => {
+                let change_pct = if bm.value == 0.0 {
+                    if cm.value == 0.0 {
+                        0.0
+                    } else if cm.value > 0.0 {
+                        f64::INFINITY
+                    } else {
+                        f64::NEG_INFINITY
+                    }
+                } else {
+                    (cm.value - bm.value) / bm.value.abs() * 100.0
+                };
+                // positive `worse` = moved against the metric's good
+                // direction
+                let worse = if bm.higher_is_better { -change_pct } else { change_pct };
+                let status = if worse > tol {
+                    DiffStatus::Regressed
+                } else if -worse > tol {
+                    DiffStatus::Improved
+                } else {
+                    DiffStatus::Unchanged
+                };
+                DiffRow {
+                    name: bm.name.clone(),
+                    base: Some(bm.value),
+                    cand: Some(cm.value),
+                    change_pct,
+                    tol_pct: tol,
+                    status,
+                }
+            }
+        };
+        rows.push(row);
+    }
+    for cm in &cand.metrics {
+        if base.get(&cm.name).is_none() {
+            rows.push(DiffRow {
+                name: cm.name.clone(),
+                base: None,
+                cand: Some(cm.value),
+                change_pct: 0.0,
+                tol_pct: cm.tol_pct.unwrap_or(default_tol_pct),
+                status: DiffStatus::New,
+            });
+        }
+    }
+    DiffReport { rows, default_tol_pct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(pairs: &[(&str, f64, bool)]) -> BenchReport {
+        let mut r = BenchReport::new("t");
+        for (n, v, hib) in pairs {
+            r.metric(n, *v, "u", *hib).unwrap();
+        }
+        r
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut r = BenchReport::new("engine");
+        r.meta("family", "image");
+        r.meta("steps", 10);
+        r.metric("throughput_rps", 123.456, "req/s", true).unwrap();
+        r.metric_tol("p95_s", 0.25, "s", false, 60.0).unwrap();
+        let back = BenchReport::from_json(&parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn nan_and_inf_rejected_at_insert() {
+        let mut r = BenchReport::new("t");
+        assert!(r.metric("bad", f64::NAN, "u", true).is_err());
+        assert!(r.metric("bad", f64::INFINITY, "u", true).is_err());
+        assert!(r.metric_tol("bad", 1.0, "u", true, f64::NAN).is_err());
+        assert!(r.metric_tol("bad", 1.0, "u", true, -5.0).is_err());
+        assert!(r.metrics.is_empty());
+    }
+
+    #[test]
+    fn null_value_rejected_at_load_not_zeroed() {
+        // a NaN clamps to null under util::json; from_json must reject
+        let j = Json::obj().set("schema", SCHEMA).set("area", "t").set(
+            "metrics",
+            Json::Arr(vec![Json::obj()
+                .set("name", "m")
+                .set("value", Json::Null)
+                .set("unit", "u")
+                .set("higher_is_better", true)]),
+        );
+        let e = BenchReport::from_json(&j).unwrap_err();
+        assert!(e.to_string().contains("finite"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut r = BenchReport::new("t");
+        r.metric("m", 1.0, "u", true).unwrap();
+        assert!(r.metric("m", 2.0, "u", true).is_err());
+    }
+
+    #[test]
+    fn diff_direction_and_symmetry() {
+        // higher-is-better: a drop beyond tol regresses, a gain improves
+        let base = report(&[("up", 100.0, true), ("down", 100.0, false)]);
+        let worse = report(&[("up", 85.0, true), ("down", 115.0, false)]);
+        let d = diff(&base, &worse, 10.0);
+        assert!(d.rows.iter().all(|r| r.status == DiffStatus::Regressed), "{:?}", d.rows);
+        let better = report(&[("up", 115.0, true), ("down", 85.0, false)]);
+        let d = diff(&base, &better, 10.0);
+        assert!(d.rows.iter().all(|r| r.status == DiffStatus::Improved));
+        assert!(d.gate_ok());
+        let within = report(&[("up", 91.0, true), ("down", 109.0, false)]);
+        let d = diff(&base, &within, 10.0);
+        assert!(d.rows.iter().all(|r| r.status == DiffStatus::Unchanged));
+    }
+
+    #[test]
+    fn diff_missing_metric_is_hard_error() {
+        let base = report(&[("kept", 1.0, true), ("dropped", 1.0, true)]);
+        let cand = report(&[("kept", 1.0, true)]);
+        let d = diff(&base, &cand, 10.0);
+        assert_eq!(d.hard_errors(), 1);
+        assert!(!d.gate_ok());
+    }
+
+    #[test]
+    fn diff_new_metric_not_gated() {
+        let base = report(&[("a", 1.0, true)]);
+        let cand = report(&[("a", 1.0, true), ("b", 9.0, true)]);
+        let d = diff(&base, &cand, 10.0);
+        assert!(d.gate_ok());
+        assert!(d.rows.iter().any(|r| r.status == DiffStatus::New && r.name == "b"));
+    }
+
+    #[test]
+    fn diff_unit_or_direction_mismatch_is_hard_error() {
+        let base = report(&[("m", 1.0, true)]);
+        let cand = report(&[("m", 1.0, false)]);
+        assert_eq!(diff(&base, &cand, 10.0).hard_errors(), 1);
+        let mut cand2 = BenchReport::new("t");
+        cand2.push(Metric {
+            name: "m".into(),
+            value: 1.0,
+            unit: "other".into(),
+            higher_is_better: true,
+            tol_pct: None,
+        })
+        .unwrap();
+        assert_eq!(diff(&base, &cand2, 10.0).hard_errors(), 1);
+    }
+
+    #[test]
+    fn diff_per_metric_tolerance_overrides_default() {
+        let mut base = BenchReport::new("t");
+        base.metric_tol("loose", 100.0, "u", true, 50.0).unwrap();
+        base.metric("tight", 100.0, "u", true).unwrap();
+        let cand = report(&[("loose", 70.0, true), ("tight", 70.0, true)]);
+        let d = diff(&base, &cand, 10.0);
+        let by_name = |n: &str| d.rows.iter().find(|r| r.name == n).unwrap().status;
+        assert_eq!(by_name("loose"), DiffStatus::Unchanged);
+        assert_eq!(by_name("tight"), DiffStatus::Regressed);
+    }
+
+    #[test]
+    fn diff_zero_baseline() {
+        let base = report(&[("z", 0.0, false)]);
+        assert!(diff(&base, &report(&[("z", 0.0, false)]), 10.0).gate_ok());
+        let d = diff(&base, &report(&[("z", 0.5, false)]), 10.0);
+        assert_eq!(d.rows[0].status, DiffStatus::Regressed);
+        assert!(d.rows[0].change_pct.is_infinite());
+    }
+
+    #[test]
+    fn diff_area_mismatch_is_hard_error() {
+        let base = BenchReport::new("a");
+        let cand = BenchReport::new("b");
+        assert_eq!(diff(&base, &cand, 10.0).hard_errors(), 1);
+    }
+
+    #[test]
+    fn table_and_summary_render() {
+        let base = report(&[("m", 100.0, true)]);
+        let cand = report(&[("m", 50.0, true)]);
+        let d = diff(&base, &cand, 10.0);
+        let t = d.to_table().to_string();
+        assert!(t.contains("REGRESSED"), "{t}");
+        assert!(d.summary().contains("gate: FAIL"));
+    }
+}

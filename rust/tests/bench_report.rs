@@ -1,0 +1,240 @@
+//! Tests for the machine-readable bench-report layer (ISSUE 6):
+//! round-trip through `util::json` (including a propcheck sweep over
+//! random metric sets), loud NaN/inf rejection, `diff` threshold
+//! semantics (symmetric tolerance, direction awareness, missing-metric
+//! = hard error), and the `bench_diff` binary's exit codes — pinned
+//! here: a synthetically injected >10% throughput regression makes it
+//! exit non-zero (the PR's acceptance criterion).
+
+use std::process::Command;
+
+use smoothcache::util::bench::report::{diff, BenchReport, DiffStatus, Metric, SCHEMA};
+use smoothcache::util::json::parse;
+use smoothcache::util::propcheck::{forall, gen};
+
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("smoothcache_bench_report_{}_{tag}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn sample_report() -> BenchReport {
+    let mut r = BenchReport::new("serving");
+    r.meta("family", "image");
+    r.meta("steps", 2);
+    r.metric("no-cache/throughput_rps", 100.0, "req/s", true).unwrap();
+    r.metric_tol("fora:2/p95_s", 0.5, "s", false, 60.0).unwrap();
+    r
+}
+
+// ---------------------------------------------------------------------------
+// round-trip + validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn report_roundtrips_through_util_json() {
+    let r = sample_report();
+    let text = r.to_json().to_string_pretty();
+    let back = BenchReport::from_json(&parse(&text).unwrap()).unwrap();
+    assert_eq!(back, r);
+    assert!(text.contains(SCHEMA));
+}
+
+#[test]
+fn report_roundtrip_property_over_random_metric_sets() {
+    // names come from the index (unique by construction); direction and
+    // tolerance derive from the index so the whole surface is exercised
+    forall(
+        0xBE7C4,
+        60,
+        |rng| {
+            gen::vec_of(rng, 0, 24, |rng| {
+                (gen::usize_in(rng, 0, 4), gen::f64_in(rng, -1e9, 1e9))
+            })
+        },
+        |metrics: &Vec<(usize, f64)>| {
+            let mut r = BenchReport::new("prop");
+            r.meta("smoke", true);
+            for (i, (kind, value)) in metrics.iter().enumerate() {
+                let m = Metric {
+                    name: format!("scope{kind}/metric{i}"),
+                    value: *value,
+                    unit: ["us", "req/s", "%", "x"][*kind % 4].to_string(),
+                    higher_is_better: i % 2 == 0,
+                    tol_pct: (kind % 2 == 0).then_some((i as f64) * 3.5),
+                };
+                r.push(m).map_err(|e| format!("push: {e}"))?;
+            }
+            let back = BenchReport::from_json(&parse(&r.to_json().to_string()).unwrap())
+                .map_err(|e| format!("from_json: {e}"))?;
+            if back != r {
+                return Err("round-trip mismatch".into());
+            }
+            // self-diff is always a clean gate
+            let d = diff(&r, &r, 10.0);
+            if !d.gate_ok() {
+                return Err(format!("self-diff failed the gate: {}", d.summary()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn nan_and_inf_are_rejected_loudly() {
+    let mut r = BenchReport::new("t");
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let e = r.metric("m", bad, "u", true).unwrap_err();
+        assert!(e.to_string().contains("non-finite"), "{e}");
+    }
+    // a NaN smuggled past push (public fields) is caught at save time
+    let mut r2 = sample_report();
+    r2.metrics[0].value = f64::NAN;
+    assert!(r2.save(&tmp_path("nan")).is_err());
+    // and a null value in a file is rejected at load, not zeroed
+    let path = tmp_path("null_value");
+    std::fs::write(
+        &path,
+        format!(
+            "{{\"schema\": \"{SCHEMA}\", \"area\": \"t\", \"metrics\": \
+             [{{\"name\": \"m\", \"value\": null, \"unit\": \"u\", \"higher_is_better\": true}}]}}"
+        ),
+    )
+    .unwrap();
+    let e = BenchReport::load(&path).unwrap_err();
+    assert!(e.to_string().contains("finite"), "{e}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn wrong_schema_tag_is_rejected() {
+    let j = smoothcache::util::json::Json::obj()
+        .set("schema", "something/else")
+        .set("area", "t")
+        .set("metrics", smoothcache::util::json::Json::Arr(vec![]));
+    assert!(BenchReport::from_json(&j).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// diff semantics
+// ---------------------------------------------------------------------------
+
+fn one_metric(value: f64, higher_is_better: bool) -> BenchReport {
+    let mut r = BenchReport::new("t");
+    r.metric("m", value, "u", higher_is_better).unwrap();
+    r
+}
+
+#[test]
+fn diff_tolerance_is_symmetric_and_direction_aware() {
+    // within ±10% nothing moves the gate, in either direction
+    for (base, cand) in [(100.0, 95.0), (100.0, 105.0)] {
+        for hib in [true, false] {
+            let d = diff(&one_metric(base, hib), &one_metric(cand, hib), 10.0);
+            assert_eq!(d.rows[0].status, DiffStatus::Unchanged, "base={base} cand={cand} hib={hib}");
+        }
+    }
+    // beyond tolerance: worse direction regresses, better improves
+    let d = diff(&one_metric(100.0, true), &one_metric(80.0, true), 10.0);
+    assert_eq!(d.rows[0].status, DiffStatus::Regressed);
+    let d = diff(&one_metric(100.0, true), &one_metric(120.0, true), 10.0);
+    assert_eq!(d.rows[0].status, DiffStatus::Improved);
+    let d = diff(&one_metric(100.0, false), &one_metric(120.0, false), 10.0);
+    assert_eq!(d.rows[0].status, DiffStatus::Regressed);
+    let d = diff(&one_metric(100.0, false), &one_metric(80.0, false), 10.0);
+    assert_eq!(d.rows[0].status, DiffStatus::Improved);
+}
+
+#[test]
+fn diff_missing_metric_is_a_hard_error_not_a_silent_pass() {
+    let base = sample_report();
+    let mut cand = BenchReport::new("serving");
+    cand.metric("no-cache/throughput_rps", 100.0, "req/s", true).unwrap();
+    // "fora:2/p95_s" dropped from the candidate
+    let d = diff(&base, &cand, 10.0);
+    assert_eq!(d.hard_errors(), 1);
+    assert!(!d.gate_ok());
+    assert!(d
+        .rows
+        .iter()
+        .any(|r| r.name == "fora:2/p95_s" && r.status == DiffStatus::Missing));
+}
+
+#[test]
+fn diff_baseline_tolerance_is_authoritative() {
+    let mut base = BenchReport::new("t");
+    base.metric_tol("m", 100.0, "u", true, 50.0).unwrap();
+    // candidate carries a *tighter* tolerance, but the baseline's wins
+    let mut cand = BenchReport::new("t");
+    cand.metric_tol("m", 60.0, "u", true, 1.0).unwrap();
+    let d = diff(&base, &cand, 10.0);
+    assert_eq!(d.rows[0].status, DiffStatus::Unchanged);
+    assert!((d.rows[0].tol_pct - 50.0).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// bench_diff binary (exit codes; the injected-regression acceptance pin)
+// ---------------------------------------------------------------------------
+
+fn run_bench_diff(args: &[&str]) -> (i32, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_bench_diff"))
+        .args(args)
+        .output()
+        .expect("spawn bench_diff");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    (out.status.code().unwrap_or(-1), stdout)
+}
+
+#[test]
+fn bench_diff_passes_identical_reports() {
+    let path = tmp_path("identical");
+    sample_report().save(&path).unwrap();
+    let (code, stdout) = run_bench_diff(&[&path, &path]);
+    assert_eq!(code, 0, "stdout:\n{stdout}");
+    assert!(stdout.contains("gate: OK"), "{stdout}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn bench_diff_flags_injected_throughput_regression() {
+    // the PR acceptance pin: a synthetic >10% throughput drop must make
+    // bench_diff exit non-zero
+    let base_path = tmp_path("regress_base");
+    let cand_path = tmp_path("regress_cand");
+    sample_report().save(&base_path).unwrap();
+    let mut cand = sample_report();
+    cand.metrics[0].value = 85.0; // throughput 100 → 85: a 15% drop
+    cand.save(&cand_path).unwrap();
+    let (code, stdout) = run_bench_diff(&[&base_path, &cand_path]);
+    assert_eq!(code, 1, "expected regression exit code, stdout:\n{stdout}");
+    assert!(stdout.contains("REGRESSED"), "{stdout}");
+    assert!(stdout.contains("gate: FAIL"), "{stdout}");
+
+    // the same drop passes under a caller-widened default tolerance
+    let (code, stdout) = run_bench_diff(&[&base_path, &cand_path, "--tol", "30"]);
+    assert_eq!(code, 0, "stdout:\n{stdout}");
+    let _ = std::fs::remove_file(&base_path);
+    let _ = std::fs::remove_file(&cand_path);
+}
+
+#[test]
+fn bench_diff_missing_metric_and_bad_usage_exit_2() {
+    let base_path = tmp_path("hard_base");
+    let cand_path = tmp_path("hard_cand");
+    sample_report().save(&base_path).unwrap();
+    let mut cand = BenchReport::new("serving");
+    cand.metric("no-cache/throughput_rps", 100.0, "req/s", true).unwrap();
+    cand.save(&cand_path).unwrap();
+    let (code, _) = run_bench_diff(&[&base_path, &cand_path]);
+    assert_eq!(code, 2);
+    // usage errors are also structural failures
+    let (code, _) = run_bench_diff(&[&base_path]);
+    assert_eq!(code, 2);
+    let (code, _) = run_bench_diff(&[&base_path, &cand_path, "--typo"]);
+    assert_eq!(code, 2);
+    let (code, _) = run_bench_diff(&["/definitely/not/here.json", &cand_path]);
+    assert_eq!(code, 2);
+    let _ = std::fs::remove_file(&base_path);
+    let _ = std::fs::remove_file(&cand_path);
+}

@@ -1,0 +1,196 @@
+//! Smoke-runs every bench target (ISSUE 6, satellite 1): each bench
+//! source is also registered as a `[[bin]]` in Cargo.toml, so cargo
+//! exposes a compile-time `CARGO_BIN_EXE_<name>` path here and we can
+//! shell the real binary with `--smoke --json <tmp>` — no nested cargo
+//! invocation. Each run must exit 0 and emit a report that parses,
+//! carries the expected area, the required metric keys, and
+//! `smoke=true` in its metadata.
+
+use std::process::Command;
+use std::sync::Mutex;
+
+use smoothcache::util::bench::report::BenchReport;
+
+// even at smoke scale the benches saturate the GEMM pool; running the
+// eleven subprocesses one at a time keeps the suite's footprint sane
+static BENCH_GATE: Mutex<()> = Mutex::new(());
+
+fn run_smoke(exe: &str, name: &str, area: &str, required: &[&str]) {
+    let _gate = BENCH_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let json_path = std::env::temp_dir()
+        .join(format!("smoothcache_smoke_{}_{name}.json", std::process::id()));
+    let json_path = json_path.to_string_lossy().into_owned();
+    let out = Command::new(exe)
+        .args(["--smoke", "--json", &json_path])
+        .output()
+        .unwrap_or_else(|e| panic!("spawn {name}: {e}"));
+    assert!(
+        out.status.success(),
+        "{name} --smoke failed (status {:?})\nstdout:\n{}\nstderr:\n{}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    let rep = BenchReport::load(&json_path)
+        .unwrap_or_else(|e| panic!("{name}: emitted JSON did not load: {e}"));
+    let _ = std::fs::remove_file(&json_path);
+    assert_eq!(rep.area, area, "{name}: wrong report area");
+    assert_eq!(
+        rep.meta.iter().find(|(k, _)| k == "smoke").map(|(_, v)| v.as_str()),
+        Some("true"),
+        "{name}: report must record smoke=true"
+    );
+    for key in required {
+        assert!(
+            rep.get(key).is_some(),
+            "{name}: metric {key:?} missing from report; present: {:?}",
+            rep.metrics.iter().map(|m| m.name.as_str()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn smoke_perf_engine() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_perf_engine"),
+        "perf_engine",
+        "engine",
+        &[
+            "forward_b1_mean_us",
+            "generate_nocache_mean_us",
+            "generate_fora2_mean_us",
+            "session_overhead_x",
+            "sched_speedup_dense_vs_map_x",
+            "threads_speedup_4t_v_1t_x",
+            "queue_wait_mean_ms",
+            "exec_mean_ms",
+            "e2e_mean_ms",
+        ],
+    );
+}
+
+#[test]
+fn smoke_e2e_serving() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_e2e_serving"),
+        "e2e_serving",
+        "serving",
+        &[
+            "no-cache/throughput_rps",
+            "no-cache/plan_hit_rate",
+            "no-cache/step_mean_ms",
+            "no-cache/speedup_vs_no_cache_x",
+            "fora:2/throughput_rps",
+            "fora:2/speedup_vs_no_cache_x",
+            "smooth:0.25/skip_pct",
+            "drift:0.35/qwait_mean_s",
+        ],
+    );
+}
+
+#[test]
+fn smoke_table1_image() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_table1_image"),
+        "table1_image",
+        "table1_image",
+        &[
+            "no_cache/ffd",
+            "no_cache/gmacs",
+            "fora2/gmacs",
+            "fora2/lpips",
+            "ours_s50/skip_pct",
+            "ours_s50/latency_s",
+        ],
+    );
+}
+
+#[test]
+fn smoke_table2_video() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_table2_video"),
+        "table2_video",
+        "table2_video",
+        &["no_cache/vbench", "ours_s15/gmacs", "ours_s22/skip_pct", "ours_s15/ssim"],
+    );
+}
+
+#[test]
+fn smoke_table3_audio() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_table3_audio"),
+        "table3_audio",
+        "table3_audio",
+        &[
+            "no_cache/audiocaps/fd",
+            "no_cache/musiccaps/kl",
+            "ours_s20/gmacs",
+            "ours_s37/songdescriber/clap",
+        ],
+    );
+}
+
+#[test]
+fn smoke_fig2_error_curves() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_fig2_error_curves"),
+        "fig2_error_curves",
+        "fig2",
+        &[
+            "image/mean_ci_width",
+            "image/calib_s",
+            "audio/mean_ci_width",
+            "video/mean_ci_width",
+        ],
+    );
+}
+
+#[test]
+fn smoke_fig5_compute_composition() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_fig5_compute_composition"),
+        "fig5_compute_composition",
+        "fig5",
+        &["image/cacheable_fraction", "image/forward_gmacs"],
+    );
+}
+
+#[test]
+fn smoke_fig_qualitative() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_fig_qualitative"),
+        "fig_qualitative",
+        "fig_qualitative",
+        &["image/files_written", "audio/files_written", "video/files_written"],
+    );
+}
+
+#[test]
+fn smoke_ablation_calibration() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_ablation_calibration"),
+        "ablation_calibration",
+        "ablation_calibration",
+        &["n1/agreement_pct", "n2/agreement_pct", "n1/ci_width_attn", "n2/ci_width_ffn"],
+    );
+}
+
+#[test]
+fn smoke_ablation_grouping() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_ablation_grouping"),
+        "ablation_grouping",
+        "ablation_grouping",
+        &["a15/grouped/ffd", "a15/per_site/ffd", "a50/per_site/skip_pct", "a30/grouped/lpips"],
+    );
+}
+
+#[test]
+fn smoke_ablation_pareto() {
+    run_smoke(
+        env!("CARGO_BIN_EXE_ablation_pareto"),
+        "ablation_pareto",
+        "ablation_pareto",
+        &["fora_n2/ffd", "fora_n3/gmacs", "ours_s35/gmacs", "ours_s50/latency_s"],
+    );
+}
