@@ -100,6 +100,7 @@ fn main() -> smoothcache::util::error::Result<()> {
             cfg_scale: 1.0,
             seed: 1,
             policy: policy.clone(),
+            compute: Default::default(),
         };
         coord.generate_blocking(warm.clone())?;
         for b in [2usize, 4] {
@@ -135,6 +136,7 @@ fn main() -> smoothcache::util::error::Result<()> {
                 cfg_scale: 1.0,
                 seed: item.seed ^ i as u64,
                 policy: policy.clone(),
+                compute: Default::default(),
             };
             // optional best-effort deadline: late responses are still
             // delivered and show up in the dl-miss column

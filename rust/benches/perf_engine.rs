@@ -8,7 +8,12 @@
 //! work-queue wait vs execution time under a burst (ISSUE 3 — the
 //! shared work-queue scheduler's own overhead), and a scheduling-
 //! overhead section compares the dense `CachePlan` decision lookup
-//! against the old string-keyed per-site map path (ISSUE 4).
+//! against the old string-keyed per-site map path (ISSUE 4). Two
+//! `compute:*` sections cover the kernel-dispatch work (ISSUE 7): a
+//! SIMD-vs-scalar GEMM timing on wide FFN shapes (acceptance: ≥ 4× on
+//! AVX2 hosts) and a precision-ladder sweep reporting per-mode forward
+//! latency plus the `quality::precision_gate` SSIM of each reduced-
+//! precision trajectory against the f32 reference.
 //!
 //! Flags: `--threads N` pins the pool for the per-entry sections
 //! (0 = auto; the sweep section always pins its own counts); `--smoke`
@@ -21,8 +26,9 @@ use smoothcache::cache::{CachePlan, Decision, PlanRef, Schedule};
 use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Metrics, Policy, Request};
 use smoothcache::model::{Cond, Engine};
 use smoothcache::pipeline::{generate, GenConfig, GenSession};
+use smoothcache::quality::precision_gate;
 use smoothcache::solvers::SolverKind;
-use smoothcache::tensor::{gemm, Tensor};
+use smoothcache::tensor::{gemm, quant, ComputeMode, Tensor};
 use smoothcache::util::bench::report::BenchReport;
 use smoothcache::util::bench::{bench, fast_mode, Args, Table};
 use smoothcache::util::rng::Rng;
@@ -55,6 +61,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("threads", cli_threads);
     report.meta("workers", 2);
     report.meta("smoke", smoke);
+    report.meta("simd", gemm::active_kernel_name());
 
     let mut table = Table::new(&["operation", "batch", "mean (us)", "p95 (us)"]);
     let mut rng = Rng::new(1);
@@ -326,6 +333,132 @@ fn main() -> smoothcache::util::error::Result<()> {
     std::fs::write("bench_out/perf_engine_threads.csv", sweep.to_csv())?;
     report.metric_tol("threads_speedup_4t_v_1t_x", ratio4, "x", true, 60.0)?;
 
+    // ---- kernel dispatch: SIMD vs scalar GEMM on wide FFN shapes ----
+    // The vectorised microkernel keeps the scalar per-element
+    // accumulation order (bitwise parity, see tests/parallel_parity.rs);
+    // this section records how much faster it runs the FFN-shaped
+    // matmuls that dominate a forward (ISSUE 7 acceptance: ≥ 4× on
+    // AVX2 hosts; `simd` in the report meta names the kernel in play).
+    {
+        let shapes: &[(usize, usize, usize)] = &[(64, 128, 512), (64, 512, 128)];
+        let mats: Vec<(usize, usize, usize, Vec<f32>, Vec<f32>, Vec<f32>)> = shapes
+            .iter()
+            .map(|&(m, k, n)| {
+                (m, k, n, rng.normal_vec(m * k), rng.normal_vec(k * n), rng.normal_vec(n))
+            })
+            .collect();
+        let kern_iters = if fast_mode() { 5 } else { 200 };
+        let mut sink = 0.0f64;
+        let scalar = gemm::with_kernel(gemm::Kernel::Scalar, || {
+            bench(3, kern_iters, || {
+                for (m, k, n, x, w, b) in &mats {
+                    let y = gemm::matmul(x, *m, *k, w, *n, Some(b));
+                    sink += y[0] as f64;
+                }
+            })
+        });
+        let auto = gemm::with_kernel(gemm::Kernel::Auto, || {
+            bench(3, kern_iters, || {
+                for (m, k, n, x, w, b) in &mats {
+                    let y = gemm::matmul(x, *m, *k, w, *n, Some(b));
+                    sink += y[0] as f64;
+                }
+            })
+        });
+        assert!(sink.is_finite(), "GEMM timing loops must not be optimised away");
+        let speedup = scalar.mean_s / auto.mean_s;
+        let mut ktable = Table::new(&["kernel", "mean (us)", "p95 (us)", "speedup"]);
+        ktable.row(&[
+            "scalar (parity reference)".into(),
+            format!("{:.0}", scalar.mean_s * 1e6),
+            format!("{:.0}", scalar.p95_s * 1e6),
+            "1.00x".into(),
+        ]);
+        ktable.row(&[
+            format!("auto ({})", gemm::active_kernel_name()),
+            format!("{:.0}", auto.mean_s * 1e6),
+            format!("{:.0}", auto.p95_s * 1e6),
+            format!("{:.2}x", speedup),
+        ]);
+        println!(
+            "\n§Perf — kernel dispatch: wide-FFN GEMM (64x128x512 + 64x512x128), scalar vs auto"
+        );
+        ktable.print();
+        std::fs::write("bench_out/perf_engine_kernels.csv", ktable.to_csv())?;
+        report.metric_tol("compute:simd/ffn_speedup_x", speedup, "x", true, 60.0)?;
+    }
+
+    // ---- precision ladder: per-mode forward latency + quality gate ----
+    // Reduced-precision weight storage (f16 / bf16 / int8, f32
+    // accumulation — docs/adr/006) trades exactness for bandwidth; the
+    // gate below holds each mode's 3-step trajectory to the SSIM floor
+    // tests/compute_modes.rs pins (f16 ≥ 0.99, bf16/int8 ≥ 0.95).
+    {
+        let floors: &[(ComputeMode, f64)] = &[
+            (ComputeMode::F32, 0.0),
+            (ComputeMode::F16, 0.99),
+            (ComputeMode::Bf16, 0.95),
+            (ComputeMode::Int8, 0.95),
+        ];
+        let sites = fm.branch_sites();
+        let plan = CachePlan::no_cache(3, &sites);
+        // same trajectory tests/compute_modes.rs pins against the floors
+        let cond = Cond::Label(vec![3]);
+        let gen_at = |mode: ComputeMode| {
+            let cfg = GenConfig::new("image", SolverKind::Ddim, 3)
+                .with_seed(11)
+                .with_compute(mode);
+            generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None).unwrap().latent
+        };
+        let reference = gen_at(ComputeMode::F32);
+        let mode_iters = if fast_mode() { 5 } else { 30 };
+        let mut ptable = Table::new(&["compute", "fwd b1 mean (us)", "ssim vs f32", "gate"]);
+        for &(mode, floor) in floors {
+            let fw = quant::with_compute(mode, || {
+                bench(2, mode_iters, || {
+                    let _ = engine.forward("image", &x1, &t1, &cond1, None).unwrap();
+                })
+            });
+            report.metric_tol(
+                &format!("compute:{}/forward_b1_mean_us", mode.name()),
+                fw.mean_s * 1e6,
+                "us",
+                false,
+                100.0,
+            )?;
+            let (ssim_str, gate_str) = if mode == ComputeMode::F32 {
+                ("1.000000 (identity)".into(), "-".to_string())
+            } else {
+                let gate = precision_gate(&reference, &gen_at(mode), floor)?;
+                assert!(
+                    gate.pass,
+                    "compute:{} ssim {:.6} below the {floor} quality floor",
+                    mode.name(),
+                    gate.ssim
+                );
+                report.metric_tol(
+                    &format!("compute:{}/ssim", mode.name()),
+                    gate.ssim,
+                    "ssim",
+                    true,
+                    5.0,
+                )?;
+                (format!("{:.6}", gate.ssim), format!("pass (>= {floor})"))
+            };
+            ptable.row(&[
+                mode.name().into(),
+                format!("{:.0}", fw.mean_s * 1e6),
+                ssim_str,
+                gate_str,
+            ]);
+        }
+        println!(
+            "\n§Perf — precision ladder: single-request image forward per compute mode"
+        );
+        ptable.print();
+        std::fs::write("bench_out/perf_engine_compute.csv", ptable.to_csv())?;
+    }
+
     // ---- queue decomposition: scheduler wait vs execution under a burst ----
     // A closed burst of compatible requests through the full coordinator
     // (batcher → shared work queue → executor pool): how much of each
@@ -353,6 +486,7 @@ fn main() -> smoothcache::util::error::Result<()> {
                 cfg_scale: 1.0,
                 seed: i as u64,
                 policy: Policy::no_cache(),
+                compute: Default::default(),
             })
         })
         .collect();

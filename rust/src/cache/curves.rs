@@ -311,12 +311,27 @@ impl ErrorCurves {
             }
             Ok(m)
         };
+        // Identity and provenance fields must be real values: a
+        // non-string family/solver used to default to "" (a curve set
+        // that silently matched no plan-store key) and a malformed
+        // num_samples to 0 (reported as an uncalibrated artifact).
         Ok(ErrorCurves {
-            family: j.req("family")?.as_str().unwrap_or("").into(),
-            solver: j.req("solver")?.as_str().unwrap_or("").into(),
+            family: j
+                .req("family")?
+                .as_str()
+                .ok_or_else(|| crate::err!("curves json: family must be a string"))?
+                .into(),
+            solver: j
+                .req("solver")?
+                .as_str()
+                .ok_or_else(|| crate::err!("curves json: solver must be a string"))?
+                .into(),
             steps: j.req("steps")?.as_usize().ok_or_else(|| crate::err!("steps"))?,
             k_max: j.req("k_max")?.as_usize().ok_or_else(|| crate::err!("k_max"))?,
-            num_samples: j.req("num_samples")?.as_usize().unwrap_or(0),
+            num_samples: j
+                .req("num_samples")?
+                .as_usize()
+                .ok_or_else(|| crate::err!("curves json: num_samples must be an integer"))?,
             grouped: de_curves(j.req("grouped")?)?,
             per_site: de_curves(j.req("per_site")?)?,
         })
@@ -457,5 +472,30 @@ mod tests {
             back.smoothcache_schedule(0.07, &bts()),
             c.smoothcache_schedule(0.07, &bts())
         );
+        // provenance fields survive the round trip verbatim
+        assert_eq!(back.family, "test");
+        assert_eq!(back.solver, "ddim");
+        assert_eq!(back.num_samples, 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_identity_fields() {
+        // family/solver used to silently default to "" and num_samples
+        // to 0 on type mismatches — each is now a typed error naming
+        // the field
+        let good = synthetic().to_json().to_string();
+        for (needle, replacement, field) in [
+            (r#""family":"test""#, r#""family":7"#, "family"),
+            (r#""solver":"ddim""#, r#""solver":["ddim"]"#, "solver"),
+            (r#""num_samples":1"#, r#""num_samples":"many""#, "num_samples"),
+        ] {
+            let bad = good.replace(needle, replacement);
+            assert_ne!(bad, good, "replacement {needle:?} did not apply");
+            let err = ErrorCurves::parse_str(&bad).unwrap_err();
+            assert!(format!("{err}").contains(field), "{field}: {err}");
+        }
+        // missing fields stay errors too
+        let missing = good.replace(r#""family":"test","#, "");
+        assert!(ErrorCurves::parse_str(&missing).is_err());
     }
 }

@@ -220,21 +220,32 @@ impl Schedule {
             .filter_map(|v| v.as_str().map(String::from))
             .collect();
         let mut decisions = Vec::with_capacity(steps);
-        for row in j.req("decisions")?.as_arr().ok_or_else(|| crate::err!("decisions"))? {
-            decisions.push(
-                row.as_arr()
-                    .ok_or_else(|| crate::err!("decision row"))?
-                    .iter()
-                    .map(|v| {
-                        let n = v.as_f64().unwrap_or(-1.0);
-                        if n < 0.0 {
-                            Decision::Compute
-                        } else {
-                            Decision::Reuse { filled_at: n as usize }
-                        }
-                    })
-                    .collect(),
-            );
+        for (si, row) in j
+            .req("decisions")?
+            .as_arr()
+            .ok_or_else(|| crate::err!("decisions"))?
+            .iter()
+            .enumerate()
+        {
+            let mut out_row = Vec::new();
+            for v in row.as_arr().ok_or_else(|| crate::err!("decision row"))? {
+                // a non-numeric cell used to silently fall back to the
+                // -1.0 Compute sentinel, turning a corrupt schedule into
+                // a quietly slower one
+                let n = v.as_f64().ok_or_else(|| {
+                    crate::err!(
+                        "schedule json: decision at step {si} must be a number \
+                         (-1 = compute, N = fill step), got {}",
+                        v.to_string()
+                    )
+                })?;
+                out_row.push(if n < 0.0 {
+                    Decision::Compute
+                } else {
+                    Decision::Reuse { filled_at: n as usize }
+                });
+            }
+            decisions.push(out_row);
         }
         let s = Schedule { name, steps, branch_types, decisions };
         s.validate()?;
@@ -338,6 +349,20 @@ mod tests {
         let s = Schedule::fora(20, &bts(), 3);
         let back = Schedule::parse_str(&s.to_json().to_string()).unwrap();
         assert_eq!(s, back);
+    }
+
+    #[test]
+    fn non_numeric_decision_is_a_typed_error() {
+        // a corrupt cell used to silently deserialise as Compute,
+        // masking schedule corruption as a slower-but-valid plan
+        let good = Schedule::fora(4, &bts(), 2).to_json().to_string();
+        for replacement in [r#""compute""#, "null", "{}"] {
+            // first decision row is [-1, -1] (step 0 computes everything)
+            let bad = good.replacen("-1", replacement, 1);
+            assert_ne!(bad, good);
+            let err = Schedule::parse_str(&bad).unwrap_err();
+            assert!(format!("{err}").contains("decision"), "{replacement}: {err}");
+        }
     }
 
     #[test]

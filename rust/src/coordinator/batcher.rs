@@ -21,8 +21,11 @@ pub struct BatcherConfig {
 impl BatcherConfig {
     /// Largest batch eligible for a request group, accounting for CFG
     /// doubling (a CFG batch of b runs as an effective 2b batch).
+    /// Takes the true maximum — `last()` assumed an ascending list, and
+    /// an unsorted manifest would have silently capped groups at
+    /// whatever size happened to be listed last.
     pub fn max_group(&self, cfg_enabled: bool) -> usize {
-        let max = *self.supported_batches.last().unwrap_or(&1);
+        let max = self.supported_batches.iter().copied().max().unwrap_or(1);
         if cfg_enabled {
             (max / 2).max(1)
         } else {
@@ -166,6 +169,7 @@ mod tests {
                 cfg_scale: cfg,
                 seed: id,
                 policy: Policy::no_cache(),
+                compute: Default::default(),
             },
             tx,
         )
@@ -186,6 +190,24 @@ mod tests {
         assert_eq!(c.pad_target(3, true), Some(4));
         assert_eq!(c.pad_target(4, true), Some(4));
         assert_eq!(c.pad_target(5, true), None);
+    }
+
+    #[test]
+    fn max_group_is_order_independent() {
+        // regression: max_group read `.last()`, so an unsorted
+        // supported_batches list capped every group at the last-listed
+        // size (here 2) instead of the true maximum
+        let c = BatcherConfig {
+            supported_batches: vec![4, 8, 1, 2],
+            max_wait: Duration::from_millis(50),
+        };
+        assert_eq!(c.max_group(false), 8);
+        assert_eq!(c.max_group(true), 4);
+        // and the empty list still degrades to single-request batches
+        let empty = BatcherConfig { supported_batches: vec![], max_wait: Duration::from_millis(1) };
+        assert_eq!(empty.max_group(false), 1);
+        // pad_target keeps working against the unsorted list
+        assert_eq!(c.pad_target(5, false), Some(8));
     }
 
     #[test]

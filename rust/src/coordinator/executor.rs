@@ -312,7 +312,8 @@ pub fn execute_batch(
     // the generate loop from runtime observations.
     let gen_cfg = GenConfig::new(&family, req0.solver, req0.steps)
         .with_cfg(req0.cfg_scale)
-        .with_seed(req0.seed);
+        .with_seed(req0.seed)
+        .with_compute(req0.compute);
     let (solver, steps) = (req0.solver, req0.steps);
     let planner = policy.planner();
     let held_plan;

@@ -483,6 +483,7 @@ mod tests {
             cfg_scale: 1.0,
             seed: 1,
             policy,
+            compute: Default::default(),
         }
     }
 

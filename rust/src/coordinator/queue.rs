@@ -237,6 +237,7 @@ mod tests {
                         cfg_scale: 1.0,
                         seed: id,
                         policy: Policy::no_cache(),
+                        compute: Default::default(),
                     },
                     tx,
                 )

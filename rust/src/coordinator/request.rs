@@ -10,7 +10,7 @@ use crate::cache::plan::{parse_policy, Planner};
 use crate::model::Cond;
 use crate::pipeline::GenStats;
 use crate::solvers::SolverKind;
-use crate::tensor::Tensor;
+use crate::tensor::{ComputeMode, Tensor};
 
 /// Caching policy a request selects: a parsed wire string bound to its
 /// [`Planner`] from the policy registry
@@ -127,6 +127,10 @@ pub struct Request {
     pub seed: u64,
     /// Caching policy to resolve and execute.
     pub policy: Policy,
+    /// Weight-matmul precision for the whole trajectory (`f32` default;
+    /// reduced modes are opt-in — see docs/adr/006). Part of the batch
+    /// key: requests at different precisions never share a batch.
+    pub compute: ComputeMode,
 }
 
 impl Request {
@@ -138,6 +142,7 @@ impl Request {
             steps: self.steps,
             cfg_milli: (self.cfg_scale * 1000.0).round() as u32,
             policy: self.policy.wire().to_string(),
+            compute: self.compute,
         }
     }
 }
@@ -155,6 +160,8 @@ pub struct BatchKey {
     pub cfg_milli: u32,
     /// Caching policy in canonical wire form.
     pub policy: String,
+    /// Weight-matmul precision; mixed-precision batches are never formed.
+    pub compute: ComputeMode,
 }
 
 /// Completed generation for one request.
@@ -293,6 +300,7 @@ mod tests {
             cfg_scale: 1.5,
             seed,
             policy: Policy::smooth(0.18),
+            compute: ComputeMode::F32,
         };
         assert_eq!(mk(1, 3).batch_key(), mk(2, 7).batch_key());
         let mut other = mk(3, 1);
@@ -301,5 +309,10 @@ mod tests {
         let mut pol = mk(4, 1);
         pol.policy = Policy::no_cache();
         assert_ne!(mk(1, 3).batch_key(), pol.batch_key());
+        // precision is part of the key: an int8 request must not share a
+        // batch with an f32 one
+        let mut quant = mk(5, 1);
+        quant.compute = ComputeMode::Int8;
+        assert_ne!(mk(1, 3).batch_key(), quant.batch_key());
     }
 }

@@ -119,6 +119,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("cfg", "1.0", "CFG scale")
         .flag("seed", "0", "random seed")
         .flag("policy", "no-cache", "caching policy (no-cache|fora:N|alternate|smooth:A|drift:B; table: smoothcache info)")
+        .flag("compute", "f32", "weight-matmul precision (f32|f16|bf16|int8)")
         .flag("calib-samples", "6", "calibration samples for smooth policies")
         .flag("workers", "1", "executor replicas (one is plenty for a one-off)")
         .flag("threads", "0", "GEMM compute threads (0 = auto)")
@@ -158,6 +159,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         cfg_scale: args.f64("cfg").map_err(Error::msg)? as f32,
         seed: args.u64("seed").map_err(Error::msg)?,
         policy: Policy::parse(args.str("policy"))?,
+        compute: smoothcache::tensor::ComputeMode::parse(args.str("compute"))?,
     };
     let deadline = match args.u64("deadline-ms").map_err(Error::msg)? {
         0 => None,

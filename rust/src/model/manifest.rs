@@ -151,7 +151,14 @@ impl Manifest {
 
     pub fn parse_str(text: &str) -> Result<Manifest> {
         let j = parse(text).map_err(|e| crate::err!("manifest.json: {e}"))?;
-        let impl_name = j.req("impl")?.as_str().unwrap_or("pallas").to_string();
+        // a non-string impl used to silently default to "pallas",
+        // mislabelling the artifact's provenance in `smoothcache info`
+        // and every bench report that stamps it
+        let impl_name = j
+            .req("impl")?
+            .as_str()
+            .ok_or_else(|| crate::err!("manifest.json: impl must be a string"))?
+            .to_string();
         let batch_sizes = j
             .req("batch_sizes")?
             .as_usize_vec()
@@ -392,6 +399,7 @@ mod tests {
     #[test]
     fn parses_sample() {
         let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.impl_name, "pallas");
         assert_eq!(m.batch_sizes, vec![1, 2]);
         let f = m.family("image").unwrap();
         assert_eq!(f.hidden, 128);
@@ -402,6 +410,21 @@ mod tests {
             f.entry("branch.attn").unwrap().artifacts.get(&1).unwrap(),
             "image_branch_attn_b1.hlo.txt"
         );
+    }
+
+    #[test]
+    fn malformed_impl_is_a_typed_error_not_a_pallas_default() {
+        // a numeric/array impl used to silently read as "pallas",
+        // stamping wrong provenance into info output and bench reports
+        for replacement in [r#""impl": 3"#, r#""impl": ["pallas"]"#, r#""impl": null"#] {
+            let bad = SAMPLE.replacen(r#""impl": "pallas""#, replacement, 1);
+            assert_ne!(bad, SAMPLE);
+            let err = Manifest::parse_str(&bad).unwrap_err();
+            assert!(format!("{err}").contains("impl"), "{replacement}: {err}");
+        }
+        // a missing impl field is an error too
+        let missing = SAMPLE.replacen(r#""impl": "pallas","#, "", 1);
+        assert!(Manifest::parse_str(&missing).is_err());
     }
 
     #[test]

@@ -3,11 +3,14 @@
 //! Format: `b"SMCWGT01"` magic, u32 LE header length, JSON header
 //! `{"tensors": [{"name","shape","offset","count"}]}`, raw LE f32 data.
 
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::util::error::{Context, Result};
 
+use crate::tensor::quant::{ComputeMode, QuantMat};
 use crate::tensor::Tensor;
 use crate::util::json::parse;
 
@@ -16,6 +19,13 @@ const MAGIC: &[u8; 8] = b"SMCWGT01";
 #[derive(Debug, Default)]
 pub struct WeightStore {
     tensors: BTreeMap<String, Tensor>,
+    /// Lazily-built reduced-precision views of weight tensors, keyed by
+    /// `(name, mode)` — quantizing is O(elements), so each weight is
+    /// re-encoded at most once per mode and shared afterwards. RefCell
+    /// is safe here: backends are single-threaded owners (see
+    /// `runtime` module docs); GEMM pool workers only ever see the
+    /// decoded slices captured by kernel closures, never the store.
+    qcache: RefCell<HashMap<(String, ComputeMode), Arc<QuantMat>>>,
 }
 
 impl WeightStore {
@@ -26,7 +36,12 @@ impl WeightStore {
     }
 
     pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
-        self.tensors.insert(name.into(), t);
+        let name = name.into();
+        // drop any stale quantized views of the replaced tensor
+        self.qcache
+            .borrow_mut()
+            .retain(|(n, _), _| n != &name);
+        self.tensors.insert(name, t);
     }
 
     pub fn load(path: &Path) -> Result<WeightStore> {
@@ -91,13 +106,42 @@ impl WeightStore {
             }
             tensors.insert(name, Tensor::new(shape, floats[offset..offset + count].to_vec()));
         }
-        Ok(WeightStore { tensors })
+        Ok(WeightStore { tensors, ..WeightStore::default() })
     }
 
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)
             .ok_or_else(|| crate::err!("weight tensor {name:?} not found"))
+    }
+
+    /// The reduced-precision view of weight tensor `name`, quantizing
+    /// and caching it on first use. The trailing shape dimension is the
+    /// output width `n`; everything before it folds into `k`, matching
+    /// how the reference backend feeds 2-D projection weights to
+    /// [`crate::tensor::gemm::matmul`].
+    pub fn get_quant(&self, name: &str, mode: ComputeMode) -> Result<Arc<QuantMat>> {
+        if !mode.is_reduced() {
+            return Err(crate::err!("get_quant: {} has no quantized form", mode.name()));
+        }
+        let key = (name.to_string(), mode);
+        if let Some(q) = self.qcache.borrow().get(&key) {
+            return Ok(Arc::clone(q));
+        }
+        let t = self.get(name)?;
+        let n = *t
+            .shape
+            .last()
+            .ok_or_else(|| crate::err!("weight tensor {name:?} is rank 0"))?;
+        if n == 0 || t.data.is_empty() {
+            return Err(crate::err!("weight tensor {name:?} is empty"));
+        }
+        let k = t.data.len() / n;
+        let q = Arc::new(
+            QuantMat::quantize(&t.data, k, n, mode).expect("reduced mode has a quantized form"),
+        );
+        self.qcache.borrow_mut().insert(key, Arc::clone(&q));
+        Ok(q)
     }
 
     pub fn names(&self) -> impl Iterator<Item = &String> {
@@ -168,5 +212,21 @@ mod tests {
     fn missing_tensor_errors() {
         let w = WeightStore::parse_bytes(&sample_bytes()).unwrap();
         assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn get_quant_caches_and_insert_invalidates() {
+        let mut w = WeightStore::parse_bytes(&sample_bytes()).unwrap();
+        let q1 = w.get_quant("a", ComputeMode::F16).unwrap();
+        let q2 = w.get_quant("a", ComputeMode::F16).unwrap();
+        assert!(Arc::ptr_eq(&q1, &q2), "second lookup must hit the cache");
+        assert_eq!(q1.dequantize(), vec![1.0, 2.0, 3.0, 4.0], "small ints are exact in f16");
+        // replacing the tensor must drop the stale quantized view
+        w.insert("a", Tensor::new(vec![2, 2], vec![8.0, 8.0, 8.0, 8.0]));
+        let q3 = w.get_quant("a", ComputeMode::F16).unwrap();
+        assert_eq!(q3.dequantize(), vec![8.0; 4]);
+        // f32 has no quantized form; unknown tensors still error
+        assert!(w.get_quant("a", ComputeMode::F32).is_err());
+        assert!(w.get_quant("nope", ComputeMode::Int8).is_err());
     }
 }

@@ -29,7 +29,7 @@ use crate::util::error::Result;
 use crate::cache::plan::PlanRef;
 use crate::model::{Cond, Engine};
 use crate::solvers::SolverKind;
-use crate::tensor::Tensor;
+use crate::tensor::{ComputeMode, Tensor};
 
 /// One generation request's sampling configuration.
 #[derive(Clone, Debug)]
@@ -40,11 +40,22 @@ pub struct GenConfig {
     /// classifier-free guidance scale; 1.0 disables CFG (single forward).
     pub cfg_scale: f32,
     pub seed: u64,
+    /// Weight-matmul precision for every forward in this trajectory
+    /// (f32 default; f16/bf16/int8 trade exactness for bandwidth —
+    /// see docs/adr/006). Scoped around each step by [`GenSession`].
+    pub compute: ComputeMode,
 }
 
 impl GenConfig {
     pub fn new(family: &str, solver: SolverKind, steps: usize) -> GenConfig {
-        GenConfig { family: family.into(), solver, steps, cfg_scale: 1.0, seed: 0 }
+        GenConfig {
+            family: family.into(),
+            solver,
+            steps,
+            cfg_scale: 1.0,
+            seed: 0,
+            compute: ComputeMode::F32,
+        }
     }
 
     pub fn with_cfg(mut self, scale: f32) -> GenConfig {
@@ -54,6 +65,11 @@ impl GenConfig {
 
     pub fn with_seed(mut self, seed: u64) -> GenConfig {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_compute(mut self, mode: ComputeMode) -> GenConfig {
+        self.compute = mode;
         self
     }
 

@@ -29,7 +29,7 @@ use crate::cache::plan::{PlanRef, StepObs};
 use crate::cache::schedule::Decision;
 use crate::model::{Cond, Engine};
 use crate::solvers::{cfg_merge, SolverRun};
-use crate::tensor::Tensor;
+use crate::tensor::{quant, Tensor};
 use crate::util::rng::Rng;
 
 /// Summary of one executed solver step, returned by
@@ -199,7 +199,17 @@ impl<'a> GenSession<'a> {
 
     /// Like [`GenSession::step`], additionally reporting every computed
     /// branch delta to `observer` (the calibration hook).
-    pub fn step_observed(&mut self, mut observer: Option<DeltaObserver>) -> Result<StepEvent> {
+    ///
+    /// Every engine call inside the step runs under the session's
+    /// [`GenConfig::compute`] mode — scoped here (not at session
+    /// construction) so a session stepped from different threads still
+    /// sees its own precision choice.
+    pub fn step_observed(&mut self, observer: Option<DeltaObserver>) -> Result<StepEvent> {
+        let mode = self.cfg.compute;
+        quant::with_compute(mode, || self.step_inner(observer))
+    }
+
+    fn step_inner(&mut self, mut observer: Option<DeltaObserver>) -> Result<StepEvent> {
         if self.is_done() {
             return Err(crate::err!(
                 "GenSession: step() past the end of the {}-step trajectory",

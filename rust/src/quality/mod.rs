@@ -24,6 +24,7 @@ pub use ssim2d::ssim2d;
 
 use crate::linalg::{covariance, frechet_distance_sq, mean_rows};
 use crate::tensor::Tensor;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -73,6 +74,56 @@ pub fn ssim(reference: &Tensor, test: &Tensor) -> f64 {
     let c1 = (0.01 * l).powi(2);
     let c2 = (0.03 * l).powi(2);
     ((2.0 * mx * my + c1) * (2.0 * cov + c2)) / ((mx * mx + my * my + c1) * (vx + vy + c2))
+}
+
+// ---------------------------------------------------------------------------
+// Reduced-precision output gating
+// ---------------------------------------------------------------------------
+
+/// Verdict of [`precision_gate`]: how close a reduced-precision
+/// generation is to its f32 reference, and whether it clears the bar.
+#[derive(Clone, Copy, Debug)]
+pub struct PrecisionGate {
+    /// Structural similarity vs the reference: windowed [`ssim2d`] for
+    /// rank-4 [N, H, W, C] latents, the global [`ssim`] otherwise.
+    pub ssim: f64,
+    /// Spectral Fréchet distance, only for rank-3 sets with >= 4
+    /// samples (the audio-family shape); `None` elsewhere.
+    pub spectral_fd: Option<f64>,
+    /// The SSIM floor the gate was asked to hold.
+    pub min_ssim: f64,
+    /// `ssim >= min_ssim` (the spectral distance is reported, not
+    /// thresholded — it has no universal scale across families).
+    pub pass: bool,
+}
+
+/// Gate a reduced-precision output against the f32 reference for the
+/// same request: computes the structural-similarity and (where the
+/// shape supports it) spectral-distance metrics, and passes iff SSIM
+/// holds `min_ssim`. This is the acceptance check behind the
+/// `compute:` knob — see docs/adr/006 for the per-mode floors.
+pub fn precision_gate(reference: &Tensor, test: &Tensor, min_ssim: f64) -> Result<PrecisionGate> {
+    if reference.shape != test.shape {
+        return Err(crate::err!(
+            "precision_gate: shape mismatch {:?} vs {:?}",
+            reference.shape,
+            test.shape
+        ));
+    }
+    if reference.is_empty() {
+        return Err(crate::err!("precision_gate: empty tensors"));
+    }
+    if !min_ssim.is_finite() {
+        return Err(crate::err!("precision_gate: min_ssim must be finite, got {min_ssim}"));
+    }
+    let s = if reference.rank() == 4 {
+        ssim2d(reference, test)?
+    } else {
+        ssim(reference, test)
+    };
+    let spectral = (reference.rank() == 3 && reference.dim0() >= 4)
+        .then(|| spectral_fd(reference, test, 64));
+    Ok(PrecisionGate { ssim: s, spectral_fd: spectral, min_ssim, pass: s >= min_ssim })
 }
 
 // ---------------------------------------------------------------------------
@@ -347,6 +398,44 @@ mod tests {
         let is_deg = is_proxy(&fx, &degenerate, 10);
         assert!(is_div > is_deg, "{is_div} vs {is_deg}");
         assert!((is_deg - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn precision_gate_passes_identical_and_fails_noisy() {
+        let mut rng = Rng::new(70);
+        let img = Tensor::randn(vec![1, 16, 16, 4], &mut rng);
+        let g = precision_gate(&img, &img, 0.999).unwrap();
+        assert!(g.pass);
+        assert!((g.ssim - 1.0).abs() < 1e-9);
+        assert_eq!(g.spectral_fd, None, "rank-4 has no spectral metric");
+        // heavy noise must fail a high floor
+        let noisy = noisy_copy(&img, 0.8, 71);
+        let g = precision_gate(&img, &noisy, 0.99).unwrap();
+        assert!(!g.pass, "ssim {} should be below 0.99", g.ssim);
+    }
+
+    #[test]
+    fn precision_gate_picks_metric_by_rank() {
+        // rank-2 falls back to the global ssim
+        let a = random_set(1, 256, 72);
+        let g = precision_gate(&a, &noisy_copy(&a, 0.01, 73), 0.5).unwrap();
+        assert!(g.pass && g.spectral_fd.is_none());
+        // rank-3 with >= 4 samples additionally reports spectral_fd
+        let mut rng = Rng::new(74);
+        let set = Tensor::randn(vec![4, 64, 2], &mut rng);
+        let g = precision_gate(&set, &noisy_copy(&set, 0.01, 75), 0.5).unwrap();
+        assert!(g.spectral_fd.is_some());
+        assert!(g.spectral_fd.unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn precision_gate_rejects_malformed_inputs() {
+        let a = random_set(1, 16, 76);
+        let b = random_set(2, 16, 77);
+        assert!(precision_gate(&a, &b, 0.9).is_err());
+        let e = Tensor::zeros(vec![0]);
+        assert!(precision_gate(&e, &e, 0.9).is_err());
+        assert!(precision_gate(&a, &a, f64::NAN).is_err());
     }
 
     #[test]

@@ -1,8 +1,16 @@
 //! Windowed 2-D SSIM (the standard image-domain formulation, gaussian
 //! 7×7 window) — complements the global universal-quality-index form in
 //! quality::ssim for image-family comparisons.
+//!
+//! Degenerate inputs are typed errors, not silent numbers: a zero
+//! height/width used to fall through to a `0/0` mean (NaN scores that
+//! poisoned downstream gates) and, for the border clamp, an `h - 1`
+//! underflow. One-pixel dimensions are valid — the gaussian window
+//! pins to the image edge (every tap clamps onto the single row or
+//! column), which the tests pin explicitly.
 
 use crate::tensor::Tensor;
+use crate::util::error::Result;
 
 fn gaussian_kernel(radius: usize, sigma: f64) -> Vec<f64> {
     let size = 2 * radius + 1;
@@ -43,10 +51,21 @@ fn filter(img: &[f64], h: usize, w: usize, kernel: &[f64], radius: usize) -> Vec
     out
 }
 
-/// Windowed SSIM over a single-channel [H, W] plane pair.
-pub fn ssim2d_plane(a: &[f64], b: &[f64], h: usize, w: usize) -> f64 {
-    assert_eq!(a.len(), h * w);
-    assert_eq!(b.len(), h * w);
+/// Windowed SSIM over a single-channel [H, W] plane pair. Errors on
+/// zero-sized planes (one-pixel dimensions are fine: the window clamps
+/// to the edge).
+pub fn ssim2d_plane(a: &[f64], b: &[f64], h: usize, w: usize) -> Result<f64> {
+    if h == 0 || w == 0 {
+        return Err(crate::err!("ssim2d: degenerate plane {h}x{w} (both dims must be >= 1)"));
+    }
+    if a.len() != h * w || b.len() != h * w {
+        return Err(crate::err!(
+            "ssim2d: plane length mismatch: {h}x{w} needs {} values, got {} and {}",
+            h * w,
+            a.len(),
+            b.len()
+        ));
+    }
     let radius = 3;
     let kernel = gaussian_kernel(radius, 1.5);
     let mu_a = filter(a, h, w, &kernel, radius);
@@ -72,16 +91,28 @@ pub fn ssim2d_plane(a: &[f64], b: &[f64], h: usize, w: usize) -> f64 {
         total += ((2.0 * mu_a[i] * mu_b[i] + c1) * (2.0 * cov + c2))
             / ((mu_a[i] * mu_a[i] + mu_b[i] * mu_b[i] + c1) * (va + vb + c2));
     }
-    total / (h * w) as f64
+    Ok(total / (h * w) as f64)
 }
 
-/// Windowed SSIM over [1, H, W, C] image latents, averaged across
-/// channels; for batches, averaged across samples.
-pub fn ssim2d(reference: &Tensor, test: &Tensor) -> f64 {
-    assert_eq!(reference.shape, test.shape);
-    assert_eq!(reference.rank(), 4, "expected [N, H, W, C]");
+/// Windowed SSIM over [N, H, W, C] image latents, averaged across
+/// channels; for batches, averaged across samples. Errors on shape
+/// mismatch, non-rank-4 input and zero-sized dimensions.
+pub fn ssim2d(reference: &Tensor, test: &Tensor) -> Result<f64> {
+    if reference.shape != test.shape {
+        return Err(crate::err!(
+            "ssim2d: shape mismatch {:?} vs {:?}",
+            reference.shape,
+            test.shape
+        ));
+    }
+    if reference.rank() != 4 {
+        return Err(crate::err!("ssim2d: expected rank-4 [N, H, W, C], got {:?}", reference.shape));
+    }
     let (n, h, w, c) =
         (reference.shape[0], reference.shape[1], reference.shape[2], reference.shape[3]);
+    if n == 0 || c == 0 {
+        return Err(crate::err!("ssim2d: degenerate batch/channel dims in {:?}", reference.shape));
+    }
     let mut total = 0.0;
     for s in 0..n {
         for ch in 0..c {
@@ -90,10 +121,10 @@ pub fn ssim2d(reference: &Tensor, test: &Tensor) -> f64 {
                     .map(|i| t.data[s * h * w * c + i * c + ch] as f64)
                     .collect()
             };
-            total += ssim2d_plane(&plane(reference), &plane(test), h, w);
+            total += ssim2d_plane(&plane(reference), &plane(test), h, w)?;
         }
     }
-    total / (n * c) as f64
+    Ok(total / (n * c) as f64)
 }
 
 #[cfg(test)]
@@ -105,7 +136,7 @@ mod tests {
     fn identical_images_score_one() {
         let mut rng = Rng::new(1);
         let img = Tensor::randn(vec![1, 16, 16, 4], &mut rng);
-        assert!((ssim2d(&img, &img) - 1.0).abs() < 1e-9);
+        assert!((ssim2d(&img, &img).unwrap() - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -116,8 +147,8 @@ mod tests {
         let small = img.map(|v| v + 0.05 * r1.normal_f32());
         let mut r2 = Rng::new(3);
         let big = img.map(|v| v + 0.8 * r2.normal_f32());
-        let s1 = ssim2d(&img, &small);
-        let s2 = ssim2d(&img, &big);
+        let s1 = ssim2d(&img, &small).unwrap();
+        let s2 = ssim2d(&img, &big).unwrap();
         assert!(s1 > s2, "{s1} vs {s2}");
         assert!(s2 < 0.9);
     }
@@ -134,9 +165,47 @@ mod tests {
         let transposed: Vec<f64> = (0..h * h)
             .map(|i| base[(i % h) * h + i / h])
             .collect();
-        let s_bright = ssim2d_plane(&base, &bright, h, h);
-        let s_trans = ssim2d_plane(&base, &transposed, h, h);
+        let s_bright = ssim2d_plane(&base, &bright, h, h).unwrap();
+        let s_trans = ssim2d_plane(&base, &transposed, h, h).unwrap();
         assert!(s_bright > s_trans);
+    }
+
+    #[test]
+    fn degenerate_dims_are_typed_errors_not_nan() {
+        // a zero-sized plane used to produce a silent 0/0 = NaN score
+        let err = ssim2d_plane(&[], &[], 0, 5).unwrap_err();
+        assert!(format!("{err}").contains("ssim2d"), "{err}");
+        assert!(ssim2d_plane(&[], &[], 5, 0).is_err());
+        // mismatched plane lengths are caught too
+        assert!(ssim2d_plane(&[1.0; 4], &[1.0; 3], 2, 2).is_err());
+        // tensor form: zero batch/channel/spatial dims all error
+        for shape in [vec![0, 4, 4, 1], vec![1, 0, 4, 1], vec![1, 4, 0, 1], vec![1, 4, 4, 0]] {
+            let t = Tensor::zeros(shape.clone());
+            assert!(ssim2d(&t, &t).is_err(), "{shape:?} must be rejected");
+        }
+        // shape mismatch and wrong rank are errors, not panics
+        let a = Tensor::zeros(vec![1, 4, 4, 1]);
+        let b = Tensor::zeros(vec![1, 4, 5, 1]);
+        assert!(ssim2d(&a, &b).is_err());
+        assert!(ssim2d(&Tensor::zeros(vec![4, 4]), &Tensor::zeros(vec![4, 4])).is_err());
+    }
+
+    #[test]
+    fn one_pixel_dims_pin_the_window_to_the_edge() {
+        // every gaussian tap clamps onto the single row/column, so the
+        // local stats degenerate to exact per-pixel stats: identical
+        // planes score exactly 1 and no index underflows
+        let col: Vec<f64> = (0..8).map(|i| i as f64 * 0.3 - 1.0).collect();
+        assert!((ssim2d_plane(&col, &col, 8, 1).unwrap() - 1.0).abs() < 1e-9);
+        assert!((ssim2d_plane(&col, &col, 1, 8).unwrap() - 1.0).abs() < 1e-9);
+        let px = [0.7];
+        assert!((ssim2d_plane(&px, &px, 1, 1).unwrap() - 1.0).abs() < 1e-9);
+        // and a perturbed single column still scores below identical
+        let noisy: Vec<f64> = col.iter().map(|v| v + 0.4 * (v * 7.0).sin()).collect();
+        assert!(ssim2d_plane(&col, &noisy, 8, 1).unwrap() < 1.0);
+        // tensor form with 1-pixel spatial dims works end to end
+        let t = Tensor::new(vec![1, 1, 8, 1], col.iter().map(|&v| v as f32).collect());
+        assert!((ssim2d(&t, &t).unwrap() - 1.0).abs() < 1e-9);
     }
 
     #[test]

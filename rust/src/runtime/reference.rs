@@ -10,9 +10,19 @@
 //!
 //! All matmuls — projections, FFN, per-head attention products — route
 //! through [`crate::tensor::gemm`], the cache-blocked threadpool GEMM
-//! whose results are bitwise invariant to the configured thread count
-//! (`--threads` / `SMOOTHCACHE_THREADS`), so caching decisions and
-//! calibration curves never depend on parallelism.
+//! (SIMD-dispatched, bitwise identical across kernels) whose results
+//! are bitwise invariant to the configured thread count (`--threads` /
+//! `SMOOTHCACHE_THREADS`), so caching decisions and calibration curves
+//! never depend on parallelism.
+//!
+//! When the ambient [`crate::tensor::quant::ComputeMode`] is a reduced
+//! mode (pinned per generation step from the request's `compute:`
+//! knob), every *weight* matmul — projections, FFN, adaLN modulation —
+//! switches to [`crate::tensor::quant::matmul_q`] over a per-store
+//! cached [`crate::tensor::quant::QuantMat`]. Attention score/value
+//! products stay f32: they multiply activations, not weights, and
+//! weight-only quantization is the ladder this backend implements (see
+//! docs/adr/006).
 //!
 //! Weights are synthesized deterministically per (family, tensor name)
 //! with [`crate::util::rng::Rng`] when no `weights.bin` artifact exists
@@ -29,7 +39,7 @@ use super::{Backend, EmbedOut, RuntimeStats, StepCtx};
 use crate::model::manifest::{branch_weight_names, FamilyManifest};
 use crate::model::weights::WeightStore;
 use crate::model::Cond;
-use crate::tensor::{gemm, Tensor};
+use crate::tensor::{gemm, quant, Tensor};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
@@ -107,10 +117,8 @@ impl Backend for ReferenceBackend {
         let xp = patchify(fm, x)?;
 
         // --- tokens = xp @ patch_w + patch_b + pos ---------------------
-        let patch_w = ws.get("embed.patch_w")?;
-        let patch_b = ws.get("embed.patch_b")?;
         let pos = ws.get("embed.pos")?;
-        let mut tokens = affine(&xp, b * s, pd, patch_w, Some(patch_b))?;
+        let mut tokens = affine(ws, "embed.patch_w", Some("embed.patch_b"), &xp, b * s, pd)?;
         for bi in 0..b {
             for si in 0..s {
                 for j in 0..d {
@@ -122,9 +130,9 @@ impl Backend for ReferenceBackend {
 
         // --- timestep embedding → c [B, D] -----------------------------
         let temb = timestep_embedding(t, fm.t_freq_dim);
-        let h1 = affine(&temb, b, fm.t_freq_dim, ws.get("embed.temb_w1")?, Some(ws.get("embed.temb_b1")?))?;
+        let h1 = affine(ws, "embed.temb_w1", Some("embed.temb_b1"), &temb, b, fm.t_freq_dim)?;
         let h1: Vec<f32> = h1.into_iter().map(silu).collect();
-        let mut c = affine(&h1, b, d, ws.get("embed.temb_w2")?, Some(ws.get("embed.temb_b2")?))?;
+        let mut c = affine(ws, "embed.temb_w2", Some("embed.temb_b2"), &h1, b, d)?;
 
         // --- conditioning ---------------------------------------------
         let mut cond_tokens: Option<Tensor> = None;
@@ -222,9 +230,9 @@ impl Backend for ReferenceBackend {
         let s = fm.seq_len;
         let pd = patch_dim(fm);
 
-        let parts = mod_params(&sc.c, b, d, ws.get("final.mod_w")?, ws.get("final.mod_b")?, 2)?;
+        let parts = mod_params(&sc.c, b, d, ws, "final.mod_w", "final.mod_b", 2)?;
         let h = ln_modulate(tokens, b, s, d, &parts[0], &parts[1]);
-        let y = affine(&h, b * s, d, ws.get("final.lin_w")?, Some(ws.get("final.lin_b")?))?;
+        let y = affine(ws, "final.lin_w", Some("final.lin_b"), &h, b * s, d)?;
         let out = unpatchify(fm, &y, b, pd)?;
         self.tick(t0);
         Ok(out)
@@ -353,14 +361,16 @@ fn branch_attn(
     c: &Tensor,
 ) -> Result<Tensor> {
     let d = fm.hidden;
-    let parts = mod_params(c, b, d, ws.get(&format!("{prefix}mod_w"))?, ws.get(&format!("{prefix}mod_b"))?, 3)?;
+    let parts =
+        mod_params(c, b, d, ws, &format!("{prefix}mod_w"), &format!("{prefix}mod_b"), 3)?;
     let h = ln_modulate(x, b, s, d, &parts[0], &parts[1]);
     let qkv = affine(
+        ws,
+        &format!("{prefix}qkv_w"),
+        Some(&format!("{prefix}qkv_b")),
         &h,
         b * s,
         d,
-        ws.get(&format!("{prefix}qkv_w"))?,
-        Some(ws.get(&format!("{prefix}qkv_b"))?),
     )?;
     // split [B*S, 3D] into q/k/v [B*S, D]
     let mut q = vec![0.0f32; b * s * d];
@@ -372,13 +382,7 @@ fn branch_attn(
         v[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d]);
     }
     let o = attention(&q, &k, &v, b, s, s, d, fm.heads);
-    let y = affine(
-        &o,
-        b * s,
-        d,
-        ws.get(&format!("{prefix}o_w"))?,
-        Some(ws.get(&format!("{prefix}o_b"))?),
-    )?;
+    let y = affine(ws, &format!("{prefix}o_w"), Some(&format!("{prefix}o_b")), &o, b * s, d)?;
     Ok(gate(y, b, s, d, &parts[2]))
 }
 
@@ -398,21 +402,17 @@ fn branch_xattn(
     if cond.dim0() != b {
         crate::bail!("{prefix}: cond batch {} != token batch {b}", cond.dim0());
     }
-    let parts = mod_params(c, b, d, ws.get(&format!("{prefix}mod_w"))?, ws.get(&format!("{prefix}mod_b"))?, 3)?;
+    let parts =
+        mod_params(c, b, d, ws, &format!("{prefix}mod_w"), &format!("{prefix}mod_b"), 3)?;
     let h = ln_modulate(x, b, s, d, &parts[0], &parts[1]);
-    let q = affine(
-        &h,
-        b * s,
-        d,
-        ws.get(&format!("{prefix}q_w"))?,
-        Some(ws.get(&format!("{prefix}q_b"))?),
-    )?;
+    let q = affine(ws, &format!("{prefix}q_w"), Some(&format!("{prefix}q_b")), &h, b * s, d)?;
     let kv = affine(
+        ws,
+        &format!("{prefix}kv_w"),
+        Some(&format!("{prefix}kv_b")),
         &cond.data,
         b * sc,
         d,
-        ws.get(&format!("{prefix}kv_w"))?,
-        Some(ws.get(&format!("{prefix}kv_b"))?),
     )?;
     let mut k = vec![0.0f32; b * sc * d];
     let mut v = vec![0.0f32; b * sc * d];
@@ -421,13 +421,7 @@ fn branch_xattn(
         v[r * d..(r + 1) * d].copy_from_slice(&kv[r * 2 * d + d..r * 2 * d + 2 * d]);
     }
     let o = attention(&q, &k, &v, b, s, sc, d, fm.heads);
-    let y = affine(
-        &o,
-        b * s,
-        d,
-        ws.get(&format!("{prefix}o_w"))?,
-        Some(ws.get(&format!("{prefix}o_b"))?),
-    )?;
+    let y = affine(ws, &format!("{prefix}o_w"), Some(&format!("{prefix}o_b")), &o, b * s, d)?;
     Ok(gate(y, b, s, d, &parts[2]))
 }
 
@@ -443,25 +437,14 @@ fn branch_ffn(
 ) -> Result<Tensor> {
     let d = fm.hidden;
     let dff = d * fm.mlp_ratio;
-    let parts = mod_params(c, b, d, ws.get(&format!("{prefix}mod_w"))?, ws.get(&format!("{prefix}mod_b"))?, 3)?;
+    let parts =
+        mod_params(c, b, d, ws, &format!("{prefix}mod_w"), &format!("{prefix}mod_b"), 3)?;
     let h = ln_modulate(x, b, s, d, &parts[0], &parts[1]);
-    let mut h1 = affine(
-        &h,
-        b * s,
-        d,
-        ws.get(&format!("{prefix}w1"))?,
-        Some(ws.get(&format!("{prefix}b1"))?),
-    )?;
+    let mut h1 = affine(ws, &format!("{prefix}w1"), Some(&format!("{prefix}b1")), &h, b * s, d)?;
     for vme in h1.iter_mut() {
         *vme = gelu(*vme);
     }
-    let y = affine(
-        &h1,
-        b * s,
-        dff,
-        ws.get(&format!("{prefix}w2"))?,
-        Some(ws.get(&format!("{prefix}b2"))?),
-    )?;
+    let y = affine(ws, &format!("{prefix}w2"), Some(&format!("{prefix}b2")), &h1, b * s, dff)?;
     Ok(gate(y, b, s, d, &parts[2]))
 }
 
@@ -479,20 +462,46 @@ fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
-/// `y = x @ w + b` for row-major `x` `[rows, din]`, `w` `[din, dout]`.
-/// The heavy lifting happens in [`crate::tensor::gemm`] — cache-blocked
-/// and row-panel-parallel over the shared compute pool, with f32
-/// accumulation order (and therefore results) bitwise independent of
-/// the thread count.
-fn affine(x: &[f32], rows: usize, din: usize, w: &Tensor, b: Option<&Tensor>) -> Result<Vec<f32>> {
+/// `y = x @ w + b` for the weight tensor named `wname` (`[din, dout]`)
+/// with row-major `x` `[rows, din]`. The heavy lifting happens in
+/// [`crate::tensor::gemm`] — cache-blocked and row-panel-parallel over
+/// the shared compute pool, with f32 accumulation order (and therefore
+/// results) bitwise independent of thread count and kernel choice.
+///
+/// This is the single seam every weight matmul passes through: when the
+/// ambient compute mode is reduced, the weight is fetched as a cached
+/// [`quant::QuantMat`] and the product runs through
+/// [`quant::matmul_q`] instead (bias always stays f32).
+fn affine(
+    ws: &WeightStore,
+    wname: &str,
+    bname: Option<&str>,
+    x: &[f32],
+    rows: usize,
+    din: usize,
+) -> Result<Vec<f32>> {
+    let w = ws.get(wname)?;
     if w.shape.len() != 2 || w.shape[0] != din {
-        crate::bail!("affine: weight shape {:?} incompatible with input dim {din}", w.shape);
+        crate::bail!(
+            "affine: weight {wname:?} shape {:?} incompatible with input dim {din}",
+            w.shape
+        );
     }
     let dout = w.shape[1];
     if x.len() != rows * din {
         crate::bail!("affine: input len {} != rows {rows} × din {din}", x.len());
     }
-    Ok(gemm::matmul(x, rows, din, &w.data, dout, b.map(|t| t.data.as_slice())))
+    let bias_t = match bname {
+        Some(bn) => Some(ws.get(bn)?),
+        None => None,
+    };
+    let bias = bias_t.map(|t| t.data.as_slice());
+    let mode = quant::compute_mode();
+    if mode.is_reduced() {
+        let q = ws.get_quant(wname, mode)?;
+        return Ok(quant::matmul_q(x, rows, din, &q, bias));
+    }
+    Ok(gemm::matmul(x, rows, din, &w.data, dout, bias))
 }
 
 /// adaLN parameters: `silu(c) @ mod_w + mod_b` split into `n` chunks of
@@ -501,12 +510,13 @@ fn mod_params(
     c: &Tensor,
     b: usize,
     d: usize,
-    mod_w: &Tensor,
-    mod_b: &Tensor,
+    ws: &WeightStore,
+    mod_w: &str,
+    mod_b: &str,
     n: usize,
 ) -> Result<Vec<Vec<f32>>> {
     let sc: Vec<f32> = c.data.iter().map(|&x| silu(x)).collect();
-    let p = affine(&sc, b, d, mod_w, Some(mod_b))?; // [B, n*D]
+    let p = affine(ws, mod_w, Some(mod_b), &sc, b, d)?; // [B, n*D]
     let mut parts = vec![vec![0.0f32; b * d]; n];
     for bi in 0..b {
         for (j, part) in parts.iter_mut().enumerate() {
@@ -623,8 +633,8 @@ fn attention(
                 *sv *= inv;
             }
         }
-        // [Sq, dh] = P @ Vh (the axpy kernel skips p == 0 terms exactly
-        // like the serial path did)
+        // [Sq, dh] = P @ Vh — attention products stay f32 in every
+        // compute mode (activations, not weights)
         gemm::matmul(&scores, sq, sk, &vh, dh, None)
     };
 
@@ -1064,6 +1074,40 @@ mod tests {
         assert_eq!(eps.shape, vec![2, 16, 16, 4]);
         let st = be.stats();
         assert!(st.executions >= 2);
+    }
+
+    #[test]
+    fn reduced_compute_modes_perturb_but_track_the_f32_branch() {
+        let fm = image_fm();
+        let be = loaded_backend(&fm);
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(vec![1, 16, 16, 4], &mut rng);
+        let emb = be.embed(&fm, &x, &[0.6], &Cond::Label(vec![1])).unwrap();
+        let ctx = be.make_step_ctx(&emb).unwrap();
+        let f32_out = be.branch(&fm, 0, "ffn", &emb.tokens, &ctx).unwrap();
+        for mode in quant::ComputeMode::REDUCED {
+            let a = quant::with_compute(mode, || be.branch(&fm, 0, "ffn", &emb.tokens, &ctx))
+                .unwrap();
+            let b = quant::with_compute(mode, || be.branch(&fm, 0, "ffn", &emb.tokens, &ctx))
+                .unwrap();
+            assert_eq!(a, b, "{} branch must be deterministic", mode.name());
+            assert_ne!(a.data, f32_out.data, "{} must actually re-encode weights", mode.name());
+            let scale = f32_out.max_abs().max(1e-6);
+            let max_err = a
+                .data
+                .iter()
+                .zip(&f32_out.data)
+                .map(|(p, q)| (p - q).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err / scale < 0.1,
+                "{}: branch drifted {max_err} (scale {scale})",
+                mode.name()
+            );
+        }
+        // back outside the scope the mode is f32 again
+        let again = be.branch(&fm, 0, "ffn", &emb.tokens, &ctx).unwrap();
+        assert_eq!(again, f32_out);
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! TCP JSON-lines serving front-end + client library.
 //!
 //! One JSON object per line in each direction. Request fields:
-//! `family`, `steps`, `solver`, `policy`, `cfg`, `seed`, and either
+//! `family`, `steps`, `solver`, `policy`, `cfg`, `seed`, `compute`
+//! (weight-matmul precision: `f32` default, or `f16` / `bf16` /
+//! `int8`), and either
 //! `label` (image) or `prompt_ids` (audio/video); `return_latent`
 //! includes the generated latent in the response; `stream: true`
 //! switches the reply to streaming mode (one `{"event":"step",…}` line
@@ -43,6 +45,7 @@ use crate::coordinator::{
 };
 use crate::model::Cond;
 use crate::solvers::SolverKind;
+use crate::tensor::ComputeMode;
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 
@@ -82,6 +85,15 @@ pub fn parse_request(j: &Json) -> Result<(Request, WireOpts)> {
         SolverKind::parse(solver_name).ok_or_else(|| crate::err!("unknown solver {solver_name}"))?;
     let policy_s = j.get("policy").and_then(|v| v.as_str()).unwrap_or("no-cache");
     let policy = Policy::parse(policy_s)?;
+    let compute = match j.get("compute") {
+        None => ComputeMode::F32,
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| {
+                crate::err!("compute must be a string, got {}", v.to_string())
+            })?;
+            ComputeMode::parse(s)?
+        }
+    };
     let cfg_scale = j.get("cfg").and_then(|v| v.as_f64()).unwrap_or(1.0) as f32;
     // seeds are parsed losslessly: an `as u64` cast used to silently
     // truncate negative and mangle > 2^53 values, changing the latent
@@ -113,7 +125,7 @@ pub fn parse_request(j: &Json) -> Result<(Request, WireOpts)> {
             .ok_or_else(|| crate::err!("deadline_policy must be best-effort or reject, got {s:?}"))?,
     };
     Ok((
-        Request { id: 0, family, cond, solver, steps, cfg_scale, seed, policy },
+        Request { id: 0, family, cond, solver, steps, cfg_scale, seed, policy, compute },
         WireOpts { return_latent, stream, deadline_ms, deadline_policy },
     ))
 }
@@ -604,9 +616,36 @@ mod tests {
         assert_eq!(r.steps, 12);
         assert_eq!(r.cfg_scale, 1.5);
         assert_eq!(r.policy, Policy::smooth(0.18));
+        assert_eq!(r.compute, ComputeMode::F32);
         assert!(!opts.return_latent);
         assert!(!opts.stream);
         assert_eq!(opts.deadline_ms, None);
+    }
+
+    #[test]
+    fn parse_request_compute_field() {
+        for (wire, mode) in [
+            ("f32", ComputeMode::F32),
+            ("f16", ComputeMode::F16),
+            ("bf16", ComputeMode::Bf16),
+            ("int8", ComputeMode::Int8),
+        ] {
+            let j = parse(&format!(
+                r#"{{"family":"image","label":1,"compute":"{wire}"}}"#
+            ))
+            .unwrap();
+            assert_eq!(parse_request(&j).unwrap().0.compute, mode);
+        }
+        // unknown names and non-string values are wire errors, not
+        // silent f32 fallbacks
+        for bad in [
+            r#"{"family":"image","label":1,"compute":"fp8"}"#,
+            r#"{"family":"image","label":1,"compute":16}"#,
+        ] {
+            let j = parse(bad).unwrap();
+            let err = parse_request(&j).unwrap_err();
+            assert!(format!("{err}").contains("compute"), "{bad}: {err}");
+        }
     }
 
     #[test]

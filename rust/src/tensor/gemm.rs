@@ -1,5 +1,5 @@
 //! Cache-blocked, threadpool-parallel f32 GEMM (the shared parallel
-//! compute substrate).
+//! compute substrate) with a runtime-dispatched SIMD microkernel.
 //!
 //! Every reference-backend matmul — token/QKV/output projections, the
 //! FFN, the per-head score/value products inside attention — routes
@@ -11,11 +11,27 @@
 //!
 //! **Determinism contract:** for a given output element the f32
 //! accumulation order is ascending `k`, one term at a time, regardless
-//! of thread count, panel boundaries or k-blocking — so results are
-//! *bitwise identical* across `--threads` settings and equal to the
-//! naive serial triple loop. `tests/parallel_parity.rs` and CI
-//! (`SMOOTHCACHE_THREADS=1` vs `4`) lock this in; caching decisions
-//! must never depend on parallelism.
+//! of thread count, panel boundaries, k-blocking *or kernel choice* —
+//! so results are *bitwise identical* across `--threads` settings,
+//! equal to the naive serial triple loop, and identical between the
+//! scalar and SIMD kernels. `tests/parallel_parity.rs` and CI
+//! (`SMOOTHCACHE_THREADS=1` vs `4`, `SMOOTHCACHE_FORCE_SCALAR=1` vs
+//! auto) lock this in; caching decisions must never depend on
+//! parallelism or on which kernel dispatched.
+//!
+//! **Kernel dispatch** (see docs/adr/006): the SIMD microkernels
+//! vectorise across output *columns* — every lane performs the same
+//! multiply-then-add sequence in ascending `ki` that the scalar kernel
+//! performs for that element, and FMA is deliberately not used (a fused
+//! single-rounding multiply-add would diverge from the scalar two-
+//! rounding sequence). That makes runtime feature detection safe: the
+//! choice of kernel is a pure performance decision, never a numerics
+//! one, and the scalar kernel stays the always-available parity
+//! reference. Resolution order (first match wins):
+//! 1. a [`with_kernel`] scope on the calling thread,
+//! 2. the `SMOOTHCACHE_FORCE_SCALAR` environment variable (any value
+//!    except `0`/empty forces [`Kernel::Scalar`]),
+//! 3. auto: AVX2 on x86_64 when detected, NEON on aarch64, else scalar.
 //!
 //! Thread-count resolution (first match wins):
 //! 1. a [`with_threads`] scope on the calling thread,
@@ -37,8 +53,9 @@ use crate::util::threadpool::{on_worker_thread, ThreadPool};
 
 /// k-dimension block: a `KC x n` slab of `w` (`KC x 512` f32 = 256 KiB
 /// at the largest builtin width) is reused across every row of a panel
-/// before the walk advances.
-const KC: usize = 128;
+/// before the walk advances. Public so shape-coverage tests can probe
+/// the `k < KC` / `k > KC` boundary deliberately.
+pub const KC: usize = 128;
 
 /// Below this many multiply-accumulates a GEMM runs inline: job
 /// dispatch over the channel-based pool costs more than it buys.
@@ -118,12 +135,110 @@ fn pool_for(n: usize) -> Arc<ThreadPool> {
 }
 
 // ---------------------------------------------------------------------------
-// Serial panel kernels
+// Kernel selection
+// ---------------------------------------------------------------------------
+
+/// Which panel kernel a GEMM dispatches to. Both choices produce
+/// bitwise-identical results (see the module docs); `Scalar` exists so
+/// tests and CI can pin the reference implementation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kernel {
+    /// Runtime-detected SIMD microkernel when available, scalar
+    /// otherwise.
+    Auto,
+    /// The scalar reference kernel, unconditionally.
+    Scalar,
+}
+
+thread_local! {
+    /// Per-thread override installed by [`with_kernel`]; `None` = defer
+    /// to the environment / auto detection.
+    static TL_KERNEL: Cell<Option<Kernel>> = const { Cell::new(None) };
+}
+
+fn env_force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("SMOOTHCACHE_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// The kernel choice the next GEMM on this thread will use.
+pub fn kernel() -> Kernel {
+    if let Some(k) = TL_KERNEL.with(|c| c.get()) {
+        return k;
+    }
+    if env_force_scalar() {
+        Kernel::Scalar
+    } else {
+        Kernel::Auto
+    }
+}
+
+/// Run `f` with this thread's kernel choice pinned (restored
+/// afterwards, panic-safe). An explicit scope outranks the
+/// `SMOOTHCACHE_FORCE_SCALAR` environment knob so the parity suite can
+/// compare both kernels in either CI lane.
+pub fn with_kernel<R>(kind: Kernel, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Kernel>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TL_KERNEL.with(|c| c.set(self.0));
+        }
+    }
+    let prev = TL_KERNEL.with(|c| c.replace(Some(kind)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Whether a SIMD microkernel exists for this CPU. Detection runs once;
+/// the answer never affects results, only speed.
+fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static S: OnceLock<bool> = OnceLock::new();
+        return *S.get_or_init(avx2::available);
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return true; // NEON is baseline on aarch64
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
+fn use_simd() -> bool {
+    kernel() == Kernel::Auto && simd_supported()
+}
+
+/// Name of the kernel the next GEMM on this thread will dispatch to
+/// (`"avx2"` | `"neon"` | `"scalar"`) — introspection for bench
+/// metadata and logs.
+pub fn active_kernel_name() -> &'static str {
+    if !use_simd() {
+        return "scalar";
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        return "avx2";
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return "neon";
+    }
+    #[allow(unreachable_code)]
+    "scalar"
+}
+
+// ---------------------------------------------------------------------------
+// Scalar panel kernels (the parity reference)
 // ---------------------------------------------------------------------------
 
 /// `out[rows, n] = x[rows, k] @ w[k, n] (+ bias)`, k-blocked, axpy form:
 /// each output row accumulates terms in ascending `k`, one at a time.
-fn gemm_panel(
+fn gemm_panel_scalar(
     out: &mut [f32],
     x: &[f32],
     rows: usize,
@@ -149,9 +264,6 @@ fn gemm_panel(
             let orow = &mut out[r * n..(r + 1) * n];
             for ki in k0..kend {
                 let xv = xrow[ki];
-                if xv == 0.0 {
-                    continue;
-                }
                 let wrow = &w[ki * n..(ki + 1) * n];
                 for (o, &wv) in orow.iter_mut().zip(wrow) {
                     *o += xv * wv;
@@ -164,7 +276,7 @@ fn gemm_panel(
 
 /// `out[rows, n] = x[rows, k] @ wt[n, k]^T (+ bias)` — transposed-B
 /// variant (each output element is a running dot over ascending `k`).
-fn gemm_bt_panel(
+fn gemm_bt_panel_scalar(
     out: &mut [f32],
     x: &[f32],
     rows: usize,
@@ -193,6 +305,395 @@ fn gemm_bt_panel(
 }
 
 // ---------------------------------------------------------------------------
+// AVX2 microkernel (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! 4-row by 16-column register-tiled microkernel. Lanes run across
+    //! output columns, so each lane executes the exact scalar sequence
+    //! for its element: load w once per 4 rows, broadcast x, multiply,
+    //! then add (two roundings — never FMA). Accumulators live in ymm
+    //! registers across a whole k-block; the intermediate loads/stores
+    //! of `out` between blocks are exact and do not perturb values.
+
+    use core::arch::x86_64::*;
+
+    use super::KC;
+
+    /// Row tile: accumulator rows held in registers at once.
+    const MR: usize = 4;
+    /// f32 lanes per ymm vector.
+    const LANES: usize = 8;
+
+    pub fn available() -> bool {
+        std::is_x86_feature_detected!("avx2")
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 via [`available`]. Slice lengths
+    /// must satisfy the same invariants as the scalar kernel.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_panel(
+        out: &mut [f32],
+        x: &[f32],
+        rows: usize,
+        k: usize,
+        w: &[f32],
+        n: usize,
+        bias: Option<&[f32]>,
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        debug_assert_eq!(x.len(), rows * k);
+        for r in 0..rows {
+            let orow = &mut out[r * n..(r + 1) * n];
+            match bias {
+                Some(b) => orow.copy_from_slice(b),
+                None => orow.fill(0.0),
+            }
+        }
+        let op = out.as_mut_ptr();
+        let xp = x.as_ptr();
+        let wp = w.as_ptr();
+        let mut k0 = 0;
+        while k0 < k {
+            let kend = (k0 + KC).min(k);
+            let mut r0 = 0;
+            while r0 < rows {
+                let mr = (rows - r0).min(MR);
+                let mut j = 0;
+                // 4 x 16 tile: two ymm column vectors per row
+                while j + 2 * LANES <= n {
+                    let mut acc0 = [_mm256_setzero_ps(); MR];
+                    let mut acc1 = [_mm256_setzero_ps(); MR];
+                    for ri in 0..mr {
+                        let base = (r0 + ri) * n + j;
+                        acc0[ri] = _mm256_loadu_ps(op.add(base));
+                        acc1[ri] = _mm256_loadu_ps(op.add(base + LANES));
+                    }
+                    for ki in k0..kend {
+                        let w0 = _mm256_loadu_ps(wp.add(ki * n + j));
+                        let w1 = _mm256_loadu_ps(wp.add(ki * n + j + LANES));
+                        for ri in 0..mr {
+                            let xv = _mm256_set1_ps(*xp.add((r0 + ri) * k + ki));
+                            acc0[ri] = _mm256_add_ps(acc0[ri], _mm256_mul_ps(xv, w0));
+                            acc1[ri] = _mm256_add_ps(acc1[ri], _mm256_mul_ps(xv, w1));
+                        }
+                    }
+                    for ri in 0..mr {
+                        let base = (r0 + ri) * n + j;
+                        _mm256_storeu_ps(op.add(base), acc0[ri]);
+                        _mm256_storeu_ps(op.add(base + LANES), acc1[ri]);
+                    }
+                    j += 2 * LANES;
+                }
+                // one remaining full vector of columns
+                while j + LANES <= n {
+                    let mut acc = [_mm256_setzero_ps(); MR];
+                    for ri in 0..mr {
+                        acc[ri] = _mm256_loadu_ps(op.add((r0 + ri) * n + j));
+                    }
+                    for ki in k0..kend {
+                        let wv = _mm256_loadu_ps(wp.add(ki * n + j));
+                        for ri in 0..mr {
+                            let xv = _mm256_set1_ps(*xp.add((r0 + ri) * k + ki));
+                            acc[ri] = _mm256_add_ps(acc[ri], _mm256_mul_ps(xv, wv));
+                        }
+                    }
+                    for ri in 0..mr {
+                        _mm256_storeu_ps(op.add((r0 + ri) * n + j), acc[ri]);
+                    }
+                    j += LANES;
+                }
+                // scalar column tail (< 8 columns), same per-element order
+                if j < n {
+                    for ri in 0..mr {
+                        let r = r0 + ri;
+                        for ki in k0..kend {
+                            let xv = *xp.add(r * k + ki);
+                            for jj in j..n {
+                                *op.add(r * n + jj) += xv * *wp.add(ki * n + jj);
+                            }
+                        }
+                    }
+                }
+                r0 += mr;
+            }
+            k0 = kend;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 via [`available`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_bt_panel(
+        out: &mut [f32],
+        x: &[f32],
+        rows: usize,
+        k: usize,
+        wt: &[f32],
+        n: usize,
+        bias: Option<&[f32]>,
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        debug_assert_eq!(x.len(), rows * k);
+        // j-blocks of wt are transposed into [k, LANES] so the inner
+        // loop reads contiguous vectors while each element still
+        // accumulates in ascending k (identical to the scalar dot).
+        let mut packed = vec![0.0f32; k.max(1) * LANES];
+        let pp = packed.as_mut_ptr();
+        let op = out.as_mut_ptr();
+        let xp = x.as_ptr();
+        let wtp = wt.as_ptr();
+        let mut j = 0;
+        while j + LANES <= n {
+            for ki in 0..k {
+                for l in 0..LANES {
+                    *pp.add(ki * LANES + l) = *wtp.add((j + l) * k + ki);
+                }
+            }
+            let binit = match bias {
+                Some(b) => _mm256_loadu_ps(b.as_ptr().add(j)),
+                None => _mm256_setzero_ps(),
+            };
+            let mut r0 = 0;
+            while r0 < rows {
+                let mr = (rows - r0).min(MR);
+                let mut acc = [binit; MR];
+                for ki in 0..k {
+                    let wv = _mm256_loadu_ps(pp.add(ki * LANES));
+                    for ri in 0..mr {
+                        let xv = _mm256_set1_ps(*xp.add((r0 + ri) * k + ki));
+                        acc[ri] = _mm256_add_ps(acc[ri], _mm256_mul_ps(xv, wv));
+                    }
+                }
+                for ri in 0..mr {
+                    _mm256_storeu_ps(op.add((r0 + ri) * n + j), acc[ri]);
+                }
+                r0 += mr;
+            }
+            j += LANES;
+        }
+        // scalar tail columns: running dot, ascending k
+        for jj in j..n {
+            for r in 0..rows {
+                let mut acc = match bias {
+                    Some(b) => b[jj],
+                    None => 0.0,
+                };
+                for ki in 0..k {
+                    acc += *xp.add(r * k + ki) * *wtp.add(jj * k + ki);
+                }
+                *op.add(r * n + jj) = acc;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON microkernel (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! 4-row by 4-column register-tiled microkernel; same ordering
+    //! discipline as the AVX2 path (multiply then add — `vmlaq_f32`
+    //! would emit fused FMLA and break scalar parity, so it is avoided).
+
+    use core::arch::aarch64::*;
+
+    use super::KC;
+
+    const MR: usize = 4;
+    const LANES: usize = 4;
+
+    /// # Safety
+    /// NEON is baseline on aarch64; slice invariants as per the scalar
+    /// kernel.
+    pub unsafe fn gemm_panel(
+        out: &mut [f32],
+        x: &[f32],
+        rows: usize,
+        k: usize,
+        w: &[f32],
+        n: usize,
+        bias: Option<&[f32]>,
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        debug_assert_eq!(x.len(), rows * k);
+        for r in 0..rows {
+            let orow = &mut out[r * n..(r + 1) * n];
+            match bias {
+                Some(b) => orow.copy_from_slice(b),
+                None => orow.fill(0.0),
+            }
+        }
+        let op = out.as_mut_ptr();
+        let xp = x.as_ptr();
+        let wp = w.as_ptr();
+        let mut k0 = 0;
+        while k0 < k {
+            let kend = (k0 + KC).min(k);
+            let mut r0 = 0;
+            while r0 < rows {
+                let mr = (rows - r0).min(MR);
+                let mut j = 0;
+                while j + LANES <= n {
+                    let mut acc = [vdupq_n_f32(0.0); MR];
+                    for ri in 0..mr {
+                        acc[ri] = vld1q_f32(op.add((r0 + ri) * n + j));
+                    }
+                    for ki in k0..kend {
+                        let wv = vld1q_f32(wp.add(ki * n + j));
+                        for ri in 0..mr {
+                            let xv = vdupq_n_f32(*xp.add((r0 + ri) * k + ki));
+                            acc[ri] = vaddq_f32(acc[ri], vmulq_f32(xv, wv));
+                        }
+                    }
+                    for ri in 0..mr {
+                        vst1q_f32(op.add((r0 + ri) * n + j), acc[ri]);
+                    }
+                    j += LANES;
+                }
+                if j < n {
+                    for ri in 0..mr {
+                        let r = r0 + ri;
+                        for ki in k0..kend {
+                            let xv = *xp.add(r * k + ki);
+                            for jj in j..n {
+                                *op.add(r * n + jj) += xv * *wp.add(ki * n + jj);
+                            }
+                        }
+                    }
+                }
+                r0 += mr;
+            }
+            k0 = kend;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; slice invariants as per the scalar
+    /// kernel.
+    pub unsafe fn gemm_bt_panel(
+        out: &mut [f32],
+        x: &[f32],
+        rows: usize,
+        k: usize,
+        wt: &[f32],
+        n: usize,
+        bias: Option<&[f32]>,
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        debug_assert_eq!(x.len(), rows * k);
+        let mut packed = vec![0.0f32; k.max(1) * LANES];
+        let pp = packed.as_mut_ptr();
+        let op = out.as_mut_ptr();
+        let xp = x.as_ptr();
+        let wtp = wt.as_ptr();
+        let mut j = 0;
+        while j + LANES <= n {
+            for ki in 0..k {
+                for l in 0..LANES {
+                    *pp.add(ki * LANES + l) = *wtp.add((j + l) * k + ki);
+                }
+            }
+            let binit = match bias {
+                Some(b) => vld1q_f32(b.as_ptr().add(j)),
+                None => vdupq_n_f32(0.0),
+            };
+            let mut r0 = 0;
+            while r0 < rows {
+                let mr = (rows - r0).min(MR);
+                let mut acc = [binit; MR];
+                for ki in 0..k {
+                    let wv = vld1q_f32(pp.add(ki * LANES));
+                    for ri in 0..mr {
+                        let xv = vdupq_n_f32(*xp.add((r0 + ri) * k + ki));
+                        acc[ri] = vaddq_f32(acc[ri], vmulq_f32(xv, wv));
+                    }
+                }
+                for ri in 0..mr {
+                    vst1q_f32(op.add((r0 + ri) * n + j), acc[ri]);
+                }
+                r0 += mr;
+            }
+            j += LANES;
+        }
+        for jj in j..n {
+            for r in 0..rows {
+                let mut acc = match bias {
+                    Some(b) => b[jj],
+                    None => 0.0,
+                };
+                for ki in 0..k {
+                    acc += *xp.add(r * k + ki) * *wtp.add(jj * k + ki);
+                }
+                *op.add(r * n + jj) = acc;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel dispatch
+// ---------------------------------------------------------------------------
+
+fn gemm_panel(
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    simd: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // SAFETY: `simd` is only true after `simd_supported()` verified
+        // AVX2 on this CPU; slice invariants checked by the caller.
+        unsafe { avx2::gemm_panel(out, x, rows, k, w, n, bias) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::gemm_panel(out, x, rows, k, w, n, bias) };
+        return;
+    }
+    let _ = simd;
+    gemm_panel_scalar(out, x, rows, k, w, n, bias)
+}
+
+fn gemm_bt_panel(
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    wt: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    simd: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // SAFETY: `simd` is only true after `simd_supported()` verified
+        // AVX2 on this CPU; slice invariants checked by the caller.
+        unsafe { avx2::gemm_bt_panel(out, x, rows, k, wt, n, bias) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::gemm_bt_panel(out, x, rows, k, wt, n, bias) };
+        return;
+    }
+    let _ = simd;
+    gemm_bt_panel_scalar(out, x, rows, k, wt, n, bias)
+}
+
+// ---------------------------------------------------------------------------
 // Parallel drivers
 // ---------------------------------------------------------------------------
 
@@ -204,19 +705,18 @@ fn check_dims(x: &[f32], m: usize, k: usize, w: &[f32], w_len: usize, n: usize, 
     }
 }
 
-fn run_panels(
-    out: &mut [f32],
-    x: &[f32],
-    m: usize,
-    k: usize,
-    w: &[f32],
-    n: usize,
-    bias: Option<&[f32]>,
-    kernel: fn(&mut [f32], &[f32], usize, usize, &[f32], usize, Option<&[f32]>),
-) {
+/// Split `out` into row panels and run `kernel(panel, x_panel, rows)`
+/// on the configured pool (inline when the GEMM is small, serial, or
+/// already on a worker thread). Shared with [`crate::tensor::quant`]'s
+/// reduced-precision matmuls so every matmul variant parallelises — and
+/// degrades under nesting — identically.
+pub(crate) fn run_panels<F>(out: &mut [f32], x: &[f32], m: usize, k: usize, n: usize, kernel: F)
+where
+    F: Fn(&mut [f32], &[f32], usize) + Send + Sync,
+{
     let nt = threads();
     if nt <= 1 || m < 2 || m * k * n < MIN_PAR_MACS || on_worker_thread() {
-        kernel(out, x, m, k, w, n, bias);
+        kernel(out, x, m);
         return;
     }
     let rows_per_panel = (m + nt - 1) / nt;
@@ -226,7 +726,7 @@ fn run_panels(
     pool_for(nt).scoped_map(panels, |(pi, chunk)| {
         let lo = pi * rows_per_panel;
         let rows = chunk.len() / n;
-        kernel(chunk, &x[lo * k..(lo + rows) * k], rows, k, w, n, bias);
+        kernel(chunk, &x[lo * k..(lo + rows) * k], rows);
     });
 }
 
@@ -234,7 +734,12 @@ fn run_panels(
 pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, bias: Option<&[f32]>) -> Vec<f32> {
     check_dims(x, m, k, w, k * n, n, bias);
     let mut out = vec![0.0f32; m * n];
-    run_panels(&mut out, x, m, k, w, n, bias, gemm_panel);
+    // resolved on the calling thread: pool workers always inherit the
+    // caller's kernel choice
+    let simd = use_simd();
+    run_panels(&mut out, x, m, k, n, |o, xs, rows| {
+        gemm_panel(o, xs, rows, k, w, n, bias, simd)
+    });
     out
 }
 
@@ -250,7 +755,10 @@ pub fn matmul_bt(
 ) -> Vec<f32> {
     check_dims(x, m, k, wt, n * k, n, bias);
     let mut out = vec![0.0f32; m * n];
-    run_panels(&mut out, x, m, k, wt, n, bias, gemm_bt_panel);
+    let simd = use_simd();
+    run_panels(&mut out, x, m, k, n, |o, xs, rows| {
+        gemm_bt_panel(o, xs, rows, k, wt, n, bias, simd)
+    });
     out
 }
 
@@ -273,9 +781,10 @@ where
     pool_for(nt).scoped_map(items, f)
 }
 
-/// Reference triple loop (unblocked, unconditionally serial). The parity
-/// suite pins the parallel kernels to this within 1e-5 per element; it
-/// is also the fallback the module tests shrink against.
+/// Reference triple loop (unblocked, unconditionally serial). Per
+/// output element it accumulates bias-then-ascending-`k` exactly like
+/// the panel kernels, so the module tests can require bitwise equality
+/// against it.
 pub fn matmul_naive(
     x: &[f32],
     m: usize,
@@ -333,6 +842,8 @@ mod tests {
                         "({m},{k},{n}) threads={nt} i={i}: {g} vs {e}"
                     );
                 }
+                // per-element order matches the naive loop exactly
+                assert_eq!(got, want, "({m},{k},{n}) threads={nt} not bitwise equal to naive");
             }
         }
     }
@@ -346,6 +857,43 @@ mod tests {
         for nt in [2usize, 3, 8] {
             let tn = with_threads(nt, || matmul(&x, m, k, &w, n, None));
             assert_eq!(t1, tn, "threads={nt} diverged bitwise");
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_kernels_agree_bitwise() {
+        // shapes chosen to exercise every dispatch edge: m smaller than
+        // the row tile, k below/above KC, n across the 16/8/scalar
+        // column tails, and a bare column vector
+        for &(m, k, n) in &[
+            (1usize, 3usize, 1usize),
+            (1, 64, 16),
+            (2, KC - 1, 17),
+            (5, KC + 3, 40),
+            (7, 33, 23),
+            (64, 128, 512),
+            (65, 130, 33),
+        ] {
+            let x = rand_vec(m * k, 11);
+            let w = rand_vec(k * n, 12);
+            let b = rand_vec(n, 13);
+            let scalar = with_kernel(Kernel::Scalar, || matmul(&x, m, k, &w, n, Some(&b)));
+            let auto = with_kernel(Kernel::Auto, || matmul(&x, m, k, &w, n, Some(&b)));
+            assert_eq!(scalar, auto, "({m},{k},{n}) kernels diverged bitwise");
+            let naive = matmul_naive(&x, m, k, &w, n, Some(&b));
+            assert_eq!(scalar, naive, "({m},{k},{n}) scalar != naive");
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_bt_kernels_agree_bitwise() {
+        for &(m, k, n) in &[(1usize, 5usize, 3usize), (4, 32, 10), (9, 17, 29), (64, 32, 64)] {
+            let x = rand_vec(m * k, 14);
+            let wt = rand_vec(n * k, 15);
+            let b = rand_vec(n, 16);
+            let scalar = with_kernel(Kernel::Scalar, || matmul_bt(&x, m, k, &wt, n, Some(&b)));
+            let auto = with_kernel(Kernel::Auto, || matmul_bt(&x, m, k, &wt, n, Some(&b)));
+            assert_eq!(scalar, auto, "({m},{k},{n}) bt kernels diverged bitwise");
         }
     }
 
@@ -405,6 +953,26 @@ mod tests {
         assert_eq!(threads(), prev + 1);
         set_threads(prev);
         assert_eq!(threads(), prev);
+    }
+
+    #[test]
+    fn with_kernel_restores_previous_value() {
+        with_kernel(Kernel::Scalar, || {
+            assert_eq!(kernel(), Kernel::Scalar);
+            assert_eq!(active_kernel_name(), "scalar");
+            with_kernel(Kernel::Auto, || {
+                assert_eq!(kernel(), Kernel::Auto);
+            });
+            assert_eq!(kernel(), Kernel::Scalar);
+        });
+        // outside any scope the choice defers to the env / auto default
+        let ambient = kernel();
+        assert!(matches!(ambient, Kernel::Auto | Kernel::Scalar));
+        let name = active_kernel_name();
+        assert!(
+            name == "avx2" || name == "neon" || name == "scalar",
+            "unexpected kernel name {name:?}"
+        );
     }
 
     #[test]

@@ -3,11 +3,18 @@
 //! The L3 hot path moves activations between backend executions, solvers
 //! and the layer cache as host tensors; this module provides the small
 //! op set those layers need. Heavy matmuls live in the [`gemm`]
-//! submodule — a cache-blocked, threadpool-parallel f32 GEMM that the
-//! reference backend routes every projection, FFN and attention product
-//! through (no BLAS offline; PJRT owns the math on that backend).
+//! submodule — a cache-blocked, threadpool-parallel f32 GEMM with a
+//! runtime-dispatched SIMD microkernel (AVX2/NEON, bitwise-identical to
+//! the scalar reference) that the reference backend routes every
+//! projection, FFN and attention product through (no BLAS offline; PJRT
+//! owns the math on that backend). The [`quant`] submodule adds the
+//! opt-in reduced-precision ladder: f16/bf16/int8 weight storage with
+//! f32 accumulation, selected per request via the `compute:` knob.
 
 pub mod gemm;
+pub mod quant;
+
+pub use quant::ComputeMode;
 
 use crate::util::rng::Rng;
 

@@ -1,0 +1,599 @@
+//! Reduced-precision compute ladder: weight-only quantization for the
+//! reference backend's matmuls.
+//!
+//! SmoothCache's win is skipping branch evaluations; this module makes
+//! the branches it *does* evaluate cheaper to store and stream. A
+//! [`ComputeMode`] selects how the B operand (the weight matrix) of a
+//! matmul is stored — IEEE binary16, bfloat16, or int8 with one f32
+//! scale per output column — while activations and accumulation stay
+//! f32 throughout, so the determinism contract of [`super::gemm`]
+//! carries over unchanged: per output element the accumulation order is
+//! ascending `k`, one term at a time, bitwise invariant to thread
+//! count. Reduced-precision outputs are *expected* to differ from the
+//! f32 reference; `quality::precision_gate` bounds how much (see
+//! docs/adr/006).
+//!
+//! The mode is ambient per thread (default [`ComputeMode::F32`]) and
+//! scoped with [`with_compute`]; the pipeline pins it around each
+//! generation step from `GenConfig::compute`, which in turn arrives
+//! from the request's `compute:` knob (CLI `--compute`, wire field
+//! `compute`). Conversions are hand-rolled bit twiddling — no half-
+//! precision crate — per the zero-dependency rule (docs/adr/001).
+
+use std::cell::Cell;
+
+use super::gemm;
+use crate::util::error::Result;
+
+// ---------------------------------------------------------------------------
+// ComputeMode
+// ---------------------------------------------------------------------------
+
+/// Numeric mode for reference-backend weight matmuls. `F32` is the
+/// bitwise-deterministic reference; the reduced modes trade accuracy
+/// for storage/bandwidth and are gated against the reference by
+/// `quality::precision_gate`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub enum ComputeMode {
+    /// Full-precision f32 weights (the default; the parity reference).
+    #[default]
+    F32,
+    /// IEEE binary16 weight storage, f32 accumulation.
+    F16,
+    /// bfloat16 weight storage, f32 accumulation.
+    Bf16,
+    /// int8 weights with one f32 scale per output column, f32
+    /// accumulation.
+    Int8,
+}
+
+impl ComputeMode {
+    pub const ALL: [ComputeMode; 4] =
+        [ComputeMode::F32, ComputeMode::F16, ComputeMode::Bf16, ComputeMode::Int8];
+
+    /// The modes that actually re-encode weights.
+    pub const REDUCED: [ComputeMode; 3] = [ComputeMode::F16, ComputeMode::Bf16, ComputeMode::Int8];
+
+    pub fn parse(s: &str) -> Result<ComputeMode> {
+        match s {
+            "f32" => Ok(ComputeMode::F32),
+            "f16" => Ok(ComputeMode::F16),
+            "bf16" => Ok(ComputeMode::Bf16),
+            "int8" => Ok(ComputeMode::Int8),
+            other => Err(crate::err!(
+                "unknown compute mode {other:?} (expected f32 | f16 | bf16 | int8)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputeMode::F32 => "f32",
+            ComputeMode::F16 => "f16",
+            ComputeMode::Bf16 => "bf16",
+            ComputeMode::Int8 => "int8",
+        }
+    }
+
+    pub fn is_reduced(self) -> bool {
+        self != ComputeMode::F32
+    }
+}
+
+thread_local! {
+    /// Ambient compute mode installed by [`with_compute`].
+    static TL_COMPUTE: Cell<ComputeMode> = const { Cell::new(ComputeMode::F32) };
+}
+
+/// The compute mode ambient on this thread (default `F32`). Resolved on
+/// the thread driving a generation step; pool workers never consult it
+/// (kernels receive already-quantized operands).
+pub fn compute_mode() -> ComputeMode {
+    TL_COMPUTE.with(|c| c.get())
+}
+
+/// Run `f` with this thread's compute mode pinned (restored afterwards,
+/// panic-safe) — same scoping idiom as [`gemm::with_threads`].
+pub fn with_compute<R>(mode: ComputeMode, f: impl FnOnce() -> R) -> R {
+    struct Restore(ComputeMode);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TL_COMPUTE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = TL_COMPUTE.with(|c| c.replace(mode));
+    let _restore = Restore(prev);
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// Half-precision bit conversions (round-to-nearest-even)
+// ---------------------------------------------------------------------------
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even; overflow saturates
+/// to infinity, NaN keeps its sign and a quiet payload.
+pub fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = (bits >> 16) & 0x8000;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: preserve the top mantissa bits, force a quiet bit
+        // on NaN so the payload survives the narrowing
+        let nan = if man != 0 { (man >> 13) | 0x0200 } else { 0 };
+        return (sign | 0x7c00 | nan) as u16;
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return (sign | 0x7c00) as u16; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal half (or underflow to signed zero)
+        if e < -10 {
+            return sign as u16;
+        }
+        let man = man | 0x0080_0000; // make the leading 1 explicit
+        let shift = (14 - e) as u32; // 14..=24
+        let base = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let rounded = if rem > half || (rem == half && base & 1 == 1) { base + 1 } else { base };
+        return (sign | rounded) as u16;
+    }
+    // normal: narrow the mantissa 23 -> 10 bits; a mantissa carry rolls
+    // into the exponent (and, at the top, correctly to infinity)
+    let base = sign | ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && base & 1 == 1) { base + 1 } else { base };
+    rounded as u16
+}
+
+/// IEEE binary16 bits -> f32 (exact; every f16 value is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: renormalise into an f32 normal
+            let mut e: i32 = 127 - 15 + 1;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> bfloat16 bits (top 16 bits, round-to-nearest-even).
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        // keep sign + a payload bit that survives truncation
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let base = bits >> 16;
+    let rem = bits & 0xffff;
+    let rounded = if rem > 0x8000 || (rem == 0x8000 && base & 1 == 1) { base + 1 } else { base };
+    rounded as u16
+}
+
+/// bfloat16 bits -> f32 (exact).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// QuantMat
+// ---------------------------------------------------------------------------
+
+/// A weight matrix re-encoded for a reduced [`ComputeMode`], `[k, n]`
+/// row-major like [`gemm::matmul`]'s B operand. Built once per weight
+/// tensor (cached by `model::weights::WeightStore::get_quant`) and
+/// shared by every subsequent matmul in that mode.
+#[derive(Clone, Debug)]
+pub enum QuantMat {
+    /// IEEE binary16 storage.
+    F16 { data: Vec<u16>, k: usize, n: usize },
+    /// bfloat16 storage.
+    Bf16 { data: Vec<u16>, k: usize, n: usize },
+    /// int8 storage with one f32 scale per output column — per-row
+    /// scales of the `[n, k]` output-major view of the weight.
+    Int8 { data: Vec<i8>, scales: Vec<f32>, k: usize, n: usize },
+}
+
+impl QuantMat {
+    /// Re-encode `w` (`[k, n]` row-major). Returns `None` for
+    /// [`ComputeMode::F32`], which has no re-encoded form.
+    pub fn quantize(w: &[f32], k: usize, n: usize, mode: ComputeMode) -> Option<QuantMat> {
+        assert_eq!(w.len(), k * n, "quantize: w len {} != {k} x {n}", w.len());
+        match mode {
+            ComputeMode::F32 => None,
+            ComputeMode::F16 => Some(QuantMat::F16 {
+                data: w.iter().map(|&v| f32_to_f16(v)).collect(),
+                k,
+                n,
+            }),
+            ComputeMode::Bf16 => Some(QuantMat::Bf16 {
+                data: w.iter().map(|&v| f32_to_bf16(v)).collect(),
+                k,
+                n,
+            }),
+            ComputeMode::Int8 => {
+                let mut scales = vec![0.0f32; n];
+                for (j, s) in scales.iter_mut().enumerate() {
+                    let mut absmax = 0.0f32;
+                    for ki in 0..k {
+                        absmax = absmax.max(w[ki * n + j].abs());
+                    }
+                    // an all-zero column quantizes to zeros under any
+                    // scale; 1.0 keeps the dequant finite
+                    *s = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+                }
+                let mut data = vec![0i8; k * n];
+                for ki in 0..k {
+                    for j in 0..n {
+                        let q = (w[ki * n + j] / scales[j]).round();
+                        data[ki * n + j] = q.clamp(-127.0, 127.0) as i8;
+                    }
+                }
+                Some(QuantMat::Int8 { data, scales, k, n })
+            }
+        }
+    }
+
+    pub fn mode(&self) -> ComputeMode {
+        match self {
+            QuantMat::F16 { .. } => ComputeMode::F16,
+            QuantMat::Bf16 { .. } => ComputeMode::Bf16,
+            QuantMat::Int8 { .. } => ComputeMode::Int8,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            QuantMat::F16 { k, .. } | QuantMat::Bf16 { k, .. } | QuantMat::Int8 { k, .. } => *k,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            QuantMat::F16 { n, .. } | QuantMat::Bf16 { n, .. } | QuantMat::Int8 { n, .. } => *n,
+        }
+    }
+
+    /// Stored payload bytes (for bench metadata / memory accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantMat::F16 { data, .. } | QuantMat::Bf16 { data, .. } => data.len() * 2,
+            QuantMat::Int8 { data, scales, .. } => data.len() + scales.len() * 4,
+        }
+    }
+
+    /// Expand back to f32 `[k, n]`. For `F16`/`Bf16` this is exactly
+    /// the matrix [`matmul_q`] accumulates (decoding is exact); for
+    /// `Int8` it folds the column scale into each element, which
+    /// [`matmul_q`] instead applies once per output after accumulating
+    /// `x . q` — numerically close but not bitwise identical.
+    pub fn dequantize(&self) -> Vec<f32> {
+        match self {
+            QuantMat::F16 { data, .. } => data.iter().map(|&h| f16_to_f32(h)).collect(),
+            QuantMat::Bf16 { data, .. } => data.iter().map(|&h| bf16_to_f32(h)).collect(),
+            QuantMat::Int8 { data, scales, k, n } => {
+                let mut out = vec![0.0f32; k * n];
+                for ki in 0..*k {
+                    for j in 0..*n {
+                        out[ki * n + j] = data[ki * n + j] as f32 * scales[j];
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized matmul
+// ---------------------------------------------------------------------------
+
+/// `y[m, n] = x[m, k] @ deq(w)[k, n] (+ bias)` with f32 accumulation.
+///
+/// Per output element the accumulation order is ascending `k`, one term
+/// at a time — the same determinism contract as [`gemm::matmul`], so
+/// results are bitwise invariant to thread count. Half-precision rows
+/// are decoded once per k-block into an f32 slab shared by the panel's
+/// rows (decode cost is `O(k*n)` per panel, not `O(m*k*n)`); int8
+/// accumulates `x . q` in f32 and applies the per-column scale, then
+/// bias, once per output: `y = (sum x*q) * s + b`.
+pub fn matmul_q(x: &[f32], m: usize, k: usize, w: &QuantMat, bias: Option<&[f32]>) -> Vec<f32> {
+    assert_eq!(w.k(), k, "matmul_q: w rows {} != {k}", w.k());
+    let n = w.n();
+    assert_eq!(x.len(), m * k, "matmul_q: x len {} != {m} x {k}", x.len());
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "matmul_q: bias len {} != {n}", b.len());
+    }
+    let mut out = vec![0.0f32; m * n];
+    match w {
+        QuantMat::F16 { data, .. } => {
+            gemm::run_panels(&mut out, x, m, k, n, |o, xs, rows| {
+                qgemm_panel(o, xs, rows, k, n, bias, |ki, dst| {
+                    for (d, &h) in dst.iter_mut().zip(&data[ki * n..(ki + 1) * n]) {
+                        *d = f16_to_f32(h);
+                    }
+                });
+            });
+        }
+        QuantMat::Bf16 { data, .. } => {
+            gemm::run_panels(&mut out, x, m, k, n, |o, xs, rows| {
+                qgemm_panel(o, xs, rows, k, n, bias, |ki, dst| {
+                    for (d, &h) in dst.iter_mut().zip(&data[ki * n..(ki + 1) * n]) {
+                        *d = bf16_to_f32(h);
+                    }
+                });
+            });
+        }
+        QuantMat::Int8 { data, scales, .. } => {
+            gemm::run_panels(&mut out, x, m, k, n, |o, xs, rows| {
+                qgemm_panel(o, xs, rows, k, n, None, |ki, dst| {
+                    for (d, &q) in dst.iter_mut().zip(&data[ki * n..(ki + 1) * n]) {
+                        *d = q as f32;
+                    }
+                });
+                for r in 0..rows {
+                    let orow = &mut o[r * n..(r + 1) * n];
+                    for (j, v) in orow.iter_mut().enumerate() {
+                        let b = match bias {
+                            Some(b) => b[j],
+                            None => 0.0,
+                        };
+                        *v = *v * scales[j] + b;
+                    }
+                }
+            });
+        }
+    }
+    out
+}
+
+/// Shared k-blocked axpy over a decoded f32 slab. `decode_row(ki, dst)`
+/// fills `dst` (length `n`) with row `ki` of the weight as f32.
+fn qgemm_panel(
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    decode_row: impl Fn(usize, &mut [f32]),
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(x.len(), rows * k);
+    for r in 0..rows {
+        let orow = &mut out[r * n..(r + 1) * n];
+        match bias {
+            Some(b) => orow.copy_from_slice(b),
+            None => orow.fill(0.0),
+        }
+    }
+    if k == 0 || n == 0 {
+        return;
+    }
+    let kc = gemm::KC.min(k);
+    let mut slab = vec![0.0f32; kc * n];
+    let mut k0 = 0;
+    while k0 < k {
+        let kend = (k0 + kc).min(k);
+        for ki in k0..kend {
+            decode_row(ki, &mut slab[(ki - k0) * n..(ki - k0 + 1) * n]);
+        }
+        for r in 0..rows {
+            let xrow = &x[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            for ki in k0..kend {
+                let xv = xrow[ki];
+                let srow = &slab[(ki - k0) * n..(ki - k0 + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(srow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        k0 = kend;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        rng.normal_vec(n)
+    }
+
+    #[test]
+    fn f16_known_values_round_trip() {
+        for &(v, bits) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (0.5, 0x3800),
+            (-2.0, 0xc000),
+            (65504.0, 0x7bff), // max finite f16
+        ] {
+            assert_eq!(f32_to_f16(v), bits, "encode {v}");
+            assert_eq!(f16_to_f32(bits), v, "decode {bits:#06x}");
+        }
+        // min normal and min subnormal f16, as exact powers of two
+        assert_eq!(f32_to_f16(2.0f32.powi(-14)), 0x0400);
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14));
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16(65520.0), 0x7c00, "first value past max rounds to inf");
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // negative zero survives
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f16_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // exactly between 1.0 (0x3c00) and the next f16 up (0x3c01):
+        // ties go to the even mantissa
+        let tie_low = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(tie_low), 0x3c00);
+        // between 0x3c01 and 0x3c02: rounds up to the even one
+        let tie_high = 1.0f32 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(tie_high), 0x3c02);
+        // half the min subnormal is a tie against zero -> even -> zero
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000);
+        // anything above that half becomes the min subnormal
+        assert_eq!(f32_to_f16(1.5 * 2.0f32.powi(-25)), 0x0001);
+    }
+
+    #[test]
+    fn f16_decode_encode_is_identity_for_all_finite_bits() {
+        for h in 0u16..0x7c00 {
+            for sign in [0u16, 0x8000] {
+                let bits = h | sign;
+                assert_eq!(f32_to_f16(f16_to_f32(bits)), bits, "{bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_known_values_and_ties() {
+        assert_eq!(f32_to_bf16(1.0), 0x3f80);
+        assert_eq!(bf16_to_f32(0x3f80), 1.0);
+        assert_eq!(f32_to_bf16(-2.0), 0xc000);
+        // tie with even base stays; tie with odd base rounds up
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3f80_8000)), 0x3f80);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3f81_8000)), 0x3f82);
+        // rounding past max finite saturates through to inf
+        assert_eq!(f32_to_bf16(f32::from_bits(0x7f7f_ffff)), 0x7f80);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // round trip is identity for values already on the bf16 grid
+        for &v in &[0.0f32, -0.0, 3.5, -0.0625, 1024.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v);
+        }
+    }
+
+    #[test]
+    fn int8_quantize_uses_per_column_absmax() {
+        // column 0 spans [-4, 2] -> scale 4/127; column 1 is all zeros
+        let w = vec![2.0f32, 0.0, -4.0, 0.0, 1.0, 0.0]; // [3, 2]
+        let q = QuantMat::quantize(&w, 3, 2, ComputeMode::Int8).unwrap();
+        match &q {
+            QuantMat::Int8 { data, scales, .. } => {
+                assert!((scales[0] - 4.0 / 127.0).abs() < 1e-7);
+                assert_eq!(scales[1], 1.0);
+                assert_eq!(data[0], 64); // round(2 / (4/127)) = round(63.5) = 64
+                assert_eq!(data[2], -127);
+                assert_eq!(data[1], 0);
+            }
+            _ => unreachable!(),
+        }
+        let deq = q.dequantize();
+        assert!((deq[2] - -4.0).abs() < 1e-6, "absmax element is exact");
+        assert_eq!(deq[1], 0.0);
+    }
+
+    #[test]
+    fn quantize_returns_none_for_f32() {
+        assert!(QuantMat::quantize(&[1.0, 2.0], 1, 2, ComputeMode::F32).is_none());
+    }
+
+    #[test]
+    fn matmul_q_half_matches_f32_matmul_of_dequantized_weights() {
+        // decoding f16/bf16 is exact, and matmul_q accumulates in the
+        // same order as gemm::matmul -> bitwise equality
+        for mode in [ComputeMode::F16, ComputeMode::Bf16] {
+            for &(m, k, n) in &[(1usize, 7usize, 5usize), (4, 130, 33), (9, 64, 17)] {
+                let x = rand_vec(m * k, 21);
+                let w = rand_vec(k * n, 22);
+                let b = rand_vec(n, 23);
+                let q = QuantMat::quantize(&w, k, n, mode).unwrap();
+                let got = matmul_q(&x, m, k, &q, Some(&b));
+                let want = gemm::matmul(&x, m, k, &q.dequantize(), n, Some(&b));
+                assert_eq!(got, want, "{mode:?} ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_q_int8_matches_reference_factoring() {
+        let (m, k, n) = (3usize, 40usize, 9usize);
+        let x = rand_vec(m * k, 24);
+        let w = rand_vec(k * n, 25);
+        let b = rand_vec(n, 26);
+        let q = QuantMat::quantize(&w, k, n, ComputeMode::Int8).unwrap();
+        let got = matmul_q(&x, m, k, &q, Some(&b));
+        let (data, scales) = match &q {
+            QuantMat::Int8 { data, scales, .. } => (data, scales),
+            _ => unreachable!(),
+        };
+        for r in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for ki in 0..k {
+                    acc += x[r * k + ki] * data[ki * n + j] as f32;
+                }
+                let want = acc * scales[j] + b[j];
+                assert_eq!(got[r * n + j], want, "({r},{j})");
+            }
+        }
+        // and the factored result approximates the f32 product
+        let f32_out = gemm::matmul(&x, m, k, &w, n, Some(&b));
+        for (g, e) in got.iter().zip(&f32_out) {
+            assert!((g - e).abs() < 0.05, "int8 drifted too far: {g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn matmul_q_is_bitwise_invariant_to_thread_count() {
+        let (m, k, n) = (64usize, 128usize, 96usize);
+        let x = rand_vec(m * k, 27);
+        let w = rand_vec(k * n, 28);
+        for mode in ComputeMode::REDUCED {
+            let q = QuantMat::quantize(&w, k, n, mode).unwrap();
+            let t1 = gemm::with_threads(1, || matmul_q(&x, m, k, &q, None));
+            for nt in [2usize, 8] {
+                let tn = gemm::with_threads(nt, || matmul_q(&x, m, k, &q, None));
+                assert_eq!(t1, tn, "{mode:?} threads={nt} diverged bitwise");
+            }
+        }
+    }
+
+    #[test]
+    fn with_compute_restores_previous_mode() {
+        assert_eq!(compute_mode(), ComputeMode::F32);
+        with_compute(ComputeMode::Int8, || {
+            assert_eq!(compute_mode(), ComputeMode::Int8);
+            with_compute(ComputeMode::F16, || {
+                assert_eq!(compute_mode(), ComputeMode::F16);
+            });
+            assert_eq!(compute_mode(), ComputeMode::Int8);
+        });
+        assert_eq!(compute_mode(), ComputeMode::F32);
+    }
+
+    #[test]
+    fn compute_mode_parses_and_names_round_trip() {
+        for mode in ComputeMode::ALL {
+            assert_eq!(ComputeMode::parse(mode.name()).unwrap(), mode);
+        }
+        let err = ComputeMode::parse("fp8").unwrap_err();
+        assert!(err.to_string().contains("unknown compute mode"), "{err}");
+    }
+}

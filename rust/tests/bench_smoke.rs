@@ -62,6 +62,14 @@ fn smoke_perf_engine() {
             "session_overhead_x",
             "sched_speedup_dense_vs_map_x",
             "threads_speedup_4t_v_1t_x",
+            "compute:simd/ffn_speedup_x",
+            "compute:f32/forward_b1_mean_us",
+            "compute:f16/forward_b1_mean_us",
+            "compute:bf16/forward_b1_mean_us",
+            "compute:int8/forward_b1_mean_us",
+            "compute:f16/ssim",
+            "compute:bf16/ssim",
+            "compute:int8/ssim",
             "queue_wait_mean_ms",
             "exec_mean_ms",
             "e2e_mean_ms",

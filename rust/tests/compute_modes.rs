@@ -1,0 +1,168 @@
+//! Reduced-precision `compute:` knob integration suite.
+//!
+//! The precision ladder (f16 / bf16 / int8 weight storage with f32
+//! accumulation, docs/adr/006) is opt-in per request. This suite pins
+//! the end-to-end contract for every builtin family:
+//!
+//! * reduced-mode trajectories are deterministic (same request → same
+//!   bits) and actually differ from the f32 reference (the knob is not
+//!   silently ignored),
+//! * their outputs clear the `quality::precision_gate` SSIM floors the
+//!   benches report against (f16 ≥ 0.99, bf16/int8 ≥ 0.95),
+//! * the knob survives the full serving path (coordinator → executor →
+//!   session scoping), and
+//! * requests at different precisions never share a dynamic batch.
+
+use smoothcache::cache::{CachePlan, PlanRef, Schedule};
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
+use smoothcache::model::{Cond, Engine, Manifest};
+use smoothcache::pipeline::{generate, GenConfig};
+use smoothcache::quality::precision_gate;
+use smoothcache::solvers::SolverKind;
+use smoothcache::tensor::{ComputeMode, Tensor};
+
+fn offline_engine(family: &str) -> Engine {
+    let mut e = Engine::open(std::path::PathBuf::from("/nonexistent-artifacts"))
+        .expect("builtin engine");
+    e.load_family(family).expect("load family");
+    e
+}
+
+fn family_cond(fm: &smoothcache::model::FamilyManifest) -> Cond {
+    if fm.num_classes > 0 {
+        Cond::Label(vec![3])
+    } else {
+        Cond::Prompt((0..fm.cond_len).map(|i| (i * 11 % fm.vocab) as i32).collect())
+    }
+}
+
+fn run_mode(
+    engine: &Engine,
+    family: &str,
+    fm: &smoothcache::model::FamilyManifest,
+    mode: ComputeMode,
+) -> Tensor {
+    let schedule = Schedule::no_cache(3, &fm.branch_types);
+    let plan = CachePlan::from_grouped(&schedule, &fm.branch_sites()).unwrap();
+    let cfg = GenConfig::new(family, SolverKind::Ddim, 3)
+        .with_seed(11)
+        .with_compute(mode);
+    let cond = family_cond(fm);
+    generate(engine, &cfg, &cond, PlanRef::Plan(&plan), None)
+        .expect("generate")
+        .latent
+}
+
+/// The per-mode SSIM floors the quality gate holds reduced outputs to
+/// (the same floors `benches/perf_engine.rs` reports against).
+pub const MODE_FLOORS: [(ComputeMode, f64); 3] = [
+    (ComputeMode::F16, 0.99),
+    (ComputeMode::Bf16, 0.95),
+    (ComputeMode::Int8, 0.95),
+];
+
+#[test]
+fn reduced_modes_are_deterministic_distinct_and_pass_the_gate() {
+    for (name, fm) in &Manifest::builtin().families {
+        let engine = offline_engine(name);
+        let reference = run_mode(&engine, name, fm, ComputeMode::F32);
+        // f32 through the knob is the identity path
+        assert_eq!(
+            reference,
+            run_mode(&engine, name, fm, ComputeMode::F32),
+            "{name}: f32 must be deterministic"
+        );
+        for (mode, floor) in MODE_FLOORS {
+            let out = run_mode(&engine, name, fm, mode);
+            let again = run_mode(&engine, name, fm, mode);
+            assert_eq!(out, again, "{name}/{}: reduced mode must be deterministic", mode.name());
+            assert_ne!(
+                out.data,
+                reference.data,
+                "{name}/{}: reduced mode produced f32 bits — the knob was ignored",
+                mode.name()
+            );
+            let gate = precision_gate(&reference, &out, floor)
+                .expect("precision gate");
+            assert!(
+                gate.pass,
+                "{name}/{}: ssim {} below the {floor} floor",
+                mode.name(),
+                gate.ssim
+            );
+        }
+    }
+}
+
+#[test]
+fn compute_scope_does_not_leak_between_sessions() {
+    // a reduced-mode generation followed by a default one on the same
+    // thread must leave no ambient mode behind (the session scopes each
+    // step and restores on exit, even across the same engine)
+    let engine = offline_engine("image");
+    let fm = engine.family_manifest("image").expect("manifest").clone();
+    let f32_before = run_mode(&engine, "image", &fm, ComputeMode::F32);
+    let _int8 = run_mode(&engine, "image", &fm, ComputeMode::Int8);
+    let f32_after = run_mode(&engine, "image", &fm, ComputeMode::F32);
+    assert_eq!(f32_before, f32_after, "int8 session leaked its compute mode");
+    assert_eq!(smoothcache::tensor::quant::compute_mode(), ComputeMode::F32);
+}
+
+#[test]
+fn compute_knob_rides_the_full_serving_path() {
+    // coordinator → queue → executor → GenSession: a reduced-precision
+    // request served end to end differs from the f32 serving result for
+    // the same seed, still clears the gate, and is itself reproducible
+    let request = |compute: ComputeMode| Request {
+        id: 0,
+        family: "image".into(),
+        cond: Cond::Label(vec![5]),
+        solver: SolverKind::Ddim,
+        steps: 3,
+        cfg_scale: 1.0,
+        seed: 0xC0FFEE,
+        policy: Policy::no_cache(),
+        compute,
+    };
+    let cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(1);
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let f32_resp = coord.generate_blocking(request(ComputeMode::F32)).expect("f32 response");
+    let f16_resp = coord.generate_blocking(request(ComputeMode::F16)).expect("f16 response");
+    let f16_again = coord.generate_blocking(request(ComputeMode::F16)).expect("f16 repeat");
+    coord.shutdown();
+    assert_eq!(f16_resp.latent, f16_again.latent, "served f16 must be reproducible");
+    assert_ne!(
+        f32_resp.latent.data, f16_resp.latent.data,
+        "served f16 must not silently run at f32"
+    );
+    let gate = precision_gate(&f32_resp.latent, &f16_resp.latent, 0.99).expect("gate");
+    assert!(gate.pass, "served f16 ssim {} below 0.99", gate.ssim);
+}
+
+#[test]
+fn batch_key_separates_compute_modes() {
+    let req = |compute: ComputeMode| Request {
+        id: 0,
+        family: "image".into(),
+        cond: Cond::Label(vec![1]),
+        solver: SolverKind::Ddim,
+        steps: 8,
+        cfg_scale: 1.0,
+        seed: 1,
+        policy: Policy::no_cache(),
+        compute,
+    };
+    let keys: Vec<_> = [ComputeMode::F32, ComputeMode::F16, ComputeMode::Bf16, ComputeMode::Int8]
+        .into_iter()
+        .map(|m| req(m).batch_key())
+        .collect();
+    for i in 0..keys.len() {
+        for j in 0..keys.len() {
+            if i == j {
+                assert_eq!(keys[i], keys[j]);
+            } else {
+                assert_ne!(keys[i], keys[j], "modes {i} and {j} must not co-batch");
+            }
+        }
+    }
+}

@@ -82,6 +82,7 @@ fn prop_every_request_answered_exactly_once_any_worker_count() {
                     cfg_scale: 1.0,
                     seed: i as u64,
                     policy: Policy::no_cache(),
+                    compute: Default::default(),
                 };
                 rxs.push((family, coord.submit(req)));
             }
@@ -140,6 +141,7 @@ fn image_request(steps: usize, seed: u64, policy: Policy) -> Request {
         cfg_scale: 1.0,
         seed,
         policy,
+        compute: Default::default(),
     }
 }
 
@@ -499,6 +501,7 @@ fn prop_deadline_flushes_fire_under_poisson_arrivals() {
                         cfg_scale: 1.0,
                         seed: i as u64,
                         policy: Policy::no_cache(),
+                        compute: Default::default(),
                     },
                     tx,
                 );

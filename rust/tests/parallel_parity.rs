@@ -16,7 +16,9 @@ use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
 use smoothcache::model::{Cond, Engine, Manifest};
 use smoothcache::pipeline::{generate, GenConfig};
 use smoothcache::solvers::SolverKind;
+use smoothcache::tensor::gemm::Kernel;
 use smoothcache::tensor::{gemm, Tensor};
+use smoothcache::util::propcheck::{forall, gen};
 use smoothcache::util::rng::Rng;
 
 fn offline_engine(family: &str) -> Engine {
@@ -118,6 +120,97 @@ fn generate_is_identical_across_thread_counts_for_every_family() {
 }
 
 #[test]
+fn generate_is_identical_across_kernels_for_every_family_and_solver() {
+    // the SIMD microkernel keeps the scalar reference's per-element
+    // accumulation order, so a full trajectory must come out bitwise
+    // identical whichever kernel dispatch picks — for every builtin
+    // family and every solver
+    let solvers = [
+        SolverKind::Ddim,
+        SolverKind::DdpmAncestral,
+        SolverKind::DpmPP2M,
+        SolverKind::DpmPP3M { sde: false },
+        SolverKind::DpmPP3M { sde: true },
+        SolverKind::RectifiedFlow,
+    ];
+    for (name, fm) in &Manifest::builtin().families {
+        let engine = offline_engine(name);
+        let (_, cond) = family_inputs(fm);
+        let schedule = Schedule::fora(3, &fm.branch_types, 2);
+        let plan = CachePlan::from_grouped(&schedule, &fm.branch_sites()).unwrap();
+        for solver in solvers {
+            let cfg = GenConfig::new(name, solver, 3).with_seed(77);
+            let scalar = gemm::with_kernel(Kernel::Scalar, || {
+                generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None)
+            })
+            .expect("scalar generate");
+            let auto = gemm::with_kernel(Kernel::Auto, || {
+                generate(&engine, &cfg, &cond, PlanRef::Plan(&plan), None)
+            })
+            .expect("auto generate");
+            assert_eq!(
+                scalar.latent,
+                auto.latent,
+                "{name}/{}: scalar vs auto kernel diverged",
+                solver.name()
+            );
+            assert_eq!(scalar.stats.branch_computes, auto.stats.branch_computes);
+            assert_eq!(scalar.stats.branch_reuses, auto.stats.branch_reuses);
+        }
+    }
+}
+
+#[test]
+fn prop_simd_scalar_matmul_parity_on_adversarial_shapes() {
+    // shape corners the tiled microkernel must get right: single-row
+    // panels (m = 1), k below one cache block (k < KC), and column
+    // counts that are never a SIMD lane multiple (odd n), plus k
+    // straddling a KC boundary
+    forall(
+        0x51D0,
+        40,
+        |r: &mut Rng| {
+            let m = if r.below(3) == 0 { 1 } else { gen::usize_in(r, 1, 9) };
+            let k = if r.below(2) == 0 {
+                gen::usize_in(r, 1, gemm::KC) // strictly below one k-block
+            } else {
+                gen::usize_in(r, gemm::KC, gemm::KC + 70)
+            };
+            let n = 2 * gen::usize_in(r, 0, 40) + 1; // odd: off every lane width
+            (m, k, n)
+        },
+        |&(m, k, n)| {
+            let mut rng = Rng::new((m * 1_000_003 + k * 1_009 + n) as u64);
+            let x = rng.normal_vec(m * k);
+            let w = rng.normal_vec(k * n);
+            let bias = rng.normal_vec(n);
+            let scalar =
+                gemm::with_kernel(Kernel::Scalar, || gemm::matmul(&x, m, k, &w, n, Some(&bias)));
+            let auto =
+                gemm::with_kernel(Kernel::Auto, || gemm::matmul(&x, m, k, &w, n, Some(&bias)));
+            if scalar != auto {
+                return Err(format!("matmul: scalar != auto at {m}x{k}x{n}"));
+            }
+            let naive = gemm::matmul_naive(&x, m, k, &w, n, Some(&bias));
+            if scalar != naive {
+                return Err(format!("matmul: scalar != naive at {m}x{k}x{n}"));
+            }
+            let wt = rng.normal_vec(n * k);
+            let sbt = gemm::with_kernel(Kernel::Scalar, || {
+                gemm::matmul_bt(&x, m, k, &wt, n, Some(&bias))
+            });
+            let abt = gemm::with_kernel(Kernel::Auto, || {
+                gemm::matmul_bt(&x, m, k, &wt, n, Some(&bias))
+            });
+            if sbt != abt {
+                return Err(format!("matmul_bt: scalar != auto at {m}x{k}x{n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn generate_is_identical_across_worker_pool_sizes() {
     // the same (seed, request) served by coordinators with 1, 2, and 3
     // executor replicas must produce bitwise-identical latents and
@@ -131,6 +224,7 @@ fn generate_is_identical_across_worker_pool_sizes() {
         cfg_scale: 1.0,
         seed: 0xF1DE,
         policy: Policy::fora(2),
+        compute: Default::default(),
     };
     let mut outputs = Vec::new();
     for workers in [1usize, 2, 3] {

@@ -33,6 +33,7 @@ fn image_request(seed: u64, policy: Policy) -> Request {
         cfg_scale: 1.0,
         seed,
         policy,
+        compute: Default::default(),
     }
 }
 

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, test (at two GEMM thread counts, so any
-# serial/parallel divergence in the compute substrate fails tier-1),
+# Tier-1 verification: build, test (at two GEMM thread counts and under
+# both kernel dispatches — forced-scalar and auto-SIMD — so any
+# serial/parallel or scalar/SIMD divergence in the compute substrate
+# fails tier-1; ADR-006),
 # rustdoc with broken intra-doc links promoted to errors, then the
 # smoke-scale bench trajectory gate (docs/benchmarks.md, ADR-005):
 # perf_engine and e2e_serving emit BENCH_engine.json / BENCH_serving.json
@@ -54,10 +56,14 @@ else
     skip "cargo-clippy" "cargo-clippy not installed"
 fi
 
-echo "==> cargo test -q (SMOOTHCACHE_THREADS=1, serial substrate)"
-SMOOTHCACHE_THREADS=1 cargo test -q
+# kernel × thread matrix: lane 1 pins the scalar reference kernel
+# (the parity suite's with_kernel scopes outrank the env knob, so the
+# scalar-vs-SIMD comparisons still run both kernels here); lane 2 runs
+# whatever SIMD microkernel dispatch detects (ADR-006)
+echo "==> cargo test -q (SMOOTHCACHE_THREADS=1, SMOOTHCACHE_FORCE_SCALAR=1: serial substrate, scalar kernel)"
+SMOOTHCACHE_THREADS=1 SMOOTHCACHE_FORCE_SCALAR=1 cargo test -q
 
-echo "==> cargo test -q (SMOOTHCACHE_THREADS=4, parallel substrate)"
+echo "==> cargo test -q (SMOOTHCACHE_THREADS=4, auto kernel: parallel substrate, SIMD when available)"
 SMOOTHCACHE_THREADS=4 cargo test -q
 
 echo "==> cargo doc --no-deps (all rustdoc warnings are errors)"
