@@ -17,11 +17,23 @@
 //! the run to CI scale (2 steps, a handful of requests), and
 //! `--json OUT` writes the machine-readable `BENCH_serving.json`
 //! report (docs/benchmarks.md).
+//!
+//! `--mixed-priority` runs the preemptive-scheduling comparison
+//! instead of the per-policy sweep: every replica is first saturated
+//! with a long generation, then short interactive probes measure the
+//! head-of-line latency the long work imposes. Phase A pins the long
+//! jobs at `interactive` class (run-to-completion — nothing yields);
+//! phase B pins them at `batch` class, so executors park them the
+//! moment interactive work arrives (docs/adr/007). The report area is
+//! `serving_mixed_w{workers}` and the headline row is
+//! `priority:interactive/p99_improvement_x` — the run-to-completion
+//! p99 over the preemptive p99.
 
 use std::time::{Duration, Instant};
 
 use smoothcache::coordinator::{
-    Coordinator, CoordinatorConfig, Deadline, DeadlinePolicy, Metrics, Policy, Request, SubmitOpts,
+    Coordinator, CoordinatorConfig, Deadline, DeadlinePolicy, Metrics, Policy, PriorityClass,
+    Request, SubmitOpts,
 };
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::bench::report::BenchReport;
@@ -35,6 +47,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     let threads = args.usize("threads", 0)?;
     let deadline_ms = args.usize("deadline-ms", 0)?;
     let smoke = args.flag("smoke")?;
+    let mixed = args.flag("mixed-priority")?;
     let json_out = args.str_opt("json")?;
     args.finish()?;
 
@@ -46,6 +59,10 @@ fn main() -> smoothcache::util::error::Result<()> {
         smoothcache::tensor::gemm::set_threads(threads);
     }
     std::fs::create_dir_all("bench_out")?;
+
+    if mixed {
+        return run_mixed_priority(workers, queue_depth, smoke, json_out.as_deref());
+    }
 
     let (steps, n_requests, rate_rps) = if smoke {
         (2usize, 6usize, 12.0)
@@ -101,6 +118,7 @@ fn main() -> smoothcache::util::error::Result<()> {
             seed: 1,
             policy: policy.clone(),
             compute: Default::default(),
+            priority: Default::default(),
         };
         coord.generate_blocking(warm.clone())?;
         for b in [2usize, 4] {
@@ -137,6 +155,7 @@ fn main() -> smoothcache::util::error::Result<()> {
                 seed: item.seed ^ i as u64,
                 policy: policy.clone(),
                 compute: Default::default(),
+                priority: Default::default(),
             };
             // optional best-effort deadline: late responses are still
             // delivered and show up in the dl-miss column
@@ -248,6 +267,219 @@ fn main() -> smoothcache::util::error::Result<()> {
     table.print();
     std::fs::write("bench_out/e2e_serving.csv", table.to_csv())?;
     if let Some(path) = &json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
+    Ok(())
+}
+
+/// Latencies and counters from one mixed-priority phase.
+struct PhaseStats {
+    /// Sorted client-side e2e latencies of the interactive probes (s).
+    probe_latencies: Vec<f64>,
+    /// Long jobs that delivered a result (must equal `workers`).
+    long_completed: usize,
+    /// Executor preemptions observed during the phase.
+    preemptions: u64,
+    /// Interactive-class e2e p99 as the metrics histogram reports it
+    /// (coarser than the client-side measurement: power-of-two buckets).
+    hist_p99_s: f64,
+}
+
+fn pct_of(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    sorted[((q * (sorted.len() - 1) as f64) as usize).min(sorted.len() - 1)]
+}
+
+/// One phase of the mixed-priority comparison: saturate every replica
+/// with a long no-cache generation at `long_class`, then run short
+/// interactive probes through the contended stack one at a time and
+/// time each end to end.
+fn run_mixed_phase(
+    workers: usize,
+    queue_depth: usize,
+    long_class: PriorityClass,
+    long_steps: usize,
+    int_steps: usize,
+    n_probes: usize,
+) -> smoothcache::util::error::Result<PhaseStats> {
+    let mk_req = |steps: usize, priority: PriorityClass, seed: u64| Request {
+        id: 0,
+        family: "image".into(),
+        cond: smoothcache::model::Cond::Label(vec![(seed % 10) as i32]),
+        solver: SolverKind::Ddim,
+        steps,
+        cfg_scale: 1.0,
+        seed,
+        policy: Policy::no_cache(),
+        compute: Default::default(),
+        priority,
+    };
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(2);
+    cfg.workers = workers;
+    cfg.queue_depth = queue_depth;
+    let coord = Coordinator::start(cfg)?;
+
+    // warm the probe shape so compile/setup cost stays out of the
+    // measured window
+    coord.generate_blocking(mk_req(int_steps, PriorityClass::Interactive, 1))?;
+    let base_steps = Metrics::get(&coord.metrics().steps_executed);
+
+    // one long job per replica; distinct step counts keep their batch
+    // keys distinct so the batcher cannot fold them into one batch and
+    // leave replicas idle
+    let longs: Vec<_> = (0..workers)
+        .map(|i| coord.submit(mk_req(long_steps + i, long_class, 1000 + i as u64)))
+        .collect();
+    let t0 = Instant::now();
+    while Metrics::get(&coord.metrics().steps_executed) <= base_steps {
+        if t0.elapsed() > Duration::from_secs(600) {
+            return Err(smoothcache::err!("mixed-priority: long jobs never started"));
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // closed-loop interactive probes against the saturated pool
+    let mut probe_latencies = Vec::with_capacity(n_probes);
+    for i in 0..n_probes {
+        let t = Instant::now();
+        coord.generate_blocking(mk_req(int_steps, PriorityClass::Interactive, 2000 + i as u64))?;
+        probe_latencies.push(t.elapsed().as_secs_f64());
+    }
+
+    let mut long_completed = 0usize;
+    for rx in longs {
+        if rx.recv().map_err(|e| smoothcache::err!("long job reply lost: {e}"))?.is_ok() {
+            long_completed += 1;
+        }
+    }
+    let m = coord.metrics();
+    let preemptions = Metrics::get(&m.preemptions);
+    let hist_p99_s = m.e2e_interactive.quantile(0.99);
+    eprintln!(
+        "[mixed:{}] metrics: {}",
+        match long_class {
+            PriorityClass::Interactive => "run-to-completion",
+            PriorityClass::Batch => "preemptive",
+        },
+        m.summary()
+    );
+    coord.shutdown();
+    probe_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(PhaseStats { probe_latencies, long_completed, preemptions, hist_p99_s })
+}
+
+/// The `--mixed-priority` comparison (docs/adr/007): run-to-completion
+/// vs preemptive scheduling of long batch-class work under interactive
+/// probes, reported as `serving_mixed_w{workers}`.
+fn run_mixed_priority(
+    workers: usize,
+    queue_depth: usize,
+    smoke: bool,
+    json_out: Option<&str>,
+) -> smoothcache::util::error::Result<()> {
+    let (long_steps, int_steps, n_probes) = if smoke {
+        (64usize, 2usize, 8usize)
+    } else if fast_mode() {
+        (96, 3, 10)
+    } else {
+        (256, 6, 16)
+    };
+
+    // Phase A: long jobs at interactive class — same class as the
+    // probes, so nothing yields and every probe waits for a replica to
+    // run its long job to completion.
+    let baseline =
+        run_mixed_phase(workers, queue_depth, PriorityClass::Interactive, long_steps, int_steps, n_probes)?;
+    // Phase B: the same long jobs at batch class — executors park them
+    // at the next step boundary whenever a probe is waiting.
+    let preemptive =
+        run_mixed_phase(workers, queue_depth, PriorityClass::Batch, long_steps, int_steps, n_probes)?;
+
+    let base_p99 = pct_of(&baseline.probe_latencies, 0.99);
+    let pre_p99 = pct_of(&preemptive.probe_latencies, 0.99);
+    let improvement = if pre_p99 > 0.0 { base_p99 / pre_p99 } else { f64::INFINITY };
+
+    let mut table = Table::new(&[
+        "scheduling", "probe p50 (s)", "probe p95 (s)", "probe p99 (s)", "long done", "preempts",
+    ]);
+    for (name, st) in [("run-to-completion", &baseline), ("preemptive", &preemptive)] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", pct_of(&st.probe_latencies, 0.5)),
+            format!("{:.3}", pct_of(&st.probe_latencies, 0.95)),
+            format!("{:.3}", pct_of(&st.probe_latencies, 0.99)),
+            st.long_completed.to_string(),
+            st.preemptions.to_string(),
+        ]);
+    }
+    println!(
+        "\nMixed-priority serving — image family, DDIM, {workers} replicas, \
+         {n_probes} interactive probes ({int_steps} steps) against {workers} \
+         long jobs ({long_steps} steps); interactive p99 improvement {improvement:.1}x"
+    );
+    table.print();
+
+    let mut report = BenchReport::new(&format!("serving_mixed_w{workers}"));
+    report.meta("family", "image");
+    report.meta("solver", "ddim");
+    report.meta("workers", workers);
+    report.meta("long_steps", long_steps);
+    report.meta("interactive_steps", int_steps);
+    report.meta("interactive_probes", n_probes);
+    report.meta("smoke", smoke);
+    report.metric_tol("priority:interactive/p99_ms", pre_p99 * 1e3, "ms", false, 200.0)?;
+    report.metric_tol(
+        "priority:interactive/p50_ms",
+        pct_of(&preemptive.probe_latencies, 0.5) * 1e3,
+        "ms",
+        false,
+        200.0,
+    )?;
+    report.metric_tol(
+        "priority:interactive/p99_ms_run_to_completion",
+        base_p99 * 1e3,
+        "ms",
+        false,
+        200.0,
+    )?;
+    report.metric_tol("priority:interactive/p99_improvement_x", improvement, "x", true, 80.0)?;
+    report.metric_tol(
+        "priority:interactive/metrics_p99_s",
+        preemptive.hist_p99_s,
+        "s",
+        false,
+        300.0,
+    )?;
+    // deterministic conservation rows: every long job must finish in
+    // both phases (preemption defers work, it never sheds it), and the
+    // preemptive phase must actually preempt
+    report.metric_tol(
+        "priority:batch/completed",
+        preemptive.long_completed as f64,
+        "req",
+        true,
+        0.0,
+    )?;
+    report.metric_tol(
+        "priority:batch/completed_run_to_completion",
+        baseline.long_completed as f64,
+        "req",
+        true,
+        0.0,
+    )?;
+    report.metric_tol(
+        "priority:batch/preemptions",
+        preemptive.preemptions as f64,
+        "count",
+        true,
+        1000.0,
+    )?;
+    if let Some(path) = json_out {
         report.save(path)?;
         println!("wrote bench report: {path}");
     }

@@ -487,6 +487,7 @@ fn main() -> smoothcache::util::error::Result<()> {
                 seed: i as u64,
                 policy: Policy::no_cache(),
                 compute: Default::default(),
+                priority: Default::default(),
             })
         })
         .collect();

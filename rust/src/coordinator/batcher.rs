@@ -170,9 +170,31 @@ mod tests {
                 seed: id,
                 policy: Policy::no_cache(),
                 compute: Default::default(),
+                priority: Default::default(),
             },
             tx,
         )
+    }
+
+    #[test]
+    fn priority_classes_never_share_a_batch() {
+        // BatchKey carries the priority class, so the batcher cannot mix
+        // an interactive request with a batch-class one — the scheduler's
+        // class ordering would be meaningless inside a single batch
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        let mut int = mk_inflight("image", 10, 1.0, 1);
+        let mut bat = mk_inflight("image", 10, 1.0, 2);
+        int.request.priority = crate::coordinator::PriorityClass::Interactive;
+        bat.request.priority = crate::coordinator::PriorityClass::Batch;
+        assert_ne!(int.request.batch_key(), bat.request.batch_key());
+        assert!(b.push(int, now).is_none());
+        assert!(b.push(bat, now).is_none());
+        let flushed = b.drain();
+        assert_eq!(flushed.len(), 2, "one group per class");
+        for batch in &flushed {
+            assert_eq!(batch.len(), 1);
+        }
     }
 
     fn cfg() -> BatcherConfig {

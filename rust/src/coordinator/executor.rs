@@ -1,13 +1,23 @@
 //! The executor replicas: each executor thread owns its *own* engine
 //! (and thus its own backend instance — PJRT handles are thread-bound,
 //! so that backend runs exactly one replica; the reference backend
-//! replicates freely), pulls batches from the coordinator's shared
-//! [`WorkQueue`] whenever it goes idle,
-//! resolves caching policies to concrete [`CachePlan`]s through the
-//! pool-shared [`PlanStore`] (calibrating on demand, exactly once per
-//! configuration across all replicas) — or drives a
-//! [`crate::cache::StepPlanner`] at runtime for dynamic policies — and
-//! runs batched generations.
+//! replicates freely), pulls work from the coordinator's shared
+//! [`WorkQueue`] whenever it goes idle, resolves caching policies to
+//! concrete [`CachePlan`]s through the pool-shared [`PlanStore`]
+//! (calibrating on demand, exactly once per configuration across all
+//! replicas) — or drives a [`crate::cache::StepPlanner`] at runtime for
+//! dynamic policies — and runs batched generations.
+//!
+//! Preemption (docs/adr/007): while driving a **batch-class**
+//! generation the executor checks, after every solver step, whether
+//! fresh interactive work is waiting
+//! ([`WorkQueue::should_preempt`]). If so it snapshots the session
+//! ([`GenSession::snapshot`]) and parks it back into the queue; any
+//! replica later resumes it ([`resume_parked`]) bitwise-identically to
+//! an uninterrupted run. The check runs *after* a step, so a resumed
+//! session always makes ≥ 1 step of progress per scheduling slot —
+//! combined with the queue's aging rule this bounds every parked job's
+//! completion even under a sustained interactive flood.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -18,13 +28,13 @@ use crate::util::error::Result;
 
 use super::cancel::{reply_dead, DeadlinePolicy, Progress};
 use super::metrics::Metrics;
-use super::queue::WorkQueue;
-use super::request::{InFlight, Request, Response};
+use super::queue::{ParkedSession, WorkItem, WorkQueue};
+use super::request::{InFlight, Policy, PriorityClass, Request, Response};
 use crate::cache::plan::{CachePlan, PlanCtx, PlanRef};
 use crate::cache::{calibrate, CalibrationConfig, ErrorCurves};
-use crate::model::Engine;
+use crate::model::{Engine, FamilyManifest};
 use crate::pipeline::{GenConfig, GenSession};
-use crate::solvers::SolverRun;
+use crate::solvers::{SolverKind, SolverRun};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -46,11 +56,14 @@ pub struct ExecutorConfig {
     pub curves_dir: Option<std::path::PathBuf>,
 }
 
-/// One [`PlanStore`] shared by every executor replica: calibration is
+/// One [`PlanStore`] shared by every executor replica. Calibration is
 /// expensive, so the first replica to need a (family, solver, steps)
-/// configuration calibrates while the others block on the mutex and
-/// then read the cached curves — the "calibrate once per config"
-/// serving contract holds at any pool size.
+/// configuration calibrates while same-key followers block on that
+/// key's slot and then read the cached curves — the "calibrate once
+/// per config" serving contract holds at any pool size. Since the
+/// per-key slot rework (this PR, closing the ADR-002 residual),
+/// calibrations of *different* keys no longer serialize each other:
+/// the store-wide lock is only ever held for map lookups.
 pub type SharedPlanStore = Arc<Mutex<PlanStore>>;
 
 /// Lock the shared store, recovering from a replica that panicked while
@@ -74,10 +87,54 @@ pub struct PlanKey {
     pub policy: String,
 }
 
+/// One calibration key's curve cell: `None` until the first
+/// load-or-calibrate fills it. The per-key `Mutex` is the whole point
+/// — a replica calibrating key A holds A's slot, not the store, so a
+/// request for already-calibrated key B resolves concurrently.
+type CurveSlot = Arc<Mutex<Option<Arc<ErrorCurves>>>>;
+
+fn curve_key(family: &str, solver: SolverKind, steps: usize) -> (String, String, usize) {
+    (family.to_string(), solver.name().to_string(), steps)
+}
+
+/// Load pre-computed curves from `curves_dir`, or run a calibration
+/// pass. Pure with respect to the store — callers hold (at most) the
+/// relevant [`CurveSlot`] while invoking this, never the store lock.
+fn load_or_calibrate(
+    engine: &Engine,
+    metrics: Option<&Metrics>,
+    family: &str,
+    solver: SolverKind,
+    steps: usize,
+    calib_samples: usize,
+    calib_seed: u64,
+    curves_dir: &Option<std::path::PathBuf>,
+) -> Result<ErrorCurves> {
+    if let Some(dir) = curves_dir {
+        let p = dir.join(format!("{family}_{}_{steps}.json", solver.name()));
+        if let Ok(text) = std::fs::read_to_string(&p) {
+            if let Ok(c) = ErrorCurves::parse_str(&text) {
+                return Ok(c);
+            }
+        }
+    }
+    let cc = CalibrationConfig {
+        solver,
+        steps,
+        k_max: PlanStore::default_k_max(family),
+        num_samples: calib_samples,
+        cfg_scale: PlanStore::default_calib_cfg(family),
+        seed: calib_seed,
+    };
+    if let Some(m) = metrics {
+        Metrics::inc(&m.calibrations);
+    }
+    calibrate(engine, family, &cc)
+}
+
 /// Caches calibration curves and resolved [`CachePlan`]s across
-/// requests: one `PlanKey → Arc<CachePlan>` map for every policy shape
-/// (this replaced the pre-plan-API trio of grouped-schedule and
-/// per-site-map caches keyed by ad-hoc tuples). Invariant: entries are
+/// requests: one `PlanKey → Arc<CachePlan>` map for every policy shape,
+/// and one [`CurveSlot`] per calibration key. Invariant: entries are
 /// only ever inserted fully-formed, so any observable state is
 /// consistent even after a panic mid-request.
 pub struct PlanStore {
@@ -89,7 +146,7 @@ pub struct PlanStore {
     /// optional directory of pre-computed calibration curves, checked
     /// before calibrating.
     pub curves_dir: Option<std::path::PathBuf>,
-    curves: HashMap<(String, String, usize), ErrorCurves>,
+    curves: HashMap<(String, String, usize), CurveSlot>,
     plans: HashMap<PlanKey, Arc<CachePlan>>,
 }
 
@@ -132,19 +189,24 @@ impl PlanStore {
     /// already available — in memory, or pre-computed on disk under
     /// `curves_dir` — i.e. a curve-needing request for this
     /// configuration would resolve without paying a calibration. The
-    /// batcher uses this (via `try_lock`, never blocking behind an
-    /// in-flight calibration) to pick the work-queue lane.
+    /// batcher uses this (via `try_lock` on the store, and `try_lock`
+    /// on the key's slot here — never blocking behind an in-flight
+    /// calibration of *any* key) to pick the work-queue lane; a slot
+    /// mid-calibration conservatively reads as cold.
     pub fn has_curves(
         &self,
         family: &str,
         solver: crate::solvers::SolverKind,
         steps: usize,
     ) -> bool {
-        if self
-            .curves
-            .contains_key(&(family.to_string(), solver.name().to_string(), steps))
-        {
-            return true;
+        if let Some(slot) = self.curves.get(&curve_key(family, solver, steps)) {
+            if let Ok(cell) = slot.try_lock() {
+                if cell.is_some() {
+                    return true;
+                }
+            }
+            // calibration in flight (WouldBlock) or slot still empty:
+            // fall through to the disk check
         }
         // disk-cached curves load without calibrating (see `curves()`),
         // so they make the key just as hot as in-memory ones
@@ -164,43 +226,36 @@ impl PlanStore {
         family: &str,
         solver: crate::solvers::SolverKind,
         steps: usize,
-    ) -> Result<&ErrorCurves> {
-        let key = (family.to_string(), solver.name().to_string(), steps);
-        if !self.curves.contains_key(&key) {
-            // try the on-disk cache first
-            let mut loaded = None;
-            if let Some(dir) = &self.curves_dir {
-                let p = dir.join(format!("{family}_{}_{steps}.json", solver.name()));
-                if let Ok(text) = std::fs::read_to_string(&p) {
-                    loaded = ErrorCurves::parse_str(&text).ok();
-                }
-            }
-            let curves = match loaded {
-                Some(c) => c,
-                None => {
-                    let cc = CalibrationConfig {
-                        solver,
-                        steps,
-                        k_max: Self::default_k_max(family),
-                        num_samples: self.calib_samples,
-                        cfg_scale: Self::default_calib_cfg(family),
-                        seed: self.calib_seed,
-                    };
-                    if let Some(m) = metrics {
-                        Metrics::inc(&m.calibrations);
-                    }
-                    calibrate(engine, family, &cc)?
-                }
-            };
-            self.curves.insert(key.clone(), curves);
+    ) -> Result<Arc<ErrorCurves>> {
+        let slot = Arc::clone(
+            self.curves
+                .entry(curve_key(family, solver, steps))
+                .or_default(),
+        );
+        let mut cell = slot.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(c) = &*cell {
+            return Ok(Arc::clone(c));
         }
-        Ok(self.curves.get(&key).unwrap())
+        let c = Arc::new(load_or_calibrate(
+            engine,
+            metrics,
+            family,
+            solver,
+            steps,
+            self.calib_samples,
+            self.calib_seed,
+            &self.curves_dir,
+        )?);
+        *cell = Some(Arc::clone(&c));
+        Ok(c)
     }
 
     /// Resolve a static policy to its [`CachePlan`] for one
     /// configuration, building (and calibrating) on first use and
-    /// returning the shared cached plan afterwards. Dynamic policies
-    /// never reach the store — the executor drives their
+    /// returning the shared cached plan afterwards. Owned-store
+    /// convenience (CLI, tests, benches); the serving path uses
+    /// [`plan_shared`], which blocks same-key waiters only. Dynamic
+    /// policies never reach the store — the executor drives their
     /// [`crate::cache::StepPlanner`] directly, without the lock.
     pub fn plan(
         &mut self,
@@ -223,14 +278,19 @@ impl PlanStore {
             }
             return Ok(Arc::clone(p));
         }
-        let fm = engine.family_manifest(family)?;
         let planner = policy.planner();
-        let plan = if planner.needs_curves() {
-            let curves = self.curves(engine, metrics, family, solver, steps)?;
-            Arc::new(planner.plan(&PlanCtx { family: fm, solver, steps, curves: Some(curves) })?)
+        let held_curves = if planner.needs_curves() {
+            Some(self.curves(engine, metrics, family, solver, steps)?)
         } else {
-            Arc::new(planner.plan(&PlanCtx { family: fm, solver, steps, curves: None })?)
+            None
         };
+        let fm = engine.family_manifest(family)?;
+        let plan = Arc::new(planner.plan(&PlanCtx {
+            family: fm,
+            solver,
+            steps,
+            curves: held_curves.as_deref(),
+        })?);
         self.plans.insert(key, Arc::clone(&plan));
         // counted only after a successful build + insert, so the
         // counter means "plans actually built and cached"
@@ -241,15 +301,282 @@ impl PlanStore {
     }
 }
 
-/// Execute one homogeneous batch of requests on the engine.
-/// `local_plans` is this replica's private cache for calibration-free
-/// static plans (see the resolution comment below) — pass an empty map
-/// for one-off execution.
+/// Resolve a curve-needing policy through the shared store with
+/// **per-key** calibration locking (this PR's ADR-002-residual fix):
+/// the store-wide mutex is held only for map lookups; a cold key's
+/// calibration runs under that key's [`CurveSlot`] alone, so an
+/// already-calibrated key — or a different cold key — resolves
+/// concurrently instead of queueing behind a foreign calibration.
+/// Pinned by `warm_key_resolves_while_foreign_calibration_is_in_flight`
+/// in `tests/coordinator_props.rs`.
+pub fn plan_shared(
+    store: &SharedPlanStore,
+    engine: &Engine,
+    metrics: Option<&Metrics>,
+    family: &str,
+    solver: SolverKind,
+    steps: usize,
+    policy: &Policy,
+) -> Result<Arc<CachePlan>> {
+    let key = PlanKey {
+        family: family.to_string(),
+        solver: solver.name().to_string(),
+        steps,
+        policy: policy.wire().to_string(),
+    };
+    // brief store lock: plan fast path + curve-slot acquisition
+    let (slot, calib_samples, calib_seed, curves_dir) = {
+        let mut st = lock_store(store);
+        if let Some(p) = st.plans.get(&key) {
+            if let Some(m) = metrics {
+                Metrics::inc(&m.plan_cache_hits);
+            }
+            return Ok(Arc::clone(p));
+        }
+        let slot = Arc::clone(st.curves.entry(curve_key(family, solver, steps)).or_default());
+        (slot, st.calib_samples, st.calib_seed, st.curves_dir.clone())
+    };
+    let planner = policy.planner();
+    let held_curves = if planner.needs_curves() {
+        // only same-key waiters block here; a foreign calibration holds
+        // a different slot
+        let mut cell = slot.lock().unwrap_or_else(|p| p.into_inner());
+        let c = match &*cell {
+            Some(c) => Arc::clone(c),
+            None => {
+                let c = Arc::new(load_or_calibrate(
+                    engine,
+                    metrics,
+                    family,
+                    solver,
+                    steps,
+                    calib_samples,
+                    calib_seed,
+                    &curves_dir,
+                )?);
+                *cell = Some(Arc::clone(&c));
+                c
+            }
+        };
+        Some(c)
+    } else {
+        None
+    };
+    let fm = engine.family_manifest(family)?;
+    let plan = Arc::new(planner.plan(&PlanCtx {
+        family: fm,
+        solver,
+        steps,
+        curves: held_curves.as_deref(),
+    })?);
+    // publish under a second brief store lock; a racing same-key
+    // builder may have won — keep the first insert so every replica
+    // shares one Arc
+    let mut st = lock_store(store);
+    let shared = Arc::clone(st.plans.entry(key).or_insert_with(|| Arc::clone(&plan)));
+    if let Some(m) = metrics {
+        Metrics::inc(&m.plan_cache_misses);
+    }
+    Ok(shared)
+}
+
+/// Resolve the (static) plan for one request shape, or `None` for a
+/// dynamic policy (the caller borrows the policy's
+/// [`crate::cache::StepPlanner`] instead). Calibration-free policies
+/// are pure functions of the manifest geometry — resolved from the
+/// replica-local `local_plans` cache WITHOUT any shared lock, so a
+/// replica calibrating a curve-needing config can never stall them on
+/// its siblings (this is what makes the work queue's priority lane a
+/// real no-head-of-line-blocking guarantee, ADR-002: overtaking in the
+/// queue would be worthless if the batch then parked on a store mutex).
+/// Curve-needing policies go through [`plan_shared`]. Deterministic for
+/// a fixed store state — a parked session resumed on any replica
+/// re-resolves to an identical plan.
+#[allow(clippy::too_many_arguments)]
+fn resolve_plan(
+    engine: &Engine,
+    store: &SharedPlanStore,
+    local_plans: &mut HashMap<PlanKey, Arc<CachePlan>>,
+    metrics: &Metrics,
+    fm: &FamilyManifest,
+    family: &str,
+    solver: SolverKind,
+    steps: usize,
+    policy: &Policy,
+) -> Result<Option<Arc<CachePlan>>> {
+    let planner = policy.planner();
+    if planner.dynamic().is_some() {
+        return Ok(None);
+    }
+    if !planner.needs_curves() {
+        // cached per *replica* (lock-free), built at most once per
+        // configuration — repeated traffic pays one flat-map lookup,
+        // not a rebuild + validate per batch
+        let key = PlanKey {
+            family: family.to_string(),
+            solver: solver.name().to_string(),
+            steps,
+            policy: policy.wire().to_string(),
+        };
+        if let Some(p) = local_plans.get(&key) {
+            return Ok(Some(Arc::clone(p)));
+        }
+        let p = Arc::new(planner.plan(&PlanCtx { family: fm, solver, steps, curves: None })?);
+        local_plans.insert(key, Arc::clone(&p));
+        return Ok(Some(p));
+    }
+    Ok(Some(plan_shared(
+        store,
+        engine,
+        Some(metrics),
+        family,
+        solver,
+        steps,
+        policy,
+    )?))
+}
+
+/// Drive a session to completion — or to a preemption point. Shared by
+/// the fresh-batch path ([`execute_batch`]) and the resume path
+/// ([`resume_parked`]); `members` carries `(latent row, request)` so a
+/// member cancelled across park/resume cycles never shifts its
+/// siblings' rows. `exec_accum` / `first_exec` carry timing across
+/// segments: `exec_seconds` on the response is total model time over
+/// all segments, `queue_seconds` stays submit → *first* execution
+/// start.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    mut session: GenSession<'_>,
+    queue: &WorkQueue,
+    metrics: &Metrics,
+    mut members: Vec<(usize, InFlight)>,
+    target: usize,
+    exec_accum: f64,
+    first_exec: Instant,
+    seg_start: Instant,
+) -> Result<()> {
+    debug_assert!(!members.is_empty());
+    let steps_total = session.total_steps();
+    let class = members[0].1.request.priority;
+    while !session.is_done() {
+        // Between every solver step the executor checks cancellation
+        // and reject-late deadlines (abandoning the whole batch once
+        // every member is dead — a live sibling's work always
+        // completes), emits per-step progress events to streaming
+        // requests, and accounts per-step latency. No locks are held
+        // across a check, so aborting is always safe, including while
+        // another replica holds a calibration slot.
+        if members.iter().all(|(_, it)| it.dead_on_arrival()) {
+            for (_, it) in members {
+                reply_dead(metrics, it);
+            }
+            return Ok(());
+        }
+        let t_step = Instant::now();
+        let ev = session.step()?;
+        metrics.step_latency.observe(t_step.elapsed().as_secs_f64());
+        Metrics::inc(&metrics.steps_executed);
+        let elapsed_s = exec_accum + seg_start.elapsed().as_secs_f64();
+        for (_, it) in &members {
+            if it.cancel.is_cancelled() {
+                continue;
+            }
+            if let Some(tx) = &it.progress {
+                let _ = tx.send(Progress {
+                    id: it.request.id,
+                    step: ev.step,
+                    steps: steps_total,
+                    computes: ev.computes,
+                    reuses: ev.reuses,
+                    drift: ev.max_drift,
+                    elapsed_s,
+                });
+            }
+        }
+        // Preemption point (docs/adr/007): checked *after* the step so
+        // every scheduling slot makes ≥ 1 step of progress — a parked
+        // job therefore finishes in at most `steps` resumes no matter
+        // how hostile the interactive arrival pattern is.
+        if class == PriorityClass::Batch && !session.is_done() && queue.should_preempt(class) {
+            let state = session.snapshot();
+            Metrics::inc(&metrics.preemptions);
+            queue.push_parked(ParkedSession {
+                members,
+                state,
+                target,
+                class,
+                exec_seconds: exec_accum + seg_start.elapsed().as_secs_f64(),
+                first_exec,
+                parked_at: Instant::now(),
+            });
+            let parked = queue.parked_len() as u64;
+            Metrics::set(&metrics.parked_sessions, parked);
+            Metrics::raise(&metrics.parked_peak, parked);
+            return Ok(());
+        }
+    }
+    let out = session.finish();
+    // out.stats spans every segment of the trajectory (SessionState
+    // carries the counters across parks), so these totals are counted
+    // exactly once, at completion
+    let exec_seconds = exec_accum + seg_start.elapsed().as_secs_f64();
+    Metrics::inc(&metrics.batches_executed);
+    Metrics::add(&metrics.branch_computes, out.stats.branch_computes as u64);
+    Metrics::add(&metrics.branch_reuses, out.stats.branch_reuses as u64);
+    metrics.exec_latency.observe(exec_seconds);
+
+    let now = Instant::now();
+    for (row, it) in members {
+        // cancelled / reject-late-expired while siblings kept the batch
+        // alive: the result is discarded for this request only
+        if it.cancel.is_cancelled()
+            || it
+                .deadline
+                .is_some_and(|d| d.policy == DeadlinePolicy::RejectLate && now >= d.at)
+        {
+            reply_dead(metrics, it);
+            continue;
+        }
+        let deadline_missed = it.deadline.is_some_and(|d| now >= d.at);
+        if deadline_missed {
+            // best-effort deadline: deliver the late result, count it
+            Metrics::inc(&metrics.deadline_missed);
+        }
+        let queue_seconds = first_exec.duration_since(it.submitted).as_secs_f64();
+        let total = it.submitted.elapsed().as_secs_f64();
+        metrics.queue_latency.observe(queue_seconds);
+        metrics.e2e_latency.observe(total);
+        match it.request.priority {
+            PriorityClass::Interactive => metrics.e2e_interactive.observe(total),
+            PriorityClass::Batch => metrics.e2e_batch.observe(total),
+        }
+        Metrics::inc(&metrics.requests_completed);
+        let resp = Response {
+            id: it.request.id,
+            latent: out.latent.sample(row),
+            batch_size: target,
+            steps_completed: out.stats.steps,
+            deadline_missed,
+            queue_seconds,
+            exec_seconds,
+            total_seconds: total,
+            gen_stats: out.stats.clone(),
+        };
+        let _ = it.reply.send(Ok(resp));
+    }
+    Ok(())
+}
+
+/// Execute one homogeneous batch of requests on the engine (possibly
+/// parking it at a preemption point — see [`drive`]). `local_plans` is
+/// this replica's private cache for calibration-free static plans —
+/// pass an empty map for one-off execution.
 pub fn execute_batch(
     engine: &mut Engine,
     store: &SharedPlanStore,
     local_plans: &mut HashMap<PlanKey, Arc<CachePlan>>,
     metrics: &Metrics,
+    queue: &WorkQueue,
     batch: Vec<InFlight>,
     supported_batches: &[usize],
 ) -> Result<()> {
@@ -261,6 +588,7 @@ pub fn execute_batch(
     // dynamic planner from a local instead of from `batch`, which the
     // step loop must be free to answer and consume
     let policy = req0.policy.clone();
+    let (solver, steps) = (req0.solver, req0.steps);
     engine.load_family(&family)?;
     let fm = engine.family_manifest(&family)?.clone();
     let cfg_on = req0.cfg_scale != 1.0;
@@ -296,147 +624,96 @@ pub fn execute_batch(
     }
     let x_init = Tensor::cat0(&refs);
 
-    // Calibration-free policies are pure functions of the manifest
-    // geometry — resolve them WITHOUT the shared store lock, so a
-    // replica calibrating a curve-needing config can never stall them
-    // on its siblings. This is what makes the work queue's priority
-    // lane a real no-head-of-line-blocking guarantee (ADR-002):
-    // overtaking in the queue would be worthless if the batch then
-    // parked on the store mutex a calibration holds. Only policies
-    // whose planner needs curves take the lock, and calibration
-    // deliberately runs under it: that is what makes "calibrate once
-    // per config" hold across the pool. (Residual, documented in
-    // ADR-002: an already-calibrated smooth key can still wait behind
-    // an in-flight calibration of a *different* smooth key.) Dynamic
-    // policies carry no plan at all — their StepPlanner decides inside
-    // the generate loop from runtime observations.
-    let gen_cfg = GenConfig::new(&family, req0.solver, req0.steps)
+    let gen_cfg = GenConfig::new(&family, solver, steps)
         .with_cfg(req0.cfg_scale)
         .with_seed(req0.seed)
         .with_compute(req0.compute);
-    let (solver, steps) = (req0.solver, req0.steps);
+    let held_plan = resolve_plan(
+        engine,
+        store,
+        local_plans,
+        metrics,
+        &fm,
+        &family,
+        solver,
+        steps,
+        &policy,
+    )?;
     let planner = policy.planner();
-    let held_plan;
-    let plan = if let Some(sp) = planner.dynamic() {
-        PlanRef::Planner(sp)
-    } else if !planner.needs_curves() {
-        // cached per *replica* (lock-free), built at most once per
-        // configuration — repeated traffic pays one flat-map lookup,
-        // not a rebuild + validate per batch
-        let key = PlanKey {
-            family: family.clone(),
-            solver: solver.name().to_string(),
-            steps,
-            policy: policy.wire().to_string(),
-        };
-        held_plan = match local_plans.get(&key) {
-            Some(p) => Arc::clone(p),
-            None => {
-                let p = Arc::new(planner.plan(&PlanCtx {
-                    family: &fm,
-                    solver,
-                    steps,
-                    curves: None,
-                })?);
-                local_plans.insert(key, Arc::clone(&p));
-                p
-            }
-        };
-        PlanRef::Plan(&held_plan)
-    } else {
-        held_plan =
-            lock_store(store).plan(engine, Some(metrics), &family, solver, steps, &policy)?;
-        PlanRef::Plan(&held_plan)
+    let plan = match &held_plan {
+        Some(p) => PlanRef::Plan(p.as_ref()),
+        None => PlanRef::Planner(
+            planner
+                .dynamic()
+                .ok_or_else(|| crate::err!("policy resolved to neither plan nor planner"))?,
+        ),
     };
 
-    // Step-driven execution over a GenSession: between every solver
-    // step the executor checks cancellation and reject-late deadlines
-    // (abandoning the whole batch once every member is dead — a live
-    // sibling's work always completes), emits per-step progress events
-    // to streaming requests, and accounts per-step latency. This is the
-    // cooperative-cancellation seam: no locks are held across a check,
-    // so aborting is always safe, including while another replica holds
-    // the plan store inside a calibration.
-    let queue_at = exec_start;
-    let mut session = GenSession::from_latent(engine, &gen_cfg, &cond, x_init, plan)?;
-    let steps_total = session.total_steps();
-    while !session.is_done() {
-        if batch.iter().all(|it| it.dead_on_arrival()) {
-            for it in batch {
-                reply_dead(metrics, it);
-            }
-            return Ok(());
-        }
-        let t_step = Instant::now();
-        let ev = session.step()?;
-        metrics.step_latency.observe(t_step.elapsed().as_secs_f64());
-        Metrics::inc(&metrics.steps_executed);
-        let elapsed_s = exec_start.elapsed().as_secs_f64();
-        for it in &batch {
-            if it.cancel.is_cancelled() {
-                continue;
-            }
-            if let Some(tx) = &it.progress {
-                let _ = tx.send(Progress {
-                    id: it.request.id,
-                    step: ev.step,
-                    steps: steps_total,
-                    computes: ev.computes,
-                    reuses: ev.reuses,
-                    drift: ev.max_drift,
-                    elapsed_s,
-                });
-            }
-        }
-    }
-    let out = session.finish();
-    let exec_seconds = exec_start.elapsed().as_secs_f64();
+    let session = GenSession::from_latent(engine, &gen_cfg, &cond, x_init, plan)?;
+    let members: Vec<(usize, InFlight)> = batch.into_iter().enumerate().collect();
+    drive(session, queue, metrics, members, target, 0.0, exec_start, exec_start)
+}
 
-    Metrics::inc(&metrics.batches_executed);
-    Metrics::add(&metrics.branch_computes, out.stats.branch_computes as u64);
-    Metrics::add(&metrics.branch_reuses, out.stats.branch_reuses as u64);
-    metrics.exec_latency.observe(exec_seconds);
-
-    let now = Instant::now();
-    for (i, it) in batch.into_iter().enumerate() {
-        // cancelled / reject-late-expired while siblings kept the batch
-        // alive: the result is discarded for this request only
-        if it.cancel.is_cancelled()
-            || it
-                .deadline
-                .is_some_and(|d| d.policy == DeadlinePolicy::RejectLate && now >= d.at)
-        {
-            reply_dead(metrics, it);
-            continue;
-        }
-        let deadline_missed = it.deadline.is_some_and(|d| now >= d.at);
-        if deadline_missed {
-            // best-effort deadline: deliver the late result, count it
-            Metrics::inc(&metrics.deadline_missed);
-        }
-        let queue_seconds = queue_at.duration_since(it.submitted).as_secs_f64();
-        let total = it.submitted.elapsed().as_secs_f64();
-        metrics.queue_latency.observe(queue_seconds);
-        metrics.e2e_latency.observe(total);
-        Metrics::inc(&metrics.requests_completed);
-        let resp = Response {
-            id: it.request.id,
-            latent: out.latent.sample(i),
-            batch_size: target,
-            steps_completed: out.stats.steps,
-            deadline_missed,
-            queue_seconds,
-            exec_seconds,
-            total_seconds: total,
-            gen_stats: out.stats.clone(),
-        };
-        let _ = it.reply.send(Ok(resp));
+/// Resume a parked session on this replica: shed members that died
+/// while parked, re-resolve the plan (deterministic, so the trajectory
+/// stays bitwise-identical to an uninterrupted run — pinned by
+/// `tests/session_parity.rs` and the preemption-parity props), and
+/// drive from the snapshot.
+pub fn resume_parked(
+    engine: &mut Engine,
+    store: &SharedPlanStore,
+    local_plans: &mut HashMap<PlanKey, Arc<CachePlan>>,
+    metrics: &Metrics,
+    queue: &WorkQueue,
+    parked: ParkedSession,
+) -> Result<()> {
+    let seg_start = Instant::now();
+    metrics
+        .resume_latency
+        .observe(parked.parked_at.elapsed().as_secs_f64());
+    let ParkedSession { members, state, target, exec_seconds, first_exec, .. } = parked;
+    let (live, dead): (Vec<_>, Vec<_>) =
+        members.into_iter().partition(|(_, it)| !it.dead_on_arrival());
+    for (_, it) in dead {
+        reply_dead(metrics, it);
     }
-    Ok(())
+    if live.is_empty() {
+        // every member died while parked: the partial work is discarded
+        return Ok(());
+    }
+    Metrics::inc(&metrics.session_resumes);
+    let req0: &Request = &live[0].1.request;
+    let family = req0.family.clone();
+    let policy = req0.policy.clone();
+    let (solver, steps) = (req0.solver, req0.steps);
+    engine.load_family(&family)?;
+    let fm = engine.family_manifest(&family)?.clone();
+    let held_plan = resolve_plan(
+        engine,
+        store,
+        local_plans,
+        metrics,
+        &fm,
+        &family,
+        solver,
+        steps,
+        &policy,
+    )?;
+    let planner = policy.planner();
+    let plan = match &held_plan {
+        Some(p) => PlanRef::Plan(p.as_ref()),
+        None => PlanRef::Planner(
+            planner
+                .dynamic()
+                .ok_or_else(|| crate::err!("policy resolved to neither plan nor planner"))?,
+        ),
+    };
+    let session = GenSession::resume(engine, state, plan)?;
+    drive(session, queue, metrics, live, target, exec_seconds, first_exec, seg_start)
 }
 
 /// One executor replica's loop: opens its own engine on this thread,
-/// then pulls batches from the shared work queue until the queue is
+/// then pulls work items from the shared queue until the queue is
 /// closed and drained — the pull model means a replica busy with a
 /// long calibration simply stops pulling, and can never
 /// head-of-line-block batches a sibling could serve. `worker` is the
@@ -460,11 +737,17 @@ pub fn run_executor(
             // pulling (it would race healthy siblings for work just to
             // fail it). Leave the pool — unless every replica is gone,
             // in which case drain-and-fail so requests error instead of
-            // hanging until shutdown.
+            // hanging until shutdown (parked sessions included).
             if live.fetch_sub(1, Ordering::SeqCst) == 1 {
-                while let Some(q) = queue.pop() {
+                while let Some(item) = queue.pop() {
                     Metrics::set(&metrics.queue_depth, queue.len() as u64);
-                    for it in q.batch {
+                    let members: Vec<InFlight> = match item {
+                        WorkItem::Fresh(q) => q.batch,
+                        WorkItem::Parked(ps) => {
+                            ps.members.into_iter().map(|(_, it)| it).collect()
+                        }
+                    };
+                    for it in members {
                         Metrics::inc(&metrics.requests_failed);
                         let _ = it.reply.send(Err(crate::err!("engine unavailable")));
                     }
@@ -485,35 +768,66 @@ pub fn run_executor(
     // identical plans per batch
     let mut local_plans: HashMap<PlanKey, Arc<CachePlan>> = HashMap::new();
 
-    while let Some(q) = queue.pop() {
+    while let Some(item) = queue.pop() {
         Metrics::set(&metrics.queue_depth, queue.len() as u64);
-        metrics.queue_wait.observe(q.enqueued.elapsed().as_secs_f64());
-        // shed requests that died while queued (cancelled, or past a
-        // reject-late deadline) before any work happens — they never
-        // reach the engine, and a fully dead batch is skipped outright
-        let (batch, dead): (Vec<_>, Vec<_>) =
-            q.batch.into_iter().partition(|it| !it.dead_on_arrival());
-        for it in dead {
-            reply_dead(&metrics, it);
-        }
-        if batch.is_empty() {
-            continue;
-        }
-        // keep reply handles in case of failure
-        let ids: Vec<u64> = batch.iter().map(|b| b.request.id).collect();
-        let replies: Vec<_> = batch.iter().map(|b| b.reply.clone()).collect();
-        if let Err(e) = execute_batch(
-            &mut engine,
-            &store,
-            &mut local_plans,
-            &metrics,
-            batch,
-            &supported_batches,
-        ) {
-            eprintln!("executor[{worker}]: batch {ids:?} failed: {e:#}");
-            for r in replies {
-                Metrics::inc(&metrics.requests_failed);
-                let _ = r.send(Err(crate::err!("batch execution failed: {e}")));
+        Metrics::set(&metrics.parked_sessions, queue.parked_len() as u64);
+        match item {
+            WorkItem::Fresh(q) => {
+                let qwait = q.enqueued.elapsed().as_secs_f64();
+                metrics.queue_wait.observe(qwait);
+                match q.class() {
+                    PriorityClass::Interactive => metrics.qwait_interactive.observe(qwait),
+                    PriorityClass::Batch => metrics.qwait_batch.observe(qwait),
+                }
+                // shed requests that died while queued (cancelled, or
+                // past a reject-late deadline) before any work happens —
+                // they never reach the engine, and a fully dead batch is
+                // skipped outright
+                let (batch, dead): (Vec<_>, Vec<_>) =
+                    q.batch.into_iter().partition(|it| !it.dead_on_arrival());
+                for it in dead {
+                    reply_dead(&metrics, it);
+                }
+                if batch.is_empty() {
+                    continue;
+                }
+                // keep reply handles in case of failure
+                let ids: Vec<u64> = batch.iter().map(|b| b.request.id).collect();
+                let replies: Vec<_> = batch.iter().map(|b| b.reply.clone()).collect();
+                if let Err(e) = execute_batch(
+                    &mut engine,
+                    &store,
+                    &mut local_plans,
+                    &metrics,
+                    &queue,
+                    batch,
+                    &supported_batches,
+                ) {
+                    eprintln!("executor[{worker}]: batch {ids:?} failed: {e:#}");
+                    for r in replies {
+                        Metrics::inc(&metrics.requests_failed);
+                        let _ = r.send(Err(crate::err!("batch execution failed: {e}")));
+                    }
+                }
+            }
+            WorkItem::Parked(ps) => {
+                let ids: Vec<u64> = ps.members.iter().map(|(_, it)| it.request.id).collect();
+                let replies: Vec<_> =
+                    ps.members.iter().map(|(_, it)| it.reply.clone()).collect();
+                if let Err(e) = resume_parked(
+                    &mut engine,
+                    &store,
+                    &mut local_plans,
+                    &metrics,
+                    &queue,
+                    ps,
+                ) {
+                    eprintln!("executor[{worker}]: resume {ids:?} failed: {e:#}");
+                    for r in replies {
+                        Metrics::inc(&metrics.requests_failed);
+                        let _ = r.send(Err(crate::err!("batch execution failed: {e}")));
+                    }
+                }
             }
         }
     }

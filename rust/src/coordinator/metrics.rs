@@ -136,6 +136,31 @@ pub struct Metrics {
     /// batch) — the granularity cancellation and streaming progress
     /// operate at: a cancel lands within roughly one `step_mean`.
     pub step_latency: Histogram,
+    /// Preemptions: batch-class generations parked at a step boundary
+    /// because interactive work was waiting (docs/adr/007).
+    pub preemptions: AtomicU64,
+    /// Parked sessions resumed by an executor (≤ [`Metrics::preemptions`];
+    /// the gap is sessions still parked or cancelled while parked).
+    pub session_resumes: AtomicU64,
+    /// Sessions currently parked in the work queue (gauge).
+    pub parked_sessions: AtomicU64,
+    /// High-water mark of [`Metrics::parked_sessions`] since startup.
+    pub parked_peak: AtomicU64,
+    /// park → resume latency per parked session (how long preempted
+    /// work waited before an executor picked it back up).
+    pub resume_latency: Histogram,
+    /// end-to-end latency of interactive-class requests (the class the
+    /// preemptive scheduler protects; per-class p50/p95/p99 in
+    /// [`Metrics::summary`]).
+    pub e2e_interactive: Histogram,
+    /// end-to-end latency of batch-class requests (the preemptible
+    /// class — expect a longer tail, bounded by the aging rule).
+    pub e2e_batch: Histogram,
+    /// work-queue wait of interactive-class batches.
+    pub qwait_interactive: Histogram,
+    /// work-queue wait of batch-class batches (queue admission → first
+    /// pulled; resume waits are under [`Metrics::resume_latency`]).
+    pub qwait_batch: Histogram,
 }
 
 impl Metrics {
@@ -184,7 +209,10 @@ impl Metrics {
              rejected={} batches={} qdepth={} qpeak={} occupancy={:.2} plan_hits={} \
              plan_miss={} e2e_mean={:.3}s e2e_p95={:.3}s queue_mean={:.3}s \
              qwait_mean={:.3}s qwait_p95={:.3}s exec_mean={:.3}s steps={} \
-             step_mean={:.4}s skips={}/{}",
+             step_mean={:.4}s skips={}/{} preempt={} resumes={} parked={} \
+             park_peak={} resume_mean={:.3}s e2e_int_p50={:.3}s e2e_int_p95={:.3}s \
+             e2e_int_p99={:.3}s e2e_bat_p50={:.3}s e2e_bat_p95={:.3}s \
+             e2e_bat_p99={:.3}s qwait_int_mean={:.3}s qwait_bat_mean={:.3}s",
             Self::get(&self.executor_replicas).max(1),
             Self::get(&self.requests_submitted),
             Self::get(&self.requests_completed),
@@ -208,6 +236,19 @@ impl Metrics {
             self.step_latency.mean(),
             Self::get(&self.branch_reuses),
             Self::get(&self.branch_computes) + Self::get(&self.branch_reuses),
+            Self::get(&self.preemptions),
+            Self::get(&self.session_resumes),
+            Self::get(&self.parked_sessions),
+            Self::get(&self.parked_peak),
+            self.resume_latency.mean(),
+            self.e2e_interactive.quantile(0.50),
+            self.e2e_interactive.quantile(0.95),
+            self.e2e_interactive.quantile(0.99),
+            self.e2e_batch.quantile(0.50),
+            self.e2e_batch.quantile(0.95),
+            self.e2e_batch.quantile(0.99),
+            self.qwait_interactive.mean(),
+            self.qwait_batch.mean(),
         )
     }
 }
@@ -291,5 +332,42 @@ mod tests {
         assert!(s.contains("qdepth=5"), "{s}");
         assert!(s.contains("qpeak=5"), "{s}");
         assert!(s.contains("qwait_mean=0.250s"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_preemption_counters() {
+        let m = Metrics::default();
+        Metrics::add(&m.preemptions, 3);
+        Metrics::add(&m.session_resumes, 2);
+        Metrics::set(&m.parked_sessions, 1);
+        Metrics::raise(&m.parked_peak, 2);
+        m.resume_latency.observe(0.125);
+        let s = m.summary();
+        assert!(s.contains("preempt=3"), "{s}");
+        assert!(s.contains("resumes=2"), "{s}");
+        assert!(s.contains("parked=1"), "{s}");
+        assert!(s.contains("park_peak=2"), "{s}");
+        assert!(s.contains("resume_mean=0.125s"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_per_class_latency_percentiles() {
+        let m = Metrics::default();
+        for _ in 0..100 {
+            m.e2e_interactive.observe(0.010);
+        }
+        m.e2e_batch.observe(4.0);
+        m.qwait_interactive.observe(0.002);
+        m.qwait_batch.observe(0.5);
+        let s = m.summary();
+        assert!(s.contains("e2e_int_p50="), "{s}");
+        assert!(s.contains("e2e_int_p95="), "{s}");
+        assert!(s.contains("e2e_int_p99="), "{s}");
+        assert!(s.contains("e2e_bat_p99="), "{s}");
+        assert!(s.contains("qwait_int_mean=0.002s"), "{s}");
+        assert!(s.contains("qwait_bat_mean=0.500s"), "{s}");
+        // the two classes are tracked independently
+        assert!(m.e2e_interactive.quantile(0.99) < 0.1);
+        assert!(m.e2e_batch.quantile(0.50) >= 4.0);
     }
 }

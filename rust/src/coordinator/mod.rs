@@ -4,12 +4,15 @@
 //! Thread topology (no tokio offline; DESIGN.md §3):
 //!
 //! ```text
-//!  clients ──submit()──► [batcher thread] ──batches──► [work queue] ◄──pull── [executor 0]
-//!                         groups by key,               bounded,     ◄──pull── [executor 1]
-//!                         flushes on size              2 lanes       ...        ...
-//!                         or deadline                 (prio|normal) ◄──pull── [executor N-1]
-//!                                                                              each owns its
-//!                                                                              own engine
+//!  clients ──submit()──► [batcher thread] ──batches──► [work queue]  ◄──pull── [executor 0]
+//!                         groups by key                bounded,      ◄──pull── [executor 1]
+//!                         (incl. priority              class-aware:    ...       ...
+//!                         class), flushes on           interactive ▸  ◄──pull── [executor N-1]
+//!                         size or deadline             parked ▸ batch            each owns its
+//!                                                      + aging rule              own engine
+//!                                                          ▲    │
+//!                                                          └────┘ park/resume
+//!                                                       (preempted sessions)
 //! ```
 //!
 //! Batching remains the primary concurrency mechanism (as in the
@@ -20,18 +23,30 @@
 //! thread-bound device handles (PJRT) transparently degrade to a pool
 //! of one ([`crate::runtime::backend_supports_replicas`]).
 //!
-//! Between the batcher and the pool sits one bounded, two-lane
-//! [`queue::WorkQueue`] (ADR-002): executors *pull* their next batch
-//! when free, so a replica stuck in a long calibration stops pulling
-//! instead of starving a private channel; batches that need no cold
-//! calibration take the priority lane and overtake ones that do; and
-//! when the queue is full, new batches are rejected with an
-//! `overloaded:` error rather than queued without bound
-//! (`--queue-depth`, docs/protocol.md). Calibration curves and resolved
-//! [`crate::cache::CachePlan`]s live in one
-//! [`executor::SharedPlanStore`] behind an `Arc<Mutex>`, so "calibrate
-//! once per configuration" holds at any pool size; the lane choice for
-//! each batch comes straight from the policy registry
+//! Between the batcher and the pool sits one bounded, class-aware
+//! [`queue::WorkQueue`] (ADR-002, extended by docs/adr/007): executors
+//! *pull* their next work item when free, so a replica stuck in a long
+//! calibration stops pulling instead of starving a private channel.
+//! Every request carries a [`PriorityClass`] (`interactive` — the
+//! default — or `batch`): interactive work is always served first, and
+//! an executor mid-way through a *batch*-class generation **preempts**
+//! it at the next solver-step boundary when fresh interactive work is
+//! waiting — the session is snapshotted
+//! ([`crate::pipeline::GenSession::snapshot`]) and parked back into the
+//! queue, to be resumed later on any replica bitwise-identically. A
+//! count-based aging rule bounds starvation: after
+//! [`CoordinatorConfig::aging_limit`] consecutive interactive serves
+//! with lower-class work waiting, the oldest parked/batch item runs
+//! next. Within a class, batches that need no cold calibration take
+//! the priority lane and overtake ones that do; when the queue is full,
+//! new batches are rejected with an `overloaded:` error rather than
+//! queued without bound (`--queue-depth`, docs/protocol.md).
+//! Calibration curves and resolved [`crate::cache::CachePlan`]s live in
+//! one [`executor::SharedPlanStore`]; calibration locking is
+//! **per-key** ([`executor::plan_shared`]), so "calibrate once per
+//! configuration" holds at any pool size while a calibration of one
+//! key never blocks requests for another; the lane choice for each
+//! batch comes straight from the policy registry
 //! ([`crate::cache::plan::registry`]) instead of re-matching an enum.
 //!
 //! Requests are controllable while in flight (ADR-004, [`cancel`]):
@@ -63,10 +78,10 @@ use cancel::{lock_cancels, reply_dead, CancelMap, CancelRegistration, CancelToke
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use cancel::{Deadline, DeadlinePolicy, Progress};
-pub use executor::{ExecutorConfig, PlanKey, PlanStore, SharedPlanStore};
+pub use executor::{plan_shared, ExecutorConfig, PlanKey, PlanStore, SharedPlanStore};
 pub use metrics::{Histogram, Metrics};
-pub use queue::{Lane, QueuedBatch, WorkQueue};
-pub use request::{BatchKey, InFlight, Policy, Request, Response};
+pub use queue::{Lane, ParkedSession, QueuedBatch, WorkItem, WorkQueue};
+pub use request::{BatchKey, InFlight, Policy, PriorityClass, Request, Response};
 
 /// Everything [`Coordinator::start`] needs to bring the serving
 /// pipeline up.
@@ -95,6 +110,11 @@ pub struct CoordinatorConfig {
     /// an `overloaded:` error. Default: the `SMOOTHCACHE_QUEUE_DEPTH`
     /// environment variable, else 256.
     pub queue_depth: usize,
+    /// Anti-starvation aging limit (docs/adr/007): after this many
+    /// consecutive interactive serves while batch-class or parked work
+    /// waits, the scheduler serves the oldest lower-class item next.
+    /// Clamped to ≥ 1; default 4.
+    pub aging_limit: usize,
 }
 
 impl CoordinatorConfig {
@@ -110,6 +130,7 @@ impl CoordinatorConfig {
             curves_dir: None,
             workers: default_workers(),
             queue_depth: default_queue_depth(),
+            aging_limit: 4,
         }
     }
 
@@ -124,6 +145,13 @@ impl CoordinatorConfig {
     /// (clamped to ≥ 1).
     pub fn with_queue_depth(mut self, depth: usize) -> CoordinatorConfig {
         self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Builder-style override of [`CoordinatorConfig::aging_limit`]
+    /// (clamped to ≥ 1).
+    pub fn with_aging_limit(mut self, limit: usize) -> CoordinatorConfig {
+        self.aging_limit = limit.max(1);
         self
     }
 }
@@ -211,7 +239,7 @@ impl Coordinator {
             ecfg.calib_seed,
             ecfg.curves_dir.clone(),
         )));
-        let queue = Arc::new(WorkQueue::new(config.queue_depth));
+        let queue = Arc::new(WorkQueue::with_aging(config.queue_depth, config.aging_limit));
         let live = Arc::new(AtomicUsize::new(replicas));
         let mut executor_handles = Vec::with_capacity(replicas);
         for w in 0..replicas {
@@ -263,6 +291,11 @@ impl Coordinator {
         self.queue.len()
     }
 
+    /// Preempted sessions currently parked in the work queue.
+    pub fn parked_len(&self) -> usize {
+        self.queue.parked_len()
+    }
+
     /// Submit a request; returns the reply channel immediately. The
     /// reply is either a [`Response`], an execution error, or — when
     /// the work queue is at `--queue-depth` — an admission-control
@@ -311,9 +344,12 @@ impl Coordinator {
     /// `cancelled:` error, or the finished [`Response`] if it won the
     /// race. A request still waiting in the shared work queue is pulled
     /// out *now*: its admission slot frees immediately and it never
-    /// reaches a replica; one buffered in the batcher is shed at its
-    /// group's next flush; one executing stops at the next solver-step
-    /// boundary (see [`cancel`](crate::coordinator::cancel)).
+    /// reaches a replica; one inside a **parked** session is purged the
+    /// same way — a parked session whose members are all cancelled is
+    /// dropped on the spot and never resumes; one buffered in the
+    /// batcher is shed at its group's next flush; one executing stops
+    /// at the next solver-step boundary (see
+    /// [`cancel`](crate::coordinator::cancel)).
     pub fn cancel(&self, id: u64) -> bool {
         let token = lock_cancels(&self.cancels).get(&id).cloned();
         let Some(token) = token else {
@@ -326,6 +362,7 @@ impl Coordinator {
         let removed = self.queue.remove_where(|it| it.cancel.same(&token));
         if !removed.is_empty() {
             Metrics::set(&self.metrics.queue_depth, self.queue.len() as u64);
+            Metrics::set(&self.metrics.parked_sessions, self.queue.parked_len() as u64);
             for it in removed {
                 reply_dead(&self.metrics, it);
             }
@@ -484,6 +521,7 @@ mod tests {
             seed: 1,
             policy,
             compute: Default::default(),
+            priority: PriorityClass::default(),
         }
     }
 

@@ -1,85 +1,185 @@
 //! The shared pull-model work queue between the batcher and the
-//! executor replica pool (ADR-002).
+//! executor replica pool (ADR-002), extended into the preemptive
+//! scheduler's run queue (docs/adr/007).
 //!
-//! One bounded, two-lane MPMC queue replaces the per-replica channels
-//! the round-robin `Router` used to feed: the batcher pushes every
-//! flushed batch here, and each executor pulls its next batch the
-//! moment it goes idle. A replica stuck in a long calibration simply
-//! stops pulling — it can no longer head-of-line-block batches a
-//! sibling could serve, which was the failure mode recorded in
-//! ROADMAP.md after the PR 2 review.
+//! One bounded MPMC queue replaces the per-replica channels the
+//! round-robin `Router` used to feed: the batcher pushes every flushed
+//! batch here, and each executor pulls its next work item the moment it
+//! goes idle. A replica stuck in a long calibration simply stops
+//! pulling — it can no longer head-of-line-block batches a sibling
+//! could serve, which was the failure mode recorded in ROADMAP.md after
+//! the PR 2 review.
 //!
-//! Three properties the queue maintains:
+//! The queue holds two kinds of [`WorkItem`]:
 //!
-//! * **Bounded depth / admission control** — at most `depth` *requests*
-//!   (summed over queued batches) wait at any time. A push that would
-//!   exceed the bound is rejected and the whole batch handed back to
-//!   the caller, which fails each request with a well-formed
-//!   `overloaded:` error instead of letting latency grow without
-//!   bound (the backpressure story; see docs/protocol.md). An empty
-//!   queue always admits one batch regardless of its size, so a
-//!   `depth` smaller than the largest supported batch can never wedge
-//!   the pipeline.
-//! * **Priority lane** — batches whose policy needs no cold
-//!   calibration (`no-cache`, `fora`, `alternate`, `delta-dit`, and
-//!   `smooth:*` keys whose curves are already cached) overtake batches
-//!   that are about to pay a calibration, so cheap traffic never waits
-//!   behind an expensive cold key. Within a lane, order is FIFO. The
-//!   priority lane is served strictly first; under a sustained flood
-//!   of priority traffic a normal-lane batch waits until the flood
-//!   ebbs — bounded depth turns that starvation into admission
-//!   rejections rather than unbounded queueing (tradeoff recorded in
-//!   ADR-002).
-//! * **Graceful drain** — [`WorkQueue::close`] stops admissions while
-//!   letting executors drain everything already queued; [`WorkQueue::pop`]
-//!   returns `None` only once the queue is both closed and empty.
+//! * **Fresh batches** ([`QueuedBatch`]), organized by the request's
+//!   [`PriorityClass`] (interactive | batch) and, within a class, by
+//!   calibration [`Lane`] (priority = resolves without a cold
+//!   calibration, normal = will pay one). Within a (class, lane) pair,
+//!   order is FIFO.
+//! * **Parked sessions** ([`ParkedSession`]): in-flight generations an
+//!   executor preempted at a solver-step boundary to let interactive
+//!   work through. They carry the full [`SessionState`] snapshot plus
+//!   the original requests, and resume on *any* replica
+//!   bitwise-identically (pinned by `tests/coordinator_props.rs`).
+//!
+//! Pick order in [`WorkQueue::pop`]:
+//!
+//! 1. **Aging override** — if [`WorkQueue::aging_limit`] consecutive
+//!    interactive items were served while lower-class work waited, the
+//!    oldest lower-class item (parked first) is served next. This is
+//!    the anti-starvation rule: under a *sustained* interactive flood
+//!    every parked session still gets one resume slot per
+//!    `aging_limit + 1` pops, and since a resumed session always makes
+//!    ≥ 1 step of progress before it can be preempted again, every
+//!    parked session finishes in at most `steps × (aging_limit + 1)`
+//!    pops. Deterministic (count-based, not wall-clock), so it is
+//!    propcheck-testable without sleeps.
+//! 2. Interactive fresh batches (priority lane, then normal).
+//! 3. Parked sessions, FIFO — resuming partial work bounds park depth
+//!    and memory before new batch-class work is admitted to a replica.
+//! 4. Batch-class fresh batches (priority lane, then normal).
+//!
+//! Three properties carried over from ADR-002 and sharpened:
+//!
+//! * **Bounded depth / admission control** — at most `depth` *fresh*
+//!   requests (summed over queued batches, both classes) wait at any
+//!   time; a push that would exceed the bound is rejected and the whole
+//!   batch handed back so the caller can answer each request with an
+//!   `overloaded:` error. An empty queue always admits one batch. Parked
+//!   sessions do **not** consume admission slots (they were admitted
+//!   once already; holding their slot while parked would let a preempted
+//!   long job block new traffic — the accounting the ISSUE calls out)
+//!   and [`WorkQueue::push_parked`] never fails: a preempted session
+//!   must always be able to re-enter, or its work would be lost.
+//! * **Preemption signal** — [`WorkQueue::should_preempt`] tells an
+//!   executor mid-generation whether fresh work of a strictly higher
+//!   class is waiting; it never blocks.
+//! * **Graceful drain** — [`WorkQueue::close`] stops fresh admissions
+//!   while letting executors drain everything already queued, parked
+//!   sessions included; [`WorkQueue::pop`] returns `None` only once the
+//!   queue is closed **and** fully drained.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
-use super::request::InFlight;
+use super::request::{InFlight, PriorityClass};
+use crate::pipeline::SessionState;
 
-/// Which lane a batch enters the queue on. See the module docs for the
-/// overtaking semantics.
+/// Which calibration lane a batch enters its class on. See the module
+/// docs for the overtaking semantics.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Lane {
-    /// Served first: the batch's policy resolves without a cold
-    /// calibration, so an idle replica can run it immediately.
+    /// Served first within the class: the batch's policy resolves
+    /// without a cold calibration, so an idle replica can run it
+    /// immediately.
     Priority,
-    /// Served when the priority lane is empty: the batch will trigger
-    /// (or wait on) an expensive calibration.
+    /// Served when the class's priority lane is empty: the batch will
+    /// trigger (or wait on) an expensive calibration.
     Normal,
 }
 
-/// A batch travelling through the queue, stamped at admission so the
-/// executor that pops it can account queue wait separately from
+/// A fresh batch travelling through the queue, stamped at admission so
+/// the executor that pops it can account queue wait separately from
 /// execution time ([`super::Metrics::queue_wait`]).
 pub struct QueuedBatch {
     /// The flushed batch (homogeneous in [`super::BatchKey`] by
-    /// construction — the batcher never mixes keys).
+    /// construction — the batcher never mixes keys, so the whole batch
+    /// shares one [`PriorityClass`]).
     pub batch: Vec<InFlight>,
     /// When [`WorkQueue::push`] admitted the batch.
     pub enqueued: Instant,
-    /// The lane the batch was admitted on.
+    /// The calibration lane the batch was admitted on.
     pub lane: Lane,
 }
 
-struct State {
+impl QueuedBatch {
+    /// The batch's priority class (from its first member; homogeneous
+    /// by construction).
+    pub fn class(&self) -> PriorityClass {
+        self.batch
+            .first()
+            .map(|it| it.request.priority)
+            .unwrap_or_default()
+    }
+}
+
+/// An in-flight generation an executor preempted at a solver-step
+/// boundary: the full [`SessionState`] snapshot plus the requests it
+/// serves, their latent rows, and the timing state needed to account
+/// the eventual response correctly. Holds **no** admission slot while
+/// parked.
+pub struct ParkedSession {
+    /// The surviving batch members as `(latent row, request)` — the row
+    /// indexes the session's padded latent, so cancelling one member
+    /// never shifts its siblings' samples.
+    pub members: Vec<(usize, InFlight)>,
+    /// The step-boundary snapshot to resume from.
+    pub state: SessionState,
+    /// The padded batch size the session executes at (the `batch_size`
+    /// reported on each member's [`super::Response`]).
+    pub target: usize,
+    /// Priority class of the parked work (its members' class).
+    pub class: PriorityClass,
+    /// Model execution seconds accumulated over earlier segments.
+    pub exec_seconds: f64,
+    /// When the batch *first* started executing (per-member
+    /// `queue_seconds` keeps meaning submit → first execution start).
+    pub first_exec: Instant,
+    /// When the session was parked ([`super::Metrics::resume_latency`]
+    /// measures park → next pop).
+    pub parked_at: Instant,
+}
+
+/// One unit of executor work: a fresh batch to start, or a parked
+/// session to resume.
+pub enum WorkItem {
+    /// A fresh batch from the batcher.
+    Fresh(QueuedBatch),
+    /// A preempted session to resume.
+    Parked(ParkedSession),
+}
+
+#[derive(Default)]
+struct ClassLanes {
     prio: VecDeque<QueuedBatch>,
     normal: VecDeque<QueuedBatch>,
-    /// Invariant: always equals the sum of `batch.len()` over both lanes.
+}
+
+impl ClassLanes {
+    fn pop(&mut self) -> Option<QueuedBatch> {
+        self.prio.pop_front().or_else(|| self.normal.pop_front())
+    }
+
+    fn is_empty(&self) -> bool {
+        self.prio.is_empty() && self.normal.is_empty()
+    }
+}
+
+struct State {
+    interactive: ClassLanes,
+    batch: ClassLanes,
+    parked: VecDeque<ParkedSession>,
+    /// Invariant: always equals the sum of `batch.len()` over the fresh
+    /// lanes of both classes (parked members are never counted).
     queued_requests: usize,
+    /// Consecutive interactive serves while lower-class work waited
+    /// (the aging rule's counter; reset whenever lower-class work is
+    /// served or none is waiting).
+    high_serves: usize,
     open: bool,
 }
 
-/// Bounded two-lane MPMC work queue (`Mutex` + `Condvar`; no external
-/// crates offline). Producers ([`WorkQueue::push`]) never block —
-/// admission either succeeds or fails immediately. Consumers
-/// ([`WorkQueue::pop`]) block until a batch is available or the queue
-/// is closed and drained.
+/// Bounded class-aware MPMC work queue (`Mutex` + `Condvar`; no
+/// external crates offline). Producers ([`WorkQueue::push`],
+/// [`WorkQueue::push_parked`]) never block — fresh admission either
+/// succeeds or fails immediately, parked re-entry always succeeds.
+/// Consumers ([`WorkQueue::pop`]) block until work is available or the
+/// queue is closed and drained.
 pub struct WorkQueue {
     depth: usize,
+    aging_limit: usize,
     state: Mutex<State>,
     cv: Condvar,
 }
@@ -92,40 +192,73 @@ fn lock(m: &Mutex<State>) -> std::sync::MutexGuard<'_, State> {
 }
 
 impl WorkQueue {
-    /// Create a queue admitting at most `depth` queued requests
-    /// (`depth` is clamped to ≥ 1).
+    /// Create a queue admitting at most `depth` queued fresh requests
+    /// (`depth` is clamped to ≥ 1) with the default aging limit of 4.
     pub fn new(depth: usize) -> WorkQueue {
+        WorkQueue::with_aging(depth, 4)
+    }
+
+    /// Like [`WorkQueue::new`] with an explicit aging limit: the number
+    /// of consecutive interactive serves (while lower-class work waits)
+    /// after which the oldest lower-class item is served next. Clamped
+    /// to ≥ 1.
+    pub fn with_aging(depth: usize, aging_limit: usize) -> WorkQueue {
         WorkQueue {
             depth: depth.max(1),
+            aging_limit: aging_limit.max(1),
             state: Mutex::new(State {
-                prio: VecDeque::new(),
-                normal: VecDeque::new(),
+                interactive: ClassLanes::default(),
+                batch: ClassLanes::default(),
+                parked: VecDeque::new(),
                 queued_requests: 0,
+                high_serves: 0,
                 open: true,
             }),
             cv: Condvar::new(),
         }
     }
 
-    /// The configured admission bound, in requests.
+    /// The configured admission bound, in fresh requests.
     pub fn depth(&self) -> usize {
         self.depth
     }
 
-    /// Requests currently waiting (summed over queued batches in both
-    /// lanes; excludes batches already popped by an executor).
+    /// The configured anti-starvation aging limit.
+    pub fn aging_limit(&self) -> usize {
+        self.aging_limit
+    }
+
+    /// Fresh requests currently waiting (summed over queued batches of
+    /// both classes; excludes parked sessions and batches already
+    /// popped by an executor).
     pub fn len(&self) -> usize {
         lock(&self.state).queued_requests
     }
 
-    /// `true` when no batch is waiting.
+    /// `true` when no fresh batch is waiting.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Admit a batch on `lane`, or hand it back when the queue is full
-    /// (or closed) so the caller can reject each request with an error.
-    /// Never blocks.
+    /// Parked sessions currently waiting to resume.
+    pub fn parked_len(&self) -> usize {
+        lock(&self.state).parked.len()
+    }
+
+    /// Whether an executor running work of `class` should preempt it at
+    /// the next solver-step boundary: `true` iff fresh work of a
+    /// strictly higher class is waiting. Never blocks; interactive work
+    /// is never preempted.
+    pub fn should_preempt(&self, class: PriorityClass) -> bool {
+        match class {
+            PriorityClass::Interactive => false,
+            PriorityClass::Batch => !lock(&self.state).interactive.is_empty(),
+        }
+    }
+
+    /// Admit a fresh batch on `lane` (its class comes from the
+    /// requests), or hand it back when the queue is full (or closed) so
+    /// the caller can reject each request with an error. Never blocks.
     pub fn push(&self, batch: Vec<InFlight>, lane: Lane) -> Result<(), Vec<InFlight>> {
         let mut st = lock(&self.state);
         if !st.open {
@@ -139,29 +272,66 @@ impl WorkQueue {
         }
         st.queued_requests += n;
         let q = QueuedBatch { batch, enqueued: Instant::now(), lane };
+        let lanes = match q.class() {
+            PriorityClass::Interactive => &mut st.interactive,
+            PriorityClass::Batch => &mut st.batch,
+        };
         match lane {
-            Lane::Priority => st.prio.push_back(q),
-            Lane::Normal => st.normal.push_back(q),
+            Lane::Priority => lanes.prio.push_back(q),
+            Lane::Normal => lanes.normal.push_back(q),
         }
         drop(st);
         self.cv.notify_one();
         Ok(())
     }
 
-    /// Pull the next batch: priority lane first, FIFO within a lane.
+    /// Re-enter a preempted session. Always succeeds — even after
+    /// [`WorkQueue::close`], since a parked session that cannot re-enter
+    /// would lose already-admitted, partially-executed work — and never
+    /// consumes an admission slot.
+    pub fn push_parked(&self, session: ParkedSession) {
+        let mut st = lock(&self.state);
+        st.parked.push_back(session);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Pull the next work item per the pick order in the module docs.
     /// Blocks while the queue is open and empty; returns `None` once
-    /// the queue is closed **and** fully drained (the executor's signal
-    /// to exit).
-    pub fn pop(&self) -> Option<QueuedBatch> {
+    /// the queue is closed **and** fully drained — fresh lanes and
+    /// parked sessions both — which is the executor's signal to exit.
+    pub fn pop(&self) -> Option<WorkItem> {
         let mut st = lock(&self.state);
         loop {
-            let next = match st.prio.pop_front() {
-                Some(q) => Some(q),
-                None => st.normal.pop_front(),
-            };
-            if let Some(q) = next {
+            let low_waiting = !st.batch.is_empty() || !st.parked.is_empty();
+            // 1. aging override: lower-class work has waited through
+            // `aging_limit` consecutive interactive serves
+            if low_waiting && st.high_serves >= self.aging_limit {
+                st.high_serves = 0;
+                if let Some(ps) = st.parked.pop_front() {
+                    return Some(WorkItem::Parked(ps));
+                }
+                if let Some(q) = st.batch.pop() {
+                    st.queued_requests -= q.batch.len();
+                    return Some(WorkItem::Fresh(q));
+                }
+            }
+            // 2. interactive fresh work
+            if let Some(q) = st.interactive.pop() {
+                st.high_serves = if low_waiting { st.high_serves + 1 } else { 0 };
                 st.queued_requests -= q.batch.len();
-                return Some(q);
+                return Some(WorkItem::Fresh(q));
+            }
+            // 3. parked resumes before new batch-class admissions
+            if let Some(ps) = st.parked.pop_front() {
+                st.high_serves = 0;
+                return Some(WorkItem::Parked(ps));
+            }
+            // 4. batch-class fresh work
+            if let Some(q) = st.batch.pop() {
+                st.high_serves = 0;
+                st.queued_requests -= q.batch.len();
+                return Some(WorkItem::Fresh(q));
             }
             if !st.open {
                 return None;
@@ -173,21 +343,25 @@ impl WorkQueue {
         }
     }
 
-    /// Stop admissions and wake every blocked consumer. Batches already
-    /// queued remain poppable (graceful drain); once they are gone,
-    /// [`WorkQueue::pop`] returns `None`. Idempotent.
+    /// Stop fresh admissions and wake every blocked consumer. Work
+    /// already queued — fresh batches and parked sessions — remains
+    /// poppable (graceful drain); once it is gone, [`WorkQueue::pop`]
+    /// returns `None`. Idempotent.
     pub fn close(&self) {
         lock(&self.state).open = false;
         self.cv.notify_all();
     }
 
     /// Pull every queued request matching `pred` out of the queue —
-    /// their admission slots free immediately and they never reach a
-    /// replica — returning them so the caller can answer each one
-    /// (cancellation purge, [`super::Coordinator::cancel`]). Batches
-    /// left empty are dropped; FIFO order of the rest is untouched.
+    /// fresh batches *and* parked sessions — returning them so the
+    /// caller can answer each one (cancellation purge,
+    /// [`super::Coordinator::cancel`]). Fresh admission slots free
+    /// immediately; a parked session whose members all match is dropped
+    /// entirely and **never resumes** (its partial work is discarded).
+    /// Batches / sessions left empty are dropped; FIFO order of the
+    /// rest is untouched.
     pub fn remove_where(&self, pred: impl Fn(&InFlight) -> bool) -> Vec<InFlight> {
-        fn take(
+        fn take_lane(
             lane: &mut VecDeque<QueuedBatch>,
             pred: &impl Fn(&InFlight) -> bool,
             removed: &mut Vec<InFlight>,
@@ -206,9 +380,24 @@ impl WorkQueue {
         }
         let mut removed = Vec::new();
         let mut st = lock(&self.state);
-        take(&mut st.prio, &pred, &mut removed);
-        take(&mut st.normal, &pred, &mut removed);
+        take_lane(&mut st.interactive.prio, &pred, &mut removed);
+        take_lane(&mut st.interactive.normal, &pred, &mut removed);
+        take_lane(&mut st.batch.prio, &pred, &mut removed);
+        take_lane(&mut st.batch.normal, &pred, &mut removed);
         st.queued_requests -= removed.len();
+        // parked members hold no admission slot, so the counter is not
+        // touched; an emptied session is dropped and never resumes
+        for ps in st.parked.iter_mut() {
+            let mut i = 0;
+            while i < ps.members.len() {
+                if pred(&ps.members[i].1) {
+                    removed.push(ps.members.remove(i).1);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        st.parked.retain(|ps| !ps.members.is_empty());
         removed
     }
 }
@@ -216,37 +405,92 @@ impl WorkQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::plan::PlanRef;
     use crate::coordinator::request::{Policy, Request};
-    use crate::model::Cond;
+    use crate::model::{Cond, Engine};
+    use crate::pipeline::{GenConfig, GenSession};
     use crate::solvers::SolverKind;
     use std::sync::mpsc::channel;
     use std::sync::Arc;
 
+    fn mk_item(id: u64, class: PriorityClass) -> InFlight {
+        let (tx, rx) = channel();
+        std::mem::forget(rx); // keep the reply channel alive
+        InFlight::new(
+            Request {
+                id,
+                family: "image".into(),
+                cond: Cond::Label(vec![1]),
+                solver: SolverKind::Ddim,
+                steps: 4,
+                cfg_scale: 1.0,
+                seed: id,
+                policy: Policy::no_cache(),
+                compute: Default::default(),
+                priority: class,
+            },
+            tx,
+        )
+    }
+
     fn mk_batch(ids: &[u64]) -> Vec<InFlight> {
-        ids.iter()
-            .map(|&id| {
-                let (tx, rx) = channel();
-                std::mem::forget(rx); // keep the reply channel alive
-                InFlight::new(
-                    Request {
-                        id,
-                        family: "image".into(),
-                        cond: Cond::Label(vec![1]),
-                        solver: SolverKind::Ddim,
-                        steps: 4,
-                        cfg_scale: 1.0,
-                        seed: id,
-                        policy: Policy::no_cache(),
-                        compute: Default::default(),
-                    },
-                    tx,
-                )
+        ids.iter().map(|&id| mk_item(id, PriorityClass::Interactive)).collect()
+    }
+
+    fn mk_low_batch(ids: &[u64]) -> Vec<InFlight> {
+        ids.iter().map(|&id| mk_item(id, PriorityClass::Batch)).collect()
+    }
+
+    fn mk_parked(ids: &[u64]) -> ParkedSession {
+        // a real (tiny) session snapshot so ParkedSession is honest
+        let mut engine = Engine::open(crate::artifacts_dir()).expect("engine");
+        engine.load_family("image").expect("family");
+        let policy = Policy::no_cache();
+        let plan = policy
+            .planner()
+            .plan(&crate::cache::plan::PlanCtx {
+                family: engine.family_manifest("image").unwrap(),
+                solver: SolverKind::Ddim,
+                steps: 2,
+                curves: None,
             })
-            .collect()
+            .unwrap();
+        let cfg = GenConfig::new("image", SolverKind::Ddim, 2).with_seed(1);
+        let cond = Cond::Label(vec![0; ids.len().max(1)]);
+        let mut s = GenSession::new(&engine, &cfg, &cond, PlanRef::Plan(&plan)).unwrap();
+        s.step().unwrap();
+        let state = s.snapshot();
+        ParkedSession {
+            members: ids
+                .iter()
+                .enumerate()
+                .map(|(row, &id)| (row, mk_item(id, PriorityClass::Batch)))
+                .collect(),
+            target: ids.len().max(1),
+            class: PriorityClass::Batch,
+            state,
+            exec_seconds: 0.0,
+            first_exec: Instant::now(),
+            parked_at: Instant::now(),
+        }
     }
 
     fn ids(q: &QueuedBatch) -> Vec<u64> {
         q.batch.iter().map(|it| it.request.id).collect()
+    }
+
+    fn pop_fresh(q: &WorkQueue) -> QueuedBatch {
+        match q.pop().expect("work") {
+            WorkItem::Fresh(b) => b,
+            WorkItem::Parked(_) => panic!("expected a fresh batch"),
+        }
+    }
+
+    fn pop_parked(q: &WorkQueue) -> ParkedSession {
+        match q.pop().expect("work") {
+            WorkItem::Parked(p) => p,
+            WorkItem::Fresh(b) => panic!("expected a parked session, got fresh {:?}", ids(&b)),
+        }
     }
 
     #[test]
@@ -256,10 +500,24 @@ mod tests {
         q.push(mk_batch(&[2]), Lane::Normal).unwrap();
         q.push(mk_batch(&[3]), Lane::Priority).unwrap();
         q.push(mk_batch(&[4]), Lane::Priority).unwrap();
-        assert_eq!(ids(&q.pop().unwrap()), vec![3]);
-        assert_eq!(ids(&q.pop().unwrap()), vec![4]);
-        assert_eq!(ids(&q.pop().unwrap()), vec![1]);
-        assert_eq!(ids(&q.pop().unwrap()), vec![2]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![3]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![4]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![1]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interactive_class_overtakes_batch_class_across_lanes() {
+        let q = WorkQueue::new(64);
+        // batch-class work first, even on its priority lane…
+        q.push(mk_low_batch(&[1]), Lane::Priority).unwrap();
+        q.push(mk_low_batch(&[2]), Lane::Normal).unwrap();
+        // …is overtaken by interactive work, even on its normal lane
+        q.push(mk_batch(&[3]), Lane::Normal).unwrap();
+        assert_eq!(ids(&pop_fresh(&q)), vec![3]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![1]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![2]);
         assert!(q.is_empty());
     }
 
@@ -283,21 +541,116 @@ mod tests {
         q.push(mk_batch(&[1, 2, 3]), Lane::Priority).unwrap();
         // but a second batch is over the bound until the first drains
         assert!(q.push(mk_batch(&[4]), Lane::Priority).is_err());
-        assert_eq!(ids(&q.pop().unwrap()), vec![1, 2, 3]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![1, 2, 3]);
         assert!(q.is_empty());
     }
 
     #[test]
-    fn close_drains_then_signals_exit() {
+    fn parked_sessions_hold_no_admission_slots() {
+        let q = WorkQueue::new(2);
+        q.push(mk_batch(&[1, 2]), Lane::Priority).unwrap(); // queue full
+        // a parked session re-enters anyway and does not count
+        q.push_parked(mk_parked(&[10, 11]));
+        assert_eq!(q.len(), 2, "parked members must not consume fresh slots");
+        assert_eq!(q.parked_len(), 1);
+        // fresh admission is still governed only by fresh requests
+        assert!(q.push(mk_batch(&[3]), Lane::Priority).is_err());
+        q.pop().unwrap(); // drains the fresh batch
+        q.push(mk_batch(&[3]), Lane::Priority).unwrap();
+    }
+
+    #[test]
+    fn parked_resumes_before_fresh_batch_class_but_after_interactive() {
+        let q = WorkQueue::new(64);
+        q.push(mk_low_batch(&[1]), Lane::Priority).unwrap();
+        q.push_parked(mk_parked(&[10]));
+        q.push(mk_batch(&[2]), Lane::Priority).unwrap();
+        // interactive first, then the parked resume, then fresh batch-class
+        assert_eq!(ids(&pop_fresh(&q)), vec![2]);
+        let ps = pop_parked(&q);
+        assert_eq!(ps.members[0].1.request.id, 10);
+        assert_eq!(ids(&pop_fresh(&q)), vec![1]);
+    }
+
+    #[test]
+    fn aging_limit_bounds_starvation_under_interactive_flood() {
+        let limit = 3;
+        let q = WorkQueue::with_aging(64, limit);
+        assert_eq!(q.aging_limit(), limit);
+        q.push_parked(mk_parked(&[99]));
+        // a sustained interactive flood: always more interactive work
+        // waiting than pops taken
+        for id in 0..10 {
+            q.push(mk_batch(&[id]), Lane::Priority).unwrap();
+        }
+        // exactly `limit` interactive serves, then the parked session
+        let mut interactive_serves = 0;
+        loop {
+            match q.pop().expect("work") {
+                WorkItem::Fresh(b) => {
+                    assert_eq!(b.class(), PriorityClass::Interactive);
+                    interactive_serves += 1;
+                    assert!(
+                        interactive_serves <= limit,
+                        "parked session starved past the aging limit"
+                    );
+                }
+                WorkItem::Parked(ps) => {
+                    assert_eq!(ps.members[0].1.request.id, 99);
+                    break;
+                }
+            }
+        }
+        assert_eq!(interactive_serves, limit);
+    }
+
+    #[test]
+    fn aging_also_rescues_fresh_batch_class_work() {
+        let limit = 2;
+        let q = WorkQueue::with_aging(64, limit);
+        q.push(mk_low_batch(&[50]), Lane::Priority).unwrap();
+        for id in 0..6 {
+            q.push(mk_batch(&[id]), Lane::Priority).unwrap();
+        }
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            order.push(ids(&pop_fresh(&q))[0]);
+        }
+        // two interactive serves, then the aged batch-class item
+        assert_eq!(order, vec![0, 1, 50, 2]);
+    }
+
+    #[test]
+    fn should_preempt_only_for_batch_class_with_interactive_waiting() {
+        let q = WorkQueue::new(64);
+        assert!(!q.should_preempt(PriorityClass::Batch), "empty queue");
+        assert!(!q.should_preempt(PriorityClass::Interactive));
+        q.push(mk_low_batch(&[1]), Lane::Priority).unwrap();
+        assert!(
+            !q.should_preempt(PriorityClass::Batch),
+            "waiting batch-class work must not preempt batch-class work"
+        );
+        q.push(mk_batch(&[2]), Lane::Normal).unwrap();
+        assert!(q.should_preempt(PriorityClass::Batch));
+        assert!(
+            !q.should_preempt(PriorityClass::Interactive),
+            "interactive work is never preempted"
+        );
+    }
+
+    #[test]
+    fn close_drains_fresh_and_parked_then_signals_exit() {
         let q = WorkQueue::new(8);
         q.push(mk_batch(&[1]), Lane::Normal).unwrap();
-        q.push(mk_batch(&[2]), Lane::Priority).unwrap();
+        q.push_parked(mk_parked(&[10]));
         q.close();
-        // pushes after close are rejected…
+        // fresh pushes after close are rejected…
         assert!(q.push(mk_batch(&[3]), Lane::Priority).is_err());
-        // …but queued work still drains, priority first
-        assert_eq!(ids(&q.pop().unwrap()), vec![2]);
-        assert_eq!(ids(&q.pop().unwrap()), vec![1]);
+        // …but a parked session still re-enters (its work must drain)
+        q.push_parked(mk_parked(&[11]));
+        assert_eq!(ids(&pop_fresh(&q)), vec![1]);
+        assert_eq!(pop_parked(&q).members[0].1.request.id, 10);
+        assert_eq!(pop_parked(&q).members[0].1.request.id, 11);
         assert!(q.pop().is_none());
         assert!(q.pop().is_none()); // idempotent
     }
@@ -324,10 +677,36 @@ mod tests {
 
         // the emptied normal batch is gone; the surviving priority
         // request still pops first, then the new batch
-        assert_eq!(ids(&q.pop().unwrap()), vec![1]);
-        assert_eq!(ids(&q.pop().unwrap()), vec![4, 5]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![1]);
+        assert_eq!(ids(&pop_fresh(&q)), vec![4, 5]);
         assert!(q.is_empty());
         assert!(q.remove_where(|_| true).is_empty());
+    }
+
+    #[test]
+    fn remove_where_purges_parked_members_and_drops_empty_sessions() {
+        let q = WorkQueue::new(8);
+        q.push_parked(mk_parked(&[10, 11]));
+        q.push_parked(mk_parked(&[12]));
+        assert_eq!(q.parked_len(), 2);
+
+        // cancel one member of the first session: the session survives,
+        // its sibling keeps its latent row
+        let removed = q.remove_where(|it| it.request.id == 10);
+        assert_eq!(removed.len(), 1);
+        assert_eq!(q.parked_len(), 2);
+
+        // cancel the second session entirely: it is dropped and will
+        // never resume
+        let removed = q.remove_where(|it| it.request.id == 12);
+        assert_eq!(removed.len(), 1);
+        assert_eq!(q.parked_len(), 1);
+
+        let ps = pop_parked(&q);
+        assert_eq!(ps.members.len(), 1);
+        let (row, it) = &ps.members[0];
+        assert_eq!(*row, 1, "surviving member keeps its original latent row");
+        assert_eq!(it.request.id, 11);
     }
 
     #[test]
@@ -339,7 +718,7 @@ mod tests {
             q2.push(mk_batch(&[7]), Lane::Normal).unwrap();
         });
         let t0 = Instant::now();
-        let got = q.pop().expect("batch");
+        let got = pop_fresh(&q);
         assert_eq!(ids(&got), vec![7]);
         assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
         assert!(got.enqueued.elapsed() < std::time::Duration::from_secs(5));

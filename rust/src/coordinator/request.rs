@@ -108,6 +108,47 @@ impl std::fmt::Debug for Policy {
     }
 }
 
+/// Scheduling priority class a request runs under (the preemptive
+/// scheduler's tenant axis; docs/adr/007).
+///
+/// `Interactive` (the default) is served first and can *preempt*
+/// running `Batch` work at a solver-step boundary: the executor parks
+/// the in-flight [`crate::pipeline::GenSession`] back into the work
+/// queue and runs the interactive batch immediately. `Batch` is for
+/// throughput jobs whose latency does not matter — they fill idle
+/// capacity and resume after being preempted with results bitwise
+/// identical to an uninterrupted run (pinned by
+/// `tests/coordinator_props.rs`). Part of the [`BatchKey`], so the two
+/// classes never share a batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PriorityClass {
+    /// Latency-sensitive traffic: served first, never preempted.
+    #[default]
+    Interactive,
+    /// Throughput traffic: preemptible at solver-step boundaries,
+    /// protected from starvation by the queue's aging rule.
+    Batch,
+}
+
+impl PriorityClass {
+    /// Parse the wire spelling (`interactive` | `batch`).
+    pub fn parse(s: &str) -> Option<PriorityClass> {
+        match s {
+            "interactive" => Some(PriorityClass::Interactive),
+            "batch" => Some(PriorityClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Canonical wire spelling ([`PriorityClass::parse`] round-trips it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PriorityClass::Interactive => "interactive",
+            PriorityClass::Batch => "batch",
+        }
+    }
+}
+
 /// One generation request (single sample; the batcher groups them).
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -131,6 +172,11 @@ pub struct Request {
     /// reduced modes are opt-in — see docs/adr/006). Part of the batch
     /// key: requests at different precisions never share a batch.
     pub compute: ComputeMode,
+    /// Scheduling priority class (`interactive` default). Part of the
+    /// batch key: the preemptive scheduler never mixes classes in one
+    /// batch, so preempting a batch-class group can never stall an
+    /// interactive rider.
+    pub priority: PriorityClass,
 }
 
 impl Request {
@@ -143,6 +189,7 @@ impl Request {
             cfg_milli: (self.cfg_scale * 1000.0).round() as u32,
             policy: self.policy.wire().to_string(),
             compute: self.compute,
+            priority: self.priority,
         }
     }
 }
@@ -162,6 +209,8 @@ pub struct BatchKey {
     pub policy: String,
     /// Weight-matmul precision; mixed-precision batches are never formed.
     pub compute: ComputeMode,
+    /// Scheduling priority class; mixed-class batches are never formed.
+    pub priority: PriorityClass,
 }
 
 /// Completed generation for one request.
@@ -301,6 +350,7 @@ mod tests {
             seed,
             policy: Policy::smooth(0.18),
             compute: ComputeMode::F32,
+            priority: PriorityClass::default(),
         };
         assert_eq!(mk(1, 3).batch_key(), mk(2, 7).batch_key());
         let mut other = mk(3, 1);
@@ -314,5 +364,21 @@ mod tests {
         let mut quant = mk(5, 1);
         quant.compute = ComputeMode::Int8;
         assert_ne!(mk(1, 3).batch_key(), quant.batch_key());
+        // priority class is part of the key: a batch-class request must
+        // not share a batch with an interactive one (preempting the
+        // group would stall its interactive riders)
+        let mut low = mk(6, 1);
+        low.priority = PriorityClass::Batch;
+        assert_ne!(mk(1, 3).batch_key(), low.batch_key());
+    }
+
+    #[test]
+    fn priority_class_wire_roundtrip_and_default() {
+        assert_eq!(PriorityClass::default(), PriorityClass::Interactive);
+        for p in [PriorityClass::Interactive, PriorityClass::Batch] {
+            assert_eq!(PriorityClass::parse(p.name()), Some(p));
+        }
+        assert_eq!(PriorityClass::parse("urgent"), None);
+        assert_eq!(PriorityClass::parse(""), None);
     }
 }

@@ -125,6 +125,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("threads", "0", "GEMM compute threads (0 = auto)")
         .flag("deadline-ms", "0", "latency deadline in ms (0 = none)")
         .flag("deadline-policy", "best-effort", "what to do with late work: best-effort|reject")
+        .flag("priority", "interactive", "scheduling class: interactive|batch (batch yields to interactive work)")
         .bool_flag("stream", "print one progress line per solver step")
         .flag("out", "", "write latent to this path (JSON)");
     let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
@@ -160,6 +161,8 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         seed: args.u64("seed").map_err(Error::msg)?,
         policy: Policy::parse(args.str("policy"))?,
         compute: smoothcache::tensor::ComputeMode::parse(args.str("compute"))?,
+        priority: smoothcache::coordinator::PriorityClass::parse(args.str("priority"))
+            .ok_or_else(|| smoothcache::err!("--priority: interactive or batch"))?,
     };
     let deadline = match args.u64("deadline-ms").map_err(Error::msg)? {
         0 => None,

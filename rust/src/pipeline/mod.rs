@@ -22,7 +22,7 @@
 
 pub mod session;
 
-pub use session::{GenSession, StepEvent};
+pub use session::{GenSession, SessionState, StepEvent};
 
 use crate::util::error::Result;
 

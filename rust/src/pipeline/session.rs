@@ -78,6 +78,66 @@ pub struct GenSession<'a> {
     stats: GenStats,
     i: usize,
     t_start: Instant,
+    /// wall-clock seconds accumulated by earlier segments of a parked /
+    /// resumed session (0 for a session that never parked).
+    wall_accum: f64,
+}
+
+/// An owned, engine-independent snapshot of a [`GenSession`] taken at a
+/// solver-step boundary ([`GenSession::snapshot`]) — the park/resume
+/// seam of the preemptive scheduler (docs/adr/007).
+///
+/// It captures *everything* the trajectory depends on: the interim
+/// latent, every per-site cached delta with its fill step, the dynamic
+/// planner's drift feedback, the solver's multistep history, and the
+/// stochastic-solver RNG state. Because engine weights are a
+/// deterministic function of the artifacts, resuming on **any** replica
+/// ([`GenSession::resume`]) continues the trajectory bitwise-identically
+/// to an uninterrupted run — pinned at every step boundary for every
+/// registry policy by `tests/session_parity.rs`.
+#[derive(Clone)]
+pub struct SessionState {
+    cfg: GenConfig,
+    dynamic: bool,
+    run: SolverRun,
+    rng: Rng,
+    x: Tensor,
+    cond_eff: Cond,
+    batch: usize,
+    batch_eff: usize,
+    cache: Vec<Option<Tensor>>,
+    filled_at: Vec<Option<usize>>,
+    last_drift: Vec<Option<f64>>,
+    stats: GenStats,
+    i: usize,
+    wall_seconds: f64,
+}
+
+impl SessionState {
+    /// Steps already executed (the index the next step would run).
+    pub fn step(&self) -> usize {
+        self.i
+    }
+
+    /// Total solver steps in the trajectory.
+    pub fn total_steps(&self) -> usize {
+        self.cfg.steps
+    }
+
+    /// True when the snapshot was taken after the final step.
+    pub fn is_done(&self) -> bool {
+        self.i >= self.cfg.steps
+    }
+
+    /// The (padded) batch size the session executes at.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The generation configuration the session was opened with.
+    pub fn config(&self) -> &GenConfig {
+        &self.cfg
+    }
 }
 
 impl<'a> GenSession<'a> {
@@ -161,6 +221,91 @@ impl<'a> GenSession<'a> {
             stats: GenStats::default(),
             i: 0,
             t_start,
+            wall_accum: 0.0,
+        })
+    }
+
+    /// Snapshot the session at the current step boundary into an owned
+    /// [`SessionState`]. The session itself is untouched — the caller
+    /// that parks a session simply drops it after snapshotting.
+    pub fn snapshot(&self) -> SessionState {
+        SessionState {
+            cfg: self.cfg.clone(),
+            dynamic: self.dynamic,
+            run: self.run.clone(),
+            rng: self.rng.clone(),
+            x: self.x.clone(),
+            cond_eff: self.cond_eff.clone(),
+            batch: self.batch,
+            batch_eff: self.batch_eff,
+            cache: self.cache.clone(),
+            filled_at: self.filled_at.clone(),
+            last_drift: self.last_drift.clone(),
+            stats: self.stats.clone(),
+            i: self.i,
+            wall_seconds: self.wall_accum + self.t_start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Reopen a parked session from a [`SessionState`] snapshot — on the
+    /// same engine or any other replica of it. The caller re-resolves
+    /// `plan` for the snapshot's policy (plan resolution is
+    /// deterministic, so the resumed trajectory is bitwise identical to
+    /// an uninterrupted one); a plan of the wrong kind, family geometry
+    /// or step count fails loudly here instead of silently diverging.
+    pub fn resume(
+        engine: &'a Engine,
+        state: SessionState,
+        plan: PlanRef<'a>,
+    ) -> Result<GenSession<'a>> {
+        let t_start = Instant::now();
+        let fm = engine.family_manifest(&state.cfg.family)?.clone();
+        if let PlanRef::Plan(p) = plan {
+            p.validate_for(&fm, state.cfg.steps)?;
+        }
+        let dynamic = matches!(plan, PlanRef::Planner(_));
+        if dynamic != state.dynamic {
+            return Err(crate::err!(
+                "resume plan kind mismatch: session was {} but plan is {}",
+                if state.dynamic { "dynamic" } else { "static" },
+                if dynamic { "dynamic" } else { "static" },
+            ));
+        }
+        let sites = fm.branch_sites();
+        if sites.len() != state.cache.len() {
+            return Err(crate::err!(
+                "resume site mismatch: snapshot has {} sites, family {} has {}",
+                state.cache.len(),
+                state.cfg.family,
+                sites.len()
+            ));
+        }
+        if state.i > state.cfg.steps {
+            return Err(crate::err!(
+                "corrupt snapshot: step {} past the {}-step trajectory",
+                state.i,
+                state.cfg.steps
+            ));
+        }
+        Ok(GenSession {
+            engine,
+            cfg: state.cfg,
+            plan,
+            dynamic,
+            run: state.run,
+            rng: state.rng,
+            x: state.x,
+            cond_eff: state.cond_eff,
+            batch: state.batch,
+            batch_eff: state.batch_eff,
+            sites,
+            cache: state.cache,
+            filled_at: state.filled_at,
+            last_drift: state.last_drift,
+            stats: state.stats,
+            i: state.i,
+            t_start,
+            wall_accum: state.wall_seconds,
         })
     }
 
@@ -304,7 +449,7 @@ impl<'a> GenSession<'a> {
     /// early exit (`stats.steps` records how many steps actually ran).
     pub fn finish(mut self) -> GenOutput {
         self.stats.steps = self.i;
-        self.stats.wall_seconds = self.t_start.elapsed().as_secs_f64();
+        self.stats.wall_seconds = self.wall_accum + self.t_start.elapsed().as_secs_f64();
         GenOutput { latent: self.x, stats: self.stats }
     }
 }

@@ -3,7 +3,9 @@
 //! One JSON object per line in each direction. Request fields:
 //! `family`, `steps`, `solver`, `policy`, `cfg`, `seed`, `compute`
 //! (weight-matmul precision: `f32` default, or `f16` / `bf16` /
-//! `int8`), and either
+//! `int8`), `priority` (`interactive` — the default — or `batch`:
+//! batch-class work is preemptible and yields to interactive traffic
+//! at solver-step boundaries, docs/adr/007), and either
 //! `label` (image) or `prompt_ids` (audio/video); `return_latent`
 //! includes the generated latent in the response; `stream: true`
 //! switches the reply to streaming mode (one `{"event":"step",…}` line
@@ -41,7 +43,8 @@ use std::time::Duration;
 use crate::util::error::{Context, Result};
 
 use crate::coordinator::{
-    Coordinator, Deadline, DeadlinePolicy, Policy, Progress, Request, Response, SubmitOpts,
+    Coordinator, Deadline, DeadlinePolicy, Policy, PriorityClass, Progress, Request, Response,
+    SubmitOpts,
 };
 use crate::model::Cond;
 use crate::solvers::SolverKind;
@@ -124,8 +127,18 @@ pub fn parse_request(j: &Json) -> Result<(Request, WireOpts)> {
         Some(s) => DeadlinePolicy::parse(s)
             .ok_or_else(|| crate::err!("deadline_policy must be best-effort or reject, got {s:?}"))?,
     };
+    let priority = match j.get("priority") {
+        None => PriorityClass::default(),
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| {
+                crate::err!("priority must be a string, got {}", v.to_string())
+            })?;
+            PriorityClass::parse(s)
+                .ok_or_else(|| crate::err!("priority must be interactive or batch, got {s:?}"))?
+        }
+    };
     Ok((
-        Request { id: 0, family, cond, solver, steps, cfg_scale, seed, policy, compute },
+        Request { id: 0, family, cond, solver, steps, cfg_scale, seed, policy, compute, priority },
         WireOpts { return_latent, stream, deadline_ms, deadline_policy },
     ))
 }
@@ -730,6 +743,27 @@ mod tests {
         let j = parse(r#"{"family":"image","label":1,"policy":"drift:0.3"}"#).unwrap();
         let (r, _) = parse_request(&j).unwrap();
         assert_eq!(r.policy.wire(), "drift:0.3");
+    }
+
+    #[test]
+    fn parse_request_priority_field() {
+        // absent → interactive (existing clients are unaffected)
+        let j = parse(r#"{"family":"image","label":1}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap().0.priority, PriorityClass::Interactive);
+        let j = parse(r#"{"family":"image","label":1,"priority":"interactive"}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap().0.priority, PriorityClass::Interactive);
+        let j = parse(r#"{"family":"image","label":1,"priority":"batch"}"#).unwrap();
+        assert_eq!(parse_request(&j).unwrap().0.priority, PriorityClass::Batch);
+        // unknown names and non-string values are wire errors, not
+        // silent interactive fallbacks
+        for bad in [
+            r#"{"family":"image","label":1,"priority":"urgent"}"#,
+            r#"{"family":"image","label":1,"priority":1}"#,
+        ] {
+            let j = parse(bad).unwrap();
+            let err = parse_request(&j).unwrap_err();
+            assert!(format!("{err}").contains("priority"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -70,6 +70,13 @@ impl SolverKind {
 }
 
 /// One sampling trajectory: holds the timestep grid and multistep state.
+///
+/// `Clone` captures the full multistep solver state (x0-prediction
+/// history and aligned lambdas), which is what lets a
+/// [`crate::pipeline::SessionState`] snapshot resume a parked
+/// generation bitwise-identically — including for DPM++ 2M/3M whose
+/// step depends on previous predictions.
+#[derive(Clone)]
 pub struct SolverRun {
     pub kind: SolverKind,
     /// t_0 > t_1 > … > t_{steps} = 0 (length steps+1; step i integrates

@@ -123,6 +123,7 @@ fn compute_knob_rides_the_full_serving_path() {
         seed: 0xC0FFEE,
         policy: Policy::no_cache(),
         compute,
+        priority: Default::default(),
     };
     let cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(1);
     let coord = Coordinator::start(cfg).expect("coordinator");
@@ -151,6 +152,7 @@ fn batch_key_separates_compute_modes() {
         seed: 1,
         policy: Policy::no_cache(),
         compute,
+        priority: Default::default(),
     };
     let keys: Vec<_> = [ComputeMode::F32, ComputeMode::F16, ComputeMode::Bf16, ComputeMode::Int8]
         .into_iter()

@@ -21,14 +21,33 @@
 //!     holds the `smooth:*` calibration lock — and
 //! (h) counters always reconcile: every submission is answered exactly
 //!     once as completed, cancelled, rejected or failed.
+//!
+//! And the ISSUE 8 preemptive-scheduling contracts (docs/adr/007):
+//! (i) a batch-class generation preempted (parked) and resumed any
+//!     number of times finishes **bitwise identical** to the same
+//!     request served uninterrupted — for every registry policy,
+//! (j) the class-aware queue conserves work under random interleavings
+//!     (no request lost or served twice, admission accounting exact)
+//!     and its count-based aging rule bounds how long lower-class work
+//!     can starve — synthetic clock, no sleeps,
+//! (k) a parked session survives a *sustained* interactive flood: it
+//!     advances ≥ 1 step per aging-override resume and completes
+//!     within `steps × (aging_limit + 1)` pops, and
+//! (l) cancelling a *parked* session answers it immediately, drops it
+//!     from the queue (it never resumes), and reconciles counters;
+//!     plus the per-key calibration contract: a warm plan key is never
+//!     blocked by a foreign key's in-flight calibration.
 
 use std::time::{Duration, Instant};
 
+use smoothcache::cache::plan::PlanCtx;
+use smoothcache::cache::PlanRef;
 use smoothcache::coordinator::{
-    Batcher, BatcherConfig, Coordinator, CoordinatorConfig, InFlight, Metrics, Policy, Request,
-    SubmitOpts,
+    Batcher, BatcherConfig, Coordinator, CoordinatorConfig, InFlight, Lane, Metrics, ParkedSession,
+    Policy, PriorityClass, Request, SubmitOpts, WorkItem, WorkQueue,
 };
-use smoothcache::model::{Cond, Manifest};
+use smoothcache::model::{Cond, Engine, Manifest};
+use smoothcache::pipeline::{GenConfig, GenSession};
 use smoothcache::solvers::SolverKind;
 use smoothcache::util::propcheck::{forall, gen};
 use smoothcache::workload::PoissonTrace;
@@ -83,6 +102,7 @@ fn prop_every_request_answered_exactly_once_any_worker_count() {
                     seed: i as u64,
                     policy: Policy::no_cache(),
                     compute: Default::default(),
+                    priority: Default::default(),
                 };
                 rxs.push((family, coord.submit(req)));
             }
@@ -142,6 +162,7 @@ fn image_request(steps: usize, seed: u64, policy: Policy) -> Request {
         seed,
         policy,
         compute: Default::default(),
+        priority: Default::default(),
     }
 }
 
@@ -447,6 +468,590 @@ fn cancel_is_prompt_while_sibling_holds_calibration_lock() {
     coord.shutdown();
 }
 
+// ─────────────────── ISSUE 8: preemptive scheduling ───────────────────
+
+/// Wire spellings covering every registry policy (generous parameters
+/// so smooth / drift actually skip on the untrained model; mirrors
+/// `tests/session_parity.rs`).
+fn registry_wires() -> [&'static str; 7] {
+    [
+        "no-cache",
+        "fora:2",
+        "alternate",
+        "smooth:2.0",
+        "smooth-persite:2.0",
+        "delta-dit:2",
+        "drift:1e9",
+    ]
+}
+
+/// (i) Preemption parity, end to end on the live coordinator: for every
+/// registry policy, a batch-class generation that gets preempted
+/// (parked) and resumed under interactive traffic finishes **bitwise
+/// identical** — latent and decision counters — to the same request on
+/// a quiet coordinator, and every request is still answered exactly
+/// once. (Cross-replica resume parity is pinned structurally by
+/// `tests/session_parity.rs`, which resumes every snapshot on a fresh
+/// engine instance.)
+#[test]
+fn preempted_batch_class_run_is_bitwise_identical_to_uninterrupted_run() {
+    let steps = 32usize;
+    for wire in registry_wires() {
+        let policy = Policy::parse(wire).unwrap();
+        let mut req = image_request(steps, 9, policy.clone());
+        req.priority = PriorityClass::Batch;
+
+        // quiet reference: same request, nothing to contend with
+        let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(1);
+        cfg.max_wait = Duration::from_millis(2);
+        cfg.calib_samples = 2;
+        let quiet = Coordinator::start(cfg).expect("coordinator");
+        let reference = quiet.generate_blocking(req.clone()).expect(wire);
+        quiet.shutdown();
+
+        // contended run: one replica, so the batch-class job and the
+        // interactive probes fight over the same executor
+        let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(1);
+        cfg.max_wait = Duration::from_millis(2);
+        cfg.calib_samples = 2;
+        let coord = Coordinator::start(cfg).expect("coordinator");
+        let (ptx, prx) = std::sync::mpsc::channel();
+        let ticket = coord.submit_opts(
+            req,
+            SubmitOpts { progress: Some(ptx), deadline: None },
+        );
+        // first progress event ⇒ plan resolved (calibration done, for
+        // smooth:*) and the trajectory demonstrably in flight
+        prx.recv_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|_| panic!("{wire}: batch job never started"));
+
+        // interactive probes, one at a time, until the batch job has
+        // demonstrably been parked at a step boundary
+        let mut probe_seed = 1000u64;
+        let mut probes = 0u64;
+        let mut early = None;
+        let t0 = Instant::now();
+        while Metrics::get(&coord.metrics().preemptions) == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(300),
+                "{wire}: batch job was never preempted"
+            );
+            match ticket.reply.try_recv() {
+                Ok(r) => {
+                    early = Some(r);
+                    break;
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                Err(e) => panic!("{wire}: reply channel died: {e:?}"),
+            }
+            let rx = coord.submit(image_request(2, probe_seed, Policy::no_cache()));
+            probe_seed += 1;
+            probes += 1;
+            rx.recv_timeout(Duration::from_secs(120))
+                .expect("interactive probe hung")
+                .expect("interactive probe failed");
+        }
+        let resp = match early {
+            Some(r) => r.unwrap_or_else(|e| panic!("{wire}: batch job failed: {e}")),
+            None => ticket
+                .reply
+                .recv_timeout(Duration::from_secs(300))
+                .unwrap_or_else(|_| panic!("{wire}: batch job hung after preemption"))
+                .unwrap_or_else(|e| panic!("{wire}: batch job failed: {e}")),
+        };
+
+        let m = coord.metrics();
+        assert!(
+            Metrics::get(&m.preemptions) >= 1,
+            "{wire}: a {steps}-step batch-class job finished before a 2-step probe contended"
+        );
+        assert!(
+            Metrics::get(&m.session_resumes) >= 1,
+            "{wire}: a preempted job can only have finished via a resume"
+        );
+        // the sharp pin: parked + resumed ≡ uninterrupted, bitwise
+        assert_eq!(
+            resp.latent.data, reference.latent.data,
+            "{wire}: preempted trajectory diverged from the uninterrupted run"
+        );
+        assert_eq!(resp.gen_stats.branch_computes, reference.gen_stats.branch_computes, "{wire}");
+        assert_eq!(resp.gen_stats.branch_reuses, reference.gen_stats.branch_reuses, "{wire}");
+        assert_eq!(resp.steps_completed, steps, "{wire}");
+        // exactly once, nothing lost: the job + every probe completed
+        assert_eq!(Metrics::get(&m.requests_submitted), probes + 1);
+        assert_eq!(Metrics::get(&m.requests_completed), probes + 1);
+        assert_eq!(Metrics::get(&m.requests_failed), 0);
+        assert_eq!(Metrics::get(&m.requests_cancelled), 0);
+        assert_eq!(Metrics::get(&m.parked_sessions), 0, "{wire}: nothing may stay parked");
+        coord.shutdown();
+        match ticket.reply.try_recv() {
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {}
+            other => panic!("{wire}: batch job answered more than once: {other:?}"),
+        }
+    }
+}
+
+/// Build one real (tiny) [`smoothcache::pipeline::SessionState`] the
+/// queue-level props clone into synthetic parked sessions — the queue
+/// never looks inside it, but carrying a genuine snapshot keeps the
+/// types honest.
+fn tiny_snapshot() -> smoothcache::pipeline::SessionState {
+    let mut engine = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    engine.load_family("image").expect("family");
+    let policy = Policy::no_cache();
+    let plan = policy
+        .planner()
+        .plan(&PlanCtx {
+            family: engine.family_manifest("image").unwrap(),
+            solver: SolverKind::Ddim,
+            steps: 2,
+            curves: None,
+        })
+        .unwrap();
+    let cfg = GenConfig::new("image", SolverKind::Ddim, 2).with_seed(1);
+    let cond = Cond::Label(vec![0]);
+    let mut s = GenSession::new(&engine, &cfg, &cond, PlanRef::Plan(&plan)).unwrap();
+    s.step().unwrap();
+    s.snapshot()
+}
+
+/// An [`InFlight`] whose reply channel is intentionally leaked (the
+/// queue-level props never answer it).
+fn queued_item(id: u64, class: PriorityClass) -> InFlight {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::mem::forget(rx);
+    InFlight::new(
+        Request {
+            id,
+            family: "image".into(),
+            cond: Cond::Label(vec![1]),
+            solver: SolverKind::Ddim,
+            steps: 4,
+            cfg_scale: 1.0,
+            seed: id,
+            policy: Policy::no_cache(),
+            compute: Default::default(),
+            priority: class,
+        },
+        tx,
+    )
+}
+
+fn parked_of(state: &smoothcache::pipeline::SessionState, ids: &[u64]) -> ParkedSession {
+    ParkedSession {
+        members: ids
+            .iter()
+            .enumerate()
+            .map(|(row, &id)| (row, queued_item(id, PriorityClass::Batch)))
+            .collect(),
+        state: state.clone(),
+        target: ids.len().max(1),
+        class: PriorityClass::Batch,
+        exec_seconds: 0.0,
+        first_exec: Instant::now(),
+        parked_at: Instant::now(),
+    }
+}
+
+/// Independent oracle of the queue's documented pick order and
+/// admission rule, mirrored over plain `VecDeque`s of id lists.
+#[derive(Default)]
+struct QueueModel {
+    ip: std::collections::VecDeque<Vec<u64>>,
+    inorm: std::collections::VecDeque<Vec<u64>>,
+    bp: std::collections::VecDeque<Vec<u64>>,
+    bnorm: std::collections::VecDeque<Vec<u64>>,
+    parked: std::collections::VecDeque<Vec<u64>>,
+    queued: usize,
+    high: usize,
+}
+
+impl QueueModel {
+    fn admits(&self, n: usize, depth: usize) -> bool {
+        self.queued == 0 || self.queued + n <= depth
+    }
+
+    fn has_work(&self) -> bool {
+        self.queued > 0 || !self.parked.is_empty()
+    }
+
+    /// Mirror of `WorkQueue::pop` for a non-empty model: returns
+    /// `(was_parked, member ids)`.
+    fn pop(&mut self, aging_limit: usize) -> (bool, Vec<u64>) {
+        let low_waiting =
+            !self.bp.is_empty() || !self.bnorm.is_empty() || !self.parked.is_empty();
+        if low_waiting && self.high >= aging_limit {
+            self.high = 0;
+            if let Some(v) = self.parked.pop_front() {
+                return (true, v);
+            }
+            if let Some(v) = self.bp.pop_front().or_else(|| self.bnorm.pop_front()) {
+                self.queued -= v.len();
+                return (false, v);
+            }
+        }
+        if let Some(v) = self.ip.pop_front().or_else(|| self.inorm.pop_front()) {
+            self.high = if low_waiting { self.high + 1 } else { 0 };
+            self.queued -= v.len();
+            return (false, v);
+        }
+        if let Some(v) = self.parked.pop_front() {
+            self.high = 0;
+            return (true, v);
+        }
+        let v = self
+            .bp
+            .pop_front()
+            .or_else(|| self.bnorm.pop_front())
+            .expect("model_pop called on an empty model");
+        self.high = 0;
+        self.queued -= v.len();
+        (false, v)
+    }
+}
+
+fn fresh_ids(q: &smoothcache::coordinator::QueuedBatch) -> Vec<u64> {
+    q.batch.iter().map(|it| it.request.id).collect()
+}
+
+fn parked_ids(ps: &ParkedSession) -> Vec<u64> {
+    ps.members.iter().map(|(_, it)| it.request.id).collect()
+}
+
+/// (j) Synthetic-clock queue property (no sleeps, no executors): under
+/// random interleavings of class/lane pushes, parked re-entries and
+/// pops, the real queue agrees with the independent pick-order oracle
+/// on every single decision — admission verdicts, serve order, aging
+/// overrides — and conserves work exactly: every admitted id comes back
+/// exactly once, fresh-slot accounting matches at every step, and a
+/// close() drain surfaces everything that was still queued.
+#[test]
+fn prop_queue_matches_pick_order_oracle_under_random_interleavings() {
+    let state = tiny_snapshot();
+    forall(
+        0xA61A68,
+        60,
+        |r| {
+            (
+                gen::usize_in(r, 1, 6),  // aging limit 1..=5
+                gen::usize_in(r, 2, 10), // admission depth 2..=9
+                gen::vec_of(r, 1, 40, |r| (r.below(4), r.below(4))),
+            )
+        },
+        |case: &(usize, usize, Vec<(usize, usize)>)| {
+            let (aging_limit, depth, ops) = case;
+            let q = WorkQueue::with_aging(*depth, *aging_limit);
+            let mut model = QueueModel::default();
+            let mut next_id = 1u64;
+            let mut mk_ids = |n: usize| -> Vec<u64> {
+                let ids: Vec<u64> = (next_id..next_id + n as u64).collect();
+                next_id += n as u64;
+                ids
+            };
+            let check_pop = |model: &mut QueueModel| -> Result<(), String> {
+                let (want_parked, want_ids) = model.pop(*aging_limit);
+                match q.pop().ok_or("queue empty while model has work")? {
+                    WorkItem::Fresh(b) => {
+                        if want_parked {
+                            return Err(format!(
+                                "oracle expected parked {want_ids:?}, queue served fresh {:?}",
+                                fresh_ids(&b)
+                            ));
+                        }
+                        if fresh_ids(&b) != want_ids {
+                            return Err(format!(
+                                "serve order diverged: oracle {want_ids:?}, queue {:?}",
+                                fresh_ids(&b)
+                            ));
+                        }
+                    }
+                    WorkItem::Parked(ps) => {
+                        if !want_parked {
+                            return Err(format!(
+                                "oracle expected fresh {want_ids:?}, queue resumed {:?}",
+                                parked_ids(&ps)
+                            ));
+                        }
+                        if parked_ids(&ps) != want_ids {
+                            return Err(format!(
+                                "resume order diverged: oracle {want_ids:?}, queue {:?}",
+                                parked_ids(&ps)
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            };
+            for &(kind, arg) in ops {
+                match kind {
+                    // fresh push: class from kind, lane + size from arg
+                    0 | 1 => {
+                        let class = if kind == 0 {
+                            PriorityClass::Interactive
+                        } else {
+                            PriorityClass::Batch
+                        };
+                        let lane = if arg % 2 == 0 { Lane::Priority } else { Lane::Normal };
+                        let n = 1 + arg / 2; // 1..=2 requests
+                        let ids = mk_ids(n);
+                        let batch: Vec<InFlight> =
+                            ids.iter().map(|&id| queued_item(id, class)).collect();
+                        let admitted = q.push(batch, lane).is_ok();
+                        if admitted != model.admits(n, *depth) {
+                            return Err(format!(
+                                "admission diverged for {ids:?}: queue {admitted}, oracle {}",
+                                model.admits(n, *depth)
+                            ));
+                        }
+                        if admitted {
+                            model.queued += n;
+                            let target = match (class, lane) {
+                                (PriorityClass::Interactive, Lane::Priority) => &mut model.ip,
+                                (PriorityClass::Interactive, Lane::Normal) => &mut model.inorm,
+                                (PriorityClass::Batch, Lane::Priority) => &mut model.bp,
+                                (PriorityClass::Batch, Lane::Normal) => &mut model.bnorm,
+                            };
+                            target.push_back(ids);
+                        }
+                    }
+                    // parked re-entry: never admission-checked
+                    2 => {
+                        let ids = mk_ids(1 + arg % 2);
+                        q.push_parked(parked_of(&state, &ids));
+                        model.parked.push_back(ids);
+                    }
+                    // pop (skipped while empty — pop would block)
+                    _ => {
+                        if model.has_work() {
+                            check_pop(&mut model)?;
+                        }
+                    }
+                }
+                if q.len() != model.queued {
+                    return Err(format!(
+                        "fresh-slot accounting diverged: queue {} vs oracle {}",
+                        q.len(),
+                        model.queued
+                    ));
+                }
+                if q.parked_len() != model.parked.len() {
+                    return Err(format!(
+                        "parked accounting diverged: queue {} vs oracle {}",
+                        q.parked_len(),
+                        model.parked.len()
+                    ));
+                }
+            }
+            // graceful drain: everything still queued comes out, in
+            // oracle order, then the queue signals exit
+            q.close();
+            while model.has_work() {
+                check_pop(&mut model)?;
+            }
+            if q.pop().is_some() {
+                return Err("queue still had work after the oracle drained".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (k) Starvation bound, synthetic clock: under a *sustained*
+/// interactive flood (fresh interactive work is waiting before every
+/// single pop), a parked session is still scheduled once per
+/// `aging_limit + 1` pops — so a job with `n` steps left finishes
+/// within `n × (aging_limit + 1)` pops, because the executor's
+/// preempt-after-step rule guarantees ≥ 1 step of progress per resume.
+#[test]
+fn prop_no_parked_session_starves_under_sustained_interactive_flood() {
+    let state = tiny_snapshot();
+    forall(
+        0x57A12E,
+        30,
+        |r| (gen::usize_in(r, 1, 6), gen::usize_in(r, 1, 21)),
+        |case: &(usize, usize)| {
+            let (aging_limit, steps_left) = *case;
+            let q = WorkQueue::with_aging(1024, aging_limit);
+            q.push_parked(parked_of(&state, &[1]));
+            let mut remaining = steps_left;
+            let mut pops = 0usize;
+            let mut flood_id = 100u64;
+            let bound = steps_left * (aging_limit + 1);
+            while remaining > 0 {
+                // keep the flood sustained: interactive work must be
+                // waiting at every pop, or the bound does not apply
+                while q.len() < 2 {
+                    q.push(vec![queued_item(flood_id, PriorityClass::Interactive)], Lane::Priority)
+                        .map_err(|_| "flood push rejected".to_string())?;
+                    flood_id += 1;
+                }
+                pops += 1;
+                if pops > bound {
+                    return Err(format!(
+                        "parked session starved: {remaining}/{steps_left} steps left \
+                         after {pops} pops (bound {bound}, aging_limit {aging_limit})"
+                    ));
+                }
+                match q.pop().ok_or("queue unexpectedly closed")? {
+                    WorkItem::Fresh(b) => {
+                        if b.class() != PriorityClass::Interactive {
+                            return Err("flood lane served a non-interactive batch".into());
+                        }
+                    }
+                    WorkItem::Parked(ps) => {
+                        // executor contract: ≥ 1 step per scheduling slot
+                        // (the preempt check runs *after* a step)
+                        remaining -= 1;
+                        if remaining > 0 {
+                            q.push_parked(ps);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (l) Cancelling a *parked* session: answered immediately (while the
+/// only executor is busy with interactive work), dropped from the
+/// parked lane on the spot, never resumed afterwards, and the counters
+/// reconcile — nothing lost, nothing double-answered.
+#[test]
+fn cancelling_a_parked_session_answers_it_and_it_never_resumes() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    // aging effectively off: while the flood below is waiting, the
+    // parked session stays parked instead of bouncing
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir())
+        .with_workers(1)
+        .with_aging_limit(1_000_000);
+    cfg.max_wait = Duration::from_millis(2);
+    let coord = std::sync::Arc::new(Coordinator::start(cfg).expect("coordinator"));
+
+    // the victim: a long batch-class job, watched via progress events
+    let (ptx, prx) = std::sync::mpsc::channel();
+    let mut req = image_request(400, 5, Policy::no_cache());
+    req.priority = PriorityClass::Batch;
+    let ticket = coord.submit_opts(req, SubmitOpts { progress: Some(ptx), deadline: None });
+    prx.recv_timeout(Duration::from_secs(120)).expect("batch job never started");
+
+    // interactive flood from a side thread (a small window of
+    // outstanding requests keeps the queue non-empty)
+    let stop = std::sync::Arc::new(AtomicBool::new(false));
+    let flood = {
+        let coord = std::sync::Arc::clone(&coord);
+        let stop = std::sync::Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut outstanding = std::collections::VecDeque::new();
+            let mut seed = 100u64;
+            while !stop.load(Ordering::Relaxed) {
+                while outstanding.len() < 3 {
+                    outstanding.push_back(coord.submit(image_request(2, seed, Policy::no_cache())));
+                    seed += 1;
+                }
+                let rx = outstanding.pop_front().unwrap();
+                let _ = rx.recv_timeout(Duration::from_secs(120));
+            }
+            for rx in outstanding {
+                let _ = rx.recv_timeout(Duration::from_secs(120));
+            }
+        })
+    };
+
+    // wait until the job is demonstrably parked, then cancel it
+    let t0 = Instant::now();
+    while coord.parked_len() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(120), "batch job never parked");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(coord.cancel(ticket.id), "parked job must be cancellable by id");
+    let err = ticket
+        .reply
+        .recv_timeout(Duration::from_secs(60))
+        .expect("cancelled parked session must be answered while the executor is busy")
+        .expect_err("cancelled parked session must not complete");
+    assert!(format!("{err}").starts_with("cancelled:"), "{err}");
+
+    // gone from the parked lane, and it never comes back: further
+    // traffic is served without a single additional resume
+    assert_eq!(coord.parked_len(), 0, "cancelled parked session must be dropped");
+    let m = coord.metrics();
+    assert_eq!(Metrics::get(&m.parked_sessions), 0);
+    let resumes_after = Metrics::get(&m.session_resumes);
+    coord
+        .generate_blocking(image_request(2, 999, Policy::no_cache()))
+        .expect("pool must stay live after a parked cancel");
+    assert_eq!(
+        Metrics::get(&m.session_resumes),
+        resumes_after,
+        "a cancelled parked session must never resume"
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    flood.join().expect("flood thread");
+    // reconcile: exactly one cancel, everything else completed
+    assert_eq!(Metrics::get(&m.requests_cancelled), 1);
+    assert_eq!(Metrics::get(&m.requests_failed), 0);
+    assert_eq!(
+        Metrics::get(&m.requests_completed) + 1,
+        Metrics::get(&m.requests_submitted)
+    );
+    match ticket.reply.try_recv() {
+        Err(std::sync::mpsc::TryRecvError::Empty | std::sync::mpsc::TryRecvError::Disconnected) => {}
+        other => panic!("cancelled job answered twice: {other:?}"),
+    }
+}
+
+/// ADR-002 residual, fixed this PR (per-key calibration slots): a
+/// request for an **already-calibrated** key must never queue behind a
+/// *different* key's in-flight calibration. Under the old store-wide
+/// lock, the warm request below parked on the mutex K2's calibration
+/// held; with per-key `CurveSlot`s it resolves from the plan cache and
+/// completes while K2 is still calibrating. (Name referenced by the
+/// `plan_shared` docs in `src/coordinator/executor.rs`.)
+#[test]
+fn warm_key_resolves_while_foreign_calibration_is_in_flight() {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(2);
+    cfg.max_wait = Duration::from_millis(5);
+    cfg.calib_samples = 8; // K2's calibration is deliberately long
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let m = coord.metrics();
+
+    // warm key K1 = (image, ddim, 4 steps) end to end
+    coord
+        .generate_blocking(image_request(4, 1, Policy::smooth(2.0)))
+        .expect("warming K1 failed");
+    assert_eq!(Metrics::get(&m.calibrations), 1);
+
+    // cold key K2 = (image, ddim, 16 steps): one replica calibrates it
+    let cold_rx = coord.submit(image_request(16, 2, Policy::smooth(2.0)));
+    let t0 = Instant::now();
+    while Metrics::get(&m.calibrations) < 2 {
+        assert!(t0.elapsed() < Duration::from_secs(120), "K2 calibration never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // the pin: a K1 request completes while K2 is still calibrating
+    let warm = coord
+        .generate_blocking(image_request(4, 3, Policy::smooth(2.0)))
+        .expect("warm K1 request failed behind a foreign calibration");
+    assert!(warm.gen_stats.skip_fraction() > 0.0, "smooth α=2.0 should skip");
+    match cold_rx.try_recv() {
+        Err(std::sync::mpsc::TryRecvError::Empty) => {}
+        other => panic!("K2 finished before the warm K1 request was served: {other:?}"),
+    }
+
+    cold_rx
+        .recv_timeout(Duration::from_secs(300))
+        .expect("K2 hung")
+        .expect("K2 failed");
+    assert_eq!(Metrics::get(&m.calibrations), 2, "exactly one calibration per key");
+    assert!(Metrics::get(&m.plan_cache_hits) >= 1, "warm K1 must hit the plan cache");
+    assert_eq!(Metrics::get(&m.requests_failed), 0);
+    coord.shutdown();
+}
+
 /// Batcher-layer property with synthetic clocks (no sleeping): under
 /// Poisson inter-arrival offsets, every request flushes by
 /// `last_arrival + max_wait`, every flushed batch is homogeneous in
@@ -502,6 +1107,7 @@ fn prop_deadline_flushes_fire_under_poisson_arrivals() {
                         seed: i as u64,
                         policy: Policy::no_cache(),
                         compute: Default::default(),
+                        priority: Default::default(),
                     },
                     tx,
                 );

@@ -225,6 +225,7 @@ fn generate_is_identical_across_worker_pool_sizes() {
         seed: 0xF1DE,
         policy: Policy::fora(2),
         compute: Default::default(),
+        priority: Default::default(),
     };
     let mut outputs = Vec::new();
     for workers in [1usize, 2, 3] {

@@ -9,7 +9,9 @@ use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Metrics, Policy, Request};
+use smoothcache::coordinator::{
+    Coordinator, CoordinatorConfig, Metrics, Policy, PriorityClass, Request,
+};
 use smoothcache::model::Cond;
 use smoothcache::server::{Client, Server};
 use smoothcache::solvers::SolverKind;
@@ -34,6 +36,7 @@ fn image_request(seed: u64, policy: Policy) -> Request {
         seed,
         policy,
         compute: Default::default(),
+        priority: Default::default(),
     }
 }
 
@@ -388,5 +391,123 @@ fn server_rejects_late_work_under_reject_deadline() {
         .unwrap();
     assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true), "{ok:?}");
     assert!(ok.get("deadline_missed").is_none(), "{ok:?}");
+    server.stop();
+}
+
+#[test]
+fn server_accepts_priority_field_and_rejects_unknown_classes() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut client = Client::connect(&server.addr).expect("client");
+
+    // both classes round-trip; batch-class work completes normally when
+    // no interactive traffic competes
+    for class in ["interactive", "batch"] {
+        let resp = client
+            .call(
+                &Json::obj()
+                    .set("family", "image")
+                    .set("label", 1.0)
+                    .set("steps", 4usize)
+                    .set("priority", class),
+            )
+            .unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{class}: {resp:?}");
+    }
+    // an unknown class is a wire error, not a silent default
+    let bad = client
+        .call(
+            &Json::obj()
+                .set("family", "image")
+                .set("label", 1.0)
+                .set("priority", "urgent"),
+        )
+        .unwrap();
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad:?}");
+    assert!(
+        bad.get("error").and_then(|v| v.as_str()).unwrap_or("").contains("priority"),
+        "{bad:?}"
+    );
+    server.stop();
+}
+
+#[test]
+fn server_preempts_batch_class_and_cancelling_its_parked_session_frees_it() {
+    // one replica, so a batch-class generation and interactive traffic
+    // always contend for the same executor: the long batch job must be
+    // preempted (parked) to let interactive work through, and cancelling
+    // it while it bounces between parked and running must free the
+    // parked lane and reconcile the counters
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(1);
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(5);
+    let c = Arc::new(Coordinator::start(cfg).expect("coordinator"));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+
+    // batch-class long job on a streaming connection, in its own thread
+    // (the streaming call blocks until the final outcome line)
+    let (id_tx, id_rx) = std::sync::mpsc::channel();
+    let addr = server.addr;
+    let streamer = std::thread::spawn(move || {
+        let mut streaming = Client::connect(&addr).expect("client");
+        let req = Json::obj()
+            .set("family", "image")
+            .set("label", 1.0)
+            .set("steps", 5000usize)
+            .set("policy", "no-cache")
+            .set("priority", "batch")
+            .set("seed", 5u64);
+        let mut sent = false;
+        streaming
+            .call_streaming(&req, |ev| {
+                if !sent {
+                    if let Some(id) = ev.get("id").and_then(|v| v.as_u64()) {
+                        let _ = id_tx.send(id);
+                        sent = true;
+                    }
+                }
+            })
+            .expect("streaming call")
+    });
+    let batch_id = id_rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("batch job never started");
+
+    // interactive traffic until the batch job has demonstrably been
+    // preempted at least once
+    let t0 = Instant::now();
+    while Metrics::get(&c.metrics().preemptions) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(120), "batch job was never preempted");
+        let mut r = image_request(7, Policy::no_cache());
+        r.steps = 2;
+        r.priority = PriorityClass::Interactive;
+        c.generate_blocking(r).expect("interactive request");
+    }
+
+    // cancel the batch job (parked or just resumed — both must work)
+    let mut killer = Client::connect(&server.addr).expect("client");
+    assert!(killer.cancel(batch_id).expect("cancel rpc"), "batch id must be known");
+    let outcome = streamer.join().expect("streamer thread");
+    assert_eq!(outcome.get("ok").unwrap().as_bool(), Some(false), "{outcome:?}");
+    assert_eq!(outcome.get("cancelled").and_then(|v| v.as_bool()), Some(true), "{outcome:?}");
+
+    // the parked lane is empty again (a cancelled parked session never
+    // resumes), counters reconcile, and the stack still serves
+    let t0 = Instant::now();
+    while Metrics::get(&c.metrics().parked_sessions) != 0 || c.parked_len() != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "cancelled batch job still parked: gauge={} queue={}",
+            Metrics::get(&c.metrics().parked_sessions),
+            c.parked_len()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(Metrics::get(&c.metrics().requests_cancelled), 1);
+    assert!(Metrics::get(&c.metrics().preemptions) >= 1);
+    let after = killer
+        .call(&Json::obj().set("family", "image").set("label", 2.0).set("steps", 4usize))
+        .unwrap();
+    assert_eq!(after.get("ok").unwrap().as_bool(), Some(true), "{after:?}");
     server.stop();
 }

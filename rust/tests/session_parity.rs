@@ -184,6 +184,243 @@ fn early_exit_returns_interim_latent_and_partial_stats() {
     assert_ne!(full.latent.data, early.latent.data);
 }
 
+// ────────────── ISSUE 8: snapshot / resume round-trips ──────────────
+//
+// The preemptive scheduler (docs/adr/007) parks a session as an
+// engine-independent [`SessionState`] and resumes it on whichever
+// replica pops it next. These tests pin the seam the scheduler stands
+// on: a snapshot taken at ANY step boundary, resumed on a DIFFERENT
+// engine instance, continues to a bitwise-identical trajectory — for
+// every registry policy (including `drift:*`, whose resume must carry
+// the dynamic planner's feedback state), both solvers, and under CFG.
+
+use smoothcache::pipeline::SessionState;
+
+/// Run to step `k`, snapshot, resume the snapshot on `other`, finish.
+fn run_with_park_at(
+    origin: &Engine,
+    other: &Engine,
+    cfg: &GenConfig,
+    cond: &Cond,
+    plan: PlanRef<'_>,
+    k: usize,
+) -> smoothcache::pipeline::GenOutput {
+    let mut first = GenSession::new(origin, cfg, cond, plan).expect("session");
+    for _ in 0..k {
+        first.step().expect("pre-park step");
+    }
+    let state: SessionState = first.snapshot();
+    assert_eq!(state.step(), k);
+    assert_eq!(state.total_steps(), cfg.steps);
+    assert_eq!(state.is_done(), k == cfg.steps);
+    drop(first); // the parked snapshot must not depend on the old session
+    let mut resumed = GenSession::resume(other, state, plan).expect("resume");
+    while !resumed.is_done() {
+        resumed.step().expect("post-resume step");
+    }
+    resumed.finish()
+}
+
+#[test]
+fn snapshot_resume_round_trip_is_bitwise_identical_at_every_boundary() {
+    let steps = 6usize;
+    let mut origin = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    origin.load_family("image").expect("family");
+    // a genuinely different engine instance: own weight tables, own
+    // scratch — the replica a parked session migrates to
+    let mut other = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    other.load_family("image").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    for solver in [SolverKind::Ddim, SolverKind::RectifiedFlow] {
+        for wire in registry_wires() {
+            let policy = Policy::parse(wire).unwrap();
+            let held;
+            let plan = match policy.planner().dynamic() {
+                Some(sp) => PlanRef::Planner(sp),
+                None => {
+                    held = store
+                        .plan(&origin, None, "image", solver, steps, &policy)
+                        .expect(wire);
+                    PlanRef::Plan(&held)
+                }
+            };
+            let cfg = GenConfig::new("image", solver, steps).with_seed(42);
+            let cond = cond_for("image");
+            let reference = generate(&origin, &cfg, &cond, plan, None).expect(wire);
+            for k in 0..=steps {
+                let out = run_with_park_at(&origin, &other, &cfg, &cond, plan, k);
+                assert_eq!(
+                    out.latent.data,
+                    reference.latent.data,
+                    "image/{}/{wire}: park at step {k} diverged",
+                    solver.name()
+                );
+                assert_eq!(out.stats.branch_computes, reference.stats.branch_computes, "{wire}@{k}");
+                assert_eq!(out.stats.branch_reuses, reference.stats.branch_reuses, "{wire}@{k}");
+                assert_eq!(out.stats.steps, steps, "{wire}@{k}");
+            }
+        }
+    }
+}
+
+/// Cross-family spot check (audio exercises the prompt-conditioned
+/// path) at a mid-trajectory boundary.
+#[test]
+fn snapshot_resume_round_trip_holds_for_audio_family() {
+    let steps = 4usize;
+    let mut origin = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    origin.load_family("audio").expect("family");
+    let mut other = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    other.load_family("audio").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    for wire in ["smooth:2.0", "drift:1e9"] {
+        let policy = Policy::parse(wire).unwrap();
+        let held;
+        let plan = match policy.planner().dynamic() {
+            Some(sp) => PlanRef::Planner(sp),
+            None => {
+                held = store
+                    .plan(&origin, None, "audio", SolverKind::Ddim, steps, &policy)
+                    .expect(wire);
+                PlanRef::Plan(&held)
+            }
+        };
+        let cfg = GenConfig::new("audio", SolverKind::Ddim, steps).with_seed(7);
+        let cond = cond_for("audio");
+        let reference = generate(&origin, &cfg, &cond, plan, None).expect(wire);
+        let out = run_with_park_at(&origin, &other, &cfg, &cond, plan, steps / 2);
+        assert_eq!(out.latent.data, reference.latent.data, "audio/{wire} diverged");
+    }
+}
+
+/// CFG doubles the effective batch and adds the guidance mix; the
+/// drift policy additionally threads per-site feedback state through
+/// the snapshot. Both must survive a park at every boundary.
+#[test]
+fn snapshot_resume_round_trip_holds_under_cfg_including_drift_state() {
+    let steps = 5usize;
+    let mut origin = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    origin.load_family("image").expect("family");
+    let mut other = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    other.load_family("image").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    for wire in ["smooth:2.0", "drift:1e9"] {
+        let policy = Policy::parse(wire).unwrap();
+        let held;
+        let plan = match policy.planner().dynamic() {
+            Some(sp) => PlanRef::Planner(sp),
+            None => {
+                held = store
+                    .plan(&origin, None, "image", SolverKind::Ddim, steps, &policy)
+                    .expect(wire);
+                PlanRef::Plan(&held)
+            }
+        };
+        let cfg = GenConfig::new("image", SolverKind::Ddim, steps)
+            .with_seed(9)
+            .with_cfg(1.5);
+        let cond = Cond::Label(vec![4]);
+        let reference = generate(&origin, &cfg, &cond, plan, None).expect(wire);
+        for k in 0..=steps {
+            let out = run_with_park_at(&origin, &other, &cfg, &cond, plan, k);
+            assert_eq!(
+                out.latent.data, reference.latent.data,
+                "cfg/{wire}: park at step {k} diverged"
+            );
+            assert_eq!(out.stats.branch_reuses, reference.stats.branch_reuses, "{wire}@{k}");
+        }
+    }
+}
+
+/// Repeated preemption: park and migrate after EVERY step, bouncing
+/// between two engine instances — the worst case the scheduler can
+/// produce — and still land bitwise on the uninterrupted trajectory.
+#[test]
+fn chained_park_resume_after_every_step_stays_bitwise_identical() {
+    let steps = 6usize;
+    let mut origin = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    origin.load_family("image").expect("family");
+    let mut other = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    other.load_family("image").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    for wire in ["no-cache", "smooth:2.0", "drift:1e9"] {
+        let policy = Policy::parse(wire).unwrap();
+        let held;
+        let plan = match policy.planner().dynamic() {
+            Some(sp) => PlanRef::Planner(sp),
+            None => {
+                held = store
+                    .plan(&origin, None, "image", SolverKind::Ddim, steps, &policy)
+                    .expect(wire);
+                PlanRef::Plan(&held)
+            }
+        };
+        let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(42);
+        let cond = cond_for("image");
+        let reference = generate(&origin, &cfg, &cond, plan, None).expect(wire);
+
+        let engines = [&origin, &other];
+        let mut state = GenSession::new(engines[0], &cfg, &cond, plan)
+            .expect("session")
+            .snapshot();
+        let mut hops = 0usize;
+        while !state.is_done() {
+            let mut seg = GenSession::resume(engines[hops % 2], state, plan).expect("resume");
+            hops += 1;
+            seg.step().expect("step");
+            state = seg.snapshot();
+        }
+        assert_eq!(hops, steps, "{wire}: one hop per step");
+        let out = GenSession::resume(&origin, state, plan).expect("final resume").finish();
+        assert_eq!(
+            out.latent.data, reference.latent.data,
+            "{wire}: {steps}-hop park/resume chain diverged"
+        );
+        assert_eq!(out.stats.branch_computes, reference.stats.branch_computes, "{wire}");
+        assert_eq!(out.stats.steps, steps, "{wire}");
+    }
+}
+
+/// Resume validation: a snapshot only resumes against a plan that
+/// matches its geometry and kind — wrong step count and static↔dynamic
+/// mismatches are rejected instead of silently corrupting the
+/// trajectory.
+#[test]
+fn resume_rejects_mismatched_plans() {
+    let steps = 4usize;
+    let mut engine = Engine::open(smoothcache::artifacts_dir()).expect("engine");
+    engine.load_family("image").expect("family");
+    let mut store = PlanStore::new(2, 7, None);
+    let plan = store
+        .plan(&engine, None, "image", SolverKind::Ddim, steps, &Policy::no_cache())
+        .unwrap();
+    let cfg = GenConfig::new("image", SolverKind::Ddim, steps).with_seed(1);
+    let cond = Cond::Label(vec![0]);
+    let mut s = GenSession::new(&engine, &cfg, &cond, PlanRef::Plan(&plan)).unwrap();
+    s.step().unwrap();
+    let state = s.snapshot();
+
+    // wrong step count
+    let short = store
+        .plan(&engine, None, "image", SolverKind::Ddim, steps - 1, &Policy::no_cache())
+        .unwrap();
+    assert!(
+        GenSession::resume(&engine, state.clone(), PlanRef::Plan(&short)).is_err(),
+        "a plan for a different step count must be rejected"
+    );
+
+    // static snapshot × dynamic planner
+    let drift = Policy::parse("drift:1e9").unwrap();
+    let sp = drift.planner().dynamic().expect("drift is dynamic");
+    assert!(
+        GenSession::resume(&engine, state.clone(), PlanRef::Planner(sp)).is_err(),
+        "a static snapshot must not resume under a dynamic planner"
+    );
+
+    // the matching plan still works
+    assert!(GenSession::resume(&engine, state, PlanRef::Plan(&plan)).is_ok());
+}
+
 #[test]
 fn session_rejects_stepping_past_the_end_and_empty_batches() {
     let steps = 2usize;

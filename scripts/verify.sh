@@ -6,8 +6,10 @@
 # rustdoc with broken intra-doc links promoted to errors, then the
 # smoke-scale bench trajectory gate (docs/benchmarks.md, ADR-005):
 # perf_engine and e2e_serving emit BENCH_engine.json / BENCH_serving.json
-# at the repo root and bench_diff compares them against the committed
-# BENCH_baseline/ snapshot, failing on out-of-tolerance regressions.
+# plus the mixed-priority preemption lanes (BENCH_serving_mixed_w1/w3,
+# docs/adr/007) at the repo root and bench_diff compares them against
+# the committed BENCH_baseline/ snapshot, failing on out-of-tolerance
+# regressions.
 #
 # Run from anywhere; CI invokes this script with --strict.
 #
@@ -80,7 +82,18 @@ echo "==> bench smoke: BENCH_engine.json + BENCH_serving.json"
 ./target/release/perf_engine --smoke --json BENCH_engine.json
 ./target/release/e2e_serving --smoke --json BENCH_serving.json
 
-for area in engine serving; do
+# preemption stress (docs/adr/007): the run-to-completion vs preemptive
+# comparison at 1 replica (worst case: every interactive probe lands
+# behind a saturating batch-class job) and 3 replicas (thundering-
+# preempt shape). Gated rows include priority:interactive/p99_ms, so a
+# scheduler regression that starves interactive work fails tier-1.
+echo "==> bench smoke: mixed-priority preemption lanes (workers 1, 3)"
+./target/release/e2e_serving --smoke --mixed-priority --workers 1 \
+    --json BENCH_serving_mixed_w1.json
+./target/release/e2e_serving --smoke --mixed-priority --workers 3 \
+    --json BENCH_serving_mixed_w3.json
+
+for area in engine serving serving_mixed_w1 serving_mixed_w3; do
     report="BENCH_${area}.json"
     baseline="BENCH_baseline/${report}"
     if [ -f "$baseline" ]; then
