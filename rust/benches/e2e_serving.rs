@@ -18,6 +18,14 @@
 //! `--json OUT` writes the machine-readable `BENCH_serving.json`
 //! report (docs/benchmarks.md).
 //!
+//! `--mux N` runs the protocol-v2 multiplexing comparison instead
+//! (docs/adr/008): the same request load is driven first serially over
+//! one v1 JSON-lines connection (v1's one-in-flight-per-connection
+//! ceiling), then as N concurrent streams multiplexed over a single
+//! framed v2 socket by `Client2`. The report area is `serving_mux` and
+//! the headline row is `mux_speedup_x` — serial v1 wall time over
+//! multiplexed v2 wall time, with aggregate and worst-stream p99s.
+//!
 //! `--mixed-priority` runs the preemptive-scheduling comparison
 //! instead of the per-policy sweep: every replica is first saturated
 //! with a long generation, then short interactive probes measure the
@@ -48,6 +56,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     let deadline_ms = args.usize("deadline-ms", 0)?;
     let smoke = args.flag("smoke")?;
     let mixed = args.flag("mixed-priority")?;
+    let mux = args.usize("mux", 0)?;
     let json_out = args.str_opt("json")?;
     args.finish()?;
 
@@ -62,6 +71,9 @@ fn main() -> smoothcache::util::error::Result<()> {
 
     if mixed {
         return run_mixed_priority(workers, queue_depth, smoke, json_out.as_deref());
+    }
+    if mux > 0 {
+        return run_mux(workers, queue_depth, mux, smoke, json_out.as_deref());
     }
 
     let (steps, n_requests, rate_rps) = if smoke {
@@ -479,6 +491,210 @@ fn run_mixed_priority(
         true,
         1000.0,
     )?;
+    if let Some(path) = json_out {
+        report.save(path)?;
+        println!("wrote bench report: {path}");
+    }
+    Ok(())
+}
+
+/// The `--mux N` comparison (docs/adr/008): `n_streams × per_stream`
+/// identical-shape requests, first serially over one v1 JSON-lines
+/// connection, then as `n_streams` concurrent threads multiplexed over
+/// a single framed v2 socket. The multiplexed run keeps the window
+/// full, so the dynamic batcher folds concurrent streams into larger
+/// batches and replicas pipeline — that overlap is `mux_speedup_x`.
+fn run_mux(
+    workers: usize,
+    queue_depth: usize,
+    n_streams: usize,
+    smoke: bool,
+    json_out: Option<&str>,
+) -> smoothcache::util::error::Result<()> {
+    use smoothcache::server::{Client, Client2, Server};
+    use smoothcache::util::json::Json;
+
+    let (steps, per_stream) = if smoke {
+        (2usize, 2usize)
+    } else if fast_mode() {
+        (4, 3)
+    } else {
+        (8, 4)
+    };
+    let policy = Policy::fora(2);
+
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(10);
+    cfg.calib_samples = if fast_mode() { 2 } else { 6 };
+    cfg.workers = workers;
+    cfg.queue_depth = queue_depth;
+    let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
+
+    // warmup out of the measured window: the single shape plus the
+    // batch sizes the multiplexed phase can fold concurrent streams
+    // into
+    let warm = Request {
+        id: 0,
+        family: "image".into(),
+        cond: smoothcache::model::Cond::Label(vec![0]),
+        solver: SolverKind::Ddim,
+        steps,
+        cfg_scale: 1.0,
+        seed: 1,
+        policy: policy.clone(),
+        compute: Default::default(),
+        priority: Default::default(),
+    };
+    coord.generate_blocking(warm.clone())?;
+    for b in [2usize, 4, 8] {
+        let rxs: Vec<_> = (0..b.min(n_streams.max(2)))
+            .map(|i| {
+                let mut r = warm.clone();
+                r.seed = 100 + i as u64;
+                coord.submit(r)
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap()?;
+        }
+    }
+
+    let server = Server::start("127.0.0.1:0", std::sync::Arc::clone(&coord), 2)?;
+    let req = |stream: usize, i: usize| {
+        Json::obj()
+            .set("family", "image")
+            .set("label", ((stream + i) % 10) as u64)
+            .set("solver", "ddim")
+            .set("steps", steps)
+            .set("policy", policy.wire())
+            .set("seed", (7 + stream * per_stream + i) as u64)
+    };
+    let check = |reply: &Json| -> smoothcache::util::error::Result<()> {
+        if reply.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            return Err(smoothcache::err!(
+                "mux bench request failed: {}",
+                reply.get("error").and_then(|v| v.as_str()).unwrap_or("?")
+            ));
+        }
+        Ok(())
+    };
+
+    // Phase A — serial v1: one JSON-lines connection, one in flight at
+    // a time (the per-connection ceiling protocol v2 removes)
+    let mut v1 = Client::connect(&server.addr)?;
+    let t0 = Instant::now();
+    let mut serial_lat = Vec::with_capacity(n_streams * per_stream);
+    for s in 0..n_streams {
+        for i in 0..per_stream {
+            let t = Instant::now();
+            let reply = v1.call(&req(s, i))?;
+            check(&reply)?;
+            serial_lat.push(t.elapsed().as_secs_f64());
+        }
+    }
+    let wall_serial = t0.elapsed().as_secs_f64();
+    drop(v1); // free the connection-handler slot before phase B
+
+    // Phase B — multiplexed v2: the same load as n_streams concurrent
+    // closed-loop streams over ONE framed socket
+    let v2 = Client2::connect(&server.addr)?;
+    let t0 = Instant::now();
+    let stream_lats: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_streams)
+            .map(|s| {
+                let v2 = &v2;
+                let req = &req;
+                let check = &check;
+                scope.spawn(move || -> smoothcache::util::error::Result<Vec<f64>> {
+                    let mut lats = Vec::with_capacity(per_stream);
+                    for i in 0..per_stream {
+                        let t = Instant::now();
+                        let reply = v2.call(&req(s, i))?;
+                        check(&reply)?;
+                        lats.push(t.elapsed().as_secs_f64());
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("mux stream thread panicked"))
+            .collect::<smoothcache::util::error::Result<Vec<_>>>()
+    })?;
+    let wall_mux = t0.elapsed().as_secs_f64();
+    drop(v2);
+    let summary = {
+        let mut c = Client::connect(&server.addr)?;
+        c.metrics_summary()?
+    };
+    server.stop();
+    coord.shutdown();
+
+    let served_mux: usize = stream_lats.iter().map(|v| v.len()).sum();
+    let mut all: Vec<f64> = stream_lats.iter().flatten().copied().collect();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let worst_stream_p99 = stream_lats
+        .iter()
+        .map(|v| {
+            let mut v = v.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            pct_of(&v, 0.99)
+        })
+        .fold(0.0f64, f64::max);
+    serial_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let speedup = if wall_mux > 0.0 { wall_serial / wall_mux } else { f64::INFINITY };
+
+    let mut table = Table::new(&[
+        "phase", "conns", "in-flight", "served", "wall (s)", "req/s", "p50 (s)", "p99 (s)",
+    ]);
+    table.row(&[
+        "v1 serial".into(),
+        "1".into(),
+        "1".into(),
+        serial_lat.len().to_string(),
+        format!("{wall_serial:.2}"),
+        format!("{:.2}", serial_lat.len() as f64 / wall_serial),
+        format!("{:.3}", pct_of(&serial_lat, 0.5)),
+        format!("{:.3}", pct_of(&serial_lat, 0.99)),
+    ]);
+    table.row(&[
+        "v2 mux".into(),
+        "1".into(),
+        n_streams.to_string(),
+        served_mux.to_string(),
+        format!("{wall_mux:.2}"),
+        format!("{:.2}", served_mux as f64 / wall_mux),
+        format!("{:.3}", pct_of(&all, 0.5)),
+        format!("{:.3}", pct_of(&all, 0.99)),
+    ]);
+    println!(
+        "\nProtocol mux — image family, DDIM-{steps}, {} policy, {n_streams} streams × \
+         {per_stream} requests, {workers} replicas; mux speedup {speedup:.2}x \
+         (target ≥ 1.5x at 2 workers)",
+        policy.wire()
+    );
+    table.print();
+    eprintln!("[mux] server metrics: {summary}");
+
+    let mut report = BenchReport::new("serving_mux");
+    report.meta("family", "image");
+    report.meta("solver", "ddim");
+    report.meta("steps", steps);
+    report.meta("workers", workers);
+    report.meta("streams", n_streams);
+    report.meta("per_stream", per_stream);
+    report.meta("policy", policy.wire());
+    report.meta("smoke", smoke);
+    report.metric_tol("mux_speedup_x", speedup, "x", true, 60.0)?;
+    report.metric_tol("v1_serial_wall_s", wall_serial, "s", false, 150.0)?;
+    report.metric_tol("v2_mux_wall_s", wall_mux, "s", false, 150.0)?;
+    report.metric_tol("v2_throughput_rps", served_mux as f64 / wall_mux, "req/s", true, 100.0)?;
+    report.metric_tol("stream_p99_ms", pct_of(&all, 0.99) * 1e3, "ms", false, 200.0)?;
+    report.metric_tol("worst_stream_p99_ms", worst_stream_p99 * 1e3, "ms", false, 200.0)?;
+    // conservation: every stream's every request answered exactly once
+    report.metric_tol("served", served_mux as f64, "req", true, 0.0)?;
     if let Some(path) = json_out {
         report.save(path)?;
         println!("wrote bench report: {path}");

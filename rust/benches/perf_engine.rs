@@ -297,6 +297,60 @@ fn main() -> smoothcache::util::error::Result<()> {
         )?;
     }
 
+    // ---- wire-envelope parse: full JSON tree vs lazy scan_field ----
+    // The v2 request hot path only needs cmd/id/stream out of the
+    // envelope before dispatch; util::json::scan_field extracts them
+    // in one zero-allocation pass instead of building (and dropping)
+    // the whole value tree (docs/adr/008).
+    {
+        use smoothcache::util::json::{parse as json_parse, scan_bool, scan_str, scan_u64};
+        let envelope = r#"{"cmd":"generate","id":90210,"stream":true,"family":"image","label":7,"solver":"ddim","steps":50,"cfg":1.5,"seed":123456789,"policy":"smooth:0.35","compute":"f16","priority":"interactive","deadline_ms":2500,"deadline_policy":"best-effort","prompt_ids":[1,2,3,4,5,6,7,8,9,10,11,12,13,14,15,16]}"#;
+        let scan_iters = if fast_mode() { 50 } else { 20000 };
+        let mut sink = 0u64;
+        let full = bench(10, scan_iters, || {
+            let j = json_parse(envelope).unwrap();
+            let id = j.get("id").and_then(|v| v.as_u64()).unwrap_or(0);
+            let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+            let cmd_len = j.get("cmd").and_then(|v| v.as_str()).map(|s| s.len()).unwrap_or(0);
+            sink = sink.wrapping_add(id + stream as u64 + cmd_len as u64);
+        });
+        let lazy = bench(10, scan_iters, || {
+            let id = scan_u64(envelope, "id").unwrap_or(0);
+            let stream = scan_bool(envelope, "stream").unwrap_or(false);
+            let cmd_len = scan_str(envelope, "cmd").map(|s| s.len()).unwrap_or(0);
+            sink = sink.wrapping_add(id + stream as u64 + cmd_len as u64);
+        });
+        assert!(sink > 0, "envelope extractions must not be optimised away");
+        let speedup = full.mean_s / lazy.mean_s;
+        let mut scan_table = Table::new(&["envelope parse", "us/envelope", "envelopes/sec", "speedup"]);
+        scan_table.row(&[
+            "lazy scan_field (cmd+id+stream)".into(),
+            format!("{:.2}", lazy.mean_s * 1e6),
+            format!("{:.2e}", 1.0 / lazy.mean_s),
+            format!("{speedup:.1}x"),
+        ]);
+        scan_table.row(&[
+            "full tree parse".into(),
+            format!("{:.2}", full.mean_s * 1e6),
+            format!("{:.2e}", 1.0 / full.mean_s),
+            "1.0x".into(),
+        ]);
+        println!(
+            "\n§Perf — wire envelope: lazy scan vs full parse ({}-byte request)",
+            envelope.len()
+        );
+        scan_table.print();
+        std::fs::write("bench_out/perf_engine_json_scan.csv", scan_table.to_csv())?;
+        report.metric_tol("json_scan/speedup_x", speedup, "x", true, 80.0)?;
+        report.metric_tol(
+            "json_scan/lazy_us_per_envelope",
+            lazy.mean_s * 1e6,
+            "us",
+            false,
+            100.0,
+        )?;
+    }
+
     // ---- parallel-substrate sweep: single-request forward vs threads ----
     // (results are bitwise thread-count-invariant; only wall time moves)
     let mut sweep = Table::new(&["threads", "fwd mean (us)", "fwd/s", "speedup vs 1t"]);

@@ -161,6 +161,14 @@ pub struct Metrics {
     /// work-queue wait of batch-class batches (queue admission → first
     /// pulled; resume waits are under [`Metrics::resume_latency`]).
     pub qwait_batch: Histogram,
+    /// Protocol v2 (`SMC2` framed) connections accepted since startup
+    /// (docs/adr/008).
+    pub v2_connections: AtomicU64,
+    /// v2 `request` frames rejected because the connection's credit
+    /// window (`--conn-inflight`) was exhausted; surfaced to clients as
+    /// typed `overloaded:` errors, distinct from
+    /// [`Metrics::queue_rejections`] (queue admission).
+    pub v2_credit_rejections: AtomicU64,
 }
 
 impl Metrics {
@@ -212,7 +220,8 @@ impl Metrics {
              step_mean={:.4}s skips={}/{} preempt={} resumes={} parked={} \
              park_peak={} resume_mean={:.3}s e2e_int_p50={:.3}s e2e_int_p95={:.3}s \
              e2e_int_p99={:.3}s e2e_bat_p50={:.3}s e2e_bat_p95={:.3}s \
-             e2e_bat_p99={:.3}s qwait_int_mean={:.3}s qwait_bat_mean={:.3}s",
+             e2e_bat_p99={:.3}s qwait_int_mean={:.3}s qwait_bat_mean={:.3}s \
+             v2_conns={} v2_credit_rej={}",
             Self::get(&self.executor_replicas).max(1),
             Self::get(&self.requests_submitted),
             Self::get(&self.requests_completed),
@@ -249,6 +258,8 @@ impl Metrics {
             self.e2e_batch.quantile(0.99),
             self.qwait_interactive.mean(),
             self.qwait_batch.mean(),
+            Self::get(&self.v2_connections),
+            Self::get(&self.v2_credit_rejections),
         )
     }
 }
@@ -348,6 +359,16 @@ mod tests {
         assert!(s.contains("parked=1"), "{s}");
         assert!(s.contains("park_peak=2"), "{s}");
         assert!(s.contains("resume_mean=0.125s"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_v2_counters() {
+        let m = Metrics::default();
+        Metrics::add(&m.v2_connections, 2);
+        Metrics::inc(&m.v2_credit_rejections);
+        let s = m.summary();
+        assert!(s.contains("v2_conns=2"), "{s}");
+        assert!(s.contains("v2_credit_rej=1"), "{s}");
     }
 
     #[test]

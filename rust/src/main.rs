@@ -72,7 +72,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("workers", "2", "executor replicas (backend engines; PJRT clamps to 1)")
         .flag("queue-depth", "256", "max requests waiting in the shared work queue before admission rejects with an overloaded error")
         .flag("threads", "0", "GEMM compute threads per process (0 = auto)")
-        .flag("conn-threads", "4", "connection handler threads");
+        .flag("conn-threads", "4", "connection handler threads")
+        .flag("conn-inflight", "32", "protocol v2 per-connection credit window: concurrent generations one connection may hold in flight")
+        .flag("idle-timeout-s", "60", "protocol v2 idle-connection reaper: ping then close after this many idle seconds (0 = never)")
+        .bool_flag("v2", "accept only framed v2 (SMC2) connections; refuse v1 JSON-lines");
     let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
 
     let threads = args.usize("threads").map_err(Error::msg)?;
@@ -90,19 +93,32 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     let queue_depth = cfg.queue_depth;
     let coord = Arc::new(Coordinator::start(cfg)?);
-    let server = Server::start(
-        args.str("addr"),
-        Arc::clone(&coord),
-        args.usize("conn-threads").map_err(Error::msg)?,
-    )?;
+    let opts = smoothcache::server::ServerOpts {
+        conn_threads: args.usize("conn-threads").map_err(Error::msg)?,
+        conn_inflight: args.usize("conn-inflight").map_err(Error::msg)?.max(1),
+        idle_timeout: Duration::from_secs(args.u64("idle-timeout-s").map_err(Error::msg)?),
+        v2_only: args.bool("v2"),
+        ..smoothcache::server::ServerOpts::default()
+    };
+    let conn_inflight = opts.conn_inflight;
+    let v2_only = opts.v2_only;
+    let server = Server::start_with(args.str("addr"), Arc::clone(&coord), opts)?;
     println!(
-        "smoothcache serving on {} (workers={}, threads={}, queue-depth={})",
+        "smoothcache serving on {} (workers={}, threads={}, queue-depth={}, conn-inflight={})",
         server.addr,
         smoothcache::coordinator::Metrics::get(&coord.metrics().executor_replicas).max(1),
         smoothcache::tensor::gemm::threads(),
-        queue_depth
+        queue_depth,
+        conn_inflight
     );
-    println!("protocol: one JSON object per line; try {{\"cmd\": \"ping\"}}");
+    if v2_only {
+        println!("protocol: framed v2 only (SMC2 preamble; docs/protocol.md §Protocol v2)");
+    } else {
+        println!(
+            "protocol: one JSON object per line (try {{\"cmd\": \"ping\"}}), \
+             or framed v2 via the SMC2 preamble"
+        );
+    }
     // serve until killed
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -127,8 +143,17 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("deadline-policy", "best-effort", "what to do with late work: best-effort|reject")
         .flag("priority", "interactive", "scheduling class: interactive|batch (batch yields to interactive work)")
         .bool_flag("stream", "print one progress line per solver step")
-        .flag("out", "", "write latent to this path (JSON)");
+        .flag("out", "", "write latent to this path (JSON)")
+        .flag("connect", "", "send the request to a running server at this address instead of generating in-process")
+        .bool_flag("v2", "with --connect: use the framed v2 protocol (multiplexing Client2) instead of v1 JSON-lines");
     let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
+
+    if !args.str("connect").is_empty() {
+        return remote_generate(&args);
+    }
+    if args.bool("v2") {
+        return Err(smoothcache::err!("--v2 needs --connect ADDR (it selects the wire protocol)"));
+    }
 
     let threads = args.usize("threads").map_err(Error::msg)?;
     if threads > 0 {
@@ -233,6 +258,97 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         println!("latent written to {}", args.str("out"));
     }
     coord.shutdown();
+    Ok(())
+}
+
+/// `generate --connect ADDR [--v2]`: ship the request to a running
+/// server over v1 JSON-lines ([`smoothcache::server::Client`]) or the
+/// framed v2 protocol ([`smoothcache::server::Client2`]).
+fn remote_generate(args: &smoothcache::util::cli::ParsedArgs) -> Result<()> {
+    use smoothcache::util::json::Json;
+
+    let addr: std::net::SocketAddr = args
+        .str("connect")
+        .parse()
+        .map_err(|e| smoothcache::err!("--connect {:?}: {e}", args.str("connect")))?;
+    let mut req = Json::obj()
+        .set("family", args.string("family"))
+        .set("solver", args.string("solver"))
+        .set("steps", args.usize("steps").map_err(Error::msg)?)
+        .set("cfg", args.f64("cfg").map_err(Error::msg)?)
+        .set("seed", args.u64("seed").map_err(Error::msg)?)
+        .set("policy", args.string("policy"))
+        .set("compute", args.string("compute"))
+        .set("priority", args.string("priority"));
+    if args.str("prompt-ids").is_empty() {
+        req = req.set("label", args.usize("label").map_err(Error::msg)?);
+    } else {
+        req = req.set("prompt_ids", args.usize_list("prompt-ids").map_err(Error::msg)?);
+    }
+    match args.u64("deadline-ms").map_err(Error::msg)? {
+        0 => {}
+        ms => {
+            req = req
+                .set("deadline_ms", ms)
+                .set("deadline_policy", args.string("deadline-policy"));
+        }
+    }
+    if !args.str("out").is_empty() {
+        req = req.set("return_latent", true);
+    }
+    let on_event = |ev: &Json| match ev.get("event").and_then(|v| v.as_str()) {
+        Some("accepted") => {
+            if let Some(id) = ev.get("id").and_then(|v| v.as_u64()) {
+                println!("accepted id={id}");
+            }
+        }
+        _ => println!(
+            "step {:>4}/{} computes={} reuses={} t={:.3}s",
+            ev.get("step").and_then(|v| v.as_u64()).unwrap_or(0) + 1,
+            ev.get("steps").and_then(|v| v.as_u64()).unwrap_or(0),
+            ev.get("computes").and_then(|v| v.as_u64()).unwrap_or(0),
+            ev.get("reuses").and_then(|v| v.as_u64()).unwrap_or(0),
+            ev.get("t_s").and_then(|v| v.as_f64()).unwrap_or(0.0)
+        ),
+    };
+    let reply = if args.bool("v2") {
+        let client = smoothcache::server::Client2::connect(&addr)?;
+        if args.bool("stream") {
+            client.call_streaming(&req, on_event)?
+        } else {
+            client.call(&req)?
+        }
+    } else {
+        let mut client = smoothcache::server::Client::connect(&addr)?;
+        if args.bool("stream") {
+            client.call_streaming(&req, on_event)?
+        } else {
+            client.call(&req)?
+        }
+    };
+    if reply.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+        let msg = reply.get("error").and_then(|v| v.as_str()).unwrap_or("unknown server error");
+        return Err(smoothcache::err!("server: {msg}"));
+    }
+    println!(
+        "generated {:?} in {:.3}s (exec {:.3}s, batch {}, skips {:.0}%) via {}",
+        reply.get("latent_shape").and_then(|v| v.as_usize_vec()).unwrap_or_default(),
+        reply.get("total_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        reply.get("exec_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        reply.get("batch_size").and_then(|v| v.as_u64()).unwrap_or(0),
+        reply.get("skip_fraction").and_then(|v| v.as_f64()).unwrap_or(0.0) * 100.0,
+        if args.bool("v2") { "v2" } else { "v1" }
+    );
+    if !args.str("out").is_empty() {
+        let shape = reply.get("latent_shape").and_then(|v| v.as_f64_vec()).unwrap_or_default();
+        let data = reply
+            .get("latent")
+            .and_then(|v| v.as_f64_vec())
+            .ok_or_else(|| smoothcache::err!("server reply carried no latent"))?;
+        let j = Json::obj().set("shape", shape).set("data", data);
+        std::fs::write(args.str("out"), j.to_string())?;
+        println!("latent written to {}", args.str("out"));
+    }
     Ok(())
 }
 

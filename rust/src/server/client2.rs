@@ -1,0 +1,470 @@
+//! Production protocol-v2 client: connection pool, request-id table,
+//! per-request wait handles, streaming step callbacks, cancel-by-id,
+//! and reconnect-on-broken-pipe (docs/protocol.md §Protocol v2,
+//! ADR-008).
+//!
+//! Each pooled connection runs one background reader thread that
+//! demultiplexes inbound frames into per-request channels, so any
+//! number of application threads can hold [`Handle`]s on the same
+//! socket concurrently. Flow control mirrors the server: a submit
+//! spends one credit from the window announced in the server `hello`,
+//! `credit` frames earn it back, and a submit at zero credits fails
+//! fast with a typed `overloaded:` error instead of queueing.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::error::Result;
+use crate::util::json::{parse, scan_u64, Json};
+
+use super::frame::{Decoded, Frame, FrameReader, FrameType, MAGIC, MAX_FRAME_LEN, VERSION};
+use super::DEFAULT_IO_TIMEOUT;
+
+/// Reader-thread poll tick (read timeout between liveness checks).
+const POLL_MS: u64 = 50;
+
+/// Tuning for [`Client2`].
+#[derive(Clone, Copy, Debug)]
+pub struct Client2Config {
+    /// Pooled connections; requests round-robin across them.
+    pub pool: usize,
+    /// TCP connect + handshake budget per connection.
+    pub connect_timeout: Duration,
+    /// Liveness budget: if a connection with pending requests goes
+    /// this long without any inbound frame (pings included), the
+    /// connection is declared dead and every pending request fails
+    /// with a typed `timeout:` error. Also the write timeout.
+    pub io_timeout: Duration,
+}
+
+impl Default for Client2Config {
+    fn default() -> Client2Config {
+        Client2Config {
+            pool: 1,
+            connect_timeout: DEFAULT_IO_TIMEOUT,
+            io_timeout: DEFAULT_IO_TIMEOUT,
+        }
+    }
+}
+
+/// One demultiplexed message for a pending request.
+enum Msg {
+    /// A `step` frame (streaming progress event).
+    Step(Json),
+    /// The terminal `response` frame's body.
+    Done(Json),
+    /// Protocol-level failure (connection lost, liveness timeout).
+    Failed(String),
+}
+
+/// One live pooled connection.
+struct Conn {
+    writer: Mutex<TcpStream>,
+    /// Request-id table: pending requests awaiting their response.
+    pending: Mutex<HashMap<u64, Sender<Msg>>>,
+    /// Remaining credit window (decremented at submit, replenished by
+    /// `credit` frames).
+    credits: Mutex<usize>,
+    dead: AtomicBool,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Conn {
+    fn fail_all(&self, msg: &str) {
+        self.dead.store(true, Ordering::SeqCst);
+        let mut pending = self.pending.lock().unwrap();
+        for (_, tx) in pending.drain() {
+            let _ = tx.send(Msg::Failed(msg.to_string()));
+        }
+    }
+
+    fn send(&self, f: &Frame) -> bool {
+        let mut w = self.writer.lock().unwrap();
+        let ok = f.write_to(&mut *w).and_then(|_| w.flush()).is_ok();
+        if !ok {
+            self.dead.store(true, Ordering::SeqCst);
+        }
+        ok
+    }
+}
+
+/// A pending request: blocks on [`Handle::wait`] for the terminal
+/// response, or streams step events via [`Handle::wait_streaming`].
+pub struct Handle {
+    /// The client-chosen wire request id.
+    pub id: u64,
+    rx: Receiver<Msg>,
+    conn: Arc<Conn>,
+}
+
+impl Handle {
+    /// Block until the terminal response. Application-level failures
+    /// come back as the reply object (`ok: false` + flags, exactly as
+    /// v1); protocol-level failures (timeout, lost connection) are
+    /// typed `Err`s.
+    pub fn wait(self) -> Result<Json> {
+        self.wait_streaming(|_| {})
+    }
+
+    /// Like [`Handle::wait`], invoking `on_event` for every `accepted`
+    /// / `step` event frame that precedes the response.
+    pub fn wait_streaming(self, mut on_event: impl FnMut(&Json)) -> Result<Json> {
+        loop {
+            match self.rx.recv() {
+                Ok(Msg::Step(ev)) => on_event(&ev),
+                Ok(Msg::Done(reply)) => return Ok(reply),
+                Ok(Msg::Failed(msg)) => return Err(crate::err!("{msg}")),
+                Err(_) => return Err(crate::err!("connection lost: reader gone")),
+            }
+        }
+    }
+
+    /// Best-effort cancel of this request (`cancel` frame). The
+    /// request still resolves exactly once — normally with a
+    /// `cancelled:` error response.
+    pub fn cancel(&self) {
+        self.conn.send(&Frame::empty(FrameType::Cancel, self.id));
+    }
+}
+
+/// Pooled, multiplexing protocol-v2 client.
+pub struct Client2 {
+    addr: SocketAddr,
+    cfg: Client2Config,
+    slots: Vec<Mutex<Option<Arc<Conn>>>>,
+    next_slot: AtomicUsize,
+    next_id: AtomicU64,
+}
+
+impl Client2 {
+    /// Connect with [`Client2Config::default`] (pool of 1, 30s
+    /// timeouts), performing the first handshake eagerly so a dead
+    /// server fails here rather than on first use.
+    pub fn connect(addr: &SocketAddr) -> Result<Client2> {
+        Client2::with_config(addr, Client2Config::default())
+    }
+
+    /// Connect with explicit tuning; the slot-0 handshake runs eagerly.
+    pub fn with_config(addr: &SocketAddr, cfg: Client2Config) -> Result<Client2> {
+        let pool = cfg.pool.max(1);
+        let client = Client2 {
+            addr: *addr,
+            cfg: Client2Config { pool, ..cfg },
+            slots: (0..pool).map(|_| Mutex::new(None)).collect(),
+            next_slot: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+        };
+        client.ensure_conn(0)?;
+        Ok(client)
+    }
+
+    /// Handshake a fresh connection: magic, client hello, server hello
+    /// (which announces the credit window), then the reader thread.
+    fn open_conn(&self) -> Result<Arc<Conn>> {
+        let stream = TcpStream::connect_timeout(&self.addr, self.cfg.connect_timeout)
+            .map_err(|e| crate::err!("timeout: connect {}: {e}", self.addr))?;
+        stream.set_write_timeout(Some(self.cfg.io_timeout))?;
+        stream.set_read_timeout(Some(Duration::from_millis(POLL_MS)))?;
+        let mut sock = stream.try_clone()?;
+        {
+            let mut w = &stream;
+            w.write_all(&MAGIC)?;
+            Frame::json(FrameType::Hello, 0, &Json::obj().set("version", VERSION))
+                .write_to(&mut w)?;
+            w.flush()?;
+        }
+        // wait for the server hello within the connect budget
+        let mut reader = FrameReader::new(MAX_FRAME_LEN);
+        let deadline = Instant::now() + self.cfg.connect_timeout;
+        let hello = loop {
+            if Instant::now() >= deadline {
+                return Err(crate::err!(
+                    "timeout: no hello from {} within {:?}",
+                    self.addr,
+                    self.cfg.connect_timeout
+                ));
+            }
+            let mut buf = [0u8; 1024];
+            match sock.read(&mut buf) {
+                Ok(0) => return Err(crate::err!("handshake: server closed the connection")),
+                Ok(n) => {
+                    reader.extend(&buf[..n]);
+                    match reader.decode() {
+                        Decoded::Frame(f) if f.frame_type == FrameType::Hello => break f,
+                        Decoded::Frame(f) => {
+                            return Err(crate::err!(
+                                "handshake: expected hello, got {} frame: {}",
+                                f.frame_type.name(),
+                                f.payload_str()
+                            ))
+                        }
+                        Decoded::Malformed(e) => return Err(crate::err!("handshake: {e}")),
+                        Decoded::Incomplete => {}
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(e) => return Err(e.into()),
+            }
+        };
+        let credits = scan_u64(hello.payload_str(), "credits").unwrap_or(1) as usize;
+        let conn = Arc::new(Conn {
+            writer: Mutex::new(stream),
+            pending: Mutex::new(HashMap::new()),
+            credits: Mutex::new(credits),
+            dead: AtomicBool::new(false),
+            reader: Mutex::new(None),
+        });
+        let conn2 = Arc::clone(&conn);
+        let io_timeout = self.cfg.io_timeout;
+        let handle = std::thread::Builder::new()
+            .name("smc-client2-reader".into())
+            .spawn(move || reader_loop(&conn2, sock, reader, io_timeout))?;
+        *conn.reader.lock().unwrap() = Some(handle);
+        Ok(conn)
+    }
+
+    /// The live connection for a slot, reconnecting if absent or dead.
+    fn ensure_conn(&self, slot: usize) -> Result<Arc<Conn>> {
+        let mut guard = self.slots[slot].lock().unwrap();
+        if let Some(conn) = guard.as_ref() {
+            if !conn.dead.load(Ordering::SeqCst) {
+                return Ok(Arc::clone(conn));
+            }
+        }
+        let conn = self.open_conn()?;
+        *guard = Some(Arc::clone(&conn));
+        Ok(conn)
+    }
+
+    /// Submit one request frame and return its wait handle. Retries
+    /// once on a fresh connection if the write hits a broken pipe.
+    pub fn submit(&self, req: &Json) -> Result<Handle> {
+        let slot = self.next_slot.fetch_add(1, Ordering::Relaxed) % self.cfg.pool;
+        let mut last_err = None;
+        for _attempt in 0..2 {
+            let conn = match self.ensure_conn(slot) {
+                Ok(c) => c,
+                Err(e) => {
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            {
+                let mut credits = conn.credits.lock().unwrap();
+                if *credits == 0 {
+                    return Err(crate::err!(
+                        "overloaded: client credit window exhausted (0 of the \
+                         server-announced window left on this connection)"
+                    ));
+                }
+                *credits -= 1;
+            }
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+            let (tx, rx) = channel();
+            conn.pending.lock().unwrap().insert(id, tx);
+            let frame = Frame::new(FrameType::Request, id, req.to_string().into_bytes());
+            if conn.send(&frame) {
+                return Ok(Handle { id, rx, conn });
+            }
+            // broken pipe: unwind this attempt and retry on a fresh
+            // connection (ensure_conn sees the dead flag)
+            conn.pending.lock().unwrap().remove(&id);
+            last_err = Some(crate::err!("connection lost: write failed"));
+        }
+        Err(last_err.unwrap_or_else(|| crate::err!("connection lost: submit failed")))
+    }
+
+    /// Send one request, block for its reply (v1 `Client::call` shape).
+    pub fn call(&self, req: &Json) -> Result<Json> {
+        self.submit(req)?.wait()
+    }
+
+    /// Streaming call: `stream: true` is added to `req`, `on_event`
+    /// runs for every `accepted` / `step` event, and the final reply
+    /// object is returned.
+    pub fn call_streaming(&self, req: &Json, on_event: impl FnMut(&Json)) -> Result<Json> {
+        let req = req.clone().set("stream", true);
+        self.submit(&req)?.wait_streaming(on_event)
+    }
+
+    /// Best-effort cancel-by-id across the pool: emits a `cancel`
+    /// frame on the connection whose pending table owns `id`. Returns
+    /// whether the id was still pending here.
+    pub fn cancel(&self, id: u64) -> Result<bool> {
+        for slot in &self.slots {
+            let conn = match slot.lock().unwrap().as_ref() {
+                Some(c) => Arc::clone(c),
+                None => continue,
+            };
+            if conn.pending.lock().unwrap().contains_key(&id) {
+                conn.send(&Frame::empty(FrameType::Cancel, id));
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Keepalive round-trip on one pooled connection.
+    pub fn ping(&self) -> Result<bool> {
+        let slot = self.next_slot.fetch_add(1, Ordering::Relaxed) % self.cfg.pool;
+        let conn = self.ensure_conn(slot)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let (tx, rx) = channel();
+        conn.pending.lock().unwrap().insert(id, tx);
+        if !conn.send(&Frame::empty(FrameType::Ping, id)) {
+            conn.pending.lock().unwrap().remove(&id);
+            return Err(crate::err!("connection lost: ping write failed"));
+        }
+        match rx.recv_timeout(self.cfg.io_timeout) {
+            Ok(Msg::Done(_)) => Ok(true),
+            Ok(Msg::Failed(msg)) => Err(crate::err!("{msg}")),
+            Ok(Msg::Step(_)) => Ok(false),
+            Err(_) => {
+                conn.pending.lock().unwrap().remove(&id);
+                Err(crate::err!("timeout: no pong within {:?}", self.cfg.io_timeout))
+            }
+        }
+    }
+
+    /// The server's one-line metrics summary (`{"cmd":"metrics"}`).
+    pub fn metrics_summary(&self) -> Result<String> {
+        let r = self.call(&Json::obj().set("cmd", "metrics"))?;
+        Ok(r.get("summary").and_then(|v| v.as_str()).unwrap_or("").to_string())
+    }
+
+    /// Ops hook: shut down every pooled socket in place *without*
+    /// dropping the pool state, so the next submit exercises the
+    /// broken-pipe reconnect path (also used by the reconnect test).
+    pub fn reset(&self) {
+        for slot in &self.slots {
+            if let Some(conn) = slot.lock().unwrap().as_ref() {
+                let _ = conn.writer.lock().unwrap().shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Drop for Client2 {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            let conn = slot.lock().unwrap().take();
+            if let Some(conn) = conn {
+                conn.dead.store(true, Ordering::SeqCst);
+                let _ = conn.writer.lock().unwrap().shutdown(std::net::Shutdown::Both);
+                let handle = conn.reader.lock().unwrap().take();
+                if let Some(h) = handle {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+}
+
+/// Per-connection reader: demultiplexes inbound frames into the
+/// pending table and enforces the liveness budget.
+fn reader_loop(conn: &Conn, mut sock: TcpStream, mut reader: FrameReader, io_timeout: Duration) {
+    let mut buf = [0u8; 8192];
+    let mut last_frame = Instant::now();
+    let mut pinged = false;
+    loop {
+        if conn.dead.load(Ordering::SeqCst) {
+            conn.fail_all("connection lost: client shut down");
+            return;
+        }
+        match sock.read(&mut buf) {
+            Ok(0) => {
+                conn.fail_all("connection lost: server closed the connection");
+                return;
+            }
+            Ok(n) => {
+                reader.extend(&buf[..n]);
+                last_frame = Instant::now();
+                pinged = false;
+                loop {
+                    match reader.decode() {
+                        Decoded::Incomplete => break,
+                        Decoded::Malformed(e) => {
+                            // a malformed server frame means the stream
+                            // is unrecoverably desynced for us
+                            conn.fail_all(&format!("protocol: {e}"));
+                            return;
+                        }
+                        Decoded::Frame(f) => handle_frame(conn, f),
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                let waiting = !conn.pending.lock().unwrap().is_empty();
+                if !waiting {
+                    last_frame = Instant::now(); // budget runs only with work pending
+                    continue;
+                }
+                let quiet = last_frame.elapsed();
+                if quiet >= io_timeout {
+                    conn.fail_all(&format!("timeout: no frames within {io_timeout:?}"));
+                    return;
+                }
+                if quiet >= io_timeout / 2 && !pinged {
+                    // probe once per quiet spell; any inbound frame
+                    // (the pong included) refreshes the budget
+                    conn.send(&Frame::empty(FrameType::Ping, 0));
+                    pinged = true;
+                }
+            }
+            Err(e) => {
+                conn.fail_all(&format!("connection lost: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Route one inbound frame to its pending request (or the connection).
+fn handle_frame(conn: &Conn, f: Frame) {
+    match f.frame_type {
+        FrameType::Response => {
+            let tx = conn.pending.lock().unwrap().remove(&f.id);
+            if let Some(tx) = tx {
+                let msg = match parse(f.payload_str()) {
+                    Ok(j) => Msg::Done(j),
+                    Err(e) => Msg::Failed(format!("bad reply: {e} ({:?})", f.payload_str())),
+                };
+                let _ = tx.send(msg);
+            }
+        }
+        FrameType::Step => {
+            let pending = conn.pending.lock().unwrap();
+            if let (Some(tx), Some(ev)) = (pending.get(&f.id), f.payload_json()) {
+                let _ = tx.send(Msg::Step(ev));
+            }
+        }
+        FrameType::Credit => {
+            *conn.credits.lock().unwrap() += 1;
+        }
+        FrameType::Ping => {
+            conn.send(&Frame::empty(FrameType::Pong, f.id));
+        }
+        FrameType::Pong => {
+            // a pending id means a synchronous Client2::ping round-trip
+            let tx = conn.pending.lock().unwrap().remove(&f.id);
+            if let Some(tx) = tx {
+                let _ = tx.send(Msg::Done(Json::obj().set("ok", true).set("pong", true)));
+            }
+        }
+        // error frames are protocol-level notices and deliberately do
+        // NOT resolve handles (e.g. a duplicate-id error must not
+        // resolve the original request); hello after handshake and
+        // client-only types are ignored the same way
+        FrameType::Error | FrameType::Hello | FrameType::Request | FrameType::Cancel => {}
+    }
+}

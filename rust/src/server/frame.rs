@@ -1,0 +1,410 @@
+//! Protocol v2 frame codec (docs/protocol.md §Protocol v2, ADR-008).
+//!
+//! A v2 connection opens with the 4-byte magic `SMC2`, then carries a
+//! stream of length-prefixed frames:
+//!
+//! ```text
+//! +----------------+--------------+----------------------+---------+
+//! | payload len    | frame type   | request id           | payload |
+//! | u32 LE (4 B)   | u8 (1 B)     | u64 LE (8 B)         | len B   |
+//! +----------------+--------------+----------------------+---------+
+//! ```
+//!
+//! Payloads are UTF-8 JSON (the same envelopes as protocol v1), kept
+//! small and debuggable; the framing is what buys multiplexing, not a
+//! binary body encoding. Decoding is strict: an oversized declared
+//! length or an unknown frame type is reported as a typed
+//! [`FrameError`] and the offending frame's bytes are *skipped* so the
+//! connection's other in-flight streams survive (the mux layer answers
+//! with an `error` frame instead of closing the socket).
+
+use crate::util::json::Json;
+use std::io::{self, Write};
+
+/// Connection preamble distinguishing v2 from v1 JSON-lines. v1 lines
+/// always start with `{` (or whitespace), so sniffing the first byte
+/// on the shared listener is unambiguous.
+pub const MAGIC: [u8; 4] = *b"SMC2";
+
+/// Protocol version carried in the `hello` negotiation frame.
+pub const VERSION: u64 = 2;
+
+/// Default cap on a single frame's declared payload length. Anything
+/// larger is decode-rejected before buffering, so a hostile or corrupt
+/// length prefix cannot balloon memory.
+pub const MAX_FRAME_LEN: usize = 16 * 1024 * 1024;
+
+/// Fixed header size: 4-byte length + 1-byte type + 8-byte id.
+pub const HEADER_LEN: usize = 13;
+
+/// Frame discriminator (one byte on the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameType {
+    /// Version negotiation; first frame in each direction.
+    Hello = 0,
+    /// Client → server: submit a generation or control command.
+    Request = 1,
+    /// Server → client: terminal reply for a request id.
+    Response = 2,
+    /// Server → client: one streaming progress event.
+    Step = 3,
+    /// Client → server: cancel the generation with this id.
+    Cancel = 4,
+    /// Keepalive probe (either direction).
+    Ping = 5,
+    /// Keepalive reply (either direction).
+    Pong = 6,
+    /// Server → client: protocol-level error tied to an id (or 0).
+    Error = 7,
+    /// Flow control: one unit of the credit window returned.
+    Credit = 8,
+}
+
+impl FrameType {
+    /// Decode a wire byte; `None` for unknown discriminators.
+    pub fn from_byte(b: u8) -> Option<FrameType> {
+        Some(match b {
+            0 => FrameType::Hello,
+            1 => FrameType::Request,
+            2 => FrameType::Response,
+            3 => FrameType::Step,
+            4 => FrameType::Cancel,
+            5 => FrameType::Ping,
+            6 => FrameType::Pong,
+            7 => FrameType::Error,
+            8 => FrameType::Credit,
+            _ => return None,
+        })
+    }
+
+    /// The wire byte for this type.
+    pub fn byte(self) -> u8 {
+        self as u8
+    }
+
+    /// Human-readable name used in error messages and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameType::Hello => "hello",
+            FrameType::Request => "request",
+            FrameType::Response => "response",
+            FrameType::Step => "step",
+            FrameType::Cancel => "cancel",
+            FrameType::Ping => "ping",
+            FrameType::Pong => "pong",
+            FrameType::Error => "error",
+            FrameType::Credit => "credit",
+        }
+    }
+}
+
+/// One decoded frame: type, client-chosen request id, raw payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Frame discriminator.
+    pub frame_type: FrameType,
+    /// Client-chosen request id (0 for connection-scoped frames).
+    pub id: u64,
+    /// Raw payload bytes (UTF-8 JSON for non-empty payloads).
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A frame with a raw byte payload.
+    pub fn new(frame_type: FrameType, id: u64, payload: Vec<u8>) -> Frame {
+        Frame { frame_type, id, payload }
+    }
+
+    /// A frame whose payload is a serialized JSON document.
+    pub fn json(frame_type: FrameType, id: u64, doc: &Json) -> Frame {
+        Frame::new(frame_type, id, doc.to_string().into_bytes())
+    }
+
+    /// An empty-payload frame (ping/pong/cancel/credit).
+    pub fn empty(frame_type: FrameType, id: u64) -> Frame {
+        Frame::new(frame_type, id, Vec::new())
+    }
+
+    /// Parse the payload as JSON; `None` if empty or malformed.
+    pub fn payload_json(&self) -> Option<Json> {
+        if self.payload.is_empty() {
+            return None;
+        }
+        let s = std::str::from_utf8(&self.payload).ok()?;
+        crate::util::json::parse(s).ok()
+    }
+
+    /// Payload as a `&str` (empty string for empty payloads).
+    pub fn payload_str(&self) -> &str {
+        std::str::from_utf8(&self.payload).unwrap_or("")
+    }
+
+    /// Serialize header + payload into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.push(self.frame_type.byte());
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Write the encoded frame to `w` in one `write_all` (callers hold
+    /// the egress lock across this, so interleaved streams never
+    /// corrupt each other's frames).
+    pub fn write_to(&self, w: &mut dyn Write) -> io::Result<()> {
+        w.write_all(&self.encode())
+    }
+}
+
+/// Typed decode failure; the mux layer renders these into `error`
+/// frames with stable `frame:`-prefixed messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Declared payload length exceeds the configured cap.
+    Oversized {
+        /// Declared payload length from the header.
+        len: usize,
+        /// The cap it exceeded.
+        max: usize,
+    },
+    /// Unknown frame-type discriminator byte.
+    UnknownType(u8),
+    /// Stream ended mid-frame (header or payload truncated).
+    Truncated,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame: declared payload length {len} exceeds max {max}")
+            }
+            FrameError::UnknownType(b) => write!(f, "frame: unknown frame type {b}"),
+            FrameError::Truncated => write!(f, "frame: stream truncated mid-frame"),
+        }
+    }
+}
+
+/// One `FrameReader::decode` outcome.
+#[derive(Debug, PartialEq)]
+pub enum Decoded {
+    /// A complete, well-formed frame.
+    Frame(Frame),
+    /// A malformed frame was encountered; its bytes are being skipped
+    /// and subsequent frames will still decode.
+    Malformed(FrameError),
+    /// Not enough buffered bytes yet.
+    Incomplete,
+}
+
+/// Incremental frame decoder over a byte stream.
+///
+/// Feed raw reads in with [`FrameReader::extend`], then drain complete
+/// frames with [`FrameReader::decode`] until it returns
+/// [`Decoded::Incomplete`]. Works with short reads and read timeouts:
+/// no bytes are ever lost between calls.
+///
+/// Malformed frames (oversized length, unknown type) are reported once
+/// via [`Decoded::Malformed`] and their declared extent is then
+/// discarded as bytes arrive, so a single bad frame cannot poison the
+/// frames behind it.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max_frame: usize,
+    /// Bytes still to discard for a previously-reported malformed frame.
+    discard: usize,
+}
+
+impl FrameReader {
+    /// A decoder enforcing `max_frame` as the payload-length cap.
+    pub fn new(max_frame: usize) -> FrameReader {
+        FrameReader { buf: Vec::new(), max_frame, discard: 0 }
+    }
+
+    /// Append freshly-read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// True if the buffer holds a partial frame (used at EOF to tell a
+    /// clean close from a truncated one).
+    pub fn is_mid_frame(&self) -> bool {
+        !self.buf.is_empty() || self.discard > 0
+    }
+
+    /// Try to decode the next frame from the buffer.
+    pub fn decode(&mut self) -> Decoded {
+        // finish discarding a previously-reported malformed frame
+        if self.discard > 0 {
+            let n = self.discard.min(self.buf.len());
+            self.buf.drain(..n);
+            self.discard -= n;
+            if self.discard > 0 {
+                return Decoded::Incomplete;
+            }
+        }
+        if self.buf.len() < 4 {
+            return Decoded::Incomplete;
+        }
+        let len = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > self.max_frame {
+            // reject on the declared length alone — don't buffer a
+            // hostile 4 GiB frame waiting for its type byte
+            let err = FrameError::Oversized { len, max: self.max_frame };
+            self.buf.drain(..4);
+            self.discard = 1 + 8 + len; // type + id + payload still inbound
+            return Decoded::Malformed(err);
+        }
+        if self.buf.len() < 5 {
+            return Decoded::Incomplete;
+        }
+        let type_byte = self.buf[4];
+        let Some(frame_type) = FrameType::from_byte(type_byte) else {
+            let err = FrameError::UnknownType(type_byte);
+            self.buf.drain(..5);
+            self.discard = 8 + len; // id + payload still inbound
+            return Decoded::Malformed(err);
+        };
+        if self.buf.len() < HEADER_LEN + len {
+            return Decoded::Incomplete;
+        }
+        let mut id_bytes = [0u8; 8];
+        id_bytes.copy_from_slice(&self.buf[5..13]);
+        let id = u64::from_le_bytes(id_bytes);
+        let payload = self.buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.buf.drain(..HEADER_LEN + len);
+        Decoded::Frame(Frame { frame_type, id, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let types = [
+            FrameType::Hello,
+            FrameType::Request,
+            FrameType::Response,
+            FrameType::Step,
+            FrameType::Cancel,
+            FrameType::Ping,
+            FrameType::Pong,
+            FrameType::Error,
+            FrameType::Credit,
+        ];
+        let mut r = FrameReader::new(MAX_FRAME_LEN);
+        for (i, t) in types.iter().enumerate() {
+            let f = Frame::new(*t, i as u64 + 1, format!("payload-{i}").into_bytes());
+            r.extend(&f.encode());
+            match r.decode() {
+                Decoded::Frame(got) => assert_eq!(got, f),
+                other => panic!("expected frame, got {other:?}"),
+            }
+        }
+        assert_eq!(r.decode(), Decoded::Incomplete);
+        assert!(!r.is_mid_frame());
+    }
+
+    #[test]
+    fn incremental_byte_at_a_time() {
+        let f = Frame::json(
+            FrameType::Request,
+            42,
+            &Json::obj().set("cmd", Json::Str("ping".into())),
+        );
+        let bytes = f.encode();
+        let mut r = FrameReader::new(MAX_FRAME_LEN);
+        for (i, b) in bytes.iter().enumerate() {
+            r.extend(&[*b]);
+            if i + 1 < bytes.len() {
+                assert_eq!(r.decode(), Decoded::Incomplete, "byte {i}");
+                assert!(r.is_mid_frame());
+            }
+        }
+        match r.decode() {
+            Decoded::Frame(got) => assert_eq!(got, f),
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_is_reported_then_skipped() {
+        let mut r = FrameReader::new(64);
+        // header declaring a 1000-byte payload, followed by its bytes,
+        // followed by a valid ping frame
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&1000u32.to_le_bytes());
+        bad.push(FrameType::Request.byte());
+        bad.extend_from_slice(&7u64.to_le_bytes());
+        bad.extend_from_slice(&vec![b'x'; 1000]);
+        let good = Frame::empty(FrameType::Ping, 9);
+        r.extend(&bad);
+        r.extend(&good.encode());
+        match r.decode() {
+            Decoded::Malformed(FrameError::Oversized { len, max }) => {
+                assert_eq!(len, 1000);
+                assert_eq!(max, 64);
+            }
+            other => panic!("expected oversized, got {other:?}"),
+        }
+        // the bad frame's bytes are discarded; the ping decodes next
+        match r.decode() {
+            Decoded::Frame(got) => assert_eq!(got, good),
+            other => panic!("expected ping after skip, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_reported_before_payload_arrives() {
+        let mut r = FrameReader::new(64);
+        // only the 4-byte length prefix has arrived
+        r.extend(&(u32::MAX).to_le_bytes());
+        match r.decode() {
+            Decoded::Malformed(FrameError::Oversized { .. }) => {}
+            other => panic!("expected early oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_type_is_reported_then_skipped() {
+        let mut r = FrameReader::new(MAX_FRAME_LEN);
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&3u32.to_le_bytes());
+        bad.push(99); // no such type
+        bad.extend_from_slice(&5u64.to_le_bytes());
+        bad.extend_from_slice(b"abc");
+        let good = Frame::empty(FrameType::Pong, 6);
+        r.extend(&bad);
+        r.extend(&good.encode());
+        match r.decode() {
+            Decoded::Malformed(FrameError::UnknownType(99)) => {}
+            other => panic!("expected unknown type, got {other:?}"),
+        }
+        match r.decode() {
+            Decoded::Frame(got) => assert_eq!(got, good),
+            other => panic!("expected pong after skip, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_json_roundtrip() {
+        let doc = Json::obj()
+            .set("cmd", Json::Str("generate".into()))
+            .set("steps", Json::Num(8.0));
+        let f = Frame::json(FrameType::Request, 1, &doc);
+        assert_eq!(f.payload_json().unwrap().to_string(), doc.to_string());
+        assert!(Frame::empty(FrameType::Ping, 1).payload_json().is_none());
+    }
+
+    #[test]
+    fn error_messages_are_typed() {
+        let e = FrameError::Oversized { len: 100, max: 10 };
+        assert!(e.to_string().starts_with("frame: "));
+        assert!(FrameError::UnknownType(3).to_string().starts_with("frame: "));
+        assert!(FrameError::Truncated.to_string().starts_with("frame: "));
+    }
+}

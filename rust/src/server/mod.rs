@@ -31,9 +31,24 @@
 //! [`crate::cache::plan::registry`]: the doc's policy table is
 //! generated from it (and pinned by a test), so adding a policy there
 //! is all a new wire value needs.
+//!
+//! The same listener also speaks **protocol v2** (docs/protocol.md
+//! §Protocol v2, docs/adr/008): a connection that opens with the
+//! 4-byte magic `SMC2` is handed to [`mux::handle_conn_v2`], which
+//! multiplexes many concurrent generations over length-prefixed frames
+//! ([`frame`]) with per-connection credit flow control; [`Client2`] is
+//! the pooled production client for it. Any other first byte falls
+//! through to the v1 JSON-lines loop above, so v1 stays the default
+//! and every existing client keeps working.
+
+pub mod client2;
+pub mod frame;
+pub mod mux;
+
+pub use client2::{Client2, Client2Config, Handle};
 
 use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read as _, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -109,8 +124,13 @@ pub fn parse_request(j: &Json) -> Result<(Request, WireOpts)> {
     };
     let cond = if let Some(l) = j.get("label").and_then(|v| v.as_f64()) {
         Cond::Label(vec![l as i32])
-    } else if let Some(p) = j.get("prompt_ids").and_then(|v| v.as_f64_vec()) {
-        Cond::Prompt(p.into_iter().map(|x| x as i32).collect())
+    } else if let Some(p) = j.get("prompt_ids") {
+        // as_f64_vec is all-or-None: a mixed array like [1,"x",3] is a
+        // typed wire error, never a silently-shortened prompt
+        let ids = p.as_f64_vec().ok_or_else(|| {
+            crate::err!("prompt_ids must be an array of numbers, got {}", p.to_string())
+        })?;
+        Cond::Prompt(ids.into_iter().map(|x| x as i32).collect())
     } else {
         return Err(crate::err!("need label or prompt_ids"));
     };
@@ -228,6 +248,42 @@ fn render_result(result: Result<Response>, opts: WireOpts) -> String {
     }
 }
 
+/// Server tuning knobs beyond the listen address (DESIGN.md §3,
+/// docs/protocol.md §Protocol v2).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOpts {
+    /// Size of the connection-handler pool (blocked mostly on socket
+    /// I/O and coordinator replies) — distinct from the coordinator's
+    /// `--workers` executor replicas and the `--threads` GEMM pool.
+    pub conn_threads: usize,
+    /// Per-connection credit window for protocol v2: the number of
+    /// generations one connection may hold in flight before further
+    /// `request` frames are rejected with a typed `overloaded:` error
+    /// (`--conn-inflight`).
+    pub conn_inflight: usize,
+    /// v2 idle-connection reaper: after this long with no inbound
+    /// frames and nothing in flight, the server pings; an unanswered
+    /// ping closes the connection. `Duration::ZERO` disables reaping.
+    pub idle_timeout: Duration,
+    /// Decode cap on a single v2 frame's declared payload length.
+    pub max_frame: usize,
+    /// Refuse v1 JSON-lines connections (`serve --v2`): any first byte
+    /// other than the `SMC2` magic gets an error line and a close.
+    pub v2_only: bool,
+}
+
+impl Default for ServerOpts {
+    fn default() -> ServerOpts {
+        ServerOpts {
+            conn_threads: 4,
+            conn_inflight: 32,
+            idle_timeout: Duration::from_secs(60),
+            max_frame: frame::MAX_FRAME_LEN,
+            v2_only: false,
+        }
+    }
+}
+
 /// A running TCP server.
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -236,13 +292,15 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and serve. `addr` like "127.0.0.1:0" (0 = ephemeral port).
-    ///
-    /// `conn_threads` sizes the *connection-handler* pool (blocked
-    /// mostly on socket I/O and coordinator replies) — distinct from
-    /// the coordinator's `--workers` executor replicas and the
-    /// `--threads` GEMM compute pool (see DESIGN.md §3).
+    /// Bind and serve with default v2 options. `addr` like
+    /// "127.0.0.1:0" (0 = ephemeral port); `conn_threads` as in
+    /// [`ServerOpts::conn_threads`].
     pub fn start(addr: &str, coord: Arc<Coordinator>, conn_threads: usize) -> Result<Server> {
+        Server::start_with(addr, coord, ServerOpts { conn_threads, ..ServerOpts::default() })
+    }
+
+    /// Bind and serve with explicit [`ServerOpts`].
+    pub fn start_with(addr: &str, coord: Arc<Coordinator>, opts: ServerOpts) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -251,7 +309,7 @@ impl Server {
         let handle = std::thread::Builder::new()
             .name("smoothcache-accept".into())
             .spawn(move || {
-                let pool = ThreadPool::new(conn_threads.max(1));
+                let pool = ThreadPool::new(opts.conn_threads.max(1));
                 loop {
                     if stop2.load(Ordering::SeqCst) {
                         break;
@@ -261,7 +319,7 @@ impl Server {
                             let coord = Arc::clone(&coord);
                             let stop3 = Arc::clone(&stop2);
                             pool.execute(move || {
-                                let _ = handle_conn(stream, &coord, &stop3);
+                                let _ = handle_conn(stream, &coord, &stop3, opts);
                             });
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -484,16 +542,89 @@ fn run_generation_inner(
     Ok(true)
 }
 
-fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Result<()> {
+/// Read one byte with the stream's read timeout, re-polling on timeout
+/// until the stop flag is raised. `Ok(None)` means EOF or shutdown.
+fn poll_byte(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<u8>> {
+    let mut one = [0u8; 1];
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match stream.read(&mut one) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(one[0])),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Protocol dispatch: sniff the connection's first byte. `S` (the start
+/// of the `SMC2` magic — v1 lines always open with `{` or whitespace)
+/// routes to the v2 mux handler; anything else replays the byte into
+/// the v1 JSON-lines loop. With [`ServerOpts::v2_only`] the v1 path is
+/// refused with a typed error line instead.
+fn handle_conn(
+    mut stream: TcpStream,
+    coord: &Arc<Coordinator>,
+    stop: &AtomicBool,
+    opts: ServerOpts,
+) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(IDLE_POLL_MS)))?;
+    let Some(first) = poll_byte(&mut stream, stop)? else {
+        return Ok(()); // closed or shutting down before any bytes
+    };
+    if first == frame::MAGIC[0] {
+        // complete the magic before committing to v2
+        let mut rest = [0u8; 3];
+        for slot in rest.iter_mut() {
+            match poll_byte(&mut stream, stop)? {
+                Some(b) => *slot = b,
+                None => return Ok(()),
+            }
+        }
+        if rest != [frame::MAGIC[1], frame::MAGIC[2], frame::MAGIC[3]] {
+            let _ = write_line(&mut stream, &fail("bad magic: expected SMC2 preamble".into()));
+            return Ok(());
+        }
+        return mux::handle_conn_v2(stream, Arc::clone(coord), stop, opts);
+    }
+    if opts.v2_only {
+        let _ = write_line(
+            &mut stream,
+            &fail("this server is v2-only: open with the SMC2 preamble".into()),
+        );
+        return Ok(());
+    }
+    if !first.is_ascii() {
+        let _ = write_line(&mut stream, &fail("bad json: not a JSON-lines stream".into()));
+        return Ok(());
+    }
+    handle_conn_v1(stream, coord, stop, first as char)
+}
+
+/// The v1 JSON-lines connection loop. `first` is the already-sniffed
+/// first byte of the stream, replayed at the front of the line buffer.
+fn handle_conn_v1(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+    first: char,
+) -> Result<()> {
     // Periodic read timeouts let the handler observe the stop flag even
     // while a client holds an idle connection open (otherwise server
     // shutdown would deadlock joining this thread) — and, during a
     // generation, let run_generation watch for disconnects (it tightens
     // the timeout to GEN_POLL_MS for that window).
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(IDLE_POLL_MS)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut read_buf = String::new();
+    // read_line appends, so the sniffed byte stays at the line's front
+    if first != '\n' {
+        read_buf.push(first);
+    }
     let mut pending: VecDeque<String> = VecDeque::new();
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -547,16 +678,51 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
     }
 }
 
+/// Default connect/read/write timeout for both [`Client`] and
+/// [`Client2`]: generous enough for a cold-cache generation reply, but
+/// a dead server produces a typed `timeout:` error instead of a hang.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// Minimal blocking client.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    io_timeout: Option<Duration>,
 }
 
 impl Client {
+    /// Connect with [`DEFAULT_IO_TIMEOUT`] for connect, read and write.
     pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        Client::connect_with(addr, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// Connect with an explicit timeout applied to the TCP connect and
+    /// installed as both the read and write timeout.
+    pub fn connect_with(addr: &std::net::SocketAddr, io_timeout: Duration) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(addr, io_timeout)
+            .map_err(|e| crate::err!("timeout: connect {addr}: {e}"))?;
+        let mut c = Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            io_timeout: None,
+        };
+        c.set_read_timeout(Some(io_timeout))?;
+        c.set_write_timeout(Some(io_timeout))?;
+        Ok(c)
+    }
+
+    /// Bound how long [`Client::call`]/`read_reply` wait for a reply
+    /// line; `None` blocks forever (pre-timeout behavior).
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(t)?;
+        self.io_timeout = t;
+        Ok(())
+    }
+
+    /// Bound how long request writes may block on a full send buffer.
+    pub fn set_write_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.writer.set_write_timeout(t)?;
+        Ok(())
     }
 
     /// Send one JSON value, read one JSON reply.
@@ -569,7 +735,20 @@ impl Client {
 
     fn read_reply(&mut self) -> Result<Json> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        match self.reader.read_line(&mut line) {
+            Ok(0) => return Err(crate::err!("connection closed by server")),
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err(crate::err!(
+                    "timeout: no reply within {:?}",
+                    self.io_timeout.unwrap_or(DEFAULT_IO_TIMEOUT)
+                ));
+            }
+            Err(e) => return Err(e.into()),
+        }
         parse(line.trim()).map_err(|e| crate::err!("bad reply: {e} ({line:?})"))
     }
 
@@ -770,6 +949,21 @@ mod tests {
     fn parse_request_rejects_missing_cond() {
         let j = parse(r#"{"family":"image"}"#).unwrap();
         assert!(parse_request(&j).is_err());
+    }
+
+    #[test]
+    fn parse_request_rejects_mixed_prompt_ids() {
+        // regression: as_f64_vec used to filter_map mixed arrays down
+        // to their numeric elements, silently shortening the prompt
+        for bad in [
+            r#"{"family":"audio","prompt_ids":[1,"x",3]}"#,
+            r#"{"family":"audio","prompt_ids":[1,null]}"#,
+            r#"{"family":"audio","prompt_ids":"1 2 3"}"#,
+        ] {
+            let j = parse(bad).unwrap();
+            let err = parse_request(&j).unwrap_err();
+            assert!(format!("{err}").contains("prompt_ids"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Protocol v2 multiplexed connection handler (docs/protocol.md
+//! §Protocol v2, ADR-008).
+//!
+//! One TCP connection carries many concurrent generations. A single
+//! reader loop decodes [`super::frame`] frames and dispatches them:
+//! control commands are answered inline, generation requests are
+//! admitted against the per-connection credit window
+//! ([`super::ServerOpts::conn_inflight`]) and driven by one worker
+//! thread each through the existing [`Coordinator::submit_opts`]
+//! ticket machinery. All egress — responses, step events, credits,
+//! pongs, protocol errors — goes through a `Mutex`-ordered writer, one
+//! `write_all` per frame, so interleaved streams never corrupt.
+//!
+//! Flow control: every `request` frame costs the client one credit;
+//! the server returns exactly one `credit` frame per answered request
+//! (at generation completion, or immediately for control replies and
+//! rejections). A request arriving with the window full — more than
+//! `conn_inflight` generations already in flight on this connection —
+//! is answered with a typed `overloaded:` error response instead of
+//! growing the queue unboundedly (the coordinator's own admission
+//! control, ADR-002, still applies behind the window).
+//!
+//! Malformed frames (oversized length, unknown type) and protocol
+//! violations (duplicate in-flight id, client-sent server frame types)
+//! are answered with `error` frames and never tear down the
+//! connection's other streams. Keepalive: an idle connection (nothing
+//! in flight, no inbound frames for [`super::ServerOpts::idle_timeout`])
+//! is pinged; an unanswered ping reaps the connection.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, Metrics, Progress, SubmitOpts};
+use crate::util::error::Result;
+use crate::util::json::{parse, scan_str, Json};
+
+use super::frame::{Decoded, Frame, FrameError, FrameReader, FrameType, VERSION};
+use super::{fail, handle_control, parse_request, render_result, step_event, ServerOpts};
+
+/// Read-timeout tick for the v2 reader loop: bounds stop-flag latency,
+/// keepalive granularity and teardown time.
+const POLL_MS: u64 = 50;
+/// Worker reply-poll interval (matches the v1 `GEN_POLL_MS` cadence).
+const REPLY_POLL_MS: u64 = 10;
+
+/// One in-flight generation on this connection, keyed by the
+/// client-chosen request id.
+struct Flight {
+    /// Coordinator-assigned id once the worker has submitted; `None`
+    /// in the submit window (a cancel arriving then sets the flag).
+    coord_id: Option<u64>,
+    /// Cancel requested before the coordinator id was known.
+    cancel_requested: bool,
+}
+
+/// State shared between the reader loop and per-request workers.
+struct ConnShared {
+    coord: Arc<Coordinator>,
+    /// Mutex-ordered egress: exactly one frame per lock hold.
+    writer: Mutex<TcpStream>,
+    /// In-flight generations by wire id (its size *is* the window).
+    inflight: Mutex<HashMap<u64, Flight>>,
+    /// Set on socket error / teardown; workers drop their work.
+    dead: AtomicBool,
+}
+
+impl ConnShared {
+    /// Serialize one frame onto the connection. Returns `false` (and
+    /// marks the connection dead) if the peer is gone.
+    fn send(&self, f: &Frame) -> bool {
+        if self.dead.load(Ordering::SeqCst) {
+            return false;
+        }
+        let mut w = self.writer.lock().unwrap();
+        let ok = f.write_to(&mut *w).and_then(|_| w.flush()).is_ok();
+        if !ok {
+            self.dead.store(true, Ordering::SeqCst);
+        }
+        ok
+    }
+
+    /// An `error` frame: protocol-level notice that never resolves a
+    /// request handle (terminal outcomes are `response` frames).
+    fn send_error(&self, id: u64, msg: &str) -> bool {
+        let payload = Json::obj().set("ok", false).set("error", msg);
+        self.send(&Frame::json(FrameType::Error, id, &payload))
+    }
+
+    /// Terminal `response` frame followed by the credit replenishing
+    /// the request's window slot.
+    fn send_response(&self, id: u64, body: &str) -> bool {
+        let ok = self.send(&Frame::new(FrameType::Response, id, body.as_bytes().to_vec()));
+        ok && self.send(&Frame::empty(FrameType::Credit, id))
+    }
+}
+
+/// Drive one v2 connection to completion. Called by the server's
+/// dispatcher after the `SMC2` magic has been consumed.
+pub fn handle_conn_v2(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    stop: &AtomicBool,
+    opts: ServerOpts,
+) -> Result<()> {
+    Metrics::inc(&coord.metrics().v2_connections);
+    stream.set_read_timeout(Some(Duration::from_millis(POLL_MS)))?;
+    let mut sock = stream.try_clone()?;
+    let shared = Arc::new(ConnShared {
+        coord,
+        writer: Mutex::new(stream),
+        inflight: Mutex::new(HashMap::new()),
+        dead: AtomicBool::new(false),
+    });
+    let mut reader = FrameReader::new(opts.max_frame);
+    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut buf = [0u8; 8192];
+    let mut last_inbound = Instant::now();
+    let mut pinged_at: Option<Instant> = None;
+    let mut hello_done = false;
+
+    'conn: loop {
+        if stop.load(Ordering::SeqCst) || shared.dead.load(Ordering::SeqCst) {
+            break;
+        }
+        match sock.read(&mut buf) {
+            Ok(0) => {
+                if reader.is_mid_frame() {
+                    // truncated mid-frame: best-effort typed notice for
+                    // a peer that half-closed its write side
+                    shared.send_error(0, &FrameError::Truncated.to_string());
+                }
+                break;
+            }
+            Ok(n) => {
+                reader.extend(&buf[..n]);
+                last_inbound = Instant::now();
+                pinged_at = None;
+                loop {
+                    match reader.decode() {
+                        Decoded::Incomplete => break,
+                        Decoded::Malformed(e) => {
+                            // the decoder skips the bad frame's extent;
+                            // other streams on this connection survive
+                            shared.send_error(0, &e.to_string());
+                        }
+                        Decoded::Frame(f) => {
+                            if !hello_done {
+                                if !handshake(&shared, &f, opts) {
+                                    break 'conn;
+                                }
+                                hello_done = true;
+                                continue;
+                            }
+                            dispatch(&shared, f, stop, opts, &mut workers);
+                        }
+                    }
+                }
+                workers.retain(|h| !h.is_finished());
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // idle tick: keepalive / reaper bookkeeping
+                if opts.idle_timeout > Duration::ZERO
+                    && shared.inflight.lock().unwrap().is_empty()
+                {
+                    let grace = opts.idle_timeout.min(Duration::from_secs(5));
+                    match pinged_at {
+                        None if last_inbound.elapsed() >= opts.idle_timeout => {
+                            shared.send(&Frame::empty(FrameType::Ping, 0));
+                            pinged_at = Some(Instant::now());
+                        }
+                        Some(t) if t.elapsed() >= grace => break, // reap
+                        _ => {}
+                    }
+                }
+            }
+            Err(_) => break,
+        }
+    }
+
+    // teardown: nobody is left to read results — stop in-flight work at
+    // the next solver step and let workers observe the dead flag
+    shared.dead.store(true, Ordering::SeqCst);
+    {
+        let inflight = shared.inflight.lock().unwrap();
+        for flight in inflight.values() {
+            if let Some(cid) = flight.coord_id {
+                shared.coord.cancel(cid);
+            }
+        }
+    }
+    for h in workers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Version negotiation: the first frame must be `hello` with a
+/// `version` we speak. Replies with the server hello carrying the
+/// negotiated version and the connection's credit window.
+fn handshake(shared: &ConnShared, f: &Frame, opts: ServerOpts) -> bool {
+    if f.frame_type != FrameType::Hello {
+        shared.send_error(f.id, "protocol: expected hello as the first frame");
+        return false;
+    }
+    let version = crate::util::json::scan_u64(f.payload_str(), "version").unwrap_or(0);
+    if version != VERSION {
+        shared.send_error(f.id, &format!("protocol: unsupported version {version} (want {VERSION})"));
+        return false;
+    }
+    let reply = Json::obj()
+        .set("version", VERSION)
+        .set("credits", opts.conn_inflight);
+    shared.send(&Frame::json(FrameType::Hello, f.id, &reply))
+}
+
+/// Route one post-handshake frame.
+fn dispatch(
+    shared: &Arc<ConnShared>,
+    f: Frame,
+    stop: &AtomicBool,
+    opts: ServerOpts,
+    workers: &mut Vec<std::thread::JoinHandle<()>>,
+) {
+    match f.frame_type {
+        FrameType::Request => handle_request(shared, f, stop, opts, workers),
+        FrameType::Cancel => {
+            // best-effort, no ack: the cancelled request still gets its
+            // exactly-one terminal response (a `cancelled:` error)
+            let mut inflight = shared.inflight.lock().unwrap();
+            if let Some(flight) = inflight.get_mut(&f.id) {
+                match flight.coord_id {
+                    Some(cid) => {
+                        shared.coord.cancel(cid);
+                    }
+                    None => flight.cancel_requested = true,
+                }
+            }
+        }
+        FrameType::Ping => {
+            shared.send(&Frame::empty(FrameType::Pong, f.id));
+        }
+        FrameType::Pong => {} // any inbound frame already reset the reaper
+        FrameType::Hello => {
+            shared.send_error(f.id, "protocol: unexpected hello after negotiation");
+        }
+        FrameType::Response | FrameType::Step | FrameType::Error | FrameType::Credit => {
+            shared.send_error(
+                f.id,
+                &format!("protocol: unexpected {} frame from client", f.frame_type.name()),
+            );
+        }
+    }
+}
+
+/// Admit one `request` frame: control commands inline, generations
+/// against the credit window then onto a worker thread.
+fn handle_request(
+    shared: &Arc<ConnShared>,
+    f: Frame,
+    stop: &AtomicBool,
+    opts: ServerOpts,
+    workers: &mut Vec<std::thread::JoinHandle<()>>,
+) {
+    let payload = f.payload_str();
+    // lazy envelope scan: control commands are identified (and
+    // generation requests passed through) without building the tree
+    if scan_str(payload, "cmd").is_some() {
+        let reply = match parse(payload) {
+            Ok(j) => handle_control(&shared.coord, &j, stop)
+                .unwrap_or_else(|| fail("cmd must be a string".into())),
+            Err(e) => fail(format!("bad json: {e}")),
+        };
+        shared.send_response(f.id, &reply);
+        return;
+    }
+    {
+        let mut inflight = shared.inflight.lock().unwrap();
+        if inflight.contains_key(&f.id) {
+            // must NOT resolve the original request's handle: answered
+            // as a protocol error frame, not a response
+            shared.send_error(f.id, &format!("duplicate in-flight request id {}", f.id));
+            // the duplicate frame still cost the sender a credit
+            shared.send(&Frame::empty(FrameType::Credit, f.id));
+            return;
+        }
+        if inflight.len() >= opts.conn_inflight {
+            Metrics::inc(&shared.coord.metrics().v2_credit_rejections);
+            let msg = format!(
+                "overloaded: connection credit window exhausted \
+                 ({} in flight, window {})",
+                inflight.len(),
+                opts.conn_inflight
+            );
+            let body = Json::obj()
+                .set("ok", false)
+                .set("overloaded", true)
+                .set("error", msg)
+                .to_string();
+            shared.send_response(f.id, &body);
+            return;
+        }
+        inflight.insert(f.id, Flight { coord_id: None, cancel_requested: false });
+    }
+    let shared2 = Arc::clone(shared);
+    let handle = std::thread::Builder::new()
+        .name(format!("smc-v2-req-{}", f.id))
+        .spawn(move || run_request(&shared2, f.id, f.payload))
+        .expect("spawn v2 request worker");
+    workers.push(handle);
+}
+
+/// Drive one generation: parse → submit → stream steps → terminal
+/// response → remove from the window → credit. Exactly one `response`
+/// frame per request id on every path.
+fn run_request(shared: &ConnShared, id: u64, payload: Vec<u8>) {
+    let done = |body: &str| {
+        shared.inflight.lock().unwrap().remove(&id);
+        shared.send_response(id, body);
+    };
+    let j = match std::str::from_utf8(&payload).map_err(|e| e.to_string()).and_then(|s| {
+        parse(s).map_err(|e| format!("bad json: {e}"))
+    }) {
+        Ok(j) => j,
+        Err(e) => return done(&fail(e)),
+    };
+    let (request, wire_opts) = match parse_request(&j) {
+        Ok(x) => x,
+        Err(e) => return done(&fail(format!("{e}"))),
+    };
+    let (progress, progress_rx): (Option<_>, Option<Receiver<Progress>>) = if wire_opts.stream {
+        let (tx, rx) = channel();
+        (Some(tx), Some(rx))
+    } else {
+        (None, None)
+    };
+    let ticket = shared
+        .coord
+        .submit_opts(request, SubmitOpts { progress, deadline: wire_opts.deadline() });
+    // publish the coordinator id; honor a cancel that raced submission
+    {
+        let mut inflight = shared.inflight.lock().unwrap();
+        match inflight.get_mut(&id) {
+            Some(flight) => {
+                flight.coord_id = Some(ticket.id);
+                if flight.cancel_requested {
+                    shared.coord.cancel(ticket.id);
+                }
+            }
+            None => {
+                // connection torn down during submit
+                shared.coord.cancel(ticket.id);
+                return;
+            }
+        }
+    }
+    if wire_opts.stream {
+        let accepted = Json::obj().set("event", "accepted").set("ok", true).set("id", id);
+        shared.send(&Frame::json(FrameType::Step, id, &accepted));
+    }
+    let result = loop {
+        if let Some(rx) = &progress_rx {
+            while let Ok(p) = rx.try_recv() {
+                shared.send(&Frame::json(FrameType::Step, id, &step_event(id, &p)));
+            }
+        }
+        if shared.dead.load(Ordering::SeqCst) {
+            shared.coord.cancel(ticket.id);
+            // drain the terminal reply so the coordinator's answered-
+            // exactly-once accounting is preserved, then drop it
+            let _ = ticket.reply.recv_timeout(Duration::from_secs(5));
+            shared.inflight.lock().unwrap().remove(&id);
+            return;
+        }
+        match ticket.reply.recv_timeout(Duration::from_millis(REPLY_POLL_MS)) {
+            Ok(r) => break r,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break Err(crate::err!("coordinator shut down")),
+        }
+    };
+    // step events that raced the final reply keep their order: they are
+    // flushed before the terminal response frame
+    if let Some(rx) = &progress_rx {
+        while let Ok(p) = rx.try_recv() {
+            shared.send(&Frame::json(FrameType::Step, id, &step_event(id, &p)));
+        }
+    }
+    done(&render_result(result, wire_opts));
+}

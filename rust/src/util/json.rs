@@ -120,17 +120,25 @@ impl Json {
         matches!(self, Json::Null)
     }
 
-    /// Convenience: array of f64.
+    /// Convenience: array of f64. `None` unless the value is an array
+    /// and *every* element is numeric — a mixed-type array like
+    /// `[1, "x", 3]` is rejected whole rather than silently dropping
+    /// the non-numeric elements, so wire callers surface a typed error
+    /// instead of acting on a shortened vector.
     pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
-        self.as_arr().map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
 
+    /// Array of f32 under the same all-or-`None` rule as
+    /// [`Json::as_f64_vec`].
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
-        self.as_arr().map(|a| a.iter().filter_map(|v| v.as_f64().map(|x| x as f32)).collect())
+        self.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as f32)).collect()
     }
 
+    /// Array of usize under the same all-or-`None` rule as
+    /// [`Json::as_f64_vec`].
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
-        self.as_arr().map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
     // ---- serialization -----------------------------------------------------
@@ -499,6 +507,185 @@ fn utf8_len(b: u8) -> usize {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lazy field scanner (protocol v2 hot path, ADR-008)
+// ---------------------------------------------------------------------------
+
+/// A top-level field value found by [`scan_field`] without building a
+/// tree. String values borrow from the input document.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scanned<'a> {
+    /// String value containing no escapes (zero-copy slice).
+    Str(&'a str),
+    /// Numeric value.
+    Num(f64),
+    /// Boolean value.
+    Bool(bool),
+    /// `null`.
+    Null,
+    /// Present, but an object/array or an escaped string — callers
+    /// needing it should fall back to the full [`parse`].
+    Complex,
+}
+
+/// Extract one top-level field of a JSON object without allocating or
+/// building the full value tree.
+///
+/// Walks the object's top level, skipping non-matching values
+/// (strings escape-aware, nested containers by depth counting), and
+/// returns the matching value as a [`Scanned`]. Keys inside nested
+/// objects and text inside string values are never matched. Returns
+/// `None` if the document is not an object, the key is absent, or the
+/// input is malformed before the key is found — callers on the wire
+/// path fall back to [`parse`] for the authoritative error.
+///
+/// This is the envelope fast path for protocol v2 (`cmd`/`id`/
+/// `stream` extraction): ~one linear scan, zero allocations, versus a
+/// full tree build that copies every string and number in the request.
+pub fn scan_field<'a>(doc: &'a str, key: &str) -> Option<Scanned<'a>> {
+    let b = doc.as_bytes();
+    let mut i = 0usize;
+    let skip_ws = |b: &[u8], mut i: usize| {
+        while i < b.len() && matches!(b[i], b' ' | b'\t' | b'\n' | b'\r') {
+            i += 1;
+        }
+        i
+    };
+    // raw string scan: returns (content_start, content_end, had_escape,
+    // index after closing quote); input index must sit on the `"`.
+    let scan_string = |b: &[u8], mut i: usize| -> Option<(usize, usize, bool, usize)> {
+        if b.get(i) != Some(&b'"') {
+            return None;
+        }
+        i += 1;
+        let start = i;
+        let mut escaped = false;
+        while i < b.len() {
+            match b[i] {
+                b'"' => return Some((start, i, escaped, i + 1)),
+                b'\\' => {
+                    escaped = true;
+                    i += 2; // skip the escaped byte (\uXXXX still lands inside hex, fine)
+                }
+                _ => i += 1,
+            }
+        }
+        None
+    };
+    // skip one value of any shape; returns index just past it.
+    let skip_value = |b: &[u8], mut i: usize| -> Option<usize> {
+        match *b.get(i)? {
+            b'"' => scan_string(b, i).map(|(_, _, _, after)| after),
+            b'{' | b'[' => {
+                let mut depth = 0usize;
+                while i < b.len() {
+                    match b[i] {
+                        b'{' | b'[' => depth += 1,
+                        b'}' | b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return Some(i + 1);
+                            }
+                        }
+                        b'"' => {
+                            let (_, _, _, after) = scan_string(b, i)?;
+                            i = after;
+                            continue;
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                None
+            }
+            _ => {
+                // number / true / false / null: run to a delimiter
+                let start = i;
+                while i < b.len() && !matches!(b[i], b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r')
+                {
+                    i += 1;
+                }
+                if i == start {
+                    None
+                } else {
+                    Some(i)
+                }
+            }
+        }
+    };
+
+    i = skip_ws(b, i);
+    if b.get(i) != Some(&b'{') {
+        return None;
+    }
+    i = skip_ws(b, i + 1);
+    if b.get(i) == Some(&b'}') {
+        return None;
+    }
+    loop {
+        // key
+        let (ks, ke, kesc, after) = scan_string(b, i)?;
+        let matches = !kesc && &doc[ks..ke] == key;
+        i = skip_ws(b, after);
+        if b.get(i) != Some(&b':') {
+            return None;
+        }
+        i = skip_ws(b, i + 1);
+        if matches {
+            return match *b.get(i)? {
+                b'"' => {
+                    let (vs, ve, vesc, _) = scan_string(b, i)?;
+                    if vesc {
+                        Some(Scanned::Complex)
+                    } else {
+                        Some(Scanned::Str(&doc[vs..ve]))
+                    }
+                }
+                b'{' | b'[' => Some(Scanned::Complex),
+                b't' => b[i..].starts_with(b"true").then_some(Scanned::Bool(true)),
+                b'f' => b[i..].starts_with(b"false").then_some(Scanned::Bool(false)),
+                b'n' => b[i..].starts_with(b"null").then_some(Scanned::Null),
+                _ => {
+                    let end = skip_value(b, i)?;
+                    doc[i..end].parse::<f64>().ok().map(Scanned::Num)
+                }
+            };
+        }
+        i = skip_value(b, i)?;
+        i = skip_ws(b, i);
+        match b.get(i)? {
+            b',' => i = skip_ws(b, i + 1),
+            b'}' => return None,
+            _ => return None,
+        }
+    }
+}
+
+/// [`scan_field`] narrowed to unescaped string values.
+pub fn scan_str<'a>(doc: &'a str, key: &str) -> Option<&'a str> {
+    match scan_field(doc, key)? {
+        Scanned::Str(s) => Some(s),
+        _ => None,
+    }
+}
+
+/// [`scan_field`] narrowed to lossless unsigned integers (same rule as
+/// [`Json::as_u64`]).
+pub fn scan_u64(doc: &str, key: &str) -> Option<u64> {
+    match scan_field(doc, key)? {
+        Scanned::Num(n) => Json::Num(n).as_u64(),
+        _ => None,
+    }
+}
+
+/// [`scan_field`] narrowed to booleans.
+pub fn scan_bool(doc: &str, key: &str) -> Option<bool> {
+    match scan_field(doc, key)? {
+        Scanned::Bool(v) => Some(v),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -593,5 +780,97 @@ mod tests {
         let v = parse("[1, 2, 3]").unwrap();
         assert_eq!(v.as_usize_vec().unwrap(), vec![1, 2, 3]);
         assert_eq!(v.as_f32_vec().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn helper_vectors_reject_mixed_types() {
+        // regression: filter_map used to silently drop the "x",
+        // returning [1, 3] — mixed arrays must be rejected whole
+        let v = parse(r#"[1, "x", 3]"#).unwrap();
+        assert_eq!(v.as_f64_vec(), None);
+        assert_eq!(v.as_f32_vec(), None);
+        assert_eq!(v.as_usize_vec(), None);
+        for bad in [r#"[null]"#, r#"[1, true]"#, r#"[[1], 2]"#, r#"[1, {}]"#] {
+            let v = parse(bad).unwrap();
+            assert_eq!(v.as_f64_vec(), None, "{bad}");
+            assert_eq!(v.as_usize_vec(), None, "{bad}");
+        }
+        // non-arrays and empty arrays keep their existing behavior
+        assert_eq!(parse("3").unwrap().as_f64_vec(), None);
+        assert_eq!(parse("[]").unwrap().as_f64_vec(), Some(vec![]));
+    }
+
+    #[test]
+    fn scan_field_basics() {
+        let doc = r#"{"cmd": "generate", "id": 42, "stream": true, "x": null}"#;
+        assert_eq!(scan_field(doc, "cmd"), Some(Scanned::Str("generate")));
+        assert_eq!(scan_field(doc, "id"), Some(Scanned::Num(42.0)));
+        assert_eq!(scan_field(doc, "stream"), Some(Scanned::Bool(true)));
+        assert_eq!(scan_field(doc, "x"), Some(Scanned::Null));
+        assert_eq!(scan_field(doc, "missing"), None);
+        assert_eq!(scan_str(doc, "cmd"), Some("generate"));
+        assert_eq!(scan_u64(doc, "id"), Some(42));
+        assert_eq!(scan_bool(doc, "stream"), Some(true));
+    }
+
+    #[test]
+    fn scan_field_top_level_only() {
+        // a key nested inside another value must not match
+        let doc = r#"{"a": {"cmd": "inner"}, "b": [{"cmd": "deep"}], "cmd": "outer"}"#;
+        assert_eq!(scan_field(doc, "cmd"), Some(Scanned::Str("outer")));
+        // text inside a string value must not match either
+        let doc = r#"{"a": "\"cmd\": \"fake\"", "cmd": "real"}"#;
+        assert_eq!(scan_field(doc, "cmd"), Some(Scanned::Str("real")));
+    }
+
+    #[test]
+    fn scan_field_complex_values() {
+        let doc = r#"{"obj": {"k": 1}, "arr": [1,2], "esc": "a\nb"}"#;
+        assert_eq!(scan_field(doc, "obj"), Some(Scanned::Complex));
+        assert_eq!(scan_field(doc, "arr"), Some(Scanned::Complex));
+        // escaped strings defer to the full parser rather than
+        // allocating an unescape buffer
+        assert_eq!(scan_field(doc, "esc"), Some(Scanned::Complex));
+        assert_eq!(scan_str(doc, "esc"), None);
+    }
+
+    #[test]
+    fn scan_field_rejects_garbage() {
+        for bad in ["", "42", "[1,2]", "{", r#"{"a""#, r#"{"a": }"#, "not json"] {
+            assert_eq!(scan_field(bad, "a"), None, "{bad:?}");
+        }
+        // truncated after the key we want → malformed value → None
+        assert_eq!(scan_field(r#"{"cmd": "unterminated"#, "cmd"), None);
+    }
+
+    #[test]
+    fn scan_field_matches_full_parse() {
+        // parity corpus: the scanner must agree with the tree parser
+        let docs = [
+            r#"{"cmd":"ping","id":7,"stream":false}"#,
+            r#"{ "id" : 9007199254740991 , "cmd" : "metrics" }"#,
+            r#"{"deadline_ms": 1500.5, "policy": "smooth:0.1", "n": -3}"#,
+            r#"{"a":[{"id":1}],"id":2,"b":"id","c":{"x":[1,2,{"y":"z"}]}}"#,
+        ];
+        for doc in docs {
+            let tree = parse(doc).unwrap();
+            for key in ["cmd", "id", "stream", "deadline_ms", "policy", "n", "b"] {
+                let scanned = scan_field(doc, key);
+                match tree.get(key) {
+                    None => assert_eq!(scanned, None, "{doc} / {key}"),
+                    Some(Json::Str(s)) => {
+                        assert_eq!(scanned, Some(Scanned::Str(s.as_str())), "{doc} / {key}")
+                    }
+                    Some(Json::Num(n)) => {
+                        assert_eq!(scanned, Some(Scanned::Num(*n)), "{doc} / {key}")
+                    }
+                    Some(Json::Bool(v)) => {
+                        assert_eq!(scanned, Some(Scanned::Bool(*v)), "{doc} / {key}")
+                    }
+                    Some(Json::Null) => assert_eq!(scanned, Some(Scanned::Null)),
+                    Some(_) => assert_eq!(scanned, Some(Scanned::Complex), "{doc} / {key}"),
+                }
+            }
+        }
     }
 }

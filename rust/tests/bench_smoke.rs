@@ -16,12 +16,17 @@ use smoothcache::util::bench::report::BenchReport;
 static BENCH_GATE: Mutex<()> = Mutex::new(());
 
 fn run_smoke(exe: &str, name: &str, area: &str, required: &[&str]) {
+    run_smoke_with(exe, name, &[], area, required);
+}
+
+fn run_smoke_with(exe: &str, name: &str, extra_args: &[&str], area: &str, required: &[&str]) {
     let _gate = BENCH_GATE.lock().unwrap_or_else(|e| e.into_inner());
     let json_path = std::env::temp_dir()
         .join(format!("smoothcache_smoke_{}_{name}.json", std::process::id()));
     let json_path = json_path.to_string_lossy().into_owned();
     let out = Command::new(exe)
         .args(["--smoke", "--json", &json_path])
+        .args(extra_args)
         .output()
         .unwrap_or_else(|e| panic!("spawn {name}: {e}"));
     assert!(
@@ -61,6 +66,7 @@ fn smoke_perf_engine() {
             "generate_fora2_mean_us",
             "session_overhead_x",
             "sched_speedup_dense_vs_map_x",
+            "json_scan/speedup_x",
             "threads_speedup_4t_v_1t_x",
             "compute:simd/ffn_speedup_x",
             "compute:f32/forward_b1_mean_us",
@@ -92,6 +98,25 @@ fn smoke_e2e_serving() {
             "fora:2/speedup_vs_no_cache_x",
             "smooth:0.25/skip_pct",
             "drift:0.35/qwait_mean_s",
+        ],
+    );
+}
+
+#[test]
+fn smoke_e2e_serving_mux() {
+    // the protocol-v2 multiplexing lane (ADR-008) reports its own area
+    run_smoke_with(
+        env!("CARGO_BIN_EXE_e2e_serving"),
+        "e2e_serving_mux",
+        &["--mux", "4", "--workers", "2"],
+        "serving_mux",
+        &[
+            "mux_speedup_x",
+            "v1_serial_wall_s",
+            "v2_mux_wall_s",
+            "v2_throughput_rps",
+            "worst_stream_p99_ms",
+            "served",
         ],
     );
 }

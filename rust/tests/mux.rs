@@ -1,0 +1,465 @@
+//! Protocol v2 integration (ISSUE 9): one framed connection carrying
+//! many concurrent generations with interleaved step streams, bitwise
+//! parity with v1, exactly-once responses, credit-window flow control,
+//! v1/v2 coexistence on one listener, malformed-frame recovery, typed
+//! client timeouts against a dead server, and `Client2` reconnects.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig};
+use smoothcache::server::frame::{Decoded, Frame, FrameReader, FrameType, MAGIC, MAX_FRAME_LEN};
+use smoothcache::server::{Client, Client2, Client2Config, Server, ServerOpts};
+use smoothcache::util::json::Json;
+
+fn coord() -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(10);
+    cfg.calib_samples = 2;
+    Coordinator::start(cfg).expect("coordinator")
+}
+
+/// A generation request envelope keyed only by `seed`, so v1 and v2
+/// paths can be compared bitwise.
+fn gen_req(seed: u64) -> Json {
+    Json::obj()
+        .set("family", "image")
+        .set("label", (seed % 10) as f64)
+        .set("steps", 6usize)
+        .set("solver", "ddim")
+        .set("policy", "fora:2")
+        .set("seed", seed)
+        .set("return_latent", true)
+}
+
+/// Minimal frame-level v2 client for protocol tests: performs the
+/// `SMC2` + hello handshake and exchanges raw frames.
+struct RawV2 {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+impl RawV2 {
+    fn handshake(addr: &SocketAddr) -> RawV2 {
+        RawV2::handshake_with_credits(addr).0
+    }
+
+    /// Handshake, also returning the server-announced credit window.
+    fn handshake_with_credits(addr: &SocketAddr) -> (RawV2, u64) {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        stream.write_all(&MAGIC).unwrap();
+        Frame::json(FrameType::Hello, 0, &Json::obj().set("version", 2usize))
+            .write_to(&mut stream)
+            .unwrap();
+        stream.flush().unwrap();
+        let mut raw = RawV2 { stream, reader: FrameReader::new(MAX_FRAME_LEN) };
+        let hello = raw.read_frame(Duration::from_secs(120));
+        assert_eq!(hello.frame_type, FrameType::Hello, "{hello:?}");
+        let body = hello.payload_json().expect("hello payload");
+        let credits = body.get("credits").and_then(|v| v.as_u64()).expect("credits");
+        assert_eq!(body.get("version").and_then(|v| v.as_u64()), Some(2));
+        (raw, credits)
+    }
+
+    fn send(&mut self, f: &Frame) {
+        f.write_to(&mut self.stream).unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn read_frame(&mut self, timeout: Duration) -> Frame {
+        let t0 = Instant::now();
+        loop {
+            match self.reader.decode() {
+                Decoded::Frame(f) => return f,
+                Decoded::Malformed(e) => panic!("malformed frame from server: {e}"),
+                Decoded::Incomplete => {}
+            }
+            assert!(t0.elapsed() < timeout, "no frame within {timeout:?}");
+            let mut buf = [0u8; 8192];
+            match self.stream.read(&mut buf) {
+                Ok(0) => panic!("connection closed while waiting for a frame"),
+                Ok(n) => self.reader.extend(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+                Err(e) => panic!("read: {e}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn one_v2_connection_multiplexes_streams_with_v1_parity_and_exactly_once() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    const STREAMS: u64 = 8;
+
+    // v1 reference latents, serially, one seed per stream
+    let mut references = Vec::new();
+    {
+        let mut v1 = Client::connect(&server.addr).expect("v1 client");
+        for seed in 0..STREAMS {
+            let resp = v1.call(&gen_req(seed)).expect("v1 call");
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+            references.push(resp.get("latent").unwrap().as_f32_vec().unwrap());
+        }
+    } // drop v1: frees its connection-handler slot
+
+    // the same 8 generations concurrently over ONE v2 connection
+    let (mut v2, credits) = RawV2::handshake_with_credits(&server.addr);
+    assert_eq!(credits, 32, "default --conn-inflight window");
+    for seed in 0..STREAMS {
+        let req = gen_req(seed).set("stream", true);
+        v2.send(&Frame::json(FrameType::Request, seed + 1, &req));
+    }
+
+    let mut responses: std::collections::HashMap<u64, Json> = Default::default();
+    let mut steps_per_id: std::collections::HashMap<u64, u64> = Default::default();
+    let mut ids_stepped_before_first_response = std::collections::HashSet::new();
+    let mut credits_returned = 0u64;
+    while responses.len() < STREAMS as usize {
+        let f = v2.read_frame(Duration::from_secs(120));
+        match f.frame_type {
+            FrameType::Step => {
+                let ev = f.payload_json().expect("step payload");
+                if ev.get("event").and_then(|v| v.as_str()) == Some("step") {
+                    *steps_per_id.entry(f.id).or_insert(0) += 1;
+                    if responses.is_empty() {
+                        ids_stepped_before_first_response.insert(f.id);
+                    }
+                }
+            }
+            FrameType::Response => {
+                let body = f.payload_json().expect("response payload");
+                assert_eq!(body.get("ok").unwrap().as_bool(), Some(true), "{body:?}");
+                let prev = responses.insert(f.id, body);
+                assert!(prev.is_none(), "duplicate response for id {}", f.id);
+            }
+            FrameType::Credit => credits_returned += 1,
+            other => panic!("unexpected {other:?} frame: {f:?}"),
+        }
+    }
+    // drain trailing credit frames (the terminal response for the last
+    // stream can arrive just before its credit)
+    while credits_returned < STREAMS {
+        let f = v2.read_frame(Duration::from_secs(120));
+        assert_eq!(f.frame_type, FrameType::Credit, "{f:?}");
+        credits_returned += 1;
+    }
+
+    // exactly-once terminal responses, ≥1 step event per stream, and
+    // demonstrably interleaved streams on the shared connection
+    assert_eq!(responses.len() as u64, STREAMS);
+    assert_eq!(credits_returned, STREAMS, "one credit per answered request");
+    for id in 1..=STREAMS {
+        assert!(steps_per_id.get(&id).copied().unwrap_or(0) >= 1, "no steps for id {id}");
+    }
+    assert!(
+        ids_stepped_before_first_response.len() >= 2,
+        "step streams never interleaved: {ids_stepped_before_first_response:?}"
+    );
+
+    // bitwise parity with the v1 serial references
+    for id in 1..=STREAMS {
+        let body = &responses[&id];
+        let latent = body.get("latent").unwrap().as_f32_vec().unwrap();
+        assert_eq!(
+            latent,
+            references[(id - 1) as usize],
+            "v2 stream {id} diverged from its v1 reference"
+        );
+    }
+    server.stop();
+}
+
+#[test]
+fn credit_window_rejects_excess_requests_and_replenishes() {
+    let c = Arc::new(coord());
+    let opts = ServerOpts { conn_threads: 2, conn_inflight: 2, ..ServerOpts::default() };
+    let server = Server::start_with("127.0.0.1:0", Arc::clone(&c), opts).expect("server");
+    let (mut v2, credits) = RawV2::handshake_with_credits(&server.addr);
+    assert_eq!(credits, 2, "hello must announce the configured window");
+
+    // two slow generations fill the window; frames are dispatched in
+    // order, so the third request deterministically sees it full
+    let slow = Json::obj()
+        .set("family", "image")
+        .set("label", 1.0)
+        .set("steps", 200usize)
+        .set("policy", "no-cache")
+        .set("seed", 3u64);
+    v2.send(&Frame::json(FrameType::Request, 1, &slow));
+    v2.send(&Frame::json(FrameType::Request, 2, &slow.clone().set("seed", 4u64)));
+    v2.send(&Frame::json(FrameType::Request, 3, &gen_req(5)));
+
+    let mut rejected: Option<Json> = None;
+    let mut completed = std::collections::HashSet::new();
+    let mut credits_returned = 0u64;
+    while credits_returned < 3 {
+        let f = v2.read_frame(Duration::from_secs(120));
+        match f.frame_type {
+            FrameType::Response => {
+                let body = f.payload_json().expect("response payload");
+                if f.id == 3 {
+                    rejected = Some(body);
+                } else {
+                    assert_eq!(body.get("ok").unwrap().as_bool(), Some(true), "{body:?}");
+                    completed.insert(f.id);
+                }
+            }
+            FrameType::Credit => credits_returned += 1,
+            FrameType::Step => {}
+            other => panic!("unexpected {other:?} frame: {f:?}"),
+        }
+    }
+    let rejected = rejected.expect("request 3 never answered");
+    assert_eq!(rejected.get("ok").unwrap().as_bool(), Some(false), "{rejected:?}");
+    assert_eq!(rejected.get("overloaded").and_then(|v| v.as_bool()), Some(true), "{rejected:?}");
+    let msg = rejected.get("error").and_then(|v| v.as_str()).unwrap_or("");
+    assert!(msg.starts_with("overloaded:"), "typed overload error, got {msg:?}");
+    let expect: std::collections::HashSet<u64> = [1, 2].into_iter().collect();
+    assert_eq!(completed, expect, "window occupants must finish");
+
+    // every credit came back, so the window accepts new work again
+    v2.send(&Frame::json(FrameType::Request, 4, &gen_req(6)));
+    loop {
+        let f = v2.read_frame(Duration::from_secs(120));
+        if f.frame_type == FrameType::Response {
+            assert_eq!(f.id, 4);
+            let body = f.payload_json().expect("response payload");
+            assert_eq!(body.get("ok").unwrap().as_bool(), Some(true), "{body:?}");
+            break;
+        }
+    }
+    server.stop();
+}
+
+#[test]
+fn client2_enforces_its_credit_window_with_typed_errors() {
+    let c = Arc::new(coord());
+    let opts = ServerOpts { conn_threads: 2, conn_inflight: 1, ..ServerOpts::default() };
+    let server = Server::start_with("127.0.0.1:0", Arc::clone(&c), opts).expect("server");
+    let v2 = Client2::connect(&server.addr).expect("client2");
+
+    // occupy the single-slot window with a long generation...
+    let long = Json::obj()
+        .set("family", "image")
+        .set("label", 1.0)
+        .set("steps", 2000usize)
+        .set("policy", "no-cache")
+        .set("seed", 3u64);
+    let handle = v2.submit(&long).expect("submit");
+    // ...so the next submit is refused client-side, before any bytes
+    // hit the wire
+    let err = v2.submit(&gen_req(1)).expect_err("window is full");
+    assert!(err.to_string().starts_with("overloaded:"), "{err}");
+
+    // cancelling the occupant returns the credit and unblocks the window
+    handle.cancel();
+    let outcome = handle.wait().expect("terminal response");
+    assert_eq!(outcome.get("ok").unwrap().as_bool(), Some(false), "{outcome:?}");
+    assert_eq!(outcome.get("cancelled").and_then(|v| v.as_bool()), Some(true), "{outcome:?}");
+    let resp = v2.call(&gen_req(2)).expect("post-cancel call");
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    server.stop();
+}
+
+#[test]
+fn listener_serves_v1_and_v2_concurrently_with_identical_results() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 3).expect("server");
+
+    // both protocols live on the same port at the same time
+    let mut v1 = Client::connect(&server.addr).expect("v1 client");
+    let v2 = Client2::connect(&server.addr).expect("v2 client");
+    assert!(v1.ping().unwrap());
+    assert!(v2.ping().unwrap());
+
+    let from_v1 = v1.call(&gen_req(11)).expect("v1 call");
+    let from_v2 = v2.call(&gen_req(11)).expect("v2 call");
+    assert_eq!(from_v1.get("ok").unwrap().as_bool(), Some(true), "{from_v1:?}");
+    assert_eq!(from_v2.get("ok").unwrap().as_bool(), Some(true), "{from_v2:?}");
+    assert_eq!(
+        from_v1.get("latent").unwrap().as_f32_vec().unwrap(),
+        from_v2.get("latent").unwrap().as_f32_vec().unwrap(),
+        "the framed protocol must not change the generated latent"
+    );
+
+    // v2 streaming delivers the same ordered per-step events as v1
+    let mut events = Vec::new();
+    let done = v2
+        .call_streaming(&gen_req(12), |ev| {
+            if ev.get("event").and_then(|v| v.as_str()) == Some("step") {
+                events.push(ev.get("step").and_then(|v| v.as_u64()).unwrap());
+            }
+        })
+        .expect("v2 streaming");
+    assert_eq!(done.get("ok").unwrap().as_bool(), Some(true), "{done:?}");
+    assert_eq!(events, vec![0, 1, 2, 3, 4, 5], "one ordered event per step");
+
+    // v1 still works after v2 traffic; metrics served over both
+    assert!(v1.metrics_summary().unwrap().contains("v2_conns="));
+    assert!(v2.metrics_summary().unwrap().contains("completed="));
+    server.stop();
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_never_kill_other_streams() {
+    let c = Arc::new(coord());
+    let opts = ServerOpts { conn_threads: 2, max_frame: 4096, ..ServerOpts::default() };
+    let server = Server::start_with("127.0.0.1:0", Arc::clone(&c), opts).expect("server");
+    let mut v2 = RawV2::handshake(&server.addr);
+
+    // unknown frame type → typed error, connection survives
+    let mut junk = Vec::new();
+    junk.extend_from_slice(&0u32.to_le_bytes());
+    junk.push(99u8);
+    junk.extend_from_slice(&5u64.to_le_bytes());
+    v2.stream.write_all(&junk).unwrap();
+    v2.stream.flush().unwrap();
+    let err = v2.read_frame(Duration::from_secs(120));
+    assert_eq!(err.frame_type, FrameType::Error, "{err:?}");
+    assert!(err.payload_str().contains("unknown frame type 99"), "{err:?}");
+
+    // oversized declared length → typed error on sight of the header;
+    // the decoder then skips the declared extent, so sending the whole
+    // bloated frame leaves the stream aligned for what follows
+    let mut huge = Vec::new();
+    huge.extend_from_slice(&8192u32.to_le_bytes());
+    huge.push(FrameType::Ping.byte());
+    huge.extend_from_slice(&6u64.to_le_bytes());
+    huge.extend_from_slice(&vec![0x20u8; 8192]);
+    v2.stream.write_all(&huge).unwrap();
+    v2.stream.flush().unwrap();
+    let err = v2.read_frame(Duration::from_secs(120));
+    assert_eq!(err.frame_type, FrameType::Error, "{err:?}");
+    assert!(err.payload_str().contains("exceeds max"), "{err:?}");
+
+    // a duplicate in-flight id is refused without touching the original
+    // stream: start a long generation, duplicate its id, then cancel —
+    // the original still gets its own (cancelled) terminal response
+    let long = Json::obj()
+        .set("family", "image")
+        .set("label", 1.0)
+        .set("steps", 2000usize)
+        .set("policy", "no-cache")
+        .set("stream", true)
+        .set("seed", 3u64);
+    v2.send(&Frame::json(FrameType::Request, 7, &long));
+    // wait for the accepted event so id 7 is in flight
+    loop {
+        let f = v2.read_frame(Duration::from_secs(120));
+        if f.frame_type == FrameType::Step
+            && f.payload_json()
+                .and_then(|ev| ev.get("event").and_then(|v| v.as_str().map(String::from)))
+                .as_deref()
+                == Some("accepted")
+        {
+            break;
+        }
+    }
+    v2.send(&Frame::json(FrameType::Request, 7, &gen_req(1)));
+    let mut saw_duplicate_error = false;
+    let outcome = loop {
+        let f = v2.read_frame(Duration::from_secs(120));
+        match f.frame_type {
+            FrameType::Error => {
+                assert!(
+                    f.payload_str().contains("duplicate in-flight request id 7"),
+                    "{f:?}"
+                );
+                saw_duplicate_error = true;
+                // now tear down the long generation
+                v2.send(&Frame::empty(FrameType::Cancel, 7));
+            }
+            FrameType::Response => break f.payload_json().expect("response payload"),
+            FrameType::Step | FrameType::Credit => {}
+            other => panic!("unexpected {other:?} frame: {f:?}"),
+        }
+    };
+    assert!(saw_duplicate_error, "duplicate id was never reported");
+    assert_eq!(outcome.get("ok").unwrap().as_bool(), Some(false), "{outcome:?}");
+    assert_eq!(outcome.get("cancelled").and_then(|v| v.as_bool()), Some(true), "{outcome:?}");
+
+    // the connection still serves after all three violations
+    v2.send(&Frame::json(FrameType::Request, 8, &gen_req(2)));
+    loop {
+        let f = v2.read_frame(Duration::from_secs(120));
+        if f.frame_type == FrameType::Response {
+            assert_eq!(f.id, 8);
+            let body = f.payload_json().expect("response payload");
+            assert_eq!(body.get("ok").unwrap().as_bool(), Some(true), "{body:?}");
+            break;
+        }
+    }
+
+    // a truncated frame (header cut short, then EOF) is answered with a
+    // best-effort typed error before the server closes the connection
+    let mut cut = RawV2::handshake(&server.addr);
+    cut.stream.write_all(&[0x20, 0x00]).unwrap(); // 2 of 13 header bytes
+    cut.stream.flush().unwrap();
+    cut.stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let t0 = Instant::now();
+    let mut saw_truncated = false;
+    let mut buf = [0u8; 4096];
+    'read: loop {
+        assert!(t0.elapsed() < Duration::from_secs(120), "no truncation error before close");
+        match cut.stream.read(&mut buf) {
+            Ok(0) => break 'read, // server closed after (maybe) reporting
+            Ok(n) => {
+                cut.reader.extend(&buf[..n]);
+                while let Decoded::Frame(f) = cut.reader.decode() {
+                    if f.frame_type == FrameType::Error && f.payload_str().contains("truncated") {
+                        saw_truncated = true;
+                        break 'read;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(_) => break 'read,
+        }
+    }
+    assert!(saw_truncated, "truncated frame was never reported");
+    server.stop();
+}
+
+#[test]
+fn clients_report_typed_timeouts_against_an_unresponsive_server() {
+    // a bound listener that never accepts: connects succeed (backlog),
+    // but no byte ever comes back
+    let sink = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = sink.local_addr().unwrap();
+
+    // v1: the call times out with a typed error instead of hanging
+    let mut v1 = Client::connect_with(&addr, Duration::from_millis(200)).expect("tcp connect");
+    let err = v1.call(&gen_req(1)).expect_err("no server behind the socket");
+    assert!(err.to_string().contains("timeout"), "typed timeout, got: {err}");
+
+    // v2: the eager hello handshake times out with a typed error
+    let cfg = Client2Config {
+        pool: 1,
+        connect_timeout: Duration::from_millis(300),
+        io_timeout: Duration::from_millis(300),
+    };
+    let err = Client2::with_config(&addr, cfg).expect_err("no hello ever arrives");
+    assert!(err.to_string().contains("timeout"), "typed timeout, got: {err}");
+    drop(sink);
+}
+
+#[test]
+fn client2_reconnects_after_its_connections_break() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let v2 = Client2::connect(&server.addr).expect("client2");
+    let first = v2.call(&gen_req(21)).expect("first call");
+    assert_eq!(first.get("ok").unwrap().as_bool(), Some(true), "{first:?}");
+
+    // sever every pooled socket in place (broken pipe on next write),
+    // then call again: submit must transparently reconnect and succeed
+    v2.reset();
+    let second = v2.call(&gen_req(22)).expect("call after reset");
+    assert_eq!(second.get("ok").unwrap().as_bool(), Some(true), "{second:?}");
+    server.stop();
+}

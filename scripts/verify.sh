@@ -7,9 +7,10 @@
 # smoke-scale bench trajectory gate (docs/benchmarks.md, ADR-005):
 # perf_engine and e2e_serving emit BENCH_engine.json / BENCH_serving.json
 # plus the mixed-priority preemption lanes (BENCH_serving_mixed_w1/w3,
-# docs/adr/007) at the repo root and bench_diff compares them against
-# the committed BENCH_baseline/ snapshot, failing on out-of-tolerance
-# regressions.
+# docs/adr/007) and the protocol-v2 multiplexing lane
+# (BENCH_serving_mux.json, docs/adr/008) at the repo root and
+# bench_diff compares them against the committed BENCH_baseline/
+# snapshot, failing on out-of-tolerance regressions.
 #
 # Run from anywhere; CI invokes this script with --strict.
 #
@@ -93,7 +94,15 @@ echo "==> bench smoke: mixed-priority preemption lanes (workers 1, 3)"
 ./target/release/e2e_serving --smoke --mixed-priority --workers 3 \
     --json BENCH_serving_mixed_w3.json
 
-for area in engine serving serving_mixed_w1 serving_mixed_w3; do
+# protocol v2 multiplexing (docs/adr/008): 8 concurrent streams over
+# ONE framed connection vs the same work serially over v1 JSON-lines.
+# The gated mux_speedup_x row is how a mux/flow-control regression that
+# re-serializes concurrent streams fails tier-1.
+echo "==> bench smoke: protocol v2 multiplexing lane (8 streams, workers 2)"
+./target/release/e2e_serving --smoke --mux 8 --workers 2 \
+    --json BENCH_serving_mux.json
+
+for area in engine serving serving_mixed_w1 serving_mixed_w3 serving_mux; do
     report="BENCH_${area}.json"
     baseline="BENCH_baseline/${report}"
     if [ -f "$baseline" ]; then
