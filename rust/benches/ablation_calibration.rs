@@ -58,6 +58,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("solver", "ddim");
     report.meta("steps", steps);
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     // reference curves at the paper's N=10 (or max size in fast mode)
     let ref_n = *sizes.iter().rev().find(|&&n| n <= 10).unwrap();

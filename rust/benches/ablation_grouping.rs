@@ -49,6 +49,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("samples", n_samples);
     report.meta("threads", threads);
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     let cc = CalibrationConfig {
         num_samples: calib_samples,

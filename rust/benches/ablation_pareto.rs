@@ -51,6 +51,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("samples", n_samples);
     report.meta("threads", threads);
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     let mut table = Table::new(&["steps", "method", "param", "skip%", "GMACs", "FFD", "lat(s)"]);
     let mut fora_pts: Vec<(f64, f64)> = Vec::new();

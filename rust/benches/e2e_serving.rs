@@ -93,6 +93,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("queue_depth", queue_depth);
     report.meta("requests", n_requests);
     report.meta("smoke", smoke);
+    report.run_meta(workers);
 
     let mut table = Table::new(&[
         "policy", "served", "rejected", "dl miss", "throughput (req/s)", "p50 (s)", "p95 (s)",
@@ -177,7 +178,8 @@ fn main() -> smoothcache::util::error::Result<()> {
                     DeadlinePolicy::BestEffort,
                 )
             });
-            pending.push(coord.submit_opts(req, SubmitOpts { progress: None, deadline }).reply);
+            let opts = SubmitOpts { progress: None, deadline, trace: Default::default() };
+            pending.push(coord.submit_opts(req, opts).reply);
         }
         let mut latencies = Vec::new();
         let mut rejected = 0usize;
@@ -444,6 +446,7 @@ fn run_mixed_priority(
     report.meta("interactive_steps", int_steps);
     report.meta("interactive_probes", n_probes);
     report.meta("smoke", smoke);
+    report.run_meta(workers);
     report.metric_tol("priority:interactive/p99_ms", pre_p99 * 1e3, "ms", false, 200.0)?;
     report.metric_tol(
         "priority:interactive/p50_ms",
@@ -687,6 +690,7 @@ fn run_mux(
     report.meta("per_stream", per_stream);
     report.meta("policy", policy.wire());
     report.meta("smoke", smoke);
+    report.run_meta(workers);
     report.metric_tol("mux_speedup_x", speedup, "x", true, 60.0)?;
     report.metric_tol("v1_serial_wall_s", wall_serial, "s", false, 150.0)?;
     report.metric_tol("v2_mux_wall_s", wall_mux, "s", false, 150.0)?;

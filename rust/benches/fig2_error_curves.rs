@@ -30,6 +30,7 @@ fn main() -> smoothcache::util::error::Result<()> {
 
     let mut report = BenchReport::new("fig2");
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     let mut ci_table = Table::new(&["family", "solver", "steps", "samples", "mean CI width (k=1)"]);
 

@@ -25,6 +25,7 @@ fn main() -> smoothcache::util::error::Result<()> {
 
     let mut report = BenchReport::new("fig5");
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     let mut table = Table::new(&["family", "component", "MAC share", "bar"]);
     let mut frac_table =

@@ -56,6 +56,7 @@ fn main() -> smoothcache::util::error::Result<()> {
 
     let mut report = BenchReport::new("fig_qualitative");
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     // ---------- image (Fig. 6) ----------
     engine.load_family("image")?;

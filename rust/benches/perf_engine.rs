@@ -13,7 +13,10 @@
 //! SIMD-vs-scalar GEMM timing on wide FFN shapes (acceptance: ≥ 4× on
 //! AVX2 hosts) and a precision-ladder sweep reporting per-mode forward
 //! latency plus the `quality::precision_gate` SSIM of each reduced-
-//! precision trajectory against the f32 reference.
+//! precision trajectory against the f32 reference. An `obs:` section
+//! (ISSUE 10) measures the tracing seams' cost: the disabled event
+//! call must stay at noise level and the always-on coarse default
+//! under 3% of the serving burst (docs/adr/009).
 //!
 //! Flags: `--threads N` pins the pool for the per-entry sections
 //! (0 = auto; the sweep section always pins its own counts); `--smoke`
@@ -61,6 +64,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("threads", cli_threads);
     report.meta("workers", 2);
     report.meta("smoke", smoke);
+    report.run_meta(2);
     report.meta("simd", gemm::active_kernel_name());
 
     let mut table = Table::new(&["operation", "batch", "mean (us)", "p95 (us)"]);
@@ -581,6 +585,106 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.metric_tol("exec_mean_ms", m.exec_latency.mean() * 1e3, "ms", false, 100.0)?;
     report.metric_tol("e2e_mean_ms", m.e2e_latency.mean() * 1e3, "ms", false, 100.0)?;
     coord.shutdown();
+
+    // ---- obs: tracing overhead (disabled vs coarse vs fine) ----
+    // The tracing seams (docs/adr/009) ride the serving hot path, so
+    // this section pins what they cost: a disabled event call must stay
+    // at noise level, and the always-on coarse default must stay under
+    // 3% on the serving smoke burst. Fine granularity (per-site events)
+    // is reported for reference but not asserted — it is opt-in.
+    {
+        use smoothcache::obs::{self, TraceHandle, TraceLevel};
+        let prev = obs::level();
+
+        // per-call cost of an event on an inactive handle, batched so
+        // clock granularity doesn't swamp single-digit nanoseconds
+        let off_handle = TraceHandle::off();
+        const EVENTS_PER_ITER: usize = 10_000;
+        let ev_iters = if fast_mode() { 3 } else { 200 };
+        let d = bench(2, ev_iters, || {
+            for i in 0..EVENTS_PER_ITER {
+                std::hint::black_box(&off_handle).event("obs_bench", i as u64, 0, 0, f64::NAN);
+            }
+        });
+        let disabled_ns = d.min_s * 1e9 / EVENTS_PER_ITER as f64;
+        assert!(
+            disabled_ns < 50.0,
+            "disabled trace event costs {disabled_ns:.1}ns/call — the off path must stay noise-level"
+        );
+
+        // the queue-decomposition burst again, once per level: fresh
+        // coordinator each time (startup outside the timed window), one
+        // warmup burst so plan/engine caches never count against a
+        // level, min wall over the reps to shed scheduler noise
+        let burst_wall = |coord: &Coordinator| -> smoothcache::util::error::Result<f64> {
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = (0..burst)
+                .map(|i| {
+                    coord.submit(Request {
+                        id: 0,
+                        family: "image".into(),
+                        cond: Cond::Label(vec![(i % 10) as i32]),
+                        solver: SolverKind::Ddim,
+                        steps: qsteps,
+                        cfg_scale: 1.0,
+                        seed: i as u64,
+                        policy: Policy::no_cache(),
+                        compute: Default::default(),
+                        priority: Default::default(),
+                    })
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap()?;
+            }
+            Ok(t0.elapsed().as_secs_f64())
+        };
+        let wall_at = |lvl: TraceLevel| -> smoothcache::util::error::Result<f64> {
+            obs::set_level(lvl);
+            let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+            cfg.preload = vec!["image".into()];
+            cfg.max_wait = Duration::from_millis(5);
+            cfg.workers = 2;
+            let coord = Coordinator::start(cfg)?;
+            let _ = burst_wall(&coord)?;
+            let reps = if fast_mode() { 2 } else { 3 };
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                best = best.min(burst_wall(&coord)?);
+            }
+            coord.shutdown();
+            Ok(best)
+        };
+        let off_s = wall_at(TraceLevel::Off)?;
+        let coarse_s = wall_at(TraceLevel::Coarse)?;
+        let fine_s = wall_at(TraceLevel::Fine)?;
+        obs::set_level(prev);
+        // floor at 0.05% so the recorded metric never lands on an exact
+        // zero (a zero baseline makes every later diff an infinite move)
+        let pct = |lvl_s: f64| ((lvl_s - off_s) / off_s * 100.0).max(0.05);
+        let (coarse_pct, fine_pct) = (pct(coarse_s), pct(fine_s));
+        assert!(
+            coarse_pct < 3.0,
+            "coarse tracing adds {coarse_pct:.2}% to the serving burst (must stay under 3%)"
+        );
+        let mut otable = Table::new(&["trace level", "burst wall (ms)", "overhead"]);
+        otable.row(&["off".into(), format!("{:.2}", off_s * 1e3), "-".into()]);
+        otable.row(&[
+            "coarse (default)".into(),
+            format!("{:.2}", coarse_s * 1e3),
+            format!("{coarse_pct:.2}%"),
+        ]);
+        otable.row(&["fine".into(), format!("{:.2}", fine_s * 1e3), format!("{fine_pct:.2}%")]);
+        println!(
+            "\n§Perf — obs tracing overhead ({burst}-request no-cache burst, DDIM-{qsteps}, \
+             disabled event {disabled_ns:.1}ns/call)"
+        );
+        otable.print();
+        std::fs::write("bench_out/perf_engine_obs.csv", otable.to_csv())?;
+        report.metric_tol("obs:overhead_pct", coarse_pct, "%", false, 5000.0)?;
+        report.metric_tol("obs:overhead_fine_pct", fine_pct, "%", false, 5000.0)?;
+        report.metric_tol("obs:disabled_ns_per_event", disabled_ns, "ns", false, 5000.0)?;
+    }
 
     if let Some(path) = &json_out {
         report.save(path)?;

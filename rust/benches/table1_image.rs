@@ -55,6 +55,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("trials", trials);
     report.meta("threads", threads);
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     let fx = FeatureExtractor::new(0xF1D, 12);
     let fx_s = FeatureExtractor::new(0x5F1D, 12); // sFID-analog seed

@@ -56,6 +56,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("trials", trials);
     report.meta("threads", threads);
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     eprintln!("[table2] calibrating rf-{steps} (conditional, cfg=7) ...");
     let cc = CalibrationConfig {

@@ -56,6 +56,7 @@ fn main() -> smoothcache::util::error::Result<()> {
     report.meta("samples", n_samples);
     report.meta("threads", threads);
     report.meta("smoke", smoke);
+    report.run_meta(0);
 
     eprintln!("[table3] calibrating dpmpp3m-sde-{steps} ...");
     let cc = CalibrationConfig {

@@ -198,15 +198,20 @@ impl std::fmt::Debug for CancelRegistration {
 /// invariant.
 pub(crate) fn reply_dead(metrics: &Metrics, it: InFlight) {
     let id = it.request.id;
+    let tag = it.trace.err_tag();
+    // seal the flight-recorder entry before the reply leaves: a client
+    // reacting to the error (e.g. an immediate `dump`) must find it
     if it.cancel.is_cancelled() {
         Metrics::inc(&metrics.requests_cancelled);
+        it.trace.finish(crate::obs::Outcome::Cancelled);
         let _ = it
             .reply
-            .send(Err(crate::err!("cancelled: request {id} was cancelled")));
+            .send(Err(crate::err!("cancelled: request {id} was cancelled{tag}")));
     } else {
         Metrics::inc(&metrics.deadline_missed);
+        it.trace.finish(crate::obs::Outcome::DeadlineMissed);
         let _ = it.reply.send(Err(crate::err!(
-            "deadline: request {id} exceeded its deadline before completing"
+            "deadline: request {id} exceeded its deadline before completing{tag}"
         )));
     }
 }

@@ -33,6 +33,7 @@ use super::request::{InFlight, Policy, PriorityClass, Request, Response};
 use crate::cache::plan::{CachePlan, PlanCtx, PlanRef};
 use crate::cache::{calibrate, CalibrationConfig, ErrorCurves};
 use crate::model::{Engine, FamilyManifest};
+use crate::obs::{self, BatchTrace, Outcome};
 use crate::pipeline::{GenConfig, GenSession};
 use crate::solvers::{SolverKind, SolverRun};
 use crate::tensor::Tensor;
@@ -458,6 +459,9 @@ fn drive(
     debug_assert!(!members.is_empty());
     let steps_total = session.total_steps();
     let class = members[0].1.request.priority;
+    // span fan-out to every traced member of the batch; costs nothing
+    // when no member is traced
+    let bt = BatchTrace::new(members.iter().map(|(_, it)| &it.trace));
     while !session.is_done() {
         // Between every solver step the executor checks cancellation
         // and reject-late deadlines (abandoning the whole batch once
@@ -473,7 +477,19 @@ fn drive(
             return Ok(());
         }
         let t_step = Instant::now();
-        let ev = session.step()?;
+        let t0 = bt.begin();
+        // the fine scope stages per-(step, site) decision events on
+        // this thread and flushes them to the traced members after the
+        // step; below TraceLevel::Fine it is exactly `session.step()`
+        let ev = obs::with_fine_scope(&bt, || session.step())?;
+        bt.span_from(
+            "step",
+            t0,
+            ev.step as u64,
+            ev.computes as u64,
+            ev.reuses as u64,
+            ev.max_drift.unwrap_or(f64::NAN),
+        );
         metrics.step_latency.observe(t_step.elapsed().as_secs_f64());
         Metrics::inc(&metrics.steps_executed);
         let elapsed_s = exec_accum + seg_start.elapsed().as_secs_f64();
@@ -498,6 +514,7 @@ fn drive(
         // job therefore finishes in at most `steps` resumes no matter
         // how hostile the interactive arrival pattern is.
         if class == PriorityClass::Batch && !session.is_done() && queue.should_preempt(class) {
+            bt.event("park", (ev.step + 1) as u64, 0, 0, f64::NAN);
             let state = session.snapshot();
             Metrics::inc(&metrics.preemptions);
             queue.push_parked(ParkedSession {
@@ -562,6 +579,12 @@ fn drive(
             total_seconds: total,
             gen_stats: out.stats.clone(),
         };
+        // seal the flight entry before the reply leaves (a client can
+        // `dump` the moment it sees the response); a late best-effort
+        // result is pinned — that is the timeline an operator debugging
+        // tail latency wants
+        it.trace
+            .finish(if deadline_missed { Outcome::DeadlineMissed } else { Outcome::Ok });
         let _ = it.reply.send(Ok(resp));
     }
     Ok(())
@@ -602,6 +625,8 @@ pub fn execute_batch(
         })
         .ok_or_else(|| crate::err!("no supported batch ≥ {n}"))?;
     Metrics::add(&metrics.padded_slots, (target - n) as u64);
+    let bt = BatchTrace::new(batch.iter().map(|it| &it.trace));
+    bt.event("batch", n as u64, (target - n) as u64, 0, f64::NAN);
 
     // conditioning: concat + pad
     let mut cond = batch[0].request.cond.clone();
@@ -628,6 +653,9 @@ pub fn execute_batch(
         .with_cfg(req0.cfg_scale)
         .with_seed(req0.seed)
         .with_compute(req0.compute);
+    // covers policy resolution end to end: a cold curve-needing key
+    // pays its calibration inside this span, a warm key microseconds
+    let t_cal = bt.begin();
     let held_plan = resolve_plan(
         engine,
         store,
@@ -639,6 +667,7 @@ pub fn execute_batch(
         steps,
         &policy,
     )?;
+    bt.span_from("calibrate", t_cal, 0, 0, 0, f64::NAN);
     let planner = policy.planner();
     let plan = match &held_plan {
         Some(p) => PlanRef::Plan(p.as_ref()),
@@ -668,9 +697,8 @@ pub fn resume_parked(
     parked: ParkedSession,
 ) -> Result<()> {
     let seg_start = Instant::now();
-    metrics
-        .resume_latency
-        .observe(parked.parked_at.elapsed().as_secs_f64());
+    let parked_s = parked.parked_at.elapsed().as_secs_f64();
+    metrics.resume_latency.observe(parked_s);
     let ParkedSession { members, state, target, exec_seconds, first_exec, .. } = parked;
     let (live, dead): (Vec<_>, Vec<_>) =
         members.into_iter().partition(|(_, it)| !it.dead_on_arrival());
@@ -682,6 +710,13 @@ pub fn resume_parked(
         return Ok(());
     }
     Metrics::inc(&metrics.session_resumes);
+    BatchTrace::new(live.iter().map(|(_, it)| &it.trace)).event(
+        "resume",
+        state.step() as u64,
+        0,
+        0,
+        parked_s,
+    );
     let req0: &Request = &live[0].1.request;
     let family = req0.family.clone();
     let policy = req0.policy.clone();
@@ -749,7 +784,10 @@ pub fn run_executor(
                     };
                     for it in members {
                         Metrics::inc(&metrics.requests_failed);
-                        let _ = it.reply.send(Err(crate::err!("engine unavailable")));
+                        let msg =
+                            crate::err!("engine unavailable{}", it.trace.err_tag());
+                        it.trace.finish(Outcome::Failed);
+                        let _ = it.reply.send(Err(msg));
                     }
                 }
             }
@@ -791,9 +829,13 @@ pub fn run_executor(
                 if batch.is_empty() {
                     continue;
                 }
-                // keep reply handles in case of failure
+                for it in &batch {
+                    it.trace.event("queue_pop", 0, 0, 0, qwait);
+                }
+                // keep reply handles (and trace handles) in case of failure
                 let ids: Vec<u64> = batch.iter().map(|b| b.request.id).collect();
-                let replies: Vec<_> = batch.iter().map(|b| b.reply.clone()).collect();
+                let replies: Vec<_> =
+                    batch.iter().map(|b| (b.reply.clone(), b.trace.clone())).collect();
                 if let Err(e) = execute_batch(
                     &mut engine,
                     &store,
@@ -804,16 +846,24 @@ pub fn run_executor(
                     &supported_batches,
                 ) {
                     eprintln!("executor[{worker}]: batch {ids:?} failed: {e:#}");
-                    for r in replies {
+                    for (r, trace) in replies {
                         Metrics::inc(&metrics.requests_failed);
-                        let _ = r.send(Err(crate::err!("batch execution failed: {e}")));
+                        let msg = crate::err!(
+                            "batch execution failed: {e}{}",
+                            trace.err_tag()
+                        );
+                        trace.finish(Outcome::Failed);
+                        let _ = r.send(Err(msg));
                     }
                 }
             }
             WorkItem::Parked(ps) => {
                 let ids: Vec<u64> = ps.members.iter().map(|(_, it)| it.request.id).collect();
-                let replies: Vec<_> =
-                    ps.members.iter().map(|(_, it)| it.reply.clone()).collect();
+                let replies: Vec<_> = ps
+                    .members
+                    .iter()
+                    .map(|(_, it)| (it.reply.clone(), it.trace.clone()))
+                    .collect();
                 if let Err(e) = resume_parked(
                     &mut engine,
                     &store,
@@ -823,9 +873,14 @@ pub fn run_executor(
                     ps,
                 ) {
                     eprintln!("executor[{worker}]: resume {ids:?} failed: {e:#}");
-                    for r in replies {
+                    for (r, trace) in replies {
                         Metrics::inc(&metrics.requests_failed);
-                        let _ = r.send(Err(crate::err!("batch execution failed: {e}")));
+                        let msg = crate::err!(
+                            "batch execution failed: {e}{}",
+                            trace.err_tag()
+                        );
+                        trace.finish(Outcome::Failed);
+                        let _ = r.send(Err(msg));
                     }
                 }
             }

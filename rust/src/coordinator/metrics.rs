@@ -2,6 +2,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::util::json::Json;
+
 /// Log-scale latency histogram, 1 ms … ~2000 s. Thread-safe, lock-free.
 pub struct Histogram {
     bounds: Vec<f64>,
@@ -262,6 +264,64 @@ impl Metrics {
             Self::get(&self.v2_credit_rejections),
         )
     }
+
+    /// The same snapshot as [`Metrics::summary`], as structured JSON
+    /// (the server's `{"cmd":"metrics","format":"json"}` payload;
+    /// field set pinned by `tests/serving.rs`). Keys match the
+    /// `key=value` names of the human summary one for one; the string's
+    /// `skips=X/Y` pair becomes `skips` and `branch_total`. Quantiles a
+    /// histogram cannot bound are reported as `-1` (JSON has no ∞).
+    pub fn summary_json(&self) -> Json {
+        fn fin(x: f64) -> f64 {
+            if x.is_finite() {
+                x
+            } else {
+                -1.0
+            }
+        }
+        Json::obj()
+            .set("workers", Self::get(&self.executor_replicas).max(1))
+            .set("requests", Self::get(&self.requests_submitted))
+            .set("completed", Self::get(&self.requests_completed))
+            .set("failed", Self::get(&self.requests_failed))
+            .set("cancelled", Self::get(&self.requests_cancelled))
+            .set("dl_miss", Self::get(&self.deadline_missed))
+            .set("rejected", Self::get(&self.queue_rejections))
+            .set("batches", Self::get(&self.batches_executed))
+            .set("qdepth", Self::get(&self.queue_depth))
+            .set("qpeak", Self::get(&self.queue_peak_depth))
+            .set("occupancy", self.occupancy())
+            .set("plan_hits", Self::get(&self.plan_cache_hits))
+            .set("plan_miss", Self::get(&self.plan_cache_misses))
+            .set("e2e_mean", self.e2e_latency.mean())
+            .set("e2e_p95", fin(self.e2e_latency.quantile(0.95)))
+            .set("queue_mean", self.queue_latency.mean())
+            .set("qwait_mean", self.queue_wait.mean())
+            .set("qwait_p95", fin(self.queue_wait.quantile(0.95)))
+            .set("exec_mean", self.exec_latency.mean())
+            .set("steps", Self::get(&self.steps_executed))
+            .set("step_mean", self.step_latency.mean())
+            .set("skips", Self::get(&self.branch_reuses))
+            .set(
+                "branch_total",
+                Self::get(&self.branch_computes) + Self::get(&self.branch_reuses),
+            )
+            .set("preempt", Self::get(&self.preemptions))
+            .set("resumes", Self::get(&self.session_resumes))
+            .set("parked", Self::get(&self.parked_sessions))
+            .set("park_peak", Self::get(&self.parked_peak))
+            .set("resume_mean", self.resume_latency.mean())
+            .set("e2e_int_p50", fin(self.e2e_interactive.quantile(0.50)))
+            .set("e2e_int_p95", fin(self.e2e_interactive.quantile(0.95)))
+            .set("e2e_int_p99", fin(self.e2e_interactive.quantile(0.99)))
+            .set("e2e_bat_p50", fin(self.e2e_batch.quantile(0.50)))
+            .set("e2e_bat_p95", fin(self.e2e_batch.quantile(0.95)))
+            .set("e2e_bat_p99", fin(self.e2e_batch.quantile(0.99)))
+            .set("qwait_int_mean", self.qwait_interactive.mean())
+            .set("qwait_bat_mean", self.qwait_batch.mean())
+            .set("v2_conns", Self::get(&self.v2_connections))
+            .set("v2_credit_rej", Self::get(&self.v2_credit_rejections))
+    }
 }
 
 #[cfg(test)]
@@ -369,6 +429,30 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("v2_conns=2"), "{s}");
         assert!(s.contains("v2_credit_rej=1"), "{s}");
+    }
+
+    #[test]
+    fn summary_json_mirrors_summary_fields() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_submitted);
+        Metrics::add(&m.branch_reuses, 3);
+        Metrics::add(&m.branch_computes, 5);
+        m.e2e_latency.observe(0.010);
+        let j = m.summary_json();
+        assert_eq!(j.get("requests").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("skips").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("branch_total").unwrap().as_u64(), Some(8));
+        assert!(j.get("e2e_mean").unwrap().as_f64().unwrap() > 0.0);
+        // every key=value field of the human summary has a JSON mirror
+        // (skips=X/Y is split into `skips` + `branch_total`)
+        for field in m.summary().split_whitespace() {
+            let key = field.split('=').next().unwrap();
+            assert!(j.get(key).is_some(), "summary key {key} missing from summary_json");
+        }
+        // the JSON round-trips through the crate's own parser
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("requests").unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -75,6 +75,7 @@ use std::time::{Duration, Instant};
 use crate::util::error::Result;
 
 use cancel::{lock_cancels, reply_dead, CancelMap, CancelRegistration, CancelToken};
+use crate::obs::{Outcome, TraceHandle};
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use cancel::{Deadline, DeadlinePolicy, Progress};
@@ -182,6 +183,12 @@ pub struct SubmitOpts {
     pub progress: Option<Sender<Progress>>,
     /// Optional latency budget (see [`Deadline`]).
     pub deadline: Option<Deadline>,
+    /// Trace context for this request (docs/adr/009). The default
+    /// (disabled) handle makes [`Coordinator::submit_opts`] open a
+    /// fresh one at the active [`crate::obs::level`]; the server passes
+    /// a pre-opened handle here so wire ingress events land on the same
+    /// timeline.
+    pub trace: TraceHandle,
 }
 
 /// Handle returned by [`Coordinator::submit_opts`]: the assigned
@@ -316,6 +323,11 @@ impl Coordinator {
         let (tx, rx) = channel();
         let token = CancelToken::new();
         let registration = CancelRegistration::register(&self.cancels, id, token.clone());
+        let trace = if opts.trace.is_active() { opts.trace } else { TraceHandle::start() };
+        if trace.is_active() {
+            trace.set_meta(id, &format!("{}/{}", request.family, request.policy.wire()));
+            trace.event("submit", id, 0, 0, f64::NAN);
+        }
         let item = InFlight {
             request,
             submitted: Instant::now(),
@@ -323,6 +335,7 @@ impl Coordinator {
             cancel: token,
             deadline: opts.deadline,
             progress: opts.progress,
+            trace,
             registration: Some(registration),
         };
         if let Some(q) = &self.tx {
@@ -450,6 +463,14 @@ fn run_batcher(
             return;
         }
         let lane = lane_for(&store, &batch[0].request);
+        if batch.iter().any(|it| it.trace.is_active()) {
+            // batcher group formation: group size + queue depth at push
+            let depth = queue.len() as u64;
+            let group = batch.len() as u64;
+            for it in &batch {
+                it.trace.event("queue_push", depth, group, 0, f64::NAN);
+            }
+        }
         match queue.push(batch, lane) {
             Ok(()) => {
                 let depth = queue.len() as u64;
@@ -460,9 +481,15 @@ fn run_batcher(
                 Metrics::add(&metrics.queue_rejections, rejected.len() as u64);
                 let bound = queue.depth();
                 for it in rejected {
-                    let _ = it.reply.send(Err(crate::err!(
-                        "overloaded: work queue full ({bound} requests); retry later"
-                    )));
+                    it.trace.event("reject", bound as u64, 0, 0, f64::NAN);
+                    // seal before replying so a client reacting to the
+                    // rejection finds the entry in a `dump`
+                    let msg = crate::err!(
+                        "overloaded: work queue full ({bound} requests); retry later{}",
+                        it.trace.err_tag()
+                    );
+                    it.trace.finish(Outcome::Overloaded);
+                    let _ = it.reply.send(Err(msg));
                 }
             }
         }

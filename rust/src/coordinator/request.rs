@@ -7,6 +7,7 @@ use crate::util::error::Result;
 
 use super::cancel::{CancelRegistration, CancelToken, Deadline, DeadlinePolicy, Progress};
 use crate::cache::plan::{parse_policy, Planner};
+use crate::obs::TraceHandle;
 use crate::model::Cond;
 use crate::pipeline::GenStats;
 use crate::solvers::SolverKind;
@@ -261,6 +262,11 @@ pub struct InFlight {
     pub deadline: Option<Deadline>,
     /// Optional per-step progress stream (streaming clients).
     pub progress: Option<std::sync::mpsc::Sender<Progress>>,
+    /// Per-request trace context (docs/adr/009). Instrumentation at
+    /// every pipeline seam records into it; a disabled handle (tracing
+    /// `off`) costs one branch per site. The terminal path that answers
+    /// the request also finishes the trace into the flight recorder.
+    pub trace: TraceHandle,
     /// Registry drop guard: removes the cancel token from the
     /// coordinator's id map when this request is answered on any path.
     pub(super) registration: Option<CancelRegistration>,
@@ -277,6 +283,7 @@ impl InFlight {
             cancel: CancelToken::new(),
             deadline: None,
             progress: None,
+            trace: TraceHandle::off(),
             registration: None,
         }
     }

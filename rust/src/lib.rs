@@ -26,6 +26,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod macs;
 pub mod model;
+pub mod obs;
 pub mod pipeline;
 pub mod quality;
 pub mod runtime;

@@ -5,6 +5,7 @@
 //!   generate   one-off generation from the CLI
 //!   calibrate  run a calibration pass, save curves JSON
 //!   schedule   print the schedule a policy resolves to
+//!   trace      dump a server's flight recorder as a timeline
 //!   info       artifact/manifest inventory
 //!
 //! Run `smoothcache <subcommand> --help` for flags.
@@ -31,16 +32,18 @@ fn main() {
         "generate" => cmd_generate(&rest),
         "calibrate" => cmd_calibrate(&rest),
         "schedule" => cmd_schedule(&rest),
+        "trace" => cmd_trace(&rest),
         "info" => cmd_info(&rest),
         _ => {
             eprintln!(
                 "smoothcache — SmoothCache serving stack\n\n\
-                 usage: smoothcache <serve|generate|calibrate|schedule|info> [flags]\n\
+                 usage: smoothcache <serve|generate|calibrate|schedule|trace|info> [flags]\n\
                  examples:\n  \
                  smoothcache serve --addr 127.0.0.1:7878 --preload image --workers 2 --threads 4\n  \
                  smoothcache generate --family image --label 3 --policy smooth:0.35\n  \
                  smoothcache calibrate --family audio --solver dpmpp3m-sde --steps 100\n  \
                  smoothcache schedule --family image --steps 50 --policy fora:2\n  \
+                 smoothcache trace --addr 127.0.0.1:7878 --chrome trace.json\n  \
                  smoothcache info"
             );
             Ok(())
@@ -203,7 +206,8 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     } else {
         (None, None)
     };
-    let ticket = coord.submit_opts(request, SubmitOpts { progress, deadline });
+    let ticket =
+        coord.submit_opts(request, SubmitOpts { progress, deadline, trace: Default::default() });
     let print_progress = |rx: &std::sync::mpsc::Receiver<smoothcache::coordinator::Progress>| {
         while let Ok(p) = rx.try_recv() {
             println!(
@@ -426,6 +430,53 @@ fn cmd_schedule(argv: &[String]) -> Result<()> {
         plan.max_gap()
     );
     print!("{}", plan.ascii());
+    Ok(())
+}
+
+/// `smoothcache trace`: fetch a running server's flight recorder
+/// (`{"cmd":"dump"}`, docs/adr/009) and render it as a plain-text
+/// timeline, or write Chrome trace-event JSON for chrome://tracing /
+/// Perfetto with `--chrome PATH`.
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let spec = CliSpec::new("smoothcache trace", "dump a server's flight recorder")
+        .flag("addr", "127.0.0.1:7878", "server address")
+        .flag("last", "0", "only the most recent N timelines (0 = all retained)")
+        .flag("chrome", "", "write Chrome trace-event JSON to this path instead of printing");
+    let Some(args) = parse_or_usage(spec, argv)? else { return Ok(()) };
+
+    let addr: std::net::SocketAddr = args
+        .str("addr")
+        .parse()
+        .map_err(|e| smoothcache::err!("--addr {:?}: {e}", args.str("addr")))?;
+    let mut client = smoothcache::server::Client::connect(&addr)?;
+    let dump = client.dump()?;
+    if dump.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+        let msg = dump.get("error").and_then(|v| v.as_str()).unwrap_or("unknown server error");
+        return Err(smoothcache::err!("server: {msg}"));
+    }
+    let level = dump.get("level").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+    let mut entries = smoothcache::obs::export::DumpEntry::from_dump(&dump)?;
+    let last = args.usize("last").map_err(Error::msg)?;
+    if last > 0 && entries.len() > last {
+        // dump order is oldest-first by trace id — keep the tail
+        entries.drain(..entries.len() - last);
+    }
+    if entries.is_empty() {
+        println!("flight recorder is empty (server trace level: {level})");
+        return Ok(());
+    }
+    if !args.str("chrome").is_empty() {
+        let j = smoothcache::obs::export::chrome_trace(&entries);
+        std::fs::write(args.str("chrome"), j.to_string())?;
+        println!(
+            "{} timeline(s) written to {} (load in chrome://tracing or Perfetto)",
+            entries.len(),
+            args.str("chrome")
+        );
+    } else {
+        println!("flight recorder: {} timeline(s), server trace level {level}\n", entries.len());
+        print!("{}", smoothcache::obs::export::render(&entries));
+    }
     Ok(())
 }
 

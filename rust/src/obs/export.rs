@@ -1,0 +1,327 @@
+//! Timeline export: Chrome trace-event JSON and a human-readable
+//! renderer over flight-recorder dumps (docs/adr/009).
+//!
+//! The wire shapes here are owned mirrors of the in-process types in
+//! [`super`]: a `{"cmd":"dump"}` reply parses into [`DumpEntry`]s
+//! (event names become owned strings — the in-process
+//! [`TraceEvent`](super::TraceEvent) keeps `&'static str` names so
+//! recording never allocates), and [`chrome_trace`] turns them into a
+//! `chrome://tracing` / Perfetto-loadable trace-event document:
+//! completed spans as `"ph":"X"` complete events, instants as
+//! `"ph":"i"`, one `tid` row per trace. [`render`] is the
+//! `smoothcache trace` CLI's plain-text timeline.
+
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+use super::FlightEntry;
+
+/// Owned trace event parsed back from a dump (wire mirror of
+/// [`TraceEvent`](super::TraceEvent)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DumpEvent {
+    /// Event name.
+    pub name: String,
+    /// Microseconds since the trace started.
+    pub t_us: u64,
+    /// Span duration (0 = instant).
+    pub dur_us: u64,
+    /// Integer payloads (per-name meaning, docs/protocol.md).
+    pub a: u64,
+    /// Second integer payload.
+    pub b: u64,
+    /// Third integer payload.
+    pub c: u64,
+    /// Optional float payload.
+    pub f: Option<f64>,
+}
+
+/// Owned flight-recorder entry parsed back from a dump (wire mirror of
+/// [`FlightEntry`]).
+#[derive(Clone, Debug)]
+pub struct DumpEntry {
+    /// Trace id.
+    pub trace_id: u64,
+    /// Coordinator request id (0 when never admitted).
+    pub request_id: u64,
+    /// Family / policy label.
+    pub label: String,
+    /// Terminal outcome label.
+    pub outcome: String,
+    /// True when retained in the pinned lane.
+    pub pinned: bool,
+    /// Events dropped past the per-trace cap.
+    pub dropped: u64,
+    /// The timeline.
+    pub events: Vec<DumpEvent>,
+}
+
+impl DumpEvent {
+    /// Parse one event object from a dump / timeline.
+    pub fn from_json(j: &Json) -> Result<DumpEvent> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| crate::err!("trace event: missing name"))?
+            .to_string();
+        let num = |key: &str| j.get(key).and_then(|v| v.as_u64()).unwrap_or(0);
+        Ok(DumpEvent {
+            name,
+            t_us: num("t_us"),
+            dur_us: num("dur_us"),
+            a: num("a"),
+            b: num("b"),
+            c: num("c"),
+            f: j.get("f").and_then(|v| v.as_f64()),
+        })
+    }
+}
+
+impl DumpEntry {
+    /// Parse one flight entry object.
+    pub fn from_json(j: &Json) -> Result<DumpEntry> {
+        let events = j
+            .get("events")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| crate::err!("flight entry: missing events array"))?
+            .iter()
+            .map(DumpEvent::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DumpEntry {
+            trace_id: j.get("trace_id").and_then(|v| v.as_u64()).unwrap_or(0),
+            request_id: j.get("request_id").and_then(|v| v.as_u64()).unwrap_or(0),
+            label: j.get("label").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            outcome: j.get("outcome").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            pinned: j.get("pinned").and_then(|v| v.as_bool()).unwrap_or(false),
+            dropped: j.get("dropped").and_then(|v| v.as_u64()).unwrap_or(0),
+            events,
+        })
+    }
+
+    /// Parse a whole `{"cmd":"dump"}` reply (or one `"trace"` response
+    /// field wrapped as a single-entry dump) into entries.
+    pub fn from_dump(j: &Json) -> Result<Vec<DumpEntry>> {
+        let entries = j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| crate::err!("dump reply: missing entries array"))?;
+        entries.iter().map(DumpEntry::from_json).collect()
+    }
+}
+
+impl From<&FlightEntry> for DumpEntry {
+    fn from(e: &FlightEntry) -> DumpEntry {
+        DumpEntry {
+            trace_id: e.trace_id,
+            request_id: e.request_id,
+            label: e.label.clone(),
+            outcome: e.outcome.to_string(),
+            pinned: e.pinned,
+            dropped: e.dropped,
+            events: e
+                .events
+                .iter()
+                .map(|ev| DumpEvent {
+                    name: ev.name.to_string(),
+                    t_us: ev.t_us,
+                    dur_us: ev.dur_us,
+                    a: ev.a,
+                    b: ev.b,
+                    c: ev.c,
+                    f: if ev.f.is_finite() { Some(ev.f) } else { None },
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Give an event's generic `a`/`b`/`c`/`f` payloads their semantic
+/// names (shared by the Chrome exporter and the text renderer).
+fn args_json(ev: &DumpEvent) -> Json {
+    let mut j = match ev.name.as_str() {
+        "submit" => Json::obj().set("request_id", ev.a),
+        "queue_push" => Json::obj().set("queue_depth", ev.a),
+        "queue_pop" => Json::obj(),
+        "batch" => Json::obj().set("members", ev.a).set("padded", ev.b),
+        "step" => Json::obj().set("step", ev.a).set("computes", ev.b).set("reuses", ev.c),
+        "site" => Json::obj().set("step", ev.a).set("site", ev.b).set(
+            "decision",
+            if ev.c == 1 { "compute" } else { "reuse" },
+        ),
+        "park" | "resume" => Json::obj().set("step", ev.a),
+        "frame_in" | "frame_out" | "recv" | "send" => Json::obj().set("bytes", ev.a),
+        "reject" | "calibrate" | "plan" => Json::obj(),
+        _ => Json::obj().set("a", ev.a).set("b", ev.b).set("c", ev.c),
+    };
+    if let Some(f) = ev.f {
+        let key = match ev.name.as_str() {
+            "queue_pop" => "wait_s",
+            "step" | "site" => "drift",
+            "resume" => "parked_s",
+            _ => "f",
+        };
+        j = j.set(key, f);
+    }
+    j
+}
+
+/// Build a Chrome trace-event document (the JSON-object form with a
+/// `traceEvents` array) from dump entries. Spans become `"ph":"X"`
+/// complete events and instants `"ph":"i"`; each trace gets its own
+/// `tid` row under one `pid`, plus a thread-name metadata record
+/// labelling the row with the trace id, outcome, and label.
+pub fn chrome_trace(entries: &[DumpEntry]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for e in entries {
+        events.push(
+            Json::obj()
+                .set("name", "thread_name")
+                .set("ph", "M")
+                .set("pid", 1u64)
+                .set("tid", e.trace_id)
+                .set(
+                    "args",
+                    Json::obj().set(
+                        "name",
+                        format!("trace {} [{}] {}", e.trace_id, e.outcome, e.label),
+                    ),
+                ),
+        );
+        for ev in &e.events {
+            let mut j = Json::obj()
+                .set("name", ev.name.as_str())
+                .set("cat", "smoothcache")
+                .set("ts", ev.t_us)
+                .set("pid", 1u64)
+                .set("tid", e.trace_id)
+                .set("args", args_json(ev));
+            if ev.dur_us > 0 {
+                j = j.set("ph", "X").set("dur", ev.dur_us);
+            } else {
+                j = j.set("ph", "i").set("s", "t");
+            }
+            events.push(j);
+        }
+    }
+    Json::obj().set("traceEvents", Json::Arr(events)).set("displayTimeUnit", "ms")
+}
+
+/// Render dump entries as a plain-text timeline (the `smoothcache
+/// trace` default output).
+pub fn render(entries: &[DumpEntry]) -> String {
+    let mut out = String::new();
+    for e in entries {
+        out.push_str(&format!(
+            "trace {} request {} [{}]{} {}{}\n",
+            e.trace_id,
+            e.request_id,
+            e.outcome,
+            if e.pinned { " pinned" } else { "" },
+            e.label,
+            if e.dropped > 0 { format!(" ({} events dropped)", e.dropped) } else { String::new() },
+        ));
+        let mut events = e.events.clone();
+        events.sort_by_key(|ev| ev.t_us);
+        for ev in &events {
+            let dur = if ev.dur_us > 0 {
+                format!(" +{:>7.3}ms", ev.dur_us as f64 / 1e3)
+            } else {
+                "           ".to_string()
+            };
+            out.push_str(&format!(
+                "  {:>10.3}ms{dur}  {:<10} {}\n",
+                ev.t_us as f64 / 1e3,
+                ev.name,
+                args_json(ev).to_string(),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample() -> DumpEntry {
+        DumpEntry {
+            trace_id: 9,
+            request_id: 3,
+            label: "image/no-cache".into(),
+            outcome: "ok".into(),
+            pinned: false,
+            dropped: 0,
+            events: vec![
+                DumpEvent { name: "submit".into(), t_us: 1, dur_us: 0, a: 3, b: 0, c: 0, f: None },
+                DumpEvent {
+                    name: "step".into(),
+                    t_us: 10,
+                    dur_us: 40,
+                    a: 0,
+                    b: 5,
+                    c: 2,
+                    f: Some(0.25),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let j = chrome_trace(&[sample()]);
+        let back = parse(&j.to_string()).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 metadata + 2 events
+        assert_eq!(evs.len(), 3);
+        let span = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|v| v.as_str()) == Some("step"))
+            .unwrap();
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("dur").unwrap().as_u64(), Some(40));
+        assert_eq!(span.get("tid").unwrap().as_u64(), Some(9));
+        let args = span.get("args").unwrap();
+        assert_eq!(args.get("computes").unwrap().as_u64(), Some(5));
+        assert_eq!(args.get("drift").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn dump_roundtrip() {
+        let e = sample();
+        let wire = Json::obj().set(
+            "entries",
+            Json::Arr(vec![Json::obj()
+                .set("trace_id", e.trace_id)
+                .set("request_id", e.request_id)
+                .set("label", e.label.as_str())
+                .set("outcome", e.outcome.as_str())
+                .set("pinned", e.pinned)
+                .set("dropped", e.dropped)
+                .set(
+                    "events",
+                    Json::Arr(vec![
+                        parse(r#"{"name":"submit","t_us":1,"dur_us":0,"a":3,"b":0,"c":0}"#)
+                            .unwrap(),
+                        parse(
+                            r#"{"name":"step","t_us":10,"dur_us":40,"a":0,"b":5,"c":2,"f":0.25}"#,
+                        )
+                        .unwrap(),
+                    ]),
+                )]),
+        );
+        let parsed = DumpEntry::from_dump(&wire).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].trace_id, 9);
+        assert_eq!(parsed[0].events, e.events);
+        assert!(DumpEntry::from_dump(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn render_mentions_every_event() {
+        let text = render(&[sample()]);
+        assert!(text.contains("trace 9"), "{text}");
+        assert!(text.contains("submit"), "{text}");
+        assert!(text.contains("step"), "{text}");
+    }
+}

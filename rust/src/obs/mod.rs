@@ -1,0 +1,840 @@
+//! `obs` — structured tracing, per-request timelines, and a flight
+//! recorder across the serving stack (docs/adr/009-observability-subsystem.md).
+//!
+//! The serving pipeline (queue → batcher → executor → `GenSession` →
+//! mux) exposes aggregate counters through
+//! [`Metrics`](crate::coordinator::Metrics), but aggregates cannot
+//! answer "where did *this* request's 180 ms go, and which sites did it
+//! reuse at step 17?". This module adds exactly that, with the same
+//! zero-dependency discipline as the rest of the crate (ADR-001):
+//!
+//! * **[`TraceHandle`]** — a cheap, cloneable per-request trace context
+//!   (trace id + its own monotonic clock) attached to every submission.
+//!   Instrumentation sites record instant events and completed spans
+//!   into the handle's bounded buffer; when tracing is `off` the handle
+//!   is a `None` and every operation is a branch on a machine word —
+//!   no allocation, no lock, no clock read (pinned by
+//!   `tests/obs.rs::disabled_mode_allocates_nothing`).
+//! * **[`TraceLevel`]** — `off` / `coarse` / `fine`, selected by
+//!   `SMOOTHCACHE_TRACE` at first use and overridable programmatically
+//!   with [`set_level`]. The default is `coarse`, so the flight
+//!   recorder is always populated in a normally-configured server.
+//!   `fine` additionally records one event per (step, site) reuse
+//!   decision via the thread-local staging buffer below.
+//! * **[`FlightRecorder`]** — a process-wide ring that retains the
+//!   complete timelines of the last N finished requests. Requests that
+//!   errored, were cancelled, or missed their deadline are **pinned**
+//!   into a separate bounded lane so they survive ring wraparound —
+//!   the entries an operator actually wants are the ones a plain ring
+//!   evicts first. `{"cmd":"dump"}` on the wire and `smoothcache trace`
+//!   on the CLI read it out (docs/protocol.md).
+//! * **fine-granularity staging** — per-site decisions are the hot
+//!   path (sites × steps events per batch), so they stage in a
+//!   per-thread bounded buffer ([`with_fine_scope`]) and flush to the
+//!   batch's active handles once per solver step instead of taking the
+//!   sink lock per site.
+//! * **[`export`]** — Chrome `chrome://tracing` trace-event JSON and a
+//!   human-readable timeline renderer over flight-recorder dumps.
+//!
+//! Tracing is observational only: no instrumentation site feeds back
+//! into scheduling or numerics, so generated latents are bitwise
+//! identical at every level (pinned by `tests/obs.rs` and by the
+//! `SMOOTHCACHE_TRACE=fine` CI lane).
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Trace level
+// ---------------------------------------------------------------------------
+
+/// Tracing granularity. Ordered: `Off < Coarse < Fine`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// No recording at all; every obs call is a cheap no-op and the
+    /// request path allocates nothing for tracing.
+    Off = 0,
+    /// Request-lifecycle events and spans: submit, queue push/pop,
+    /// batch formation, calibration, per-solver-step spans, park /
+    /// resume, frame ingress/egress. The always-on default.
+    Coarse = 1,
+    /// Everything in `Coarse` plus one event per (step, site) reuse
+    /// decision, staged through the per-thread buffer.
+    Fine = 2,
+}
+
+impl TraceLevel {
+    /// Parse a `SMOOTHCACHE_TRACE` value. Unrecognised strings are
+    /// `None` (the caller falls back to the default).
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s {
+            "off" | "0" | "none" => Some(TraceLevel::Off),
+            "coarse" | "on" | "1" => Some(TraceLevel::Coarse),
+            "fine" | "2" => Some(TraceLevel::Fine),
+            _ => None,
+        }
+    }
+
+    /// Canonical wire name (`off` / `coarse` / `fine`).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Coarse => "coarse",
+            TraceLevel::Fine => "fine",
+        }
+    }
+
+    fn from_u8(v: u8) -> TraceLevel {
+        match v {
+            0 => TraceLevel::Off,
+            1 => TraceLevel::Coarse,
+            _ => TraceLevel::Fine,
+        }
+    }
+}
+
+const LEVEL_UNSET: u8 = 0xff;
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+/// The active [`TraceLevel`]. First call reads `SMOOTHCACHE_TRACE`
+/// (default `coarse`); after that it is one relaxed atomic load.
+pub fn level() -> TraceLevel {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v == LEVEL_UNSET {
+        init_level()
+    } else {
+        TraceLevel::from_u8(v)
+    }
+}
+
+#[cold]
+fn init_level() -> TraceLevel {
+    let l = std::env::var("SMOOTHCACHE_TRACE")
+        .ok()
+        .and_then(|s| TraceLevel::parse(&s))
+        .unwrap_or(TraceLevel::Coarse);
+    LEVEL.store(l as u8, Ordering::Relaxed);
+    l
+}
+
+/// Override the trace level for the whole process (benches and tests;
+/// servers normally configure via `SMOOTHCACHE_TRACE`). Takes effect
+/// for handles created *after* the call — live handles keep recording.
+pub fn set_level(l: TraceLevel) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// One recorded instant event (`dur_us == 0`) or completed span.
+///
+/// Names are `&'static str` and payloads are plain words so recording
+/// never allocates; the meaning of `a`/`b`/`c`/`f` is per-name
+/// (docs/protocol.md §Trace timelines) and [`export`] renders them with
+/// their semantic names.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Event name (`submit`, `queue_pop`, `step`, `site`, …).
+    pub name: &'static str,
+    /// Microseconds since the owning trace started.
+    pub t_us: u64,
+    /// Span duration in microseconds; 0 for instant events.
+    pub dur_us: u64,
+    /// First integer payload (per-name meaning).
+    pub a: u64,
+    /// Second integer payload (per-name meaning).
+    pub b: u64,
+    /// Third integer payload (per-name meaning).
+    pub c: u64,
+    /// Float payload (per-name meaning); NaN means "absent" and is
+    /// omitted from JSON.
+    pub f: f64,
+}
+
+impl TraceEvent {
+    /// Serialize for the wire timeline / flight-recorder dump.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("name", self.name)
+            .set("t_us", self.t_us)
+            .set("dur_us", self.dur_us)
+            .set("a", self.a)
+            .set("b", self.b)
+            .set("c", self.c);
+        if self.f.is_finite() {
+            j = j.set("f", self.f);
+        }
+        j
+    }
+}
+
+/// Terminal outcome of a traced request — decides whether its flight
+/// entry is pinned past ring wraparound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed normally.
+    Ok,
+    /// Batch execution failed.
+    Failed,
+    /// Cancelled by command or disconnect.
+    Cancelled,
+    /// Shed or rejected after missing its deadline.
+    DeadlineMissed,
+    /// Rejected by admission control or the credit window.
+    Overloaded,
+}
+
+impl Outcome {
+    /// Stable wire label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Failed => "failed",
+            Outcome::Cancelled => "cancelled",
+            Outcome::DeadlineMissed => "deadline",
+            Outcome::Overloaded => "overloaded",
+        }
+    }
+
+    /// Everything except a clean completion is pinned in the recorder.
+    pub fn pinned(self) -> bool {
+        self != Outcome::Ok
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-request sink + handle
+// ---------------------------------------------------------------------------
+
+/// Cap on buffered events per trace; excess events are counted in
+/// `dropped` rather than growing without bound (a fine-level 50-step
+/// video trajectory stays well under this).
+pub const MAX_TRACE_EVENTS: usize = 8192;
+
+struct SinkInner {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+    request_id: u64,
+    label: String,
+}
+
+struct SinkShared {
+    trace_id: u64,
+    start: Instant,
+    finished: AtomicBool,
+    inner: Mutex<SinkInner>,
+}
+
+fn lock_inner(s: &SinkShared) -> MutexGuard<'_, SinkInner> {
+    // tracing must never take a panic down with it: a poisoned sink
+    // just keeps recording
+    s.inner.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl SinkShared {
+    fn push(&self, ev: TraceEvent) {
+        let mut g = lock_inner(self);
+        if g.events.len() >= MAX_TRACE_EVENTS {
+            g.dropped += 1;
+        } else {
+            g.events.push(ev);
+        }
+    }
+}
+
+/// Per-request trace context: trace id + monotonic clock + bounded
+/// event buffer. Cloning shares the buffer (`Arc`); the default /
+/// [`TraceHandle::off`] handle records nothing and allocates nothing.
+#[derive(Clone, Default)]
+pub struct TraceHandle(Option<Arc<SinkShared>>);
+
+impl TraceHandle {
+    /// A disabled handle — every operation is a no-op.
+    pub fn off() -> TraceHandle {
+        TraceHandle(None)
+    }
+
+    /// Open a trace at the current [`level`]; returns a disabled handle
+    /// when tracing is off (the no-allocation path).
+    pub fn start() -> TraceHandle {
+        if level() == TraceLevel::Off {
+            return TraceHandle(None);
+        }
+        TraceHandle(Some(Arc::new(SinkShared {
+            trace_id: NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed),
+            start: Instant::now(),
+            finished: AtomicBool::new(false),
+            inner: Mutex::new(SinkInner {
+                events: Vec::new(),
+                dropped: 0,
+                request_id: 0,
+                label: String::new(),
+            }),
+        })))
+    }
+
+    /// True when the handle records.
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The trace id, or 0 for a disabled handle.
+    pub fn id(&self) -> u64 {
+        self.0.as_ref().map_or(0, |s| s.trace_id)
+    }
+
+    /// ` [trace N]` suffix for typed error messages (empty — and
+    /// allocation-free — when disabled), so server log lines and
+    /// flight-recorder entries cross-reference.
+    pub fn err_tag(&self) -> String {
+        match &self.0 {
+            None => String::new(),
+            Some(s) => format!(" [trace {}]", s.trace_id),
+        }
+    }
+
+    /// Microseconds since the trace started (0 when disabled).
+    pub fn now_us(&self) -> u64 {
+        self.0.as_ref().map_or(0, |s| s.start.elapsed().as_micros() as u64)
+    }
+
+    /// Attach the coordinator request id and a short label (family /
+    /// policy) shown in flight-recorder listings.
+    pub fn set_meta(&self, request_id: u64, label: &str) {
+        if let Some(s) = &self.0 {
+            let mut g = lock_inner(s);
+            if request_id != 0 {
+                g.request_id = request_id;
+            }
+            if !label.is_empty() {
+                g.label = label.to_string();
+            }
+        }
+    }
+
+    /// Record an instant event.
+    pub fn event(&self, name: &'static str, a: u64, b: u64, c: u64, f: f64) {
+        if let Some(s) = &self.0 {
+            let t_us = s.start.elapsed().as_micros() as u64;
+            s.push(TraceEvent { name, t_us, dur_us: 0, a, b, c, f });
+        }
+    }
+
+    /// Timestamp for a later [`TraceHandle::span_from`] (0 when
+    /// disabled).
+    pub fn begin(&self) -> u64 {
+        self.now_us()
+    }
+
+    /// Record a span that started at `t0_us` (from
+    /// [`TraceHandle::begin`]) and ends now.
+    pub fn span_from(&self, name: &'static str, t0_us: u64, a: u64, b: u64, c: u64, f: f64) {
+        if let Some(s) = &self.0 {
+            let now = s.start.elapsed().as_micros() as u64;
+            s.push(TraceEvent {
+                name,
+                t_us: t0_us,
+                dur_us: now.saturating_sub(t0_us),
+                a,
+                b,
+                c,
+                f,
+            });
+        }
+    }
+
+    /// Copy the timeline out (for the `"trace":true` wire response).
+    /// `None` when disabled. Works before or after
+    /// [`TraceHandle::finish`].
+    pub fn snapshot(&self) -> Option<Timeline> {
+        let s = self.0.as_ref()?;
+        let g = lock_inner(s);
+        Some(Timeline {
+            trace_id: s.trace_id,
+            request_id: g.request_id,
+            dropped: g.dropped,
+            events: g.events.clone(),
+        })
+    }
+
+    /// Close the trace with `outcome` and deposit a copy of its
+    /// timeline into the global [`FlightRecorder`]. Idempotent: the
+    /// first call wins, later calls (the server's catch-all after the
+    /// executor already finished) are no-ops.
+    pub fn finish(&self, outcome: Outcome) {
+        let Some(s) = &self.0 else { return };
+        if s.finished.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let g = lock_inner(s);
+        let entry = FlightEntry {
+            trace_id: s.trace_id,
+            request_id: g.request_id,
+            label: g.label.clone(),
+            outcome: outcome.label(),
+            pinned: outcome.pinned(),
+            dropped: g.dropped,
+            events: g.events.clone(),
+        };
+        drop(g);
+        recorder().record(entry);
+    }
+}
+
+impl std::fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "TraceHandle(off)"),
+            Some(s) => write!(f, "TraceHandle({})", s.trace_id),
+        }
+    }
+}
+
+/// A copied-out per-request timeline (the `"trace"` response field).
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    /// Trace id (cross-references ` [trace N]` error suffixes and
+    /// flight-recorder entries).
+    pub trace_id: u64,
+    /// Coordinator request id (0 before assignment).
+    pub request_id: u64,
+    /// Events dropped past [`MAX_TRACE_EVENTS`].
+    pub dropped: u64,
+    /// The recorded events, in recording order per thread.
+    pub events: Vec<TraceEvent>,
+}
+
+impl Timeline {
+    /// Serialize as the wire `"trace"` object (docs/protocol.md).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("trace_id", self.trace_id)
+            .set("request_id", self.request_id)
+            .set("dropped", self.dropped)
+            .set("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch fan-out
+// ---------------------------------------------------------------------------
+
+/// The active trace handles of one executing batch. Spans recorded
+/// while driving a batch apply to every traced member's timeline;
+/// members without tracing cost nothing. Batch spans use a shared
+/// `Instant` so one clock read serves all members (each handle has its
+/// own epoch, so the span is rebased per handle).
+pub struct BatchTrace {
+    handles: Vec<TraceHandle>,
+}
+
+impl BatchTrace {
+    /// Collect the active handles out of a batch's members.
+    pub fn new<'a>(handles: impl Iterator<Item = &'a TraceHandle>) -> BatchTrace {
+        BatchTrace { handles: handles.filter(|h| h.is_active()).cloned().collect() }
+    }
+
+    /// True when at least one member is traced.
+    pub fn is_active(&self) -> bool {
+        !self.handles.is_empty()
+    }
+
+    /// Record an instant event on every traced member.
+    pub fn event(&self, name: &'static str, a: u64, b: u64, c: u64, f: f64) {
+        for h in &self.handles {
+            h.event(name, a, b, c, f);
+        }
+    }
+
+    /// Start a batch span; `None` when no member is traced (and the
+    /// matching [`BatchTrace::span_from`] is then a no-op).
+    pub fn begin(&self) -> Option<Instant> {
+        if self.is_active() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// End a batch span started with [`BatchTrace::begin`], recording
+    /// it on every traced member (rebased onto each member's clock).
+    pub fn span_from(
+        &self,
+        name: &'static str,
+        t0: Option<Instant>,
+        a: u64,
+        b: u64,
+        c: u64,
+        f: f64,
+    ) {
+        let Some(t0) = t0 else { return };
+        let dur_us = t0.elapsed().as_micros() as u64;
+        for h in &self.handles {
+            if let Some(s) = &h.0 {
+                let now = s.start.elapsed().as_micros() as u64;
+                s.push(TraceEvent {
+                    name,
+                    t_us: now.saturating_sub(dur_us),
+                    dur_us,
+                    a,
+                    b,
+                    c,
+                    f,
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fine-granularity per-thread staging
+// ---------------------------------------------------------------------------
+
+/// Cap on per-thread staged fine events per scope (one solver step
+/// stages at most `sites` events, far below this).
+pub const MAX_SITE_BUF: usize = 4096;
+
+struct FineState {
+    start: Instant,
+    buf: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+thread_local! {
+    static FINE: RefCell<Option<FineState>> = const { RefCell::new(None) };
+}
+
+/// Record one per-site reuse decision at fine granularity
+/// (`a`=step, `b`=site index, `c`=1 for compute / 0 for reuse,
+/// `f`=last observed drift at the site). Stages into the calling
+/// thread's bounded buffer; a no-op outside a [`with_fine_scope`] —
+/// in particular, always a no-op below [`TraceLevel::Fine`], so the
+/// generate loop pays one atomic load per site when not fine-tracing.
+pub fn site_event(step: usize, site: usize, computed: bool, drift: Option<f64>) {
+    if level() != TraceLevel::Fine {
+        return;
+    }
+    FINE.with(|slot| {
+        let mut g = slot.borrow_mut();
+        let Some(st) = g.as_mut() else { return };
+        if st.buf.len() >= MAX_SITE_BUF {
+            st.dropped += 1;
+            return;
+        }
+        st.buf.push(TraceEvent {
+            name: "site",
+            t_us: st.start.elapsed().as_micros() as u64,
+            dur_us: 0,
+            a: step as u64,
+            b: site as u64,
+            c: computed as u64,
+            f: drift.unwrap_or(f64::NAN),
+        });
+    });
+}
+
+struct FineGuard;
+impl Drop for FineGuard {
+    fn drop(&mut self) {
+        FINE.with(|slot| *slot.borrow_mut() = None);
+    }
+}
+
+/// Run `f` with fine-granularity staging active on this thread, then
+/// flush the staged [`site_event`]s into every handle of `bt` (rebased
+/// onto each handle's clock). When the level is below `Fine` or no
+/// batch member is traced this is exactly `f()` — the executor wraps
+/// each `GenSession::step` call in this scope.
+pub fn with_fine_scope<R>(bt: &BatchTrace, f: impl FnOnce() -> R) -> R {
+    if level() != TraceLevel::Fine || !bt.is_active() {
+        return f();
+    }
+    let _reset = FineGuard;
+    FINE.with(|slot| {
+        *slot.borrow_mut() =
+            Some(FineState { start: Instant::now(), buf: Vec::new(), dropped: 0 });
+    });
+    let out = f();
+    let st = FINE.with(|slot| slot.borrow_mut().take());
+    if let Some(st) = st {
+        let scope_now = st.start.elapsed().as_micros() as u64;
+        for h in &bt.handles {
+            let Some(s) = &h.0 else { continue };
+            // rebase: scope-relative t → handle-relative t
+            let handle_now = s.start.elapsed().as_micros() as u64;
+            let offset = handle_now.saturating_sub(scope_now);
+            let mut g = lock_inner(s);
+            g.dropped += st.dropped;
+            for ev in &st.buf {
+                if g.events.len() >= MAX_TRACE_EVENTS {
+                    g.dropped += 1;
+                } else {
+                    g.events.push(TraceEvent { t_us: ev.t_us + offset, ..*ev });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder
+// ---------------------------------------------------------------------------
+
+/// One finished request's retained timeline.
+#[derive(Clone, Debug)]
+pub struct FlightEntry {
+    /// Trace id (matches ` [trace N]` error-message suffixes).
+    pub trace_id: u64,
+    /// Coordinator request id (0 if the request never reached
+    /// admission).
+    pub request_id: u64,
+    /// Short label (family / policy) set at submission.
+    pub label: String,
+    /// Terminal [`Outcome::label`].
+    pub outcome: &'static str,
+    /// True when the entry sits in the pinned lane (errored /
+    /// cancelled / deadline-missed requests survive ring wraparound).
+    pub pinned: bool,
+    /// Events dropped past the per-trace cap.
+    pub dropped: u64,
+    /// The retained timeline.
+    pub events: Vec<TraceEvent>,
+}
+
+impl FlightEntry {
+    /// Serialize for the `{"cmd":"dump"}` reply.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("trace_id", self.trace_id)
+            .set("request_id", self.request_id)
+            .set("label", self.label.as_str())
+            .set("outcome", self.outcome)
+            .set("pinned", self.pinned)
+            .set("dropped", self.dropped)
+            .set("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect()))
+    }
+}
+
+struct RecInner {
+    cap: usize,
+    pinned_cap: usize,
+    ring: VecDeque<FlightEntry>,
+    pinned: VecDeque<FlightEntry>,
+}
+
+/// Process-wide ring of finished-request timelines. Clean completions
+/// rotate through a ring of `cap` entries; error outcomes go to a
+/// separate `pinned_cap` FIFO lane so a burst of successful traffic
+/// cannot evict the failure an operator is about to debug.
+pub struct FlightRecorder {
+    inner: Mutex<RecInner>,
+}
+
+impl FlightRecorder {
+    /// Build a recorder with explicit capacities (tests; the global
+    /// [`recorder`] sizes itself from `SMOOTHCACHE_FLIGHT_CAP`).
+    pub fn with_capacity(cap: usize, pinned_cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            inner: Mutex::new(RecInner {
+                cap: cap.max(1),
+                pinned_cap: pinned_cap.max(1),
+                ring: VecDeque::new(),
+                pinned: VecDeque::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RecInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Deposit one finished request. Pinned entries evict only older
+    /// pinned entries; ring entries only older ring entries.
+    pub fn record(&self, e: FlightEntry) {
+        let mut g = self.lock();
+        if e.pinned {
+            if g.pinned.len() >= g.pinned_cap {
+                g.pinned.pop_front();
+            }
+            g.pinned.push_back(e);
+        } else {
+            if g.ring.len() >= g.cap {
+                g.ring.pop_front();
+            }
+            g.ring.push_back(e);
+        }
+    }
+
+    /// Copy every retained entry out, ordered by trace id (pinned and
+    /// ring interleaved into one trajectory).
+    pub fn dump(&self) -> Vec<FlightEntry> {
+        let g = self.lock();
+        let mut out: Vec<FlightEntry> = g.pinned.iter().chain(g.ring.iter()).cloned().collect();
+        out.sort_by_key(|e| e.trace_id);
+        out
+    }
+
+    /// Retained entry count (pinned + ring).
+    pub fn len(&self) -> usize {
+        let g = self.lock();
+        g.pinned.len() + g.ring.len()
+    }
+
+    /// True when nothing is retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every retained entry (tests).
+    pub fn clear(&self) {
+        let mut g = self.lock();
+        g.ring.clear();
+        g.pinned.clear();
+    }
+
+    /// The `{"cmd":"dump"}` reply body: active level + every entry.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self.dump().iter().map(|e| e.to_json()).collect();
+        Json::obj().set("level", level().name()).set("entries", Json::Arr(entries))
+    }
+}
+
+/// The global flight recorder. Capacity comes from
+/// `SMOOTHCACHE_FLIGHT_CAP` (default 64 ring entries; pinned lane is
+/// half that, min 8).
+pub fn recorder() -> &'static FlightRecorder {
+    static R: OnceLock<FlightRecorder> = OnceLock::new();
+    R.get_or_init(|| {
+        let cap = std::env::var("SMOOTHCACHE_FLIGHT_CAP")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(64);
+        FlightRecorder::with_capacity(cap, (cap / 2).max(8))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: u64, pinned: bool) -> FlightEntry {
+        FlightEntry {
+            trace_id: id,
+            request_id: id,
+            label: "t".into(),
+            outcome: if pinned { "failed" } else { "ok" },
+            pinned,
+            dropped: 0,
+            events: vec![TraceEvent {
+                name: "submit",
+                t_us: 1,
+                dur_us: 0,
+                a: id,
+                b: 0,
+                c: 0,
+                f: f64::NAN,
+            }],
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_pins_survive() {
+        let r = FlightRecorder::with_capacity(4, 2);
+        for i in 0..10 {
+            r.record(entry(i, false));
+        }
+        r.record(entry(100, true));
+        for i in 10..20 {
+            r.record(entry(i, false));
+        }
+        let d = r.dump();
+        // ring holds the last 4 unpinned; the pinned entry survived 10
+        // further unpinned inserts
+        assert_eq!(d.len(), 5);
+        assert!(d.iter().any(|e| e.trace_id == 100 && e.pinned));
+        let ring_ids: Vec<u64> =
+            d.iter().filter(|e| !e.pinned).map(|e| e.trace_id).collect();
+        assert_eq!(ring_ids, vec![16, 17, 18, 19]);
+    }
+
+    #[test]
+    fn pinned_lane_is_bounded_fifo() {
+        let r = FlightRecorder::with_capacity(4, 2);
+        for i in 0..5 {
+            r.record(entry(i, true));
+        }
+        let ids: Vec<u64> = r.dump().iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![3, 4]);
+    }
+
+    #[test]
+    fn event_json_omits_nan_float() {
+        let ev =
+            TraceEvent { name: "step", t_us: 5, dur_us: 2, a: 1, b: 2, c: 3, f: f64::NAN };
+        let j = ev.to_json();
+        assert!(j.get("f").is_none());
+        assert_eq!(j.get("name").unwrap().as_str(), Some("step"));
+        let ev2 = TraceEvent { f: 0.5, ..ev };
+        assert_eq!(ev2.to_json().get("f").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn off_handle_is_inert() {
+        let h = TraceHandle::off();
+        assert!(!h.is_active());
+        assert_eq!(h.id(), 0);
+        assert_eq!(h.err_tag(), "");
+        h.event("submit", 1, 2, 3, 0.0);
+        h.span_from("step", h.begin(), 0, 0, 0, 0.0);
+        h.finish(Outcome::Ok);
+        assert!(h.snapshot().is_none());
+    }
+
+    #[test]
+    fn handle_records_and_bounds() {
+        let h = TraceHandle(Some(Arc::new(SinkShared {
+            trace_id: 7,
+            start: Instant::now(),
+            finished: AtomicBool::new(false),
+            inner: Mutex::new(SinkInner {
+                events: Vec::new(),
+                dropped: 0,
+                request_id: 0,
+                label: String::new(),
+            }),
+        })));
+        h.set_meta(42, "image/no-cache");
+        for i in 0..(MAX_TRACE_EVENTS + 10) {
+            h.event("submit", i as u64, 0, 0, f64::NAN);
+        }
+        let t = h.snapshot().unwrap();
+        assert_eq!(t.trace_id, 7);
+        assert_eq!(t.request_id, 42);
+        assert_eq!(t.events.len(), MAX_TRACE_EVENTS);
+        assert_eq!(t.dropped, 10);
+        assert!(h.err_tag().contains("trace 7"));
+    }
+
+    #[test]
+    fn level_parse_roundtrip() {
+        for l in [TraceLevel::Off, TraceLevel::Coarse, TraceLevel::Fine] {
+            assert_eq!(TraceLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(TraceLevel::parse("bogus"), None);
+        assert!(TraceLevel::Off < TraceLevel::Coarse);
+        assert!(TraceLevel::Coarse < TraceLevel::Fine);
+    }
+}

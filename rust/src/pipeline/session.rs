@@ -387,6 +387,7 @@ impl<'a> GenSession<'a> {
                     sp.decide(i, s_idx, &obs)
                 }
             };
+            let computed = matches!(decision, Decision::Compute);
             match decision {
                 Decision::Compute => {
                     let d = self.engine.branch(&self.cfg.family, *block, br, &tokens, &ctx)?;
@@ -420,6 +421,10 @@ impl<'a> GenSession<'a> {
                     tokens.add_inplace(d);
                 }
             }
+            // fine-granularity tracing (docs/adr/009): stages into the
+            // executor thread's buffer, a single relaxed load otherwise —
+            // purely observational, the trajectory never depends on it
+            crate::obs::site_event(i, s_idx, computed, self.last_drift[s_idx]);
         }
 
         let out = self.engine.final_head(&self.cfg.family, &tokens, &ctx)?;

@@ -10,9 +10,14 @@
 //! includes the generated latent in the response; `stream: true`
 //! switches the reply to streaming mode (one `{"event":"step",…}` line
 //! per solver step, then the final result line); `deadline_ms` (+
-//! `deadline_policy`) attaches a latency budget. Control commands:
-//! `{"cmd": "ping"}`, `{"cmd": "metrics"}`, `{"cmd": "cancel",
-//! "id": N}`, `{"cmd": "shutdown"}`.
+//! `deadline_policy`) attaches a latency budget; `trace: true` returns
+//! the request's recorded timeline as a `"trace"` object on the final
+//! reply (docs/adr/009; requires tracing enabled, i.e.
+//! `SMOOTHCACHE_TRACE` not `off`). Control commands:
+//! `{"cmd": "ping"}`, `{"cmd": "metrics"}` (plus `"format":"json"` for
+//! a structured [`crate::coordinator::Metrics::summary_json`] reply),
+//! `{"cmd": "dump"}` (the flight recorder's retained timelines),
+//! `{"cmd": "cancel", "id": N}`, `{"cmd": "shutdown"}`.
 //! Failures are answered in-line as `{"ok": false, "error": "…"}`;
 //! admission-control rejections (the coordinator's work queue at
 //! `--queue-depth`, see [`crate::coordinator::queue`]) additionally
@@ -62,6 +67,7 @@ use crate::coordinator::{
     SubmitOpts,
 };
 use crate::model::Cond;
+use crate::obs::{recorder, Outcome, TraceHandle};
 use crate::solvers::SolverKind;
 use crate::tensor::ComputeMode;
 use crate::util::json::{parse, Json};
@@ -81,6 +87,9 @@ pub struct WireOpts {
     pub deadline_ms: Option<u64>,
     /// What to do with work that misses the deadline.
     pub deadline_policy: DeadlinePolicy,
+    /// Return the request's recorded timeline as a `"trace"` object on
+    /// the final reply (docs/adr/009).
+    pub trace: bool,
 }
 
 impl WireOpts {
@@ -136,6 +145,7 @@ pub fn parse_request(j: &Json) -> Result<(Request, WireOpts)> {
     };
     let return_latent = j.get("return_latent").and_then(|v| v.as_bool()).unwrap_or(false);
     let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    let trace = j.get("trace").and_then(|v| v.as_bool()).unwrap_or(false);
     let deadline_ms = match j.get("deadline_ms") {
         None => None,
         Some(v) => Some(v.as_u64().filter(|&ms| ms > 0).ok_or_else(|| {
@@ -159,7 +169,7 @@ pub fn parse_request(j: &Json) -> Result<(Request, WireOpts)> {
     };
     Ok((
         Request { id: 0, family, cond, solver, steps, cfg_scale, seed, policy, compute, priority },
-        WireOpts { return_latent, stream, deadline_ms, deadline_policy },
+        WireOpts { return_latent, stream, deadline_ms, deadline_policy, trace },
     ))
 }
 
@@ -173,10 +183,18 @@ fn handle_control(coord: &Coordinator, j: &Json, stop: &AtomicBool) -> Option<St
     let cmd = j.get("cmd").and_then(|v| v.as_str())?;
     Some(match cmd {
         "ping" => Json::obj().set("ok", true).set("pong", true).to_string(),
-        "metrics" => Json::obj()
-            .set("ok", true)
-            .set("summary", coord.metrics().summary())
-            .to_string(),
+        "metrics" => match j.get("format").and_then(|v| v.as_str()) {
+            Some("json") => Json::obj()
+                .set("ok", true)
+                .set("metrics", coord.metrics().summary_json())
+                .to_string(),
+            None | Some("text") => Json::obj()
+                .set("ok", true)
+                .set("summary", coord.metrics().summary())
+                .to_string(),
+            Some(other) => fail(format!("metrics format must be text or json, got {other:?}")),
+        },
+        "dump" => recorder().to_json().set("ok", true).to_string(),
         "cancel" => match j.get("id").and_then(|v| v.as_u64()) {
             Some(id) => Json::obj()
                 .set("ok", true)
@@ -193,11 +211,12 @@ fn handle_control(coord: &Coordinator, j: &Json, stop: &AtomicBool) -> Option<St
     })
 }
 
-/// Render the final reply line for a generation outcome. Error replies
+/// Render the final reply for a generation outcome. Error replies
 /// carry machine-readable flags next to `error`: `overloaded` (queue
 /// admission, transient), `cancelled` (client-initiated), and
-/// `deadline_missed` (reject-late deadline).
-fn render_result(result: Result<Response>, opts: WireOpts) -> String {
+/// `deadline_missed` (reject-late deadline). Returned as [`Json`] so
+/// the traced path can append the timeline object before serializing.
+fn render_result_json(result: Result<Response>, opts: WireOpts) -> Json {
     match result {
         Ok(resp) => {
             let mut out = Json::obj();
@@ -226,7 +245,7 @@ fn render_result(result: Result<Response>, opts: WireOpts) -> String {
                     resp.latent.data.iter().map(|&v| Json::Num(v as f64)).collect::<Vec<_>>(),
                 );
             }
-            out.to_string()
+            out
         }
         Err(e) => {
             let msg = format!("{e}");
@@ -243,7 +262,7 @@ fn render_result(result: Result<Response>, opts: WireOpts) -> String {
             } else if msg.starts_with("deadline:") {
                 out = out.set("deadline_missed", true);
             }
-            out.set("error", msg).to_string()
+            out.set("error", msg)
         }
     }
 }
@@ -426,10 +445,12 @@ fn step_event(id: u64, p: &Progress) -> Json {
 /// milliseconds to the reply and drains step events at per-step
 /// cadence instead of ~5 Hz bursts; the idle timeout is restored on
 /// every exit path.
+#[allow(clippy::too_many_arguments)]
 fn run_generation(
     coord: &Coordinator,
     request: Request,
     opts: WireOpts,
+    trace: TraceHandle,
     reader: &mut BufReader<TcpStream>,
     read_buf: &mut String,
     writer: &mut TcpStream,
@@ -438,7 +459,8 @@ fn run_generation(
     let _ = reader
         .get_ref()
         .set_read_timeout(Some(Duration::from_millis(GEN_POLL_MS)));
-    let out = run_generation_inner(coord, request, opts, reader, read_buf, writer, pending);
+    let out =
+        run_generation_inner(coord, request, opts, trace, reader, read_buf, writer, pending);
     let _ = reader
         .get_ref()
         .set_read_timeout(Some(Duration::from_millis(IDLE_POLL_MS)));
@@ -453,10 +475,12 @@ const IDLE_POLL_MS: u64 = 200;
 /// disconnect-detection time to ~2× this value.
 const GEN_POLL_MS: u64 = 10;
 
+#[allow(clippy::too_many_arguments)]
 fn run_generation_inner(
     coord: &Coordinator,
     request: Request,
     opts: WireOpts,
+    trace: TraceHandle,
     reader: &mut BufReader<TcpStream>,
     read_buf: &mut String,
     writer: &mut TcpStream,
@@ -468,7 +492,10 @@ fn run_generation_inner(
     } else {
         (None, None)
     };
-    let ticket = coord.submit_opts(request, SubmitOpts { progress, deadline: opts.deadline() });
+    let ticket = coord.submit_opts(
+        request,
+        SubmitOpts { progress, deadline: opts.deadline(), trace: trace.clone() },
+    );
     let id = ticket.id;
     if opts.stream {
         // streaming clients learn the id up front so a sibling
@@ -538,7 +565,21 @@ fn run_generation_inner(
             }
         }
     }
-    write_line(writer, &render_result(result, opts))?;
+    let ok = result.is_ok();
+    let mut out = render_result_json(result, opts);
+    if trace.is_active() {
+        // the egress event lands in the wire timeline but not in the
+        // flight-recorder entry, which the terminal reply path already
+        // sealed (docs/adr/009)
+        trace.event("send", out.to_string().len() as u64, 0, 0, f64::NAN);
+        if let Some(t) = trace.snapshot() {
+            out = out.set("trace", t.to_json());
+        }
+        // catch-all for paths that never reached a terminal finish
+        // (e.g. coordinator shutdown mid-flight); idempotent otherwise
+        trace.finish(if ok { Outcome::Ok } else { Outcome::Failed });
+    }
+    write_line(writer, &out.to_string())?;
     Ok(true)
 }
 
@@ -653,10 +694,17 @@ fn handle_conn_v1(
         } else {
             match parse_request(&j) {
                 Ok((request, opts)) => {
+                    // open a wire-visible trace only on request; the
+                    // coordinator still auto-traces for the flight
+                    // recorder when this stays off (docs/adr/009)
+                    let trace =
+                        if opts.trace { TraceHandle::start() } else { TraceHandle::off() };
+                    trace.event("recv", line.len() as u64, 0, 0, f64::NAN);
                     let alive = run_generation(
                         coord,
                         request,
                         opts,
+                        trace,
                         &mut reader,
                         &mut read_buf,
                         &mut writer,
@@ -788,6 +836,21 @@ impl Client {
     pub fn metrics_summary(&mut self) -> Result<String> {
         let r = self.call(&Json::obj().set("cmd", "metrics"))?;
         Ok(r.get("summary").and_then(|v| v.as_str()).unwrap_or("").to_string())
+    }
+
+    /// Structured metrics (`{"cmd":"metrics","format":"json"}`) —
+    /// returns the `"metrics"` object (docs/protocol.md).
+    pub fn metrics_json(&mut self) -> Result<Json> {
+        let r = self.call(&Json::obj().set("cmd", "metrics").set("format", "json"))?;
+        r.get("metrics")
+            .cloned()
+            .ok_or_else(|| crate::err!("metrics reply missing \"metrics\" object"))
+    }
+
+    /// Dump the server's flight recorder (`{"cmd":"dump"}`): the full
+    /// reply carries `"level"` and `"entries"` (docs/adr/009).
+    pub fn dump(&mut self) -> Result<Json> {
+        self.call(&Json::obj().set("cmd", "dump"))
     }
 }
 
@@ -980,13 +1043,13 @@ mod tests {
             ("cancelled: request 3 was cancelled", "cancelled"),
             ("deadline: request 3 exceeded its deadline", "deadline_missed"),
         ] {
-            let line = render_result(Err(crate::err!("{msg}")), opts);
+            let line = render_result_json(Err(crate::err!("{msg}")), opts).to_string();
             let j = parse(&line).unwrap();
             assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{line}");
             assert_eq!(j.get(flag).and_then(|v| v.as_bool()), Some(true), "{line}");
         }
         // plain failures carry no class flag
-        let line = render_result(Err(crate::err!("boom")), opts);
+        let line = render_result_json(Err(crate::err!("boom")), opts).to_string();
         let j = parse(&line).unwrap();
         assert!(j.get("overloaded").is_none() && j.get("cancelled").is_none());
     }

@@ -36,11 +36,12 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Coordinator, Metrics, Progress, SubmitOpts};
+use crate::obs::{Outcome, TraceHandle};
 use crate::util::error::Result;
 use crate::util::json::{parse, scan_str, Json};
 
 use super::frame::{Decoded, Frame, FrameError, FrameReader, FrameType, VERSION};
-use super::{fail, handle_control, parse_request, render_result, step_event, ServerOpts};
+use super::{fail, handle_control, parse_request, render_result_json, step_event, ServerOpts};
 
 /// Read-timeout tick for the v2 reader loop: bounds stop-flag latency,
 /// keepalive granularity and teardown time.
@@ -335,15 +336,20 @@ fn run_request(shared: &ConnShared, id: u64, payload: Vec<u8>) {
         Ok(x) => x,
         Err(e) => return done(&fail(format!("{e}"))),
     };
+    // wire-visible trace on request only; the coordinator auto-traces
+    // for the flight recorder either way (docs/adr/009)
+    let trace = if wire_opts.trace { TraceHandle::start() } else { TraceHandle::off() };
+    trace.event("frame_in", payload.len() as u64, 0, 0, f64::NAN);
     let (progress, progress_rx): (Option<_>, Option<Receiver<Progress>>) = if wire_opts.stream {
         let (tx, rx) = channel();
         (Some(tx), Some(rx))
     } else {
         (None, None)
     };
-    let ticket = shared
-        .coord
-        .submit_opts(request, SubmitOpts { progress, deadline: wire_opts.deadline() });
+    let ticket = shared.coord.submit_opts(
+        request,
+        SubmitOpts { progress, deadline: wire_opts.deadline(), trace: trace.clone() },
+    );
     // publish the coordinator id; honor a cancel that raced submission
     {
         let mut inflight = shared.inflight.lock().unwrap();
@@ -392,5 +398,18 @@ fn run_request(shared: &ConnShared, id: u64, payload: Vec<u8>) {
             shared.send(&Frame::json(FrameType::Step, id, &step_event(id, &p)));
         }
     }
-    done(&render_result(result, wire_opts));
+    let ok = result.is_ok();
+    let mut out = render_result_json(result, wire_opts);
+    if trace.is_active() {
+        // frame_out carries the pre-timeline body size; attaching the
+        // timeline below inflates the actual response frame
+        trace.event("frame_out", out.to_string().len() as u64, 0, 0, f64::NAN);
+        if let Some(t) = trace.snapshot() {
+            out = out.set("trace", t.to_json());
+        }
+        // idempotent catch-all; terminal coordinator paths already
+        // sealed the flight-recorder entry with the precise outcome
+        trace.finish(if ok { Outcome::Ok } else { Outcome::Failed });
+    }
+    done(&out.to_string());
 }

@@ -74,6 +74,21 @@ impl BenchReport {
         self.meta.push((key.to_string(), value.to_string()));
     }
 
+    /// Append the standard run-environment keys every `BENCH_*.json`
+    /// emitter records so a report is interpretable without the shell
+    /// history that produced it: `run_threads` (GEMM pool size),
+    /// `run_kernel` (dispatched microkernel), `run_compute` (ambient
+    /// weight-matmul mode on the calling thread), and `run_workers`
+    /// (executor replicas; pass 0 for benches that drive the engine
+    /// directly). Metadata is informational — the regression gate only
+    /// compares metrics.
+    pub fn run_meta(&mut self, workers: usize) {
+        self.meta("run_threads", crate::tensor::gemm::threads());
+        self.meta("run_kernel", crate::tensor::gemm::active_kernel_name());
+        self.meta("run_compute", crate::tensor::quant::compute_mode().name());
+        self.meta("run_workers", workers);
+    }
+
     /// Append a metric, rejecting non-finite values, non-finite or
     /// negative tolerances, and duplicate names.
     pub fn push(&mut self, m: Metric) -> Result<()> {

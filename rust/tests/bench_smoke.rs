@@ -45,6 +45,14 @@ fn run_smoke_with(exe: &str, name: &str, extra_args: &[&str], area: &str, requir
         Some("true"),
         "{name}: report must record smoke=true"
     );
+    // every emitter records the run-environment block (BenchReport::run_meta)
+    for key in ["run_threads", "run_kernel", "run_compute", "run_workers"] {
+        assert!(
+            rep.meta.iter().any(|(k, _)| k == key),
+            "{name}: report must record {key} in its meta; present: {:?}",
+            rep.meta.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>()
+        );
+    }
     for key in required {
         assert!(
             rep.get(key).is_some(),
@@ -79,6 +87,9 @@ fn smoke_perf_engine() {
             "queue_wait_mean_ms",
             "exec_mean_ms",
             "e2e_mean_ms",
+            "obs:overhead_pct",
+            "obs:overhead_fine_pct",
+            "obs:disabled_ns_per_event",
         ],
     );
 }

@@ -297,7 +297,7 @@ fn cancelling_a_queued_request_frees_its_admission_slot() {
     let (ptx, prx) = std::sync::mpsc::channel();
     let a = coord.submit_opts(
         image_request(800, 1, Policy::no_cache()),
-        SubmitOpts { progress: Some(ptx), deadline: None },
+        SubmitOpts { progress: Some(ptx), deadline: None, trace: Default::default() },
     );
     prx.recv_timeout(Duration::from_secs(120)).expect("executor never started A");
 
@@ -375,7 +375,7 @@ fn cancelling_inflight_generation_stops_within_a_step() {
     let (ptx, prx) = std::sync::mpsc::channel();
     let ticket = coord.submit_opts(
         image_request(steps, 1, Policy::no_cache()),
-        SubmitOpts { progress: Some(ptx), deadline: None },
+        SubmitOpts { progress: Some(ptx), deadline: None, trace: Default::default() },
     );
     // first progress event ⇒ the generation is demonstrably in flight
     let first = prx.recv_timeout(Duration::from_secs(120)).expect("no progress event");
@@ -433,7 +433,7 @@ fn cancel_is_prompt_while_sibling_holds_calibration_lock() {
     let (ptx, prx) = std::sync::mpsc::channel();
     let ticket = coord.submit_opts(
         image_request(600, 2, Policy::no_cache()),
-        SubmitOpts { progress: Some(ptx), deadline: None },
+        SubmitOpts { progress: Some(ptx), deadline: None, trace: Default::default() },
     );
     prx.recv_timeout(Duration::from_secs(120)).expect("sibling never started the long batch");
     // …and is cancelled mid-flight while the calibration still runs
@@ -518,7 +518,7 @@ fn preempted_batch_class_run_is_bitwise_identical_to_uninterrupted_run() {
         let (ptx, prx) = std::sync::mpsc::channel();
         let ticket = coord.submit_opts(
             req,
-            SubmitOpts { progress: Some(ptx), deadline: None },
+            SubmitOpts { progress: Some(ptx), deadline: None, trace: Default::default() },
         );
         // first progress event ⇒ plan resolved (calibration done, for
         // smooth:*) and the trajectory demonstrably in flight
@@ -933,7 +933,8 @@ fn cancelling_a_parked_session_answers_it_and_it_never_resumes() {
     let (ptx, prx) = std::sync::mpsc::channel();
     let mut req = image_request(400, 5, Policy::no_cache());
     req.priority = PriorityClass::Batch;
-    let ticket = coord.submit_opts(req, SubmitOpts { progress: Some(ptx), deadline: None });
+    let opts = SubmitOpts { progress: Some(ptx), deadline: None, trace: Default::default() };
+    let ticket = coord.submit_opts(req, opts);
     prx.recv_timeout(Duration::from_secs(120)).expect("batch job never started");
 
     // interactive flood from a side thread (a small window of

@@ -1,0 +1,485 @@
+//! Observability subsystem integration (ISSUE 10, docs/adr/009):
+//! disabled-mode no-allocation guarantee, concurrent writers into one
+//! bounded trace sink, flight-recorder ring wraparound with pinned
+//! retention, bitwise-identical generation output at every trace
+//! level, a traced generate over the v2 mux whose timeline
+//! reconstructs the queue-wait / calibration / per-step decomposition,
+//! the `{"cmd":"dump"}` endpoint feeding `obs::export` (Chrome trace
+//! JSON + text render), the structured `{"cmd":"metrics"}` JSON field
+//! set, and trace-id tags on typed error replies.
+//!
+//! Every test that touches the process-global trace level or flight
+//! recorder serializes through [`at_level`]; the rest of the suite can
+//! run in parallel around them.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use smoothcache::coordinator::{Coordinator, CoordinatorConfig, Policy, Request};
+use smoothcache::model::Cond;
+use smoothcache::obs::export::{chrome_trace, render, DumpEntry};
+use smoothcache::obs::{
+    self, recorder, BatchTrace, FlightEntry, FlightRecorder, Outcome, TraceHandle, TraceLevel,
+    MAX_TRACE_EVENTS,
+};
+use smoothcache::server::{Client, Client2, Server};
+use smoothcache::solvers::SolverKind;
+use smoothcache::util::json::{parse, Json};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: the disabled-mode test asserts the obs API makes
+// zero heap allocations on this thread. Thread-local counting keeps
+// parallel sibling tests from polluting the count; `try_with` tolerates
+// allocation during TLS teardown.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> usize {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// Level serialization: the trace level and the flight recorder are
+// process-global, so every test that sets or reads them holds this
+// gate and restores the previous level on drop.
+// ---------------------------------------------------------------------------
+
+static LEVEL_GATE: Mutex<()> = Mutex::new(());
+
+struct LevelGuard {
+    _gate: MutexGuard<'static, ()>,
+    prev: TraceLevel,
+}
+
+fn at_level(l: TraceLevel) -> LevelGuard {
+    let gate = LEVEL_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = obs::level();
+    obs::set_level(l);
+    LevelGuard { _gate: gate, prev }
+}
+
+impl Drop for LevelGuard {
+    fn drop(&mut self) {
+        obs::set_level(self.prev);
+    }
+}
+
+fn coord() -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir());
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(10);
+    cfg.calib_samples = 2;
+    Coordinator::start(cfg).expect("coordinator")
+}
+
+fn gen_req(seed: u64) -> Json {
+    Json::obj()
+        .set("family", "image")
+        .set("label", (seed % 10) as f64)
+        .set("steps", 6usize)
+        .set("solver", "ddim")
+        .set("policy", "fora:2")
+        .set("seed", seed)
+}
+
+fn event_names(trace: &Json) -> Vec<(String, Json)> {
+    trace
+        .get("events")
+        .and_then(|v| v.as_arr())
+        .expect("trace.events array")
+        .iter()
+        .map(|e| (e.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string(), e.clone()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Disabled mode
+// ---------------------------------------------------------------------------
+
+/// At `TraceLevel::Off` the entire obs surface — opening handles,
+/// events, spans, error tags, batch fan-out, fine scopes, site events,
+/// snapshots, finish — performs zero heap allocations (docs/adr/009:
+/// "off costs one atomic load").
+#[test]
+fn disabled_mode_allocates_nothing() {
+    let _lvl = at_level(TraceLevel::Off);
+    // warm every lazy path (TLS slots, level cache) before counting
+    let warm = TraceHandle::start();
+    warm.event("warm", 0, 0, 0, f64::NAN);
+    obs::site_event(0, 0, true, None);
+    let _ = allocs_on_this_thread();
+
+    let before = allocs_on_this_thread();
+    for i in 0..1000u64 {
+        let h = TraceHandle::start();
+        assert!(!h.is_active());
+        assert_eq!(h.id(), 0);
+        h.set_meta(i, "image/fora:2");
+        h.event("submit", i, 0, 0, f64::NAN);
+        let t0 = h.begin();
+        h.span_from("step", t0, i, 0, 0, f64::NAN);
+        assert!(h.err_tag().is_empty());
+        assert!(h.snapshot().is_none());
+        obs::site_event(i as usize, 0, i % 2 == 0, Some(0.25));
+        let bt = BatchTrace::new([&h].into_iter());
+        assert!(!bt.is_active());
+        bt.event("batch", 1, 0, 0, f64::NAN);
+        bt.span_from("calibrate", bt.begin(), 0, 0, 0, f64::NAN);
+        let out = obs::with_fine_scope(&bt, || i * 2);
+        assert_eq!(out, i * 2);
+        h.finish(Outcome::Ok);
+    }
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "disabled tracing must not allocate ({} allocations in 1000 iterations)",
+        after - before
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent writers + bounded sink
+// ---------------------------------------------------------------------------
+
+/// Executor threads share one handle per request: hammer a single sink
+/// from many threads, then check the buffer honored its bound, counted
+/// every overflow, and `finish` deposited exactly one flight entry no
+/// matter how many threads race it.
+#[test]
+fn concurrent_writers_bound_buffer_and_finish_once() {
+    let _lvl = at_level(TraceLevel::Coarse);
+    recorder().clear();
+
+    let h = TraceHandle::start();
+    assert!(h.is_active());
+    let id = h.id();
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 2000;
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    h.event("step", t as u64, i as u64, 0, f64::NAN);
+                }
+                h.finish(Outcome::Failed);
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("writer thread");
+    }
+
+    let t = h.snapshot().expect("snapshot after finish");
+    assert_eq!(t.events.len(), MAX_TRACE_EVENTS, "buffer bound violated");
+    assert_eq!(
+        t.dropped as usize,
+        THREADS * PER_THREAD - MAX_TRACE_EVENTS,
+        "every overflowed event must be counted"
+    );
+    let mine: Vec<_> = recorder().dump().into_iter().filter(|e| e.trace_id == id).collect();
+    assert_eq!(mine.len(), 1, "racing finish() calls must deposit exactly one entry");
+    assert_eq!(mine[0].outcome, "failed");
+    assert!(mine[0].pinned, "failed outcomes are pinned");
+}
+
+/// Ring wraparound with pinned retention on a private recorder: ok
+/// entries rotate through the ring while pinned (errored) entries
+/// survive past wraparound in their own bounded FIFO lane.
+#[test]
+fn ring_wraparound_retains_pinned_entries() {
+    let rec = FlightRecorder::with_capacity(4, 2);
+    let entry = |id: u64, outcome: &'static str, pinned: bool| FlightEntry {
+        trace_id: id,
+        request_id: id,
+        label: "image/fora:2".into(),
+        outcome,
+        pinned,
+        dropped: 0,
+        events: Vec::new(),
+    };
+    for id in 0..10 {
+        rec.record(entry(id, "ok", false));
+    }
+    for id in 100..103 {
+        rec.record(entry(id, "deadline", true));
+    }
+    for id in 10..20 {
+        rec.record(entry(id, "ok", false));
+    }
+    let ids: Vec<u64> = rec.dump().iter().map(|e| e.trace_id).collect();
+    // ring keeps the newest 4 ok entries; pinned lane keeps its newest
+    // 2 regardless of how many ok entries wrapped past them
+    assert_eq!(ids, vec![16, 17, 18, 19, 101, 102]);
+    rec.clear();
+    assert!(rec.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Instrumentation never changes results
+// ---------------------------------------------------------------------------
+
+/// The acceptance bar: the same request produces bitwise-identical
+/// latents with tracing off, coarse, and fine — instrumentation
+/// observes the pipeline, it never perturbs it.
+#[test]
+fn generation_bitwise_identical_across_trace_levels() {
+    let _lvl = at_level(TraceLevel::Off);
+    let mut cfg = CoordinatorConfig::new(smoothcache::artifacts_dir()).with_workers(1);
+    cfg.preload = vec!["image".into()];
+    cfg.max_wait = Duration::from_millis(5);
+    let coord = Coordinator::start(cfg).expect("coordinator");
+
+    let run = |lvl: TraceLevel| -> Vec<u32> {
+        obs::set_level(lvl);
+        let req = Request {
+            id: 0,
+            family: "image".into(),
+            cond: Cond::Label(vec![3]),
+            solver: SolverKind::Ddim,
+            steps: 6,
+            cfg_scale: 1.0,
+            seed: 42,
+            policy: Policy::parse("fora:2").expect("policy"),
+            compute: Default::default(),
+            priority: Default::default(),
+        };
+        let resp = coord
+            .submit(req)
+            .recv_timeout(Duration::from_secs(120))
+            .expect("answered")
+            .expect("generation ok");
+        resp.latent.data.iter().map(|v| v.to_bits()).collect()
+    };
+
+    let off = run(TraceLevel::Off);
+    let coarse = run(TraceLevel::Coarse);
+    let fine = run(TraceLevel::Fine);
+    assert!(!off.is_empty());
+    assert_eq!(off, coarse, "coarse tracing changed the generated latent");
+    assert_eq!(off, fine, "fine tracing changed the generated latent");
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end timelines over the wire
+// ---------------------------------------------------------------------------
+
+/// A traced generate over the v2 mux returns a timeline whose spans
+/// reconstruct the queue-wait / calibration / per-step-execute
+/// decomposition: one `step` span per solver step, per-site decisions
+/// at fine level, frame ingress/egress, and a queue-wait consistent
+/// with the reply's own timing fields.
+#[test]
+fn traced_v2_generate_returns_decomposed_timeline() {
+    let _lvl = at_level(TraceLevel::Fine);
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let v2 = Client2::connect(&server.addr).expect("client2");
+
+    let steps = 6usize;
+    let resp = v2.call(&gen_req(7).set("trace", true)).expect("traced call");
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+    let trace = resp.get("trace").expect("reply must carry the timeline").clone();
+    assert!(trace.get("trace_id").and_then(|v| v.as_u64()).unwrap_or(0) > 0);
+
+    let events = event_names(&trace);
+    let count = |n: &str| events.iter().filter(|(name, _)| name == n).count();
+    for required in
+        ["submit", "queue_push", "queue_pop", "batch", "calibrate", "frame_in", "frame_out"]
+    {
+        assert!(count(required) >= 1, "timeline missing {required:?}: {events:?}");
+    }
+    // per-step execute decomposition: exactly one span per solver step
+    assert_eq!(count("step"), steps, "one step span per solver step: {events:?}");
+    // fine granularity: per-site reuse decisions, each tagged with a
+    // valid step index and a compute/reuse bit
+    let sites: Vec<&Json> =
+        events.iter().filter(|(n, _)| n == "site").map(|(_, e)| e).collect();
+    assert!(!sites.is_empty(), "fine level must record site events");
+    for s in &sites {
+        assert!(s.get("a").and_then(|v| v.as_usize()).unwrap() < steps);
+        assert!(s.get("c").and_then(|v| v.as_u64()).unwrap() <= 1);
+    }
+    // frame ingress carries the payload size
+    let frame_in = events.iter().find(|(n, _)| n == "frame_in").map(|(_, e)| e).unwrap();
+    assert!(frame_in.get("a").and_then(|v| v.as_u64()).unwrap() > 0);
+    // queue-wait span agrees with the reply's own queue_s field
+    let qpop = events.iter().find(|(n, _)| n == "queue_pop").map(|(_, e)| e).unwrap();
+    let qwait_s = qpop.get("f").and_then(|v| v.as_f64()).expect("queue_pop carries qwait");
+    let queue_s = resp.get("queue_s").and_then(|v| v.as_f64()).unwrap();
+    assert!(qwait_s >= 0.0);
+    assert!(
+        (qwait_s - queue_s).abs() < 0.5,
+        "timeline qwait {qwait_s}s inconsistent with reply queue_s {queue_s}s"
+    );
+    // the step spans decompose the exec window: their total duration
+    // cannot exceed the reply's end-to-end time
+    let step_total_s: f64 = events
+        .iter()
+        .filter(|(n, _)| n == "step")
+        .map(|(_, e)| e.get("dur_us").and_then(|v| v.as_f64()).unwrap_or(0.0) / 1e6)
+        .sum();
+    let total_s = resp.get("total_s").and_then(|v| v.as_f64()).unwrap();
+    assert!(
+        step_total_s <= total_s + 0.25,
+        "step spans ({step_total_s}s) exceed end-to-end time ({total_s}s)"
+    );
+    // the decomposition is consistent with the metrics the same run fed
+    let m = {
+        let mut v1 = Client::connect(&server.addr).expect("v1 client");
+        v1.metrics_json().expect("metrics json")
+    };
+    assert!(m.get("completed").and_then(|v| v.as_u64()).unwrap() >= 1);
+    assert!(m.get("steps").and_then(|v| v.as_u64()).unwrap() >= steps as u64);
+
+    server.stop();
+}
+
+/// `"trace":true` over the v1 line protocol returns the same timeline
+/// shape (recv/send instead of frames), and the flight-recorder dump
+/// endpoint feeds `obs::export`: Chrome trace JSON that parses, and a
+/// non-empty text render.
+#[test]
+fn dump_endpoint_feeds_export() {
+    let _lvl = at_level(TraceLevel::Coarse);
+    recorder().clear();
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut v1 = Client::connect(&server.addr).expect("v1 client");
+
+    let resp = v1.call(&gen_req(3).set("trace", true)).expect("traced v1 call");
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+    let trace = resp.get("trace").expect("v1 reply must carry the timeline");
+    let events = event_names(trace);
+    for required in ["recv", "send", "submit", "queue_pop"] {
+        assert!(
+            events.iter().any(|(n, _)| n == required),
+            "v1 timeline missing {required:?}: {events:?}"
+        );
+    }
+
+    let dump = v1.dump().expect("dump");
+    assert_eq!(dump.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(dump.get("level").and_then(|v| v.as_str()), Some("coarse"));
+    let entries = DumpEntry::from_dump(&dump).expect("parse dump");
+    assert!(!entries.is_empty(), "recorder must retain the completed request");
+
+    // Chrome trace-event export round-trips through the crate's parser
+    let chrome = chrome_trace(&entries).to_string();
+    let back = parse(&chrome).expect("chrome trace must be valid JSON");
+    let te = back.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+    assert!(!te.is_empty());
+    assert!(te.iter().any(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X")));
+    // text render names every retained trace
+    let text = render(&entries);
+    for e in &entries {
+        assert!(text.contains(&e.trace_id.to_string()), "render missing trace {}", e.trace_id);
+    }
+
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Structured metrics + trace-id error tags
+// ---------------------------------------------------------------------------
+
+/// `{"cmd":"metrics","format":"json"}` pins the structured field set
+/// (ISSUE 10 satellite 1): every summary key has a JSON mirror and the
+/// object round-trips through the crate's own parser.
+#[test]
+fn metrics_json_pins_field_set() {
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut v1 = Client::connect(&server.addr).expect("v1 client");
+    let resp = v1.call(&gen_req(5)).expect("generate");
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+
+    let m = v1.metrics_json().expect("metrics json");
+    for key in [
+        "workers", "requests", "completed", "failed", "cancelled", "dl_miss", "rejected",
+        "batches", "qdepth", "qpeak", "occupancy", "plan_hits", "plan_miss", "e2e_mean",
+        "e2e_p95", "queue_mean", "qwait_mean", "qwait_p95", "exec_mean", "steps", "step_mean",
+        "skips", "branch_total", "preempt", "resumes", "parked", "park_peak", "resume_mean",
+        "e2e_int_p50", "e2e_int_p95", "e2e_int_p99", "e2e_bat_p50", "e2e_bat_p95",
+        "e2e_bat_p99", "qwait_int_mean", "qwait_bat_mean", "v2_conns", "v2_credit_rej",
+    ] {
+        assert!(m.get(key).is_some(), "metrics JSON missing pinned key {key:?}");
+    }
+    assert!(m.get("completed").and_then(|v| v.as_u64()).unwrap() >= 1);
+    assert!(m.get("requests").and_then(|v| v.as_u64()).unwrap() >= 1);
+    // numbers stay numbers through a parse round-trip
+    let back = parse(&m.to_string()).expect("round-trip");
+    assert!(back.get("e2e_mean").and_then(|v| v.as_f64()).is_some());
+
+    server.stop();
+}
+
+/// Typed error replies carry the trace id (ISSUE 10 satellite 2): a
+/// reject-deadline miss answers `deadline: … [trace N]`, and N resolves
+/// to a pinned flight-recorder entry with the matching outcome.
+#[test]
+fn error_replies_carry_trace_id() {
+    let _lvl = at_level(TraceLevel::Coarse);
+    recorder().clear();
+    let c = Arc::new(coord());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut v1 = Client::connect(&server.addr).expect("v1 client");
+
+    // 1ms budget against a 10ms batching window: expires before (or
+    // while) executing, so the reject policy answers a deadline error
+    let resp = v1
+        .call(&gen_req(9).set("deadline_ms", 1u64).set("deadline_policy", "reject"))
+        .expect("call");
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false), "{resp:?}");
+    let err = resp.get("error").and_then(|v| v.as_str()).unwrap_or("").to_string();
+    assert!(err.starts_with("deadline:"), "unexpected error class: {err:?}");
+    assert!(err.contains(" [trace "), "error must carry the trace id: {err:?}");
+
+    // the tag cross-references a pinned recorder entry
+    let tag_id: u64 = err
+        .rsplit("[trace ")
+        .next()
+        .and_then(|s| s.trim_end_matches(']').trim().parse().ok())
+        .unwrap_or_else(|| panic!("unparseable trace tag in {err:?}"));
+    let dump = v1.dump().expect("dump");
+    let entries = DumpEntry::from_dump(&dump).expect("parse dump");
+    let hit = entries
+        .iter()
+        .find(|e| e.trace_id == tag_id)
+        .unwrap_or_else(|| panic!("trace {tag_id} not retained; got {entries:?}"));
+    assert_eq!(hit.outcome, "deadline");
+    assert!(hit.pinned, "deadline misses must be pinned past ring wraparound");
+
+    server.stop();
+}

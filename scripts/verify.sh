@@ -2,7 +2,8 @@
 # Tier-1 verification: build, test (at two GEMM thread counts and under
 # both kernel dispatches — forced-scalar and auto-SIMD — so any
 # serial/parallel or scalar/SIMD divergence in the compute substrate
-# fails tier-1; ADR-006),
+# fails tier-1; ADR-006 — plus once under SMOOTHCACHE_TRACE=fine so
+# instrumentation that perturbs results fails tier-1; ADR-009),
 # rustdoc with broken intra-doc links promoted to errors, then the
 # smoke-scale bench trajectory gate (docs/benchmarks.md, ADR-005):
 # perf_engine and e2e_serving emit BENCH_engine.json / BENCH_serving.json
@@ -68,6 +69,12 @@ SMOOTHCACHE_THREADS=1 SMOOTHCACHE_FORCE_SCALAR=1 cargo test -q
 
 echo "==> cargo test -q (SMOOTHCACHE_THREADS=4, auto kernel: parallel substrate, SIMD when available)"
 SMOOTHCACHE_THREADS=4 cargo test -q
+
+# observability lane (docs/adr/009): the whole suite once at the finest
+# trace granularity — every parity and golden test passing under
+# per-site instrumentation proves tracing never changes results
+echo "==> cargo test -q (SMOOTHCACHE_TRACE=fine: full suite under fine-grained tracing)"
+SMOOTHCACHE_TRACE=fine cargo test -q
 
 echo "==> cargo doc --no-deps (all rustdoc warnings are errors)"
 # -D warnings covers broken intra-doc links, bare URLs, invalid HTML
